@@ -1,0 +1,107 @@
+//! Design-choice ablations (DESIGN.md experiment index extensions):
+//! the latency/resource trades the paper leaves implicit.
+//!
+//!   A1: linear MAC-array width  — latency vs DSP cost (the Layer
+//!       Description File's headline knob, §6.1)
+//!   A2: attention NUM_PE        — the §7.1.2 padding formula in action
+//!   A3: scatter policy          — Block vs RoundRobin row distribution
+//!   A4: switch chaining         — d per extra hop in the encoder chain
+
+use galapagos_llm::cluster_builder::layer_builder::fpga_reports;
+use galapagos_llm::cycles_to_us;
+use galapagos_llm::eval::testbed::{build_testbed, run_encoder_once, TestbedConfig};
+use galapagos_llm::fpga::resources::Device;
+use galapagos_llm::gmi::Out;
+use galapagos_llm::ibert::graph::{build_encoder, EncoderGraphParams};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::timing::PeConfig;
+use galapagos_llm::sim::packet::GlobalKernelId;
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::table::{f2, Table};
+
+fn run_with(pe: PeConfig, m: usize) -> (u64, u64) {
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+    cfg.pe = pe;
+    let (x, t, _, _) = run_encoder_once(&cfg).unwrap();
+    (x, t)
+}
+
+fn main() {
+    let mut b = Bencher::quick();
+
+    // A1: MAC-array width of the 768x768 linears
+    let t1 = b.once("A1: linear MAC sweep", || {
+        let mut t = Table::new(
+            "A1 — linear MAC-array width vs encoder latency and DSP (m=128)",
+            &["linear MACs", "T (us)", "QKV-FPGA DSP util", "fits?"],
+        );
+        for macs in [192u64, 384, 768, 1536] {
+            let pe = PeConfig { linear_macs: macs, ..Default::default() };
+            let (_, tt) = run_with(pe, 128);
+            let cluster = build_encoder(&EncoderGraphParams {
+                cluster_id: 0,
+                fpga_base: 0,
+                pe,
+                mode: Mode::Timing,
+                out_dst: Out::to(GlobalKernelId::new(200, 2)),
+                max_seq: 128,
+                hidden: 768,
+                ffn: 3072,
+            })
+            .cluster;
+            let r = &fpga_reports(&cluster, &pe, Device::Xczu19eg, 128, 768, 3072)[0];
+            t.row(vec![
+                macs.to_string(),
+                f2(cycles_to_us(tt)),
+                format!("{:.1}%", r.utilisation().3 * 100.0),
+                if r.fits() { "yes".into() } else { "NO".into() },
+            ]);
+        }
+        t
+    });
+    println!("\n{}", t1.render());
+
+    // A2: attention NUM_PE and the minimum-padding formula
+    let t2 = b.once("A2: attention NUM_PE sweep", || {
+        let mut t = Table::new(
+            "A2 — attention NUM_PE: per-row cycles at MRPC-average m=54 (padding to NUM_PE*ceil(54/NUM_PE))",
+            &["NUM_PE", "padded rows", "attn row cycles", "encoder T (us, m=54)"],
+        );
+        for pes in [8u64, 16, 32, 64] {
+            let pe = PeConfig { attn_pes: pes, ..Default::default() };
+            let padded = pes * 54u64.div_ceil(pes);
+            let (_, tt) = run_with(pe, 54);
+            t.row(vec![
+                pes.to_string(),
+                padded.to_string(),
+                pe.attn_row_cycles(54, 64).to_string(),
+                f2(cycles_to_us(tt)),
+            ]);
+        }
+        t
+    });
+    println!("\n{}", t2.render());
+
+    // A4: switches in series — each extra hop adds d = 1.1 us per Eq. 1
+    let t4 = b.once("A4: switch chaining", || {
+        let mut t = Table::new(
+            "A4 — FPGAs per switch: encoder-chain first-output latency (2 encoders, m=32)",
+            &["FPGAs/switch", "switches", "X (us)"],
+        );
+        for per in [2usize, 6, 13] {
+            let mut cfg = TestbedConfig::proof_of_concept(32, Mode::Timing);
+            cfg.encoders = 2;
+            cfg.fpgas_per_switch = per;
+            let mut tb = build_testbed(&cfg).unwrap();
+            tb.sim.start();
+            tb.sim.run().unwrap();
+            let (x, _, _) = tb.sim.trace.xti(tb.sink_id).unwrap();
+            let switches =
+                tb.spec.switch_of.values().collect::<std::collections::HashSet<_>>().len();
+            t.row(vec![per.to_string(), switches.to_string(), f2(cycles_to_us(x))]);
+        }
+        t
+    });
+    println!("\n{}", t4.render());
+    println!("(A3 scatter-policy equivalence is property-tested in rust/tests/proptests.rs)");
+}

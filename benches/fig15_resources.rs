@@ -1,0 +1,10 @@
+//! E6: regenerate Fig. 15 (per-FPGA resource utilisation).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("fig15: resource model over the 38-kernel cluster", || tables::fig15().unwrap());
+    println!("\n{}", t.render());
+    println!("paper shape: BRAM is the limiting resource (FIFOs sized to hold full matrices + all weights on-chip); DSP heavy on the linear/FFN FPGAs.");
+}

@@ -1,0 +1,11 @@
+//! E7: regenerate Fig. 16 (per-layer latency vs sequence length).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("fig16: standalone per-layer latency sweep", || {
+        tables::fig16(&[1, 2, 4, 8, 16, 32, 64, 128]).unwrap()
+    });
+    println!("\n{}", t.render());
+}

@@ -1,0 +1,11 @@
+//! E8: regenerate Fig. 20 (per-layer throughput vs sequence length).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("fig20: per-layer throughput sweep", || {
+        tables::fig20(&[1, 2, 4, 8, 16, 32, 64, 128]).unwrap()
+    });
+    println!("\n{}", t.render());
+}

@@ -1,0 +1,72 @@
+//! P1: hot-path performance benchmarks — the §Perf deliverable.
+//!
+//! Three layers per the optimization plan:
+//!   L3 sim engine: events/s through the DES (the "testbed" itself)
+//!   L3 functional compute: bit-exact integer encoder (rust native)
+//!   runtime: PJRT encoder artifact latency (the serving path)
+
+use std::sync::Arc;
+
+use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+use galapagos_llm::ibert::encoder::{encoder_forward, rows_i8};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
+use galapagos_llm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let dir = ModelParams::default_dir();
+    let params = Arc::new(ModelParams::load(&dir).unwrap());
+    let x128 = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+    let mut b = Bencher::default();
+
+    // --- L3: discrete-event engine throughput ---
+    for m in [38usize, 128] {
+        let events = {
+            let mut tb = build_testbed(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+            tb.sim.start();
+            tb.sim.run().unwrap();
+            tb.sim.trace.events_processed
+        };
+        let r = b.bench(&format!("sim: encoder timing run m={m} ({events} events)"), || {
+            let mut tb =
+                build_testbed(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+            tb.sim.start();
+            black_box(tb.sim.run().unwrap());
+        });
+        let evps = events as f64 / (r.median_ns() / 1e9);
+        println!("    -> {:.2} M events/s", evps / 1e6);
+    }
+
+    // --- L3: functional (bit-exact) simulation of the six-FPGA cluster ---
+    {
+        let input = Arc::new(x128[..38].to_vec());
+        b.bench("sim: encoder FUNCTIONAL run m=38 (bit-exact payloads)", || {
+            let mut cfg = TestbedConfig::proof_of_concept(38, Mode::Functional(params.clone()));
+            cfg.input = Some(input.clone());
+            let mut tb = build_testbed(&cfg).unwrap();
+            tb.sim.start();
+            black_box(tb.sim.run().unwrap());
+        });
+    }
+
+    // --- native integer compute (the kernels' inner loops) ---
+    for m in [38usize, 128] {
+        b.bench(&format!("native: encoder_forward m={m}"), || {
+            black_box(encoder_forward(&params, &x128[..m]));
+        });
+    }
+
+    // --- runtime: PJRT artifact (request path) ---
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = b.once("pjrt: compile encoder artifact (one-time)", || {
+        EncoderEngine::load(&rt, &dir).unwrap()
+    });
+    for m in [38usize, 128] {
+        b.bench(&format!("pjrt: encoder infer m={m}"), || {
+            black_box(engine.infer(&x128[..m]).unwrap());
+        });
+    }
+
+    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+}

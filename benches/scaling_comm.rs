@@ -1,0 +1,9 @@
+//! E10: §9.4 scalability / communication-overhead microbenchmarks.
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("scaling: routing state + fabric latencies", || tables::scaling_table().unwrap());
+    println!("\n{}", t.render());
+}

@@ -1,0 +1,12 @@
+//! E1: regenerate Table 1 (encoder latency components X/T/I vs seq len).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("table1: X/T/I sweep over 8 sequence lengths", || tables::table1().unwrap());
+    println!("\n{}", t.render());
+    b.bench("single encoder sim (m=128, timing mode)", || {
+        galapagos_llm::util::bench::black_box(tables::measure_components(128).unwrap());
+    });
+}

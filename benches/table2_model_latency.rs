@@ -1,0 +1,10 @@
+//! E2: regenerate Table 2 (estimated 12-encoder latency via Eq. 1).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("table2: Eq.1 over 8 sequence lengths", || tables::table2().unwrap());
+    println!("\n{}", t.render());
+    println!("note: the paper's published Table 2 equals Eq. 1 with d = 0; see EXPERIMENTS.md E2.");
+}

@@ -1,0 +1,11 @@
+//! E3: regenerate Table 3 (batch-1 latency vs T4 / A100 / NPE).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("table3: latency comparison", || tables::table3().unwrap());
+    println!("\n{}", t.render());
+    let (at_mean, over_dist) = tables::glue_average_latency_ms().unwrap();
+    println!("no-padding GLUE latency: {:.2} ms at the mean length (paper method), {:.2} ms averaged over the length distribution", at_mean, over_dist);
+}

@@ -1,0 +1,9 @@
+//! E4: regenerate Table 4 (throughput vs FTRANS / NPE at max seq 64).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("table4: throughput vs prior FPGA accelerators", || tables::table4().unwrap());
+    println!("\n{}", t.render());
+}

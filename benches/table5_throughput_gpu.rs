@@ -1,0 +1,10 @@
+//! E5: regenerate Table 5 (throughput vs T4 / A100 at max seq 128).
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("table5: throughput vs GPUs", || tables::table5().unwrap());
+    println!("\n{}", t.render());
+    println!("nuance (8.2.3): GPU throughput uses batch-128; each batched request then waits the full batch latency (T4: 80.95 ms) while the FPGA pipeline keeps batch-1 latency.");
+}

@@ -1,0 +1,9 @@
+//! E9: regenerate the §9.3 Versal estimate.
+use galapagos_llm::eval::tables;
+use galapagos_llm::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let t = b.once("versal: \u{a7}9.3 estimate", || tables::versal_table().unwrap());
+    println!("\n{}", t.render());
+}

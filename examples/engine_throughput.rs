@@ -1,0 +1,28 @@
+//! Engine diagnostic: discrete-event throughput of the simulator itself
+//! (the §Perf L3 metric), separating testbed-build cost from run cost.
+//!
+//!   cargo run --release --example engine_throughput
+use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::quick();
+    b.bench("testbed build only (m=128)", || {
+        black_box(build_testbed(&TestbedConfig::proof_of_concept(128, Mode::Timing)).unwrap());
+    });
+    // run-only throughput: amortize one build over 8 pipelined inferences
+    let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+    cfg.inferences = 8;
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    let t0 = std::time::Instant::now();
+    tb.sim.run().unwrap();
+    let dt = t0.elapsed();
+    println!(
+        "run-only: {} events in {:.1} ms -> {:.2} M events/s",
+        tb.sim.trace.events_processed,
+        dt.as_secs_f64() * 1e3,
+        tb.sim.trace.events_processed as f64 / dt.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,100 @@
+//! End-to-end driver: the full 72-FPGA, 12-encoder I-BERT of Fig. 17.
+//!
+//!   make artifacts && cargo run --release --example full_ibert
+//!
+//! Simulates all 12 encoder clusters (six FPGAs each) chained across 12
+//! serially-connected 100G switches, runs real GLUE-length inferences in
+//! functional mode (bit-exact against the reference), and reports the
+//! measured full-model latency against the paper's Table 2 estimates and
+//! a latency distribution over the GLUE length mix.
+
+use std::sync::Arc;
+
+use galapagos_llm::cycles_to_us;
+use galapagos_llm::eval::latency_model::{estimate_model_latency_us, PAPER_TABLE2_MS};
+use galapagos_llm::eval::tables::measure_components;
+use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+use galapagos_llm::eval::workload::GlueWorkload;
+use galapagos_llm::ibert::encoder::{model_forward, rows_i8};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::util::table::{f2, f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = ModelParams::default_dir();
+    let params = Arc::new(ModelParams::load(&dir)?);
+
+    // ---- functional 12-encoder chain at the GLUE average length ----
+    let m = 38;
+    let x = rows_i8(load_golden(&dir, "input_m128")?.as_i8()?)[..m].to_vec();
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(params.clone()));
+    cfg.encoders = 12;
+    cfg.inferences = 2;
+    cfg.input = Some(Arc::new(x.clone()));
+    println!("building 72-FPGA / 12-switch platform (12 encoder clusters + eval FPGA) ...");
+    let mut tb = build_testbed(&cfg)?;
+    println!(
+        "platform: {} kernels across {} FPGAs",
+        tb.sim.kernel_count(),
+        tb.spec.switch_of.len()
+    );
+    tb.sim.start();
+    tb.sim.run()?;
+    let (x_c, t_c, _i) = tb.sim.trace.xti(tb.sink_id).unwrap();
+    let got = tb.sink.lock().unwrap().matrix(0).expect("incomplete model output");
+    let want = model_forward(&params, &x, 12);
+    assert_eq!(got, want, "72-FPGA simulation != 12-encoder reference");
+    println!("12-encoder output bit-exact vs reference ... OK");
+    println!(
+        "full-model latency at m={m}: {:.3} ms measured in-sim (first output {:.3} ms)",
+        cycles_to_us(t_c) / 1e3,
+        cycles_to_us(x_c) / 1e3
+    );
+    println!(
+        "events processed: {}  packets: {}",
+        tb.sim.trace.events_processed, tb.sim.fabric.stats.packets
+    );
+
+    // ---- Table 2 regenerated: measured chain vs Eq. 1 vs paper ----
+    let mut t = Table::new(
+        "\nfull I-BERT latency (ms): direct 72-FPGA sim vs Eq. 1 vs paper",
+        &["seq len", "sim chain", "Eq.1 (d=1.1us)", "paper"],
+    );
+    for &m in &[8usize, 32, 128] {
+        let mut c2 = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        c2.encoders = 12;
+        let mut tb2 = build_testbed(&c2)?;
+        tb2.sim.start();
+        tb2.sim.run()?;
+        let (_, t_chain, _) = tb2.sim.trace.xti(tb2.sink_id).unwrap();
+        let comp = measure_components(m)?;
+        let eq1 = estimate_model_latency_us(comp, 12, 1.1) / 1e3;
+        let paper = PAPER_TABLE2_MS.iter().find(|(l, _)| *l == m).unwrap().1;
+        t.row(vec![m.to_string(), f3(cycles_to_us(t_chain) / 1e3), f3(eq1), f3(paper)]);
+    }
+    println!("{}", t.render());
+
+    // ---- latency over the GLUE length distribution ----
+    let mut w = GlueWorkload::glue(7);
+    let lens = w.sample_n(24);
+    let mut lat: Vec<f64> = Vec::new();
+    let mut cache: std::collections::HashMap<usize, f64> = Default::default();
+    for &l in &lens {
+        let ms = *cache.entry(l).or_insert_with(|| {
+            let c = measure_components(l).unwrap();
+            estimate_model_latency_us(c, 12, 1.1) / 1e3
+        });
+        lat.push(ms);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    println!(
+        "GLUE length mix (n={}, mean len {:.1}): mean {} ms  p50 {} ms  p95 {} ms  (paper: 2.58 ms)",
+        lens.len(),
+        lens.iter().sum::<usize>() as f64 / lens.len() as f64,
+        f2(mean),
+        f2(lat[lat.len() / 2]),
+        f2(lat[(lat.len() * 95) / 100]),
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Serving example: the PJRT request path (no Python, no simulator).
+//!
+//!   make artifacts && cargo run --release --example glue_serving
+//!
+//! Loads the AOT-compiled encoder artifact, then serves a stream of
+//! GLUE-length requests through the 12-encoder model, reporting latency
+//! percentiles and throughput — the "low-latency batch-1 serving" story
+//! the paper argues FPGAs are good at, on our CPU-PJRT stand-in.
+
+use std::time::Instant;
+
+use galapagos_llm::eval::workload::GlueWorkload;
+use galapagos_llm::ibert::encoder::rows_i8;
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
+use galapagos_llm::util::rng::Rng;
+use galapagos_llm::util::table::{f2, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = ModelParams::default_dir();
+    let rt = PjrtRuntime::cpu()?;
+    let t0 = Instant::now();
+    let engine = EncoderEngine::load(&rt, &dir)?;
+    println!(
+        "compiled encoder artifact on {} in {:.2} s (one-time)",
+        rt.platform(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let base = rows_i8(load_golden(&dir, "input_m128")?.as_i8()?);
+    let mut wl = GlueWorkload::glue(11);
+    let mut rng = Rng::new(5);
+    let n_requests = 24;
+    let encoders = 4; // depth kept modest so the demo stays snappy on CPU
+
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let run_t0 = Instant::now();
+    for i in 0..n_requests {
+        let m = wl.sample();
+        // perturb the input a little per request
+        let mut x = base[..m].to_vec();
+        let r = rng.range_usize(0, m - 1);
+        let c = rng.range_usize(0, x[0].len() - 1);
+        x[r][c] = x[r][c].wrapping_add(1);
+        let t = Instant::now();
+        let out = engine.infer_model(&x, encoders)?;
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        lat_ms.push(ms);
+        assert_eq!(out.len(), m);
+        if i < 3 {
+            println!("request {i}: len {m:>3} -> {:.1} ms", ms);
+        }
+    }
+    let wall = run_t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut t = Table::new(
+        format!("\nserved {n_requests} GLUE-length requests through {encoders} encoders (CPU PJRT)").leak(),
+        &["metric", "value"],
+    );
+    t.row(vec!["p50 latency (ms)".into(), f2(lat_ms[lat_ms.len() / 2])]);
+    t.row(vec!["p95 latency (ms)".into(), f2(lat_ms[(lat_ms.len() * 95) / 100])]);
+    t.row(vec!["max latency (ms)".into(), f2(*lat_ms.last().unwrap())]);
+    t.row(vec!["throughput (req/s)".into(), f2(n_requests as f64 / wall)]);
+    println!("{}", t.render());
+    println!(
+        "note: absolute numbers are CPU-PJRT, not FPGA; the FPGA latency model \
+         lives in the simulator (see `cargo bench` tables)"
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! GMI demo (§5): collectives within and across Galapagos clusters —
+//! Broadcast, Scatter, Gather, Reduce, and the Allgather composition, all
+//! running on the simulated fabric with gateway-mediated inter-cluster
+//! messaging (one-byte GMI headers).
+//!
+//!   cargo run --release --example gmi_collectives
+
+use std::collections::HashMap;
+
+use galapagos_llm::cycles_to_us;
+use galapagos_llm::gmi::gateway::{Gateway, GatewayConfig};
+use galapagos_llm::gmi::{Communicator, GmiKernel, GmiOp, Out, ReduceFn, ScatterPolicy};
+use galapagos_llm::sim::engine::{KernelBehavior, KernelIo, START_TAG};
+use galapagos_llm::sim::fabric::{FpgaId, SwitchId};
+use galapagos_llm::sim::fifo::Fifo;
+use galapagos_llm::sim::packet::{GlobalKernelId, MsgMeta, Packet, Payload};
+use galapagos_llm::sim::Sim;
+
+fn k(c: u8, n: u8) -> GlobalKernelId {
+    GlobalKernelId::new(c, n)
+}
+
+struct Tx {
+    dst: GlobalKernelId,
+    rows: Vec<Vec<i32>>,
+    stream: u8,
+}
+impl KernelBehavior for Tx {
+    fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            let n = self.rows.len() as u32;
+            for (i, r) in self.rows.iter().enumerate() {
+                io.send(
+                    self.dst,
+                    MsgMeta { stream: self.stream, row: i as u32, rows: n, inference: 0 },
+                    Payload::RowI32(r.clone()),
+                );
+            }
+        }
+    }
+}
+
+struct Rx {
+    label: &'static str,
+}
+impl KernelBehavior for Rx {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        if let Payload::RowI32(v) = &pkt.payload {
+            println!(
+                "  t={:>7} cyc ({:>6.2} us)  {} {} got row {} = {:?}",
+                io.now,
+                cycles_to_us(io.now),
+                self.label,
+                io.self_id,
+                pkt.meta.row,
+                v
+            );
+        }
+    }
+    fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+}
+
+fn main() -> anyhow::Result<()> {
+    // communicator bookkeeping (§5.1): an inter-communicator across two
+    // clusters with a subgroup used for the reduce
+    let comm = Communicator::new(1, vec![k(0, 1), k(0, 2), k(1, 5), k(1, 6)])?;
+    println!(
+        "communicator {}: {} members, intra={}, rank of c1k5 = {:?}",
+        comm.id,
+        comm.size(),
+        comm.is_intra(),
+        comm.rank_of(k(1, 5))
+    );
+    let sub = comm.subgroup(2, &[0, 1])?;
+    println!("subgroup {}: members {:?}\n", sub.id, sub.members);
+
+    let mut sim = Sim::new();
+    for f in 0..4 {
+        sim.fabric.attach(FpgaId(f), SwitchId(f / 2)); // two switches, d between
+    }
+
+    // cluster 0: producer + scatter + reduce
+    sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+        dst: k(0, 2),
+        rows: (0..4).map(|i| vec![i, 10 * i]).collect(),
+        stream: 0,
+    }))?;
+    // scatter rows round-robin to one local kernel and one REMOTE kernel
+    // (the remote leg exercises the gateway + 1-byte GMI header path)
+    sim.add_kernel(
+        k(0, 2),
+        FpgaId(0),
+        Fifo::new(1 << 16),
+        Box::new(GmiKernel::new(GmiOp::Scatter {
+            dsts: vec![Out::tagged(k(0, 3), 0), Out::tagged(k(1, 5), 0)],
+            policy: ScatterPolicy::RoundRobin,
+        })),
+    )?;
+    sim.add_kernel(k(0, 3), FpgaId(1), Fifo::new(1 << 16), Box::new(Rx { label: "[scatter-local]" }))?;
+
+    // cluster 1: gateway with a virtual Broadcast module at id 0
+    let mut virtuals = HashMap::new();
+    virtuals.insert(0u8, GmiOp::Broadcast { dsts: vec![Out::to(k(1, 6)), Out::to(k(1, 7))] });
+    sim.add_kernel(
+        k(1, 0),
+        FpgaId(2),
+        Fifo::new(1 << 16),
+        Box::new(Gateway::new(GatewayConfig { cluster: 1, virtuals })),
+    )?;
+    sim.add_kernel(k(1, 5), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx { label: "[scatter-remote]" }))?;
+    sim.add_kernel(k(1, 6), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx { label: "[vbcast]" }))?;
+    sim.add_kernel(k(1, 7), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx { label: "[vbcast]" }))?;
+
+    // a second producer sends THROUGH the gateway's virtual broadcast
+    sim.add_kernel(k(0, 4), FpgaId(1), Fifo::new(1 << 16), Box::new(Tx {
+        dst: k(1, 0), // the gateway itself => virtual module 0
+        rows: vec![vec![777]],
+        stream: 0,
+    }))?;
+
+    println!("running: scatter (intra+inter cluster) and gateway virtual broadcast");
+    sim.start();
+    sim.run()?;
+    println!(
+        "\nfabric: {} packets / {} flits; inter-FPGA {}; inter-switch {} (each +1.1 us)",
+        sim.fabric.stats.packets,
+        sim.fabric.stats.flits,
+        sim.fabric.stats.inter_fpga_packets,
+        sim.fabric.stats.inter_switch_packets
+    );
+
+    // reduce demo: two ranks sum into one stream
+    println!("\nreduce (Sum) of two ranked streams:");
+    let mut sim2 = Sim::new();
+    for f in 0..2 {
+        sim2.fabric.attach(FpgaId(f), SwitchId(0));
+    }
+    for (kid, stream, base) in [(1u8, 0u8, 0i32), (2, 1, 100)] {
+        sim2.add_kernel(k(0, kid), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 3),
+            rows: vec![vec![base + 1, base + 2]],
+            stream,
+        }))?;
+    }
+    sim2.add_kernel(
+        k(0, 3),
+        FpgaId(0),
+        Fifo::new(1 << 16),
+        Box::new(GmiKernel::new(GmiOp::Reduce {
+            n_srcs: 2,
+            dst: Out::to(k(0, 4)),
+            f: ReduceFn::Sum,
+        })),
+    )?;
+    sim2.add_kernel(k(0, 4), FpgaId(1), Fifo::new(1 << 16), Box::new(Rx { label: "[reduce]" }))?;
+    sim2.start();
+    sim2.run()?;
+    Ok(())
+}

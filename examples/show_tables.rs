@@ -1,0 +1,14 @@
+use galapagos_llm::eval::tables;
+fn main() -> anyhow::Result<()> {
+    println!("{}", tables::table1()?.render());
+    println!("{}", tables::table2()?.render());
+    println!("{}", tables::table3()?.render());
+    println!("{}", tables::table4()?.render());
+    println!("{}", tables::table5()?.render());
+    println!("{}", tables::fig15()?.render());
+    println!("{}", tables::fig16(&[1, 8, 32, 128])?.render());
+    println!("{}", tables::fig20(&[1, 8, 32, 128])?.render());
+    println!("{}", tables::versal_table()?.render());
+    println!("{}", tables::scaling_table()?.render());
+    Ok(())
+}

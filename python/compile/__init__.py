@@ -1,0 +1,12 @@
+"""Build-time compile package: JAX/Pallas I-BERT, AOT lowering, weights.
+
+Everything in this package runs ONCE at `make artifacts`; nothing here is
+imported on the rust request path.
+
+int64 is required: the integer-only I-BERT ops accumulate int8 x int8
+matmuls into int32 and requantise through int64 intermediates.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

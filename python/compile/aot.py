@@ -1,0 +1,141 @@
+"""AOT lowering: JAX/Pallas encoder -> HLO *text* artifacts + model FS.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` rust crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import quantize as qz
+from . import weights as wexp
+from .model import encoder_fwd
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(arr) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.asarray(arr).shape, np.asarray(arr).dtype)
+
+
+def lower_encoder(p, m: int, use_pallas: bool = True) -> tuple[str, list]:
+    """Lower one encoder at fixed seq len `m`; weights are runtime params.
+
+    Calling convention (position order, shared with rust runtime/artifacts.rs):
+        0: x     int8[m, H]
+        1: mask  int32[m]   (0 = padded row / masked key column)
+        2..: the 16 arrays of EncoderParams.weight_arrays()
+    """
+    warrs = [a for _, a in p.weight_arrays()]
+
+    def fn(x, mask, *ws):
+        names = [n for n, _ in p.weight_arrays()]
+        q = dict(zip(names, ws))
+        import dataclasses
+
+        p2 = dataclasses.replace(p, **q)
+        return (encoder_fwd(p2, x, mask != 0, use_pallas=use_pallas),)
+
+    x_spec = jax.ShapeDtypeStruct((m, qz.HIDDEN), jnp.int8)
+    mask_spec = jax.ShapeDtypeStruct((m,), jnp.int32)
+    lowered = jax.jit(fn).lower(x_spec, mask_spec, *[spec_of(a) for a in warrs])
+    params = [("x", [m, qz.HIDDEN], "int8"), ("mask", [m], "int32")] + [
+        (n, list(np.asarray(a).shape), str(np.asarray(a).dtype))
+        for n, a in p.weight_arrays()
+    ]
+    return to_hlo_text(lowered), params
+
+
+def lower_smoke() -> str:
+    """Tiny artifact for fast runtime unit tests (pallas path included)."""
+    from .kernels.matmul_int8 import matmul_int8
+
+    def fn(x, w):
+        return (matmul_int8(x, w, bm=2, bn=2),)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.int8)
+    return to_hlo_text(jax.jit(fn).lower(s, s))
+
+
+def lower_linear(p, m: int) -> tuple[str, list]:
+    """One Linear+Quant module (the paper's Kern_1): for kernel-level PJRT tests."""
+    from . import iops
+    from .kernels.matmul_int8 import matmul_int8
+
+    def fn(x, w, b):
+        return (iops.requant8(matmul_int8(x, w, b), p.eq.rq_q),)
+
+    specs = [
+        jax.ShapeDtypeStruct((m, qz.HIDDEN), jnp.int8),
+        jax.ShapeDtypeStruct((qz.HIDDEN, qz.HIDDEN), jnp.int8),
+        jax.ShapeDtypeStruct((qz.HIDDEN,), jnp.int32),
+    ]
+    params = [("x", [m, qz.HIDDEN], "int8"), ("w", [qz.HIDDEN, qz.HIDDEN], "int8"),
+              ("b", [qz.HIDDEN], "int32")]
+    return to_hlo_text(jax.jit(fn).lower(*specs)), params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=wexp.SEED)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    print("[aot] exporting model file system + goldens ...")
+    manifest = wexp.export(out, seed=args.seed)
+    _, _, p = wexp.build_params(args.seed)
+
+    print("[aot] lowering encoder (pallas path, m=128) ...")
+    hlo, params = lower_encoder(p, qz.MAX_SEQ, use_pallas=True)
+    with open(os.path.join(out, "encoder_m128.hlo.txt"), "w") as f:
+        f.write(hlo)
+    manifest["artifacts"]["encoder_m128"] = {
+        "file": "encoder_m128.hlo.txt", "params": [list(t) for t in params],
+        "m": qz.MAX_SEQ, "outputs": [["out", [qz.MAX_SEQ, qz.HIDDEN], "int8"]],
+    }
+
+    print("[aot] lowering linear module (m=128) ...")
+    hlo, params = lower_linear(p, qz.MAX_SEQ)
+    with open(os.path.join(out, "linear_m128.hlo.txt"), "w") as f:
+        f.write(hlo)
+    manifest["artifacts"]["linear_m128"] = {
+        "file": "linear_m128.hlo.txt", "params": [list(t) for t in params],
+        "m": qz.MAX_SEQ, "outputs": [["out", [qz.MAX_SEQ, qz.HIDDEN], "int8"]],
+    }
+
+    print("[aot] lowering smoke artifact ...")
+    with open(os.path.join(out, "smoke.hlo.txt"), "w") as f:
+        f.write(lower_smoke())
+    manifest["artifacts"]["smoke"] = {
+        "file": "smoke.hlo.txt",
+        "params": [["x", [2, 2], "int8"], ["w", [2, 2], "int8"]],
+        "m": 2, "outputs": [["out", [2, 2], "int32"]],
+    }
+
+    wexp.write_manifest(out, manifest)
+    sizes = {f: os.path.getsize(os.path.join(out, f))
+             for f in os.listdir(out) if f.endswith(".hlo.txt")}
+    print(f"[aot] wrote artifacts to {out}: {sizes}")
+
+
+if __name__ == "__main__":
+    main()

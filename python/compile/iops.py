@@ -1,0 +1,153 @@
+"""Integer-only I-BERT operators (L2), written in jnp.
+
+Every op here consumes/produces integers only; all float->int constant
+folding happened in quantize.py at build time.  The rust coordinator
+(rust/src/ibert/compute.rs) mirrors these functions operation-for-operation;
+bit-exactness is enforced by golden vectors exported by weights.py.
+
+Semantics contract shared with rust:
+  * floor_div(a, b)  == jnp.floor_divide == rust i64::div_euclid (b > 0)
+  * rshift_round(x, n) == (x + 2^(n-1)) >> n, arithmetic shift (i64)
+  * all intermediates fit in int64 (ranges documented per op)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quantize as qz
+from .quantize import EncoderQuant, GeluParams, LayerNormParams, RequantSite, SoftmaxParams
+
+I64 = jnp.int64
+I32 = jnp.int32
+I8 = jnp.int8
+
+
+def floor_div(a, b):
+    return jnp.floor_divide(a, b)
+
+
+def rshift_round(x, n: int):
+    """Round-half-up right shift; n is a static python int >= 0."""
+    if n == 0:
+        return x
+    return (x + (1 << (n - 1))) >> n
+
+
+def clip8(x):
+    return jnp.clip(x, -127, 127).astype(I8)
+
+
+def requant8(acc, site: RequantSite):
+    """int32/int64 accumulator -> int8 at site.out_scale."""
+    return clip8(rshift_round(acc.astype(I64) * site.m, site.n))
+
+
+def requant32(acc, site: RequantSite):
+    """int32/int64 accumulator -> int64 value at site.out_scale (no clip).
+
+    Used for the residual/LayerNorm domain, which stays wide.
+    """
+    return rshift_round(acc.astype(I64) * site.m, site.n)
+
+
+def isqrt(n):
+    """Element-wise floor integer sqrt of non-negative int64.
+
+    Fixed-iteration Newton so it lowers to straight-line HLO (no dynamic
+    loop): 35 iterations from 2^32 covers any n < 2^63, then two
+    floor-corrections.  Rust mirrors the exact same schedule.
+    """
+    n = n.astype(I64)
+    x = jnp.where(n > 0, jnp.int64(1) << 32, jnp.int64(1))
+    for _ in range(qz.ISQRT_ITERS):
+        x = jnp.maximum(floor_div(x + floor_div(n, jnp.maximum(x, 1)), 2), 1)
+    x = jnp.where(x * x > n, x - 1, x)
+    x = jnp.where(x * x > n, x - 1, x)
+    return jnp.where(n == 0, jnp.int64(0), x)
+
+
+def linear_acc(x_i8, w_i8, b_i32):
+    """int8 x int8 -> int32 accumulator matmul + int32 bias (the PE array).
+
+    x: [M, K] int8, w: [K, N] int8, b: [N] int32 (at acc scale).
+    This is the plain-jnp path; model.py swaps in the pallas kernel (L1).
+    """
+    acc = jnp.matmul(
+        x_i8.astype(I32), w_i8.astype(I32), preferred_element_type=I32
+    )
+    return acc + b_i32[None, :].astype(I32)
+
+
+def i_softmax(scores_i32, sm: SoftmaxParams, valid_mask=None):
+    """Integer softmax over the last axis of int32 scores.
+
+    scores value = q * sm.scale (1/sqrt(d_k) already folded into the scale).
+    valid_mask: optional bool [..., M]; padded columns get probability 0
+    (this is how the fixed-shape AOT artifact reproduces the no-padding
+    hardware results on short sequences).
+    Returns int8 probabilities with scale 1/127.
+    """
+    q = scores_i32.astype(I64)
+    if valid_mask is not None:
+        neg = jnp.int64(-(1 << 40))
+        q = jnp.where(valid_mask, q, neg)
+    qmax = q.max(axis=-1, keepdims=True)
+    qt = q - qmax  # <= 0
+    z = floor_div(-qt, sm.q_ln2)
+    p = qt + z * sm.q_ln2  # in (-q_ln2, 0]
+    e = (p + sm.q_b) ** 2 + sm.q_c  # >= 0, <~ (q_b + q_ln2)^2 + q_c
+    zc = jnp.minimum(z, qz.EXP_SHIFT_MAX).astype(I64)
+    e = jnp.right_shift(e, zc)
+    if valid_mask is not None:
+        e = jnp.where(valid_mask, e, jnp.int64(0))
+    total = jnp.maximum(e.sum(axis=-1, keepdims=True), 1)
+    q15 = floor_div(e << qz.SOFTMAX_OUT_SHIFT, total)
+    p8 = rshift_round(q15 * qz.SOFTMAX_OUT_SCALE, qz.SOFTMAX_OUT_SHIFT)
+    return jnp.clip(p8, 0, 127).astype(I8)
+
+
+def i_gelu(q_i8, gp: GeluParams):
+    """Integer GELU on int8 input at gp.scale; int8 output at gp.out.out_scale.
+
+    I-BERT Alg. 2/3: erf(x) ~ sgn(x)[a(clip(|x|,max=-b)+b)^2 + 1].
+    s_erf = a*(s/sqrt2)^2 is negative, so the output integer is negated
+    before the (positive-factor) dyadic requantiser.
+    """
+    q = q_i8.astype(I64)
+    sgn = jnp.sign(q)
+    qa = jnp.minimum(jnp.abs(q), -gp.q_b)
+    poly = (qa + gp.q_b) ** 2 + gp.q_c
+    q_erf = sgn * poly
+    q_out = q * (q_erf + gp.q_one)
+    return requant8(-q_out, gp.out)
+
+
+def i_layernorm(q_wide, gamma_q, beta_q, ln: LayerNormParams):
+    """Integer LayerNorm over the last axis (hidden dim H).
+
+    q_wide: int64 values in the residual domain (scale ln.in_scale).
+    gamma_q/beta_q: int64 [H] fixed-point Q{ln.kg} constants from quantize.py.
+    Returns int8 at ln.out_scale.
+    """
+    q = q_wide.astype(I64)
+    h = q.shape[-1]
+    sum_q = q.sum(axis=-1, keepdims=True)
+    mean = floor_div(2 * sum_q + h, 2 * h)
+    d = q - mean
+    var = floor_div((d * d).sum(axis=-1, keepdims=True), h)
+    std = jnp.maximum(isqrt(var), 1)
+    t = floor_div(d * gamma_q[None, :], std) + beta_q[None, :]
+    return clip8(rshift_round(t, ln.kg))
+
+
+def head_split(x, heads: int):
+    """[M, H] -> [heads, M, H/heads]"""
+    m, hdim = x.shape
+    return jnp.transpose(x.reshape(m, heads, hdim // heads), (1, 0, 2))
+
+
+def head_merge(x):
+    """[heads, M, d] -> [M, heads*d]"""
+    heads, m, d = x.shape
+    return jnp.transpose(x, (1, 0, 2)).reshape(m, heads * d)

@@ -1,0 +1,106 @@
+"""Tiled INT8 matmul Pallas kernel — the paper's Tile/PE array, re-thought
+for a TPU-style memory hierarchy (DESIGN.md §Hardware-Adaptation).
+
+Mapping from the paper's HLS design (Fig. 11):
+  * a *Tile* owns a slab of weight columns kept in BRAM  ->  a grid step `j`
+    owns a (K, BN) weight block kept resident in VMEM (weight-stationary);
+  * the *PE array* doing partial dot-products on streamed rows  ->  the MXU
+    dot_general on an (BM, K) input block streamed HBM->VMEM per grid step;
+  * AXIS row streaming  ->  BlockSpec index_map (i, 0) walking input rows;
+  * INT8xINT8 -> INT32 accumulate  ->  preferred_element_type=jnp.int32.
+
+The same kernel serves all three matmul shapes of the encoder (Linear
+768x768 / 768x3072 / 3072x768, per-head QK^T 64-dim, and softmax-MM MxM by
+64), exactly like the paper reuses its PE design across modules.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated from the block shapes (see
+`vmem_bytes` / `mxu_utilization` and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I8 = jnp.int8
+I32 = jnp.int32
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One (BM, BN) output block: full-K dot product plus bias row."""
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(I32),
+        w_ref[...].astype(I32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=I32,
+    )
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_int8(x, w, b=None, *, bm: int = 32, bn: int = 128):
+    """int8[M,K] @ int8[K,N] + int32[N] -> int32[M,N] via the Pallas kernel.
+
+    Ragged M/N are zero-padded up to the block grid and sliced back —
+    the software analogue of the paper's minimum-padding PE feed (§7.1.2).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((n,), I32)
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    bp = _pad_to(b, 0, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), I32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, k: int) -> int:
+    """Per-step VMEM residency of the kernel (int8 x, int8 w, i32 bias+out)."""
+    return bm * k + k * bn + 4 * bn + 4 * bm * bn
+
+
+def mxu_utilization(bm: int, bn: int, k: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for a (bm, k) x (k, bn) block matmul.
+
+    The MXU is a mxu x mxu systolic array; utilisation is limited by how
+    well each GEMM dimension fills its lanes.
+    """
+
+    def fill(d):
+        full, rem = divmod(d, mxu)
+        lanes = full * mxu + rem
+        steps = full + (1 if rem else 0)
+        return lanes / (steps * mxu)
+
+    return fill(bm) * fill(bn) * fill(k)

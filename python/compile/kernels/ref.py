@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the L1 kernels — the CORE correctness signal.
+
+`matmul_int8_ref` is the reference the Pallas kernel is checked against in
+python/tests/test_kernels.py (hypothesis sweeps shapes/dtypes).  It is also
+what the AOT encoder uses when built with `use_pallas=False`, giving an
+independent second lowering of the whole model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def matmul_int8_ref(x, w, b=None):
+    """int8[M,K] @ int8[K,N] + int32[N] -> int32[M,N], plain jnp."""
+    acc = jnp.matmul(x.astype(I32), w.astype(I32), preferred_element_type=I32)
+    if b is not None:
+        acc = acc + b[None, :].astype(I32)
+    return acc

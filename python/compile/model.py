@@ -1,0 +1,149 @@
+"""L2: the integer-only I-BERT encoder in JAX, calling the L1 kernels.
+
+The encoder is a pure function over integer arrays; quantisation constants
+come from quantize.py (already folded to integers).  `use_pallas` selects
+between the Pallas Tile/PE matmul kernel (L1) and the plain-jnp reference —
+both must produce bit-identical outputs (tested), and the AOT artifact is
+lowered from the Pallas path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import iops
+from .iops import I8, I32, I64
+from .kernels.matmul_int8 import matmul_int8
+from .kernels.ref import matmul_int8_ref
+from .quantize import HEADS, EncoderQuant, EncoderWeights
+
+
+@dataclass
+class EncoderParams:
+    """Integer parameters of one encoder, as consumed by the forward pass."""
+
+    eq: EncoderQuant
+    wq: jnp.ndarray  # int8 [H, H]
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray
+    w1: jnp.ndarray  # int8 [H, F]
+    w2: jnp.ndarray  # int8 [F, H]
+    bq: jnp.ndarray  # int32 [H] at acc scale
+    bk: jnp.ndarray
+    bv: jnp.ndarray
+    bo: jnp.ndarray
+    b1: jnp.ndarray  # int32 [F]
+    b2: jnp.ndarray  # int32 [H]
+    ln1_gamma: jnp.ndarray  # int64 [H] Q{kg}
+    ln1_beta: jnp.ndarray
+    ln2_gamma: jnp.ndarray
+    ln2_beta: jnp.ndarray
+
+    @classmethod
+    def from_weights(cls, w: EncoderWeights, eq: EncoderQuant) -> "EncoderParams":
+        from .quantize import ln_gamma_beta_int
+
+        g1, b1q = ln_gamma_beta_int(w.ln1_gamma, w.ln1_beta, eq.ln1.out_scale, eq.ln1.kg)
+        g2, b2q = ln_gamma_beta_int(w.ln2_gamma, w.ln2_beta, eq.ln2.out_scale, eq.ln2.kg)
+        j = jnp.asarray
+        return cls(
+            eq=eq,
+            wq=j(w.quantised("wq")), wk=j(w.quantised("wk")), wv=j(w.quantised("wv")),
+            wo=j(w.quantised("wo")), w1=j(w.quantised("w1")), w2=j(w.quantised("w2")),
+            bq=j(w.bias_int("bq", eq.rq_q.in_scale)),
+            bk=j(w.bias_int("bk", eq.rq_k.in_scale)),
+            bv=j(w.bias_int("bv", eq.rq_v.in_scale)),
+            bo=j(w.bias_int("bo", eq.rq_proj.in_scale)),
+            b1=j(w.bias_int("b1", eq.rq_gelu_in.in_scale)),
+            b2=j(w.bias_int("b2", eq.rq_ffn2.in_scale)),
+            ln1_gamma=j(g1), ln1_beta=j(b1q), ln2_gamma=j(g2), ln2_beta=j(b2q),
+        )
+
+    def weight_arrays(self) -> list[tuple[str, np.ndarray]]:
+        """Ordered (name, array) list — the AOT parameter calling convention
+        shared with the rust runtime (see runtime/artifacts.rs)."""
+        names = ["wq", "wk", "wv", "wo", "w1", "w2", "bq", "bk", "bv", "bo",
+                 "b1", "b2", "ln1_gamma", "ln1_beta", "ln2_gamma", "ln2_beta"]
+        return [(n, np.asarray(getattr(self, n))) for n in names]
+
+
+def encoder_fwd(p: EncoderParams, x_i8, valid_mask, *, use_pallas: bool = True,
+                collect_stages: bool = False):
+    """One encoder layer forward: int8 [M, H] -> int8 [M, H].
+
+    valid_mask: bool [M] marking real (non-padded) rows; only attention key
+    columns consult it (every other op is row-local), which is what lets a
+    fixed-shape artifact agree with the no-padding hardware on short
+    sequences.
+    """
+    mm = matmul_int8 if use_pallas else matmul_int8_ref
+    eq = p.eq
+    stages = {}
+
+    # ---- Layer 0: Q/K/V linears + Quant (paper Kern_1..3) ----
+    q8 = iops.requant8(mm(x_i8, p.wq, p.bq), eq.rq_q)
+    k8 = iops.requant8(mm(x_i8, p.wk, p.bk), eq.rq_k)
+    v8 = iops.requant8(mm(x_i8, p.wv, p.bv), eq.rq_v)
+    stages["q"] = q8
+    stages["k"] = k8
+    stages["v"] = v8
+
+    qh = iops.head_split(q8, HEADS)  # [A, M, d]
+    kh = iops.head_split(k8, HEADS)
+    vh = iops.head_split(v8, HEADS)
+
+    # ---- Layer 1: per-head attention dot-product (Kern_4..15) ----
+    scores = jax.vmap(lambda a, b: mm(a, b.T))(qh, kh)  # int32 [A, M, M]
+    stages["scores"] = scores
+
+    # ---- Layer 2: integer softmax ----
+    probs = iops.i_softmax(scores, eq.softmax, valid_mask[None, None, :])
+    stages["probs"] = probs
+
+    # ---- Layer 3: softmax matrix-multiply + Quant (Kern_16..27) ----
+    att_acc = jax.vmap(lambda a, b: mm(a, b))(probs, vh)  # int32 [A, M, d]
+    att8 = iops.requant8(iops.head_merge(att_acc), eq.rq_att)
+    stages["att"] = att8
+
+    # ---- Layer 4: output projection + residual + LayerNorm (Kern_28,29) ----
+    proj = mm(att8, p.wo, p.bo)
+    res = iops.requant32(proj, eq.rq_proj) + iops.requant32(x_i8.astype(I64), eq.rq_resin)
+    stages["res"] = res
+    ln1 = iops.i_layernorm(res, p.ln1_gamma, p.ln1_beta, eq.ln1)
+    stages["ln1"] = ln1
+
+    # ---- Layer 5: FFN (Kern_30,31) + residual + LayerNorm (Kern_32) ----
+    g_in = iops.requant8(mm(ln1, p.w1, p.b1), eq.rq_gelu_in)
+    stages["gelu_in"] = g_in
+    mid = iops.i_gelu(g_in, eq.gelu)
+    stages["mid"] = mid
+    ffn2 = mm(mid, p.w2, p.b2)
+    res2 = iops.requant32(ffn2, eq.rq_ffn2) + iops.requant32(ln1.astype(I64), eq.rq_res2in)
+    stages["res2"] = res2
+    out = iops.i_layernorm(res2, p.ln2_gamma, p.ln2_beta, eq.ln2)
+    stages["out"] = out
+
+    if collect_stages:
+        return out, stages
+    return out
+
+
+def model_fwd(p: EncoderParams, x_i8, valid_mask, num_encoders: int, **kw):
+    """Full I-BERT: `num_encoders` identical-weight encoders in series.
+
+    The paper builds one physical encoder and estimates 12; we reuse one
+    weight set for all 12 (DESIGN.md substitutions).  Output scale equals
+    input scale only approximately, so each encoder consumes the previous
+    one's int8 output re-interpreted at s_in — acceptable because nothing
+    downstream depends on calibrated accuracy, only on bit-exact agreement
+    between the three implementations.
+    """
+    h = x_i8
+    for _ in range(num_encoders):
+        h = encoder_fwd(p, h, valid_mask, **kw)
+    return h

@@ -1,0 +1,408 @@
+"""Quantisation parameter derivation — the single source of truth.
+
+I-BERT (Kim et al., ICML'21) is integer-only at inference time: every float
+scale is folded into integer constants at *build* time.  This module
+
+  1. generates seeded synthetic encoder weights (no network access to the
+     Hugging Face checkpoint the paper used — see DESIGN.md substitutions),
+  2. runs a float calibration pass to pick activation scales,
+  3. derives every integer constant the runtime needs (dyadic requantisers,
+     i-GELU / i-Softmax / i-LayerNorm polynomial constants),
+  4. packages them in `QuantParams`, serialised to artifacts/quantparams.json
+     (+ .bin tensors) and consumed by BOTH the JAX model (L2) and the rust
+     coordinator (L3).
+
+Deriving constants in exactly one place is what makes the three
+implementations (pallas/jnp/rust) bit-exact: rust never re-does float math.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Model geometry: I-BERT base == BERT-base (L=12, A=12, H=768), GLUE max len.
+HIDDEN = 768
+HEADS = 12
+HEAD_DIM = HIDDEN // HEADS  # 64
+FFN = 4 * HIDDEN  # 3072
+MAX_SEQ = 128
+NUM_ENCODERS = 12
+
+# i-GELU / i-exp polynomial coefficients, from the I-BERT paper (Sec. 3.3/3.4)
+GELU_A = -0.2888
+GELU_B = -1.769
+EXP_A = 0.3585
+EXP_B = 1.353
+EXP_C = 0.344
+LN2 = math.log(2.0)
+
+SOFTMAX_OUT_SHIFT = 15  # softmax probabilities are produced in Q15 then
+SOFTMAX_OUT_SCALE = 127  # requantised to int8 with scale 1/127
+EXP_SHIFT_MAX = 31  # clamp on the 2^-z shift in i-exp
+ISQRT_ITERS = 35  # fixed Newton iterations in integer sqrt (straight-line HLO)
+LN_KG = 10  # layernorm gamma/beta fixed-point bits
+REQUANT_BITS = 15  # dyadic multiplier magnitude (m < 2^15)
+
+
+def dyadic(factor: float, bits: int = REQUANT_BITS) -> tuple[int, int]:
+    """Approximate `factor` as m / 2**n with 2**(bits-1) <= m < 2**bits.
+
+    The classic dyadic-number trick from integer-only inference: a float
+    rescale becomes one integer multiply plus an arithmetic shift.
+    """
+    if factor <= 0:
+        raise ValueError(f"dyadic factor must be positive, got {factor}")
+    n = 0
+    m = factor
+    while m < 2 ** (bits - 1):
+        m *= 2
+        n += 1
+    while m >= 2**bits:
+        m /= 2
+        n -= 1
+    if n < 0:
+        raise ValueError(f"factor {factor} too large for dyadic({bits})")
+    return int(round(m)), n
+
+
+@dataclass
+class RequantSite:
+    """One int32 -> int8 (or int32) rescale: q_out = clip((q*m + r) >> n)."""
+
+    m: int
+    n: int
+    in_scale: float
+    out_scale: float
+
+    @classmethod
+    def make(cls, in_scale: float, out_scale: float) -> "RequantSite":
+        m, n = dyadic(in_scale / out_scale)
+        return cls(m=m, n=n, in_scale=in_scale, out_scale=out_scale)
+
+    def to_json(self):
+        return {"m": self.m, "n": self.n, "in_scale": self.in_scale, "out_scale": self.out_scale}
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(m=d["m"], n=d["n"], in_scale=d["in_scale"], out_scale=d["out_scale"])
+
+
+@dataclass
+class SoftmaxParams:
+    """Integer constants for i-Softmax over int32 scores of scale `scale`."""
+
+    scale: float  # score scale (already includes the 1/sqrt(d_k) fold)
+    q_ln2: int
+    q_b: int
+    q_c: int
+
+    @classmethod
+    def make(cls, scale: float) -> "SoftmaxParams":
+        return cls(
+            scale=scale,
+            q_ln2=max(1, math.floor(LN2 / scale)),
+            q_b=math.floor(EXP_B / scale),
+            q_c=math.floor(EXP_C / (EXP_A * scale * scale)),
+        )
+
+    def to_json(self):
+        return self.__dict__
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(**d)
+
+
+@dataclass
+class GeluParams:
+    """Integer constants for i-GELU over int8 values of scale `scale`."""
+
+    scale: float
+    q_b: int  # floor(B / s'), s' = scale/sqrt2            (negative)
+    q_c: int  # floor(1 / s_erf), s_erf = A*s'^2           (negative)
+    q_one: int  # == floor(1 / s_erf); kept separate to mirror I-BERT Alg. 3
+    out: RequantSite  # |scale * s_erf / 2| -> s_out requantiser (sign
+    # flipped in the ops because s_erf < 0; see iops.i_gelu)
+
+    @classmethod
+    def make(cls, scale: float, out_scale: float) -> "GeluParams":
+        s = scale / math.sqrt(2.0)
+        s_erf = GELU_A * s * s  # negative
+        q_b = math.floor(GELU_B / s)
+        q_c = math.floor(1.0 / s_erf)
+        q_one = math.floor(1.0 / s_erf)
+        pre = scale * abs(s_erf) / 2.0
+        return cls(scale=scale, q_b=q_b, q_c=q_c, q_one=q_one, out=RequantSite.make(pre, out_scale))
+
+    def to_json(self):
+        d = dict(self.__dict__)
+        d["out"] = self.out.to_json()
+        return d
+
+    @classmethod
+    def from_json(cls, d):
+        d = dict(d)
+        d["out"] = RequantSite.from_json(d["out"])
+        return cls(**d)
+
+
+@dataclass
+class LayerNormParams:
+    """Integer constants for i-LayerNorm: per-channel gamma_q/beta_q in Q{kg}.
+
+    q_out = clip(rshift_round(floor_div(d*gamma_q, std) + beta_q, kg))
+    where d = q - mean(q), std = isqrt(sum(d^2)/H).
+    """
+
+    kg: int
+    in_scale: float
+    out_scale: float
+    # gamma_q / beta_q live in tensorfiles (per-channel int32); names only here
+    gamma_file: str = ""
+    beta_file: str = ""
+
+    def to_json(self):
+        return self.__dict__
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(**d)
+
+
+@dataclass
+class EncoderQuant:
+    """All quantisation constants for one encoder layer."""
+
+    s_in: float
+    s_q: float
+    s_k: float
+    s_v: float
+    s_probs: float
+    s_att: float
+    s_res: float
+    s_ln1: float
+    s_gelu_in: float
+    s_mid: float
+    s_res2: float
+    s_out: float
+
+    rq_q: RequantSite = None  # acc(s_in*s_wq) -> s_q
+    rq_k: RequantSite = None
+    rq_v: RequantSite = None
+    rq_att: RequantSite = None  # acc(s_probs*s_v) -> s_att
+    rq_proj: RequantSite = None  # acc(s_att*s_wo) -> s_res (stays int32)
+    rq_resin: RequantSite = None  # s_in -> s_res (int8 -> int32 path)
+    rq_gelu_in: RequantSite = None  # acc(s_ln1*s_w1) -> s_gelu_in (int8)
+    rq_ffn2: RequantSite = None  # acc(s_mid*s_w2) -> s_res2 (int32)
+    rq_res2in: RequantSite = None  # s_ln1 -> s_res2 (int8 -> int32 path)
+
+    softmax: SoftmaxParams = None
+    gelu: GeluParams = None
+    ln1: LayerNormParams = None
+    ln2: LayerNormParams = None
+
+    def to_json(self):
+        out = {}
+        for k, v in self.__dict__.items():
+            out[k] = v.to_json() if hasattr(v, "to_json") else v
+        return out
+
+    @classmethod
+    def from_json(cls, d):
+        kw = dict(d)
+        for k in list(kw):
+            if k.startswith("rq_"):
+                kw[k] = RequantSite.from_json(kw[k])
+        kw["softmax"] = SoftmaxParams.from_json(kw["softmax"])
+        kw["gelu"] = GeluParams.from_json(kw["gelu"])
+        kw["ln1"] = LayerNormParams.from_json(kw["ln1"])
+        kw["ln2"] = LayerNormParams.from_json(kw["ln2"])
+        return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic weights + float calibration
+# ---------------------------------------------------------------------------
+
+
+def _symmetric_scale(x: np.ndarray) -> float:
+    """Symmetric int8 scale for max-abs calibration."""
+    return float(max(np.abs(x).max(), 1e-8)) / 127.0
+
+
+@dataclass
+class EncoderWeights:
+    """Float master weights (build time only) + their int8 quantisations."""
+
+    wq: np.ndarray
+    wk: np.ndarray
+    wv: np.ndarray
+    wo: np.ndarray
+    w1: np.ndarray
+    w2: np.ndarray
+    bq: np.ndarray
+    bk: np.ndarray
+    bv: np.ndarray
+    bo: np.ndarray
+    b1: np.ndarray
+    b2: np.ndarray
+    ln1_gamma: np.ndarray
+    ln1_beta: np.ndarray
+    ln2_gamma: np.ndarray
+    ln2_beta: np.ndarray
+
+    scales: dict = field(default_factory=dict)  # weight scales
+
+    @classmethod
+    def generate(cls, seed: int) -> "EncoderWeights":
+        rng = np.random.default_rng(seed)
+
+        def w(shape, std):
+            return rng.normal(0.0, std, size=shape).astype(np.float64)
+
+        std = 1.0 / math.sqrt(HIDDEN)
+        # Q/K projections get a larger std so attention scores reach the
+        # +-4-ish range real BERT checkpoints produce: peaked softmax is what
+        # makes int8 probability quantisation viable (uniform attention would
+        # round every probability to ~1 count at seq len 128).
+        std_qk = 2.0 / math.sqrt(HIDDEN)
+        ws = cls(
+            wq=w((HIDDEN, HIDDEN), std_qk),
+            wk=w((HIDDEN, HIDDEN), std_qk),
+            wv=w((HIDDEN, HIDDEN), std),
+            wo=w((HIDDEN, HIDDEN), std),
+            w1=w((HIDDEN, FFN), std),
+            w2=w((FFN, HIDDEN), 1.0 / math.sqrt(FFN)),
+            bq=w((HIDDEN,), 0.02),
+            bk=w((HIDDEN,), 0.02),
+            bv=w((HIDDEN,), 0.02),
+            bo=w((HIDDEN,), 0.02),
+            b1=w((FFN,), 0.02),
+            b2=w((HIDDEN,), 0.02),
+            ln1_gamma=1.0 + w((HIDDEN,), 0.05),
+            ln1_beta=w((HIDDEN,), 0.05),
+            ln2_gamma=1.0 + w((HIDDEN,), 0.05),
+            ln2_beta=w((HIDDEN,), 0.05),
+        )
+        for name in ("wq", "wk", "wv", "wo", "w1", "w2"):
+            ws.scales[name] = _symmetric_scale(getattr(ws, name))
+        return ws
+
+    def quantised(self, name: str) -> np.ndarray:
+        w = getattr(self, name)
+        s = self.scales[name]
+        return np.clip(np.round(w / s), -127, 127).astype(np.int8)
+
+    def bias_int(self, name: str, acc_scale: float) -> np.ndarray:
+        b = getattr(self, name)
+        return np.round(b / acc_scale).astype(np.int32)
+
+
+def _float_softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _float_gelu(x):
+    return x * 0.5 * (1.0 + np.vectorize(math.erf)(x / math.sqrt(2.0)))
+
+
+def _float_layernorm(x, gamma, beta):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return gamma * (x - mu) / np.sqrt(var + 1e-12) + beta
+
+
+def float_encoder(x: np.ndarray, w: EncoderWeights) -> dict:
+    """Float reference forward used only for calibration (build time)."""
+    acts = {"in": x}
+    q = x @ w.wq + w.bq
+    k = x @ w.wk + w.bk
+    v = x @ w.wv + w.bv
+    acts.update(q=q, k=k, v=v)
+    m = x.shape[0]
+    heads_out = np.zeros((m, HIDDEN))
+    scores_all = []
+    for h in range(HEADS):
+        sl = slice(h * HEAD_DIM, (h + 1) * HEAD_DIM)
+        s = (q[:, sl] @ k[:, sl].T) / math.sqrt(HEAD_DIM)
+        p = _float_softmax(s)
+        heads_out[:, sl] = p @ v[:, sl]
+        scores_all.append(s)
+    acts["scores"] = np.stack(scores_all)
+    acts["att"] = heads_out
+    proj = heads_out @ w.wo + w.bo
+    res = proj + x
+    acts["res"] = res
+    ln1 = _float_layernorm(res, w.ln1_gamma, w.ln1_beta)
+    acts["ln1"] = ln1
+    mid = _float_gelu(ln1 @ w.w1 + w.b1)
+    acts["gelu_in"] = ln1 @ w.w1 + w.b1
+    acts["mid"] = mid
+    ffn2 = mid @ w.w2 + w.b2
+    res2 = ffn2 + ln1
+    acts["res2"] = res2
+    out = _float_layernorm(res2, w.ln2_gamma, w.ln2_beta)
+    acts["out"] = out
+    return acts
+
+
+def calibrate(w: EncoderWeights, seed: int = 7, calib_len: int = MAX_SEQ) -> EncoderQuant:
+    """Pick activation scales from a float calibration batch, derive constants."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, size=(calib_len, HIDDEN))
+    acts = float_encoder(x, w)
+
+    s_in = _symmetric_scale(acts["in"])
+    s_q = _symmetric_scale(acts["q"])
+    s_k = _symmetric_scale(acts["k"])
+    s_v = _symmetric_scale(acts["v"])
+    s_probs = 1.0 / SOFTMAX_OUT_SCALE
+    s_att = _symmetric_scale(acts["att"])
+    # residual / layernorm domains stay int32; scale chosen ~1/2^12 of range
+    s_res = float(max(np.abs(acts["res"]).max(), 1e-8)) / (2**17)
+    s_ln1 = _symmetric_scale(acts["ln1"])
+    s_gelu_in = _symmetric_scale(acts["gelu_in"])
+    s_mid = _symmetric_scale(acts["mid"])
+    s_res2 = float(max(np.abs(acts["res2"]).max(), 1e-8)) / (2**17)
+    s_out = _symmetric_scale(acts["out"])
+
+    sc = w.scales
+    score_scale = s_q * s_k / 8.0  # fold 1/sqrt(d_k) = 1/8 into the scale
+
+    eq = EncoderQuant(
+        s_in=s_in, s_q=s_q, s_k=s_k, s_v=s_v, s_probs=s_probs, s_att=s_att,
+        s_res=s_res, s_ln1=s_ln1, s_gelu_in=s_gelu_in, s_mid=s_mid,
+        s_res2=s_res2, s_out=s_out,
+        rq_q=RequantSite.make(s_in * sc["wq"], s_q),
+        rq_k=RequantSite.make(s_in * sc["wk"], s_k),
+        rq_v=RequantSite.make(s_in * sc["wv"], s_v),
+        rq_att=RequantSite.make(s_probs * s_v, s_att),
+        rq_proj=RequantSite.make(s_att * sc["wo"], s_res),
+        rq_resin=RequantSite.make(s_in, s_res),
+        rq_gelu_in=RequantSite.make(s_ln1 * sc["w1"], s_gelu_in),
+        rq_ffn2=RequantSite.make(s_mid * sc["w2"], s_res2),
+        rq_res2in=RequantSite.make(s_ln1, s_res2),
+        softmax=SoftmaxParams.make(score_scale),
+        gelu=GeluParams.make(s_gelu_in, s_mid),
+        ln1=LayerNormParams(kg=LN_KG, in_scale=s_res, out_scale=s_ln1),
+        ln2=LayerNormParams(kg=LN_KG, in_scale=s_res2, out_scale=s_out),
+    )
+    return eq
+
+
+def ln_gamma_beta_int(gamma: np.ndarray, beta: np.ndarray, out_scale: float, kg: int = LN_KG):
+    gamma_q = np.round(gamma / out_scale * (1 << kg)).astype(np.int64)
+    beta_q = np.round(beta / out_scale * (1 << kg)).astype(np.int64)
+    return gamma_q, beta_q
+
+
+def quantparams_to_json(eq: EncoderQuant) -> str:
+    return json.dumps({"encoder": eq.to_json(), "hidden": HIDDEN, "heads": HEADS,
+                       "ffn": FFN, "max_seq": MAX_SEQ, "num_encoders": NUM_ENCODERS},
+                      indent=1)

@@ -1,0 +1,56 @@
+"""GTF1: the tiny binary tensor format shared between Python and Rust.
+
+Layout (little endian):
+    magic   4 bytes  b"GTF1"
+    dtype   u8       0=int8, 1=int32, 2=int64, 3=float32
+    ndim    u8
+    pad     2 bytes  zero
+    dims    ndim * u32
+    data    raw little-endian, C order
+
+The rust twin lives in rust/src/util/tensorfile.rs; both sides have
+round-trip tests and the integration tests read each other's files.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GTF1"
+
+_DTYPES = {
+    0: np.dtype("<i1"),
+    1: np.dtype("<i4"),
+    2: np.dtype("<i8"),
+    3: np.dtype("<f4"),
+}
+_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+def write_tensor(path: str, arr: np.ndarray) -> None:
+    # NB: np.ascontiguousarray would silently promote 0-d arrays to 1-d.
+    arr = np.asarray(arr, order="C")
+    code = _CODES.get(arr.dtype.newbyteorder("<"))
+    if code is None:
+        raise ValueError(f"unsupported dtype {arr.dtype}")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BBH", code, arr.ndim, 0))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.astype(_DTYPES[code]).tobytes())
+
+
+def read_tensor(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        code, ndim, _ = struct.unpack("<BBH", f.read(4))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        dt = _DTYPES[code]
+        data = f.read()
+    n = int(np.prod(dims)) if ndim else 1
+    arr = np.frombuffer(data, dtype=dt, count=n)
+    return arr.reshape(dims)

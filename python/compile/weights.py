@@ -1,0 +1,113 @@
+"""Model File System generator (paper §6.1) + golden vectors.
+
+The paper's Cluster Builder extracts PyTorch module parameters into a local
+file system consumed by the layer handlers.  Our equivalent: seeded
+synthetic weights (DESIGN.md substitution for the offline HF checkpoint),
+quantised once, written as GTF1 tensors + quantparams.json.  Both the JAX
+model (L2) and the rust coordinator (L3) read this file system — rust never
+re-derives a constant from floats.
+
+Golden vectors pin the bit-exact contract: per-stage tensors at M=128 and
+final outputs at several sequence lengths, produced by the plain-jnp
+reference path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as qz
+from .model import EncoderParams, encoder_fwd, model_fwd
+from .tensorfile import write_tensor
+
+SEED = 20240601
+GOLDEN_LENS = [1, 8, 38, 64, 128]
+STAGE_KEYS = ["q", "k", "v", "probs", "att", "res", "ln1", "gelu_in", "mid", "res2", "out"]
+
+
+def build_params(seed: int = SEED):
+    w = qz.EncoderWeights.generate(seed)
+    eq = qz.calibrate(w)
+    return w, eq, EncoderParams.from_weights(w, eq)
+
+
+def golden_input(m: int, eq, seed: int = SEED + 1) -> np.ndarray:
+    """Synthetic GLUE-like activations: unit-normal floats quantised at s_in."""
+    rng = np.random.default_rng(seed)
+    xf = rng.normal(0.0, 1.0, size=(m, qz.HIDDEN))
+    return np.clip(np.round(xf / eq.s_in), -127, 127).astype(np.int8)
+
+
+def export(outdir: str, seed: int = SEED) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    wdir = os.path.join(outdir, "weights")
+    gdir = os.path.join(outdir, "goldens")
+    os.makedirs(wdir, exist_ok=True)
+    os.makedirs(gdir, exist_ok=True)
+
+    w, eq, p = build_params(seed)
+
+    manifest: dict = {
+        "seed": seed,
+        "hidden": qz.HIDDEN,
+        "heads": qz.HEADS,
+        "ffn": qz.FFN,
+        "max_seq": qz.MAX_SEQ,
+        "num_encoders": qz.NUM_ENCODERS,
+        "weights": {},
+        "goldens": {},
+        "artifacts": {},
+    }
+
+    # --- model file system: quantised parameters ---
+    for name, arr in p.weight_arrays():
+        path = os.path.join("weights", f"{name}.bin")
+        write_tensor(os.path.join(outdir, path), arr)
+        manifest["weights"][name] = {"file": path, "shape": list(arr.shape),
+                                     "dtype": str(arr.dtype)}
+
+    with open(os.path.join(outdir, "quantparams.json"), "w") as f:
+        f.write(qz.quantparams_to_json(eq))
+
+    # --- goldens: stage tensors at M=128 (reference path) ---
+    x128 = golden_input(qz.MAX_SEQ, eq)
+    mask128 = np.ones(qz.MAX_SEQ, dtype=bool)
+    out, stages = encoder_fwd(p, jnp.asarray(x128), jnp.asarray(mask128),
+                              use_pallas=False, collect_stages=True)
+    write_tensor(os.path.join(gdir, "input_m128.bin"), x128)
+    manifest["goldens"]["input_m128"] = "goldens/input_m128.bin"
+    for k in STAGE_KEYS:
+        arr = np.asarray(stages[k])
+        if k == "probs":  # [A, M, M] int8
+            pass
+        fn = f"stage_{k}_m128.bin"
+        write_tensor(os.path.join(gdir, fn), arr)
+        manifest["goldens"][f"stage_{k}_m128"] = f"goldens/{fn}"
+
+    # --- goldens: encoder output at several sequence lengths (no padding) ---
+    for m in GOLDEN_LENS:
+        xm = x128[:m]
+        maskm = np.ones(m, dtype=bool)
+        om = np.asarray(encoder_fwd(p, jnp.asarray(xm), jnp.asarray(maskm),
+                                    use_pallas=False))
+        fn = f"encoder_out_m{m}.bin"
+        write_tensor(os.path.join(gdir, fn), om)
+        manifest["goldens"][f"encoder_out_m{m}"] = f"goldens/{fn}"
+
+    # --- golden: full 12-encoder model at the GLUE average length ---
+    m = 38
+    om = np.asarray(model_fwd(p, jnp.asarray(x128[:m]), jnp.asarray(np.ones(m, bool)),
+                              qz.NUM_ENCODERS, use_pallas=False))
+    write_tensor(os.path.join(gdir, "model12_out_m38.bin"), om)
+    manifest["goldens"]["model12_out_m38"] = "goldens/model12_out_m38.bin"
+
+    return manifest
+
+
+def write_manifest(outdir: str, manifest: dict) -> None:
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)

@@ -1,0 +1,22 @@
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import quantize as qz  # noqa: E402  (enables x64)
+from compile.model import EncoderParams  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def params():
+    w = qz.EncoderWeights.generate(12345)
+    eq = qz.calibrate(w)
+    return w, eq, EncoderParams.from_weights(w, eq)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(99)

@@ -1,0 +1,123 @@
+"""Integer-op correctness: exact integer semantics + approximation quality."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import iops
+from compile import quantize as qz
+
+
+# ---------------------------------------------------------------------------
+# exact integer semantics (the contract rust mirrors)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-(2**40), 2**40), st.integers(1, 20))
+def test_rshift_round_matches_floor_half(x, n):
+    got = int(iops.rshift_round(jnp.int64(x), n))
+    want = math.floor(x / 2**n + 0.5)
+    assert got == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**62))
+def test_isqrt_exact(n):
+    got = int(iops.isqrt(jnp.asarray([n], dtype=jnp.int64))[0])
+    assert got == math.isqrt(n)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-(2**40), 2**40), st.integers(1, 2**20))
+def test_floor_div_is_python_floordiv(a, b):
+    assert int(iops.floor_div(jnp.int64(a), jnp.int64(b))) == a // b
+
+
+def test_requant8_clips():
+    site = qz.RequantSite.make(1.0, 1.0 / 1024)  # factor 1024
+    out = iops.requant8(jnp.asarray([10**6, -(10**6), 0], dtype=jnp.int64), site)
+    assert list(np.asarray(out)) == [127, -127, 0]
+
+
+def test_dyadic_accuracy():
+    for f in [0.001, 0.7, 1.0, 3.14159, 1000.0, 30000.0]:
+        m, n = qz.dyadic(f)
+        assert 2**14 <= m < 2**15
+        assert abs(m / 2**n - f) / f < 2**-14
+
+
+# ---------------------------------------------------------------------------
+# approximation quality of the I-BERT polynomials (vs float reference)
+# ---------------------------------------------------------------------------
+
+
+def test_i_softmax_close_to_float(rng):
+    scale = 0.01
+    sm = qz.SoftmaxParams.make(scale)
+    scores = rng.integers(-400, 400, size=(16, 64)).astype(np.int32)
+    got = np.asarray(iops.i_softmax(jnp.asarray(scores), sm)).astype(np.float64) / 127.0
+    x = scores.astype(np.float64) * scale
+    e = np.exp(x - x.max(-1, keepdims=True))
+    want = e / e.sum(-1, keepdims=True)
+    assert np.abs(got - want).max() < 0.03
+    # rows sum to ~1
+    assert np.abs(got.sum(-1) - 1.0).max() < 0.1
+
+
+def test_i_softmax_mask_zeroes_padded_columns(rng):
+    sm = qz.SoftmaxParams.make(0.01)
+    scores = rng.integers(-400, 400, size=(4, 8)).astype(np.int32)
+    mask = np.array([True] * 5 + [False] * 3)
+    got = np.asarray(iops.i_softmax(jnp.asarray(scores), sm, jnp.asarray(mask)[None, :]))
+    assert (got[:, 5:] == 0).all()
+    # masked result equals the dense result on the valid prefix
+    dense = np.asarray(iops.i_softmax(jnp.asarray(scores[:, :5]), sm))
+    np.testing.assert_array_equal(got[:, :5], dense)
+
+
+def test_i_gelu_close_to_float():
+    scale = 0.05
+    gp = qz.GeluParams.make(scale, 0.05)
+    q = np.arange(-127, 128, dtype=np.int8)
+    got = np.asarray(iops.i_gelu(jnp.asarray(q), gp)).astype(np.float64) * gp.out.out_scale
+    x = q.astype(np.float64) * scale
+    want = x * 0.5 * (1 + np.vectorize(math.erf)(x / math.sqrt(2)))
+    # I-BERT's own polynomial has ~1e-1 worst-case absolute error on gelu
+    assert np.abs(got - want).max() < 0.15
+    # and must be close in L2
+    assert np.sqrt(((got - want) ** 2).mean()) < 0.05
+
+
+def test_i_layernorm_close_to_float(rng):
+    h = 768
+    # out_scale must cover the normalised range (~±4.5) or clip8 saturates
+    ln = qz.LayerNormParams(kg=qz.LN_KG, in_scale=1e-4, out_scale=0.04)
+    xf = rng.normal(0, 1.0, size=(4, h))
+    q = np.round(xf / ln.in_scale).astype(np.int64)
+    gamma = 1.0 + rng.normal(0, 0.05, h)
+    beta = rng.normal(0, 0.05, h)
+    gq, bq = qz.ln_gamma_beta_int(gamma, beta, ln.out_scale, ln.kg)
+    got = np.asarray(iops.i_layernorm(jnp.asarray(q), jnp.asarray(gq), jnp.asarray(bq), ln))
+    got = got.astype(np.float64) * ln.out_scale
+    mu = xf.mean(-1, keepdims=True)
+    sd = xf.std(-1, keepdims=True)
+    want = gamma * (xf - mu) / sd + beta
+    assert np.abs(got - want).max() < 0.08
+
+
+def test_i_layernorm_row_local(rng):
+    """LayerNorm of a stacked batch equals per-row LayerNorm (row-locality —
+    the property that makes the no-padding hardware design sound)."""
+    ln = qz.LayerNormParams(kg=qz.LN_KG, in_scale=1e-4, out_scale=0.02)
+    q = rng.integers(-(2**17), 2**17, size=(6, 768)).astype(np.int64)
+    gq = np.full(768, 1 << qz.LN_KG, dtype=np.int64)
+    bq = np.zeros(768, dtype=np.int64)
+    full = np.asarray(iops.i_layernorm(jnp.asarray(q), jnp.asarray(gq), jnp.asarray(bq), ln))
+    for i in range(6):
+        row = np.asarray(iops.i_layernorm(jnp.asarray(q[i : i + 1]), jnp.asarray(gq),
+                                          jnp.asarray(bq), ln))
+        np.testing.assert_array_equal(full[i : i + 1], row)

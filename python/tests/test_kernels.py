@@ -1,0 +1,64 @@
+"""L1 Pallas kernel vs pure-jnp oracle: hypothesis sweeps shapes + blocks."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.matmul_int8 import matmul_int8, mxu_utilization, vmem_bytes
+from compile.kernels.ref import matmul_int8_ref
+
+
+def _mm_case(rng, m, k, n, bm, bn, with_bias):
+    x = rng.integers(-127, 128, size=(m, k), dtype=np.int8)
+    w = rng.integers(-127, 128, size=(k, n), dtype=np.int8)
+    b = rng.integers(-(2**20), 2**20, size=(n,), dtype=np.int32) if with_bias else None
+    got = np.asarray(matmul_int8(jnp.asarray(x), jnp.asarray(w),
+                                 None if b is None else jnp.asarray(b), bm=bm, bn=bn))
+    want = np.asarray(matmul_int8_ref(jnp.asarray(x), jnp.asarray(w),
+                                      None if b is None else jnp.asarray(b)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    bm=st.sampled_from([2, 8, 16, 32]),
+    bn=st.sampled_from([4, 16, 64, 128]),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_pallas_matches_ref_hypothesis(m, k, n, bm, bn, with_bias, seed):
+    rng = np.random.default_rng(seed)
+    _mm_case(rng, m, k, n, bm, bn, with_bias)
+
+
+def test_matmul_encoder_shapes(rng):
+    """The exact shapes the encoder uses (paper modules)."""
+    for m, k, n in [(128, 768, 768), (128, 768, 3072), (128, 3072, 768),
+                    (128, 64, 128), (128, 128, 64), (1, 768, 768), (38, 768, 768)]:
+        _mm_case(rng, m, k, n, 32, 128, True)
+
+
+def test_matmul_extreme_values(rng):
+    """Saturated int8 inputs cannot overflow the int32 accumulator."""
+    m, k, n = 8, 3072, 16
+    x = np.full((m, k), 127, dtype=np.int8)
+    w = np.full((k, n), -127, dtype=np.int8)
+    got = np.asarray(matmul_int8(jnp.asarray(x), jnp.asarray(w)))
+    assert (got == 3072 * 127 * -127).all()
+    assert got.dtype == np.int32
+
+
+def test_vmem_budget():
+    """Every block config used by the encoder fits VMEM (16 MB)."""
+    for bm, bn, k in [(32, 128, 768), (32, 128, 3072), (128, 128, 64), (64, 64, 128)]:
+        assert vmem_bytes(bm, bn, k) < 16 * 2**20
+
+
+def test_mxu_estimates_monotone():
+    assert mxu_utilization(128, 128, 768) == 1.0
+    assert mxu_utilization(32, 128, 768) < 1.0
+    assert 0 < mxu_utilization(1, 1, 1) < 0.01

@@ -1,0 +1,29 @@
+"""GTF1 round-trip (the rust twin is tested in rust/src/util/tensorfile.rs,
+and rust integration tests read the files this side writes)."""
+
+import numpy as np
+import pytest
+
+from compile.tensorfile import read_tensor, write_tensor
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int32, np.int64, np.float32])
+@pytest.mark.parametrize("shape", [(3,), (2, 5), (4, 3, 2), ()])
+def test_roundtrip(tmp_path, dtype, shape, rng):
+    if dtype == np.float32:
+        arr = rng.normal(size=shape).astype(dtype)
+    else:
+        arr = rng.integers(-100, 100, size=shape).astype(dtype)
+    p = str(tmp_path / "t.bin")
+    write_tensor(p, arr)
+    back = read_tensor(p)
+    assert back.dtype == arr.dtype
+    assert back.shape == arr.shape
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"XXXX1234")
+    with pytest.raises(ValueError):
+        read_tensor(str(p))

@@ -1,0 +1,40 @@
+//! Prior single-FPGA transformer accelerators the paper compares against.
+
+/// A published FPGA accelerator datapoint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaBaseline {
+    pub name: &'static str,
+    /// batch-1 latency (ms) at max seq len 128 (None if not reported)
+    pub latency_ms_seq128: Option<f64>,
+    /// throughput (inferences/s) at max seq len 64
+    pub throughput_inf_s_seq64: Option<f64>,
+    pub notes: &'static str,
+}
+
+/// NPE (Khan et al., FPGA'21): overlay NLP processor, 8-bit matmuls.
+pub const NPE: FpgaBaseline = FpgaBaseline {
+    name: "NPE (FPGA)",
+    latency_ms_seq128: Some(13.96),
+    throughput_inf_s_seq64: Some(135.14),
+    notes: "overlay processor, layer-by-layer reuse — low throughput",
+};
+
+/// FTRANS (Li et al., ISLPED'20): BCM-compressed transformer.
+pub const FTRANS: FpgaBaseline = FpgaBaseline {
+    name: "FTRANS",
+    latency_ms_seq128: None,
+    throughput_inf_s_seq64: Some(101.79),
+    notes: "block-circulant compression; ~4.3% accuracy drop on BERT",
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_and_4_baselines() {
+        assert_eq!(NPE.latency_ms_seq128, Some(13.96));
+        assert_eq!(NPE.throughput_inf_s_seq64, Some(135.14));
+        assert_eq!(FTRANS.throughput_inf_s_seq64, Some(101.79));
+    }
+}

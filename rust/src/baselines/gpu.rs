@@ -1,0 +1,83 @@
+//! GPU baselines: the NVIDIA TensorRT BERT-base INT8 numbers the paper
+//! compares against (max seq len 128), plus a roofline cross-check.
+
+/// One GPU comparison point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuBaseline {
+    pub name: &'static str,
+    /// batch-1 latency (ms), BERT-base INT8, seq len 128 (TensorRT report)
+    pub batch1_latency_ms: f64,
+    /// batch-128 latency (ms) — the throughput-optimal point
+    pub batch128_latency_ms: f64,
+    /// peak INT8 throughput (TOPS)
+    pub int8_tops: f64,
+    /// board power (W), for the efficiency discussion
+    pub tdp_w: f64,
+}
+
+impl GpuBaseline {
+    /// Throughput derived the way the paper does it (§8.2.3): batch-128
+    /// latency divided across the batch.
+    pub fn throughput_inf_s(&self) -> f64 {
+        128.0 / (self.batch128_latency_ms / 1e3)
+    }
+
+    /// Batch-1 "effective" latency the batched run imposes on each request
+    /// (the §8.2.3 nuance: all results arrive when the batch completes).
+    pub fn batched_request_latency_ms(&self) -> f64 {
+        self.batch128_latency_ms
+    }
+
+    /// Roofline sanity: BERT-base forward is ~22.4 GFLOPs (INT8 ops) at
+    /// seq 128; utilisation = achieved / peak.
+    pub fn batch1_utilisation(&self) -> f64 {
+        let ops = 22.4e9; // 2 * 11.2e9 MACs
+        let achieved_tops = ops / (self.batch1_latency_ms / 1e3) / 1e12;
+        achieved_tops / self.int8_tops
+    }
+}
+
+/// NVIDIA T4 (TensorRT report, BERT-base INT8, seq 128).
+pub const T4: GpuBaseline = GpuBaseline {
+    name: "NVIDIA T4",
+    batch1_latency_ms: 1.66,
+    batch128_latency_ms: 80.95, // §8.2.3: "latency of 80.95 ms for a batch size of 128"
+    int8_tops: 130.0,
+    tdp_w: 70.0,
+};
+
+/// NVIDIA A100 (TensorRT report, BERT-base INT8, seq 128).
+pub const A100: GpuBaseline = GpuBaseline {
+    name: "NVIDIA A100",
+    batch1_latency_ms: 0.77,
+    // derived from the paper's 11962.6 inf/s: 128 / 11962.6 = 10.70 ms
+    batch128_latency_ms: 10.70,
+    int8_tops: 1248.0,
+    tdp_w: 400.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughputs_match_paper_table5() {
+        // Table 5: T4 = 1581.2 inf/s, A100 = 11962.6 inf/s
+        assert!((T4.throughput_inf_s() - 1581.2).abs() < 1.0, "{}", T4.throughput_inf_s());
+        assert!((A100.throughput_inf_s() - 11962.6).abs() < 25.0, "{}", A100.throughput_inf_s());
+    }
+
+    #[test]
+    fn batch1_utilisation_is_low() {
+        // the low-batch inefficiency that motivates FPGAs (§1): batch-1
+        // achieves a small fraction of peak INT8 throughput
+        assert!(T4.batch1_utilisation() < 0.25);
+        assert!(A100.batch1_utilisation() < 0.05);
+    }
+
+    #[test]
+    fn batched_latency_dwarfs_batch1() {
+        // §8.2.3's nuance: batched requests wait for the whole batch
+        assert!(T4.batched_request_latency_ms() > 40.0 * T4.batch1_latency_ms);
+    }
+}

@@ -1,0 +1,8 @@
+//! Published comparison points (§8 Tables 3-5, §9.3) + an analytic GPU
+//! roofline used as a sanity check on the published numbers.
+
+pub mod fpga_prior;
+pub mod gpu;
+
+pub use fpga_prior::{FTRANS, NPE};
+pub use gpu::{GpuBaseline, A100, T4};

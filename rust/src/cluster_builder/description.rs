@@ -1,0 +1,143 @@
+//! Description files (§6.1): the Cluster Description File (how many
+//! clusters, partitioning) and Layer Description File (module configs,
+//! parallelisation / resource knobs) as one JSON document.
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::testbed::TestbedConfig;
+use crate::fpga::resources::Device;
+use crate::ibert::kernels::Mode;
+use crate::ibert::timing::PeConfig;
+use crate::util::json::Json;
+
+/// Parsed build description.
+#[derive(Debug, Clone)]
+pub struct BuildDescription {
+    pub model: String,
+    /// number of encoder clusters to build
+    pub encoders: usize,
+    pub max_seq: usize,
+    pub fpgas_per_switch: usize,
+    pub device: Device,
+    pub pe: PeConfig,
+}
+
+impl Default for BuildDescription {
+    fn default() -> Self {
+        BuildDescription {
+            model: "ibert-base".into(),
+            encoders: 1,
+            max_seq: 128,
+            fpgas_per_switch: 6,
+            device: Device::Xczu19eg,
+            pe: PeConfig::default(),
+        }
+    }
+}
+
+impl BuildDescription {
+    pub fn parse(text: &str) -> Result<BuildDescription> {
+        let j = Json::parse(text).context("build description")?;
+        let mut d = BuildDescription::default();
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            if m != "ibert-base" {
+                bail!("unknown model {m:?} (this reproduction builds ibert-base)");
+            }
+            d.model = m.to_string();
+        }
+        let geti = |name: &str, dflt: usize| -> Result<usize> {
+            match j.get(name) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_i64()
+                    .map(|x| x as usize)
+                    .with_context(|| format!("{name} must be an integer")),
+            }
+        };
+        d.encoders = geti("encoders", d.encoders)?;
+        d.max_seq = geti("max_seq", d.max_seq)?;
+        d.fpgas_per_switch = geti("fpgas_per_switch", d.fpgas_per_switch)?;
+        if d.encoders == 0 || d.encoders > 42 {
+            bail!("encoders must be 1..=42 (256-cluster limit minus eval)");
+        }
+        match j.get("device").and_then(Json::as_str) {
+            None => {}
+            Some("xczu19eg") => d.device = Device::Xczu19eg,
+            Some("xcvc1902") => d.device = Device::Xcvc1902,
+            Some(other) => bail!("unknown device {other:?}"),
+        }
+        if let Some(pe) = j.get("pe") {
+            let getu = |name: &str, dflt: u64| -> Result<u64> {
+                match pe.get(name) {
+                    None => Ok(dflt),
+                    Some(v) => v.as_i64().map(|x| x as u64)
+                        .with_context(|| format!("pe.{name} must be an integer")),
+                }
+            };
+            d.pe = PeConfig {
+                linear_macs: getu("linear_macs", d.pe.linear_macs)?,
+                ffn_macs: getu("ffn_macs", d.pe.ffn_macs)?,
+                attn_pes: getu("attn_pes", d.pe.attn_pes)?,
+                smm_pes: getu("smm_pes", d.pe.smm_pes)?,
+                sm_simd: getu("sm_simd", d.pe.sm_simd)?,
+                ln_simd: getu("ln_simd", d.pe.ln_simd)?,
+                pipe_fill: getu("pipe_fill", d.pe.pipe_fill)?,
+            };
+        }
+        Ok(d)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<BuildDescription> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Convert into a simulator testbed configuration.
+    pub fn testbed(&self, m: usize, inferences: u32, interval: u64, mode: Mode) -> TestbedConfig {
+        TestbedConfig {
+            encoders: self.encoders,
+            m,
+            inferences,
+            interval,
+            pe: self.pe,
+            mode,
+            fpgas_per_switch: self.fpgas_per_switch,
+            input: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_description() {
+        let d = BuildDescription::parse(
+            r#"{"model": "ibert-base", "encoders": 12, "max_seq": 128,
+                "fpgas_per_switch": 6, "device": "xczu19eg",
+                "pe": {"linear_macs": 768, "attn_pes": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(d.encoders, 12);
+        assert_eq!(d.pe.attn_pes, 16);
+        assert_eq!(d.pe.ffn_macs, 3072); // default preserved
+    }
+
+    #[test]
+    fn defaults_on_empty() {
+        let d = BuildDescription::parse("{}").unwrap();
+        assert_eq!(d.encoders, 1);
+        assert_eq!(d.device, Device::Xczu19eg);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(BuildDescription::parse(r#"{"model": "gpt-3"}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"encoders": 0}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"encoders": 100}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"device": "stratix"}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"pe": {"attn_pes": "lots"}}"#).is_err());
+    }
+}

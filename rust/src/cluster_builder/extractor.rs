@@ -1,0 +1,113 @@
+//! Cluster Information Extractor (§6.1): derives Kernel IDs, Kernel
+//! Sources, Kernel Destinations and Kernel Types from the cluster graph —
+//! the intermediate the Layer Builder and GMI Builder consume.
+
+use std::collections::HashMap;
+
+use crate::galapagos::cluster::{ClusterSpec, KernelType};
+use crate::sim::packet::GlobalKernelId;
+
+/// Extracted information for one kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelInfo {
+    pub id: u8,
+    pub name: String,
+    pub ktype: KernelType,
+    pub fpga: usize,
+    pub sources: Vec<GlobalKernelId>,
+    pub destinations: Vec<GlobalKernelId>,
+}
+
+/// Extract per-kernel info (including reverse edges) from a cluster spec.
+pub fn extract_cluster_info(c: &ClusterSpec) -> Vec<KernelInfo> {
+    let mut sources: HashMap<u8, Vec<GlobalKernelId>> = HashMap::new();
+    for k in &c.kernels {
+        for d in &k.dests {
+            if d.cluster == c.id {
+                sources.entry(d.kernel).or_default().push(GlobalKernelId::new(c.id, k.id));
+            }
+        }
+    }
+    let mut out: Vec<KernelInfo> = c
+        .kernels
+        .iter()
+        .map(|k| KernelInfo {
+            id: k.id,
+            name: k.name.clone(),
+            ktype: k.ktype,
+            fpga: k.fpga.0,
+            sources: sources.remove(&k.id).unwrap_or_default(),
+            destinations: k.dests.clone(),
+        })
+        .collect();
+    out.sort_by_key(|k| k.id);
+    out
+}
+
+/// The three id classes of §6.1 (compute / GMI / virtual) as counts.
+pub fn id_class_counts(infos: &[KernelInfo]) -> (usize, usize, usize) {
+    let mut compute = 0;
+    let mut gmi = 0;
+    let mut virt = 0;
+    for i in infos {
+        match i.ktype {
+            KernelType::Compute => compute += 1,
+            KernelType::Gmi => gmi += 1,
+            KernelType::Virtual => virt += 1,
+            KernelType::Gateway => {}
+        }
+    }
+    (compute, gmi, virt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmi::Out;
+    use crate::ibert::graph::{build_encoder, ids, EncoderGraphParams};
+    use crate::ibert::kernels::Mode;
+    use crate::ibert::timing::PeConfig;
+
+    fn encoder_infos() -> Vec<KernelInfo> {
+        let gp = EncoderGraphParams {
+            cluster_id: 0,
+            fpga_base: 0,
+            pe: PeConfig::default(),
+            mode: Mode::Timing,
+            out_dst: Out::to(GlobalKernelId::new(200, 2)),
+            max_seq: 128,
+            hidden: 768,
+            ffn: 3072,
+        };
+        extract_cluster_info(&build_encoder(&gp).cluster)
+    }
+
+    #[test]
+    fn ids_are_contiguous_and_complete() {
+        let infos = encoder_infos();
+        assert_eq!(infos.len(), 38);
+        for (i, info) in infos.iter().enumerate() {
+            assert_eq!(info.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn reverse_edges_derived() {
+        let infos = encoder_infos();
+        // the gather kernel receives from all 12 smm heads
+        let gather = &infos[ids::GATHER as usize];
+        assert_eq!(gather.sources.len(), 12);
+        // LN1 receives from the gateway (residual) and proj
+        let ln1 = &infos[ids::LN1 as usize];
+        assert_eq!(ln1.sources.len(), 2);
+    }
+
+    #[test]
+    fn class_counts_match_fig14() {
+        let infos = encoder_infos();
+        let (compute, gmi, virt) = id_class_counts(&infos);
+        assert_eq!(compute, 32);
+        assert_eq!(gmi, 5);
+        assert_eq!(virt, 0); // the input broadcast lives inside the gateway
+    }
+}

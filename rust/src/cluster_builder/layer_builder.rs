@@ -1,0 +1,199 @@
+//! Layer Builder (§6.1): per-module handlers producing resource estimates
+//! — the Fig. 15 model. (Behaviors themselves are built by ibert::graph;
+//! this module owns the hardware-cost side the paper's handlers computed
+//! from HLS reports.)
+
+use crate::fpga::resources::{Device, ResourceBudget, ResourceUsage};
+use crate::galapagos::cluster::{ClusterSpec, KernelType, PlatformSpec};
+use crate::ibert::graph::ids;
+use crate::ibert::timing::PeConfig;
+use crate::sim::fifo::BRAM18_BYTES;
+
+/// Resource estimate of one encoder kernel (by id), including its input
+/// FIFO (sized by graph::fifo_bytes) and held weights.
+pub fn kernel_usage(
+    id: u8,
+    pe: &PeConfig,
+    dev: Device,
+    max_seq: usize,
+    hidden: usize,
+    ffn: usize,
+) -> ResourceUsage {
+    use ids::*;
+    // the paper attaches matrix-sized AXIS FIFOs to the FRONT AND END of
+    // each kernel (8.2.1); output FIFO sized by the output stream
+    let fifo_in = crate::ibert::graph::fifo_bytes(id, max_seq, hidden, ffn);
+    let fifo_out = output_fifo_bytes(id, max_seq, hidden, ffn);
+    let fifo_bram = (fifo_in.div_ceil(BRAM18_BYTES) + fifo_out.div_ceil(BRAM18_BYTES)) as u64;
+    let d = (hidden / 12) as u64;
+    let base = match id {
+        GATEWAY => ResourceUsage { lut: 9_000, ff: 14_000, bram18: 8, dsp: 0 },
+        LINEAR_Q | LINEAR_K | LINEAR_V => {
+            pe.linear_usage(hidden as u64, hidden as u64, pe.linear_macs, dev)
+        }
+        PROJ => pe.linear_usage(hidden as u64, hidden as u64, pe.linear_macs, dev),
+        FFN1 => pe.linear_usage(hidden as u64, ffn as u64, pe.ffn_macs, dev),
+        FFN2 => pe.linear_usage(ffn as u64, hidden as u64, pe.ffn_macs, dev),
+        x if (ATTN_BASE..ATTN_BASE + 12).contains(&x) => {
+            pe.head_usage(max_seq as u64, d, pe.attn_pes, dev)
+        }
+        x if (SMM_BASE..SMM_BASE + 12).contains(&x) => {
+            pe.head_usage(max_seq as u64, d, pe.smm_pes, dev)
+        }
+        LN1 | LN2 => pe.pipe_usage(pe.ln_simd),
+        SCATTER_Q | SCATTER_K | SCATTER_V | GATHER | BCAST_LN1 => pe.gmi_usage(),
+        _ => ResourceUsage::default(),
+    };
+    base + ResourceUsage { bram18: fifo_bram, ..Default::default() }
+}
+
+/// Output-FIFO sizing: one matrix of the kernel's output stream.
+fn output_fifo_bytes(id: u8, max_seq: usize, hidden: usize, ffn: usize) -> usize {
+    use ids::*;
+    let d = hidden / 12;
+    match id {
+        GATEWAY => max_seq * hidden,
+        LINEAR_Q | LINEAR_K | LINEAR_V => max_seq * hidden,
+        x if (ATTN_BASE..ATTN_BASE + 12).contains(&x) => max_seq * max_seq, // prob rows
+        x if (SMM_BASE..SMM_BASE + 12).contains(&x) => max_seq * d,
+        PROJ | FFN2 => max_seq * 4 * hidden, // wide residual rows
+        FFN1 => max_seq * ffn,
+        LN1 | LN2 => max_seq * hidden,
+        _ => 8 * hidden, // GMI passthrough
+    }
+}
+
+/// Per-FPGA aggregate report (one Fig. 15 bar group).
+#[derive(Debug, Clone)]
+pub struct FpgaReport {
+    pub fpga: usize,
+    pub kernels: Vec<u8>,
+    pub usage: ResourceUsage,
+    pub budget: ResourceBudget,
+}
+
+impl FpgaReport {
+    pub fn utilisation(&self) -> (f64, f64, f64, f64) {
+        self.usage.utilisation(&self.budget)
+    }
+    pub fn fits(&self) -> bool {
+        self.usage.fits(&self.budget)
+    }
+}
+
+/// Aggregate kernel estimates per FPGA for one encoder cluster: kernels +
+/// shell (the static "hypervisor" region) + the two routing tables.
+pub fn fpga_reports(
+    cluster: &ClusterSpec,
+    pe: &PeConfig,
+    dev: Device,
+    max_seq: usize,
+    hidden: usize,
+    ffn: usize,
+) -> Vec<FpgaReport> {
+    let routing_bram = crate::galapagos::RoutingTables::new(cluster.id).bram18() as u64;
+    let mut by_fpga: std::collections::BTreeMap<usize, FpgaReport> = Default::default();
+    for k in &cluster.kernels {
+        if k.ktype == KernelType::Virtual {
+            continue;
+        }
+        let r = by_fpga.entry(k.fpga.0).or_insert_with(|| FpgaReport {
+            fpga: k.fpga.0,
+            kernels: vec![],
+            usage: dev.shell_usage()
+                + ResourceUsage { bram18: routing_bram, ..Default::default() },
+            budget: dev.budget(),
+        });
+        r.kernels.push(k.id);
+        r.usage += kernel_usage(k.id, pe, dev, max_seq, hidden, ffn);
+    }
+    by_fpga.into_values().collect()
+}
+
+/// Validate that every FPGA of a platform fits its device (the check the
+/// paper's flow gets from Vivado place-and-route).
+pub fn validate_fit(
+    spec: &PlatformSpec,
+    pe: &PeConfig,
+    dev: Device,
+    max_seq: usize,
+    hidden: usize,
+    ffn: usize,
+) -> anyhow::Result<()> {
+    for c in &spec.clusters {
+        for r in fpga_reports(c, pe, dev, max_seq, hidden, ffn) {
+            if !r.fits() {
+                anyhow::bail!(
+                    "FPGA {} over budget: LUT {:.0}% FF {:.0}% BRAM {:.0}% DSP {:.0}%",
+                    r.fpga,
+                    r.utilisation().0 * 100.0,
+                    r.utilisation().1 * 100.0,
+                    r.utilisation().2 * 100.0,
+                    r.utilisation().3 * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmi::Out;
+    use crate::ibert::graph::{build_encoder, EncoderGraphParams};
+    use crate::ibert::kernels::Mode;
+    use crate::sim::packet::GlobalKernelId;
+
+    fn cluster() -> ClusterSpec {
+        build_encoder(&EncoderGraphParams {
+            cluster_id: 0,
+            fpga_base: 0,
+            pe: PeConfig::default(),
+            mode: Mode::Timing,
+            out_dst: Out::to(GlobalKernelId::new(200, 2)),
+            max_seq: 128,
+            hidden: 768,
+            ffn: 3072,
+        })
+        .cluster
+    }
+
+    #[test]
+    fn six_fpga_reports_and_all_fit() {
+        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        assert_eq!(reports.len(), 6);
+        for r in &reports {
+            assert!(r.fits(), "FPGA {} over budget: {:?}", r.fpga, r.utilisation());
+        }
+    }
+
+    #[test]
+    fn bram_is_the_limiting_resource_on_weight_fpgas() {
+        // Fig. 15: BRAM dominates (weights + matrix FIFOs on-chip)
+        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        // FPGA 4 (FFN1) and FPGA 5 (FFN2 + LN2) hold the 768x3072 weights
+        for r in reports.iter().filter(|r| r.fpga >= 4) {
+            let (lut, ff, bram, _dsp) = r.utilisation();
+            assert!(bram > lut && bram > ff, "bram should dominate on FPGA {}", r.fpga);
+            assert!(bram > 0.5, "weight FPGAs should be BRAM-heavy: {bram:.2}");
+        }
+    }
+
+    #[test]
+    fn dsp_pattern_matches_paper_shape() {
+        // §8.2.1: linear/FFN FPGAs use much more DSP than the head FPGAs
+        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        let dsp: Vec<f64> = reports.iter().map(|r| r.utilisation().3).collect();
+        assert!(dsp[4] > 0.5 && dsp[5] > 0.5, "FFN FPGAs DSP-heavy: {dsp:?}");
+        assert!(dsp[1] < dsp[4], "head FPGA lighter than FFN: {dsp:?}");
+        assert!(dsp[0] > 0.4, "QKV FPGA uses substantial DSP: {dsp:?}");
+    }
+
+    #[test]
+    fn oversized_pe_config_fails_validation() {
+        let pe = PeConfig { linear_macs: 100_000, ..Default::default() };
+        let reports = fpga_reports(&cluster(), &pe, Device::Xczu19eg, 128, 768, 3072);
+        assert!(reports.iter().any(|r| !r.fits()));
+    }
+}

@@ -1,0 +1,18 @@
+//! The Cluster Builder (§6): the automation front-end that turns a model
+//! + description files into Galapagos clusters.
+//!
+//! Paper flow (Fig. 9) → our substitution:
+//!   Model File System Generator  → python/compile/weights.py (build time)
+//!   Cluster Information Extractor → [`extractor`] (kernel id/src/dst/type)
+//!   Layer Builder + handlers      → [`layer_builder`] (behaviors + resources)
+//!   GMI Builder                   → GMI kernel configs in ibert::graph
+//!   IP Generator (Vivado HLS Tcl) → [`ip_generator`] (Tcl + build manifest)
+
+pub mod description;
+pub mod extractor;
+pub mod ip_generator;
+pub mod layer_builder;
+
+pub use description::BuildDescription;
+pub use extractor::{extract_cluster_info, KernelInfo};
+pub use layer_builder::{fpga_reports, kernel_usage, FpgaReport};

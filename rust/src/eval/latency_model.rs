@@ -1,0 +1,93 @@
+//! Equation 1 (§8.2.2): full-model latency from one encoder's measured
+//! components:  total = T + (L-1) * (X + d).
+
+use crate::cycles_to_us;
+
+/// Measured latency components of one encoder (Table 1), in cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyComponents {
+    /// latency until the encoder emits its first output packet
+    pub x: u64,
+    /// latency until the encoder emits its last output packet
+    pub t: u64,
+    /// interval between output packets
+    pub i: u64,
+}
+
+/// Eq. 1 in cycles: T + (L-1)(X + d).
+pub fn estimate_model_latency_cycles(c: LatencyComponents, encoders: usize, d_cycles: u64) -> u64 {
+    c.t + (encoders as u64 - 1) * (c.x + d_cycles)
+}
+
+/// Eq. 1 in microseconds with d in us (the paper's d = 1.1 us).
+pub fn estimate_model_latency_us(c: LatencyComponents, encoders: usize, d_us: f64) -> f64 {
+    cycles_to_us(c.t) + (encoders as f64 - 1.0) * (cycles_to_us(c.x) + d_us)
+}
+
+/// The paper's own Table 1 measurements (cycles), used to cross-check our
+/// simulator's shape and to regenerate Table 2 exactly as published.
+pub const PAPER_TABLE1: [(usize, u64, u64, u64); 8] = [
+    // (seq len, X, T, I)
+    (1, 6_936, 6_936, 0),
+    (2, 10_455, 11_004, 275),
+    (4, 13_769, 15_869, 525),
+    (8, 17_122, 22_318, 650),
+    (16, 23_393, 34_781, 712),
+    (32, 35_828, 59_600, 743),
+    (64, 61_121, 109_660, 759),
+    (128, 111_708, 209_789, 767),
+];
+
+/// The paper's Table 2 (estimated I-BERT latency, ms).
+pub const PAPER_TABLE2_MS: [(usize, f64); 8] = [
+    (1, 0.416),
+    (2, 0.630),
+    (4, 0.837),
+    (8, 1.053),
+    (16, 1.461),
+    (32, 2.269),
+    (64, 3.910),
+    (128, 7.193),
+];
+
+pub fn paper_components(m: usize) -> Option<LatencyComponents> {
+    PAPER_TABLE1
+        .iter()
+        .find(|(len, ..)| *len == m)
+        .map(|&(_, x, t, i)| LatencyComponents { x, t, i })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_reproduces_paper_table2() {
+        // Reproduction finding (EXPERIMENTS.md E2): the paper's Table 2 is
+        // exactly (T + (L-1)X) / 200 MHz — the published numbers do NOT
+        // include the d = 1.1 us switch term that Eq. 1 itself includes
+        // (a ~12 us constant, <0.2% at m=128 but 3% at m=1). We reproduce
+        // the published table with d = 0 and report both in the bench.
+        for &(m, want_ms) in &PAPER_TABLE2_MS {
+            let c = paper_components(m).unwrap();
+            let got_ms = estimate_model_latency_us(c, 12, 0.0) / 1000.0;
+            let rel = (got_ms - want_ms).abs() / want_ms;
+            assert!(rel < 0.005, "m={m}: got {got_ms:.3} ms want {want_ms} ms");
+            // with d included, the difference is exactly 11 * 1.1 us
+            let with_d = estimate_model_latency_us(c, 12, 1.1) / 1000.0;
+            assert!((with_d - got_ms - 0.0121).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_encoder_latency_is_t() {
+        let c = LatencyComponents { x: 100, t: 200, i: 5 };
+        assert_eq!(estimate_model_latency_cycles(c, 1, 220), 200);
+    }
+
+    #[test]
+    fn x_scales_with_depth() {
+        let c = LatencyComponents { x: 100, t: 200, i: 5 };
+        assert_eq!(estimate_model_latency_cycles(c, 3, 10), 200 + 2 * 110);
+    }
+}

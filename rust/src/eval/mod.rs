@@ -1,0 +1,10 @@
+//! Evaluation harness (§8): testbeds, the Eq. 1 latency model, GLUE-like
+//! workloads, and the generators for every table and figure in the paper.
+
+pub mod latency_model;
+pub mod tables;
+pub mod testbed;
+pub mod workload;
+
+pub use latency_model::{estimate_model_latency_us, LatencyComponents};
+pub use testbed::{run_encoder_once, EncoderTestbed, TestbedConfig};

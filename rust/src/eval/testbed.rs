@@ -1,0 +1,186 @@
+//! Testbed assembly: N encoder clusters in a chain plus the evaluation
+//! FPGA (§8.2: "one extra FPGA ... to provide inputs and receive outputs
+//! for the encoder at 100 Gbps, which emulates how the encoder would be
+//! connected in the full encoder chain").
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
+use crate::gmi::gateway::{Gateway, GatewayConfig};
+use crate::gmi::Out;
+use crate::ibert::graph::{build_encoder, EncoderGraphParams};
+use crate::ibert::kernels::{Mode, SinkData, SinkKernel, SourceKernel};
+use crate::ibert::timing::PeConfig;
+use crate::sim::engine::KernelBehavior;
+use crate::sim::fabric::{FpgaId, SwitchId};
+use crate::sim::packet::GlobalKernelId;
+use crate::sim::Sim;
+
+/// Cluster id of the evaluation FPGA.
+pub const EVAL_CLUSTER: u8 = 200;
+pub const EVAL_SOURCE: u8 = 1;
+pub const EVAL_SINK: u8 = 2;
+
+/// Testbed configuration.
+#[derive(Clone)]
+pub struct TestbedConfig {
+    /// number of chained encoders (1 = the six-FPGA proof of concept;
+    /// 12 = the estimated 72-FPGA full I-BERT of Fig. 17)
+    pub encoders: usize,
+    /// actual sequence length of each inference (no padding)
+    pub m: usize,
+    /// number of pipelined inferences
+    pub inferences: u32,
+    /// input packet interval in cycles (12 = line rate, §8.2.2)
+    pub interval: u64,
+    pub pe: PeConfig,
+    pub mode: Mode,
+    /// FPGAs per switch (Fig. 17 connects 6 Sidewinders per 100G switch;
+    /// switches are chained serially)
+    pub fpgas_per_switch: usize,
+    /// golden input rows for functional runs
+    pub input: Option<Arc<Vec<Vec<i8>>>>,
+}
+
+impl TestbedConfig {
+    pub fn proof_of_concept(m: usize, mode: Mode) -> Self {
+        TestbedConfig {
+            encoders: 1,
+            m,
+            inferences: 1,
+            interval: 12,
+            pe: PeConfig::default(),
+            mode,
+            fpgas_per_switch: 6,
+            input: None,
+        }
+    }
+}
+
+/// A built testbed: the simulator plus handles into the evaluation FPGA.
+pub struct EncoderTestbed {
+    pub sim: Sim,
+    pub sink: Arc<Mutex<SinkData>>,
+    pub sink_id: GlobalKernelId,
+    pub spec: PlatformSpec,
+}
+
+/// Assemble the platform: `encoders` chained encoder clusters + the
+/// evaluation cluster, six FPGAs per encoder, eval FPGA last.
+pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
+    let (hidden, ffn, max_seq) = match &cfg.mode {
+        Mode::Functional(p) => (p.cfg.hidden, p.cfg.ffn, p.cfg.max_seq),
+        Mode::Timing => (768, 3072, 128),
+    };
+
+    let mut clusters = Vec::new();
+    let mut behaviors: HashMap<GlobalKernelId, Box<dyn KernelBehavior>> = HashMap::new();
+
+    let sink_global = GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK);
+
+    for e in 0..cfg.encoders {
+        let out_dst = if e + 1 < cfg.encoders {
+            // next encoder's gateway (its input-broadcast virtual kernel)
+            Out::tagged(GlobalKernelId::new(e as u8 + 1, 0), 0)
+        } else {
+            Out::tagged(sink_global, 0)
+        };
+        let gp = EncoderGraphParams {
+            cluster_id: e as u8,
+            fpga_base: 6 * e,
+            pe: cfg.pe,
+            mode: cfg.mode.clone(),
+            out_dst,
+            max_seq,
+            hidden,
+            ffn,
+        };
+        let built = build_encoder(&gp);
+        for (id, b) in built.behaviors {
+            behaviors.insert(GlobalKernelId::new(e as u8, id), b);
+        }
+        clusters.push(built.cluster);
+    }
+
+    // evaluation cluster: gateway (forwarding) + source + sink on one FPGA
+    let eval_fpga = FpgaId(6 * cfg.encoders);
+    let eval_cluster = ClusterSpec {
+        id: EVAL_CLUSTER,
+        kernels: vec![
+            KernelDecl {
+                id: 0,
+                name: "eval-gateway".into(),
+                ktype: KernelType::Gateway,
+                fpga: eval_fpga,
+                dests: vec![GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK)],
+                fifo_bytes: max_seq * hidden,
+            },
+            KernelDecl {
+                id: EVAL_SOURCE,
+                name: "eval-source".into(),
+                ktype: KernelType::Compute,
+                fpga: eval_fpga,
+                dests: vec![GlobalKernelId::new(0, 0)],
+                fifo_bytes: 4096,
+            },
+            KernelDecl {
+                id: EVAL_SINK,
+                name: "eval-sink".into(),
+                ktype: KernelType::Compute,
+                fpga: eval_fpga,
+                dests: vec![],
+                fifo_bytes: max_seq * hidden,
+            },
+        ],
+    };
+    behaviors.insert(
+        GlobalKernelId::new(EVAL_CLUSTER, 0),
+        Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
+    );
+    behaviors.insert(
+        GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE),
+        Box::new(SourceKernel::new(
+            Out::to(GlobalKernelId::new(0, 0)),
+            cfg.m as u32,
+            cfg.inferences,
+            cfg.interval,
+            cfg.input.clone(),
+        )),
+    );
+    let (sink, sink_data) = SinkKernel::new();
+    behaviors.insert(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK), Box::new(sink));
+    clusters.push(eval_cluster);
+
+    // switch topology: fpgas_per_switch per switch, chained serially
+    let mut switch_of = HashMap::new();
+    for f in 0..=(6 * cfg.encoders) {
+        switch_of.insert(FpgaId(f), SwitchId(f / cfg.fpgas_per_switch));
+    }
+
+    let spec = PlatformSpec { clusters, switch_of };
+    let mut sim = spec.build_sim(|c, k| {
+        behaviors
+            .remove(&GlobalKernelId::new(c.id, k.id))
+            .unwrap_or_else(|| panic!("no behavior for c{}k{}", c.id, k.id))
+    })?;
+    sim.trace.add_probe(sink_global);
+
+    Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec })
+}
+
+/// Convenience: run one inference through one encoder; returns
+/// (X, T, I) in cycles at the evaluation sink plus the testbed.
+pub fn run_encoder_once(cfg: &TestbedConfig) -> Result<(u64, u64, u64, EncoderTestbed)> {
+    let mut tb = build_testbed(cfg)?;
+    tb.sim.start();
+    tb.sim.run()?;
+    let (x, t, i) = tb
+        .sim
+        .trace
+        .xti(tb.sink_id)
+        .ok_or_else(|| anyhow::anyhow!("no packets reached the evaluation sink"))?;
+    Ok((x, t, i, tb))
+}

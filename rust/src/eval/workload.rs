@@ -1,0 +1,67 @@
+//! GLUE-like synthetic workload (§8.2.2): the paper's no-padding results
+//! hinge on the sequence-length distribution of real benchmarks (GLUE
+//! average 38, MRPC average 54, max 128).
+
+use crate::util::rng::Rng;
+
+/// A synthetic sequence-length sampler matching published GLUE statistics.
+#[derive(Debug, Clone)]
+pub struct GlueWorkload {
+    pub max_len: usize,
+    pub mean: f64,
+    rng: Rng,
+}
+
+impl GlueWorkload {
+    /// The GLUE suite as the paper characterises it: average length 38.
+    pub fn glue(seed: u64) -> Self {
+        GlueWorkload { max_len: 128, mean: 38.0, rng: Rng::new(seed) }
+    }
+
+    /// The MRPC micro-benchmark: average length 54 (§7.1).
+    pub fn mrpc(seed: u64) -> Self {
+        GlueWorkload { max_len: 128, mean: 54.0, rng: Rng::new(seed) }
+    }
+
+    /// Sample one sequence length: log-normal-ish positive skew clipped to
+    /// [1, max], rescaled so the empirical mean tracks `mean`.
+    pub fn sample(&mut self) -> usize {
+        // log-normal with sigma=0.55 has mean exp(mu + sigma^2/2)
+        let sigma = 0.55f64;
+        let mu = self.mean.ln() - sigma * sigma / 2.0;
+        let g = self.rng.gauss();
+        let len = (mu + sigma * g).exp().round() as i64;
+        len.clamp(1, self.max_len as i64) as usize
+    }
+
+    pub fn sample_n(&mut self, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glue_mean_is_about_38() {
+        let mut w = GlueWorkload::glue(7);
+        let lens = w.sample_n(20_000);
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((mean - 38.0).abs() < 2.0, "mean={mean}");
+        assert!(lens.iter().all(|&l| (1..=128).contains(&l)));
+    }
+
+    #[test]
+    fn mrpc_mean_is_about_54() {
+        let mut w = GlueWorkload::mrpc(8);
+        let lens = w.sample_n(20_000);
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((mean - 54.0).abs() < 3.0, "mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        assert_eq!(GlueWorkload::glue(1).sample_n(10), GlueWorkload::glue(1).sample_n(10));
+    }
+}

@@ -1,0 +1,5 @@
+//! FPGA device catalog and resource model (Fig. 15's axes).
+
+pub mod resources;
+
+pub use resources::{Device, ResourceBudget, ResourceUsage};

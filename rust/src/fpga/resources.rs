@@ -1,0 +1,151 @@
+//! Device resource catalogs and the utilisation model behind Fig. 15.
+//!
+//! The paper's limiting resource is BRAM (matrix-sized AXIS FIFOs + all
+//! weights on-chip); DSP usage follows from the PE counts. We model the
+//! four headline resources (LUT, FF, BRAM18, DSP) and let the Cluster
+//! Builder estimate per-kernel usage from its tile/PE parameters.
+
+use std::ops::{Add, AddAssign};
+
+/// A device's total resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceBudget {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram18: u64,
+    pub dsp: u64,
+}
+
+/// Resources consumed by a kernel / shell / FPGA build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceUsage {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram18: u64,
+    pub dsp: u64,
+}
+
+impl Add for ResourceUsage {
+    type Output = ResourceUsage;
+    fn add(self, o: ResourceUsage) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram18: self.bram18 + o.bram18,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+impl AddAssign for ResourceUsage {
+    fn add_assign(&mut self, o: ResourceUsage) {
+        *self = *self + o;
+    }
+}
+
+impl ResourceUsage {
+    /// Utilisation fractions against a budget: (lut, ff, bram, dsp).
+    pub fn utilisation(&self, b: &ResourceBudget) -> (f64, f64, f64, f64) {
+        (
+            self.lut as f64 / b.lut as f64,
+            self.ff as f64 / b.ff as f64,
+            self.bram18 as f64 / b.bram18 as f64,
+            self.dsp as f64 / b.dsp as f64,
+        )
+    }
+
+    pub fn fits(&self, b: &ResourceBudget) -> bool {
+        self.lut <= b.lut && self.ff <= b.ff && self.bram18 <= b.bram18 && self.dsp <= b.dsp
+    }
+
+    pub fn max_utilisation(&self, b: &ResourceBudget) -> f64 {
+        let (l, f, br, d) = self.utilisation(b);
+        l.max(f).max(br).max(d)
+    }
+}
+
+/// Device models the platform knows about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    /// XCZU19EG UltraScale+ (Fidus Sidewinder-100) — the paper's testbed.
+    Xczu19eg,
+    /// XCVC1902 Versal AI Core (VCK190) — §9's estimation target.
+    Xcvc1902,
+}
+
+impl Device {
+    pub fn budget(&self) -> ResourceBudget {
+        match self {
+            // XCZU19EG: 522,720 LUTs, 1,045,440 FFs, 1968 BRAM18, 1968 DSP48
+            Device::Xczu19eg => ResourceBudget {
+                lut: 522_720,
+                ff: 1_045_440,
+                bram18: 1_968,
+                dsp: 1_968,
+            },
+            // XCVC1902: 899,840 LUTs, 1,799,680 FFs, 1934 BRAM18, 1968 DSP58
+            // (+400 AIEs modeled separately in versal::aie)
+            Device::Xcvc1902 => ResourceBudget {
+                lut: 899_840,
+                ff: 1_799_680,
+                bram18: 1_934,
+                dsp: 1_968,
+            },
+        }
+    }
+
+    /// Static shell ("hypervisor" layer §2.1): 100G MAC + Gulf-Stream UDP +
+    /// bridges + router. Calibrated as a modest fraction of the device.
+    pub fn shell_usage(&self) -> ResourceUsage {
+        ResourceUsage { lut: 60_000, ff: 90_000, bram18: 120, dsp: 0 }
+    }
+
+    /// INT8 multiply-accumulate lanes per DSP slice (two int8 MACs pack
+    /// into one DSP48E2 with the standard 27x18 trick).
+    pub fn int8_macs_per_dsp(&self) -> u64 {
+        match self {
+            Device::Xczu19eg => 2,
+            Device::Xcvc1902 => 3, // DSP58 INT8 packing
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilisation_math() {
+        let b = Device::Xczu19eg.budget();
+        let u = ResourceUsage { lut: b.lut / 2, ff: 0, bram18: b.bram18, dsp: 0 };
+        let (l, _, br, _) = u.utilisation(&b);
+        assert!((l - 0.5).abs() < 1e-12);
+        assert!((br - 1.0).abs() < 1e-12);
+        assert!(u.fits(&b));
+        assert_eq!(u.max_utilisation(&b), 1.0);
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let b = Device::Xczu19eg.budget();
+        let u = ResourceUsage { bram18: b.bram18 + 1, ..Default::default() };
+        assert!(!u.fits(&b));
+    }
+
+    #[test]
+    fn shell_fits_comfortably() {
+        for d in [Device::Xczu19eg, Device::Xcvc1902] {
+            let u = d.shell_usage();
+            assert!(u.max_utilisation(&d.budget()) < 0.2);
+        }
+    }
+
+    #[test]
+    fn paper_dsp_budget_supports_pe_counts() {
+        // DESIGN.md calibration: one 768-MAC linear kernel needs <= 384 DSPs
+        // on the XCZU19EG (2 int8 MACs/DSP) — three fit alongside headroom.
+        let d = Device::Xczu19eg;
+        let dsp_per_linear = 768 / d.int8_macs_per_dsp();
+        assert_eq!(dsp_per_linear, 384);
+        assert!(3 * dsp_per_linear < d.budget().dsp);
+    }
+}

@@ -1,0 +1,345 @@
+//! Cluster and platform specifications: the validated form of the user's
+//! kernel graph, from which routing tables and the simulator are built.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::router::{RoutingTables, MAX_CLUSTERS, MAX_KERNELS_PER_CLUSTER};
+use crate::sim::engine::KernelBehavior;
+use crate::sim::fabric::{FpgaId, SwitchId};
+use crate::sim::fifo::Fifo;
+use crate::sim::packet::GlobalKernelId;
+use crate::sim::Sim;
+
+/// §6.1: kernel ids are one of three types forming a contiguous id space
+/// (gateway is id 0 by the §4 convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelType {
+    /// kernel 0: cluster entry point; hosts virtual GMI kernels.
+    Gateway,
+    /// a computation kernel (Layer Builder output).
+    Compute,
+    /// a physically-placed GMI kernel (GMI Builder output).
+    Gmi,
+    /// a GMI kernel integrated into the gateway — reserves an id but is
+    /// not physically placed in the application region (§5.3).
+    Virtual,
+}
+
+/// One kernel declaration in a cluster.
+#[derive(Debug, Clone)]
+pub struct KernelDecl {
+    pub id: u8,
+    pub name: String,
+    pub ktype: KernelType,
+    pub fpga: FpgaId,
+    /// outgoing edges of the connection graph (graph input to Galapagos).
+    pub dests: Vec<GlobalKernelId>,
+    /// input FIFO capacity in bytes (sized by the Cluster Builder).
+    pub fifo_bytes: usize,
+}
+
+/// A Galapagos cluster: up to 256 kernels with a contiguous id space.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub id: u8,
+    pub kernels: Vec<KernelDecl>,
+}
+
+impl ClusterSpec {
+    pub fn kernel(&self, id: u8) -> Option<&KernelDecl> {
+        self.kernels.iter().find(|k| k.id == id)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.kernels.len() > MAX_KERNELS_PER_CLUSTER {
+            bail!(
+                "cluster {}: {} kernels exceeds the 256-kernel Galapagos limit",
+                self.id,
+                self.kernels.len()
+            );
+        }
+        // contiguous id space 0..N-1 (§6.1)
+        let mut ids: Vec<u8> = self.kernels.iter().map(|k| k.id).collect();
+        ids.sort_unstable();
+        for (i, id) in ids.iter().enumerate() {
+            if *id as usize != i {
+                bail!("cluster {}: kernel ids are not contiguous 0..N-1 (saw {id} at {i})", self.id);
+            }
+        }
+        // gateway convention
+        if let Some(k0) = self.kernel(0) {
+            if k0.ktype != KernelType::Gateway {
+                bail!("cluster {}: kernel 0 must be the gateway", self.id);
+            }
+        }
+        for k in &self.kernels {
+            if k.ktype == KernelType::Gateway && k.id != 0 {
+                bail!("cluster {}: gateway must be kernel 0, found at {}", self.id, k.id);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole deployment: clusters of clusters + the switch topology.
+#[derive(Debug, Clone, Default)]
+pub struct PlatformSpec {
+    pub clusters: Vec<ClusterSpec>,
+    pub switch_of: HashMap<FpgaId, SwitchId>,
+}
+
+impl PlatformSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.clusters.len() > MAX_CLUSTERS {
+            bail!("{} clusters exceeds the 256-cluster limit", self.clusters.len());
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in &self.clusters {
+            c.validate()?;
+            if !seen.insert(c.id) {
+                bail!("duplicate cluster id {}", c.id);
+            }
+        }
+        // an FPGA hosts kernels of exactly one cluster (paper's deployment
+        // model: clusters are the unit of reconfiguration, §6)
+        let mut fpga_cluster: HashMap<FpgaId, u8> = HashMap::new();
+        for c in &self.clusters {
+            for k in &c.kernels {
+                if k.ktype == KernelType::Virtual {
+                    continue;
+                }
+                if let Some(prev) = fpga_cluster.insert(k.fpga, c.id) {
+                    if prev != c.id {
+                        bail!(
+                            "FPGA {:?} hosts kernels of clusters {prev} and {} — clusters must \
+                             not share FPGAs",
+                            k.fpga,
+                            c.id
+                        );
+                    }
+                }
+                if !self.switch_of.contains_key(&k.fpga) {
+                    bail!("FPGA {:?} is not attached to any switch", k.fpga);
+                }
+            }
+        }
+        self.validate_edges()?;
+        Ok(())
+    }
+
+    /// Every connection-graph edge must be routable: intra-cluster edges
+    /// resolve in table 1; inter-cluster edges require the destination
+    /// cluster to exist and have a gateway.
+    fn validate_edges(&self) -> Result<()> {
+        let by_id: HashMap<u8, &ClusterSpec> = self.clusters.iter().map(|c| (c.id, c)).collect();
+        for c in &self.clusters {
+            for k in &c.kernels {
+                for d in &k.dests {
+                    let dc = by_id
+                        .get(&d.cluster)
+                        .with_context(|| format!("edge {}->{} targets unknown cluster", k.id, d))?;
+                    if dc.kernel(d.kernel).is_none() {
+                        bail!("edge c{}k{} -> {} targets unknown kernel", c.id, k.id, d);
+                    }
+                    if d.cluster != c.id && dc.kernel(0).map(|g| g.ktype) != Some(KernelType::Gateway)
+                    {
+                        bail!(
+                            "edge c{}k{} -> {} crosses clusters but cluster {} has no gateway",
+                            c.id,
+                            k.id,
+                            d,
+                            d.cluster
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Construct each FPGA's routing tables (what the Network layer would
+    /// burn into BRAM). Gateways of *all* clusters are installed in table 2
+    /// of every FPGA, mirroring the 2N-1 scheme.
+    pub fn routing_tables(&self) -> Result<HashMap<FpgaId, RoutingTables>> {
+        self.validate()?;
+        let mut out: HashMap<FpgaId, RoutingTables> = HashMap::new();
+        for c in &self.clusters {
+            // collect this cluster's kernel placements
+            for k in &c.kernels {
+                if k.ktype == KernelType::Virtual {
+                    continue;
+                }
+                let rt = out.entry(k.fpga).or_insert_with(|| RoutingTables::new(c.id));
+                rt.cluster = c.id;
+            }
+        }
+        for c in &self.clusters {
+            let gateway_fpga = c.kernel(0).map(|g| g.fpga);
+            for (fpga, rt) in out.iter_mut() {
+                if rt.cluster == c.id {
+                    // table 1: all kernels of own cluster
+                    for k in &c.kernels {
+                        if k.ktype != KernelType::Virtual {
+                            rt.set_kernel(k.id, k.fpga);
+                        } else {
+                            // virtual kernels live inside the gateway
+                            if let Some(gf) = gateway_fpga {
+                                rt.set_kernel(k.id, gf);
+                            }
+                        }
+                    }
+                } else if let Some(gf) = gateway_fpga {
+                    // table 2: gateway of every other cluster
+                    let _ = fpga;
+                    rt.set_gateway(c.id, gf);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Instantiate the platform into a simulator. `factory` supplies the
+    /// behavior for each non-virtual kernel.
+    pub fn build_sim(
+        &self,
+        mut factory: impl FnMut(&ClusterSpec, &KernelDecl) -> Box<dyn KernelBehavior>,
+    ) -> Result<Sim> {
+        self.validate()?;
+        let mut sim = Sim::new();
+        for (&f, &s) in &self.switch_of {
+            sim.fabric.attach(f, s);
+        }
+        for c in &self.clusters {
+            for k in &c.kernels {
+                if k.ktype == KernelType::Virtual {
+                    continue;
+                }
+                let id = GlobalKernelId::new(c.id, k.id);
+                let behavior = factory(c, k);
+                sim.add_kernel(id, k.fpga, Fifo::new(k.fifo_bytes), behavior)?;
+            }
+        }
+        Ok(sim)
+    }
+
+    pub fn total_kernels(&self) -> usize {
+        self.clusters.iter().map(|c| c.kernels.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decl(id: u8, ktype: KernelType, fpga: usize) -> KernelDecl {
+        KernelDecl {
+            id,
+            name: format!("k{id}"),
+            ktype,
+            fpga: FpgaId(fpga),
+            dests: vec![],
+            fifo_bytes: 1024,
+        }
+    }
+
+    fn one_cluster() -> PlatformSpec {
+        let c = ClusterSpec {
+            id: 0,
+            kernels: vec![
+                decl(0, KernelType::Gateway, 0),
+                decl(1, KernelType::Compute, 0),
+                decl(2, KernelType::Gmi, 1),
+            ],
+        };
+        let mut p = PlatformSpec { clusters: vec![c], switch_of: HashMap::new() };
+        p.switch_of.insert(FpgaId(0), SwitchId(0));
+        p.switch_of.insert(FpgaId(1), SwitchId(0));
+        p
+    }
+
+    #[test]
+    fn valid_platform_passes() {
+        one_cluster().validate().unwrap();
+    }
+
+    #[test]
+    fn non_contiguous_ids_rejected() {
+        let mut p = one_cluster();
+        p.clusters[0].kernels[2].id = 7;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn gateway_not_zero_rejected() {
+        let mut p = one_cluster();
+        p.clusters[0].kernels[0].ktype = KernelType::Compute;
+        p.clusters[0].kernels[1].ktype = KernelType::Gateway;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn fpga_shared_across_clusters_rejected() {
+        let mut p = one_cluster();
+        let c1 = ClusterSpec {
+            id: 1,
+            kernels: vec![decl(0, KernelType::Gateway, 0)], // reuses FPGA 0
+        };
+        p.clusters.push(c1);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn edge_to_unknown_kernel_rejected() {
+        let mut p = one_cluster();
+        p.clusters[0].kernels[1].dests.push(GlobalKernelId::new(0, 99));
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn routing_tables_have_own_kernels_and_other_gateways() {
+        let mut p = one_cluster();
+        let c1 = ClusterSpec {
+            id: 1,
+            kernels: vec![decl(0, KernelType::Gateway, 2), decl(1, KernelType::Compute, 2)],
+        };
+        p.clusters.push(c1);
+        p.switch_of.insert(FpgaId(2), SwitchId(0));
+        let tables = p.routing_tables().unwrap();
+        let rt0 = &tables[&FpgaId(0)];
+        assert_eq!(rt0.cluster, 0);
+        // 3 own kernels + 1 foreign gateway
+        assert_eq!(rt0.entries(), 4);
+        let rt2 = &tables[&FpgaId(2)];
+        assert_eq!(rt2.cluster, 1);
+        assert_eq!(rt2.entries(), 3); // 2 own + 1 foreign gateway
+    }
+
+    #[test]
+    fn virtual_kernels_not_instantiated() {
+        let mut p = one_cluster();
+        p.clusters[0].kernels.push(decl(3, KernelType::Virtual, 0));
+        struct Nop;
+        impl KernelBehavior for Nop {
+            fn on_packet(&mut self, _: crate::sim::Packet, _: &mut crate::sim::KernelIo) {}
+            fn on_wake(&mut self, _: u64, _: &mut crate::sim::KernelIo) {}
+        }
+        let sim = p.build_sim(|_, _| Box::new(Nop)).unwrap();
+        assert_eq!(sim.kernel_count(), 3); // virtual kernel excluded
+        assert_eq!(p.total_kernels(), 4); // but reserves an id
+    }
+
+    #[test]
+    fn cluster_size_limit_enforced() {
+        let mut kernels = vec![decl(0, KernelType::Gateway, 0)];
+        for i in 1..=256 {
+            // 257 total
+            let mut d = decl((i % 256) as u8, KernelType::Compute, 0);
+            d.id = (i % 256) as u8;
+            kernels.push(d);
+        }
+        let c = ClusterSpec { id: 0, kernels };
+        assert!(c.validate().is_err());
+    }
+}

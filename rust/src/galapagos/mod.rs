@@ -1,0 +1,12 @@
+//! The enhanced Galapagos platform (§2.1 base stack + §4 scaling).
+//!
+//! Galapagos abstracts a group of network-attached FPGAs as "one large
+//! FPGA fabric" hosting streaming kernels. The enhancement this paper
+//! contributes is clusters-of-clusters: hierarchical 256x256 addressing
+//! with gateway kernels and a second routing table.
+
+pub mod cluster;
+pub mod router;
+
+pub use cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
+pub use router::{RoutingTables, MAX_CLUSTERS, MAX_KERNELS_PER_CLUSTER};

@@ -1,0 +1,172 @@
+//! Two-table router model (§4, Fig. 4).
+//!
+//! The original Galapagos router holds one 256-entry table mapping kernel
+//! ids to FPGA addresses. The enhanced router adds TUSER bit16: 0 =>
+//! consult table 1 (intra-cluster kernel -> FPGA IP), 1 => consult table 2
+//! (cluster -> gateway FPGA IP). Restricting inter-cluster traffic to
+//! gateways shrinks state from N^2 to 2N-1 addresses per FPGA.
+
+use anyhow::{bail, Result};
+
+use crate::sim::fabric::FpgaId;
+use crate::sim::packet::Packet;
+#[cfg(test)]
+use crate::sim::packet::GlobalKernelId;
+
+pub const MAX_KERNELS_PER_CLUSTER: usize = 256;
+pub const MAX_CLUSTERS: usize = 256;
+
+/// TUSER sideband width: kernel id bits [7:0], dest cluster bits [15:8],
+/// inter-cluster flag at bit 16 (§4 "one additional bit in the TUSER
+/// channel (bit16)").
+pub const TUSER_INTER_CLUSTER_BIT: u32 = 16;
+
+/// Encode the routing sideband for a packet.
+pub fn encode_tuser(pkt: &Packet) -> u32 {
+    let mut t = pkt.dst.kernel as u32;
+    t |= (pkt.dst.cluster as u32) << 8;
+    if pkt.inter_cluster {
+        t |= 1 << TUSER_INTER_CLUSTER_BIT;
+    }
+    t
+}
+
+/// Decode (kernel, cluster, inter_cluster) from TUSER.
+pub fn decode_tuser(t: u32) -> (u8, u8, bool) {
+    ((t & 0xFF) as u8, ((t >> 8) & 0xFF) as u8, t & (1 << TUSER_INTER_CLUSTER_BIT) != 0)
+}
+
+/// The BRAM-resident routing state of one FPGA.
+#[derive(Debug, Clone)]
+pub struct RoutingTables {
+    /// our cluster id
+    pub cluster: u8,
+    /// table 1: kernel id within this cluster -> FPGA
+    intra: Vec<Option<FpgaId>>,
+    /// table 2: other cluster id -> gateway FPGA
+    inter: Vec<Option<FpgaId>>,
+}
+
+impl RoutingTables {
+    pub fn new(cluster: u8) -> Self {
+        RoutingTables {
+            cluster,
+            intra: vec![None; MAX_KERNELS_PER_CLUSTER],
+            inter: vec![None; MAX_CLUSTERS],
+        }
+    }
+
+    pub fn set_kernel(&mut self, kernel: u8, fpga: FpgaId) {
+        self.intra[kernel as usize] = Some(fpga);
+    }
+
+    pub fn set_gateway(&mut self, cluster: u8, fpga: FpgaId) {
+        self.inter[cluster as usize] = Some(fpga);
+    }
+
+    /// Route a packet: TUSER bit16 selects the table (Fig. 4).
+    pub fn route(&self, pkt: &Packet) -> Result<FpgaId> {
+        let (kernel, cluster, inter) = decode_tuser(encode_tuser(pkt));
+        if inter {
+            match self.inter[cluster as usize] {
+                Some(f) => Ok(f),
+                None => bail!("cluster {cluster} not in routing table 2 of cluster {}", self.cluster),
+            }
+        } else {
+            if cluster != self.cluster {
+                bail!(
+                    "intra-cluster packet for cluster {cluster} routed inside cluster {}",
+                    self.cluster
+                );
+            }
+            match self.intra[kernel as usize] {
+                Some(f) => Ok(f),
+                None => bail!("kernel {kernel} not in routing table 1 of cluster {}", self.cluster),
+            }
+        }
+    }
+
+    /// Entries actually populated (the 2N-1 quantity of §4).
+    pub fn entries(&self) -> usize {
+        self.intra.iter().flatten().count() + self.inter.iter().flatten().count()
+    }
+
+    /// BRAM18 blocks needed for both tables (4-byte IPv4 per entry).
+    pub fn bram18(&self) -> usize {
+        let bytes = 4 * (MAX_KERNELS_PER_CLUSTER + MAX_CLUSTERS);
+        bytes.div_ceil(crate::sim::fifo::BRAM18_BYTES)
+    }
+}
+
+/// §4's scaling argument: addresses stored per FPGA if any kernel may talk
+/// to any kernel in any cluster directly (full mesh) ...
+pub fn full_mesh_entries(n_clusters: usize, kernels_per_cluster: usize) -> usize {
+    n_clusters * kernels_per_cluster
+}
+
+/// ... versus gateway-restricted routing (intra table + one gateway per
+/// other cluster).
+pub fn hierarchical_entries(n_clusters: usize, kernels_per_cluster: usize) -> usize {
+    kernels_per_cluster + (n_clusters - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::packet::{MsgMeta, Payload};
+
+    fn pkt(src: GlobalKernelId, dst: GlobalKernelId) -> Packet {
+        let mut p = Packet::new(src, dst, MsgMeta::default(), Payload::Timing(8));
+        if p.inter_cluster {
+            p.gmi_dst = Some(dst.kernel);
+            p.dst = GlobalKernelId::gateway_of(dst.cluster);
+        }
+        p
+    }
+
+    #[test]
+    fn tuser_roundtrip() {
+        let p = pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(3, 7));
+        let (k, c, inter) = decode_tuser(encode_tuser(&p));
+        assert_eq!((k, c, inter), (0, 3, true)); // rewritten to gateway 0 of cluster 3
+        let q = pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(0, 9));
+        assert_eq!(decode_tuser(encode_tuser(&q)), (9, 0, false));
+    }
+
+    #[test]
+    fn routes_by_table() {
+        let mut rt = RoutingTables::new(0);
+        rt.set_kernel(9, FpgaId(2));
+        rt.set_gateway(3, FpgaId(5));
+        let local = pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(0, 9));
+        assert_eq!(rt.route(&local).unwrap(), FpgaId(2));
+        let remote = pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(3, 7));
+        assert_eq!(rt.route(&remote).unwrap(), FpgaId(5));
+    }
+
+    #[test]
+    fn missing_entries_error() {
+        let rt = RoutingTables::new(0);
+        assert!(rt.route(&pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(0, 9))).is_err());
+        assert!(rt.route(&pkt(GlobalKernelId::new(0, 1), GlobalKernelId::new(2, 2))).is_err());
+    }
+
+    #[test]
+    fn paper_scaling_claim() {
+        // §4: N clusters of N kernels => N^2 addresses full mesh, 2N-1 with
+        // gateways; 256x256 = 65536 kernels total.
+        assert_eq!(full_mesh_entries(256, 256), 65_536);
+        assert_eq!(hierarchical_entries(256, 256), 511); // 2N - 1
+        assert_eq!(
+            MAX_CLUSTERS * MAX_KERNELS_PER_CLUSTER,
+            65_536,
+            "enhanced Galapagos accommodates 65536 kernels"
+        );
+    }
+
+    #[test]
+    fn table_fits_in_one_bram_pair() {
+        let rt = RoutingTables::new(0);
+        assert!(rt.bram18() <= 2);
+    }
+}

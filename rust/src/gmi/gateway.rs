@@ -1,0 +1,173 @@
+//! The Gateway kernel (§4 + §5.3, Fig. 8): the single entry point of a
+//! cluster. Contains the Packet Decoder (GMI header), the Forwarding
+//! module (point-to-point), and integrated GMI modules ("virtual kernels")
+//! that reserve kernel ids without occupying the application region.
+
+use std::collections::HashMap;
+
+use crate::sim::engine::{KernelBehavior, KernelIo};
+use crate::sim::packet::{GlobalKernelId, Packet};
+
+use super::ops::{GmiKernel, GmiOp};
+#[cfg(test)]
+use super::ops::Out;
+
+/// Static configuration of one cluster's gateway.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayConfig {
+    pub cluster: u8,
+    /// virtual kernel id -> integrated GMI module. Id 0 designates the
+    /// gateway's own ingress module (e.g. the encoder input Broadcast of
+    /// Fig. 14's Kern_0).
+    pub virtuals: HashMap<u8, GmiOp>,
+}
+
+/// The gateway behavior: decode -> (virtual GMI module | forwarding).
+pub struct Gateway {
+    cfg: GatewayConfig,
+    subs: HashMap<u8, GmiKernel>,
+}
+
+impl Gateway {
+    pub fn new(cfg: GatewayConfig) -> Self {
+        let subs = cfg
+            .virtuals
+            .iter()
+            .map(|(&id, op)| (id, GmiKernel::new(op.clone())))
+            .collect();
+        Gateway { cfg, subs }
+    }
+}
+
+impl KernelBehavior for Gateway {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        // Packet Decoder: the one-byte GMI header names the final kernel.
+        // Intra-cluster packets addressed to the gateway itself (no
+        // header) go to module 0.
+        let target = pkt.gmi_dst.unwrap_or(0);
+        // strip the header before anything is re-sent
+        let mut inner = pkt;
+        inner.gmi_dst = None;
+        inner.inter_cluster = false;
+        inner.src = io.self_id;
+
+        if let Some(sub) = self.subs.get_mut(&target) {
+            // integrated GMI module (virtual kernel)
+            sub.on_packet(inner, io);
+        } else if target != 0 {
+            // Forwarding module: plain point-to-point to the local kernel
+            io.send(GlobalKernelId::new(self.cfg.cluster, target), inner.meta, inner.payload);
+        } else {
+            // no module configured and no forward target: drop (decoder
+            // has nowhere to send it) — surfaced via trace counters.
+        }
+    }
+
+    fn on_wake(&mut self, _tag: u64, _io: &mut KernelIo) {}
+
+    fn name(&self) -> String {
+        format!("gateway-c{}", self.cfg.cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::START_TAG;
+    use crate::sim::fabric::{FpgaId, SwitchId};
+    use crate::sim::fifo::Fifo;
+    use crate::sim::packet::{MsgMeta, Payload};
+    use crate::sim::Sim;
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    struct Once {
+        dst: GlobalKernelId,
+        bytes: usize,
+    }
+    impl KernelBehavior for Once {
+        fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+        fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+            if tag == START_TAG {
+                io.send(
+                    self.dst,
+                    MsgMeta { rows: 1, ..Default::default() },
+                    Payload::Timing(self.bytes),
+                );
+            }
+        }
+    }
+
+    struct Sink;
+    impl KernelBehavior for Sink {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            io.consume(pkt.wire_bytes());
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    fn two_cluster_sim(virtuals: HashMap<u8, GmiOp>, dst: GlobalKernelId) -> Sim {
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(4096), Box::new(Once { dst, bytes: 768 }))
+            .unwrap();
+        sim.add_kernel(
+            k(1, 0),
+            FpgaId(1),
+            Fifo::new(4096),
+            Box::new(Gateway::new(GatewayConfig { cluster: 1, virtuals })),
+        )
+        .unwrap();
+        for kid in [5u8, 6] {
+            sim.add_kernel(k(1, kid), FpgaId(1), Fifo::new(4096), Box::new(Sink)).unwrap();
+        }
+        sim
+    }
+
+    #[test]
+    fn forwards_point_to_point_by_header() {
+        // sender targets c1k5; sender-side protocol rewrites to gateway+header
+        let mut sim = two_cluster_sim(HashMap::new(), k(1, 5));
+        sim.start();
+        sim.run().unwrap();
+        assert_eq!(sim.trace.kernels.get(&k(1, 5)).unwrap().rx_packets, 1);
+        assert!(sim.trace.kernels.get(&k(1, 6)).is_none_or(|s| s.rx_packets == 0));
+    }
+
+    #[test]
+    fn virtual_broadcast_module_at_gateway() {
+        let mut virtuals = HashMap::new();
+        virtuals.insert(0u8, GmiOp::Broadcast { dsts: vec![Out::to(k(1, 5)), Out::to(k(1, 6))] });
+        // sender targets the gateway itself (kernel 0) => module 0 broadcast
+        let mut sim = two_cluster_sim(virtuals, k(1, 0));
+        sim.start();
+        sim.run().unwrap();
+        assert_eq!(sim.trace.kernels.get(&k(1, 5)).unwrap().rx_packets, 1);
+        assert_eq!(sim.trace.kernels.get(&k(1, 6)).unwrap().rx_packets, 1);
+    }
+
+    #[test]
+    fn header_is_stripped_on_forward() {
+        let mut sim = two_cluster_sim(HashMap::new(), k(1, 5));
+        sim.start();
+        sim.run().unwrap();
+        // 768-byte payload: 13 flits on the wire inter-cluster (header
+        // byte), 12 after the gateway strips it. Verify via fabric flit
+        // accounting: 13 (src->gw) + 12 (gw->k5) = 25.
+        assert_eq!(sim.fabric.stats.flits, 25);
+    }
+
+    #[test]
+    fn unroutable_header_is_dropped_quietly() {
+        // no module at 0, sender targets gateway itself
+        let mut sim = two_cluster_sim(HashMap::new(), k(1, 0));
+        sim.start();
+        sim.run().unwrap();
+        assert_eq!(sim.trace.kernels.get(&k(1, 0)).unwrap().rx_packets, 1);
+        assert!(sim.trace.kernels.get(&k(1, 5)).is_none_or(|s| s.rx_packets == 0));
+    }
+}

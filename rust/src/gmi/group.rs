@@ -1,0 +1,97 @@
+//! Communicators: MPI-style groups with integer ranks (§2.2, §5.1).
+
+use anyhow::{bail, Result};
+
+use crate::sim::packet::GlobalKernelId;
+
+/// A group of kernels with dense ranks. Intra-communicators stay within
+/// one cluster; inter-communicators span clusters (and therefore traverse
+/// gateways).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Communicator {
+    pub id: u32,
+    pub members: Vec<GlobalKernelId>,
+}
+
+impl Communicator {
+    pub fn new(id: u32, members: Vec<GlobalKernelId>) -> Result<Self> {
+        if members.is_empty() {
+            bail!("communicator {id} has no members");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for m in &members {
+            if !seen.insert(*m) {
+                bail!("communicator {id}: duplicate member {m}");
+            }
+        }
+        Ok(Communicator { id, members })
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn rank_of(&self, k: GlobalKernelId) -> Option<usize> {
+        self.members.iter().position(|m| *m == k)
+    }
+
+    pub fn member(&self, rank: usize) -> Option<GlobalKernelId> {
+        self.members.get(rank).copied()
+    }
+
+    /// True iff all members are in one cluster (intra-communicator).
+    pub fn is_intra(&self) -> bool {
+        self.members.windows(2).all(|w| w[0].cluster == w[1].cluster)
+    }
+
+    /// Subgroup by rank list (§5.1: "kernels [can] form subgroups and
+    /// perform collective operations within subgroups").
+    pub fn subgroup(&self, id: u32, ranks: &[usize]) -> Result<Communicator> {
+        let mut members = Vec::with_capacity(ranks.len());
+        for &r in ranks {
+            match self.member(r) {
+                Some(m) => members.push(m),
+                None => bail!("subgroup rank {r} out of range (size {})", self.size()),
+            }
+        }
+        Communicator::new(id, members)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    #[test]
+    fn ranks_are_positions() {
+        let comm = Communicator::new(1, vec![k(0, 3), k(0, 5), k(1, 2)]).unwrap();
+        assert_eq!(comm.rank_of(k(0, 5)), Some(1));
+        assert_eq!(comm.member(2), Some(k(1, 2)));
+        assert_eq!(comm.rank_of(k(9, 9)), None);
+        assert!(!comm.is_intra());
+    }
+
+    #[test]
+    fn intra_detection() {
+        let comm = Communicator::new(2, vec![k(4, 1), k(4, 2)]).unwrap();
+        assert!(comm.is_intra());
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        assert!(Communicator::new(3, vec![k(0, 1), k(0, 1)]).is_err());
+        assert!(Communicator::new(4, vec![]).is_err());
+    }
+
+    #[test]
+    fn subgroups() {
+        let comm = Communicator::new(5, vec![k(0, 1), k(0, 2), k(0, 3), k(0, 4)]).unwrap();
+        let sub = comm.subgroup(6, &[0, 2]).unwrap();
+        assert_eq!(sub.members, vec![k(0, 1), k(0, 3)]);
+        assert!(comm.subgroup(7, &[9]).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The Galapagos Messaging Interface (§5): MPI-like collective
+//! communication for Galapagos clusters, implemented as kernels in the
+//! application region plus virtual kernels inside gateways.
+//!
+//! Design points reproduced from the paper:
+//! * GMI kernels are ordinary Galapagos kernels inserted into the graph
+//!   (Fig. 6) — compute kernels stay free of communication logic;
+//! * the protocol is extremely lightweight: no header intra-cluster, one
+//!   byte (destination kernel id) inter-cluster (§5.2);
+//! * gateways integrate GMI modules as *virtual kernels* (§5.3, Fig. 8);
+//! * communicators group kernels for intra-group and inter-group
+//!   collectives, with subgroup support (§5.1).
+
+pub mod gateway;
+pub mod group;
+pub mod ops;
+
+pub use gateway::{Gateway, GatewayConfig};
+pub use group::Communicator;
+pub use ops::{GmiKernel, GmiOp, Out, ReduceFn, ScatterPolicy};

@@ -1,0 +1,573 @@
+//! GMI collective kernels (§5.1): Broadcast, Scatter, Gather, Reduce —
+//! the basic set from which Allreduce/Allgather compose (§5.1), plus a
+//! point-to-point Forward relay.
+//!
+//! Each op is an ordinary streaming kernel: it consumes packets and emits
+//! packets; compute kernels never see communication logic (Fig. 6b).
+//! Multi-source ops (Gather/Reduce) identify the sender's rank by the
+//! `meta.stream` tag, which the Cluster Builder configures on the sender
+//! side — the GMI protocol itself carries no rank field (it is the
+//! "extremely lightweight protocol" of §5.2).
+
+use std::collections::HashMap;
+
+use crate::sim::engine::{KernelBehavior, KernelIo};
+use crate::sim::packet::{GlobalKernelId, MsgMeta, Packet, Payload};
+
+/// An output edge of a GMI kernel: destination + optional stream retag
+/// (multi-input compute kernels demux their logical ports by meta.stream,
+/// which the Cluster Builder configures on the producing side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Out {
+    pub dst: GlobalKernelId,
+    pub stream: Option<u8>,
+}
+
+impl Out {
+    pub fn to(dst: GlobalKernelId) -> Self {
+        Out { dst, stream: None }
+    }
+    pub fn tagged(dst: GlobalKernelId, stream: u8) -> Self {
+        Out { dst, stream: Some(stream) }
+    }
+    fn retag(&self, meta: MsgMeta) -> MsgMeta {
+        match self.stream {
+            Some(s) => MsgMeta { stream: s, ..meta },
+            None => meta,
+        }
+    }
+}
+
+/// Row distribution policy for Scatter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScatterPolicy {
+    /// contiguous blocks of ceil(rows/n) rows per destination
+    Block,
+    /// row i goes to destination i mod n
+    RoundRobin,
+    /// each row is split column-wise into n equal segments, one per
+    /// destination — the paper's head-wise Q/K/V distribution (§7.2):
+    /// "Scatter" in the MPI sense of one vector scattered across PEs.
+    ColumnSplit,
+}
+
+/// Element-wise combining function for Reduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceFn {
+    Sum,
+    Max,
+}
+
+impl ReduceFn {
+    fn combine_i64(&self, a: i64, b: i64) -> i64 {
+        match self {
+            ReduceFn::Sum => a + b,
+            ReduceFn::Max => a.max(b),
+        }
+    }
+}
+
+/// The collective operation a GMI kernel performs.
+#[derive(Debug, Clone)]
+pub enum GmiOp {
+    Broadcast { dsts: Vec<Out> },
+    Scatter { dsts: Vec<Out>, policy: ScatterPolicy },
+    /// gather `n_srcs` row streams (ranked by meta.stream) into one message
+    Gather { n_srcs: usize, dst: Out },
+    /// gather `n_srcs` per-row column segments (ranked by meta.stream)
+    /// into full rows — the inverse of ScatterPolicy::ColumnSplit (the
+    /// paper's head-merge before the output projection, Fig. 14 Kern_37)
+    GatherCols { n_srcs: usize, dst: Out },
+    /// element-wise reduce `n_srcs` row streams into one
+    Reduce { n_srcs: usize, dst: Out, f: ReduceFn },
+    Forward { dst: Out },
+}
+
+impl GmiOp {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GmiOp::Broadcast { .. } => "Broadcast",
+            GmiOp::Scatter { .. } => "Scatter",
+            GmiOp::Gather { .. } => "Gather",
+            GmiOp::GatherCols { .. } => "GatherCols",
+            GmiOp::Reduce { .. } => "Reduce",
+            GmiOp::Forward { .. } => "Forward",
+        }
+    }
+}
+
+/// Split a payload into `n` equal column segments.
+fn column_split(p: &Payload, n: usize) -> Vec<Payload> {
+    match p {
+        Payload::RowI8(v) => v.chunks(v.len() / n).map(|c| Payload::RowI8(c.to_vec())).collect(),
+        Payload::RowI32(v) => v.chunks(v.len() / n).map(|c| Payload::RowI32(c.to_vec())).collect(),
+        Payload::RowI64(v) => v.chunks(v.len() / n).map(|c| Payload::RowI64(c.to_vec())).collect(),
+        Payload::Timing(b) => (0..n).map(|_| Payload::Timing(b / n)).collect(),
+        Payload::Control(c) => (0..n).map(|_| Payload::Control(*c)).collect(),
+    }
+}
+
+/// Concatenate column segments (same dtype) back into one row.
+fn column_concat(parts: Vec<Payload>) -> Payload {
+    let mut it = parts.into_iter();
+    let mut acc = it.next().expect("concat of nothing");
+    for p in it {
+        acc = match (acc, p) {
+            (Payload::RowI8(mut a), Payload::RowI8(b)) => {
+                a.extend(b);
+                Payload::RowI8(a)
+            }
+            (Payload::RowI32(mut a), Payload::RowI32(b)) => {
+                a.extend(b);
+                Payload::RowI32(a)
+            }
+            (Payload::RowI64(mut a), Payload::RowI64(b)) => {
+                a.extend(b);
+                Payload::RowI64(a)
+            }
+            (Payload::Timing(a), Payload::Timing(b)) => Payload::Timing(a + b),
+            (a, _) => a,
+        };
+    }
+    acc
+}
+
+#[derive(Default)]
+struct GatherState {
+    /// per (inference): per rank: (expected_rows, buffered rows by index)
+    msgs: HashMap<u32, RankBuffers>,
+}
+
+#[derive(Default)]
+struct RankBuffers {
+    per_rank: HashMap<u8, (u32, HashMap<u32, Payload>)>,
+    emitted: u32,
+    next_rank: u8,
+    next_row: u32,
+}
+
+/// A GMI kernel: one op instance, stateless for Broadcast/Scatter/Forward,
+/// buffering for Gather/GatherCols/Reduce.
+pub struct GmiKernel {
+    pub op: GmiOp,
+    gather: GatherState,
+    /// (inference, row) -> per-rank column segments
+    gather_cols: HashMap<(u32, u32), HashMap<u8, Payload>>,
+    reduce: HashMap<(u32, u32), (usize, Payload)>, // (inference,row) -> (count, acc)
+    reduce_meta: HashMap<u32, u32>,                // inference -> rows
+}
+
+impl GmiKernel {
+    pub fn new(op: GmiOp) -> Self {
+        GmiKernel {
+            op,
+            gather: GatherState::default(),
+            gather_cols: HashMap::new(),
+            reduce: HashMap::new(),
+            reduce_meta: HashMap::new(),
+        }
+    }
+
+    fn do_gather_cols(&mut self, pkt: Packet, io: &mut KernelIo) {
+        let GmiOp::GatherCols { n_srcs, dst } = self.op else { unreachable!() };
+        let key = (pkt.meta.inference, pkt.meta.row);
+        let slot = self.gather_cols.entry(key).or_default();
+        slot.insert(pkt.meta.stream, pkt.payload);
+        if slot.len() == n_srcs {
+            let parts = self.gather_cols.remove(&key).unwrap();
+            let ordered: Vec<Payload> =
+                (0..n_srcs as u8).map(|r| parts.get(&r).cloned().expect("missing rank")).collect();
+            let meta = dst.retag(MsgMeta { stream: 0, ..pkt.meta });
+            io.send(dst.dst, meta, column_concat(ordered));
+        }
+    }
+
+    fn do_gather(&mut self, pkt: Packet, io: &mut KernelIo) {
+        let GmiOp::Gather { n_srcs, dst } = self.op else { unreachable!() };
+        let st = self.gather.msgs.entry(pkt.meta.inference).or_default();
+        let rank = pkt.meta.stream;
+        let entry = st.per_rank.entry(rank).or_insert_with(|| (pkt.meta.rows, HashMap::new()));
+        entry.1.insert(pkt.meta.row, pkt.payload);
+
+        // emit eagerly in (rank, row) order
+        loop {
+            if (st.next_rank as usize) >= n_srcs {
+                break;
+            }
+            let Some((expect, buf)) = st.per_rank.get_mut(&st.next_rank) else { break };
+            if st.next_row >= *expect {
+                st.next_rank += 1;
+                st.next_row = 0;
+                continue;
+            }
+            let Some(payload) = buf.remove(&st.next_row) else { break };
+            // total output rows unknown until all ranks announce; use the
+            // running emitted counter for row numbering and patch `rows`
+            // with the per-rank total sum when known (senders all use the
+            // same per-message total in our graphs, so sum is fine).
+            let total: u32 = st.per_rank.values().map(|(e, _)| *e).sum();
+            let meta = dst.retag(MsgMeta {
+                stream: 0,
+                row: st.emitted,
+                rows: total.max(st.emitted + 1),
+                inference: pkt.meta.inference,
+            });
+            io.send(dst.dst, meta, payload);
+            st.emitted += 1;
+            st.next_row += 1;
+        }
+        if (st.next_rank as usize) >= n_srcs {
+            self.gather.msgs.remove(&pkt.meta.inference);
+        }
+    }
+
+    fn do_reduce(&mut self, pkt: Packet, io: &mut KernelIo) {
+        let GmiOp::Reduce { n_srcs, dst, f } = self.op else { unreachable!() };
+        self.reduce_meta.insert(pkt.meta.inference, pkt.meta.rows);
+        let key = (pkt.meta.inference, pkt.meta.row);
+        let slot = self.reduce.entry(key).or_insert_with(|| (0, zero_like(&pkt.payload)));
+        slot.0 += 1;
+        slot.1 = combine(&slot.1, &pkt.payload, f);
+        if slot.0 == n_srcs {
+            let (_, acc) = self.reduce.remove(&key).unwrap();
+            let rows = *self.reduce_meta.get(&pkt.meta.inference).unwrap_or(&pkt.meta.rows);
+            let meta = dst.retag(MsgMeta {
+                stream: 0,
+                row: pkt.meta.row,
+                rows,
+                inference: pkt.meta.inference,
+            });
+            io.send(dst.dst, meta, acc);
+        }
+    }
+}
+
+fn zero_like(p: &Payload) -> Payload {
+    match p {
+        Payload::Timing(b) => Payload::Timing(*b),
+        Payload::RowI8(v) => Payload::RowI32(vec![0; v.len()]),
+        Payload::RowI32(v) => Payload::RowI32(vec![0; v.len()]),
+        Payload::RowI64(v) => Payload::RowI64(vec![0; v.len()]),
+        Payload::Control(_) => Payload::Control(0),
+    }
+}
+
+fn combine(acc: &Payload, new: &Payload, f: ReduceFn) -> Payload {
+    match (acc, new) {
+        (Payload::RowI32(a), Payload::RowI8(b)) => Payload::RowI32(
+            a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32).collect(),
+        ),
+        (Payload::RowI32(a), Payload::RowI32(b)) => Payload::RowI32(
+            a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32).collect(),
+        ),
+        (Payload::RowI64(a), Payload::RowI64(b)) => {
+            Payload::RowI64(a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x, y)).collect())
+        }
+        (Payload::Timing(b), _) => Payload::Timing(*b),
+        (Payload::Control(a), Payload::Control(b)) => Payload::Control(a.wrapping_add(*b)),
+        _ => acc.clone(),
+    }
+}
+
+impl KernelBehavior for GmiKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        match &self.op {
+            GmiOp::Broadcast { dsts } => {
+                for d in dsts.clone() {
+                    io.send(d.dst, d.retag(pkt.meta), pkt.payload.clone());
+                }
+            }
+            GmiOp::Scatter { dsts, policy } => {
+                if *policy == ScatterPolicy::ColumnSplit {
+                    let parts = column_split(&pkt.payload, dsts.len());
+                    for (d, part) in dsts.clone().iter().zip(parts) {
+                        io.send(d.dst, d.retag(pkt.meta), part);
+                    }
+                    return;
+                }
+                let n = dsts.len() as u32;
+                let (idx, row, rows) = match policy {
+                    ScatterPolicy::Block => {
+                        let per = pkt.meta.rows.div_ceil(n);
+                        let i = (pkt.meta.row / per).min(n - 1);
+                        let start = i * per;
+                        let count = per.min(pkt.meta.rows - start);
+                        (i as usize, pkt.meta.row - start, count)
+                    }
+                    ScatterPolicy::RoundRobin => {
+                        let i = pkt.meta.row % n;
+                        let count =
+                            (pkt.meta.rows + n - 1 - i) / n; // rows this lane receives
+                        (i as usize, pkt.meta.row / n, count)
+                    }
+                    ScatterPolicy::ColumnSplit => unreachable!(),
+                };
+                let d = dsts[idx];
+                let meta = d.retag(MsgMeta { row, rows, ..pkt.meta });
+                io.send(d.dst, meta, pkt.payload);
+            }
+            GmiOp::Gather { .. } => self.do_gather(pkt, io),
+            GmiOp::GatherCols { .. } => self.do_gather_cols(pkt, io),
+            GmiOp::Reduce { .. } => self.do_reduce(pkt, io),
+            GmiOp::Forward { dst } => {
+                io.send(dst.dst, dst.retag(pkt.meta), pkt.payload);
+            }
+        }
+    }
+
+    fn on_wake(&mut self, _tag: u64, _io: &mut KernelIo) {}
+
+    fn name(&self) -> String {
+        format!("gmi-{}", self.op.kind().to_lowercase())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::START_TAG;
+    use crate::sim::fabric::{FpgaId, SwitchId};
+    use crate::sim::fifo::Fifo;
+    use crate::sim::Sim;
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    /// Sends a fixed row stream at start.
+    struct Tx {
+        dst: GlobalKernelId,
+        rows: Vec<Vec<i32>>,
+        stream: u8,
+    }
+    impl KernelBehavior for Tx {
+        fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+        fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+            if tag == START_TAG {
+                let n = self.rows.len() as u32;
+                for (i, r) in self.rows.iter().enumerate() {
+                    let meta = MsgMeta {
+                        stream: self.stream,
+                        row: i as u32,
+                        rows: n,
+                        inference: 0,
+                    };
+                    io.send(self.dst, meta, Payload::RowI32(r.clone()));
+                }
+            }
+        }
+    }
+
+    /// Records received rows in arrival order.
+    #[derive(Default)]
+    struct Rx;
+    impl KernelBehavior for Rx {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            io.consume(pkt.wire_bytes());
+            RECORDER.with(|r| r.borrow_mut().push((io.self_id, pkt.meta, pkt.payload)));
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    thread_local! {
+        static RECORDER: std::cell::RefCell<Vec<(GlobalKernelId, MsgMeta, Payload)>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+
+    fn recorded() -> Vec<(GlobalKernelId, MsgMeta, Payload)> {
+        RECORDER.with(|r| r.borrow().clone())
+    }
+    fn reset_recorder() {
+        RECORDER.with(|r| r.borrow_mut().clear());
+    }
+
+    fn base_sim() -> Sim {
+        let mut sim = Sim::new();
+        for f in 0..4 {
+            sim.fabric.attach(FpgaId(f), SwitchId(0));
+        }
+        sim
+    }
+
+    #[test]
+    fn broadcast_clones_to_all() {
+        reset_recorder();
+        let mut sim = base_sim();
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 2),
+            rows: vec![vec![1, 2], vec![3, 4]],
+            stream: 0,
+        })).unwrap();
+        sim.add_kernel(
+            k(0, 2),
+            FpgaId(1),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Broadcast { dsts: vec![Out::to(k(0, 3)), Out::to(k(0, 4))] })),
+        )
+        .unwrap();
+        sim.add_kernel(k(0, 3), FpgaId(2), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.add_kernel(k(0, 4), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let got = recorded();
+        assert_eq!(got.len(), 4);
+        let to3 = got.iter().filter(|(id, _, _)| *id == k(0, 3)).count();
+        assert_eq!(to3, 2);
+    }
+
+    #[test]
+    fn scatter_block_splits_rows() {
+        reset_recorder();
+        let mut sim = base_sim();
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 2),
+            rows: (0..6).map(|i| vec![i]).collect(),
+            stream: 0,
+        })).unwrap();
+        sim.add_kernel(
+            k(0, 2),
+            FpgaId(1),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Scatter {
+                dsts: vec![Out::to(k(0, 3)), Out::to(k(0, 4))],
+                policy: ScatterPolicy::Block,
+            })),
+        )
+        .unwrap();
+        sim.add_kernel(k(0, 3), FpgaId(2), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.add_kernel(k(0, 4), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let got = recorded();
+        // rows 0..2 -> kernel 3, rows 3..5 -> kernel 4, renumbered 0..2
+        let to3: Vec<i32> = got
+            .iter()
+            .filter(|(id, _, _)| *id == k(0, 3))
+            .map(|(_, _, p)| match p {
+                Payload::RowI32(v) => v[0],
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(to3, vec![0, 1, 2]);
+        for (id, meta, _) in &got {
+            if *id == k(0, 4) {
+                assert!(meta.row < 3);
+                assert_eq!(meta.rows, 3);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_orders_by_rank() {
+        reset_recorder();
+        let mut sim = base_sim();
+        // rank 1 fires first but must be emitted after rank 0
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 3),
+            rows: vec![vec![10], vec![11]],
+            stream: 1,
+        })).unwrap();
+        sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 3),
+            rows: vec![vec![0], vec![1]],
+            stream: 0,
+        })).unwrap();
+        sim.add_kernel(
+            k(0, 3),
+            FpgaId(2),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Gather { n_srcs: 2, dst: Out::to(k(0, 4)) })),
+        )
+        .unwrap();
+        sim.add_kernel(k(0, 4), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let vals: Vec<i32> = recorded()
+            .iter()
+            .map(|(_, _, p)| match p {
+                Payload::RowI32(v) => v[0],
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(vals, vec![0, 1, 10, 11]);
+        let rows: Vec<u32> = recorded().iter().map(|(_, m, _)| m.row).collect();
+        assert_eq!(rows, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reduce_sums_across_ranks() {
+        reset_recorder();
+        let mut sim = base_sim();
+        for (kid, stream, base) in [(1u8, 0u8, 0), (2, 1, 100)] {
+            sim.add_kernel(k(0, kid), FpgaId(kid as usize - 1), Fifo::new(1 << 16), Box::new(Tx {
+                dst: k(0, 3),
+                rows: vec![vec![base + 1, base + 2], vec![base + 3, base + 4]],
+                stream,
+            })).unwrap();
+        }
+        sim.add_kernel(
+            k(0, 3),
+            FpgaId(2),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Reduce {
+                n_srcs: 2,
+                dst: Out::to(k(0, 4)),
+                f: ReduceFn::Sum,
+            })),
+        )
+        .unwrap();
+        sim.add_kernel(k(0, 4), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let mut rows: Vec<(u32, Vec<i32>)> = recorded()
+            .iter()
+            .map(|(_, m, p)| match p {
+                Payload::RowI32(v) => (m.row, v.clone()),
+                _ => panic!(),
+            })
+            .collect();
+        rows.sort();
+        assert_eq!(rows, vec![(0, vec![102, 104]), (1, vec![106, 108])]);
+    }
+
+    #[test]
+    fn allgather_composes_from_gather_plus_broadcast() {
+        // §5.1: Allgather = Gather to a root, then Broadcast back out.
+        reset_recorder();
+        let mut sim = base_sim();
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 3),
+            rows: vec![vec![7]],
+            stream: 0,
+        })).unwrap();
+        sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 16), Box::new(Tx {
+            dst: k(0, 3),
+            rows: vec![vec![8]],
+            stream: 1,
+        })).unwrap();
+        sim.add_kernel(
+            k(0, 3),
+            FpgaId(2),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Gather { n_srcs: 2, dst: Out::to(k(0, 4)) })),
+        )
+        .unwrap();
+        sim.add_kernel(
+            k(0, 4),
+            FpgaId(2),
+            Fifo::new(1 << 16),
+            Box::new(GmiKernel::new(GmiOp::Broadcast { dsts: vec![Out::to(k(0, 5)), Out::to(k(0, 6))] })),
+        )
+        .unwrap();
+        sim.add_kernel(k(0, 5), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.add_kernel(k(0, 6), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
+        sim.start();
+        sim.run().unwrap();
+        // both leaves see both rows
+        for leaf in [k(0, 5), k(0, 6)] {
+            let n = recorded().iter().filter(|(id, _, _)| *id == leaf).count();
+            assert_eq!(n, 2, "leaf {leaf} sees the gathered set");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Bit-exact integer I-BERT operators — the rust mirror of
+//! `python/compile/iops.py`. Every function here matches its python twin
+//! operation-for-operation (same floor-division semantics, same shift
+//! rounding, same Newton schedule); golden vectors exported at build time
+//! enforce the contract (rust/tests/golden_numerics.rs).
+
+use super::config::{GeluParams, LayerNormParams, RequantSite, SoftmaxParams};
+
+/// == jnp.floor_divide for b > 0 (floors toward -inf).
+#[inline]
+pub fn floor_div(a: i64, b: i64) -> i64 {
+    a.div_euclid(b)
+}
+
+/// Round-half-up right shift: (x + 2^(n-1)) >> n, arithmetic.
+#[inline]
+pub fn rshift_round(x: i64, n: u32) -> i64 {
+    if n == 0 {
+        x
+    } else {
+        (x + (1i64 << (n - 1))) >> n
+    }
+}
+
+#[inline]
+pub fn clip8(x: i64) -> i8 {
+    x.clamp(-127, 127) as i8
+}
+
+/// int32/int64 accumulator -> int8 at the site's output scale.
+#[inline]
+pub fn requant8(acc: i64, s: RequantSite) -> i8 {
+    clip8(rshift_round(acc * s.m, s.n))
+}
+
+/// int32/int64 accumulator -> wide value (residual/LayerNorm domain).
+#[inline]
+pub fn requant32(acc: i64, s: RequantSite) -> i64 {
+    rshift_round(acc * s.m, s.n)
+}
+
+/// Fixed-iteration Newton integer sqrt — EXACTLY the schedule of
+/// iops.isqrt (35 iterations from 2^32, two floor-corrections).
+pub fn isqrt(n: i64) -> i64 {
+    debug_assert!(n >= 0);
+    if n == 0 {
+        return 0;
+    }
+    let mut x: i64 = 1 << 32;
+    for _ in 0..35 {
+        x = std::cmp::max(floor_div(x + floor_div(n, std::cmp::max(x, 1)), 2), 1);
+    }
+    if x * x > n {
+        x -= 1;
+    }
+    if x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// One output element of an int8 linear: dot(x_row, w_col) + bias (int32
+/// accumulate — the PE of Fig. 11).
+#[inline]
+pub fn pe_dot(x_row: &[i8], w_col: impl Iterator<Item = i8>, bias: i32) -> i32 {
+    let mut acc = bias;
+    for (&x, w) in x_row.iter().zip(w_col) {
+        acc += (x as i32) * (w as i32);
+    }
+    acc
+}
+
+/// Full linear row: x_row [K] x W [K, N] + b [N] -> [N] int32.
+/// `w` is row-major [K][N].
+pub fn linear_row(x_row: &[i8], w: &[i8], k: usize, n: usize, bias: &[i32]) -> Vec<i32> {
+    debug_assert_eq!(x_row.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    let mut out = bias.to_vec();
+    // row-major weight walk: accumulate x[i] * W[i, :] into the output row
+    // (cache-friendly; mathematically identical to per-column PE dots)
+    for (i, &x) in x_row.iter().enumerate() {
+        if x == 0 {
+            continue;
+        }
+        let x = x as i32;
+        let wrow = &w[i * n..(i + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += x * wv as i32;
+        }
+    }
+    out
+}
+
+/// i-Softmax over one score row (actual sequence length only — the
+/// hardware no-padding path). Mirrors iops.i_softmax with all-valid mask.
+pub fn softmax_row(scores: &[i32], sm: SoftmaxParams) -> Vec<i8> {
+    const OUT_SHIFT: u32 = 15; // quantize.SOFTMAX_OUT_SHIFT
+    const OUT_SCALE: i64 = 127; // quantize.SOFTMAX_OUT_SCALE
+    const SHIFT_MAX: i64 = 31; // quantize.EXP_SHIFT_MAX
+
+    let qmax = scores.iter().copied().max().unwrap_or(0) as i64;
+    let mut e: Vec<i64> = Vec::with_capacity(scores.len());
+    for &s in scores {
+        let qt = s as i64 - qmax; // <= 0
+        let z = floor_div(-qt, sm.q_ln2);
+        let p = qt + z * sm.q_ln2;
+        let v = (p + sm.q_b) * (p + sm.q_b) + sm.q_c;
+        let zc = z.min(SHIFT_MAX);
+        e.push(v >> zc);
+    }
+    let total: i64 = e.iter().sum::<i64>().max(1);
+    e.iter()
+        .map(|&ei| {
+            let q15 = floor_div(ei << OUT_SHIFT, total);
+            let p8 = rshift_round(q15 * OUT_SCALE, OUT_SHIFT);
+            p8.clamp(0, 127) as i8
+        })
+        .collect()
+}
+
+/// i-GELU on one int8 value (mirrors iops.i_gelu; note the sign flip for
+/// the negative s_erf — see quantize.GeluParams).
+#[inline]
+pub fn gelu_i8(q: i8, gp: GeluParams) -> i8 {
+    let q = q as i64;
+    let sgn = q.signum();
+    let qa = q.abs().min(-gp.q_b);
+    let poly = (qa + gp.q_b) * (qa + gp.q_b) + gp.q_c;
+    let q_erf = sgn * poly;
+    let q_out = q * (q_erf + gp.q_one);
+    requant8(-q_out, gp.out)
+}
+
+pub fn gelu_row(row: &[i8], gp: GeluParams) -> Vec<i8> {
+    row.iter().map(|&q| gelu_i8(q, gp)).collect()
+}
+
+/// i-LayerNorm over one row in the wide residual domain.
+/// gamma_q/beta_q are the Q{kg} per-channel constants from the model FS.
+pub fn layernorm_row(q: &[i64], gamma_q: &[i64], beta_q: &[i64], ln: LayerNormParams) -> Vec<i8> {
+    let h = q.len() as i64;
+    let sum_q: i64 = q.iter().sum();
+    let mean = floor_div(2 * sum_q + h, 2 * h);
+    let var = floor_div(q.iter().map(|&x| (x - mean) * (x - mean)).sum::<i64>(), h);
+    let std = isqrt(var).max(1);
+    q.iter()
+        .zip(gamma_q.iter().zip(beta_q))
+        .map(|(&x, (&g, &b))| {
+            let d = x - mean;
+            let t = floor_div(d * g, std) + b;
+            clip8(rshift_round(t, ln.kg))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_div_floors_negatives() {
+        assert_eq!(floor_div(-7, 2), -4); // python -7 // 2
+        assert_eq!(floor_div(7, 2), 3);
+        assert_eq!(floor_div(-6, 3), -2);
+    }
+
+    #[test]
+    fn rshift_round_matches_half_up() {
+        assert_eq!(rshift_round(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rshift_round(-5, 1), -2); // -2.5 -> -2 (floor(x+.5))
+        assert_eq!(rshift_round(4, 2), 1);
+        assert_eq!(rshift_round(100, 0), 100);
+    }
+
+    #[test]
+    fn isqrt_is_floor_sqrt() {
+        for n in [0i64, 1, 2, 3, 4, 15, 16, 17, 1_000_000, (1 << 40) - 1, 1 << 40] {
+            let r = isqrt(n);
+            assert!(r * r <= n, "isqrt({n})={r}");
+            assert!((r + 1) * (r + 1) > n, "isqrt({n})={r}");
+        }
+    }
+
+    #[test]
+    fn isqrt_property() {
+        crate::util::quickcheck::check("isqrt-floor", |g| {
+            let n = g.i64_in(0, 1 << 50);
+            let r = isqrt(n);
+            crate::prop_assert!(r * r <= n && (r + 1) * (r + 1) > n, "isqrt({n}) = {r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clip_and_requant() {
+        assert_eq!(clip8(500), 127);
+        assert_eq!(clip8(-500), -127);
+        let s = RequantSite { m: 1 << 14, n: 14 }; // identity
+        assert_eq!(requant8(100, s), 100);
+        assert_eq!(requant32(-5_000, s), -5_000);
+    }
+
+    #[test]
+    fn linear_row_matches_pe_dot() {
+        let k = 8;
+        let n = 3;
+        let x: Vec<i8> = (0..k as i8).collect();
+        let w: Vec<i8> = (0..(k * n) as i32).map(|v| (v % 17 - 8) as i8).collect();
+        let bias = vec![5i32, -7, 0];
+        let full = linear_row(&x, &w, k, n, &bias);
+        for j in 0..n {
+            let col = (0..k).map(|i| w[i * n + j]);
+            assert_eq!(full[j], pe_dot(&x, col, bias[j]));
+        }
+    }
+
+    #[test]
+    fn softmax_row_sums_to_one_ish() {
+        let sm = SoftmaxParams { q_ln2: 1051, q_b: 2052, q_c: 2_209_112 };
+        let scores: Vec<i32> = vec![-3000, 0, 2500, 2500, -10_000];
+        let p = softmax_row(&scores, sm);
+        assert!(p.iter().all(|&x| x >= 0));
+        let total: i64 = p.iter().map(|&x| x as i64).sum();
+        assert!((total - 127).abs() <= 13, "sum={total}");
+        assert_eq!(p[2], p[3]);
+        assert!(p[2] > p[1] && p[1] >= p[0]);
+    }
+
+    #[test]
+    fn gelu_monotone_nonneg_side() {
+        let gp = GeluParams {
+            q_b: -70,
+            q_c: -5272,
+            q_one: -5272,
+            out: RequantSite { m: 25463, n: 28 },
+        };
+        let ys: Vec<i8> = (0..=127).map(|q| gelu_i8(q as i8, gp)).collect();
+        for w in ys.windows(2) {
+            assert!(w[1] >= w[0], "gelu must be monotone for q >= 0");
+        }
+        // gelu(0) == 0
+        assert_eq!(gelu_i8(0, gp), 0);
+        // large negative inputs approach 0 from below
+        assert!(gelu_i8(-127, gp) >= -15);
+    }
+
+    #[test]
+    fn layernorm_row_zero_mean_unit_gamma() {
+        let ln = LayerNormParams { kg: 10 };
+        let h = 64;
+        let gamma = vec![1i64 << 10; h];
+        let beta = vec![0i64; h];
+        // alternating +-1000 => mean 0, std 1000
+        let q: Vec<i64> = (0..h).map(|i| if i % 2 == 0 { 1000 } else { -1000 }).collect();
+        let out = layernorm_row(&q, &gamma, &beta, ln);
+        // normalized to +-1 at Q10 scale => clip8(round(1024/1024)) = 1
+        assert!(out.iter().all(|&v| v == 1 || v == -1));
+    }
+}

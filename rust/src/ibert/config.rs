@@ -1,0 +1,160 @@
+//! Quantisation constants, parsed from artifacts/quantparams.json.
+//!
+//! These are the integer constants derived ONCE in python/compile/quantize.py;
+//! the rust side only reads them (bit-exactness contract — DESIGN.md).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequantSite {
+    pub m: i64,
+    pub n: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SoftmaxParams {
+    pub q_ln2: i64,
+    pub q_b: i64,
+    pub q_c: i64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeluParams {
+    pub q_b: i64,
+    pub q_c: i64,
+    pub q_one: i64,
+    pub out: RequantSite,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerNormParams {
+    pub kg: u32,
+}
+
+/// All integer constants of one encoder (mirror of quantize.EncoderQuant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EncoderQuant {
+    pub rq_q: RequantSite,
+    pub rq_k: RequantSite,
+    pub rq_v: RequantSite,
+    pub rq_att: RequantSite,
+    pub rq_proj: RequantSite,
+    pub rq_resin: RequantSite,
+    pub rq_gelu_in: RequantSite,
+    pub rq_ffn2: RequantSite,
+    pub rq_res2in: RequantSite,
+    pub softmax: SoftmaxParams,
+    pub gelu: GeluParams,
+    pub ln1: LayerNormParams,
+    pub ln2: LayerNormParams,
+}
+
+/// Model geometry (BERT-base / I-BERT base).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub num_encoders: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { hidden: 768, heads: 12, ffn: 3072, max_seq: 128, num_encoders: 12 }
+    }
+}
+
+fn site(j: &Json, path: &str) -> Result<RequantSite> {
+    let s = j.path(path).with_context(|| format!("quantparams missing {path}"))?;
+    Ok(RequantSite {
+        m: s.get("m").and_then(Json::as_i64).context("requant m")?,
+        n: s.get("n").and_then(Json::as_i64).context("requant n")? as u32,
+    })
+}
+
+fn int(j: &Json, path: &str) -> Result<i64> {
+    j.path(path).and_then(Json::as_i64).with_context(|| format!("quantparams missing {path}"))
+}
+
+/// Parse quantparams.json text into (geometry, constants).
+pub fn parse_quantparams(text: &str) -> Result<(ModelConfig, EncoderQuant)> {
+    let j = Json::parse(text).context("quantparams.json")?;
+    let cfg = ModelConfig {
+        hidden: int(&j, "hidden")? as usize,
+        heads: int(&j, "heads")? as usize,
+        ffn: int(&j, "ffn")? as usize,
+        max_seq: int(&j, "max_seq")? as usize,
+        num_encoders: int(&j, "num_encoders")? as usize,
+    };
+    let e = "encoder";
+    let eq = EncoderQuant {
+        rq_q: site(&j, &format!("{e}.rq_q"))?,
+        rq_k: site(&j, &format!("{e}.rq_k"))?,
+        rq_v: site(&j, &format!("{e}.rq_v"))?,
+        rq_att: site(&j, &format!("{e}.rq_att"))?,
+        rq_proj: site(&j, &format!("{e}.rq_proj"))?,
+        rq_resin: site(&j, &format!("{e}.rq_resin"))?,
+        rq_gelu_in: site(&j, &format!("{e}.rq_gelu_in"))?,
+        rq_ffn2: site(&j, &format!("{e}.rq_ffn2"))?,
+        rq_res2in: site(&j, &format!("{e}.rq_res2in"))?,
+        softmax: SoftmaxParams {
+            q_ln2: int(&j, &format!("{e}.softmax.q_ln2"))?,
+            q_b: int(&j, &format!("{e}.softmax.q_b"))?,
+            q_c: int(&j, &format!("{e}.softmax.q_c"))?,
+        },
+        gelu: GeluParams {
+            q_b: int(&j, &format!("{e}.gelu.q_b"))?,
+            q_c: int(&j, &format!("{e}.gelu.q_c"))?,
+            q_one: int(&j, &format!("{e}.gelu.q_one"))?,
+            out: site(&j, &format!("{e}.gelu.out"))?,
+        },
+        ln1: LayerNormParams { kg: int(&j, &format!("{e}.ln1.kg"))? as u32 },
+        ln2: LayerNormParams { kg: int(&j, &format!("{e}.ln2.kg"))? as u32 },
+    };
+    Ok((cfg, eq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "encoder": {
+        "rq_q": {"m": 25412, "n": 24}, "rq_k": {"m": 21090, "n": 24},
+        "rq_v": {"m": 22878, "n": 24}, "rq_att": {"m": 20365, "n": 21},
+        "rq_proj": {"m": 30599, "n": 15}, "rq_resin": {"m": 25999, "n": 5},
+        "rq_gelu_in": {"m": 27916, "n": 24}, "rq_ffn2": {"m": 23137, "n": 15},
+        "rq_res2in": {"m": 32264, "n": 5},
+        "softmax": {"q_ln2": 1051, "q_b": 2052, "q_c": 2209112},
+        "gelu": {"q_b": -70, "q_c": -5272, "q_one": -5272,
+                 "out": {"m": 25463, "n": 28}},
+        "ln1": {"kg": 10}, "ln2": {"kg": 10}
+      },
+      "hidden": 768, "heads": 12, "ffn": 3072, "max_seq": 128, "num_encoders": 12
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let (cfg, eq) = parse_quantparams(SAMPLE).unwrap();
+        assert_eq!(cfg.hidden, 768);
+        assert_eq!(cfg.head_dim(), 64);
+        assert_eq!(eq.rq_q.m, 25412);
+        assert_eq!(eq.softmax.q_c, 2_209_112);
+        assert_eq!(eq.gelu.q_b, -70);
+        assert_eq!(eq.ln2.kg, 10);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(parse_quantparams("{\"hidden\": 768}").is_err());
+    }
+}

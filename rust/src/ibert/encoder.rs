@@ -1,0 +1,149 @@
+//! Whole-matrix encoder forward — the rust reference implementation,
+//! bit-exact against python (golden vectors) and against the streaming
+//! kernel graph (integration tests). Matches `model.encoder_fwd`
+//! operation-for-operation.
+
+use super::compute::*;
+use super::weights::ModelParams;
+
+/// All intermediate stage tensors (names match model.py's `stages`).
+#[derive(Debug, Clone)]
+pub struct EncoderStages {
+    pub q: Vec<Vec<i8>>,
+    pub k: Vec<Vec<i8>>,
+    pub v: Vec<Vec<i8>>,
+    /// [heads][m][m]
+    pub probs: Vec<Vec<Vec<i8>>>,
+    pub att: Vec<Vec<i8>>,
+    pub res: Vec<Vec<i64>>,
+    pub ln1: Vec<Vec<i8>>,
+    pub gelu_in: Vec<Vec<i8>>,
+    pub mid: Vec<Vec<i8>>,
+    pub res2: Vec<Vec<i64>>,
+    pub out: Vec<Vec<i8>>,
+}
+
+/// One encoder layer over `x` [m][hidden] int8. No padding: `m` is the
+/// actual sequence length (§7.1's no-padding design).
+pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
+    let h = p.cfg.hidden;
+    let heads = p.cfg.heads;
+    let d = p.cfg.head_dim();
+    let f = p.cfg.ffn;
+    let m = x.len();
+    let eq = &p.eq;
+
+    // ---- Layer 0: Q/K/V linears + Quant ----
+    let lin8 = |w: &[i8], b: &[i32], site| -> Vec<Vec<i8>> {
+        x.iter()
+            .map(|row| {
+                linear_row(row, w, h, h, b)
+                    .into_iter()
+                    .map(|a| requant8(a as i64, site))
+                    .collect()
+            })
+            .collect()
+    };
+    let q8 = lin8(&p.wq.data, &p.bq, eq.rq_q);
+    let k8 = lin8(&p.wk.data, &p.bk, eq.rq_k);
+    let v8 = lin8(&p.wv.data, &p.bv, eq.rq_v);
+
+    // ---- Layers 1-3: per-head attention ----
+    let mut probs = vec![vec![vec![0i8; m]; m]; heads];
+    let mut att = vec![vec![0i8; h]; m];
+    for hd in 0..heads {
+        let lo = hd * d;
+        for r in 0..m {
+            // scores row: q_r . k_c over the head slice
+            let scores: Vec<i32> = (0..m)
+                .map(|c| {
+                    let mut acc = 0i32;
+                    for j in 0..d {
+                        acc += q8[r][lo + j] as i32 * k8[c][lo + j] as i32;
+                    }
+                    acc
+                })
+                .collect();
+            probs[hd][r] = softmax_row(&scores, eq.softmax);
+        }
+        for r in 0..m {
+            for j in 0..d {
+                let mut acc = 0i32;
+                for c in 0..m {
+                    acc += probs[hd][r][c] as i32 * v8[c][lo + j] as i32;
+                }
+                att[r][lo + j] = requant8(acc as i64, eq.rq_att);
+            }
+        }
+    }
+
+    // ---- Layer 4: projection + residual + LayerNorm ----
+    let res: Vec<Vec<i64>> = x
+        .iter()
+        .zip(&att)
+        .map(|(xr, ar)| {
+            let proj = linear_row(ar, &p.wo.data, h, h, &p.bo);
+            proj.iter()
+                .zip(xr)
+                .map(|(&pa, &xi)| {
+                    requant32(pa as i64, eq.rq_proj) + requant32(xi as i64, eq.rq_resin)
+                })
+                .collect()
+        })
+        .collect();
+    let ln1: Vec<Vec<i8>> = res
+        .iter()
+        .map(|r| layernorm_row(r, &p.ln1_gamma, &p.ln1_beta, eq.ln1))
+        .collect();
+
+    // ---- Layer 5: FFN + residual + LayerNorm ----
+    let gelu_in: Vec<Vec<i8>> = ln1
+        .iter()
+        .map(|r| {
+            linear_row(r, &p.w1.data, h, f, &p.b1)
+                .into_iter()
+                .map(|a| requant8(a as i64, eq.rq_gelu_in))
+                .collect()
+        })
+        .collect();
+    let mid: Vec<Vec<i8>> = gelu_in.iter().map(|r| gelu_row(r, eq.gelu)).collect();
+    let res2: Vec<Vec<i64>> = mid
+        .iter()
+        .zip(&ln1)
+        .map(|(mr, lr)| {
+            let ffn2 = linear_row(mr, &p.w2.data, f, h, &p.b2);
+            ffn2.iter()
+                .zip(lr)
+                .map(|(&fa, &li)| {
+                    requant32(fa as i64, eq.rq_ffn2) + requant32(li as i64, eq.rq_res2in)
+                })
+                .collect()
+        })
+        .collect();
+    let out: Vec<Vec<i8>> = res2
+        .iter()
+        .map(|r| layernorm_row(r, &p.ln2_gamma, &p.ln2_beta, eq.ln2))
+        .collect();
+
+    EncoderStages { q: q8, k: k8, v: v8, probs, att, res, ln1, gelu_in, mid, res2, out }
+}
+
+/// Full model: `n` identical-weight encoders in series (model.model_fwd).
+pub fn model_forward(p: &ModelParams, x: &[Vec<i8>], n: usize) -> Vec<Vec<i8>> {
+    let mut cur: Vec<Vec<i8>> = x.to_vec();
+    for _ in 0..n {
+        cur = encoder_forward(p, &cur).out;
+    }
+    cur
+}
+
+/// Convert a 2-D golden tensor into row vectors.
+pub fn rows_i8(t: &crate::util::tensorfile::TensorData<i8>) -> Vec<Vec<i8>> {
+    let (m, n) = (t.dims[0], t.dims[1]);
+    (0..m).map(|r| t.data[r * n..(r + 1) * n].to_vec()).collect()
+}
+
+pub fn rows_i64(t: &crate::util::tensorfile::TensorData<i64>) -> Vec<Vec<i64>> {
+    let (m, n) = (t.dims[0], t.dims[1]);
+    (0..m).map(|r| t.data[r * n..(r + 1) * n].to_vec()).collect()
+}

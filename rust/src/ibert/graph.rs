@@ -1,0 +1,392 @@
+//! The Fig. 14 encoder graph: 38 kernels over six FPGAs, one Galapagos
+//! cluster per encoder (§7.2).
+//!
+//! Kernel numbering follows the paper with one fix: the paper's own
+//! listing skips id 33 (enumerating 0–32 and 34–38, which is 38 kernels);
+//! Galapagos requires a contiguous id space, so our GMI kernels are
+//! 33–37 — still 38 kernels total (see DESIGN.md "Known deviations").
+//!
+//!   0        Gateway (+ virtual Broadcast of the encoder input)
+//!   1..3     Linear+Quant (Q, K, V)            — layer 0
+//!   4..15    Attention Dot-Product + Softmax   — layers 1-2 (per head)
+//!   16..27   Softmax Matrix-Multiply + Quant   — layer 3 (per head)
+//!   28       Linear+Quant (output projection)  — layer 4
+//!   29       Add & LayerNorm 1                 — layer 4
+//!   30       Linear+GELU (FFN 1)               — layer 5
+//!   31       Linear+Quant (FFN 2)              — layer 5
+//!   32       Add & LayerNorm 2                 — layer 5
+//!   33,34,35 GMI Scatter (head-split Q, K, V)
+//!   36       GMI GatherCols (head merge)
+//!   37       GMI Broadcast (LN1 -> FFN + residual)
+
+use std::collections::HashMap;
+
+use crate::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType};
+use crate::gmi::gateway::{Gateway, GatewayConfig};
+use crate::gmi::{GmiKernel, GmiOp, Out, ScatterPolicy};
+use crate::sim::engine::KernelBehavior;
+use crate::sim::fabric::FpgaId;
+use crate::sim::packet::GlobalKernelId;
+
+use super::kernels::{
+    AttentionHeadKernel, LayerNormKernel, LinearKernel, LinearWhich, LnWhich, Mode, SoftmaxMMKernel,
+};
+use super::timing::PeConfig;
+
+pub const HEADS: u8 = 12;
+pub const KERNELS_PER_ENCODER: usize = 38;
+
+/// Ids of the encoder kernels (paper Fig. 14, contiguous renumbering).
+pub mod ids {
+    pub const GATEWAY: u8 = 0;
+    pub const LINEAR_Q: u8 = 1;
+    pub const LINEAR_K: u8 = 2;
+    pub const LINEAR_V: u8 = 3;
+    pub const ATTN_BASE: u8 = 4; // ..15
+    pub const SMM_BASE: u8 = 16; // ..27
+    pub const PROJ: u8 = 28;
+    pub const LN1: u8 = 29;
+    pub const FFN1: u8 = 30;
+    pub const FFN2: u8 = 31;
+    pub const LN2: u8 = 32;
+    pub const SCATTER_Q: u8 = 33;
+    pub const SCATTER_K: u8 = 34;
+    pub const SCATTER_V: u8 = 35;
+    pub const GATHER: u8 = 36;
+    pub const BCAST_LN1: u8 = 37;
+}
+
+/// Configuration of one encoder cluster build.
+#[derive(Clone)]
+pub struct EncoderGraphParams {
+    pub cluster_id: u8,
+    /// six consecutive FPGAs starting here
+    pub fpga_base: usize,
+    pub pe: PeConfig,
+    pub mode: Mode,
+    /// where LN2 sends the encoder output (next encoder's gateway, or the
+    /// evaluation sink)
+    pub out_dst: Out,
+    /// sequence capacity used for FIFO sizing (the hardware build point)
+    pub max_seq: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+}
+
+/// A built encoder: the validated cluster spec plus kernel behaviors.
+pub struct EncoderBuild {
+    pub cluster: ClusterSpec,
+    pub behaviors: HashMap<u8, Box<dyn KernelBehavior>>,
+}
+
+/// FPGA placement of a kernel id within the 6-FPGA encoder (Fig. 18).
+pub fn fpga_slot(id: u8) -> usize {
+    use ids::*;
+    match id {
+        GATEWAY | LINEAR_Q | LINEAR_K | LINEAR_V | SCATTER_Q | SCATTER_K | SCATTER_V => 0,
+        x if (ATTN_BASE..ATTN_BASE + HEADS).contains(&x) => 1,
+        x if (SMM_BASE..SMM_BASE + HEADS).contains(&x) => 2,
+        GATHER => 2,
+        PROJ | LN1 | BCAST_LN1 => 3,
+        FFN1 => 4,
+        FFN2 | LN2 => 5,
+        _ => panic!("unknown encoder kernel id {id}"),
+    }
+}
+
+fn kind_of(id: u8) -> KernelType {
+    use ids::*;
+    match id {
+        GATEWAY => KernelType::Gateway,
+        SCATTER_Q | SCATTER_K | SCATTER_V | GATHER | BCAST_LN1 => KernelType::Gmi,
+        _ => KernelType::Compute,
+    }
+}
+
+/// Input FIFO capacity of each kernel, per the paper's sizing rule
+/// ("large enough to hold at least one matrix", §8.2.1).
+pub fn fifo_bytes(id: u8, max_seq: usize, hidden: usize, ffn: usize) -> usize {
+    use ids::*;
+    let d = hidden / HEADS as usize;
+    match id {
+        GATEWAY => max_seq * hidden,
+        LINEAR_Q | LINEAR_K | LINEAR_V => max_seq * hidden,
+        x if (ATTN_BASE..ATTN_BASE + HEADS).contains(&x) => 2 * max_seq * d,
+        x if (SMM_BASE..SMM_BASE + HEADS).contains(&x) => max_seq * (max_seq + d),
+        PROJ => max_seq * hidden,
+        // LN1 holds the residual input matrix while the attention path drains
+        LN1 => max_seq * hidden + 16 * 4 * hidden,
+        FFN1 => max_seq * hidden,
+        FFN2 => max_seq * ffn,
+        LN2 => max_seq * hidden + 16 * 4 * hidden,
+        SCATTER_Q | SCATTER_K | SCATTER_V => 8 * hidden,
+        GATHER => max_seq * hidden,
+        BCAST_LN1 => 8 * hidden,
+        _ => panic!("unknown encoder kernel id {id}"),
+    }
+}
+
+/// Connection-graph edges of kernel `id` (the graph input to Galapagos).
+pub fn dests_of(id: u8, cluster: u8, out_dst: Out) -> Vec<GlobalKernelId> {
+    use ids::*;
+    let k = |n: u8| GlobalKernelId::new(cluster, n);
+    match id {
+        GATEWAY => vec![k(LINEAR_Q), k(LINEAR_K), k(LINEAR_V), k(LN1)],
+        LINEAR_Q => vec![k(SCATTER_Q)],
+        LINEAR_K => vec![k(SCATTER_K)],
+        LINEAR_V => vec![k(SCATTER_V)],
+        x if (ATTN_BASE..ATTN_BASE + HEADS).contains(&x) => vec![k(SMM_BASE + (x - ATTN_BASE))],
+        x if (SMM_BASE..SMM_BASE + HEADS).contains(&x) => vec![k(GATHER)],
+        PROJ => vec![k(LN1)],
+        LN1 => vec![k(BCAST_LN1)],
+        FFN1 => vec![k(FFN2)],
+        FFN2 => vec![k(LN2)],
+        LN2 => vec![out_dst.dst],
+        SCATTER_Q | SCATTER_K => (0..HEADS).map(|h| k(ATTN_BASE + h)).collect(),
+        SCATTER_V => (0..HEADS).map(|h| k(SMM_BASE + h)).collect(),
+        GATHER => vec![k(PROJ)],
+        BCAST_LN1 => vec![k(FFN1), k(LN2)],
+        _ => panic!("unknown encoder kernel id {id}"),
+    }
+}
+
+/// Build one encoder cluster: spec + behaviors (§7.2's Cluster Builder
+/// output for the I-BERT layer description).
+pub fn build_encoder(gp: &EncoderGraphParams) -> EncoderBuild {
+    use ids::*;
+    let c = gp.cluster_id;
+    let k = |n: u8| GlobalKernelId::new(c, n);
+
+    let mut behaviors: HashMap<u8, Box<dyn KernelBehavior>> = HashMap::new();
+
+    // gateway with the virtual input-broadcast module (Kern_0)
+    let mut virtuals = HashMap::new();
+    virtuals.insert(
+        0u8,
+        GmiOp::Broadcast {
+            dsts: vec![
+                Out::tagged(k(LINEAR_Q), 0),
+                Out::tagged(k(LINEAR_K), 0),
+                Out::tagged(k(LINEAR_V), 0),
+                Out::tagged(k(LN1), 1), // residual path
+            ],
+        },
+    );
+    behaviors.insert(GATEWAY, Box::new(Gateway::new(GatewayConfig { cluster: c, virtuals })));
+
+    // layer 0: Q/K/V linears
+    behaviors.insert(
+        LINEAR_Q,
+        Box::new(LinearKernel::new(LinearWhich::Q, Out::to(k(SCATTER_Q)), gp.mode.clone(), &gp.pe)),
+    );
+    behaviors.insert(
+        LINEAR_K,
+        Box::new(LinearKernel::new(LinearWhich::K, Out::to(k(SCATTER_K)), gp.mode.clone(), &gp.pe)),
+    );
+    behaviors.insert(
+        LINEAR_V,
+        Box::new(LinearKernel::new(LinearWhich::V, Out::to(k(SCATTER_V)), gp.mode.clone(), &gp.pe)),
+    );
+
+    // head-split scatters
+    behaviors.insert(
+        SCATTER_Q,
+        Box::new(GmiKernel::new(GmiOp::Scatter {
+            dsts: (0..HEADS).map(|h| Out::tagged(k(ATTN_BASE + h), 0)).collect(),
+            policy: ScatterPolicy::ColumnSplit,
+        })),
+    );
+    behaviors.insert(
+        SCATTER_K,
+        Box::new(GmiKernel::new(GmiOp::Scatter {
+            dsts: (0..HEADS).map(|h| Out::tagged(k(ATTN_BASE + h), 1)).collect(),
+            policy: ScatterPolicy::ColumnSplit,
+        })),
+    );
+    behaviors.insert(
+        SCATTER_V,
+        Box::new(GmiKernel::new(GmiOp::Scatter {
+            dsts: (0..HEADS).map(|h| Out::tagged(k(SMM_BASE + h), 1)).collect(),
+            policy: ScatterPolicy::ColumnSplit,
+        })),
+    );
+
+    // layers 1-3: attention heads
+    for h in 0..HEADS {
+        behaviors.insert(
+            ATTN_BASE + h,
+            Box::new(AttentionHeadKernel::new(
+                h as usize,
+                Out::tagged(k(SMM_BASE + h), 0),
+                gp.mode.clone(),
+                gp.pe,
+            )),
+        );
+        behaviors.insert(
+            SMM_BASE + h,
+            Box::new(SoftmaxMMKernel::new(
+                h as usize,
+                Out::tagged(k(GATHER), h), // stream tag = gather rank
+                gp.mode.clone(),
+                gp.pe,
+            )),
+        );
+    }
+
+    // head merge
+    behaviors.insert(
+        GATHER,
+        Box::new(GmiKernel::new(GmiOp::GatherCols {
+            n_srcs: HEADS as usize,
+            dst: Out::tagged(k(PROJ), 0),
+        })),
+    );
+
+    // layer 4
+    behaviors.insert(
+        PROJ,
+        Box::new(LinearKernel::new(LinearWhich::Proj, Out::tagged(k(LN1), 0), gp.mode.clone(), &gp.pe)),
+    );
+    behaviors.insert(
+        LN1,
+        Box::new(LayerNormKernel::new(LnWhich::Ln1, Out::to(k(BCAST_LN1)), gp.mode.clone(), gp.pe)),
+    );
+    behaviors.insert(
+        BCAST_LN1,
+        Box::new(GmiKernel::new(GmiOp::Broadcast {
+            dsts: vec![Out::tagged(k(FFN1), 0), Out::tagged(k(LN2), 1)],
+        })),
+    );
+
+    // layer 5
+    behaviors.insert(
+        FFN1,
+        Box::new(LinearKernel::new(LinearWhich::Ffn1, Out::tagged(k(FFN2), 0), gp.mode.clone(), &gp.pe)),
+    );
+    behaviors.insert(
+        FFN2,
+        Box::new(LinearKernel::new(LinearWhich::Ffn2, Out::tagged(k(LN2), 0), gp.mode.clone(), &gp.pe)),
+    );
+    behaviors.insert(
+        LN2,
+        Box::new(LayerNormKernel::new(LnWhich::Ln2, gp.out_dst, gp.mode.clone(), gp.pe)),
+    );
+
+    // the cluster spec
+    let mut kernels = Vec::new();
+    for id in 0..KERNELS_PER_ENCODER as u8 {
+        kernels.push(KernelDecl {
+            id,
+            name: kernel_name(id),
+            ktype: kind_of(id),
+            fpga: FpgaId(gp.fpga_base + fpga_slot(id)),
+            dests: dests_of(id, c, gp.out_dst),
+            fifo_bytes: fifo_bytes(id, gp.max_seq, gp.hidden, gp.ffn),
+        });
+    }
+
+    EncoderBuild { cluster: ClusterSpec { id: c, kernels }, behaviors }
+}
+
+/// Human-readable kernel name (Fig. 14 labels).
+pub fn kernel_name(id: u8) -> String {
+    use ids::*;
+    match id {
+        GATEWAY => "gateway+broadcast".into(),
+        LINEAR_Q => "linear-q+quant".into(),
+        LINEAR_K => "linear-k+quant".into(),
+        LINEAR_V => "linear-v+quant".into(),
+        x if (ATTN_BASE..ATTN_BASE + HEADS).contains(&x) => {
+            format!("dot-product+softmax-h{}", x - ATTN_BASE)
+        }
+        x if (SMM_BASE..SMM_BASE + HEADS).contains(&x) => {
+            format!("softmax-mm+quant-h{}", x - SMM_BASE)
+        }
+        PROJ => "linear-proj+quant".into(),
+        LN1 => "add+layernorm-1".into(),
+        FFN1 => "linear-ffn1+gelu".into(),
+        FFN2 => "linear-ffn2+quant".into(),
+        LN2 => "add+layernorm-2".into(),
+        SCATTER_Q => "gmi-scatter-q".into(),
+        SCATTER_K => "gmi-scatter-k".into(),
+        SCATTER_V => "gmi-scatter-v".into(),
+        GATHER => "gmi-gather-heads".into(),
+        BCAST_LN1 => "gmi-broadcast-ln1".into(),
+        _ => format!("kern_{id}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> EncoderGraphParams {
+        EncoderGraphParams {
+            cluster_id: 0,
+            fpga_base: 0,
+            pe: PeConfig::default(),
+            mode: Mode::Timing,
+            out_dst: Out::to(GlobalKernelId::new(0, ids::GATEWAY)), // placeholder
+            max_seq: 128,
+            hidden: 768,
+            ffn: 3072,
+        }
+    }
+
+    #[test]
+    fn encoder_has_38_kernels_like_fig14() {
+        let b = build_encoder(&params());
+        assert_eq!(b.cluster.kernels.len(), 38);
+        assert_eq!(b.behaviors.len(), 38);
+        b.cluster.validate().unwrap();
+    }
+
+    #[test]
+    fn six_fpgas_used() {
+        let b = build_encoder(&params());
+        let mut fpgas: Vec<usize> =
+            b.cluster.kernels.iter().map(|k| k.fpga.0).collect();
+        fpgas.sort_unstable();
+        fpgas.dedup();
+        assert_eq!(fpgas, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn gmi_kernel_count_matches_paper() {
+        // §9.4: "we have 38 kernels, including six GMI kernels" — five
+        // physical (scatters, gather, broadcast) + the gateway's virtual
+        // broadcast module.
+        let b = build_encoder(&params());
+        let gmi = b.cluster.kernels.iter().filter(|k| k.ktype == KernelType::Gmi).count();
+        assert_eq!(gmi, 5);
+        let gw = b.cluster.kernels.iter().filter(|k| k.ktype == KernelType::Gateway).count();
+        assert_eq!(gw, 1);
+    }
+
+    #[test]
+    fn paper_fifo_rule_43_brams() {
+        // one [128, 768] int8 matrix => 43 BRAM18 (§8.2.1)
+        let bytes = fifo_bytes(ids::LINEAR_Q, 128, 768, 3072);
+        assert_eq!(bytes.div_ceil(crate::sim::fifo::BRAM18_BYTES), 43);
+    }
+
+    #[test]
+    fn edges_form_a_dag_reaching_ln2() {
+        // BFS from the gateway must reach LN2 (the encoder output)
+        let _b = build_encoder(&params());
+        let mut seen = std::collections::HashSet::new();
+        let mut queue = vec![ids::GATEWAY];
+        while let Some(id) = queue.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            for d in dests_of(id, 0, Out::to(GlobalKernelId::new(0, 0))) {
+                if d.cluster == 0 && d.kernel != ids::GATEWAY && !seen.contains(&d.kernel) {
+                    queue.push(d.kernel);
+                }
+            }
+        }
+        assert!(seen.contains(&ids::LN2));
+        assert_eq!(seen.len(), 38, "all kernels reachable");
+    }
+}

@@ -1,0 +1,756 @@
+//! Streaming kernel behaviors of the I-BERT encoder (§7.1, Fig. 14).
+//!
+//! Each kernel is the HLS module of the paper as a discrete-event actor:
+//! rows stream in, a PE/tile timing model (timing.rs) paces the output,
+//! and in Functional mode the emitted rows carry real integers computed
+//! with the bit-exact operators of compute.rs — so a simulated six-FPGA
+//! cluster produces the same bytes as the JAX reference.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::engine::{KernelBehavior, KernelIo, START_TAG};
+use crate::sim::packet::{MsgMeta, Packet, Payload};
+
+use super::compute;
+use super::timing::PeConfig;
+use super::weights::ModelParams;
+use crate::gmi::Out;
+
+/// Simulation mode: pure timing (Timing payloads) or functional
+/// (real integer rows, bit-exact vs the reference).
+#[derive(Clone)]
+pub enum Mode {
+    Timing,
+    Functional(Arc<ModelParams>),
+}
+
+impl Mode {
+    pub fn is_functional(&self) -> bool {
+        matches!(self, Mode::Functional(_))
+    }
+    fn params(&self) -> Option<&Arc<ModelParams>> {
+        match self {
+            Mode::Functional(p) => Some(p),
+            Mode::Timing => None,
+        }
+    }
+}
+
+#[inline]
+fn tag_of(inference: u32, row: u32) -> u64 {
+    ((inference as u64) << 32) | row as u64
+}
+#[inline]
+fn untag(t: u64) -> (u32, u32) {
+    ((t >> 32) as u32, t as u32)
+}
+
+/// Serialize row emissions: a pipelined unit with a one-time fill depth
+/// and a per-row initiation interval. A row arriving at `now` emits at
+/// max(now + fill + ii, last_emit + ii) — steady-state output interval is
+/// exactly `ii` (the paper's measured I = 767 for the 768-wide linears).
+#[derive(Debug, Default, Clone, Copy)]
+struct EmitPacer {
+    last_emit: Option<u64>,
+}
+
+impl EmitPacer {
+    fn schedule(&mut self, now: u64, fill: u64, ii: u64) -> u64 {
+        let emit = (now + fill + ii).max(self.last_emit.map_or(0, |e| e + ii));
+        self.last_emit = Some(emit);
+        emit
+    }
+}
+
+fn row_i8(p: Payload) -> Option<Vec<i8>> {
+    match p {
+        Payload::RowI8(v) => Some(v),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear kernels (Kern_1..3, 28, 30, 31)
+// ---------------------------------------------------------------------------
+
+/// Which linear module this kernel instantiates; selects weights, the
+/// requantiser, the fused post-op, and the output payload kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearWhich {
+    Q,
+    K,
+    V,
+    /// attention output projection; emits wide rows for the residual add
+    Proj,
+    /// FFN first linear with fused i-GELU (Kern_30)
+    Ffn1,
+    /// FFN second linear; emits wide rows (Kern_31)
+    Ffn2,
+}
+
+/// Linear (+Quant / +GELU) kernel: consumes one int8 row, emits one row.
+pub struct LinearKernel {
+    pub which: LinearWhich,
+    pub out: Out,
+    pub mode: Mode,
+    pub row_cycles: u64,
+    pub fill: u64,
+    pacer: EmitPacer,
+    pending: HashMap<u64, (MsgMeta, Option<Vec<i8>>)>,
+}
+
+impl LinearKernel {
+    pub fn new(which: LinearWhich, out: Out, mode: Mode, pe: &PeConfig) -> Self {
+        let (h, f) = match mode.params() {
+            Some(p) => (p.cfg.hidden as u64, p.cfg.ffn as u64),
+            None => (768, 3072),
+        };
+        let row_cycles = match which {
+            LinearWhich::Q | LinearWhich::K | LinearWhich::V | LinearWhich::Proj => {
+                pe.qkv_row_cycles(h)
+            }
+            LinearWhich::Ffn1 => pe.ffn1_row_cycles(h, f),
+            LinearWhich::Ffn2 => pe.ffn2_row_cycles(h, f),
+        };
+        LinearKernel {
+            which,
+            out,
+            mode,
+            row_cycles,
+            fill: pe.pipe_fill,
+            pacer: EmitPacer::default(),
+            pending: HashMap::new(),
+        }
+    }
+
+    fn out_bytes(&self, p: &ModelParamsDims) -> usize {
+        match self.which {
+            LinearWhich::Q | LinearWhich::K | LinearWhich::V => p.hidden,
+            LinearWhich::Proj | LinearWhich::Ffn2 => 4 * p.hidden,
+            LinearWhich::Ffn1 => p.ffn,
+        }
+    }
+
+    fn compute_row(&self, p: &ModelParams, x: &[i8]) -> Payload {
+        let (h, f) = (p.cfg.hidden, p.cfg.ffn);
+        let eq = &p.eq;
+        match self.which {
+            LinearWhich::Q => Payload::RowI8(
+                compute::linear_row(x, &p.wq.data, h, h, &p.bq)
+                    .into_iter()
+                    .map(|a| compute::requant8(a as i64, eq.rq_q))
+                    .collect(),
+            ),
+            LinearWhich::K => Payload::RowI8(
+                compute::linear_row(x, &p.wk.data, h, h, &p.bk)
+                    .into_iter()
+                    .map(|a| compute::requant8(a as i64, eq.rq_k))
+                    .collect(),
+            ),
+            LinearWhich::V => Payload::RowI8(
+                compute::linear_row(x, &p.wv.data, h, h, &p.bv)
+                    .into_iter()
+                    .map(|a| compute::requant8(a as i64, eq.rq_v))
+                    .collect(),
+            ),
+            LinearWhich::Proj => Payload::RowI32(
+                compute::linear_row(x, &p.wo.data, h, h, &p.bo)
+                    .into_iter()
+                    .map(|a| compute::requant32(a as i64, eq.rq_proj) as i32)
+                    .collect(),
+            ),
+            LinearWhich::Ffn1 => Payload::RowI8(
+                compute::linear_row(x, &p.w1.data, h, f, &p.b1)
+                    .into_iter()
+                    .map(|a| compute::gelu_i8(compute::requant8(a as i64, eq.rq_gelu_in), eq.gelu))
+                    .collect(),
+            ),
+            LinearWhich::Ffn2 => Payload::RowI32(
+                compute::linear_row(x, &p.w2.data, f, h, &p.b2)
+                    .into_iter()
+                    .map(|a| compute::requant32(a as i64, eq.rq_ffn2) as i32)
+                    .collect(),
+            ),
+        }
+    }
+}
+
+struct ModelParamsDims {
+    hidden: usize,
+    ffn: usize,
+}
+
+impl KernelBehavior for LinearKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        let t = tag_of(pkt.meta.inference, pkt.meta.row);
+        let data = if self.mode.is_functional() { row_i8(pkt.payload) } else { None };
+        self.pending.insert(t, (pkt.meta, data));
+        let emit_at = self.pacer.schedule(io.now, self.fill, self.row_cycles);
+        io.wake_in(emit_at - io.now, t);
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            return;
+        }
+        let Some((meta, data)) = self.pending.remove(&tag) else { return };
+        let dims = match self.mode.params() {
+            Some(p) => ModelParamsDims { hidden: p.cfg.hidden, ffn: p.cfg.ffn },
+            None => ModelParamsDims { hidden: 768, ffn: 3072 },
+        };
+        let payload = match (&self.mode, data) {
+            (Mode::Functional(p), Some(x)) => self.compute_row(p, &x),
+            _ => Payload::Timing(self.out_bytes(&dims)),
+        };
+        let meta = MsgMeta { stream: self.out.stream.unwrap_or(0), ..meta };
+        io.send(self.out.dst, meta, payload);
+    }
+
+    fn name(&self) -> String {
+        format!("linear-{:?}", self.which)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention dot-product + softmax head kernel (Kern_4..15)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct AttnInf {
+    m: u32,
+    k_rows: BTreeMap<u32, Vec<i8>>,
+    k_got: u32,
+    q_pending: BTreeMap<u32, Option<Vec<i8>>>,
+    emitted: u32,
+}
+
+/// One attention head: buffers K (stream 1), streams Q rows (stream 0)
+/// into score rows, applies i-Softmax, emits int8 probability rows.
+pub struct AttentionHeadKernel {
+    pub head: usize,
+    pub out: Out,
+    pub mode: Mode,
+    pub pe: PeConfig,
+    pacer: EmitPacer,
+    inf: HashMap<u32, AttnInf>,
+}
+
+impl AttentionHeadKernel {
+    pub fn new(head: usize, out: Out, mode: Mode, pe: PeConfig) -> Self {
+        AttentionHeadKernel { head, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
+    }
+
+    fn drain_ready(&mut self, inference: u32, io: &mut KernelIo) {
+        let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
+        let Some(st) = self.inf.get_mut(&inference) else { return };
+        if st.m == 0 || st.k_got < st.m {
+            return;
+        }
+        let m = st.m as u64;
+        let cycles = self.pe.attn_row_cycles(m, d) + self.pe.softmax_row_cycles(m);
+        let fill = self.pe.pipe_fill;
+        let rows: Vec<u32> = st.q_pending.keys().copied().collect();
+        for r in rows {
+            let emit_at = self.pacer.schedule(io.now, fill, cycles);
+            io.wake_in(emit_at - io.now, tag_of(inference, r));
+        }
+    }
+}
+
+impl KernelBehavior for AttentionHeadKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        let inference = pkt.meta.inference;
+        let functional = self.mode.is_functional();
+        {
+            let st = self.inf.entry(inference).or_default();
+            st.m = st.m.max(pkt.meta.rows);
+            match pkt.meta.stream {
+                1 => {
+                    if functional {
+                        if let Payload::RowI8(v) = pkt.payload {
+                            st.k_rows.insert(pkt.meta.row, v);
+                        }
+                    }
+                    st.k_got += 1;
+                    if st.k_got == st.m {
+                        self.drain_ready(inference, io);
+                    }
+                }
+                _ => {
+                    let data = if functional { row_i8(pkt.payload) } else { None };
+                    let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
+                    let st = self.inf.get_mut(&inference).unwrap();
+                    st.q_pending.insert(pkt.meta.row, data);
+                    if st.k_got == st.m && st.m > 0 {
+                        // schedule just this row
+                        let m = st.m as u64;
+                        let cycles =
+                            self.pe.attn_row_cycles(m, d) + self.pe.softmax_row_cycles(m);
+                        let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
+                        io.wake_in(emit_at - io.now, tag_of(inference, pkt.meta.row));
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            return;
+        }
+        let (inference, row) = untag(tag);
+        let Some(st) = self.inf.get_mut(&inference) else { return };
+        let Some(q) = st.q_pending.remove(&row) else { return };
+        let m = st.m;
+        let payload = match (&self.mode, q) {
+            (Mode::Functional(p), Some(qrow)) => {
+                let scores: Vec<i32> = (0..m)
+                    .map(|c| {
+                        let krow = &st.k_rows[&c];
+                        let mut acc = 0i32;
+                        for (qq, kk) in qrow.iter().zip(krow) {
+                            acc += *qq as i32 * *kk as i32;
+                        }
+                        acc
+                    })
+                    .collect();
+                Payload::RowI8(compute::softmax_row(&scores, p.eq.softmax))
+            }
+            _ => Payload::Timing(m as usize),
+        };
+        st.emitted += 1;
+        let done = st.emitted == m;
+        let meta = MsgMeta {
+            stream: self.out.stream.unwrap_or(0),
+            row,
+            rows: m,
+            inference,
+        };
+        io.send(self.out.dst, meta, payload);
+        if done {
+            self.inf.remove(&inference);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("attn-head{}", self.head)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax matrix-multiply + Quant head kernel (Kern_16..27)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct SmmInf {
+    m: u32,
+    v_rows: BTreeMap<u32, Vec<i8>>,
+    v_got: u32,
+    p_pending: BTreeMap<u32, Option<Vec<i8>>>,
+    emitted: u32,
+}
+
+/// One head of the Softmax Matrix Multiply (§7.1.3): prob rows (stream 0)
+/// x buffered V slice (stream 1) -> requantised int8 attention segments.
+pub struct SoftmaxMMKernel {
+    pub head: usize,
+    pub out: Out,
+    pub mode: Mode,
+    pub pe: PeConfig,
+    pacer: EmitPacer,
+    inf: HashMap<u32, SmmInf>,
+}
+
+impl SoftmaxMMKernel {
+    pub fn new(head: usize, out: Out, mode: Mode, pe: PeConfig) -> Self {
+        SoftmaxMMKernel { head, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
+    }
+
+    fn schedule_row(&mut self, inference: u32, row: u32, m: u64, io: &mut KernelIo) {
+        let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
+        let cycles = self.pe.smm_row_cycles(m, d);
+        let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
+        io.wake_in(emit_at - io.now, tag_of(inference, row));
+    }
+}
+
+impl KernelBehavior for SoftmaxMMKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        let inference = pkt.meta.inference;
+        let functional = self.mode.is_functional();
+        let st = self.inf.entry(inference).or_default();
+        st.m = st.m.max(pkt.meta.rows);
+        match pkt.meta.stream {
+            1 => {
+                if functional {
+                    if let Payload::RowI8(v) = pkt.payload {
+                        st.v_rows.insert(pkt.meta.row, v);
+                    }
+                }
+                st.v_got += 1;
+                if st.v_got == st.m {
+                    let m = st.m as u64;
+                    let rows: Vec<u32> = st.p_pending.keys().copied().collect();
+                    for r in rows {
+                        self.schedule_row(inference, r, m, io);
+                    }
+                }
+            }
+            _ => {
+                let data = if functional { row_i8(pkt.payload) } else { None };
+                st.p_pending.insert(pkt.meta.row, data);
+                let (m, ready) = (st.m as u64, st.v_got == st.m && st.m > 0);
+                if ready {
+                    self.schedule_row(inference, pkt.meta.row, m, io);
+                }
+            }
+        }
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            return;
+        }
+        let (inference, row) = untag(tag);
+        let Some(st) = self.inf.get_mut(&inference) else { return };
+        let Some(probs) = st.p_pending.remove(&row) else { return };
+        let m = st.m;
+        let payload = match (&self.mode, probs) {
+            (Mode::Functional(p), Some(prow)) => {
+                let d = p.cfg.head_dim();
+                let mut seg = vec![0i8; d];
+                for (j, s) in seg.iter_mut().enumerate() {
+                    let mut acc = 0i32;
+                    for c in 0..m {
+                        acc += prow[c as usize] as i32 * st.v_rows[&c][j] as i32;
+                    }
+                    *s = compute::requant8(acc as i64, p.eq.rq_att);
+                }
+                Payload::RowI8(seg)
+            }
+            _ => Payload::Timing(64),
+        };
+        st.emitted += 1;
+        let done = st.emitted == m;
+        let meta = MsgMeta {
+            stream: self.out.stream.unwrap_or(self.head as u8),
+            row,
+            rows: m,
+            inference,
+        };
+        io.send(self.out.dst, meta, payload);
+        if done {
+            self.inf.remove(&inference);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("smm-head{}", self.head)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm (+ residual requant-add) kernel (Kern_29, 32)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LnWhich {
+    Ln1,
+    Ln2,
+}
+
+#[derive(Default)]
+struct LnInf {
+    main: BTreeMap<u32, Option<Vec<i32>>>,
+    resid: BTreeMap<u32, Option<Vec<i8>>>,
+    /// wire bytes still sitting in the input FIFO per row (the residual
+    /// matrix genuinely occupies the FIFO until the attention path
+    /// catches up — the paper's §8.2.1 sizing rule)
+    fifo_bytes: BTreeMap<u32, usize>,
+    emitted: u32,
+    rows: u32,
+}
+
+/// Add & Norm: wide rows (stream 0) + int8 residual rows (stream 1) ->
+/// requant-add -> i-LayerNorm -> int8 rows.
+pub struct LayerNormKernel {
+    pub which: LnWhich,
+    pub out: Out,
+    pub mode: Mode,
+    pub pe: PeConfig,
+    pacer: EmitPacer,
+    inf: HashMap<u32, LnInf>,
+}
+
+impl LayerNormKernel {
+    pub fn new(which: LnWhich, out: Out, mode: Mode, pe: PeConfig) -> Self {
+        LayerNormKernel { which, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
+    }
+}
+
+impl KernelBehavior for LayerNormKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        // NOT consumed yet: rows wait in the input FIFO until both the
+        // wide row and its residual partner arrive (consume on emission)
+        let _ = &io;
+        let inference = pkt.meta.inference;
+        let row = pkt.meta.row;
+        let functional = self.mode.is_functional();
+        let st = self.inf.entry(inference).or_default();
+        st.rows = st.rows.max(pkt.meta.rows);
+        *st.fifo_bytes.entry(row).or_insert(0) += pkt.wire_bytes();
+        match pkt.meta.stream {
+            1 => {
+                let data = if functional {
+                    match pkt.payload {
+                        Payload::RowI8(v) => Some(v),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                st.resid.insert(row, data);
+            }
+            _ => {
+                let data = if functional {
+                    match pkt.payload {
+                        Payload::RowI32(v) => Some(v),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                st.main.insert(row, data);
+            }
+        }
+        if st.main.contains_key(&row) && st.resid.contains_key(&row) {
+            let h = self.mode.params().map(|p| p.cfg.hidden).unwrap_or(768) as u64;
+            let cycles = self.pe.ln_row_cycles(h);
+            let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
+            io.wake_in(emit_at - io.now, tag_of(inference, row));
+        }
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            return;
+        }
+        let (inference, row) = untag(tag);
+        let Some(st) = self.inf.get_mut(&inference) else { return };
+        let (Some(main), Some(resid)) = (st.main.remove(&row), st.resid.remove(&row)) else {
+            return;
+        };
+        // both rows leave the input FIFO now
+        io.consume(st.fifo_bytes.remove(&row).unwrap_or(0));
+        let payload = match (&self.mode, main, resid) {
+            (Mode::Functional(p), Some(main), Some(resid)) => {
+                let eq = &p.eq;
+                let (site, gamma, beta, ln) = match self.which {
+                    LnWhich::Ln1 => (eq.rq_resin, &p.ln1_gamma, &p.ln1_beta, eq.ln1),
+                    LnWhich::Ln2 => (eq.rq_res2in, &p.ln2_gamma, &p.ln2_beta, eq.ln2),
+                };
+                let wide: Vec<i64> = main
+                    .iter()
+                    .zip(&resid)
+                    .map(|(&mv, &rv)| mv as i64 + compute::requant32(rv as i64, site))
+                    .collect();
+                Payload::RowI8(compute::layernorm_row(&wide, gamma, beta, ln))
+            }
+            _ => Payload::Timing(self.mode.params().map(|p| p.cfg.hidden).unwrap_or(768)),
+        };
+        st.emitted += 1;
+        let done = st.emitted == st.rows;
+        let meta = MsgMeta {
+            stream: self.out.stream.unwrap_or(0),
+            row,
+            rows: st.rows,
+            inference,
+        };
+        io.send(self.out.dst, meta, payload);
+        if done {
+            self.inf.remove(&inference);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("layernorm-{:?}", self.which)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation FPGA: source + sink (§8.2)
+// ---------------------------------------------------------------------------
+
+/// The evaluation FPGA's generator: streams input rows at a configurable
+/// packet interval, emulating the previous encoder in the chain.
+pub struct SourceKernel {
+    pub dst: Out,
+    pub m: u32,
+    pub inferences: u32,
+    /// cycles between consecutive row packets (the paper sweeps this: 12 =
+    /// line rate, then the measured I).
+    pub interval: u64,
+    /// extra cycles between inferences.
+    pub gap: u64,
+    pub data: Option<Arc<Vec<Vec<i8>>>>,
+    /// row size for Timing payloads (default 768 = one hidden row)
+    pub row_bytes: usize,
+    sent_inf: u32,
+    sent_row: u32,
+}
+
+impl SourceKernel {
+    pub fn new(dst: Out, m: u32, inferences: u32, interval: u64, data: Option<Arc<Vec<Vec<i8>>>>) -> Self {
+        SourceKernel {
+            dst,
+            m,
+            inferences,
+            interval,
+            gap: 0,
+            data,
+            row_bytes: 768,
+            sent_inf: 0,
+            sent_row: 0,
+        }
+    }
+
+    pub fn with_row_bytes(mut self, bytes: usize) -> Self {
+        self.row_bytes = bytes;
+        self
+    }
+}
+
+impl KernelBehavior for SourceKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+    }
+
+    fn on_wake(&mut self, _tag: u64, io: &mut KernelIo) {
+        if self.sent_inf >= self.inferences {
+            return;
+        }
+        let payload = match &self.data {
+            Some(d) => Payload::RowI8(d[self.sent_row as usize].clone()),
+            None => Payload::Timing(self.row_bytes),
+        };
+        let meta = MsgMeta {
+            stream: self.dst.stream.unwrap_or(0),
+            row: self.sent_row,
+            rows: self.m,
+            inference: self.sent_inf,
+        };
+        io.send(self.dst.dst, meta, payload);
+        self.sent_row += 1;
+        let mut delay = self.interval;
+        if self.sent_row == self.m {
+            self.sent_row = 0;
+            self.sent_inf += 1;
+            delay += self.gap;
+        }
+        if self.sent_inf < self.inferences {
+            io.wake_in(delay, 1);
+        }
+    }
+
+    fn name(&self) -> String {
+        "eval-source".to_string()
+    }
+}
+
+/// Collected sink output, shared with the harness.
+#[derive(Debug, Default)]
+pub struct SinkData {
+    /// inference -> collected rows
+    pub rows: HashMap<u32, BTreeMap<u32, Vec<i8>>>,
+    pub packets: u64,
+    /// inference -> (packets received, time of last arrival) — works in
+    /// Timing mode too (drives the throughput measurements of Fig. 20)
+    pub arrivals: HashMap<u32, (u32, u64)>,
+}
+
+impl SinkData {
+    /// Assemble inference `i` as a dense matrix if complete.
+    pub fn matrix(&self, inference: u32) -> Option<Vec<Vec<i8>>> {
+        let rows = self.rows.get(&inference)?;
+        let m = rows.values().len();
+        let expect = *rows.keys().max()? as usize + 1;
+        if m != expect {
+            return None;
+        }
+        Some(rows.values().cloned().collect())
+    }
+}
+
+/// The evaluation FPGA's receiver: add as a probe to measure X/T/I.
+pub struct SinkKernel {
+    pub data: Arc<Mutex<SinkData>>,
+}
+
+impl SinkKernel {
+    pub fn new() -> (Self, Arc<Mutex<SinkData>>) {
+        let data = Arc::new(Mutex::new(SinkData::default()));
+        (SinkKernel { data: data.clone() }, data)
+    }
+}
+
+impl KernelBehavior for SinkKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        let mut d = self.data.lock().unwrap();
+        d.packets += 1;
+        let a = d.arrivals.entry(pkt.meta.inference).or_insert((0, 0));
+        a.0 += 1;
+        a.1 = io.now;
+        if let Payload::RowI8(v) = pkt.payload {
+            d.rows.entry(pkt.meta.inference).or_default().insert(pkt.meta.row, v);
+        }
+    }
+
+    fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+
+    fn name(&self) -> String {
+        "eval-sink".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        let t = tag_of(7, 123);
+        assert_eq!(untag(t), (7, 123));
+        let t = tag_of(u32::MAX - 1, u32::MAX - 2);
+        assert_eq!(untag(t), (u32::MAX - 1, u32::MAX - 2));
+    }
+
+    #[test]
+    fn pacer_enforces_initiation_interval() {
+        let mut p = EmitPacer::default();
+        // first row pays fill + ii
+        assert_eq!(p.schedule(100, 10, 50), 160);
+        // back-to-back rows emit ii apart (fill amortised)
+        assert_eq!(p.schedule(100, 10, 50), 210);
+        assert_eq!(p.schedule(101, 10, 50), 260);
+        // idle gap: next row pays fill again
+        assert_eq!(p.schedule(900, 10, 50), 960);
+    }
+
+    #[test]
+    fn sink_matrix_assembly() {
+        let (_k, data) = SinkKernel::new();
+        {
+            let mut d = data.lock().unwrap();
+            d.rows.entry(0).or_default().insert(1, vec![2]);
+            assert!(d.matrix(0).is_none()); // row 0 missing
+            d.rows.entry(0).or_default().insert(0, vec![1]);
+        }
+        let m = data.lock().unwrap().matrix(0).unwrap();
+        assert_eq!(m, vec![vec![1], vec![2]]);
+    }
+}

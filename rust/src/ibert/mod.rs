@@ -1,0 +1,23 @@
+//! I-BERT on Galapagos (§7): the test application.
+//!
+//! * [`config`] — geometry + quantisation constants (from quantparams.json;
+//!   rust never re-derives a constant from floats — see quantize.py).
+//! * [`compute`] — bit-exact integer operators mirroring
+//!   `python/compile/iops.py` operation-for-operation.
+//! * [`weights`] — the Model File System loader (artifacts/weights).
+//! * [`encoder`] — whole-matrix reference forward (golden verification and
+//!   the PJRT cross-check).
+//! * [`timing`] — PE/tile cycle models behind Table 1 / Figs 16, 20.
+//! * [`kernels`] — the streaming kernel behaviors of the Fig. 14 graph.
+//! * [`graph`] — construction of the 38-kernel encoder cluster.
+
+pub mod compute;
+pub mod config;
+pub mod encoder;
+pub mod graph;
+pub mod kernels;
+pub mod timing;
+pub mod weights;
+
+pub use config::{EncoderQuant, GeluParams, LayerNormParams, ModelConfig, RequantSite, SoftmaxParams};
+pub use weights::ModelParams;

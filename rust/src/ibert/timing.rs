@@ -1,0 +1,188 @@
+//! PE/Tile cycle models (§7.1) — the timing side of the HLS kernels,
+//! calibrated against the paper's own measurements (DESIGN.md):
+//!   * one 768-wide INT8 MAC array produces a 768x768 linear output row
+//!     every 768 cycles => the measured packet interval I = 767 +- 1;
+//!   * layer-0 compute = M*768 cycles => T(128) ~ 2x layer 0 ~ 210k cycles.
+
+use crate::fpga::resources::{Device, ResourceUsage};
+use crate::sim::fifo::BRAM18_BYTES;
+
+/// PE configuration of the six-FPGA encoder build (the knobs the Layer
+/// Description File exposes, §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// MAC lanes of each QKV/projection linear kernel (768x768).
+    pub linear_macs: u64,
+    /// MAC lanes of the FFN linear kernels (768x3072 / 3072x768).
+    pub ffn_macs: u64,
+    /// PEs per attention dot-product head kernel (§7.1.2 NUM_PE).
+    pub attn_pes: u64,
+    /// PEs per softmax matrix-multiply head kernel (§7.1.3 NUM_PE).
+    pub smm_pes: u64,
+    /// SIMD lanes of the softmax unit.
+    pub sm_simd: u64,
+    /// SIMD lanes of the LayerNorm unit.
+    pub ln_simd: u64,
+    /// pipeline fill of a streaming kernel (HLS dataflow region depth).
+    pub pipe_fill: u64,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        PeConfig {
+            linear_macs: 768,
+            ffn_macs: 3072,
+            attn_pes: 32,
+            // 11 PEs make the softmax-MM row time ~745 cycles at m=128 —
+            // the paper's Fig. 16/20: layer 3 paces like layers 0/4/5,
+            // only layers 1-2 are faster.
+            smm_pes: 11,
+            sm_simd: 8,
+            ln_simd: 8,
+            pipe_fill: 24,
+        }
+    }
+}
+
+impl PeConfig {
+    /// Cycles to produce one output row of a K x N linear.
+    pub fn linear_row_cycles(&self, k: u64, n: u64, macs: u64) -> u64 {
+        (k * n).div_ceil(macs)
+    }
+
+    pub fn qkv_row_cycles(&self, hidden: u64) -> u64 {
+        self.linear_row_cycles(hidden, hidden, self.linear_macs)
+    }
+
+    pub fn ffn1_row_cycles(&self, hidden: u64, ffn: u64) -> u64 {
+        self.linear_row_cycles(hidden, ffn, self.ffn_macs)
+    }
+
+    pub fn ffn2_row_cycles(&self, hidden: u64, ffn: u64) -> u64 {
+        self.linear_row_cycles(ffn, hidden, self.ffn_macs)
+    }
+
+    /// Attention dot-product: one score row against an M-row K matrix with
+    /// the paper's minimum padding NUM_PE * ceil(M / NUM_PE) (§7.1.2),
+    /// d MACs per score, NUM_PE scores in parallel.
+    pub fn attn_row_cycles(&self, m: u64, d: u64) -> u64 {
+        let padded = self.attn_pes * m.div_ceil(self.attn_pes);
+        d * padded / self.attn_pes
+    }
+
+    /// Fused i-Softmax over an M-wide score row.
+    pub fn softmax_row_cycles(&self, m: u64) -> u64 {
+        m.div_ceil(self.sm_simd) + 20
+    }
+
+    /// Softmax matrix-multiply: prob row [M] x V [M, d]; each PE iterates
+    /// the actual M (the no-padding benefit of §7.1.3).
+    pub fn smm_row_cycles(&self, m: u64, d: u64) -> u64 {
+        (m * d).div_ceil(self.smm_pes)
+    }
+
+    /// i-LayerNorm row: two passes over H plus the integer sqrt.
+    pub fn ln_row_cycles(&self, hidden: u64) -> u64 {
+        2 * hidden.div_ceil(self.ln_simd) + 45
+    }
+
+    // ---- resource estimation (Fig. 15's model) ----
+
+    /// DSP cost of a MAC array on a device.
+    pub fn macs_dsp(&self, macs: u64, dev: Device) -> u64 {
+        macs.div_ceil(dev.int8_macs_per_dsp())
+    }
+
+    /// Resource estimate of a linear kernel holding a K x N int8 weight
+    /// matrix in BRAM plus its MAC array and control.
+    pub fn linear_usage(&self, k: u64, n: u64, macs: u64, dev: Device) -> ResourceUsage {
+        let weight_bram = ((k * n) as usize).div_ceil(BRAM18_BYTES) as u64;
+        ResourceUsage {
+            lut: 6_000 + macs * 24,
+            ff: 9_000 + macs * 40,
+            bram18: weight_bram,
+            dsp: self.macs_dsp(macs, dev),
+        }
+    }
+
+    /// Resource estimate of an attention / smm head kernel (buffers one
+    /// [M, d] int8 matrix on-chip).
+    pub fn head_usage(&self, max_m: u64, d: u64, pes: u64, dev: Device) -> ResourceUsage {
+        let buf_bram = ((max_m * d) as usize).div_ceil(BRAM18_BYTES) as u64;
+        ResourceUsage {
+            lut: 3_000 + pes * 60,
+            ff: 4_500 + pes * 90,
+            bram18: buf_bram.max(1),
+            dsp: self.macs_dsp(pes, dev),
+        }
+    }
+
+    /// LayerNorm / softmax style scalar-pipeline kernel.
+    pub fn pipe_usage(&self, simd: u64) -> ResourceUsage {
+        ResourceUsage { lut: 8_000 + simd * 400, ff: 12_000 + simd * 600, bram18: 4, dsp: 8 * simd }
+    }
+
+    /// GMI kernel (switching/buffering only).
+    pub fn gmi_usage(&self) -> ResourceUsage {
+        ResourceUsage { lut: 2_500, ff: 4_000, bram18: 2, dsp: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_anchors() {
+        let pe = PeConfig::default();
+        // I = 767+-1: one row every ~768 cycles from the 768x768 linears
+        assert_eq!(pe.qkv_row_cycles(768), 768);
+        // FFN kernels keep the same initiation interval
+        assert_eq!(pe.ffn1_row_cycles(768, 3072), 768);
+        assert_eq!(pe.ffn2_row_cycles(768, 3072), 768);
+        // layer-0 compute at M=128 is ~98k cycles (DESIGN.md)
+        assert_eq!(128 * pe.qkv_row_cycles(768), 98_304);
+    }
+
+    #[test]
+    fn attention_is_faster_but_smm_paces_like_linears() {
+        // Fig. 16: layers 1-2 have lower latency than 0, 3, 4, 5; layer 3
+        // paces with the linears.
+        let pe = PeConfig::default();
+        let m = 128;
+        assert!(pe.attn_row_cycles(m, 64) + pe.softmax_row_cycles(m) < pe.qkv_row_cycles(768));
+        let smm = pe.smm_row_cycles(m, 64);
+        assert!(smm <= pe.qkv_row_cycles(768) && smm > pe.qkv_row_cycles(768) * 9 / 10, "{smm}");
+    }
+
+    #[test]
+    fn padding_formula_matches_paper() {
+        // NUM_PE * ceil(M / NUM_PE) for M=54 (MRPC average), NUM_PE=32 => 64
+        let pe = PeConfig { attn_pes: 32, ..Default::default() };
+        assert_eq!(pe.attn_row_cycles(54, 64), 64 * 64 / 32);
+    }
+
+    #[test]
+    fn no_padding_scales_with_actual_m() {
+        let pe = PeConfig::default();
+        // smm iterates actual M: 38-token sequences cost ~38/128 of max
+        let full = pe.smm_row_cycles(128, 64);
+        let short = pe.smm_row_cycles(38, 64);
+        assert!(short * 3 < full);
+    }
+
+    #[test]
+    fn ln_keeps_line_rate() {
+        let pe = PeConfig::default();
+        assert!(pe.ln_row_cycles(768) < pe.qkv_row_cycles(768));
+    }
+
+    #[test]
+    fn dsp_estimates() {
+        let pe = PeConfig::default();
+        assert_eq!(pe.macs_dsp(768, Device::Xczu19eg), 384);
+        assert_eq!(pe.macs_dsp(3072, Device::Xczu19eg), 1536);
+        let u = pe.linear_usage(768, 768, 768, Device::Xczu19eg);
+        assert_eq!(u.bram18, (768u64 * 768).div_ceil(2304));
+    }
+}

@@ -1,0 +1,140 @@
+//! Model File System loader (§6.1): quantised weights + integer constants
+//! exported by `python/compile/weights.py` into artifacts/.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::config::{parse_quantparams, EncoderQuant, ModelConfig};
+use crate::util::tensorfile::{read_tensor, TensorData};
+
+/// All integer parameters of one encoder, loaded from the model FS.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub cfg: ModelConfig,
+    pub eq: EncoderQuant,
+    /// [H, H] row-major int8
+    pub wq: TensorData<i8>,
+    pub wk: TensorData<i8>,
+    pub wv: TensorData<i8>,
+    pub wo: TensorData<i8>,
+    /// [H, F]
+    pub w1: TensorData<i8>,
+    /// [F, H]
+    pub w2: TensorData<i8>,
+    pub bq: Vec<i32>,
+    pub bk: Vec<i32>,
+    pub bv: Vec<i32>,
+    pub bo: Vec<i32>,
+    pub b1: Vec<i32>,
+    pub b2: Vec<i32>,
+    pub ln1_gamma: Vec<i64>,
+    pub ln1_beta: Vec<i64>,
+    pub ln2_gamma: Vec<i64>,
+    pub ln2_beta: Vec<i64>,
+}
+
+fn load_i8(dir: &Path, name: &str, dims: &[usize]) -> Result<TensorData<i8>> {
+    let t = read_tensor(dir.join(format!("weights/{name}.bin")))?;
+    let td = t.as_i8().with_context(|| name.to_string())?;
+    if td.dims != dims {
+        bail!("{name}: expected dims {dims:?}, got {:?}", td.dims);
+    }
+    Ok(td.clone())
+}
+
+fn load_i32(dir: &Path, name: &str, len: usize) -> Result<Vec<i32>> {
+    let t = read_tensor(dir.join(format!("weights/{name}.bin")))?;
+    let td = t.as_i32().with_context(|| name.to_string())?;
+    if td.len() != len {
+        bail!("{name}: expected {len} elements, got {}", td.len());
+    }
+    Ok(td.data.clone())
+}
+
+fn load_i64(dir: &Path, name: &str, len: usize) -> Result<Vec<i64>> {
+    let t = read_tensor(dir.join(format!("weights/{name}.bin")))?;
+    let td = t.as_i64().with_context(|| name.to_string())?;
+    if td.len() != len {
+        bail!("{name}: expected {len} elements, got {}", td.len());
+    }
+    Ok(td.data.clone())
+}
+
+impl ModelParams {
+    /// Load from the artifacts directory (quantparams.json + weights/).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<ModelParams> {
+        let dir = artifacts_dir.as_ref();
+        let qp = std::fs::read_to_string(dir.join("quantparams.json"))
+            .with_context(|| format!("read {dir:?}/quantparams.json — run `make artifacts`"))?;
+        let (cfg, eq) = parse_quantparams(&qp)?;
+        let (h, f) = (cfg.hidden, cfg.ffn);
+        Ok(ModelParams {
+            cfg,
+            eq,
+            wq: load_i8(dir, "wq", &[h, h])?,
+            wk: load_i8(dir, "wk", &[h, h])?,
+            wv: load_i8(dir, "wv", &[h, h])?,
+            wo: load_i8(dir, "wo", &[h, h])?,
+            w1: load_i8(dir, "w1", &[h, f])?,
+            w2: load_i8(dir, "w2", &[f, h])?,
+            bq: load_i32(dir, "bq", h)?,
+            bk: load_i32(dir, "bk", h)?,
+            bv: load_i32(dir, "bv", h)?,
+            bo: load_i32(dir, "bo", h)?,
+            b1: load_i32(dir, "b1", f)?,
+            b2: load_i32(dir, "b2", h)?,
+            ln1_gamma: load_i64(dir, "ln1_gamma", h)?,
+            ln1_beta: load_i64(dir, "ln1_beta", h)?,
+            ln2_gamma: load_i64(dir, "ln2_gamma", h)?,
+            ln2_beta: load_i64(dir, "ln2_beta", h)?,
+        })
+    }
+
+    /// Default artifacts directory: $CARGO_MANIFEST_DIR/artifacts or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        let mano = std::env::var("CARGO_MANIFEST_DIR").map(PathBuf::from);
+        match mano {
+            Ok(p) if p.join("artifacts").exists() => p.join("artifacts"),
+            _ => PathBuf::from("artifacts"),
+        }
+    }
+
+    /// On-chip memory footprint of the weights in bytes (everything stays
+    /// in BRAM, the Brainwave-style design the paper follows).
+    pub fn weight_bytes(&self) -> usize {
+        self.wq.len()
+            + self.wk.len()
+            + self.wv.len()
+            + self.wo.len()
+            + self.w1.len()
+            + self.w2.len()
+            + 4 * (self.bq.len() + self.bk.len() + self.bv.len() + self.bo.len()
+                + self.b1.len() + self.b2.len())
+            + 8 * (self.ln1_gamma.len() + self.ln1_beta.len() + self.ln2_gamma.len()
+                + self.ln2_beta.len())
+    }
+}
+
+/// Read a golden tensor from artifacts/goldens.
+pub fn load_golden(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<crate::util::tensorfile::Tensor> {
+    read_tensor(artifacts_dir.as_ref().join(format!("goldens/{name}.bin")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full loading is covered by integration tests (needs artifacts/).
+    #[test]
+    fn default_dir_is_artifacts() {
+        let d = ModelParams::default_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = ModelParams::load("/nonexistent-path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

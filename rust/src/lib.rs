@@ -1,0 +1,68 @@
+//! galapagos-llm — reproduction of *"The Feasibility of Implementing
+//! Large-Scale Transformers on Multi-FPGA Platforms"* (Gao, Vega, Chow 2024).
+//!
+//! The crate is organised the way the paper is:
+//!
+//! * [`sim`] / [`fpga`] — the hardware substitute: a discrete-event
+//!   simulator of streaming FPGA kernels, AXIS FIFOs, routers and a 100G
+//!   switch fabric, plus device resource catalogs (XCZU19EG, VCK190).
+//! * [`galapagos`] — the base platform (§2.1) and the clusters-of-clusters
+//!   scaling scheme (§4): kernels, two-level routing tables, gateways.
+//! * [`gmi`] — the Galapagos Messaging Interface (§5): Broadcast / Reduce /
+//!   Scatter / Gather kernels, communicator groups, the one-byte
+//!   inter-cluster header, and gateway virtual kernels.
+//! * [`cluster_builder`] — the automation front-end (§6): JSON cluster /
+//!   layer descriptions → kernel graph with GMI insertion, ID assignment
+//!   and per-FPGA resource estimates.
+//! * [`ibert`] — the test application (§7): bit-exact integer I-BERT
+//!   compute (mirrors `python/compile/iops.py`), the 38-kernel encoder
+//!   graph of Fig. 14, and the PE/tile timing models behind Table 1.
+//! * [`runtime`] — PJRT: loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them on the request path.
+//! * [`versal`] — the §9 analytical AIE model and latency estimator.
+//! * [`baselines`] — published GPU/FPGA comparison points (§8 tables).
+//! * [`eval`] — Eq. 1 latency model, GLUE-like workloads, and the
+//!   generators for every table and figure in the paper's evaluation.
+//! * [`util`] — substrates the offline environment forced us to build:
+//!   JSON, RNG, CLI, tables, bench harness, property testing, tensor I/O.
+
+pub mod baselines;
+pub mod cluster_builder;
+pub mod eval;
+pub mod fpga;
+pub mod galapagos;
+pub mod gmi;
+pub mod ibert;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod versal;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Fabric clock of the simulated UltraScale+ platform, derived from the
+/// paper's own numbers (DESIGN.md "Timing model calibration"): 200 MHz.
+pub const FABRIC_CLOCK_HZ: u64 = 200_000_000;
+
+/// Convert fabric cycles to microseconds.
+pub fn cycles_to_us(cycles: u64) -> f64 {
+    cycles as f64 * 1e6 / FABRIC_CLOCK_HZ as f64
+}
+
+/// Convert microseconds to fabric cycles (rounded).
+pub fn us_to_cycles(us: f64) -> u64 {
+    (us * FABRIC_CLOCK_HZ as f64 / 1e6).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversions_roundtrip() {
+        assert_eq!(cycles_to_us(200), 1.0);
+        assert_eq!(us_to_cycles(1.0), 200);
+        assert_eq!(us_to_cycles(cycles_to_us(209_789)), 209_789);
+    }
+}

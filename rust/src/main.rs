@@ -1,0 +1,230 @@
+//! galapagos-llm — CLI launcher for the multi-FPGA transformer platform.
+//!
+//! Subcommands:
+//!   tables    regenerate the paper's tables/figures (all or --only <id>)
+//!   simulate  run the encoder-chain simulator with custom parameters
+//!   build     run the Cluster Builder on a description file (emits Tcl +
+//!             build manifest, validates resource fit)
+//!   versal    print the §9 Versal estimate
+//!   serve     serve requests through the PJRT encoder artifact
+//!   info      platform/calibration summary
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use galapagos_llm::cluster_builder::description::BuildDescription;
+use galapagos_llm::cluster_builder::{ip_generator, layer_builder};
+use galapagos_llm::eval::tables;
+use galapagos_llm::eval::testbed::build_testbed;
+use galapagos_llm::eval::workload::GlueWorkload;
+use galapagos_llm::gmi::Out;
+use galapagos_llm::ibert::encoder::rows_i8;
+use galapagos_llm::ibert::graph::{build_encoder, EncoderGraphParams};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
+use galapagos_llm::sim::packet::GlobalKernelId;
+use galapagos_llm::util::cli::Args;
+use galapagos_llm::{cycles_to_us, FABRIC_CLOCK_HZ};
+
+const USAGE: &str = "\
+galapagos-llm — multi-FPGA transformer feasibility platform (Gao/Vega/Chow 2024 reproduction)
+
+USAGE: galapagos-llm <command> [options]
+
+COMMANDS:
+  tables    [--only table1|table2|table3|table4|table5|fig15|fig16|fig20|versal|scaling]
+  simulate  [--m 128] [--encoders 1] [--inferences 1] [--functional] [--interval 12]
+  build     [--config configs/ibert_poc.json] [--out target/cluster_build]
+  versal
+  serve     [--requests 16] [--encoders 2]
+  info
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("tables") => cmd_tables(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("build") => cmd_build(&args),
+        Some("versal") => cmd_versal(),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let only = args.str_opt("only");
+    let all: Vec<(&str, fn() -> Result<galapagos_llm::util::table::Table>)> = vec![
+        ("table1", tables::table1),
+        ("table2", tables::table2),
+        ("table3", tables::table3),
+        ("table4", tables::table4),
+        ("table5", tables::table5),
+        ("fig15", tables::fig15),
+        ("fig16", || tables::fig16(&tables::SEQ_LENS)),
+        ("fig20", || tables::fig20(&tables::SEQ_LENS)),
+        ("versal", tables::versal_table),
+        ("scaling", tables::scaling_table),
+    ];
+    let mut hit = false;
+    for (name, f) in all {
+        if only.is_none_or(|o| o == name) {
+            println!("{}", f()?.render());
+            hit = true;
+        }
+    }
+    if !hit {
+        bail!("unknown table id {:?}", only.unwrap());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let m = args.usize_or("m", 128)?;
+    let encoders = args.usize_or("encoders", 1)?;
+    let inferences = args.u64_or("inferences", 1)? as u32;
+    let interval = args.u64_or("interval", 12)?;
+    let functional = args.bool_or("functional", false)?;
+
+    let dir = ModelParams::default_dir();
+    let (mode, input) = if functional {
+        let p = Arc::new(ModelParams::load(&dir)?);
+        let x = rows_i8(load_golden(&dir, "input_m128")?.as_i8()?)[..m].to_vec();
+        (Mode::Functional(p), Some(Arc::new(x)))
+    } else {
+        (Mode::Timing, None)
+    };
+
+    let mut cfg = galapagos_llm::eval::testbed::TestbedConfig::proof_of_concept(m, mode);
+    cfg.encoders = encoders;
+    cfg.inferences = inferences;
+    cfg.interval = interval;
+    cfg.input = input;
+    let mut tb = build_testbed(&cfg)?;
+    println!(
+        "platform: {} kernels / {} FPGAs / {} switches; mode={}",
+        tb.sim.kernel_count(),
+        tb.spec.switch_of.len(),
+        tb.spec.switch_of.values().collect::<std::collections::HashSet<_>>().len(),
+        if functional { "functional" } else { "timing" },
+    );
+    let t0 = std::time::Instant::now();
+    tb.sim.start();
+    tb.sim.run()?;
+    let wall = t0.elapsed();
+    let (x, t, i) = tb.sim.trace.xti(tb.sink_id).unwrap_or((0, 0, 0));
+    println!(
+        "X = {x} cycles ({:.2} us)   T = {t} cycles ({:.2} us)   I = {i} cycles",
+        cycles_to_us(x),
+        cycles_to_us(t)
+    );
+    println!(
+        "events: {}   packets: {}   flits: {}   wall: {:.1} ms ({:.2} M events/s)",
+        tb.sim.trace.events_processed,
+        tb.sim.fabric.stats.packets,
+        tb.sim.fabric.stats.flits,
+        wall.as_secs_f64() * 1e3,
+        tb.sim.trace.events_processed as f64 / wall.as_secs_f64() / 1e6
+    );
+    if inferences > 1 {
+        let sink = tb.sink.lock().unwrap();
+        let mut done: Vec<u64> =
+            (0..inferences).filter_map(|i| sink.arrivals.get(&i).map(|&(_, t)| t)).collect();
+        done.sort_unstable();
+        if done.len() >= 2 {
+            let ii = (done[done.len() - 1] - done[0]) / (done.len() as u64 - 1);
+            println!("pipelined II = {ii} cycles  ->  {:.1} inferences/s",
+                     FABRIC_CLOCK_HZ as f64 / ii as f64);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let cfg_path = args.str_or("config", "configs/ibert_poc.json");
+    let out = args.str_or("out", "target/cluster_build");
+    let d = BuildDescription::load(&cfg_path)?;
+    println!("cluster builder: {} encoder cluster(s), device {:?}", d.encoders, d.device);
+    for e in 0..d.encoders {
+        let built = build_encoder(&EncoderGraphParams {
+            cluster_id: e as u8,
+            fpga_base: 6 * e,
+            pe: d.pe,
+            mode: Mode::Timing,
+            out_dst: Out::to(GlobalKernelId::new(200, 2)),
+            max_seq: d.max_seq,
+            hidden: 768,
+            ffn: 3072,
+        });
+        let dir = format!("{out}/cluster_{e}");
+        let n = ip_generator::generate(&built.cluster, &d.pe, d.device, d.max_seq, 768, 3072, &dir)?;
+        println!("  cluster {e}: {n} kernels -> {dir}/");
+        for r in layer_builder::fpga_reports(&built.cluster, &d.pe, d.device, d.max_seq, 768, 3072)
+        {
+            let (l, f, b, dsp) = r.utilisation();
+            println!(
+                "    FPGA {:>2}: LUT {:>5.1}%  FF {:>5.1}%  BRAM {:>5.1}%  DSP {:>5.1}%  {}",
+                r.fpga,
+                l * 100.0,
+                f * 100.0,
+                b * 100.0,
+                dsp * 100.0,
+                if r.fits() { "OK" } else { "OVER BUDGET" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_versal() -> Result<()> {
+    println!("{}", tables::versal_table()?.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 16)?;
+    let encoders = args.usize_or("encoders", 2)?;
+    let dir = ModelParams::default_dir();
+    let rt = PjrtRuntime::cpu()?;
+    let engine = EncoderEngine::load(&rt, &dir)?;
+    let base = rows_i8(load_golden(&dir, "input_m128")?.as_i8()?);
+    let mut wl = GlueWorkload::glue(3);
+    let mut lat = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let m = wl.sample();
+        let t = std::time::Instant::now();
+        let out = engine.infer_model(&base[..m], encoders)?;
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(out.len() == m);
+        println!("request {i:>3}: len {m:>3} -> {:.1} ms", lat.last().unwrap());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "p50 {:.1} ms  p95 {:.1} ms  throughput {:.2} req/s",
+        lat[lat.len() / 2],
+        lat[(lat.len() * 95) / 100],
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("fabric clock: {} MHz (derived from the paper's Table 1/2)", FABRIC_CLOCK_HZ / 1_000_000);
+    println!("packet: one 768-byte row = 12 x 64-byte AXIS flits");
+    println!("addressing: 256 clusters x 256 kernels (gateway-mediated inter-cluster)");
+    let dir = ModelParams::default_dir();
+    match ModelParams::load(&dir) {
+        Ok(p) => println!(
+            "model FS: {:?} (hidden={}, heads={}, ffn={}, {} weight bytes)",
+            dir, p.cfg.hidden, p.cfg.heads, p.cfg.ffn, p.weight_bytes()
+        ),
+        Err(_) => println!("model FS: not built — run `make artifacts`"),
+    }
+    Ok(())
+}

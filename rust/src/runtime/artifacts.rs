@@ -1,0 +1,132 @@
+//! Artifact manifest + the encoder serving engine.
+//!
+//! The AOT calling convention (python/compile/aot.py lower_encoder):
+//!   param 0: x int8[m, H], param 1: mask int32[m],
+//!   params 2..: the 16 weight arrays in EncoderParams.weight_arrays order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::pjrt::{lit_from_tensor, lit_i32_1d, lit_i8_2d, rows_from_lit_i8, LoadedModule, PjrtRuntime};
+use crate::ibert::ModelParams;
+use crate::util::json::Json;
+use crate::util::tensorfile::read_tensor;
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {dir:?}/manifest.json — run `make artifacts`"))?;
+        Ok(Manifest { dir, json: Json::parse(&text).context("manifest.json")? })
+    }
+
+    pub fn artifact_file(&self, name: &str) -> Result<PathBuf> {
+        match self.json.path(&format!("artifacts.{name}.file")).and_then(Json::as_str) {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("artifact {name} not in manifest"),
+        }
+    }
+
+    /// Ordered weight parameter names of an artifact (skipping x and mask).
+    pub fn weight_param_names(&self, name: &str) -> Result<Vec<String>> {
+        let params = self
+            .json
+            .path(&format!("artifacts.{name}.params"))
+            .and_then(|p| p.as_arr())
+            .with_context(|| format!("artifact {name} params"))?;
+        Ok(params
+            .iter()
+            .filter_map(|p| p.as_arr().and_then(|t| t.first()).and_then(Json::as_str))
+            .filter(|n| *n != "x" && *n != "mask" && *n != "w" && *n != "b")
+            .map(|s| s.to_string())
+            .collect())
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.json.get("max_seq").and_then(Json::as_i64).unwrap_or(128) as usize
+    }
+}
+
+/// The serving engine: a compiled encoder executable plus resident weight
+/// literals — the request-path object (no Python anywhere).
+pub struct EncoderEngine {
+    module: LoadedModule,
+    weights: Vec<xla::Literal>,
+    pub m: usize,
+    pub hidden: usize,
+    pub num_encoders: usize,
+}
+
+impl EncoderEngine {
+    /// Load manifest + HLO + weights and compile (one-time cost).
+    pub fn load(rt: &PjrtRuntime, dir: impl AsRef<Path>) -> Result<EncoderEngine> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let params = ModelParams::load(dir)?;
+        let module = rt.load_hlo_text(manifest.artifact_file("encoder_m128")?)?;
+
+        let mut weights = Vec::new();
+        for name in manifest.weight_param_names("encoder_m128")? {
+            let wpath = match manifest.json.path(&format!("weights.{name}.file")).and_then(Json::as_str)
+            {
+                Some(f) => dir.join(f),
+                None => bail!("weight {name} not in manifest"),
+            };
+            weights.push(lit_from_tensor(&read_tensor(wpath)?)?);
+        }
+        anyhow::ensure!(weights.len() == 16, "expected 16 weight params, got {}", weights.len());
+
+        Ok(EncoderEngine {
+            module,
+            weights,
+            m: manifest.max_seq(),
+            hidden: params.cfg.hidden,
+            num_encoders: params.cfg.num_encoders,
+        })
+    }
+
+    /// Run one encoder over `x` (actual length rows). Pads to the
+    /// artifact's fixed shape, masks the padded key columns, slices back —
+    /// bit-identical to the no-padding hardware path (tested).
+    pub fn infer(&self, x: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        let m = x.len();
+        anyhow::ensure!(m >= 1 && m <= self.m, "sequence length {m} out of range 1..={}", self.m);
+        let mut padded = x.to_vec();
+        padded.resize(self.m, vec![0i8; self.hidden]);
+        let mut mask = vec![0i32; self.m];
+        for v in mask.iter_mut().take(m) {
+            *v = 1;
+        }
+
+        // weights stay resident; only x and mask are fresh per request
+        let x_lit = lit_i8_2d(&padded)?;
+        let mask_lit = lit_i32_1d(&mask)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 + self.weights.len());
+        inputs.push(&x_lit);
+        inputs.push(&mask_lit);
+        inputs.extend(self.weights.iter());
+        let out = self.module.execute(&inputs)?;
+        anyhow::ensure!(!out.is_empty(), "encoder artifact returned nothing");
+        let full = rows_from_lit_i8(&out[0], self.m, self.hidden)?;
+        Ok(full[..m].to_vec())
+    }
+
+    /// Run the full model: `n` chained encoders (weight-shared, like the
+    /// paper's estimate).
+    pub fn infer_model(&self, x: &[Vec<i8>], n: usize) -> Result<Vec<Vec<i8>>> {
+        let mut cur = x.to_vec();
+        for _ in 0..n {
+            cur = self.infer(&cur)?;
+        }
+        Ok(cur)
+    }
+}
+

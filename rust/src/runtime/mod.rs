@@ -1,0 +1,8 @@
+//! PJRT runtime: load the AOT HLO artifacts (python/compile/aot.py) and
+//! execute them on the request path. Python never runs at serve time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{EncoderEngine, Manifest};
+pub use pjrt::{lit_i32_1d, lit_i8_2d, LoadedModule, PjrtRuntime};

@@ -1,0 +1,136 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serialises HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// The PJRT client (one per process).
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+/// One compiled executable.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        Ok(LoadedModule { exe })
+    }
+}
+
+impl LoadedModule {
+    /// Execute with the given inputs; returns the untupled outputs.
+    /// (aot.py lowers with return_tuple=True, so there is always a tuple.)
+    /// Accepts owned literals or references (resident weights stay put).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Build an int8 2-D literal [m, n] from row vectors.
+pub fn lit_i8_2d(rows: &[Vec<i8>]) -> Result<xla::Literal> {
+    let m = rows.len();
+    let n = rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut bytes = Vec::with_capacity(m * n);
+    for r in rows {
+        anyhow::ensure!(r.len() == n, "ragged rows");
+        bytes.extend(r.iter().map(|&v| v as u8));
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &[m, n],
+        &bytes,
+    )?)
+}
+
+/// Build an int32 1-D literal.
+pub fn lit_i32_1d(v: &[i32]) -> Result<xla::Literal> {
+    let mut bytes = Vec::with_capacity(4 * v.len());
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[v.len()],
+        &bytes,
+    )?)
+}
+
+/// Build an int64 1-D literal.
+pub fn lit_i64_1d(v: &[i64]) -> Result<xla::Literal> {
+    let mut bytes = Vec::with_capacity(8 * v.len());
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S64,
+        &[v.len()],
+        &bytes,
+    )?)
+}
+
+/// Build a GTF tensor literal (weights from the model file system).
+pub fn lit_from_tensor(t: &crate::util::tensorfile::Tensor) -> Result<xla::Literal> {
+    use crate::util::tensorfile::Tensor;
+    let dims = t.dims().to_vec();
+    Ok(match t {
+        Tensor::I8(td) => {
+            let bytes: Vec<u8> = td.data.iter().map(|&v| v as u8).collect();
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, &dims, &bytes)?
+        }
+        Tensor::I32(td) => {
+            let mut bytes = Vec::with_capacity(4 * td.data.len());
+            for x in &td.data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, &bytes)?
+        }
+        Tensor::I64(td) => {
+            let mut bytes = Vec::with_capacity(8 * td.data.len());
+            for x in &td.data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S64, &dims, &bytes)?
+        }
+        Tensor::F32(td) => {
+            let mut bytes = Vec::with_capacity(4 * td.data.len());
+            for x in &td.data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, &bytes)?
+        }
+    })
+}
+
+/// Extract an int8 matrix [m, n] from a literal.
+pub fn rows_from_lit_i8(lit: &xla::Literal, m: usize, n: usize) -> Result<Vec<Vec<i8>>> {
+    let flat: Vec<i8> = lit.to_vec()?;
+    anyhow::ensure!(flat.len() == m * n, "literal size {} != {}x{}", flat.len(), m, n);
+    Ok(flat.chunks(n).map(|c| c.to_vec()).collect())
+}

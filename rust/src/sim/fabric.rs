@@ -1,0 +1,280 @@
+//! The physical fabric model: FPGAs on 100G switches, link serialization,
+//! and the two-table routing semantics of the enhanced Galapagos (§4).
+//!
+//! Hops are computed analytically (no per-hop events): each shared link
+//! keeps a `next_free` cycle; a packet occupies its links for `flits()`
+//! cycles in sequence, which preserves serialization contention while the
+//! event count stays one-per-packet.
+
+
+use anyhow::{bail, Result};
+
+use crate::util::fxhash::FxHashMap;
+
+use super::packet::{GlobalKernelId, Packet};
+use super::params::{INTER_SWITCH_LAT, NIC_LAT, OUT_SWITCH_LAT, ROUTER_LAT, SWITCH_LAT};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FpgaId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SwitchId(pub usize);
+
+/// One shared serializing resource (kernel egress port, NIC, ...).
+#[derive(Debug, Clone, Copy, Default)]
+struct LinkState {
+    next_free: u64,
+}
+
+impl LinkState {
+    /// Occupy the link for `dur` cycles starting no earlier than `t`;
+    /// returns the cycle at which the last flit has left.
+    fn occupy(&mut self, t: u64, dur: u64) -> u64 {
+        let start = t.max(self.next_free);
+        self.next_free = start + dur;
+        self.next_free
+    }
+}
+
+/// Statistics the fabric accumulates.
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    pub packets: u64,
+    pub flits: u64,
+    pub intra_fpga_packets: u64,
+    pub inter_fpga_packets: u64,
+    pub inter_switch_packets: u64,
+    pub dropped: u64,
+}
+
+/// Placement and topology of the platform.
+#[derive(Debug, Default)]
+pub struct Fabric {
+    /// kernel -> FPGA placement.
+    placement: FxHashMap<GlobalKernelId, FpgaId>,
+    /// FPGA -> switch attachment.
+    attachment: FxHashMap<FpgaId, SwitchId>,
+    /// serialization state per kernel egress port.
+    kernel_egress: FxHashMap<GlobalKernelId, LinkState>,
+    /// serialization state per FPGA NIC (egress).
+    nic_egress: FxHashMap<FpgaId, LinkState>,
+    /// optional packet-loss probability on inter-FPGA hops (UDP is
+    /// unreliable; off by default like the paper's testbed experience).
+    pub drop_probability: f64,
+    drop_rng: crate::util::rng::Rng,
+    pub stats: FabricStats,
+}
+
+impl Fabric {
+    pub fn new() -> Self {
+        Fabric { drop_rng: crate::util::rng::Rng::new(0xD1CE), ..Default::default() }
+    }
+
+    pub fn place(&mut self, k: GlobalKernelId, f: FpgaId) {
+        self.placement.insert(k, f);
+    }
+
+    pub fn attach(&mut self, f: FpgaId, s: SwitchId) {
+        self.attachment.insert(f, s);
+    }
+
+    pub fn fpga_of(&self, k: GlobalKernelId) -> Option<FpgaId> {
+        self.placement.get(&k).copied()
+    }
+
+    pub fn switch_of(&self, f: FpgaId) -> Option<SwitchId> {
+        self.attachment.get(&f).copied()
+    }
+
+    pub fn fpgas(&self) -> Vec<FpgaId> {
+        let mut v: Vec<FpgaId> = self.attachment.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn kernels_on(&self, f: FpgaId) -> Vec<GlobalKernelId> {
+        let mut v: Vec<GlobalKernelId> =
+            self.placement.iter().filter(|(_, &pf)| pf == f).map(|(k, _)| *k).collect();
+        v.sort();
+        v
+    }
+
+    /// Compute the delivery time of `pkt` sent at cycle `t`, updating link
+    /// serialization state. Returns None if the (lossy) network dropped it.
+    ///
+    /// The router semantics of §4 are enforced here: a packet whose
+    /// destination is in another cluster MUST be addressed to that
+    /// cluster's gateway kernel (kernel 0); anything else is a routing
+    /// error — direct inter-cluster kernel addressing is forbidden.
+    pub fn deliver(&mut self, t: u64, pkt: &Packet) -> Result<Option<u64>> {
+        let src_f = match self.fpga_of(pkt.src) {
+            Some(f) => f,
+            None => bail!("source kernel {} is not placed on any FPGA", pkt.src),
+        };
+        let dst_f = match self.fpga_of(pkt.dst) {
+            Some(f) => f,
+            None => bail!("destination kernel {} is not placed on any FPGA", pkt.dst),
+        };
+        if pkt.inter_cluster {
+            if !pkt.dst.is_gateway() {
+                bail!(
+                    "router violation: inter-cluster packet {} -> {} does not target a gateway",
+                    pkt.src,
+                    pkt.dst
+                );
+            }
+            if pkt.gmi_dst.is_none() {
+                bail!(
+                    "protocol violation: inter-cluster packet {} -> {} has no GMI header",
+                    pkt.src,
+                    pkt.dst
+                );
+            }
+        }
+
+        let flits = pkt.flits();
+        self.stats.packets += 1;
+        self.stats.flits += flits;
+
+        // kernel output switch + egress port serialization
+        let t0 = t + OUT_SWITCH_LAT;
+        let egress_done = self.kernel_egress.entry(pkt.src).or_default().occupy(t0, flits);
+
+        if src_f == dst_f {
+            self.stats.intra_fpga_packets += 1;
+            // stays inside the FPGA: router hop only
+            return Ok(Some(egress_done + ROUTER_LAT));
+        }
+
+        self.stats.inter_fpga_packets += 1;
+        // router -> network bridge -> NIC: serialize on the FPGA's NIC
+        let nic_done =
+            self.nic_egress.entry(src_f).or_default().occupy(egress_done + ROUTER_LAT, flits);
+
+        if self.drop_probability > 0.0 && self.drop_rng.bool_with_p(self.drop_probability) {
+            self.stats.dropped += 1;
+            return Ok(None);
+        }
+
+        let s_src = self
+            .switch_of(src_f)
+            .ok_or_else(|| anyhow::anyhow!("FPGA {src_f:?} not attached to a switch"))?;
+        let s_dst = self
+            .switch_of(dst_f)
+            .ok_or_else(|| anyhow::anyhow!("FPGA {dst_f:?} not attached to a switch"))?;
+
+        let mut lat = NIC_LAT + SWITCH_LAT + NIC_LAT;
+        if s_src != s_dst {
+            // switches are connected serially (Fig. 17): hop count is the
+            // index distance in the chain
+            let hops = s_src.0.abs_diff(s_dst.0) as u64;
+            lat += hops * INTER_SWITCH_LAT;
+            self.stats.inter_switch_packets += 1;
+        }
+        // ingress side: router hop into the destination kernel
+        Ok(Some(nic_done + lat + ROUTER_LAT))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::packet::{MsgMeta, Payload};
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    fn fabric_2fpga() -> Fabric {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(1));
+        f.place(k(0, 3), FpgaId(0));
+        f.place(k(1, 0), FpgaId(1));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(0));
+        f
+    }
+
+    #[test]
+    fn intra_fpga_latency() {
+        let mut f = fabric_2fpga();
+        let p = Packet::new(k(0, 1), k(0, 3), MsgMeta::default(), Payload::Timing(768));
+        let arr = f.deliver(0, &p).unwrap().unwrap();
+        assert_eq!(arr, OUT_SWITCH_LAT + 12 + ROUTER_LAT);
+        assert_eq!(f.stats.intra_fpga_packets, 1);
+    }
+
+    #[test]
+    fn inter_fpga_latency_includes_switch() {
+        let mut f = fabric_2fpga();
+        let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(768));
+        let arr = f.deliver(0, &p).unwrap().unwrap();
+        let expect = OUT_SWITCH_LAT + 12 + ROUTER_LAT + 12 + NIC_LAT + SWITCH_LAT + NIC_LAT + ROUTER_LAT;
+        assert_eq!(arr, expect);
+    }
+
+    #[test]
+    fn egress_serialization_backpressure() {
+        let mut f = fabric_2fpga();
+        let p = Packet::new(k(0, 1), k(0, 3), MsgMeta::default(), Payload::Timing(768));
+        let a1 = f.deliver(0, &p).unwrap().unwrap();
+        let a2 = f.deliver(0, &p).unwrap().unwrap();
+        // second packet waits for the first to finish serializing
+        assert_eq!(a2, a1 + 12);
+    }
+
+    #[test]
+    fn inter_cluster_requires_gateway_and_header() {
+        let mut f = fabric_2fpga();
+        // direct inter-cluster to non-gateway: forbidden
+        let mut bad = Packet::new(k(0, 1), k(1, 0), MsgMeta::default(), Payload::Timing(8));
+        bad.dst = k(1, 7); // tamper: non-gateway
+        bad.inter_cluster = true;
+        bad.gmi_dst = Some(7);
+        f.place(k(1, 7), FpgaId(1));
+        assert!(f.deliver(0, &bad).is_err());
+        // gateway without GMI header: protocol violation
+        let nohdr = Packet::new(k(0, 1), k(1, 0), MsgMeta::default(), Payload::Timing(8));
+        assert!(f.deliver(0, &nohdr).is_err());
+        // proper: gateway + header
+        let mut good = Packet::new(k(0, 1), k(1, 0), MsgMeta::default(), Payload::Timing(8));
+        good.gmi_dst = Some(7);
+        assert!(f.deliver(0, &good).unwrap().is_some());
+    }
+
+    #[test]
+    fn serial_switch_chain_adds_d_per_hop() {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(1));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(3));
+        let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        let arr = f.deliver(0, &p).unwrap().unwrap();
+        let base = OUT_SWITCH_LAT + 1 + ROUTER_LAT + 1 + NIC_LAT + SWITCH_LAT + NIC_LAT + ROUTER_LAT;
+        assert_eq!(arr, base + 3 * INTER_SWITCH_LAT);
+    }
+
+    #[test]
+    fn lossy_mode_drops_some() {
+        let mut f = fabric_2fpga();
+        f.drop_probability = 0.5;
+        let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        let mut dropped = 0;
+        for _ in 0..200 {
+            if f.deliver(0, &p).unwrap().is_none() {
+                dropped += 1;
+            }
+        }
+        assert!(dropped > 50 && dropped < 150, "dropped={dropped}");
+        assert_eq!(f.stats.dropped, dropped);
+    }
+
+    #[test]
+    fn unplaced_kernel_errors() {
+        let mut f = fabric_2fpga();
+        let p = Packet::new(k(0, 9), k(0, 1), MsgMeta::default(), Payload::Timing(8));
+        assert!(f.deliver(0, &p).is_err());
+    }
+}

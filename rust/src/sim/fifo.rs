@@ -1,0 +1,70 @@
+//! AXIS FIFO accounting (§8.2.1): every kernel front/back FIFO must be
+//! sized to hold at least one full matrix to avoid overflow; this is what
+//! makes BRAM the limiting resource on the paper's FPGAs.
+
+/// Occupancy tracker for one kernel-input FIFO.
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    pub capacity_bytes: usize,
+    pub occupancy: usize,
+    pub high_water: usize,
+    pub overflows: u64,
+}
+
+/// Size of one BRAM18 in bytes (18 Kbit).
+pub const BRAM18_BYTES: usize = 18 * 1024 / 8;
+
+impl Fifo {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Fifo { capacity_bytes, occupancy: 0, high_water: 0, overflows: 0 }
+    }
+
+    /// FIFO sized to hold `rows` rows of `row_bytes` (the paper's "at
+    /// least one matrix" rule).
+    pub fn for_matrix(rows: usize, row_bytes: usize) -> Self {
+        Self::new(rows * row_bytes)
+    }
+
+    pub fn push(&mut self, bytes: usize) {
+        self.occupancy += bytes;
+        if self.occupancy > self.capacity_bytes {
+            self.overflows += 1;
+        }
+        self.high_water = self.high_water.max(self.occupancy);
+    }
+
+    pub fn pop(&mut self, bytes: usize) {
+        self.occupancy = self.occupancy.saturating_sub(bytes);
+    }
+
+    /// Number of BRAM18 blocks this FIFO's capacity consumes.
+    pub fn bram18(&self) -> usize {
+        self.capacity_bytes.div_ceil(BRAM18_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_matrix_fifo_is_43_brams() {
+        // §8.2.1: "for the matrix of dimension 128 x 768, we need about 43
+        // 18Kb BRAMs to avoid overflow"
+        let f = Fifo::for_matrix(128, 768);
+        assert_eq!(f.bram18(), 43);
+    }
+
+    #[test]
+    fn tracks_high_water_and_overflow() {
+        let mut f = Fifo::new(100);
+        f.push(60);
+        f.push(60);
+        assert_eq!(f.overflows, 1);
+        assert_eq!(f.high_water, 120);
+        f.pop(100);
+        assert_eq!(f.occupancy, 20);
+        f.pop(100);
+        assert_eq!(f.occupancy, 0); // saturates
+    }
+}

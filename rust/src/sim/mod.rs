@@ -1,0 +1,19 @@
+//! Discrete-event simulator of the multi-FPGA platform — the hardware
+//! substitute for the paper's Sidewinder testbed (DESIGN.md substitutions).
+//!
+//! The model is packet-granular: one Galapagos packet = one matrix row
+//! (768 bytes = 12 x 64-byte AXIS flits at the paper's "12 flits per
+//! packet"). Kernels are actor-style state machines; the fabric
+//! (output switches, routers, NICs, 100G switches) is modeled analytically
+//! with per-link serialization so the event count stays O(packets).
+
+pub mod engine;
+pub mod fabric;
+pub mod fifo;
+pub mod packet;
+pub mod params;
+pub mod trace;
+
+pub use engine::{KernelBehavior, KernelIo, Sim};
+pub use fabric::{Fabric, FpgaId, SwitchId};
+pub use packet::{GlobalKernelId, MsgMeta, Packet, Payload};

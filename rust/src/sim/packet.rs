@@ -1,0 +1,148 @@
+//! Galapagos packets as the simulator sees them.
+//!
+//! A packet carries the Galapagos bridge header (sender id, receiver id,
+//! message size — §2.1 Fig. 2), the TUSER bit16 inter-cluster flag (§4),
+//! an optional one-byte GMI header (§5.2), and a payload that is either
+//! pure-timing or an actual matrix row (functional simulation).
+
+use super::params::flits_for_bytes;
+
+/// Hierarchical kernel address: 256 clusters x 256 kernels (§4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GlobalKernelId {
+    pub cluster: u8,
+    pub kernel: u8,
+}
+
+impl GlobalKernelId {
+    pub const fn new(cluster: u8, kernel: u8) -> Self {
+        GlobalKernelId { cluster, kernel }
+    }
+    /// The gateway kernel of a cluster is kernel 0 by convention (§4).
+    pub const fn gateway_of(cluster: u8) -> Self {
+        GlobalKernelId { cluster, kernel: 0 }
+    }
+    pub fn is_gateway(&self) -> bool {
+        self.kernel == 0
+    }
+}
+
+impl std::fmt::Display for GlobalKernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}k{}", self.cluster, self.kernel)
+    }
+}
+
+/// Stream metadata: which logical stream of a multi-input kernel this row
+/// belongs to, its index, and the total row count of the message (the
+/// Galapagos header's "message size").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MsgMeta {
+    /// Logical input port tag at the destination (e.g. Q vs K matrix).
+    pub stream: u8,
+    /// Row index within the message.
+    pub row: u32,
+    /// Total rows in the message.
+    pub rows: u32,
+    /// Inference id (for pipelined multi-inference runs).
+    pub inference: u32,
+}
+
+/// Payload: timing-only or functional data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Pure-timing packet of the given byte size.
+    Timing(usize),
+    /// One int8 row (e.g. activations).
+    RowI8(Vec<i8>),
+    /// One int32 row (e.g. matmul accumulators crossing kernels).
+    RowI32(Vec<i32>),
+    /// One int64 row (residual / layernorm domain).
+    RowI64(Vec<i64>),
+    /// Control/token message (barrier, credit, weight-swap command, ...).
+    Control(u64),
+}
+
+impl Payload {
+    pub fn bytes(&self) -> usize {
+        match self {
+            Payload::Timing(b) => *b,
+            Payload::RowI8(v) => v.len(),
+            Payload::RowI32(v) => 4 * v.len(),
+            Payload::RowI64(v) => 8 * v.len(),
+            Payload::Control(_) => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    pub src: GlobalKernelId,
+    pub dst: GlobalKernelId,
+    /// TUSER bit16: this message leaves the source cluster (§4). Set by the
+    /// router model; determines which routing table is consulted.
+    pub inter_cluster: bool,
+    /// One-byte GMI header carrying the final destination kernel id within
+    /// the destination cluster (§5.2). Present iff inter_cluster.
+    pub gmi_dst: Option<u8>,
+    pub meta: MsgMeta,
+    pub payload: Payload,
+}
+
+impl Packet {
+    pub fn new(src: GlobalKernelId, dst: GlobalKernelId, meta: MsgMeta, payload: Payload) -> Self {
+        Packet { src, dst, inter_cluster: src.cluster != dst.cluster, gmi_dst: None, meta, payload }
+    }
+
+    /// Wire size in bytes: payload + the one-byte GMI header when attached.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.bytes() + usize::from(self.gmi_dst.is_some())
+    }
+
+    /// Serialization cost in flits.
+    pub fn flits(&self) -> u64 {
+        flits_for_bytes(self.wire_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addressing_scheme() {
+        let g = GlobalKernelId::gateway_of(7);
+        assert!(g.is_gateway());
+        assert_eq!(g.cluster, 7);
+        assert_eq!(format!("{}", GlobalKernelId::new(1, 2)), "c1k2");
+    }
+
+    #[test]
+    fn inter_cluster_flag_set_from_addresses() {
+        let a = GlobalKernelId::new(0, 3);
+        let b = GlobalKernelId::new(1, 0);
+        let p = Packet::new(a, b, MsgMeta::default(), Payload::Timing(768));
+        assert!(p.inter_cluster);
+        let q = Packet::new(a, GlobalKernelId::new(0, 5), MsgMeta::default(), Payload::Timing(8));
+        assert!(!q.inter_cluster);
+    }
+
+    #[test]
+    fn gmi_header_costs_one_byte() {
+        let a = GlobalKernelId::new(0, 3);
+        let b = GlobalKernelId::new(1, 0);
+        let mut p = Packet::new(a, b, MsgMeta::default(), Payload::RowI8(vec![0; 768]));
+        assert_eq!(p.flits(), 12);
+        p.gmi_dst = Some(9);
+        assert_eq!(p.wire_bytes(), 769);
+        assert_eq!(p.flits(), 13);
+    }
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Payload::RowI32(vec![0; 10]).bytes(), 40);
+        assert_eq!(Payload::RowI64(vec![0; 10]).bytes(), 80);
+        assert_eq!(Payload::Control(1).bytes(), 8);
+        assert_eq!(Payload::Timing(5).bytes(), 5);
+    }
+}

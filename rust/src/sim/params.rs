@@ -1,0 +1,56 @@
+//! Fabric timing parameters, calibrated from the paper's own measurements
+//! (§8.2, §9.4) at the 200 MHz fabric clock derived in DESIGN.md.
+
+/// Bytes per AXIS flit (512-bit datapath, matching 100G line rate at 200 MHz).
+pub const FLIT_BYTES: usize = 64;
+
+/// Kernel output switch traversal (AXIS switch in the application region).
+pub const OUT_SWITCH_LAT: u64 = 2;
+
+/// Router + Galapagos/Network bridge traversal within one FPGA.
+pub const ROUTER_LAT: u64 = 6;
+
+/// NIC (100G MAC + Gulf-Stream UDP core) latency, each direction.
+pub const NIC_LAT: u64 = 5;
+
+/// One traversal of a 100G top-of-rack switch. The paper measured a
+/// 0.17 us FPGA-to-FPGA ROUND TRIP through one switch (9.4) => 34 cycles
+/// RTT at 200 MHz => 17 cycles one way; NIC(5)+switch(7)+NIC(5) = 17.
+pub const SWITCH_LAT: u64 = 7;
+
+/// Switch-to-switch hop: the paper measured d = 1.1 us = 220 cycles.
+pub const INTER_SWITCH_LAT: u64 = 220;
+
+/// Number of flits for a payload of `bytes` (ceil; header byte included
+/// by the caller when a GMI inter-cluster header is attached).
+pub fn flits_for_bytes(bytes: usize) -> u64 {
+    (bytes.max(1)).div_ceil(FLIT_BYTES) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_packet_is_12_flits() {
+        // the paper: "each packet contains 12 flits" for a 768-byte row
+        assert_eq!(flits_for_bytes(768), 12);
+    }
+
+    #[test]
+    fn flit_rounding() {
+        assert_eq!(flits_for_bytes(1), 1);
+        assert_eq!(flits_for_bytes(64), 1);
+        assert_eq!(flits_for_bytes(65), 2);
+        assert_eq!(flits_for_bytes(769), 13); // +1 header byte spills a flit
+    }
+
+    #[test]
+    fn rtt_matches_paper() {
+        // 9.4: 0.17 us FPGA-to-FPGA round trip through one 100G switch
+        let one_way = NIC_LAT + SWITCH_LAT + NIC_LAT;
+        let rtt_us = crate::cycles_to_us(2 * one_way);
+        assert!((rtt_us - 0.17).abs() < 0.011, "rtt={rtt_us}");
+        assert!((crate::cycles_to_us(INTER_SWITCH_LAT) - 1.1).abs() < 1e-9);
+    }
+}

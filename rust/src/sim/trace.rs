@@ -1,0 +1,109 @@
+//! Per-kernel activity counters and arrival probes used by the evaluation
+//! harness (Table 1's X/T/I are measured exactly the way the paper did:
+//! by watching packets at the evaluation FPGA).
+
+use crate::util::fxhash::FxHashMap;
+
+use super::packet::GlobalKernelId;
+
+#[derive(Debug, Clone, Default)]
+pub struct KernelStats {
+    pub rx_packets: u64,
+    pub tx_packets: u64,
+    pub first_rx: Option<u64>,
+    pub last_rx: Option<u64>,
+    pub first_tx: Option<u64>,
+    pub last_tx: Option<u64>,
+    pub wakes: u64,
+}
+
+impl KernelStats {
+    pub fn on_rx(&mut self, t: u64) {
+        self.rx_packets += 1;
+        self.first_rx.get_or_insert(t);
+        self.last_rx = Some(t);
+    }
+    pub fn on_tx(&mut self, t: u64) {
+        self.tx_packets += 1;
+        self.first_tx.get_or_insert(t);
+        self.last_tx = Some(t);
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub kernels: FxHashMap<GlobalKernelId, KernelStats>,
+    pub events_processed: u64,
+    /// All packet arrival times at "probe" kernels (e.g. the evaluation
+    /// FPGA's sink), keyed by probe id — the raw series behind X/T/I.
+    pub probes: FxHashMap<GlobalKernelId, Vec<u64>>,
+    probe_set: Vec<GlobalKernelId>,
+}
+
+impl Trace {
+    pub fn stats(&mut self, k: GlobalKernelId) -> &mut KernelStats {
+        self.kernels.entry(k).or_default()
+    }
+
+    pub fn add_probe(&mut self, k: GlobalKernelId) {
+        if !self.probe_set.contains(&k) {
+            self.probe_set.push(k);
+        }
+    }
+
+    pub fn is_probe(&self, k: GlobalKernelId) -> bool {
+        self.probe_set.contains(&k)
+    }
+
+    pub fn record_probe(&mut self, k: GlobalKernelId, t: u64) {
+        self.probes.entry(k).or_default().push(t);
+    }
+
+    /// (first, last, median inter-arrival) of a probe's packet series —
+    /// the X / T / I decomposition of §8.2.2 when probed at the encoder
+    /// output.
+    pub fn xti(&self, k: GlobalKernelId) -> Option<(u64, u64, u64)> {
+        let v = self.probes.get(&k)?;
+        if v.is_empty() {
+            return None;
+        }
+        let first = v[0];
+        let last = *v.last().unwrap();
+        let mut gaps: Vec<u64> = v.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        let interval = if gaps.is_empty() { 0 } else { gaps[gaps.len() / 2] };
+        Some((first, last, interval))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xti_decomposition() {
+        let mut tr = Trace::default();
+        let k = GlobalKernelId::new(0, 9);
+        tr.add_probe(k);
+        assert!(tr.is_probe(k));
+        for t in [100, 167, 234, 301] {
+            tr.record_probe(k, t);
+        }
+        let (x, t, i) = tr.xti(k).unwrap();
+        assert_eq!(x, 100);
+        assert_eq!(t, 301);
+        assert_eq!(i, 67);
+    }
+
+    #[test]
+    fn kernel_stats_first_last() {
+        let mut s = KernelStats::default();
+        s.on_rx(5);
+        s.on_rx(9);
+        s.on_tx(7);
+        assert_eq!(s.first_rx, Some(5));
+        assert_eq!(s.last_rx, Some(9));
+        assert_eq!(s.rx_packets, 2);
+        assert_eq!(s.first_tx, Some(7));
+    }
+}

@@ -1,0 +1,178 @@
+//! Benchmark harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! multiple timed samples, median/mean/p95 reporting, and a `black_box`
+//! to defeat the optimiser. Table-generating benches also use it to time
+//! the end-to-end experiment regeneration.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    fn per_iter_ns(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|d| d.as_nanos() as f64 / self.iters_per_sample as f64)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+    pub fn median_ns(&self) -> f64 {
+        let v = self.per_iter_ns();
+        v[v.len() / 2]
+    }
+    pub fn mean_ns(&self) -> f64 {
+        let v = self.per_iter_ns();
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+    pub fn p95_ns(&self) -> f64 {
+        let v = self.per_iter_ns();
+        v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)]
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples.len(),
+            self.iters_per_sample
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and automatic iteration calibration.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub target_sample_time: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            target_sample_time: Duration::from_millis(120),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            target_sample_time: Duration::from_millis(40),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(s.elapsed());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        });
+        let r = self.results.last().unwrap();
+        println!("{}", r.report());
+        r
+    }
+
+    /// Run once and report wall-clock (for heavyweight end-to-end drivers).
+    pub fn once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let s = Instant::now();
+        let out = f();
+        let d = s.elapsed();
+        println!("{:<44} once   {:>12}", name, fmt_ns(d.as_nanos() as f64));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: vec![d],
+            iters_per_sample: 1,
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            target_sample_time: Duration::from_millis(2),
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let r = &b.results[0];
+        assert!(r.median_ns() > 0.0);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bencher::quick();
+        let v = b.once("ret", || 42);
+        assert_eq!(v, 42);
+    }
+}

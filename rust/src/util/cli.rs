@@ -1,0 +1,162 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    spec: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates flag parsing
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.flags.insert(body.to_string(), v);
+                } else {
+                    a.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Declare a flag for the usage string (purely documentation).
+    pub fn declare(&mut self, name: &str, default: &str, help: &str) -> &mut Self {
+        self.spec.push((name.into(), default.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str, about: &str) -> String {
+        let mut s = format!("{prog} — {about}\n\nOptions:\n");
+        for (n, d, h) in &self.spec {
+            s.push_str(&format!("  --{n:<18} {h} [default: {d}]\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} is not an integer")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} is not a number")),
+        }
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> Result<bool> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => bail!("--{name}={v} is not a bool"),
+            },
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--lens 1,2,4,128`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().with_context(|| format!("bad list item {p:?} in --{name}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_kinds() {
+        // NB: a bare `--flag` followed by a non-flag token consumes it as the
+        // value, so boolean flags go last or use `--flag=true`.
+        let a = parse(&["run", "--n", "5", "--mode=fast", "extra", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.u64_or("n", 0).unwrap(), 5);
+        assert_eq!(a.str_or("mode", ""), "fast");
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.u64_or("n", 0).is_err());
+        let b = parse(&["--flag=maybe"]);
+        assert!(b.bool_or("flag", false).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_flags() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--lens", "1,2, 4"]);
+        assert_eq!(a.usize_list_or("lens", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse(&[]).usize_list_or("lens", &[9]).unwrap(), vec![9]);
+    }
+}

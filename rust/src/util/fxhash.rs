@@ -1,0 +1,101 @@
+//! FxHash-style fast hasher (the rustc-internal multiply-rotate hash) for
+//! the simulator's hot-path maps — SipHash (std default) dominated the
+//! event-dispatch profile (EXPERIMENTS.md §Perf L3.2).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default, Clone, Copy)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&500], 1000);
+    }
+
+    #[test]
+    fn distributes() {
+        // crude avalanche check: nearby keys hash far apart
+        let h = |x: u64| {
+            let mut f = FxHasher::default();
+            f.write_u64(x);
+            f.finish()
+        };
+        let a = h(1);
+        let b = h(2);
+        assert_ne!(a, b);
+        assert!((a ^ b).count_ones() > 8, "poor diffusion: {a:x} vs {b:x}");
+    }
+
+    #[test]
+    fn byte_slices() {
+        let h = |x: &[u8]| {
+            let mut f = FxHasher::default();
+            f.write(x);
+            f.finish()
+        };
+        assert_ne!(h(b"hello"), h(b"hellp"));
+        assert_ne!(h(b"12345678"), h(b"123456789"));
+    }
+}

@@ -1,0 +1,481 @@
+//! Minimal JSON parser / writer (serde is not in the vendored crate set).
+//!
+//! Supports the full JSON grammar; numbers are kept as f64 with an i64
+//! fast-path accessor (quantparams and manifests only use integers and
+//! plain decimals). Object key order is preserved (the Cluster Builder
+//! emits deterministic descriptions that are diffed in tests).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("json parse error at byte {pos}: {msg}")]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(p.err("trailing data"));
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors -------------------------------------------------
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => Some(*n as i64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    /// `get` chained through a dotted path: `j.path("encoder.rq_q.m")`.
+    pub fn path(&self, path: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Json::Obj(kv) => kv.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => vec![],
+        }
+    }
+
+    // -- builders ---------------------------------------------------------
+    pub fn obj(kv: Vec<(&str, Json)>) -> Json {
+        Json::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn from_map(m: &BTreeMap<String, Json>) -> Json {
+        Json::Obj(m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Self {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.bump() == Some(c) {
+            Ok(())
+        } else {
+            self.pos -= usize::from(self.pos > 0);
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            kv.push((k, v));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(kv)),
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            a.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(a)),
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let hex = self
+                            .b
+                            .get(self.pos..self.pos + 4)
+                            .ok_or_else(|| self.err("bad \\u escape"))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
+                            16,
+                        )
+                        .map_err(|_| self.err("bad \\u"))?;
+                        self.pos += 4;
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(c) if c < 0x80 => s.push(c as char),
+                Some(c) => {
+                    // multi-byte utf-8: copy the full sequence
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let start = self.pos - 1;
+                    let end = (start + len).min(self.b.len());
+                    let chunk = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    s.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_json(self, f, None, 0)
+    }
+}
+
+impl Json {
+    /// Pretty-print with 1-space indent (matches python `json.dumps(indent=1)`).
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        use fmt::Write;
+        struct W<'a>(&'a mut String);
+        impl fmt::Write for W<'_> {
+            fn write_str(&mut self, x: &str) -> fmt::Result {
+                self.0.push_str(x);
+                Ok(())
+            }
+        }
+        let mut w = W(&mut s);
+        write!(w, "{}", PrettyJson(self)).unwrap();
+        s
+    }
+}
+
+struct PrettyJson<'a>(&'a Json);
+impl fmt::Display for PrettyJson<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_json(self.0, f, Some(1), 0)
+    }
+}
+
+fn write_json(
+    v: &Json,
+    f: &mut fmt::Formatter<'_>,
+    indent: Option<usize>,
+    depth: usize,
+) -> fmt::Result {
+    let (nl, pad, pad_in) = match indent {
+        Some(n) => (
+            "\n",
+            " ".repeat(n * depth),
+            " ".repeat(n * (depth + 1)),
+        ),
+        None => ("", String::new(), String::new()),
+    };
+    match v {
+        Json::Null => write!(f, "null"),
+        Json::Bool(b) => write!(f, "{b}"),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                write!(f, "{}", *n as i64)
+            } else {
+                write!(f, "{n}")
+            }
+        }
+        Json::Str(s) => write_escaped(s, f),
+        Json::Arr(a) => {
+            if a.is_empty() {
+                return write!(f, "[]");
+            }
+            write!(f, "[{nl}")?;
+            for (i, x) in a.iter().enumerate() {
+                write!(f, "{pad_in}")?;
+                write_json(x, f, indent, depth + 1)?;
+                if i + 1 < a.len() {
+                    write!(f, ",")?;
+                }
+                write!(f, "{nl}")?;
+            }
+            write!(f, "{pad}]")
+        }
+        Json::Obj(kv) => {
+            if kv.is_empty() {
+                return write!(f, "{{}}");
+            }
+            write!(f, "{{{nl}")?;
+            for (i, (k, x)) in kv.iter().enumerate() {
+                write!(f, "{pad_in}")?;
+                write_escaped(k, f)?;
+                write!(f, ":")?;
+                if indent.is_some() {
+                    write!(f, " ")?;
+                }
+                write_json(x, f, indent, depth + 1)?;
+                if i + 1 < kv.len() {
+                    write!(f, ",")?;
+                }
+                write!(f, "{nl}")?;
+            }
+            write!(f, "{pad}}}")
+        }
+    }
+}
+
+fn write_escaped(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(Json::parse("-3.5").unwrap().as_f64(), Some(-3.5));
+        assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"hi\\n\"").unwrap().as_str(), Some("hi\n"));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": {"e": -1.5e-2}}"#).unwrap();
+        assert_eq!(j.path("d.e").unwrap().as_f64(), Some(-0.015));
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.path("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(), Some("c"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("07a").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn roundtrips() {
+        let src = r#"{"m": 16384, "n": 4, "s": "x\"y", "a": [true, false, null], "f": 0.5}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+        let j3 = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(j, j3);
+    }
+
+    #[test]
+    fn parses_python_manifest_style() {
+        // exactly what python json.dumps(indent=1) produces
+        let src = "{\n \"seed\": 20240601,\n \"weights\": {\n  \"wq\": {\n   \"file\": \"weights/wq.bin\"\n  }\n }\n}";
+        let j = Json::parse(src).unwrap();
+        assert_eq!(j.path("weights.wq.file").unwrap().as_str(), Some("weights/wq.bin"));
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let j = Json::parse("\"\\u00e9\\u0041 caf\u{e9}\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{e9}A caf\u{e9}"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no serde / clap / criterion / proptest / rand in the vendored set).
+
+pub mod bench;
+pub mod fxhash;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod table;
+pub mod tensorfile;

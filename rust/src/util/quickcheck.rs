@@ -1,0 +1,134 @@
+//! Mini property-testing framework (proptest is not in the vendored set).
+//!
+//! A property is a closure over a [`Gen`] (seeded value source). `check`
+//! runs it across many seeds; on failure it reports the seed so the case
+//! can be replayed deterministically. Used by the coordinator invariant
+//! tests (routing, batching, GMI state machines).
+
+use super::rng::Rng;
+
+/// A seeded generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool_with_p(0.5)
+    }
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+    /// A vector whose length scales with the generation `size`.
+    pub fn vec<T>(&mut self, mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.rng.range_usize(0, self.size);
+        (0..n).map(|_| item(self)).collect()
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range_usize(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a property: Ok or a failure description.
+pub type PropResult = Result<(), String>;
+
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, base_seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop` across `cfg.cases` seeds; panics with the failing seed.
+pub fn check_with(cfg: &Config, name: &str, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // grow the size with the case index so early failures are small
+        let size = 1 + (cfg.max_size * (case + 1)) / cfg.cases;
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {size}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with default config.
+pub fn check(name: &str, prop: impl FnMut(&mut Gen) -> PropResult) {
+    check_with(&Config::default(), name, prop)
+}
+
+/// Assertion helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse-reverse-id", |g| {
+            let v = g.vec(|g| g.i64_in(-100, 100));
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            prop_assert!(r == v, "{v:?} != {r:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", |g| {
+            let x = g.usize_in(0, 10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_len = 0;
+        check("sizes", |g| {
+            max_len = max_len.max(g.size);
+            Ok(())
+        });
+        assert!(max_len >= 32);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<i64> = vec![];
+        check_with(&Config { cases: 10, ..Default::default() }, "det-a", |g| {
+            first.push(g.i64_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<i64> = vec![];
+        check_with(&Config { cases: 10, ..Default::default() }, "det-b", |g| {
+            second.push(g.i64_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

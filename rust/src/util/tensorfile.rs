@@ -1,0 +1,249 @@
+//! GTF1 tensor file format — the rust twin of `python/compile/tensorfile.py`.
+//!
+//! Little-endian: magic "GTF1", dtype u8 (0=i8, 1=i32, 2=i64, 3=f32),
+//! ndim u8, 2 pad bytes, ndim*u32 dims, raw C-order data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"GTF1";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8 = 0,
+    I32 = 1,
+    I64 = 2,
+    F32 = 3,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+            DType::I64 => 8,
+            DType::F32 => 4,
+        }
+    }
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::I8,
+            1 => DType::I32,
+            2 => DType::I64,
+            3 => DType::F32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+}
+
+/// A dense tensor with one of the four supported element types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    I8(TensorData<i8>),
+    I32(TensorData<i32>),
+    I64(TensorData<i64>),
+    F32(TensorData<f32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorData<T> {
+    pub dims: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy> TensorData<T> {
+    pub fn new(dims: Vec<usize>, data: Vec<T>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorData { dims, data }
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    /// Row-major 2-D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> T {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::I8(_) => DType::I8,
+            Tensor::I32(_) => DType::I32,
+            Tensor::I64(_) => DType::I64,
+            Tensor::F32(_) => DType::F32,
+        }
+    }
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::I8(t) => &t.dims,
+            Tensor::I32(t) => &t.dims,
+            Tensor::I64(t) => &t.dims,
+            Tensor::F32(t) => &t.dims,
+        }
+    }
+    pub fn as_i8(&self) -> Result<&TensorData<i8>> {
+        match self {
+            Tensor::I8(t) => Ok(t),
+            _ => bail!("expected i8 tensor, got {:?}", self.dtype()),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&TensorData<i32>> {
+        match self {
+            Tensor::I32(t) => Ok(t),
+            _ => bail!("expected i32 tensor, got {:?}", self.dtype()),
+        }
+    }
+    pub fn as_i64(&self) -> Result<&TensorData<i64>> {
+        match self {
+            Tensor::I64(t) => Ok(t),
+            _ => bail!("expected i64 tensor, got {:?}", self.dtype()),
+        }
+    }
+    pub fn as_f32(&self) -> Result<&TensorData<f32>> {
+        match self {
+            Tensor::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
+        }
+    }
+}
+
+pub fn read_tensor(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head)?;
+    if &head[0..4] != MAGIC {
+        bail!("{path:?}: bad magic {:?}", &head[0..4]);
+    }
+    let dtype = DType::from_code(head[4])?;
+    let ndim = head[5] as usize;
+    let mut dim_bytes = vec![0u8; 4 * ndim];
+    f.read_exact(&mut dim_bytes)?;
+    let dims: Vec<usize> = dim_bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+        .collect();
+    let n: usize = dims.iter().product();
+    let mut raw = vec![0u8; n * dtype.size()];
+    f.read_exact(&mut raw).with_context(|| format!("{path:?}: truncated data"))?;
+
+    Ok(match dtype {
+        DType::I8 => Tensor::I8(TensorData::new(
+            dims,
+            raw.iter().map(|&b| b as i8).collect(),
+        )),
+        DType::I32 => Tensor::I32(TensorData::new(
+            dims,
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )),
+        DType::I64 => Tensor::I64(TensorData::new(
+            dims,
+            raw.chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        )),
+        DType::F32 => Tensor::F32(TensorData::new(
+            dims,
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )),
+    })
+}
+
+pub fn write_tensor(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    let dims = t.dims();
+    f.write_all(MAGIC)?;
+    f.write_all(&[t.dtype() as u8, dims.len() as u8, 0, 0])?;
+    for &d in dims {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match t {
+        Tensor::I8(td) => {
+            let bytes: Vec<u8> = td.data.iter().map(|&v| v as u8).collect();
+            f.write_all(&bytes)?;
+        }
+        Tensor::I32(td) => {
+            for v in &td.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Tensor::I64(td) => {
+            for v in &td.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Tensor::F32(td) => {
+            for v in &td.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gtf_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let t = Tensor::I8(TensorData::new(vec![2, 3], vec![1, -2, 3, -4, 5, -128]));
+        let p = tmp("i8.bin");
+        write_tensor(&p, &t).unwrap();
+        assert_eq!(read_tensor(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_i32_i64_f32() {
+        for t in [
+            Tensor::I32(TensorData::new(vec![4], vec![i32::MIN, -1, 0, i32::MAX])),
+            Tensor::I64(TensorData::new(vec![2, 2], vec![i64::MIN, -1, 0, i64::MAX])),
+            Tensor::F32(TensorData::new(vec![3], vec![-1.5, 0.0, 3.25])),
+        ] {
+            let p = tmp("x.bin");
+            write_tensor(&p, &t).unwrap();
+            assert_eq!(read_tensor(&p).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::I64(TensorData::new(vec![], vec![42]));
+        let p = tmp("scalar.bin");
+        write_tensor(&p, &t).unwrap();
+        let back = read_tensor(&p).unwrap();
+        assert_eq!(back.dims(), &[] as &[usize]);
+        assert_eq!(back.as_i64().unwrap().data, vec![42]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"XXXX0000").unwrap();
+        assert!(read_tensor(&p).is_err());
+    }
+
+    #[test]
+    fn at2_indexing() {
+        let t = TensorData::new(vec![2, 3], vec![0i32, 1, 2, 10, 11, 12]);
+        assert_eq!(t.at2(1, 2), 12);
+        assert_eq!(t.at2(0, 0), 0);
+    }
+}

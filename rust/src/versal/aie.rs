@@ -1,0 +1,150 @@
+//! The AIE array model (§9.1): VCK190 / XCVC1902 parameters.
+
+/// AIE array of one Versal device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AieArray {
+    pub rows: usize,
+    pub cols: usize,
+    /// AIE clock (Hz)
+    pub clock_hz: u64,
+    /// per-AIE data memory (bytes)
+    pub dmem_bytes: usize,
+    /// per-AIE vector register file (bytes)
+    pub regfile_bytes: usize,
+    /// INT8 MACs per AIE per cycle: the paper's estimate fetches 512 bits
+    /// = 64 int8 weights per cycle from data memory (§9.3)
+    pub int8_macs_per_cycle: u64,
+    /// PL<->AIE interface tiles (§9.1: 39 PLIOs on the VCK190)
+    pub plio_tiles: usize,
+    /// PL -> AIE bandwidth (bytes/s)
+    pub pl_to_aie_bw: u64,
+    /// AIE -> PL bandwidth (bytes/s)
+    pub aie_to_pl_bw: u64,
+    /// DRAM peak bandwidth (bytes/s)
+    pub dram_bw: u64,
+}
+
+impl AieArray {
+    /// XCVC1902 on the VCK190 evaluation board (§9.1 figures).
+    pub fn vck190() -> Self {
+        AieArray {
+            rows: 8,
+            cols: 50,
+            clock_hz: 1_000_000_000,
+            dmem_bytes: 32 * 1024,
+            regfile_bytes: 2 * 1024,
+            int8_macs_per_cycle: 64,
+            plio_tiles: 39,
+            pl_to_aie_bw: 1_200_000_000_000, // 1.2 TB/s
+            aie_to_pl_bw: 900_000_000_000,   // 0.9 TB/s
+            dram_bw: 25_600_000_000,         // 25.6 GB/s
+        }
+    }
+
+    pub fn total_aies(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Peak INT8 throughput of the array (ops/s, MAC = 2 ops).
+    pub fn peak_int8_tops(&self) -> f64 {
+        2.0 * self.total_aies() as f64 * self.int8_macs_per_cycle as f64 * self.clock_hz as f64
+            / 1e12
+    }
+
+    /// AIEs needed to hold a K x N int8 weight matrix in data memory
+    /// (weight-stationary, §9.3: "the weight matrix needs to be stored in
+    /// the data memory").
+    pub fn aies_for_weights(&self, k: usize, n: usize) -> usize {
+        (k * n).div_ceil(self.dmem_bytes)
+    }
+
+    /// Latency (us) of an M x K x N int8 matmul spread over `aies` AIEs,
+    /// each fetching 64 weights/cycle (the §9.3 estimation method).
+    pub fn matmul_latency_us(&self, m: usize, k: usize, n: usize, aies: usize) -> f64 {
+        let macs_total = (m * k * n) as u64;
+        let macs_per_aie = macs_total.div_ceil(aies as u64);
+        let cycles = macs_per_aie.div_ceil(self.int8_macs_per_cycle);
+        cycles as f64 * 1e6 / self.clock_hz as f64
+    }
+
+    /// The §9.3 alternative partitioning (Fig. 24): a `rows x cols` grid
+    /// of (K/rows) x (N/cols) partial weight matrices — e.g. 3x8 grid of
+    /// 256x96 for the 768x768 linears. Input-row segments are packet-
+    /// switched to the grid rows and broadcast along each row; partial
+    /// sums reduce down the columns. Returns (latency_us, slab_bytes).
+    pub fn grid_matmul(&self, m: usize, k: usize, n: usize, rows: usize, cols: usize) -> (f64, usize) {
+        let slab = k.div_ceil(rows) * n.div_ceil(cols);
+        let lat = self.matmul_latency_us(m, k, n, rows * cols);
+        (lat, slab)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck190_has_400_aies() {
+        let a = AieArray::vck190();
+        assert_eq!(a.total_aies(), 400);
+    }
+
+    #[test]
+    fn weight_partitioning_matches_paper() {
+        // §9.3: a 768x768 int8 matrix needs 576 KB => at least 18 AIEs;
+        // the paper picks 24 (768x32 slabs).
+        let a = AieArray::vck190();
+        assert_eq!(a.aies_for_weights(768, 768), 18);
+        // 768x32 slab = 24 KB fits one AIE's 32 KB dmem
+        assert!(768 * 32 <= a.dmem_bytes);
+    }
+
+    #[test]
+    fn qkv_latency_is_49us_on_24_aies() {
+        // §9.3: 128x768x32 = 3,145,728 MACs per AIE / 64 = 49,152 cycles
+        // = 49 us at 1 GHz.
+        let a = AieArray::vck190();
+        let us = a.matmul_latency_us(128, 768, 768, 24);
+        assert!((us - 49.152).abs() < 0.01, "{us}");
+    }
+
+    #[test]
+    fn attention_latency_is_16us_on_1_aie() {
+        // §9.3: 128x64x128 = 1,048,576 MACs / 64 = 16,384 cycles = 16 us.
+        let a = AieArray::vck190();
+        let us = a.matmul_latency_us(128, 64, 128, 1);
+        assert!((us - 16.384).abs() < 0.01, "{us}");
+    }
+
+    #[test]
+    fn ffn_latency_matches_qkv_with_96_aies() {
+        // §9.3: kernels 8/9 are 4x the work; 96 AIEs keep 49 us.
+        let a = AieArray::vck190();
+        let us = a.matmul_latency_us(128, 768, 3072, 96);
+        assert!((us - 49.152).abs() < 0.01, "{us}");
+    }
+
+    #[test]
+    fn grid_partitioning_alternative_matches_slab_scheme() {
+        // §9.3: "we can partition the matrix into a grid of 3 x 8 partial
+        // matrices with a dimension of 256 x 96" — same 24 AIEs, same
+        // latency, and the 24 KB slab still fits the 32 KB data memory.
+        let a = AieArray::vck190();
+        let (lat_grid, slab_grid) = a.grid_matmul(128, 768, 768, 3, 8);
+        let lat_cols = a.matmul_latency_us(128, 768, 768, 24);
+        assert!((lat_grid - lat_cols).abs() < 1e-9);
+        assert_eq!(slab_grid, 256 * 96);
+        assert!(slab_grid <= a.dmem_bytes);
+    }
+
+    #[test]
+    fn peak_tops_close_to_datasheet() {
+        // §9.3 cites 133 INT8 TOPs for the VCK190; our first-principles
+        // peak (2*400*64*1GHz = 51.2 TOPS via plain MAC counting) shows
+        // the datasheet number assumes the AIE-ML style packing; keep the
+        // model's number and compare against the paper's cited figure in
+        // the estimate module instead.
+        let a = AieArray::vck190();
+        assert!(a.peak_int8_tops() > 50.0);
+    }
+}

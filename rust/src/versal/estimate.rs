@@ -1,0 +1,141 @@
+//! §9.3's latency estimate for I-BERT on Versal devices, with every
+//! assumption a parameter.
+
+use super::aie::AieArray;
+use super::mapping::{validate_mapping, versal_encoder_mapping, VersalKernel};
+use crate::eval::latency_model::LatencyComponents;
+
+/// The §9.3 assumptions.
+#[derive(Debug, Clone, Copy)]
+pub struct VersalAssumptions {
+    /// latency the nonlinear modules add per encoder (paper: 26.1 us)
+    pub nonlinear_overhead_us: f64,
+    /// X/T ratio carried over from the UltraScale+ measurement (0.53)
+    pub x_over_t: f64,
+    /// switch-to-switch latency (1.1 us)
+    pub d_us: f64,
+    pub encoders: usize,
+}
+
+impl Default for VersalAssumptions {
+    fn default() -> Self {
+        VersalAssumptions { nonlinear_overhead_us: 26.1, x_over_t: 0.53, d_us: 1.1, encoders: 12 }
+    }
+}
+
+/// The estimate output.
+#[derive(Debug, Clone)]
+pub struct VersalEstimate {
+    pub kernels: Vec<(String, f64)>,
+    pub aies_used: usize,
+    /// critical-path matmul latency of one encoder (us)
+    pub matmul_us: f64,
+    /// one-encoder latency including nonlinear overhead (us)
+    pub encoder_us: f64,
+    /// full-model latency (us)
+    pub model_us: f64,
+    pub devices: usize,
+}
+
+/// One encoder on one Versal device (Fig. 23): the critical path is
+/// QKV (parallel, 49 us) -> attention (16+16 us, overlapped w/ proj) ->
+/// FFN (49 us); the paper sums the two 49 us stages ("the overall latency
+/// for one encoder is 98 + 26.1 us").
+pub fn estimate_encoder(a: &AieArray, m: usize, hidden: usize, ffn: usize,
+                        asm: &VersalAssumptions) -> anyhow::Result<VersalEstimate> {
+    let ks = versal_encoder_mapping(m, hidden, ffn);
+    validate_mapping(&ks, a)?;
+
+    let lat = |name: &str| -> f64 {
+        ks.iter()
+            .find(|k| k.name.starts_with(name))
+            .map(|k: &VersalKernel| match k.name.contains("(x12)") {
+                // per-head kernels: one head per AIE, heads run in parallel
+                true => {
+                    let (mm, kk, nn) = k.matmul.unwrap();
+                    a.matmul_latency_us(mm, kk, nn, 1)
+                }
+                false => k.latency_us(a),
+            })
+            .unwrap_or(0.0)
+    };
+
+    // paper's critical path: the QKV stage and the FFN stage at 49 us each
+    let matmul_us = lat("k1") + lat("k8");
+    let encoder_us = matmul_us + asm.nonlinear_overhead_us;
+
+    let t_cycles = (encoder_us * 1e3).round() as u64; // placeholder domain: us*1000
+    let x_cycles = (encoder_us * asm.x_over_t * 1e3).round() as u64;
+    let c = LatencyComponents { x: x_cycles, t: t_cycles, i: 0 };
+    // Eq. 1 in us directly (we keep the us domain; cycles field is x1000)
+    let model_us = (c.t as f64 / 1e3)
+        + (asm.encoders as f64 - 1.0) * (c.x as f64 / 1e3 + asm.d_us);
+
+    Ok(VersalEstimate {
+        kernels: ks.iter().map(|k| (k.name.to_string(), k.latency_us(a))).collect(),
+        aies_used: ks.iter().map(|k| k.aies).sum(),
+        matmul_us,
+        encoder_us,
+        model_us,
+        devices: asm.encoders,
+    })
+}
+
+/// Full-model estimate with the paper's defaults (→ ~860 us).
+pub fn estimate_full_model() -> anyhow::Result<VersalEstimate> {
+    estimate_encoder(&AieArray::vck190(), 128, 768, 3072, &VersalAssumptions::default())
+}
+
+/// §9.3's weight-reconfiguration argument: with two cards ping-ponging
+/// (one computing while the other loads the next encoder's weights),
+/// the whole model needs only `2` devices if reconfiguration fits in the
+/// compute shadow. Returns (devices, reconfig_us, compute_us).
+pub fn reconfig_device_estimate(a: &AieArray, encoder_weight_bytes: usize,
+                                encoder_us: f64) -> (usize, f64, f64) {
+    // weight load is DRAM-bandwidth bound
+    let reconfig_us = encoder_weight_bytes as f64 / a.dram_bw as f64 * 1e6;
+    let devices = if reconfig_us <= encoder_us { 2 } else {
+        // need enough cards that the pipeline hides reconfiguration
+        1 + (reconfig_us / encoder_us).ceil() as usize
+    };
+    (devices, reconfig_us, encoder_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_860us() {
+        let e = estimate_full_model().unwrap();
+        assert_eq!(e.aies_used, 312);
+        assert!((e.matmul_us - 98.3).abs() < 0.5, "matmul {:.1}", e.matmul_us);
+        assert!((e.encoder_us - 124.4).abs() < 0.5, "encoder {:.1}", e.encoder_us);
+        // paper: 860 us overall
+        assert!((e.model_us - 860.0).abs() < 10.0, "model {:.1}", e.model_us);
+    }
+
+    #[test]
+    fn versal_is_comparable_to_a100() {
+        // §9.3's headline: 860 us vs the A100's 770 us batch-1 => within ~12%
+        let e = estimate_full_model().unwrap();
+        let a100_us = crate::baselines::gpu::A100.batch1_latency_ms * 1e3;
+        let ratio = e.model_us / a100_us;
+        assert!(ratio < 1.2, "Versal/A100 = {ratio:.2} should be ~1.12");
+        assert!(ratio > 0.9, "the estimate should not beat the A100 either");
+    }
+
+    #[test]
+    fn reconfig_two_cards_suffice() {
+        // one encoder's weights: ~7.1 MB int8 -> ~0.28 ms from DRAM; an
+        // encoder computes in 124 us, so reconfiguration does NOT hide in
+        // one encoder's shadow -> more than 2 cards by the strict model.
+        // The paper's "two cards suffice" assumes overlapping across the
+        // pipeline; we surface both numbers.
+        let a = AieArray::vck190();
+        let weights = 4 * 768 * 768 + 2 * 768 * 3072;
+        let (devices, reconfig_us, compute_us) = reconfig_device_estimate(&a, weights, 124.1);
+        assert!(reconfig_us > compute_us, "DRAM load slower than one encoder");
+        assert!(devices >= 2 && devices <= 4, "devices={devices}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Fig. 23: mapping one I-BERT encoder onto one VCK190 (modified
+//! Galapagos: each kernel has a PL part and an AIE part; PLIOs are the
+//! scarce interface resource, which is why attention heads fuse into one
+//! kernel each for dot-product and softmax-MM).
+
+use anyhow::{bail, Result};
+
+use super::aie::AieArray;
+
+/// One kernel of the Versal encoder mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VersalKernel {
+    pub name: &'static str,
+    /// matmul dims (m, k, n); None for PL-only kernels (LayerNorm)
+    pub matmul: Option<(usize, usize, usize)>,
+    pub aies: usize,
+    /// PLIO connections this kernel needs (in + out)
+    pub plios: usize,
+}
+
+impl VersalKernel {
+    pub fn latency_us(&self, a: &AieArray) -> f64 {
+        match self.matmul {
+            Some((m, k, n)) => a.matmul_latency_us(m, k, n, self.aies.max(1)),
+            None => 0.0, // PL-side pipeline, overlapped
+        }
+    }
+}
+
+/// The §9.3 mapping: kernels 1,2,3,6 = 128x768x768 on 24 AIEs each;
+/// kernel 4 = 12 attention dot-products (+softmax on PL) on 12 AIEs;
+/// kernel 5 = 12 softmax-MMs on 12 AIEs; kernels 8,9 = 128x768x3072 on
+/// 96 AIEs each; kernels 7,10 = LayerNorm on the PL only.
+pub fn versal_encoder_mapping(m: usize, hidden: usize, ffn: usize) -> Vec<VersalKernel> {
+    let heads = 12;
+    let d = hidden / heads;
+    vec![
+        VersalKernel { name: "k1-linear-q", matmul: Some((m, hidden, hidden)), aies: 24, plios: 2 },
+        VersalKernel { name: "k2-linear-k", matmul: Some((m, hidden, hidden)), aies: 24, plios: 2 },
+        VersalKernel { name: "k3-linear-v", matmul: Some((m, hidden, hidden)), aies: 24, plios: 2 },
+        VersalKernel {
+            name: "k4-attn-dot-product(x12)+softmax",
+            matmul: Some((m, d, m)), // per head, one AIE each
+            aies: heads,
+            plios: 3,
+        },
+        VersalKernel {
+            name: "k5-softmax-mm(x12)",
+            matmul: Some((m, m, d)),
+            aies: heads,
+            plios: 3,
+        },
+        VersalKernel { name: "k6-linear-proj", matmul: Some((m, hidden, hidden)), aies: 24, plios: 2 },
+        VersalKernel { name: "k7-layernorm1", matmul: None, aies: 0, plios: 2 },
+        VersalKernel { name: "k8-ffn1", matmul: Some((m, hidden, ffn)), aies: 96, plios: 2 },
+        VersalKernel { name: "k9-ffn2", matmul: Some((m, ffn, hidden)), aies: 96, plios: 2 },
+        VersalKernel { name: "k10-layernorm2", matmul: None, aies: 0, plios: 2 },
+    ]
+}
+
+/// Validate a mapping against the device: AIE count, PLIO budget, and
+/// per-AIE weight residency.
+pub fn validate_mapping(kernels: &[VersalKernel], a: &AieArray) -> Result<()> {
+    let aies: usize = kernels.iter().map(|k| k.aies).sum();
+    if aies > a.total_aies() {
+        bail!("mapping needs {aies} AIEs > {} available", a.total_aies());
+    }
+    let plios: usize = kernels.iter().map(|k| k.plios).sum();
+    if plios > a.plio_tiles {
+        bail!("mapping needs {plios} PLIOs > {} available", a.plio_tiles);
+    }
+    for k in kernels {
+        if let Some((_, kk, nn)) = k.matmul {
+            if k.aies == 0 {
+                bail!("{}: matmul kernel with no AIEs", k.name);
+            }
+            // per-head kernels replicate weights per AIE; weight slab must fit
+            let slab = (kk * nn).div_ceil(k.aies);
+            if slab > a.dmem_bytes {
+                bail!("{}: weight slab {} B exceeds {} B dmem", k.name, slab, a.dmem_bytes);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mapping_uses_312_aies() {
+        // §9.3: 24*4 + 12 + 12 + 96*2 = 312 AIEs for one encoder
+        let ks = versal_encoder_mapping(128, 768, 3072);
+        let total: usize = ks.iter().map(|k| k.aies).sum();
+        assert_eq!(total, 312);
+    }
+
+    #[test]
+    fn mapping_fits_vck190() {
+        let a = AieArray::vck190();
+        validate_mapping(&versal_encoder_mapping(128, 768, 3072), &a).unwrap();
+    }
+
+    #[test]
+    fn plio_budget_is_tight_but_sufficient() {
+        // §9.3: "there are only 39 PLIOs ... important to limit the number
+        // of kernels"
+        let ks = versal_encoder_mapping(128, 768, 3072);
+        let plios: usize = ks.iter().map(|k| k.plios).sum();
+        assert!(plios <= 39, "plios={plios}");
+        assert!(plios >= 20, "the budget should be visibly consumed");
+    }
+
+    #[test]
+    fn per_head_kernels_are_16us() {
+        let a = AieArray::vck190();
+        let ks = versal_encoder_mapping(128, 768, 3072);
+        let k4 = ks.iter().find(|k| k.name.starts_with("k4")).unwrap();
+        // one head on one AIE: 128*64*128 / 64 = 16,384 cycles
+        let per_head = a.matmul_latency_us(128, 64, 128, 1);
+        assert!((per_head - 16.384).abs() < 0.01);
+        assert_eq!(k4.aies, 12);
+    }
+
+    #[test]
+    fn oversubscription_rejected() {
+        let a = AieArray::vck190();
+        let mut ks = versal_encoder_mapping(128, 768, 3072);
+        ks[0].aies = 400;
+        assert!(validate_mapping(&ks, &a).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! §9: estimating I-BERT on AMD Versal ACAP devices.
+//!
+//! The paper itself does no Versal implementation — §9 is an analytical
+//! estimate validated with AMD engineers. We implement that estimator
+//! with every assumption exposed as a parameter, plus the modified-
+//! Galapagos mapping of Fig. 23 (kernel → AIE assignment with dmem and
+//! PLIO budget checks).
+
+pub mod aie;
+pub mod estimate;
+pub mod mapping;
+
+pub use aie::AieArray;
+pub use estimate::{estimate_encoder, estimate_full_model, VersalEstimate};
+pub use mapping::{versal_encoder_mapping, VersalKernel};

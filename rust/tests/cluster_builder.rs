@@ -1,0 +1,108 @@
+//! Cluster Builder integration: description file -> platform -> running
+//! simulation, plus IP generation outputs.
+
+use galapagos_llm::cluster_builder::description::BuildDescription;
+use galapagos_llm::cluster_builder::ip_generator;
+use galapagos_llm::cluster_builder::layer_builder::validate_fit;
+use galapagos_llm::eval::testbed::build_testbed;
+use galapagos_llm::fpga::resources::Device;
+use galapagos_llm::gmi::Out;
+use galapagos_llm::ibert::graph::{build_encoder, EncoderGraphParams};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::timing::PeConfig;
+use galapagos_llm::sim::packet::GlobalKernelId;
+
+#[test]
+fn description_to_running_simulation() {
+    let d = BuildDescription::parse(
+        r#"{"model": "ibert-base", "encoders": 2, "fpgas_per_switch": 6}"#,
+    )
+    .unwrap();
+    let cfg = d.testbed(16, 1, 12, Mode::Timing);
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    tb.sim.run().unwrap();
+    let (x, t, _) = tb.sim.trace.xti(tb.sink_id).unwrap();
+    assert!(t > x && x > 0);
+    // two encoders: 12 FPGAs + eval, split over 3 switches
+    assert_eq!(tb.spec.switch_of.len(), 13);
+}
+
+#[test]
+fn config_files_parse() {
+    for f in ["configs/ibert_poc.json", "configs/ibert_full.json"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+        let d = BuildDescription::load(&path).unwrap_or_else(|e| panic!("{f}: {e:#}"));
+        assert_eq!(d.model, "ibert-base");
+    }
+}
+
+#[test]
+fn custom_pe_config_affects_timing() {
+    // halve the linear MAC array => the encoder slows ~2x (the paper's
+    // resource/latency trade the Layer Description File exposes)
+    let d_fast = BuildDescription::parse(r#"{"pe": {"linear_macs": 768}}"#).unwrap();
+    let d_slow = BuildDescription::parse(r#"{"pe": {"linear_macs": 384, "ffn_macs": 1536}}"#).unwrap();
+    let run = |d: &BuildDescription| {
+        let mut tb = build_testbed(&d.testbed(64, 1, 12, Mode::Timing)).unwrap();
+        tb.sim.start();
+        tb.sim.run().unwrap();
+        tb.sim.trace.xti(tb.sink_id).unwrap().1
+    };
+    let t_fast = run(&d_fast);
+    let t_slow = run(&d_slow);
+    let ratio = t_slow as f64 / t_fast as f64;
+    assert!(ratio > 1.7 && ratio < 2.3, "halving MACs should ~double latency, got {ratio:.2}");
+}
+
+#[test]
+fn ip_generator_emits_full_build() {
+    let cluster = build_encoder(&EncoderGraphParams {
+        cluster_id: 0,
+        fpga_base: 0,
+        pe: PeConfig::default(),
+        mode: Mode::Timing,
+        out_dst: Out::to(GlobalKernelId::new(200, 2)),
+        max_seq: 128,
+        hidden: 768,
+        ffn: 3072,
+    })
+    .cluster;
+    let dir = std::env::temp_dir().join(format!("cb_int_{}", std::process::id()));
+    let n = ip_generator::generate(&cluster, &PeConfig::default(), Device::Xczu19eg, 128, 768,
+                                   3072, &dir)
+        .unwrap();
+    assert_eq!(n, 38);
+    assert!(dir.join("cluster_build.json").exists());
+    // every kernel has a Tcl script
+    for id in 0..38 {
+        assert!(dir.join(format!("kern_{id}.tcl")).exists(), "kern_{id}.tcl missing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn platform_fits_device_budgets() {
+    let d = BuildDescription::parse(r#"{"encoders": 12}"#).unwrap();
+    let cfg = d.testbed(128, 1, 12, Mode::Timing);
+    let tb = build_testbed(&cfg).unwrap();
+    // skip the eval cluster (not an encoder build)
+    let spec = galapagos_llm::galapagos::cluster::PlatformSpec {
+        clusters: tb.spec.clusters.iter().filter(|c| c.id != 200).cloned().collect(),
+        switch_of: tb.spec.switch_of.clone(),
+    };
+    validate_fit(&spec, &d.pe, d.device, d.max_seq, 768, 3072).unwrap();
+}
+
+#[test]
+fn routing_tables_built_for_all_fpgas() {
+    let d = BuildDescription::parse(r#"{"encoders": 3}"#).unwrap();
+    let tb = build_testbed(&d.testbed(8, 1, 12, Mode::Timing)).unwrap();
+    let tables = tb.spec.routing_tables().unwrap();
+    // 18 encoder FPGAs + 1 eval FPGA
+    assert_eq!(tables.len(), 19);
+    for rt in tables.values() {
+        // every FPGA knows the gateways of the other clusters (2N-1 rule)
+        assert!(rt.entries() >= 3);
+    }
+}

@@ -1,0 +1,84 @@
+//! Failure injection: the paper's §2.1/§6 operational claims.
+//!
+//! * UDP is unreliable ("it works well-enough in our testbed"): the lossy
+//!   network mode must degrade gracefully — packets vanish, the platform
+//!   does not wedge or corrupt.
+//! * Cluster-level fault isolation (§6): "When one FPGA fails in a
+//!   cluster, only the cluster that holds the failed FPGA needs to be
+//!   re-configured ... packets that are sent to this cluster will be
+//!   buffered in the cluster input buffer."
+
+use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::sim::fifo::Fifo;
+
+#[test]
+fn lossy_network_loses_work_but_never_wedges() {
+    let mut cfg = TestbedConfig::proof_of_concept(16, Mode::Timing);
+    cfg.inferences = 2;
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.fabric.drop_probability = 0.02; // 2% UDP loss
+    tb.sim.start();
+    tb.sim.run().unwrap(); // must terminate (no deadlock on missing rows)
+    assert!(tb.sim.fabric.stats.dropped > 0, "losses should have occurred");
+    // dropped rows stall the matrix-buffering kernels (attention waits
+    // for a K matrix that never completes) — deliveries shrink or vanish,
+    // but the event queue always drains and nothing is duplicated
+    let sink = tb.sink.lock().unwrap();
+    let delivered: u32 = sink.arrivals.values().map(|&(n, _)| n).sum();
+    assert!(
+        delivered <= 2 * 16,
+        "delivered more rows than were sent ({delivered})"
+    );
+}
+
+#[test]
+fn reliable_network_delivers_everything() {
+    // control for the test above: zero loss => exact delivery
+    let mut cfg = TestbedConfig::proof_of_concept(16, Mode::Timing);
+    cfg.inferences = 2;
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    tb.sim.run().unwrap();
+    assert_eq!(tb.sim.fabric.stats.dropped, 0);
+    let sink = tb.sink.lock().unwrap();
+    let delivered: u32 = sink.arrivals.values().map(|&(n, _)| n).sum();
+    assert_eq!(delivered, 2 * 16);
+}
+
+#[test]
+fn cluster_input_buffer_absorbs_a_stalled_cluster() {
+    // §6's fault-isolation mechanism in miniature: traffic to a cluster
+    // lands at its gateway; if the cluster stalls (reconfiguration), the
+    // gateway FIFO buffers the in-flight matrix — the paper's "one input
+    // buffer per cluster" sizing rule.
+    let fifo = Fifo::for_matrix(128, 768);
+    let mut f = fifo.clone();
+    // a full matrix arrives while the cluster is being reconfigured
+    for _ in 0..128 {
+        f.push(768);
+    }
+    assert_eq!(f.overflows, 0, "one-matrix buffer absorbs the burst");
+    assert_eq!(f.high_water, 128 * 768);
+    // anything beyond one matrix overflows — the rule is tight
+    f.push(768);
+    assert_eq!(f.overflows, 1);
+}
+
+#[test]
+fn fifo_highwater_is_tracked_in_running_sim() {
+    // the LN1 kernel's FIFO really does hold the residual matrix while
+    // attention drains (the behavior that motivates the paper's sizing)
+    let cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    tb.sim.run().unwrap();
+    let ln1 = galapagos_llm::sim::packet::GlobalKernelId::new(0, 29);
+    let fifo = tb.sim.fifo_of(ln1).unwrap();
+    assert!(
+        fifo.high_water >= 128 * 768,
+        "LN1 FIFO must have buffered the full residual matrix (high water {})",
+        fifo.high_water
+    );
+    assert_eq!(fifo.overflows, 0, "the cluster builder sized it correctly");
+}

@@ -1,0 +1,84 @@
+//! THE bit-exactness contract: rust integer compute vs the JAX reference,
+//! via golden vectors exported by `make artifacts`.
+
+use galapagos_llm::ibert::encoder::{encoder_forward, model_forward, rows_i8, rows_i64};
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+
+fn artifacts() -> std::path::PathBuf {
+    let d = ModelParams::default_dir();
+    assert!(
+        d.join("quantparams.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    d
+}
+
+#[test]
+fn encoder_stages_match_goldens_m128() {
+    let dir = artifacts();
+    let p = ModelParams::load(&dir).unwrap();
+    let x = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+    let st = encoder_forward(&p, &x);
+
+    let check_i8 = |name: &str, got: &[Vec<i8>]| {
+        let want = rows_i8(load_golden(&dir, name).unwrap().as_i8().unwrap());
+        assert_eq!(got.len(), want.len(), "{name}: row count");
+        for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{name}: first mismatch at row {r}");
+        }
+    };
+    check_i8("stage_q_m128", &st.q);
+    check_i8("stage_k_m128", &st.k);
+    check_i8("stage_v_m128", &st.v);
+    check_i8("stage_att_m128", &st.att);
+    check_i8("stage_ln1_m128", &st.ln1);
+    check_i8("stage_gelu_in_m128", &st.gelu_in);
+    check_i8("stage_mid_m128", &st.mid);
+    check_i8("stage_out_m128", &st.out);
+
+    // probs golden is [heads, m, m] int8
+    let probs_t = load_golden(&dir, "stage_probs_m128").unwrap();
+    let pt = probs_t.as_i8().unwrap();
+    assert_eq!(pt.dims, vec![12, 128, 128]);
+    for h in 0..12 {
+        for r in 0..128 {
+            for c in 0..128 {
+                let want = pt.data[(h * 128 + r) * 128 + c];
+                assert_eq!(
+                    st.probs[h][r][c], want,
+                    "probs mismatch at head {h} row {r} col {c}"
+                );
+            }
+        }
+    }
+
+    // wide residual stages are int64
+    let res = rows_i64(load_golden(&dir, "stage_res_m128").unwrap().as_i64().unwrap());
+    assert_eq!(st.res, res, "res stage");
+    let res2 = rows_i64(load_golden(&dir, "stage_res2_m128").unwrap().as_i64().unwrap());
+    assert_eq!(st.res2, res2, "res2 stage");
+}
+
+#[test]
+fn encoder_output_matches_goldens_all_lengths() {
+    let dir = artifacts();
+    let p = ModelParams::load(&dir).unwrap();
+    let x128 = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+    for m in [1usize, 8, 38, 64, 128] {
+        let want = rows_i8(
+            load_golden(&dir, &format!("encoder_out_m{m}")).unwrap().as_i8().unwrap(),
+        );
+        let got = encoder_forward(&p, &x128[..m]).out;
+        assert_eq!(got, want, "encoder output mismatch at m={m}");
+    }
+}
+
+#[test]
+fn model12_matches_golden() {
+    let dir = artifacts();
+    let p = ModelParams::load(&dir).unwrap();
+    let x128 = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+    let want = rows_i8(load_golden(&dir, "model12_out_m38").unwrap().as_i8().unwrap());
+    let got = model_forward(&p, &x128[..38], 12);
+    assert_eq!(got, want, "12-encoder model output mismatch");
+}

@@ -1,0 +1,351 @@
+//! Property-based tests on coordinator invariants: routing, GMI
+//! collectives, batching/pipelining, and the integer-op contracts.
+//! Uses the in-crate quickcheck mini-framework (seeded, replayable).
+
+use galapagos_llm::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
+use galapagos_llm::gmi::{GmiKernel, GmiOp, Out, ReduceFn, ScatterPolicy};
+use galapagos_llm::ibert::compute;
+use galapagos_llm::ibert::config::RequantSite;
+use galapagos_llm::prop_assert;
+use galapagos_llm::sim::engine::{KernelBehavior, KernelIo, START_TAG};
+use galapagos_llm::sim::fabric::{FpgaId, SwitchId};
+use galapagos_llm::sim::fifo::Fifo;
+use galapagos_llm::sim::packet::{GlobalKernelId, MsgMeta, Packet, Payload};
+use galapagos_llm::sim::Sim;
+use galapagos_llm::util::quickcheck::{check, check_with, Config};
+
+fn k(c: u8, n: u8) -> GlobalKernelId {
+    GlobalKernelId::new(c, n)
+}
+
+// ---------------------------------------------------------------------------
+// GMI collectives: scatter/gather roundtrips over random row sets
+// ---------------------------------------------------------------------------
+
+struct Tx {
+    dst: GlobalKernelId,
+    rows: Vec<Vec<i32>>,
+    stream: u8,
+}
+impl KernelBehavior for Tx {
+    fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == START_TAG {
+            let n = self.rows.len() as u32;
+            for (i, r) in self.rows.iter().enumerate() {
+                io.send(
+                    self.dst,
+                    MsgMeta { stream: self.stream, row: i as u32, rows: n, inference: 0 },
+                    Payload::RowI32(r.clone()),
+                );
+            }
+        }
+    }
+}
+
+struct Collect {
+    got: std::sync::Arc<std::sync::Mutex<Vec<(u32, Vec<i32>)>>>,
+}
+impl KernelBehavior for Collect {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+        if let Payload::RowI32(v) = pkt.payload {
+            self.got.lock().unwrap().push((pkt.meta.row, v));
+        }
+    }
+    fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+}
+
+#[test]
+fn prop_scatter_gather_roundtrip_preserves_rows() {
+    check_with(&Config { cases: 48, ..Default::default() }, "scatter-gather-roundtrip", |g| {
+        let n_rows = g.usize_in(1, 24);
+        let n_lanes = g.usize_in(1, 4);
+        let rows: Vec<Vec<i32>> =
+            (0..n_rows).map(|_| (0..3).map(|_| g.i64_in(-1000, 1000) as i32).collect()).collect();
+
+        let mut sim = Sim::new();
+        for f in 0..3 {
+            sim.fabric.attach(FpgaId(f), SwitchId(0));
+        }
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 20), Box::new(Tx {
+            dst: k(0, 2),
+            rows: rows.clone(),
+            stream: 0,
+        }))
+        .unwrap();
+        // scatter Block over n_lanes GMI lanes feeding one gather
+        let lanes: Vec<Out> = (0..n_lanes as u8).map(|i| Out::tagged(k(0, 3 + i), i)).collect();
+        sim.add_kernel(
+            k(0, 2),
+            FpgaId(0),
+            Fifo::new(1 << 20),
+            Box::new(GmiKernel::new(GmiOp::Scatter { dsts: lanes, policy: ScatterPolicy::Block })),
+        )
+        .unwrap();
+        for i in 0..n_lanes as u8 {
+            sim.add_kernel(
+                k(0, 3 + i),
+                FpgaId(1),
+                Fifo::new(1 << 20),
+                Box::new(GmiKernel::new(GmiOp::Forward { dst: Out::tagged(k(0, 10), i) })),
+            )
+            .unwrap();
+        }
+        sim.add_kernel(
+            k(0, 10),
+            FpgaId(1),
+            Fifo::new(1 << 20),
+            Box::new(GmiKernel::new(GmiOp::Gather { n_srcs: n_lanes, dst: Out::to(k(0, 11)) })),
+        )
+        .unwrap();
+        let got = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(k(0, 11), FpgaId(2), Fifo::new(1 << 20), Box::new(Collect {
+            got: got.clone(),
+        }))
+        .unwrap();
+        sim.start();
+        sim.run().map_err(|e| e.to_string())?;
+
+        let mut out = got.lock().unwrap().clone();
+        out.sort_by_key(|(r, _)| *r);
+        prop_assert!(out.len() == n_rows, "lost rows: {} != {}", out.len(), n_rows);
+        // Block scatter + rank-ordered gather preserves global row order
+        let vals: Vec<Vec<i32>> = out.into_iter().map(|(_, v)| v).collect();
+        prop_assert!(vals == rows, "rows reordered or corrupted");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reduce_equals_element_sum() {
+    check_with(&Config { cases: 32, ..Default::default() }, "reduce-sum", |g| {
+        let n_srcs = g.usize_in(2, 5);
+        let n_rows = g.usize_in(1, 8);
+        let width = g.usize_in(1, 6);
+        let data: Vec<Vec<Vec<i32>>> = (0..n_srcs)
+            .map(|_| {
+                (0..n_rows)
+                    .map(|_| (0..width).map(|_| g.i64_in(-10_000, 10_000) as i32).collect())
+                    .collect()
+            })
+            .collect();
+
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        for (s, rows) in data.iter().enumerate() {
+            sim.add_kernel(k(0, 1 + s as u8), FpgaId(0), Fifo::new(1 << 20), Box::new(Tx {
+                dst: k(0, 20),
+                rows: rows.clone(),
+                stream: s as u8,
+            }))
+            .unwrap();
+        }
+        sim.add_kernel(
+            k(0, 20),
+            FpgaId(0),
+            Fifo::new(1 << 20),
+            Box::new(GmiKernel::new(GmiOp::Reduce {
+                n_srcs,
+                dst: Out::to(k(0, 21)),
+                f: ReduceFn::Sum,
+            })),
+        )
+        .unwrap();
+        let got = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(k(0, 21), FpgaId(1), Fifo::new(1 << 20), Box::new(Collect {
+            got: got.clone(),
+        }))
+        .unwrap();
+        sim.start();
+        sim.run().map_err(|e| e.to_string())?;
+
+        let mut out = got.lock().unwrap().clone();
+        out.sort_by_key(|(r, _)| *r);
+        prop_assert!(out.len() == n_rows, "reduce emitted {} rows, want {n_rows}", out.len());
+        for (r, v) in out {
+            for (j, &x) in v.iter().enumerate() {
+                let want: i32 = data.iter().map(|src| src[r as usize][j]).sum();
+                prop_assert!(x == want, "row {r} col {j}: {x} != {want}");
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Routing invariants over random platforms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routing_tables_resolve_every_edge() {
+    check_with(&Config { cases: 48, ..Default::default() }, "routing-resolves", |g| {
+        let n_clusters = g.usize_in(1, 4);
+        let mut spec = PlatformSpec::default();
+        let mut next_fpga = 0usize;
+        for c in 0..n_clusters as u8 {
+            let n_kernels = g.usize_in(1, 6);
+            let mut kernels = Vec::new();
+            for id in 0..n_kernels as u8 {
+                let fpga = FpgaId(next_fpga + g.usize_in(0, 1));
+                kernels.push(KernelDecl {
+                    id,
+                    name: format!("k{id}"),
+                    ktype: if id == 0 { KernelType::Gateway } else { KernelType::Compute },
+                    fpga,
+                    dests: vec![],
+                    fifo_bytes: 64,
+                });
+            }
+            next_fpga += 2;
+            spec.clusters.push(ClusterSpec { id: c, kernels });
+        }
+        for f in 0..next_fpga {
+            spec.switch_of.insert(FpgaId(f), SwitchId(f / 6));
+        }
+        // random edges (any kernel to any kernel, any cluster)
+        let all: Vec<(u8, u8)> = spec
+            .clusters
+            .iter()
+            .flat_map(|c| c.kernels.iter().map(move |kn| (c.id, kn.id)))
+            .collect();
+        for _ in 0..g.usize_in(0, 10) {
+            let (sc, sk) = *g.pick(&all);
+            let (dc, dk) = *g.pick(&all);
+            let src = spec
+                .clusters
+                .iter_mut()
+                .find(|c| c.id == sc)
+                .unwrap()
+                .kernels
+                .iter_mut()
+                .find(|kn| kn.id == sk)
+                .unwrap();
+            src.dests.push(k(dc, dk));
+        }
+        spec.validate().map_err(|e| e.to_string())?;
+        let tables = spec.routing_tables().map_err(|e| e.to_string())?;
+
+        // every edge must be routable from the source FPGA's tables
+        for c in &spec.clusters {
+            for kn in &c.kernels {
+                let rt = &tables[&kn.fpga];
+                for d in &kn.dests {
+                    let mut pkt =
+                        Packet::new(k(c.id, kn.id), *d, MsgMeta::default(), Payload::Timing(8));
+                    if pkt.inter_cluster {
+                        pkt.gmi_dst = Some(d.kernel);
+                        pkt.dst = GlobalKernelId::gateway_of(d.cluster);
+                    }
+                    prop_assert!(
+                        rt.route(&pkt).is_ok(),
+                        "edge {} -> {} unroutable from {:?}",
+                        k(c.id, kn.id),
+                        d,
+                        kn.fpga
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Integer-op contracts (mirrors of the hypothesis tests on the python side)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_requant_monotone_and_bounded() {
+    check("requant8-monotone", |g| {
+        let m = g.i64_in(1 << 14, (1 << 15) - 1);
+        let n = g.i64_in(0, 30) as u32;
+        let site = RequantSite { m, n };
+        let a = g.i64_in(-1_000_000, 1_000_000);
+        let b = g.i64_in(-1_000_000, 1_000_000);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let qa = compute::requant8(lo, site);
+        let qb = compute::requant8(hi, site);
+        prop_assert!(qa <= qb, "requant not monotone: {lo}->{qa}, {hi}->{qb}");
+        prop_assert!((-127..=127).contains(&(qa as i64)), "out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_row_is_distribution() {
+    check_with(&Config { cases: 64, ..Default::default() }, "softmax-distribution", |g| {
+        let sm = galapagos_llm::ibert::config::SoftmaxParams {
+            q_ln2: 1051,
+            q_b: 2052,
+            q_c: 2_209_112,
+        };
+        let n = g.usize_in(1, 64);
+        let scores: Vec<i32> = (0..n).map(|_| g.i64_in(-100_000, 100_000) as i32).collect();
+        let p = compute::softmax_row(&scores, sm);
+        prop_assert!(p.iter().all(|&x| x >= 0), "negative probability");
+        let total: i64 = p.iter().map(|&x| x as i64).sum();
+        prop_assert!(total <= 127 + n as i64, "sum too large: {total}");
+        // argmax preserved
+        let am_in = scores.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let am_out = p.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        prop_assert!(
+            p[am_in] == p[am_out],
+            "argmax not preserved: in {am_in} out {am_out} ({:?})",
+            p
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layernorm_shift_invariant() {
+    // LayerNorm(x + c) == LayerNorm(x) up to integer rounding of the mean
+    check_with(&Config { cases: 64, ..Default::default() }, "ln-shift-invariance", |g| {
+        let ln = galapagos_llm::ibert::config::LayerNormParams { kg: 10 };
+        let h = 64;
+        let gamma = vec![1i64 << 10; h];
+        let beta = vec![0i64; h];
+        let x: Vec<i64> = (0..h).map(|_| g.i64_in(-100_000, 100_000)).collect();
+        let c = g.i64_in(-1_000_000, 1_000_000);
+        let shifted: Vec<i64> = x.iter().map(|&v| v + c).collect();
+        let a = compute::layernorm_row(&x, &gamma, &beta, ln);
+        let b = compute::layernorm_row(&shifted, &gamma, &beta, ln);
+        let max_diff =
+            a.iter().zip(&b).map(|(&p, &q)| (p as i64 - q as i64).abs()).max().unwrap();
+        prop_assert!(max_diff <= 1, "shift changed LN by {max_diff}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pipelining invariant: inferences never reorder through the encoder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pipelined_inferences_complete_in_order() {
+    use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+    use galapagos_llm::ibert::kernels::Mode;
+    check_with(&Config { cases: 10, ..Default::default() }, "pipeline-order", |g| {
+        let m = [1usize, 7, 16, 33][g.usize_in(0, 3)];
+        let inferences = g.usize_in(2, 4) as u32;
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        cfg.inferences = inferences;
+        let mut tb = build_testbed(&cfg).map_err(|e| e.to_string())?;
+        tb.sim.start();
+        tb.sim.run().map_err(|e| e.to_string())?;
+        let sink = tb.sink.lock().unwrap();
+        let mut last = 0u64;
+        for i in 0..inferences {
+            let &(count, t) = sink
+                .arrivals
+                .get(&i)
+                .ok_or_else(|| format!("inference {i} never completed"))?;
+            prop_assert!(count == m as u32, "inference {i}: {count}/{m} rows");
+            prop_assert!(t >= last, "inference {i} completed before {}", i.wrapping_sub(1));
+            last = t;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,56 @@
+//! PJRT runtime integration: the AOT artifacts (lowered from the Pallas
+//! path) executed from rust must agree bit-exactly with the goldens and
+//! with the native rust compute — closing the L1/L2/L3 loop.
+
+use galapagos_llm::ibert::encoder::{encoder_forward, rows_i8};
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
+
+fn artifacts() -> std::path::PathBuf {
+    let d = ModelParams::default_dir();
+    assert!(d.join("manifest.json").exists(), "run `make artifacts` first");
+    d
+}
+
+#[test]
+fn smoke_artifact_runs() {
+    let dir = artifacts();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text(dir.join("smoke.hlo.txt")).unwrap();
+    // smoke: pallas matmul_int8 of 2x2 int8
+    let x = galapagos_llm::runtime::lit_i8_2d(&[vec![1, 2], vec![3, 4]]).unwrap();
+    let w = galapagos_llm::runtime::lit_i8_2d(&[vec![1, 0], vec![0, 1]]).unwrap();
+    let out = module.execute(&[&x, &w]).unwrap();
+    let v: Vec<i32> = out[0].to_vec().unwrap();
+    assert_eq!(v, vec![1, 2, 3, 4], "identity matmul through the pallas artifact");
+}
+
+#[test]
+fn encoder_engine_matches_goldens_and_native() {
+    let dir = artifacts();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = EncoderEngine::load(&rt, &dir).unwrap();
+    let p = ModelParams::load(&dir).unwrap();
+    let x128 = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+
+    for m in [1usize, 38, 128] {
+        let got = engine.infer(&x128[..m]).unwrap();
+        let golden = rows_i8(
+            load_golden(&dir, &format!("encoder_out_m{m}")).unwrap().as_i8().unwrap(),
+        );
+        assert_eq!(got, golden, "PJRT encoder != golden at m={m}");
+        let native = encoder_forward(&p, &x128[..m]).out;
+        assert_eq!(got, native, "PJRT encoder != native rust at m={m}");
+    }
+}
+
+#[test]
+fn encoder_engine_model12() {
+    let dir = artifacts();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = EncoderEngine::load(&rt, &dir).unwrap();
+    let x128 = rows_i8(load_golden(&dir, "input_m128").unwrap().as_i8().unwrap());
+    let got = engine.infer_model(&x128[..38], 12).unwrap();
+    let golden = rows_i8(load_golden(&dir, "model12_out_m38").unwrap().as_i8().unwrap());
+    assert_eq!(got, golden, "PJRT 12-encoder model != golden");
+}

@@ -1,0 +1,123 @@
+//! End-to-end simulation tests: the six-FPGA encoder cluster produces
+//! bit-exact I-BERT output (functional mode) and paper-shaped timing.
+
+use std::sync::Arc;
+
+use galapagos_llm::eval::testbed::{build_testbed, run_encoder_once, TestbedConfig};
+use galapagos_llm::ibert::encoder::{encoder_forward, model_forward, rows_i8};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+
+fn artifacts() -> std::path::PathBuf {
+    let d = ModelParams::default_dir();
+    assert!(d.join("quantparams.json").exists(), "run `make artifacts` first");
+    d
+}
+
+fn golden_input(dir: &std::path::Path, m: usize) -> Vec<Vec<i8>> {
+    let x = rows_i8(load_golden(dir, "input_m128").unwrap().as_i8().unwrap());
+    x[..m].to_vec()
+}
+
+#[test]
+fn functional_sim_is_bit_exact_m38() {
+    let dir = artifacts();
+    let p = Arc::new(ModelParams::load(&dir).unwrap());
+    let m = 38;
+    let input = golden_input(&dir, m);
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
+    cfg.input = Some(Arc::new(input.clone()));
+    let (_x, _t, _i, tb) = run_encoder_once(&cfg).unwrap();
+    let got = tb.sink.lock().unwrap().matrix(0).expect("sink did not assemble the output");
+    let want = encoder_forward(&p, &input).out;
+    assert_eq!(got, want, "simulated six-FPGA encoder != reference");
+}
+
+#[test]
+fn functional_sim_pipelines_multiple_inferences() {
+    let dir = artifacts();
+    let p = Arc::new(ModelParams::load(&dir).unwrap());
+    let m = 16;
+    let input = golden_input(&dir, m);
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
+    cfg.inferences = 3;
+    cfg.input = Some(Arc::new(input.clone()));
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    tb.sim.run().unwrap();
+    let want = encoder_forward(&p, &input).out;
+    let sink = tb.sink.lock().unwrap();
+    for inf in 0..3 {
+        let got = sink.matrix(inf).unwrap_or_else(|| panic!("inference {inf} incomplete"));
+        assert_eq!(got, want, "inference {inf} mismatch");
+    }
+}
+
+#[test]
+fn two_encoder_chain_is_bit_exact() {
+    let dir = artifacts();
+    let p = Arc::new(ModelParams::load(&dir).unwrap());
+    let m = 8;
+    let input = golden_input(&dir, m);
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
+    cfg.encoders = 2;
+    cfg.input = Some(Arc::new(input.clone()));
+    let (_, _, _, tb) = run_encoder_once(&cfg).unwrap();
+    let got = tb.sink.lock().unwrap().matrix(0).unwrap();
+    let want = model_forward(&p, &input, 2);
+    assert_eq!(got, want, "two chained encoder clusters != reference");
+}
+
+#[test]
+fn timing_shape_matches_paper_m128() {
+    // Table 1 anchors: I ~ 767..800, T ~ 2x layer-0 (~200-240k), X/T ~ 0.5
+    let cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+    let (x, t, i, _) = run_encoder_once(&cfg).unwrap();
+    assert!(
+        (760..=820).contains(&i),
+        "output interval I should be ~767+-eps, got {i}"
+    );
+    assert!(
+        (190_000..=260_000).contains(&t),
+        "encoder total T should be ~210k cycles, got {t}"
+    );
+    let ratio = x as f64 / t as f64;
+    assert!(
+        (0.4..=0.65).contains(&ratio),
+        "X/T should be ~0.53 (paper), got {ratio:.3} (x={x}, t={t})"
+    );
+}
+
+#[test]
+fn timing_mode_agrees_with_functional_mode() {
+    // padding-free timing must not depend on payload contents
+    let dir = artifacts();
+    let p = Arc::new(ModelParams::load(&dir).unwrap());
+    let m = 16;
+    let (xt, tt, it, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
+    cfg.input = Some(Arc::new(golden_input(&dir, m)));
+    let (xf, tf, iff, _) = run_encoder_once(&cfg).unwrap();
+    assert_eq!((xt, tt, it), (xf, tf, iff), "timing must be payload-independent");
+}
+
+#[test]
+fn no_padding_latency_scales_with_m() {
+    // Fig. 16's shape: latency grows with sequence length, and short
+    // sequences are much cheaper than the padded maximum.
+    let mut prev_t = 0;
+    let mut t128 = 0;
+    let mut t16 = 0;
+    for m in [16usize, 32, 64, 128] {
+        let (_, t, _, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+        assert!(t > prev_t, "T must grow with m (m={m}: {t} <= {prev_t})");
+        prev_t = t;
+        if m == 128 {
+            t128 = t;
+        }
+        if m == 16 {
+            t16 = t;
+        }
+    }
+    assert!(t16 * 3 < t128, "no-padding short sequences must be much cheaper");
+}
