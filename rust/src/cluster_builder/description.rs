@@ -1,6 +1,13 @@
 //! Description files (§6.1): the Cluster Description File (how many
 //! clusters, partitioning) and Layer Description File (module configs,
 //! parallelisation / resource knobs) as one JSON document.
+//!
+//! Since the automatic placer landed, a description also names the model
+//! *shape* (hidden / ffn / heads — presets for `ibert-base` and
+//! `bert-large`, overridable field by field) and the *fleet* it should
+//! be mapped onto (`fleet_size` homogeneous FPGAs of `device`, or an
+//! explicit heterogeneous `devices` list, plus the `util_cap`
+//! place-and-route headroom).
 
 use anyhow::{bail, Context, Result};
 
@@ -11,7 +18,7 @@ use crate::ibert::timing::PeConfig;
 use crate::util::json::Json;
 
 /// Parsed build description.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BuildDescription {
     pub model: String,
     /// number of encoder clusters to build
@@ -20,6 +27,17 @@ pub struct BuildDescription {
     pub fpgas_per_switch: usize,
     pub device: Device,
     pub pe: PeConfig,
+    // -- model shape (placer input) -------------------------------------
+    pub hidden: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    // -- fleet (placer input) -------------------------------------------
+    /// explicit heterogeneous fleet; overrides device x fleet_size
+    pub devices: Option<Vec<Device>>,
+    /// homogeneous fleet size per encoder when `devices` is absent
+    pub fleet_size: usize,
+    /// utilisation headroom the packer targets (place-and-route margin)
+    pub util_cap: f64,
 }
 
 impl Default for BuildDescription {
@@ -31,6 +49,12 @@ impl Default for BuildDescription {
             fpgas_per_switch: 6,
             device: Device::Xczu19eg,
             pe: PeConfig::default(),
+            hidden: 768,
+            ffn: 3072,
+            heads: 12,
+            devices: None,
+            fleet_size: 6,
+            util_cap: 0.85,
         }
     }
 }
@@ -40,8 +64,15 @@ impl BuildDescription {
         let j = Json::parse(text).context("build description")?;
         let mut d = BuildDescription::default();
         if let Some(m) = j.get("model").and_then(Json::as_str) {
-            if m != "ibert-base" {
-                bail!("unknown model {m:?} (this reproduction builds ibert-base)");
+            match m {
+                "ibert-base" => {}
+                "bert-large" => {
+                    d.hidden = 1024;
+                    d.ffn = 4096;
+                    d.heads = 16;
+                    d.fleet_size = 12;
+                }
+                _ => bail!("unknown model {m:?} (presets: ibert-base, bert-large)"),
             }
             d.model = m.to_string();
         }
@@ -57,14 +88,44 @@ impl BuildDescription {
         d.encoders = geti("encoders", d.encoders)?;
         d.max_seq = geti("max_seq", d.max_seq)?;
         d.fpgas_per_switch = geti("fpgas_per_switch", d.fpgas_per_switch)?;
+        d.hidden = geti("hidden", d.hidden)?;
+        d.ffn = geti("ffn", d.ffn)?;
+        d.heads = geti("heads", d.heads)?;
+        d.fleet_size = geti("fleet_size", d.fleet_size)?;
         if d.encoders == 0 || d.encoders > 42 {
             bail!("encoders must be 1..=42 (256-cluster limit minus eval)");
         }
+        if d.heads == 0 || d.hidden == 0 || d.hidden % d.heads != 0 {
+            bail!("hidden ({}) must be a positive multiple of heads ({})", d.hidden, d.heads);
+        }
         match j.get("device").and_then(Json::as_str) {
             None => {}
-            Some("xczu19eg") => d.device = Device::Xczu19eg,
-            Some("xcvc1902") => d.device = Device::Xcvc1902,
-            Some(other) => bail!("unknown device {other:?}"),
+            Some(name) => match Device::from_name(name) {
+                Some(dev) => d.device = dev,
+                None => bail!("unknown device {name:?}"),
+            },
+        }
+        if let Some(list) = j.get("devices") {
+            let arr = list.as_arr().context("devices must be an array of device names")?;
+            let mut devs = Vec::new();
+            for v in arr {
+                let name = v.as_str().context("devices entries must be strings")?;
+                match Device::from_name(name) {
+                    Some(dev) => devs.push(dev),
+                    None => bail!("unknown device {name:?} in devices list"),
+                }
+            }
+            if devs.is_empty() {
+                bail!("devices list must not be empty");
+            }
+            d.devices = Some(devs);
+        }
+        if let Some(v) = j.get("util_cap") {
+            let cap = v.as_f64().context("util_cap must be a number")?;
+            if !(0.1..=1.0).contains(&cap) {
+                bail!("util_cap must be in [0.1, 1.0], got {cap}");
+            }
+            d.util_cap = cap;
         }
         if let Some(pe) = j.get("pe") {
             let getu = |name: &str, dflt: u64| -> Result<u64> {
@@ -93,6 +154,63 @@ impl BuildDescription {
         Self::parse(&text)
     }
 
+    /// Serialize back to description JSON (placements round-trip through
+    /// this form: `parse(d.to_json().pretty()) == d`).
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("model", self.model.as_str().into()),
+            ("encoders", self.encoders.into()),
+            ("max_seq", self.max_seq.into()),
+            ("fpgas_per_switch", self.fpgas_per_switch.into()),
+            ("device", self.device.name().into()),
+            ("hidden", self.hidden.into()),
+            ("ffn", self.ffn.into()),
+            ("heads", self.heads.into()),
+            ("fleet_size", self.fleet_size.into()),
+            ("util_cap", self.util_cap.into()),
+        ];
+        if let Some(devs) = &self.devices {
+            kv.push(("devices", Json::Arr(devs.iter().map(|d| d.name().into()).collect())));
+        }
+        kv.push((
+            "pe",
+            Json::obj(vec![
+                ("linear_macs", (self.pe.linear_macs as i64).into()),
+                ("ffn_macs", (self.pe.ffn_macs as i64).into()),
+                ("attn_pes", (self.pe.attn_pes as i64).into()),
+                ("smm_pes", (self.pe.smm_pes as i64).into()),
+                ("sm_simd", (self.pe.sm_simd as i64).into()),
+                ("ln_simd", (self.pe.ln_simd as i64).into()),
+                ("pipe_fill", (self.pe.pipe_fill as i64).into()),
+            ]),
+        ));
+        Json::obj(kv)
+    }
+
+    /// The model shape this description asks the placer to map.
+    pub fn shape(&self) -> crate::placer::ModelShape {
+        crate::placer::ModelShape {
+            hidden: self.hidden,
+            ffn: self.ffn,
+            heads: self.heads,
+            max_seq: self.max_seq,
+            ffn_split: 1,
+        }
+    }
+
+    /// The fleet available to one encoder cluster.
+    pub fn fleet(&self) -> crate::placer::Fleet {
+        let devices = match &self.devices {
+            Some(v) => v.clone(),
+            None => vec![self.device; self.fleet_size],
+        };
+        crate::placer::Fleet {
+            devices,
+            fpgas_per_switch: self.fpgas_per_switch,
+            util_cap: self.util_cap,
+        }
+    }
+
     /// Convert into a simulator testbed configuration.
     pub fn testbed(&self, m: usize, inferences: u32, interval: u64, mode: Mode) -> TestbedConfig {
         TestbedConfig {
@@ -104,6 +222,7 @@ impl BuildDescription {
             mode,
             fpgas_per_switch: self.fpgas_per_switch,
             input: None,
+            placement: None,
         }
     }
 }
@@ -130,6 +249,8 @@ mod tests {
         let d = BuildDescription::parse("{}").unwrap();
         assert_eq!(d.encoders, 1);
         assert_eq!(d.device, Device::Xczu19eg);
+        assert_eq!((d.hidden, d.ffn, d.heads), (768, 3072, 12));
+        assert_eq!(d.fleet().n_slots(), 6);
     }
 
     #[test]
@@ -139,5 +260,46 @@ mod tests {
         assert!(BuildDescription::parse(r#"{"encoders": 100}"#).is_err());
         assert!(BuildDescription::parse(r#"{"device": "stratix"}"#).is_err());
         assert!(BuildDescription::parse(r#"{"pe": {"attn_pes": "lots"}}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"hidden": 770}"#).is_err()); // 770 % 12 != 0
+        assert!(BuildDescription::parse(r#"{"devices": []}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"devices": ["stratix"]}"#).is_err());
+        assert!(BuildDescription::parse(r#"{"util_cap": 3.0}"#).is_err());
+    }
+
+    #[test]
+    fn bert_large_preset() {
+        let d = BuildDescription::parse(r#"{"model": "bert-large"}"#).unwrap();
+        assert_eq!((d.hidden, d.ffn, d.heads), (1024, 4096, 16));
+        assert_eq!(d.fleet_size, 12);
+        let shape = d.shape();
+        assert_eq!(shape.head_dim(), 64);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_parses() {
+        let d = BuildDescription::parse(
+            r#"{"devices": ["xcvc1902", "xcvc1902", "xczu19eg", "xczu19eg",
+                           "xczu19eg", "xczu19eg"], "util_cap": 0.9}"#,
+        )
+        .unwrap();
+        let f = d.fleet();
+        assert_eq!(f.n_slots(), 6);
+        assert_eq!(f.device(0), Device::Xcvc1902);
+        assert_eq!(f.device(5), Device::Xczu19eg);
+        assert!((f.util_cap - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn description_json_roundtrip() {
+        for src in [
+            "{}",
+            r#"{"model": "bert-large", "encoders": 3}"#,
+            r#"{"devices": ["xcvc1902", "xczu19eg"], "util_cap": 0.75,
+                "pe": {"linear_macs": 384}}"#,
+        ] {
+            let d = BuildDescription::parse(src).unwrap();
+            let back = BuildDescription::parse(&d.to_json().pretty()).unwrap();
+            assert_eq!(back, d, "round-trip failed for {src}");
+        }
     }
 }

@@ -5,12 +5,13 @@
 
 use crate::fpga::resources::{Device, ResourceBudget, ResourceUsage};
 use crate::galapagos::cluster::{ClusterSpec, KernelType, PlatformSpec};
-use crate::ibert::graph::ids;
 use crate::ibert::timing::PeConfig;
-use crate::sim::fifo::BRAM18_BYTES;
+use crate::placer::{fig14_role, role_usage, ModelShape};
 
 /// Resource estimate of one encoder kernel (by id), including its input
-/// FIFO (sized by graph::fifo_bytes) and held weights.
+/// and output FIFOs (§8.2.1) and held weights. The formulas live in the
+/// placer's role-based model (`placer::role_usage`); this keeps the
+/// Fig. 15 id-based view as a thin adapter over the 12-head layout.
 pub fn kernel_usage(
     id: u8,
     pe: &PeConfig,
@@ -19,48 +20,8 @@ pub fn kernel_usage(
     hidden: usize,
     ffn: usize,
 ) -> ResourceUsage {
-    use ids::*;
-    // the paper attaches matrix-sized AXIS FIFOs to the FRONT AND END of
-    // each kernel (8.2.1); output FIFO sized by the output stream
-    let fifo_in = crate::ibert::graph::fifo_bytes(id, max_seq, hidden, ffn);
-    let fifo_out = output_fifo_bytes(id, max_seq, hidden, ffn);
-    let fifo_bram = (fifo_in.div_ceil(BRAM18_BYTES) + fifo_out.div_ceil(BRAM18_BYTES)) as u64;
-    let d = (hidden / 12) as u64;
-    let base = match id {
-        GATEWAY => ResourceUsage { lut: 9_000, ff: 14_000, bram18: 8, dsp: 0 },
-        LINEAR_Q | LINEAR_K | LINEAR_V => {
-            pe.linear_usage(hidden as u64, hidden as u64, pe.linear_macs, dev)
-        }
-        PROJ => pe.linear_usage(hidden as u64, hidden as u64, pe.linear_macs, dev),
-        FFN1 => pe.linear_usage(hidden as u64, ffn as u64, pe.ffn_macs, dev),
-        FFN2 => pe.linear_usage(ffn as u64, hidden as u64, pe.ffn_macs, dev),
-        x if (ATTN_BASE..ATTN_BASE + 12).contains(&x) => {
-            pe.head_usage(max_seq as u64, d, pe.attn_pes, dev)
-        }
-        x if (SMM_BASE..SMM_BASE + 12).contains(&x) => {
-            pe.head_usage(max_seq as u64, d, pe.smm_pes, dev)
-        }
-        LN1 | LN2 => pe.pipe_usage(pe.ln_simd),
-        SCATTER_Q | SCATTER_K | SCATTER_V | GATHER | BCAST_LN1 => pe.gmi_usage(),
-        _ => ResourceUsage::default(),
-    };
-    base + ResourceUsage { bram18: fifo_bram, ..Default::default() }
-}
-
-/// Output-FIFO sizing: one matrix of the kernel's output stream.
-fn output_fifo_bytes(id: u8, max_seq: usize, hidden: usize, ffn: usize) -> usize {
-    use ids::*;
-    let d = hidden / 12;
-    match id {
-        GATEWAY => max_seq * hidden,
-        LINEAR_Q | LINEAR_K | LINEAR_V => max_seq * hidden,
-        x if (ATTN_BASE..ATTN_BASE + 12).contains(&x) => max_seq * max_seq, // prob rows
-        x if (SMM_BASE..SMM_BASE + 12).contains(&x) => max_seq * d,
-        PROJ | FFN2 => max_seq * 4 * hidden, // wide residual rows
-        FFN1 => max_seq * ffn,
-        LN1 | LN2 => max_seq * hidden,
-        _ => 8 * hidden, // GMI passthrough
-    }
+    let shape = ModelShape { hidden, ffn, heads: 12, max_seq, ffn_split: 1 };
+    role_usage(fig14_role(id), &shape, pe, dev)
 }
 
 /// Per-FPGA aggregate report (one Fig. 15 bar group).
@@ -161,7 +122,8 @@ mod tests {
 
     #[test]
     fn six_fpga_reports_and_all_fit() {
-        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        let reports =
+            fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
         assert_eq!(reports.len(), 6);
         for r in &reports {
             assert!(r.fits(), "FPGA {} over budget: {:?}", r.fpga, r.utilisation());
@@ -171,7 +133,8 @@ mod tests {
     #[test]
     fn bram_is_the_limiting_resource_on_weight_fpgas() {
         // Fig. 15: BRAM dominates (weights + matrix FIFOs on-chip)
-        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        let reports =
+            fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
         // FPGA 4 (FFN1) and FPGA 5 (FFN2 + LN2) hold the 768x3072 weights
         for r in reports.iter().filter(|r| r.fpga >= 4) {
             let (lut, ff, bram, _dsp) = r.utilisation();
@@ -183,7 +146,8 @@ mod tests {
     #[test]
     fn dsp_pattern_matches_paper_shape() {
         // §8.2.1: linear/FFN FPGAs use much more DSP than the head FPGAs
-        let reports = fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
+        let reports =
+            fpga_reports(&cluster(), &PeConfig::default(), Device::Xczu19eg, 128, 768, 3072);
         let dsp: Vec<f64> = reports.iter().map(|r| r.utilisation().3).collect();
         assert!(dsp[4] > 0.5 && dsp[5] > 0.5, "FFN FPGAs DSP-heavy: {dsp:?}");
         assert!(dsp[1] < dsp[4], "head FPGA lighter than FFN: {dsp:?}");

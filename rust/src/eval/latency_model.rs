@@ -14,14 +14,16 @@ pub struct LatencyComponents {
     pub i: u64,
 }
 
-/// Eq. 1 in cycles: T + (L-1)(X + d).
+/// Eq. 1 in cycles: T + (L-1)(X + d). `encoders == 0` saturates to the
+/// single-encoder term rather than wrapping `(L-1)` around u64::MAX
+/// (which release builds would happily do).
 pub fn estimate_model_latency_cycles(c: LatencyComponents, encoders: usize, d_cycles: u64) -> u64 {
-    c.t + (encoders as u64 - 1) * (c.x + d_cycles)
+    c.t + (encoders as u64).saturating_sub(1) * (c.x + d_cycles)
 }
 
 /// Eq. 1 in microseconds with d in us (the paper's d = 1.1 us).
 pub fn estimate_model_latency_us(c: LatencyComponents, encoders: usize, d_us: f64) -> f64 {
-    cycles_to_us(c.t) + (encoders as f64 - 1.0) * (cycles_to_us(c.x) + d_us)
+    cycles_to_us(c.t) + encoders.saturating_sub(1) as f64 * (cycles_to_us(c.x) + d_us)
 }
 
 /// The paper's own Table 1 measurements (cycles), used to cross-check our
@@ -83,6 +85,16 @@ mod tests {
     fn single_encoder_latency_is_t() {
         let c = LatencyComponents { x: 100, t: 200, i: 5 };
         assert_eq!(estimate_model_latency_cycles(c, 1, 220), 200);
+    }
+
+    #[test]
+    fn zero_encoders_saturates_instead_of_wrapping() {
+        // regression: `encoders as u64 - 1` wrapped in release builds,
+        // yielding a ~1.8e19-cycle "estimate" (or a debug panic)
+        let c = LatencyComponents { x: 100, t: 200, i: 5 };
+        assert_eq!(estimate_model_latency_cycles(c, 0, 220), 200);
+        assert!(estimate_model_latency_us(c, 0, 1.1) >= 0.0);
+        assert_eq!(estimate_model_latency_us(c, 0, 1.1), cycles_to_us(200));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
 use crate::gmi::gateway::{Gateway, GatewayConfig};
 use crate::gmi::Out;
-use crate::ibert::graph::{build_encoder, EncoderGraphParams};
+use crate::ibert::graph::EncoderGraphParams;
 use crate::ibert::kernels::{Mode, SinkData, SinkKernel, SourceKernel};
 use crate::ibert::timing::PeConfig;
 use crate::sim::engine::KernelBehavior;
@@ -43,6 +43,9 @@ pub struct TestbedConfig {
     pub fpgas_per_switch: usize,
     /// golden input rows for functional runs
     pub input: Option<Arc<Vec<Vec<i8>>>>,
+    /// kernel -> FPGA-slot override from the automatic placer (applied
+    /// to every encoder cluster); None = the paper's Fig. 14 mapping
+    pub placement: Option<Vec<usize>>,
 }
 
 impl TestbedConfig {
@@ -56,6 +59,7 @@ impl TestbedConfig {
             mode,
             fpgas_per_switch: 6,
             input: None,
+            placement: None,
         }
     }
 }
@@ -76,6 +80,20 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         Mode::Timing => (768, 3072, 128),
     };
 
+    // the placer may use more or fewer FPGAs per encoder than Fig. 14's six
+    let slots = match &cfg.placement {
+        Some(s) => {
+            anyhow::ensure!(
+                s.len() == crate::ibert::graph::KERNELS_PER_ENCODER,
+                "placement must cover all {} encoder kernels",
+                crate::ibert::graph::KERNELS_PER_ENCODER
+            );
+            s.clone()
+        }
+        None => crate::ibert::graph::default_slots(),
+    };
+    let slots_per_encoder = slots.iter().copied().max().map_or(1, |s| s + 1);
+
     let mut clusters = Vec::new();
     let mut behaviors: HashMap<GlobalKernelId, Box<dyn KernelBehavior>> = HashMap::new();
 
@@ -90,7 +108,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         };
         let gp = EncoderGraphParams {
             cluster_id: e as u8,
-            fpga_base: 6 * e,
+            fpga_base: slots_per_encoder * e,
             pe: cfg.pe,
             mode: cfg.mode.clone(),
             out_dst,
@@ -98,7 +116,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             hidden,
             ffn,
         };
-        let built = build_encoder(&gp);
+        let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
         for (id, b) in built.behaviors {
             behaviors.insert(GlobalKernelId::new(e as u8, id), b);
         }
@@ -106,7 +124,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
     }
 
     // evaluation cluster: gateway (forwarding) + source + sink on one FPGA
-    let eval_fpga = FpgaId(6 * cfg.encoders);
+    let eval_fpga = FpgaId(slots_per_encoder * cfg.encoders);
     let eval_cluster = ClusterSpec {
         id: EVAL_CLUSTER,
         kernels: vec![
@@ -156,7 +174,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
 
     // switch topology: fpgas_per_switch per switch, chained serially
     let mut switch_of = HashMap::new();
-    for f in 0..=(6 * cfg.encoders) {
+    for f in 0..=(slots_per_encoder * cfg.encoders) {
         switch_of.insert(FpgaId(f), SwitchId(f / cfg.fpgas_per_switch));
     }
 

@@ -23,6 +23,14 @@ impl GlueWorkload {
         GlueWorkload { max_len: 128, mean: 54.0, rng: Rng::new(seed) }
     }
 
+    /// A SQuAD-like reading-comprehension workload: long contexts
+    /// (mean ~152 tokens, max 384) — well past the GLUE lengths the
+    /// paper's 128-token build targets, to exercise placements of
+    /// long-sequence encoder builds.
+    pub fn squad(seed: u64) -> Self {
+        GlueWorkload { max_len: 384, mean: 152.0, rng: Rng::new(seed) }
+    }
+
     /// Sample one sequence length: log-normal-ish positive skew clipped to
     /// [1, max], rescaled so the empirical mean tracks `mean`.
     pub fn sample(&mut self) -> usize {
@@ -58,6 +66,19 @@ mod tests {
         let lens = w.sample_n(20_000);
         let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
         assert!((mean - 54.0).abs() < 3.0, "mean={mean}");
+    }
+
+    #[test]
+    fn squad_mean_is_about_152_and_exceeds_glue_max() {
+        let mut w = GlueWorkload::squad(9);
+        let lens = w.sample_n(20_000);
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!((mean - 152.0).abs() < 8.0, "mean={mean}");
+        assert!(lens.iter().all(|&l| (1..=384).contains(&l)));
+        // a meaningful fraction of requests is longer than the paper's
+        // 128-token build point — the reason long-seq builds exist
+        let over = lens.iter().filter(|&&l| l > 128).count();
+        assert!(over * 3 > lens.len(), "expected >1/3 of lengths over 128, got {over}");
     }
 
     #[test]

@@ -73,6 +73,22 @@ pub enum Device {
 }
 
 impl Device {
+    /// All devices the platform knows about (the CLI `info` catalog and
+    /// the placer's heterogeneous-fleet parsing iterate this).
+    pub const ALL: [Device; 2] = [Device::Xczu19eg, Device::Xcvc1902];
+
+    /// Stable lower-case name used in description files and plans.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Device::Xczu19eg => "xczu19eg",
+            Device::Xcvc1902 => "xcvc1902",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Device> {
+        Device::ALL.into_iter().find(|d| d.name() == name)
+    }
+
     pub fn budget(&self) -> ResourceBudget {
         match self {
             // XCZU19EG: 522,720 LUTs, 1,045,440 FFs, 1968 BRAM18, 1968 DSP48
@@ -129,6 +145,14 @@ mod tests {
         let b = Device::Xczu19eg.budget();
         let u = ResourceUsage { bram18: b.bram18 + 1, ..Default::default() };
         assert!(!u.fits(&b));
+    }
+
+    #[test]
+    fn device_names_roundtrip() {
+        for d in Device::ALL {
+            assert_eq!(Device::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Device::from_name("stratix"), None);
     }
 
     #[test]

@@ -52,6 +52,20 @@ impl ClusterSpec {
         self.kernels.iter().find(|k| k.id == id)
     }
 
+    /// Distinct FPGAs hosting this cluster's physical kernels, ascending
+    /// (virtual kernels live inside the gateway and are skipped).
+    pub fn fpgas(&self) -> Vec<FpgaId> {
+        let mut v: Vec<FpgaId> = self
+            .kernels
+            .iter()
+            .filter(|k| k.ktype != KernelType::Virtual)
+            .map(|k| k.fpga)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.kernels.len() > MAX_KERNELS_PER_CLUSTER {
             bail!(
@@ -65,7 +79,10 @@ impl ClusterSpec {
         ids.sort_unstable();
         for (i, id) in ids.iter().enumerate() {
             if *id as usize != i {
-                bail!("cluster {}: kernel ids are not contiguous 0..N-1 (saw {id} at {i})", self.id);
+                bail!(
+                    "cluster {}: kernel ids are not contiguous 0..N-1 (saw {id} at {i})",
+                    self.id
+                );
             }
         }
         // gateway convention
@@ -143,8 +160,8 @@ impl PlatformSpec {
                     if dc.kernel(d.kernel).is_none() {
                         bail!("edge c{}k{} -> {} targets unknown kernel", c.id, k.id, d);
                     }
-                    if d.cluster != c.id && dc.kernel(0).map(|g| g.ktype) != Some(KernelType::Gateway)
-                    {
+                    let gw = dc.kernel(0).map(|g| g.ktype);
+                    if d.cluster != c.id && gw != Some(KernelType::Gateway) {
                         bail!(
                             "edge c{}k{} -> {} crosses clusters but cluster {} has no gateway",
                             c.id,
@@ -262,6 +279,12 @@ mod tests {
     #[test]
     fn valid_platform_passes() {
         one_cluster().validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_fpgas_are_distinct_and_sorted() {
+        let p = one_cluster();
+        assert_eq!(p.clusters[0].fpgas(), vec![FpgaId(0), FpgaId(1)]);
     }
 
     #[test]

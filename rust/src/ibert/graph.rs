@@ -79,6 +79,13 @@ pub struct EncoderBuild {
     pub behaviors: HashMap<u8, Box<dyn KernelBehavior>>,
 }
 
+/// The paper's manual placement as a slot vector (what `build_encoder`
+/// uses; the placer subsystem produces alternatives for
+/// [`build_encoder_placed`]).
+pub fn default_slots() -> Vec<usize> {
+    (0..KERNELS_PER_ENCODER as u8).map(fpga_slot).collect()
+}
+
 /// FPGA placement of a kernel id within the 6-FPGA encoder (Fig. 18).
 pub fn fpga_slot(id: u8) -> usize {
     use ids::*;
@@ -150,10 +157,19 @@ pub fn dests_of(id: u8, cluster: u8, out_dst: Out) -> Vec<GlobalKernelId> {
     }
 }
 
-/// Build one encoder cluster: spec + behaviors (§7.2's Cluster Builder
-/// output for the I-BERT layer description).
+/// Build one encoder cluster with the paper's Fig. 14/18 placement.
 pub fn build_encoder(gp: &EncoderGraphParams) -> EncoderBuild {
+    build_encoder_placed(gp, &default_slots())
+}
+
+/// Build one encoder cluster: spec + behaviors (§7.2's Cluster Builder
+/// output for the I-BERT layer description). `slots[id]` gives each
+/// kernel's FPGA slot relative to `gp.fpga_base` — the hook through
+/// which the automatic placer drives the Cluster Builder and the
+/// simulator instead of the hard-coded paper mapping.
+pub fn build_encoder_placed(gp: &EncoderGraphParams, slots: &[usize]) -> EncoderBuild {
     use ids::*;
+    assert_eq!(slots.len(), KERNELS_PER_ENCODER, "placement must cover all 38 kernels");
     let c = gp.cluster_id;
     let k = |n: u8| GlobalKernelId::new(c, n);
 
@@ -245,7 +261,12 @@ pub fn build_encoder(gp: &EncoderGraphParams) -> EncoderBuild {
     // layer 4
     behaviors.insert(
         PROJ,
-        Box::new(LinearKernel::new(LinearWhich::Proj, Out::tagged(k(LN1), 0), gp.mode.clone(), &gp.pe)),
+        Box::new(LinearKernel::new(
+            LinearWhich::Proj,
+            Out::tagged(k(LN1), 0),
+            gp.mode.clone(),
+            &gp.pe,
+        )),
     );
     behaviors.insert(
         LN1,
@@ -261,11 +282,21 @@ pub fn build_encoder(gp: &EncoderGraphParams) -> EncoderBuild {
     // layer 5
     behaviors.insert(
         FFN1,
-        Box::new(LinearKernel::new(LinearWhich::Ffn1, Out::tagged(k(FFN2), 0), gp.mode.clone(), &gp.pe)),
+        Box::new(LinearKernel::new(
+            LinearWhich::Ffn1,
+            Out::tagged(k(FFN2), 0),
+            gp.mode.clone(),
+            &gp.pe,
+        )),
     );
     behaviors.insert(
         FFN2,
-        Box::new(LinearKernel::new(LinearWhich::Ffn2, Out::tagged(k(LN2), 0), gp.mode.clone(), &gp.pe)),
+        Box::new(LinearKernel::new(
+            LinearWhich::Ffn2,
+            Out::tagged(k(LN2), 0),
+            gp.mode.clone(),
+            &gp.pe,
+        )),
     );
     behaviors.insert(
         LN2,
@@ -279,7 +310,7 @@ pub fn build_encoder(gp: &EncoderGraphParams) -> EncoderBuild {
             id,
             name: kernel_name(id),
             ktype: kind_of(id),
-            fpga: FpgaId(gp.fpga_base + fpga_slot(id)),
+            fpga: FpgaId(gp.fpga_base + slots[id as usize]),
             dests: dests_of(id, c, gp.out_dst),
             fifo_bytes: fifo_bytes(id, gp.max_seq, gp.hidden, gp.ffn),
         });
@@ -344,11 +375,22 @@ mod tests {
     #[test]
     fn six_fpgas_used() {
         let b = build_encoder(&params());
-        let mut fpgas: Vec<usize> =
-            b.cluster.kernels.iter().map(|k| k.fpga.0).collect();
-        fpgas.sort_unstable();
-        fpgas.dedup();
+        let fpgas: Vec<usize> = b.cluster.fpgas().iter().map(|f| f.0).collect();
         assert_eq!(fpgas, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn custom_placement_overrides_the_paper_slots() {
+        // the placer's hook: same graph, arbitrary kernel -> slot map
+        let mut slots = default_slots();
+        slots[ids::FFN1 as usize] = 3; // co-locate FFN1 with layer 4
+        let b = build_encoder_placed(&params(), &slots);
+        let ffn1 = b.cluster.kernel(ids::FFN1).unwrap();
+        assert_eq!(ffn1.fpga.0, 3);
+        b.cluster.validate().unwrap();
+        // default build still follows Fig. 18
+        let d = build_encoder(&params());
+        assert_eq!(d.cluster.kernel(ids::FFN1).unwrap().fpga.0, 4);
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! * [`ibert`] — the test application (§7): bit-exact integer I-BERT
 //!   compute (mirrors `python/compile/iops.py`), the 38-kernel encoder
 //!   graph of Fig. 14, and the PE/tile timing models behind Table 1.
+//! * [`placer`] — the automatic partitioner/placer: maps arbitrary
+//!   encoder shapes onto heterogeneous multi-FPGA fleets (the tooling
+//!   the paper argues is the missing piece), reproducing the manual
+//!   Fig. 14 mapping for the paper's own configuration.
 //! * [`runtime`] — PJRT: loads the AOT HLO artifacts produced by
 //!   `python/compile/aot.py` and executes them on the request path.
 //! * [`versal`] — the §9 analytical AIE model and latency estimator.
@@ -33,6 +37,7 @@ pub mod fpga;
 pub mod galapagos;
 pub mod gmi;
 pub mod ibert;
+pub mod placer;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -3,11 +3,14 @@
 //! Subcommands:
 //!   tables    regenerate the paper's tables/figures (all or --only <id>)
 //!   simulate  run the encoder-chain simulator with custom parameters
+//!   plan      automatically place an encoder shape onto an FPGA fleet
+//!             (prints the mapping, per-FPGA fit, predicted latency; can
+//!             replay the placement through the simulator)
 //!   build     run the Cluster Builder on a description file (emits Tcl +
 //!             build manifest, validates resource fit)
 //!   versal    print the §9 Versal estimate
 //!   serve     serve requests through the PJRT encoder artifact
-//!   info      platform/calibration summary
+//!   info      platform/calibration summary + device catalog
 
 use std::sync::Arc;
 
@@ -22,6 +25,7 @@ use galapagos_llm::ibert::encoder::rows_i8;
 use galapagos_llm::ibert::graph::{build_encoder, EncoderGraphParams};
 use galapagos_llm::ibert::kernels::Mode;
 use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::placer;
 use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
 use galapagos_llm::sim::packet::GlobalKernelId;
 use galapagos_llm::util::cli::Args;
@@ -35,6 +39,8 @@ USAGE: galapagos-llm <command> [options]
 COMMANDS:
   tables    [--only table1|table2|table3|table4|table5|fig15|fig16|fig20|versal|scaling]
   simulate  [--m 128] [--encoders 1] [--inferences 1] [--functional] [--interval 12]
+  plan      [--config configs/ibert_poc.json] [--m <max_seq>] [--fleet N] [--out plan.json]
+            [--replay]   (replay needs the ibert-base shape)
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
   versal
   serve     [--requests 16] [--encoders 2]
@@ -46,6 +52,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("tables") => cmd_tables(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("plan") => cmd_plan(&args),
         Some("build") => cmd_build(&args),
         Some("versal") => cmd_versal(),
         Some("serve") => cmd_serve(&args),
@@ -145,10 +152,82 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg_path = args.str_or("config", "configs/ibert_poc.json");
+    let d = if std::path::Path::new(&cfg_path).exists() {
+        BuildDescription::load(&cfg_path)?
+    } else {
+        println!("note: {cfg_path} not found, planning the default ibert-base description");
+        BuildDescription::default()
+    };
+    let m = args.usize_or("m", d.max_seq)?;
+    let shape = d.shape();
+    let mut fleet = d.fleet();
+    if args.has("fleet") {
+        anyhow::ensure!(
+            d.devices.is_none(),
+            "--fleet would discard the config's explicit heterogeneous `devices` list; \
+             edit the config (or drop --fleet) instead"
+        );
+        let n = args.usize_or("fleet", fleet.n_slots())?;
+        fleet = placer::Fleet::homogeneous(d.device, n, d.fpgas_per_switch)
+            .with_util_cap(d.util_cap);
+    }
+    println!(
+        "placing {} (hidden={} ffn={} heads={} max_seq={}) onto {} FPGA(s), {} per switch",
+        d.model,
+        shape.hidden,
+        shape.ffn,
+        shape.heads,
+        shape.max_seq,
+        fleet.n_slots(),
+        fleet.fpgas_per_switch
+    );
+
+    let sol = placer::place(&shape, &d.pe, &fleet, &placer::SearchParams::for_m(m))?;
+    println!("{}", placer::report::placement_table(&sol.graph, &sol.placement, &fleet).render());
+    let reports = placer::validate::check(&sol.graph, &sol.placement, &fleet)?;
+    println!("{}", placer::report::utilisation_table(&reports).render());
+    let d_cycles = galapagos_llm::sim::params::INTER_SWITCH_LAT;
+    println!("{}", placer::report::latency_summary(&sol, m, d.encoders, d_cycles));
+
+    if let Some(out) = args.str_opt("out") {
+        let plan = placer::Plan {
+            shape: sol.graph.shape,
+            fleet: fleet.clone(),
+            placement: sol.placement.clone(),
+            predicted: sol.predicted,
+        };
+        std::fs::write(out, plan.to_json().pretty())?;
+        println!("plan written to {out}");
+    }
+
+    if args.bool_or("replay", false)? {
+        let (x, t, i) =
+            placer::validate::replay_in_simulator(&sol.graph, &sol.placement, &fleet, m)?;
+        let (px, pt) = (sol.predicted.x, sol.predicted.t);
+        println!(
+            "simulator replay @ m={m}: X = {x} ({:.2} us)  T = {t} ({:.2} us)  I = {i}",
+            cycles_to_us(x),
+            cycles_to_us(t)
+        );
+        println!(
+            "cost model error: X {:+.1}%  T {:+.1}%",
+            100.0 * (px as f64 - x as f64) / x as f64,
+            100.0 * (pt as f64 - t as f64) / t as f64
+        );
+    }
+    Ok(())
+}
+
 fn cmd_build(args: &Args) -> Result<()> {
     let cfg_path = args.str_or("config", "configs/ibert_poc.json");
     let out = args.str_or("out", "target/cluster_build");
     let d = BuildDescription::load(&cfg_path)?;
+    anyhow::ensure!(
+        d.heads == 12 && d.hidden == 768 && d.ffn == 3072,
+        "the Cluster Builder emits the 12-head I-BERT HLS kernels; use `plan` for other shapes"
+    );
     println!("cluster builder: {} encoder cluster(s), device {:?}", d.encoders, d.device);
     for e in 0..d.encoders {
         let built = build_encoder(&EncoderGraphParams {
@@ -158,13 +237,22 @@ fn cmd_build(args: &Args) -> Result<()> {
             mode: Mode::Timing,
             out_dst: Out::to(GlobalKernelId::new(200, 2)),
             max_seq: d.max_seq,
-            hidden: 768,
-            ffn: 3072,
+            hidden: d.hidden,
+            ffn: d.ffn,
         });
         let dir = format!("{out}/cluster_{e}");
-        let n = ip_generator::generate(&built.cluster, &d.pe, d.device, d.max_seq, 768, 3072, &dir)?;
+        let n = ip_generator::generate(
+            &built.cluster,
+            &d.pe,
+            d.device,
+            d.max_seq,
+            d.hidden,
+            d.ffn,
+            &dir,
+        )?;
         println!("  cluster {e}: {n} kernels -> {dir}/");
-        for r in layer_builder::fpga_reports(&built.cluster, &d.pe, d.device, d.max_seq, 768, 3072)
+        for r in
+            layer_builder::fpga_reports(&built.cluster, &d.pe, d.device, d.max_seq, d.hidden, d.ffn)
         {
             let (l, f, b, dsp) = r.utilisation();
             println!(
@@ -215,9 +303,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    println!("fabric clock: {} MHz (derived from the paper's Table 1/2)", FABRIC_CLOCK_HZ / 1_000_000);
+    let mhz = FABRIC_CLOCK_HZ / 1_000_000;
+    println!("fabric clock: {mhz} MHz (derived from the paper's Table 1/2)");
     println!("packet: one 768-byte row = 12 x 64-byte AXIS flits");
     println!("addressing: 256 clusters x 256 kernels (gateway-mediated inter-cluster)");
+    println!("\ndevice catalog (placer fleets mix these freely):");
+    for dev in galapagos_llm::fpga::resources::Device::ALL {
+        let b = dev.budget();
+        let shell = dev.shell_usage();
+        println!(
+            "  {:<9} LUT {:>9}  FF {:>9}  BRAM18 {:>5}  DSP {:>5}  \
+             ({} int8 MAC/DSP, shell ~{:.0}% LUT)",
+            dev.name(),
+            b.lut,
+            b.ff,
+            b.bram18,
+            b.dsp,
+            dev.int8_macs_per_dsp(),
+            100.0 * shell.lut as f64 / b.lut as f64
+        );
+    }
+    println!();
     let dir = ModelParams::default_dir();
     match ModelParams::load(&dir) {
         Ok(p) => println!(

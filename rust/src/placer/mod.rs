@@ -1,0 +1,917 @@
+//! Automatic partitioner/placer: map transformer encoder graphs onto
+//! heterogeneous multi-FPGA fleets.
+//!
+//! The paper's central argument is that multi-FPGA ML needs *tooling to
+//! describe a large application and map it to multiple FPGAs*; its own
+//! mapping (Fig. 14/18, 38 kernels over six XCZU19EG) was done by hand.
+//! This subsystem automates that step for any encoder shape:
+//!
+//! * [`KernelGraph::encoder`] generalises the Fig. 14 graph to any
+//!   `hidden` / `ffn` / `heads` / `max_seq` (plus a column/row-parallel
+//!   FFN split for shapes whose FFN weights exceed one device);
+//! * [`search::place`] packs kernels onto a [`Fleet`] (possibly mixing
+//!   device types) — greedy bin-packing seeded by the paper's layer
+//!   order, refined by local-search moves;
+//! * [`cost`] scores candidate placements with a communication-aware
+//!   latency model built on the same pacing/serialization rules as the
+//!   discrete-event simulator (`ibert::timing`, `sim::params`);
+//! * [`validate`] checks completeness + per-device `ResourceBudget` fit
+//!   and replays paper-shaped placements through the simulator;
+//! * [`report`] renders placements as the CLI's `plan` tables.
+//!
+//! For the paper's own configuration (I-BERT-base on six XCZU19EG behind
+//! one switch) the search reproduces the Fig. 14 mapping exactly.
+
+pub mod cost;
+pub mod report;
+pub mod search;
+pub mod validate;
+
+pub use cost::LatencyEstimate;
+pub use search::{place, PlacementSolution, SearchParams};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::fpga::resources::{Device, ResourceBudget, ResourceUsage};
+use crate::ibert::timing::PeConfig;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Model shape
+// ---------------------------------------------------------------------------
+
+/// Shape of one encoder layer — the placer's input is *any* shape, not
+/// just I-BERT-base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelShape {
+    pub hidden: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    /// sequence capacity of the hardware build (FIFO sizing)
+    pub max_seq: usize,
+    /// column/row-parallel split of the FFN linears (1 = the paper's
+    /// monolithic FFN kernels; >1 inserts a GMI Reduce for the partial
+    /// sums — the Layer Description File's parallelisation knob, §6.1)
+    pub ffn_split: usize,
+}
+
+impl ModelShape {
+    /// The paper's test application (§7): I-BERT-base.
+    pub fn ibert_base() -> Self {
+        ModelShape { hidden: 768, ffn: 3072, heads: 12, max_seq: 128, ffn_split: 1 }
+    }
+
+    /// BERT-large-shaped encoder (the first scaling target past the paper).
+    pub fn bert_large() -> Self {
+        ModelShape { hidden: 1024, ffn: 4096, heads: 16, max_seq: 128, ffn_split: 1 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn with_ffn_split(mut self, split: usize) -> Self {
+        self.ffn_split = split;
+        self
+    }
+
+    /// True iff this is the shape the Fig. 14 six-FPGA build implements
+    /// (and therefore the shape the simulator testbed can replay).
+    pub fn is_paper_shape(&self) -> bool {
+        self.hidden == 768 && self.ffn == 3072 && self.heads == 12 && self.ffn_split == 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.heads >= 1 && self.heads <= 64, "heads must be 1..=64");
+        ensure!(self.hidden >= self.heads, "hidden smaller than head count");
+        ensure!(self.hidden % self.heads == 0, "hidden must divide evenly into heads");
+        ensure!(self.ffn >= 1 && self.max_seq >= 1, "ffn and max_seq must be positive");
+        ensure!(self.ffn_split >= 1 && self.ffn_split <= 8, "ffn_split must be 1..=8");
+        ensure!(self.ffn % self.ffn_split == 0, "ffn must divide evenly into ffn_split");
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel roles and the generalized encoder graph
+// ---------------------------------------------------------------------------
+
+/// What a kernel *is* in the encoder pipeline — resource and timing
+/// models key off the role, never off hard-coded Fig. 14 ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelRole {
+    Gateway,
+    LinearQ,
+    LinearK,
+    LinearV,
+    AttnHead(usize),
+    SmmHead(usize),
+    Proj,
+    Ln1,
+    /// column-parallel FFN-1 part (hidden x ffn/split)
+    Ffn1(usize),
+    /// row-parallel FFN-2 part (ffn/split x hidden)
+    Ffn2(usize),
+    /// GMI Reduce combining the FFN-2 partial sums (only when split > 1)
+    FfnReduce,
+    Ln2,
+    ScatterQ,
+    ScatterK,
+    ScatterV,
+    GatherHeads,
+    BcastLn1,
+}
+
+impl KernelRole {
+    pub fn is_gmi(&self) -> bool {
+        matches!(
+            self,
+            KernelRole::ScatterQ
+                | KernelRole::ScatterK
+                | KernelRole::ScatterV
+                | KernelRole::GatherHeads
+                | KernelRole::BcastLn1
+                | KernelRole::FfnReduce
+        )
+    }
+
+    /// Pipeline stage in the paper's layer order (Fig. 14/18): the greedy
+    /// seed opens one FPGA per stage when the fleet allows it.
+    pub fn stage(&self) -> usize {
+        match self {
+            KernelRole::Gateway
+            | KernelRole::LinearQ
+            | KernelRole::LinearK
+            | KernelRole::LinearV
+            | KernelRole::ScatterQ
+            | KernelRole::ScatterK
+            | KernelRole::ScatterV => 0,
+            KernelRole::AttnHead(_) => 1,
+            KernelRole::SmmHead(_) | KernelRole::GatherHeads => 2,
+            KernelRole::Proj | KernelRole::Ln1 | KernelRole::BcastLn1 => 3,
+            KernelRole::Ffn1(_) => 4,
+            KernelRole::Ffn2(_) | KernelRole::FfnReduce | KernelRole::Ln2 => 5,
+        }
+    }
+}
+
+/// Number of pipeline stages (`KernelRole::stage` values).
+pub const N_STAGES: usize = 6;
+
+/// Per-edge payload size, resolved against the shape and the actual
+/// sequence length at estimation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeBytes {
+    /// one hidden-wide int8 row
+    Hidden,
+    /// one head segment (hidden / heads)
+    HeadDim,
+    /// one attention-probability row (m bytes)
+    SeqLen,
+    /// one FFN-part activation row (ffn / split)
+    FfnPart,
+    /// one wide residual-domain row (4 bytes per hidden element)
+    WideHidden,
+}
+
+/// One connection-graph edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelEdge {
+    pub src: u8,
+    pub dst: u8,
+    pub bytes: EdgeBytes,
+    /// the destination buffers this entire stream before emitting
+    /// anything (the K / V matrices of the attention kernels)
+    pub gating: bool,
+}
+
+/// One kernel node of the generalized encoder graph.
+#[derive(Debug, Clone)]
+pub struct KernelNode {
+    pub id: u8,
+    pub name: String,
+    pub role: KernelRole,
+}
+
+/// Kernel ids of a shape's encoder graph (contiguous, gateway = 0; for
+/// the paper shape these coincide with `ibert::graph::ids`).
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeIds {
+    pub gateway: u8,
+    pub linear_q: u8,
+    pub linear_k: u8,
+    pub linear_v: u8,
+    pub attn_base: u8,
+    pub smm_base: u8,
+    pub proj: u8,
+    pub ln1: u8,
+    pub ffn1_base: u8,
+    pub ffn2_base: u8,
+    pub ln2: u8,
+    pub scatter_q: u8,
+    pub scatter_k: u8,
+    pub scatter_v: u8,
+    pub gather: u8,
+    pub bcast: u8,
+    pub reduce: Option<u8>,
+    pub n: usize,
+}
+
+impl ModelShape {
+    pub fn ids(&self) -> ShapeIds {
+        let h = self.heads as u8;
+        let s = self.ffn_split as u8;
+        let ffn1_base = 6 + 2 * h;
+        let ffn2_base = ffn1_base + s;
+        let ln2 = ffn2_base + s;
+        ShapeIds {
+            gateway: 0,
+            linear_q: 1,
+            linear_k: 2,
+            linear_v: 3,
+            attn_base: 4,
+            smm_base: 4 + h,
+            proj: 4 + 2 * h,
+            ln1: 5 + 2 * h,
+            ffn1_base,
+            ffn2_base,
+            ln2,
+            scatter_q: ln2 + 1,
+            scatter_k: ln2 + 2,
+            scatter_v: ln2 + 3,
+            gather: ln2 + 4,
+            bcast: ln2 + 5,
+            reduce: if s > 1 { Some(ln2 + 6) } else { None },
+            n: 12 + 2 * self.heads + 2 * self.ffn_split + usize::from(s > 1),
+        }
+    }
+}
+
+/// The placer's working representation: kernels + edges + shape/PE.
+#[derive(Debug, Clone)]
+pub struct KernelGraph {
+    pub shape: ModelShape,
+    pub pe: PeConfig,
+    pub nodes: Vec<KernelNode>,
+    pub edges: Vec<KernelEdge>,
+    /// kernel ids in the paper's layer order (the greedy seed order)
+    order: Vec<u8>,
+    /// in-edge indices (into `edges`) per kernel id
+    in_edge_idx: Vec<Vec<usize>>,
+    /// topological order of kernel ids — precomputed so the cost model
+    /// can score thousands of candidate placements without re-sorting
+    topo: Vec<usize>,
+}
+
+impl KernelGraph {
+    /// Build the generalized encoder graph for a shape.
+    pub fn encoder(shape: ModelShape, pe: PeConfig) -> Result<KernelGraph> {
+        shape.validate()?;
+        let ids = shape.ids();
+        ensure!(ids.n <= 255, "encoder graph exceeds the 256-kernel cluster limit");
+
+        let mut nodes: Vec<Option<KernelNode>> = vec![None; ids.n];
+        let mut add = |id: u8, role: KernelRole, name: String| {
+            nodes[id as usize] = Some(KernelNode { id, name, role });
+        };
+        add(ids.gateway, KernelRole::Gateway, "gateway+broadcast".into());
+        add(ids.linear_q, KernelRole::LinearQ, "linear-q+quant".into());
+        add(ids.linear_k, KernelRole::LinearK, "linear-k+quant".into());
+        add(ids.linear_v, KernelRole::LinearV, "linear-v+quant".into());
+        for h in 0..shape.heads {
+            add(
+                ids.attn_base + h as u8,
+                KernelRole::AttnHead(h),
+                format!("dot-product+softmax-h{h}"),
+            );
+            add(ids.smm_base + h as u8, KernelRole::SmmHead(h), format!("softmax-mm+quant-h{h}"));
+        }
+        add(ids.proj, KernelRole::Proj, "linear-proj+quant".into());
+        add(ids.ln1, KernelRole::Ln1, "add+layernorm-1".into());
+        for p in 0..shape.ffn_split {
+            let suffix = if shape.ffn_split > 1 { format!("-p{p}") } else { String::new() };
+            add(ids.ffn1_base + p as u8, KernelRole::Ffn1(p), format!("linear-ffn1+gelu{suffix}"));
+            add(ids.ffn2_base + p as u8, KernelRole::Ffn2(p), format!("linear-ffn2+quant{suffix}"));
+        }
+        add(ids.ln2, KernelRole::Ln2, "add+layernorm-2".into());
+        add(ids.scatter_q, KernelRole::ScatterQ, "gmi-scatter-q".into());
+        add(ids.scatter_k, KernelRole::ScatterK, "gmi-scatter-k".into());
+        add(ids.scatter_v, KernelRole::ScatterV, "gmi-scatter-v".into());
+        add(ids.gather, KernelRole::GatherHeads, "gmi-gather-heads".into());
+        add(ids.bcast, KernelRole::BcastLn1, "gmi-broadcast-ln1".into());
+        if let Some(r) = ids.reduce {
+            add(r, KernelRole::FfnReduce, "gmi-reduce-ffn2".into());
+        }
+        let nodes: Vec<KernelNode> = nodes
+            .into_iter()
+            .enumerate()
+            .map(|(i, n)| n.unwrap_or_else(|| panic!("kernel id {i} unassigned")))
+            .collect();
+
+        let mut edges = Vec::new();
+        let mut e = |src: u8, dst: u8, bytes: EdgeBytes, gating: bool| {
+            edges.push(KernelEdge { src, dst, bytes, gating });
+        };
+        e(ids.gateway, ids.linear_q, EdgeBytes::Hidden, false);
+        e(ids.gateway, ids.linear_k, EdgeBytes::Hidden, false);
+        e(ids.gateway, ids.linear_v, EdgeBytes::Hidden, false);
+        e(ids.gateway, ids.ln1, EdgeBytes::Hidden, false); // residual
+        e(ids.linear_q, ids.scatter_q, EdgeBytes::Hidden, false);
+        e(ids.linear_k, ids.scatter_k, EdgeBytes::Hidden, false);
+        e(ids.linear_v, ids.scatter_v, EdgeBytes::Hidden, false);
+        for h in 0..shape.heads as u8 {
+            e(ids.scatter_q, ids.attn_base + h, EdgeBytes::HeadDim, false);
+            e(ids.scatter_k, ids.attn_base + h, EdgeBytes::HeadDim, true);
+            e(ids.scatter_v, ids.smm_base + h, EdgeBytes::HeadDim, true);
+            e(ids.attn_base + h, ids.smm_base + h, EdgeBytes::SeqLen, false);
+            e(ids.smm_base + h, ids.gather, EdgeBytes::HeadDim, false);
+        }
+        e(ids.gather, ids.proj, EdgeBytes::Hidden, false);
+        e(ids.proj, ids.ln1, EdgeBytes::WideHidden, false);
+        e(ids.ln1, ids.bcast, EdgeBytes::Hidden, false);
+        for p in 0..shape.ffn_split as u8 {
+            e(ids.bcast, ids.ffn1_base + p, EdgeBytes::Hidden, false);
+            e(ids.ffn1_base + p, ids.ffn2_base + p, EdgeBytes::FfnPart, false);
+        }
+        e(ids.bcast, ids.ln2, EdgeBytes::Hidden, false); // residual
+        match ids.reduce {
+            None => e(ids.ffn2_base, ids.ln2, EdgeBytes::WideHidden, false),
+            Some(r) => {
+                for p in 0..shape.ffn_split as u8 {
+                    e(ids.ffn2_base + p, r, EdgeBytes::WideHidden, false);
+                }
+                e(r, ids.ln2, EdgeBytes::WideHidden, false);
+            }
+        }
+
+        // placement order: the paper's layer order within each stage
+        let mut order = vec![
+            ids.gateway,
+            ids.linear_q,
+            ids.linear_k,
+            ids.linear_v,
+            ids.scatter_q,
+            ids.scatter_k,
+            ids.scatter_v,
+        ];
+        order.extend((0..shape.heads as u8).map(|h| ids.attn_base + h));
+        order.extend((0..shape.heads as u8).map(|h| ids.smm_base + h));
+        order.push(ids.gather);
+        order.extend([ids.proj, ids.ln1, ids.bcast]);
+        order.extend((0..shape.ffn_split as u8).map(|p| ids.ffn1_base + p));
+        order.extend((0..shape.ffn_split as u8).map(|p| ids.ffn2_base + p));
+        if let Some(r) = ids.reduce {
+            order.push(r);
+        }
+        order.push(ids.ln2);
+
+        // adjacency + topological order (Kahn), computed once
+        let n = ids.n;
+        let mut indeg = vec![0usize; n];
+        let mut out_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut in_edge_idx: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, edge) in edges.iter().enumerate() {
+            indeg[edge.dst as usize] += 1;
+            out_adj[edge.src as usize].push(i);
+            in_edge_idx[edge.dst as usize].push(i);
+        }
+        let mut topo: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut head = 0;
+        while head < topo.len() {
+            let u = topo[head];
+            head += 1;
+            for &ei in &out_adj[u] {
+                let v = edges[ei].dst as usize;
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    topo.push(v);
+                }
+            }
+        }
+        ensure!(topo.len() == n, "encoder graph has a cycle");
+
+        Ok(KernelGraph { shape, pe, nodes, edges, order, in_edge_idx, topo })
+    }
+
+    pub fn n_kernels(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: u8) -> &KernelNode {
+        &self.nodes[id as usize]
+    }
+
+    /// Kernel ids in placement (paper layer) order.
+    pub fn placement_order(&self) -> &[u8] {
+        &self.order
+    }
+
+    /// Kernel ids (as indices) in topological order.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Indices into `edges` of kernel `id`'s inbound edges.
+    pub fn in_edge_indices(&self, id: u8) -> &[usize] {
+        &self.in_edge_idx[id as usize]
+    }
+
+    /// Kernel ids grouped by pipeline stage, in placement order.
+    pub fn stages(&self) -> Vec<Vec<u8>> {
+        let mut out = vec![Vec::new(); N_STAGES];
+        for &id in &self.order {
+            out[self.node(id).role.stage()].push(id);
+        }
+        out
+    }
+
+    /// Payload bytes of one packet on `edge` at sequence length `m`.
+    pub fn edge_bytes(&self, edge: &KernelEdge, m: usize) -> usize {
+        match edge.bytes {
+            EdgeBytes::Hidden => self.shape.hidden,
+            EdgeBytes::HeadDim => self.shape.head_dim(),
+            EdgeBytes::SeqLen => m,
+            EdgeBytes::FfnPart => self.shape.ffn / self.shape.ffn_split,
+            EdgeBytes::WideHidden => 4 * self.shape.hidden,
+        }
+    }
+
+    /// Resource estimate of kernel `id` on a device (FIFOs included).
+    pub fn usage(&self, id: u8, dev: Device) -> ResourceUsage {
+        role_usage(self.node(id).role, &self.shape, &self.pe, dev)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Role-based resource model (single source of truth; the Fig. 15
+// id-based estimator in cluster_builder::layer_builder delegates here)
+// ---------------------------------------------------------------------------
+
+/// Input-FIFO capacity of a role, generalizing `ibert::graph::fifo_bytes`
+/// (§8.2.1: "large enough to hold at least one matrix").
+pub fn role_fifo_in_bytes(role: KernelRole, shape: &ModelShape) -> usize {
+    let (m, h, f) = (shape.max_seq, shape.hidden, shape.ffn);
+    let d = shape.head_dim();
+    match role {
+        KernelRole::Gateway => m * h,
+        KernelRole::LinearQ | KernelRole::LinearK | KernelRole::LinearV => m * h,
+        KernelRole::AttnHead(_) => 2 * m * d,
+        KernelRole::SmmHead(_) => m * (m + d),
+        KernelRole::Proj => m * h,
+        // LN holds the residual matrix while the main path drains
+        KernelRole::Ln1 | KernelRole::Ln2 => m * h + 16 * 4 * h,
+        KernelRole::Ffn1(_) => m * h,
+        KernelRole::Ffn2(_) => m * f / shape.ffn_split,
+        KernelRole::FfnReduce => m * 4 * h,
+        KernelRole::ScatterQ | KernelRole::ScatterK | KernelRole::ScatterV => 8 * h,
+        KernelRole::GatherHeads => m * h,
+        KernelRole::BcastLn1 => 8 * h,
+    }
+}
+
+/// Output-FIFO capacity of a role (one matrix of the output stream).
+pub fn role_fifo_out_bytes(role: KernelRole, shape: &ModelShape) -> usize {
+    let (m, h, f) = (shape.max_seq, shape.hidden, shape.ffn);
+    let d = shape.head_dim();
+    match role {
+        KernelRole::Gateway => m * h,
+        KernelRole::LinearQ | KernelRole::LinearK | KernelRole::LinearV => m * h,
+        KernelRole::AttnHead(_) => m * m, // probability rows
+        KernelRole::SmmHead(_) => m * d,
+        KernelRole::Proj | KernelRole::Ffn2(_) => m * 4 * h, // wide residual rows
+        KernelRole::Ffn1(_) => m * f / shape.ffn_split,
+        KernelRole::Ln1 | KernelRole::Ln2 => m * h,
+        KernelRole::FfnReduce => m * 4 * h,
+        KernelRole::ScatterQ
+        | KernelRole::ScatterK
+        | KernelRole::ScatterV
+        | KernelRole::GatherHeads
+        | KernelRole::BcastLn1 => 8 * h,
+    }
+}
+
+/// Resource estimate of a role on `dev`: compute base + both FIFOs.
+pub fn role_usage(
+    role: KernelRole,
+    shape: &ModelShape,
+    pe: &PeConfig,
+    dev: Device,
+) -> ResourceUsage {
+    use crate::sim::fifo::BRAM18_BYTES;
+    let (h, f) = (shape.hidden as u64, shape.ffn as u64);
+    let d = shape.head_dim() as u64;
+    let m = shape.max_seq as u64;
+    let fpart = f / shape.ffn_split as u64;
+    let base = match role {
+        KernelRole::Gateway => ResourceUsage { lut: 9_000, ff: 14_000, bram18: 8, dsp: 0 },
+        KernelRole::LinearQ | KernelRole::LinearK | KernelRole::LinearV | KernelRole::Proj => {
+            pe.linear_usage(h, h, pe.linear_macs, dev)
+        }
+        KernelRole::Ffn1(_) => pe.linear_usage(h, fpart, pe.ffn_macs, dev),
+        KernelRole::Ffn2(_) => pe.linear_usage(fpart, h, pe.ffn_macs, dev),
+        KernelRole::AttnHead(_) => pe.head_usage(m, d, pe.attn_pes, dev),
+        KernelRole::SmmHead(_) => pe.head_usage(m, d, pe.smm_pes, dev),
+        KernelRole::Ln1 | KernelRole::Ln2 => pe.pipe_usage(pe.ln_simd),
+        KernelRole::ScatterQ
+        | KernelRole::ScatterK
+        | KernelRole::ScatterV
+        | KernelRole::GatherHeads
+        | KernelRole::BcastLn1
+        | KernelRole::FfnReduce => pe.gmi_usage(),
+    };
+    let fifo_in = role_fifo_in_bytes(role, shape);
+    let fifo_out = role_fifo_out_bytes(role, shape);
+    let fifo_bram = (fifo_in.div_ceil(BRAM18_BYTES) + fifo_out.div_ceil(BRAM18_BYTES)) as u64;
+    base + ResourceUsage { bram18: fifo_bram, ..Default::default() }
+}
+
+/// Role of a Fig. 14 kernel id (the fixed 12-head, split-1 layout of
+/// `ibert::graph::ids`). Panics on unknown ids, like the seed estimator.
+pub fn fig14_role(id: u8) -> KernelRole {
+    use crate::ibert::graph::ids::*;
+    match id {
+        GATEWAY => KernelRole::Gateway,
+        LINEAR_Q => KernelRole::LinearQ,
+        LINEAR_K => KernelRole::LinearK,
+        LINEAR_V => KernelRole::LinearV,
+        x if (ATTN_BASE..ATTN_BASE + 12).contains(&x) => {
+            KernelRole::AttnHead((x - ATTN_BASE) as usize)
+        }
+        x if (SMM_BASE..SMM_BASE + 12).contains(&x) => KernelRole::SmmHead((x - SMM_BASE) as usize),
+        PROJ => KernelRole::Proj,
+        LN1 => KernelRole::Ln1,
+        FFN1 => KernelRole::Ffn1(0),
+        FFN2 => KernelRole::Ffn2(0),
+        LN2 => KernelRole::Ln2,
+        SCATTER_Q => KernelRole::ScatterQ,
+        SCATTER_K => KernelRole::ScatterK,
+        SCATTER_V => KernelRole::ScatterV,
+        GATHER => KernelRole::GatherHeads,
+        BCAST_LN1 => KernelRole::BcastLn1,
+        _ => panic!("unknown encoder kernel id {id}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet (device catalog + fabric topology)
+// ---------------------------------------------------------------------------
+
+/// The FPGAs available to one encoder cluster, in slot order, plus the
+/// switch topology they hang off (`sim`'s serially-chained 100G switches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fleet {
+    /// device of each FPGA slot — heterogeneous fleets mix entries
+    pub devices: Vec<Device>,
+    /// FPGAs per top-of-rack switch (Fig. 17: six Sidewinders per switch)
+    pub fpgas_per_switch: usize,
+    /// utilisation headroom for place-and-route: the packer refuses to
+    /// fill any resource beyond this fraction (the paper's own FPGA 5
+    /// peaks at ~81% BRAM, so the default leaves a thin margin above it)
+    pub util_cap: f64,
+}
+
+impl Fleet {
+    pub fn homogeneous(dev: Device, n: usize, fpgas_per_switch: usize) -> Fleet {
+        Fleet { devices: vec![dev; n], fpgas_per_switch: fpgas_per_switch.max(1), util_cap: 0.85 }
+    }
+
+    /// The paper's testbed: six XCZU19EG behind one 100G switch.
+    pub fn paper() -> Fleet {
+        Fleet::homogeneous(Device::Xczu19eg, 6, 6)
+    }
+
+    pub fn with_util_cap(mut self, cap: f64) -> Fleet {
+        self.util_cap = cap.clamp(0.1, 1.0);
+        self
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, slot: usize) -> Device {
+        self.devices[slot]
+    }
+
+    pub fn switch_of(&self, slot: usize) -> usize {
+        slot / self.fpgas_per_switch
+    }
+
+    /// Static per-FPGA overhead: shell ("hypervisor") + routing tables.
+    pub fn base_usage(&self, slot: usize) -> ResourceUsage {
+        let rt = crate::galapagos::RoutingTables::new(0).bram18() as u64;
+        self.device(slot).shell_usage() + ResourceUsage { bram18: rt, ..Default::default() }
+    }
+
+    pub fn budget(&self, slot: usize) -> ResourceBudget {
+        self.device(slot).budget()
+    }
+
+    /// Budget scaled by the utilisation cap (the packer's fit target).
+    pub fn capped_budget(&self, slot: usize) -> ResourceBudget {
+        let b = self.budget(slot);
+        let s = |x: u64| (x as f64 * self.util_cap).floor() as u64;
+        ResourceBudget { lut: s(b.lut), ff: s(b.ff), bram18: s(b.bram18), dsp: s(b.dsp) }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.devices.is_empty(), "fleet has no FPGAs");
+        ensure!(self.fpgas_per_switch >= 1, "fpgas_per_switch must be positive");
+        ensure!(
+            self.util_cap > 0.0 && self.util_cap <= 1.0,
+            "util_cap must be in (0, 1], got {}",
+            self.util_cap
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement
+// ---------------------------------------------------------------------------
+
+/// A kernel -> FPGA-slot assignment (slot indices are fleet-relative;
+/// the Cluster Builder adds each encoder's `fpga_base`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub slot_of: Vec<usize>,
+}
+
+impl Placement {
+    pub fn n_slots(&self) -> usize {
+        self.slot_of.iter().copied().max().map_or(0, |s| s + 1)
+    }
+
+    /// Distinct slots actually hosting kernels, ascending.
+    pub fn used_slots(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.slot_of.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn kernels_on(&self, slot: usize) -> Vec<u8> {
+        (0..self.slot_of.len() as u8).filter(|&k| self.slot_of[k as usize] == slot).collect()
+    }
+
+    /// The paper's manual Fig. 14 mapping (for the paper shape).
+    pub fn fig14() -> Placement {
+        Placement {
+            slot_of: (0..crate::ibert::graph::KERNELS_PER_ENCODER as u8)
+                .map(crate::ibert::graph::fpga_slot)
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan: the serializable end-to-end artifact
+// ---------------------------------------------------------------------------
+
+/// A complete placement plan: shape + fleet + assignment + prediction.
+/// Serializes to JSON so `plan` output can be fed back into `build` /
+/// `simulate` (and so placements round-trip through description files).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub shape: ModelShape,
+    pub fleet: Fleet,
+    pub placement: Placement,
+    pub predicted: LatencyEstimate,
+}
+
+impl Plan {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "shape",
+                Json::obj(vec![
+                    ("hidden", self.shape.hidden.into()),
+                    ("ffn", self.shape.ffn.into()),
+                    ("heads", self.shape.heads.into()),
+                    ("max_seq", self.shape.max_seq.into()),
+                    ("ffn_split", self.shape.ffn_split.into()),
+                ]),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    (
+                        "devices",
+                        Json::Arr(self.fleet.devices.iter().map(|d| d.name().into()).collect()),
+                    ),
+                    ("fpgas_per_switch", self.fleet.fpgas_per_switch.into()),
+                    ("util_cap", self.fleet.util_cap.into()),
+                ]),
+            ),
+            ("placement", Json::Arr(self.placement.slot_of.iter().map(|&s| s.into()).collect())),
+            (
+                "predicted",
+                Json::obj(vec![
+                    ("x_cycles", (self.predicted.x as i64).into()),
+                    ("t_cycles", (self.predicted.t as i64).into()),
+                    ("i_cycles", (self.predicted.i as i64).into()),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let geti = |j: &Json, path: &str| -> Result<usize> {
+            let v = j
+                .path(path)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow::anyhow!("plan missing integer field {path}"))?;
+            ensure!(v >= 0, "plan field {path} must be non-negative, got {v}");
+            Ok(v as usize)
+        };
+        let shape = ModelShape {
+            hidden: geti(j, "shape.hidden")?,
+            ffn: geti(j, "shape.ffn")?,
+            heads: geti(j, "shape.heads")?,
+            max_seq: geti(j, "shape.max_seq")?,
+            ffn_split: geti(j, "shape.ffn_split")?,
+        };
+        let devices = j
+            .path("fleet.devices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("plan missing fleet.devices"))?
+            .iter()
+            .map(|d| {
+                d.as_str()
+                    .and_then(Device::from_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown device in plan: {d}"))
+            })
+            .collect::<Result<Vec<Device>>>()?;
+        let fleet = Fleet {
+            devices,
+            fpgas_per_switch: geti(j, "fleet.fpgas_per_switch")?,
+            util_cap: j
+                .path("fleet.util_cap")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("plan missing fleet.util_cap"))?,
+        };
+        let placement = Placement {
+            slot_of: j
+                .get("placement")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("plan missing placement"))?
+                .iter()
+                .map(|s| match s.as_i64() {
+                    Some(x) if x >= 0 => Ok(x as usize),
+                    _ => Err(anyhow::anyhow!("bad placement slot {s}")),
+                })
+                .collect::<Result<Vec<usize>>>()?,
+        };
+        let predicted = LatencyEstimate {
+            x: geti(j, "predicted.x_cycles")? as u64,
+            t: geti(j, "predicted.t_cycles")? as u64,
+            i: geti(j, "predicted.i_cycles")? as u64,
+        };
+        let plan = Plan { shape, fleet, placement, predicted };
+        plan.shape.validate()?;
+        plan.fleet.validate()?;
+        ensure!(
+            plan.placement.slot_of.len() == plan.shape.ids().n,
+            "plan placement covers {} kernels, shape has {}",
+            plan.placement.slot_of.len(),
+            plan.shape.ids().n
+        );
+        ensure!(
+            plan.placement.slot_of.iter().all(|&s| s < plan.fleet.n_slots()),
+            "plan placement references a slot outside its fleet"
+        );
+        Ok(plan)
+    }
+
+    pub fn parse(text: &str) -> Result<Plan> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("plan json: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Guard rail shared by the CLI and tests: bail early when a graph is
+/// structurally impossible to place on a fleet.
+pub fn ensure_placeable(graph: &KernelGraph, fleet: &Fleet) -> Result<()> {
+    fleet.validate()?;
+    for node in &graph.nodes {
+        let fits_somewhere = (0..fleet.n_slots()).any(|s| {
+            (fleet.base_usage(s) + graph.usage(node.id, fleet.device(s)))
+                .fits(&fleet.capped_budget(s))
+        });
+        if !fits_somewhere {
+            bail!(
+                "kernel {} ({}) does not fit any fleet device even alone \
+                 (consider a larger device or a higher ffn_split)",
+                node.id,
+                node.name
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_ids_match_fig14() {
+        let ids = ModelShape::ibert_base().ids();
+        use crate::ibert::graph::ids as fig;
+        assert_eq!(ids.n, crate::ibert::graph::KERNELS_PER_ENCODER);
+        assert_eq!(ids.proj, fig::PROJ);
+        assert_eq!(ids.ln1, fig::LN1);
+        assert_eq!(ids.ffn1_base, fig::FFN1);
+        assert_eq!(ids.ffn2_base, fig::FFN2);
+        assert_eq!(ids.ln2, fig::LN2);
+        assert_eq!(ids.scatter_q, fig::SCATTER_Q);
+        assert_eq!(ids.scatter_k, fig::SCATTER_K);
+        assert_eq!(ids.scatter_v, fig::SCATTER_V);
+        assert_eq!(ids.gather, fig::GATHER);
+        assert_eq!(ids.bcast, fig::BCAST_LN1);
+        assert_eq!(ids.reduce, None);
+    }
+
+    #[test]
+    fn paper_graph_matches_seed_fifo_model() {
+        // the role-based FIFO sizing must agree with the independent
+        // id-based implementation in ibert::graph (§8.2.1 sizing rule)
+        let shape = ModelShape::ibert_base();
+        let g = KernelGraph::encoder(shape, PeConfig::default()).unwrap();
+        for id in 0..g.n_kernels() as u8 {
+            let role = fig14_role(id);
+            assert_eq!(g.node(id).role, role, "role mismatch for kernel {id}");
+            assert_eq!(
+                role_fifo_in_bytes(role, &shape),
+                crate::ibert::graph::fifo_bytes(id, 128, 768, 3072),
+                "input FIFO sizing diverged for kernel {id}"
+            );
+        }
+        // output-FIFO sizing against independent literals (the deleted
+        // seed implementation's values, so regressions can't hide behind
+        // the kernel_usage -> role_usage delegation)
+        for (role, want) in [
+            (KernelRole::LinearQ, 128 * 768),
+            (KernelRole::AttnHead(0), 128 * 128),
+            (KernelRole::SmmHead(3), 128 * 64),
+            (KernelRole::Proj, 128 * 4 * 768), // wide residual rows
+            (KernelRole::Ffn1(0), 128 * 3072),
+            (KernelRole::Ffn2(0), 128 * 4 * 768),
+            (KernelRole::Ln1, 128 * 768),
+            (KernelRole::ScatterQ, 8 * 768),
+            (KernelRole::GatherHeads, 8 * 768),
+        ] {
+            assert_eq!(role_fifo_out_bytes(role, &shape), want, "output FIFO for {role:?}");
+        }
+    }
+
+    #[test]
+    fn split_ffn_graph_is_well_formed() {
+        let shape = ModelShape::bert_large().with_ffn_split(2);
+        let g = KernelGraph::encoder(shape, PeConfig::default()).unwrap();
+        assert_eq!(g.n_kernels(), 12 + 2 * 16 + 2 * 2 + 1);
+        let reduce = shape.ids().reduce.unwrap();
+        assert_eq!(g.node(reduce).role, KernelRole::FfnReduce);
+        // both FFN2 parts feed the reduce, which feeds LN2
+        let into_reduce = g.edges.iter().filter(|e| e.dst == reduce).count();
+        assert_eq!(into_reduce, 2);
+        assert!(g.edges.iter().any(|e| e.src == reduce && e.dst == shape.ids().ln2));
+        // every kernel appears exactly once in placement order
+        let mut order = g.placement_order().to_vec();
+        order.sort_unstable();
+        assert_eq!(order, (0..g.n_kernels() as u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_shapes() {
+        let mut s = ModelShape::ibert_base();
+        s.heads = 7; // 768 % 7 != 0
+        assert!(s.validate().is_err());
+        let mut s = ModelShape::ibert_base();
+        s.ffn_split = 5; // 3072 % 5 != 0
+        assert!(s.validate().is_err());
+        assert!(ModelShape::bert_large().validate().is_ok());
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let plan = Plan {
+            shape: ModelShape::ibert_base(),
+            fleet: Fleet::paper(),
+            placement: Placement::fig14(),
+            predicted: LatencyEstimate { x: 100_000, t: 200_000, i: 767 },
+        };
+        let text = plan.to_json().pretty();
+        let back = Plan::parse(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn fleet_capped_budget_scales() {
+        let f = Fleet::paper().with_util_cap(0.5);
+        let b = f.budget(0);
+        let c = f.capped_budget(0);
+        assert_eq!(c.bram18, b.bram18 / 2);
+        assert!(c.lut < b.lut);
+    }
+}

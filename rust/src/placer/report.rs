@@ -1,0 +1,99 @@
+//! Human-readable placement reports for the CLI `plan` subcommand.
+
+use crate::util::table::{pct, Table};
+use crate::{cycles_to_us, FABRIC_CLOCK_HZ};
+
+use super::validate::SlotReport;
+use super::{Fleet, KernelGraph, Placement, PlacementSolution};
+
+/// Kernel -> FPGA assignment table.
+pub fn placement_table(g: &KernelGraph, p: &Placement, fleet: &Fleet) -> Table {
+    let mut t = Table::new(
+        "Placement (kernel -> FPGA slot)",
+        &["kern", "name", "stage", "slot", "device", "switch"],
+    );
+    for node in &g.nodes {
+        let slot = p.slot_of[node.id as usize];
+        t.row(vec![
+            format!("{}", node.id),
+            node.name.clone(),
+            format!("{}", node.role.stage()),
+            format!("{slot}"),
+            fleet.device(slot).name().to_string(),
+            format!("{}", fleet.switch_of(slot)),
+        ]);
+    }
+    t
+}
+
+/// Per-FPGA utilisation table (the placement's Fig. 15 analogue).
+pub fn utilisation_table(reports: &[SlotReport]) -> Table {
+    let mut t = Table::new(
+        "Per-FPGA utilisation",
+        &["slot", "device", "kernels", "LUT", "FF", "BRAM", "DSP", "fit"],
+    );
+    for r in reports {
+        let (l, f, b, d) = r.utilisation();
+        t.row(vec![
+            format!("{}", r.slot),
+            r.device.name().to_string(),
+            format!("{}", r.kernels.len()),
+            pct(l),
+            pct(f),
+            pct(b),
+            pct(d),
+            if r.fits() { "OK".into() } else { "OVER".into() },
+        ]);
+    }
+    t
+}
+
+/// One-paragraph latency summary: per-encoder (X, T, I) plus the Eq. 1
+/// chain estimate for an `encoders`-deep model.
+pub fn latency_summary(
+    sol: &PlacementSolution,
+    m: usize,
+    encoders: usize,
+    d_cycles: u64,
+) -> String {
+    let e = sol.predicted;
+    let chain = e.chain_cycles(encoders, d_cycles);
+    format!(
+        "predicted @ m={m}: X = {} cycles ({:.2} us)   T = {} cycles ({:.2} us)   I = {} cycles\n\
+         {} FPGAs used, {} local-search moves, FFN split {}\n\
+         Eq. 1 chain ({} encoders, d = {:.2} us): {:.3} ms  ->  {:.1} inferences/s (unpipelined)",
+        e.x,
+        cycles_to_us(e.x),
+        e.t,
+        cycles_to_us(e.t),
+        e.i,
+        sol.slots_used,
+        sol.moves_applied,
+        sol.graph.shape.ffn_split,
+        encoders,
+        cycles_to_us(d_cycles),
+        cycles_to_us(chain) / 1000.0,
+        FABRIC_CLOCK_HZ as f64 / chain as f64
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ibert::timing::PeConfig;
+    use crate::placer::{validate, ModelShape};
+
+    #[test]
+    fn tables_render_for_fig14() {
+        let g = KernelGraph::encoder(ModelShape::ibert_base(), PeConfig::default()).unwrap();
+        let p = Placement::fig14();
+        let fleet = Fleet::paper();
+        let pt = placement_table(&g, &p, &fleet).render();
+        assert!(pt.contains("gmi-gather-heads"));
+        assert!(pt.contains("xczu19eg"));
+        let reports = validate::check(&g, &p, &fleet).unwrap();
+        let ut = utilisation_table(&reports).render();
+        assert!(ut.contains("OK"));
+        assert!(!ut.contains("OVER"));
+    }
+}

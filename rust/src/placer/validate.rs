@@ -1,0 +1,154 @@
+//! Placement validation: completeness, per-device resource fit, flow
+//! into the Cluster Builder, and simulator replay for paper-shaped
+//! graphs (the end-to-end cross-check of the cost model).
+
+use anyhow::{bail, ensure, Result};
+
+use super::{Fleet, KernelGraph, Placement};
+use crate::fpga::resources::{Device, ResourceBudget, ResourceUsage};
+
+/// Aggregate usage of one fleet slot under a placement (shell + routing
+/// tables + kernels), checked against the device's FULL budget — the
+/// utilisation cap is a packing target, not a validity condition.
+#[derive(Debug, Clone)]
+pub struct SlotReport {
+    pub slot: usize,
+    pub device: Device,
+    pub kernels: Vec<u8>,
+    pub usage: ResourceUsage,
+    pub budget: ResourceBudget,
+}
+
+impl SlotReport {
+    pub fn utilisation(&self) -> (f64, f64, f64, f64) {
+        self.usage.utilisation(&self.budget)
+    }
+    pub fn fits(&self) -> bool {
+        self.usage.fits(&self.budget)
+    }
+}
+
+/// Check a placement end to end: every kernel assigned exactly once to a
+/// real fleet slot, and every occupied slot within its device budget.
+/// Returns the per-slot reports on success.
+pub fn check(g: &KernelGraph, p: &Placement, fleet: &Fleet) -> Result<Vec<SlotReport>> {
+    ensure!(
+        p.slot_of.len() == g.n_kernels(),
+        "placement covers {} kernels, graph has {}",
+        p.slot_of.len(),
+        g.n_kernels()
+    );
+    for (k, &s) in p.slot_of.iter().enumerate() {
+        ensure!(s < fleet.n_slots(), "kernel {k} assigned to slot {s} outside the fleet");
+    }
+    let mut reports = Vec::new();
+    for slot in p.used_slots() {
+        let kernels = p.kernels_on(slot);
+        let mut usage = fleet.base_usage(slot);
+        for &k in &kernels {
+            usage += g.usage(k, fleet.device(slot));
+        }
+        let r = SlotReport {
+            slot,
+            device: fleet.device(slot),
+            kernels,
+            usage,
+            budget: fleet.budget(slot),
+        };
+        if !r.fits() {
+            let (l, f, b, d) = r.utilisation();
+            bail!(
+                "slot {} ({:?}) over budget: LUT {:.0}% FF {:.0}% BRAM {:.0}% DSP {:.0}%",
+                r.slot,
+                r.device,
+                l * 100.0,
+                f * 100.0,
+                b * 100.0,
+                d * 100.0
+            );
+        }
+        reports.push(r);
+    }
+    Ok(reports)
+}
+
+/// Lower a paper-shaped placement into a Cluster Builder encoder build
+/// (ClusterSpec + behaviors). Only the Fig. 14-compatible shape has HLS
+/// kernels behind it; other shapes are placement-only for now.
+pub fn to_encoder_build(
+    g: &KernelGraph,
+    p: &Placement,
+    gp: &crate::ibert::graph::EncoderGraphParams,
+) -> Result<crate::ibert::graph::EncoderBuild> {
+    ensure!(
+        g.shape.is_paper_shape(),
+        "only the paper shape (hidden=768, ffn=3072, 12 heads) lowers to the I-BERT build"
+    );
+    ensure!(p.slot_of.len() == crate::ibert::graph::KERNELS_PER_ENCODER, "bad placement length");
+    Ok(crate::ibert::graph::build_encoder_placed(gp, &p.slot_of))
+}
+
+/// Replay a paper-shaped placement through the discrete-event simulator
+/// at sequence length `m`; returns the measured (X, T, I) at the
+/// evaluation sink. This is the ground truth the cost model is checked
+/// against (`galapagos-llm plan --replay`).
+pub fn replay_in_simulator(
+    g: &KernelGraph,
+    p: &Placement,
+    fleet: &Fleet,
+    m: usize,
+) -> Result<(u64, u64, u64)> {
+    ensure!(
+        g.shape.is_paper_shape() && g.shape.max_seq <= 128,
+        "simulator replay supports only the paper shape (the six-FPGA I-BERT build)"
+    );
+    ensure!(m >= 1 && m <= g.shape.max_seq, "m out of range");
+    check(g, p, fleet)?;
+    let mut cfg = crate::eval::testbed::TestbedConfig::proof_of_concept(
+        m,
+        crate::ibert::kernels::Mode::Timing,
+    );
+    cfg.pe = g.pe;
+    cfg.fpgas_per_switch = fleet.fpgas_per_switch;
+    cfg.placement = Some(p.slot_of.clone());
+    let (x, t, i, _) = crate::eval::testbed::run_encoder_once(&cfg)?;
+    Ok((x, t, i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ibert::timing::PeConfig;
+    use crate::placer::ModelShape;
+
+    fn paper() -> (KernelGraph, Placement, Fleet) {
+        let g = KernelGraph::encoder(ModelShape::ibert_base(), PeConfig::default()).unwrap();
+        (g, Placement::fig14(), Fleet::paper())
+    }
+
+    #[test]
+    fn fig14_placement_checks_clean() {
+        let (g, p, f) = paper();
+        let reports = check(&g, &p, &f).unwrap();
+        assert_eq!(reports.len(), 6);
+        assert!(reports.iter().all(|r| r.fits()));
+        // same aggregate picture as the seed Fig. 15 reports
+        let total: usize = reports.iter().map(|r| r.kernels.len()).sum();
+        assert_eq!(total, 38);
+    }
+
+    #[test]
+    fn incomplete_or_oversubscribed_placements_rejected() {
+        let (g, mut p, f) = paper();
+        p.slot_of.pop();
+        assert!(check(&g, &p, &f).is_err(), "short placement must fail");
+        let (g, mut p, f) = paper();
+        p.slot_of[0] = 99;
+        assert!(check(&g, &p, &f).is_err(), "out-of-fleet slot must fail");
+        let (g, p, _) = paper();
+        // cram everything onto one FPGA: BRAM blows the real budget
+        let one = Placement { slot_of: vec![0; p.slot_of.len()] };
+        let f1 = Fleet::paper();
+        assert!(check(&g, &one, &f1).is_err(), "single-FPGA I-BERT must be over budget");
+    }
+}

@@ -27,6 +27,20 @@ pub fn flits_for_bytes(bytes: usize) -> u64 {
     (bytes.max(1)).div_ceil(FLIT_BYTES) as u64
 }
 
+/// Analytical latency of one packet between two kernels, mirroring the
+/// fabric model's uncontended path (`sim::fabric::Fabric::deliver`):
+/// kernel output switch + egress serialization + router, then — when the
+/// kernels sit on different FPGAs — NIC serialization, NIC/switch/NIC
+/// traversal, `switch_hops` serial inter-switch hops, and the ingress
+/// router. Shared by the fabric tests and the placer's cost model.
+pub fn point_to_point_latency(flits: u64, same_fpga: bool, switch_hops: u64) -> u64 {
+    let egress = OUT_SWITCH_LAT + flits + ROUTER_LAT;
+    if same_fpga {
+        return egress;
+    }
+    egress + flits + NIC_LAT + SWITCH_LAT + NIC_LAT + switch_hops * INTER_SWITCH_LAT + ROUTER_LAT
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -43,6 +57,20 @@ mod tests {
         assert_eq!(flits_for_bytes(64), 1);
         assert_eq!(flits_for_bytes(65), 2);
         assert_eq!(flits_for_bytes(769), 13); // +1 header byte spills a flit
+    }
+
+    #[test]
+    fn point_to_point_matches_fabric_model() {
+        // 768-byte row, same constants the fabric tests assert
+        assert_eq!(point_to_point_latency(12, true, 0), OUT_SWITCH_LAT + 12 + ROUTER_LAT);
+        assert_eq!(
+            point_to_point_latency(12, false, 0),
+            OUT_SWITCH_LAT + 12 + ROUTER_LAT + 12 + NIC_LAT + SWITCH_LAT + NIC_LAT + ROUTER_LAT
+        );
+        assert_eq!(
+            point_to_point_latency(1, false, 3) - point_to_point_latency(1, false, 0),
+            3 * INTER_SWITCH_LAT
+        );
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Placer scenario tests: the acceptance criteria of the automatic
+//! partitioner/placer subsystem.
+//!
+//! * the paper config reproduces the Fig. 14 six-FPGA mapping and the
+//!   cost model tracks the discrete-event simulator within 10%;
+//! * non-paper scenarios (BERT-large shape, heterogeneous fleet,
+//!   SQuAD-length builds) produce valid resource-fit-checked plans;
+//! * plans flow through the Cluster Builder and description files.
+
+use galapagos_llm::cluster_builder::description::BuildDescription;
+use galapagos_llm::eval::workload::GlueWorkload;
+use galapagos_llm::fpga::resources::Device;
+use galapagos_llm::gmi::Out;
+use galapagos_llm::ibert::graph::{self, EncoderGraphParams};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::ibert::timing::PeConfig;
+use galapagos_llm::placer::{
+    cost, place, report, validate, Fleet, KernelGraph, ModelShape, Placement, Plan, SearchParams,
+};
+use galapagos_llm::sim::packet::GlobalKernelId;
+
+fn paper_solution() -> galapagos_llm::placer::PlacementSolution {
+    let fleet = Fleet::paper();
+    place(&ModelShape::ibert_base(), &PeConfig::default(), &fleet, &SearchParams::default())
+        .unwrap()
+}
+
+#[test]
+fn paper_config_reproduces_fig14_six_fpga_mapping() {
+    let sol = paper_solution();
+    assert_eq!(sol.slots_used, 6);
+    let want: Vec<usize> = (0..graph::KERNELS_PER_ENCODER as u8).map(graph::fpga_slot).collect();
+    assert_eq!(sol.placement.slot_of, want, "auto placement must match the paper's manual mapping");
+}
+
+#[test]
+fn cost_model_tracks_simulator_within_10_percent() {
+    // the headline acceptance check: predicted end-to-end latency of the
+    // placed paper config vs the discrete-event simulator replaying the
+    // exact same placement
+    let sol = paper_solution();
+    let fleet = Fleet::paper();
+    for m in [64usize, 128] {
+        let pred = cost::estimate(&sol.graph, &sol.placement, &fleet, m, 12).unwrap();
+        let (x, t, _i) =
+            validate::replay_in_simulator(&sol.graph, &sol.placement, &fleet, m).unwrap();
+        let t_err = (pred.t as f64 - t as f64).abs() / t as f64;
+        assert!(
+            t_err < 0.10,
+            "m={m}: predicted T {} vs simulated {t} ({:.1}% off)",
+            pred.t,
+            100.0 * t_err
+        );
+        let x_err = (pred.x as f64 - x as f64).abs() / x as f64;
+        assert!(
+            x_err < 0.20,
+            "m={m}: predicted X {} vs simulated {x} ({:.1}% off)",
+            pred.x,
+            100.0 * x_err
+        );
+    }
+}
+
+#[test]
+fn placed_plan_flows_into_cluster_builder() {
+    // placement -> ClusterSpec -> validated platform + Tcl/manifest
+    let sol = paper_solution();
+    let gp = EncoderGraphParams {
+        cluster_id: 0,
+        fpga_base: 0,
+        pe: PeConfig::default(),
+        mode: Mode::Timing,
+        out_dst: Out::to(GlobalKernelId::new(200, 2)),
+        max_seq: 128,
+        hidden: 768,
+        ffn: 3072,
+    };
+    let built = validate::to_encoder_build(&sol.graph, &sol.placement, &gp).unwrap();
+    built.cluster.validate().unwrap();
+    assert_eq!(built.cluster.fpgas().len(), 6);
+    let dir = std::env::temp_dir().join(format!("placer_cb_{}", std::process::id()));
+    let n = galapagos_llm::cluster_builder::ip_generator::generate(
+        &built.cluster,
+        &PeConfig::default(),
+        Device::Xczu19eg,
+        128,
+        768,
+        3072,
+        &dir,
+    )
+    .unwrap();
+    assert_eq!(n, 38);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bert_large_shape_gets_a_valid_plan() {
+    // scenario 1 of the acceptance criteria: hidden=1024, ffn=4096,
+    // 16 heads on a 12-FPGA XCZU19EG fleet
+    let fleet = Fleet::homogeneous(Device::Xczu19eg, 12, 6);
+    let sp = SearchParams::default();
+    let sol = place(&ModelShape::bert_large(), &PeConfig::default(), &fleet, &sp).unwrap();
+    let reports = validate::check(&sol.graph, &sol.placement, &fleet).unwrap();
+    assert!(reports.iter().all(|r| r.fits()), "every FPGA within its full budget");
+    assert!(sol.graph.shape.ffn_split >= 2, "4 MB FFN weights force a split");
+    assert!(sol.slots_used > 6 && sol.slots_used <= 12, "used {} slots", sol.slots_used);
+    // every kernel assigned exactly once
+    assert_eq!(sol.placement.slot_of.len(), sol.graph.n_kernels());
+}
+
+#[test]
+fn heterogeneous_fleet_gets_a_valid_plan() {
+    // scenario 2: two VCK190s in front of four Sidewinders
+    let d = BuildDescription::load(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/hetero_fleet.json"),
+    )
+    .unwrap();
+    let fleet = d.fleet();
+    assert_eq!(fleet.device(0), Device::Xcvc1902);
+    assert_eq!(fleet.device(5), Device::Xczu19eg);
+    let sol = place(&d.shape(), &d.pe, &fleet, &SearchParams::default()).unwrap();
+    let reports = validate::check(&sol.graph, &sol.placement, &fleet).unwrap();
+    assert!(reports.iter().all(|r| r.fits()));
+    assert_eq!(sol.placement.slot_of.len(), 38);
+    // the placement report renders with both device names
+    let table = report::placement_table(&sol.graph, &sol.placement, &fleet).render();
+    assert!(table.contains("xcvc1902") && table.contains("xczu19eg"));
+}
+
+#[test]
+fn squad_length_build_places_and_scales_with_workload() {
+    // satellite scenario: a long-sequence (SQuAD-like) build point —
+    // max_seq 384 blows up the attention FIFOs, needing a larger fleet
+    let shape = ModelShape { max_seq: 384, ..ModelShape::ibert_base() };
+    let fleet = Fleet::homogeneous(Device::Xczu19eg, 12, 6);
+    let sol = place(&shape, &PeConfig::default(), &fleet, &SearchParams::for_m(384)).unwrap();
+    validate::check(&sol.graph, &sol.placement, &fleet).unwrap();
+    assert!(sol.slots_used >= 6, "long-seq build should not shrink below the paper's six");
+
+    // drive the cost model with SQuAD-sampled sequence lengths: latency
+    // must track the workload's length spread (no-padding property)
+    let mut wl = GlueWorkload::squad(42);
+    let lens = wl.sample_n(64);
+    let (mut lo, mut hi) = (u64::MAX, 0u64);
+    for &m in &lens {
+        let e = cost::estimate(&sol.graph, &sol.placement, &fleet, m.min(384), 12).unwrap();
+        lo = lo.min(e.t);
+        hi = hi.max(e.t);
+    }
+    assert!(hi > lo * 2, "SQuAD length spread must show up in latency: {lo}..{hi}");
+}
+
+#[test]
+fn plan_roundtrips_through_description_and_json() {
+    let d = BuildDescription::load(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/ibert_poc.json"),
+    )
+    .unwrap();
+    let sol = place(&d.shape(), &d.pe, &d.fleet(), &SearchParams::for_m(d.max_seq)).unwrap();
+    let plan = Plan {
+        shape: sol.graph.shape,
+        fleet: d.fleet(),
+        placement: sol.placement.clone(),
+        predicted: sol.predicted,
+    };
+    let back = Plan::parse(&plan.to_json().pretty()).unwrap();
+    assert_eq!(back, plan);
+    // and the description itself round-trips
+    let d2 = BuildDescription::parse(&d.to_json().pretty()).unwrap();
+    assert_eq!(d2, d);
+}
+
+#[test]
+fn replayed_custom_placement_changes_simulated_timing() {
+    // a deliberately bad placement (pipeline spread over two switches)
+    // must simulate slower than Fig. 14 — end-to-end proof that the
+    // placement vector actually drives the simulator
+    let g = KernelGraph::encoder(ModelShape::ibert_base(), PeConfig::default()).unwrap();
+    let fleet = Fleet::homogeneous(Device::Xczu19eg, 12, 6);
+    let (_, t_good, _) =
+        validate::replay_in_simulator(&g, &Placement::fig14(), &fleet, 64).unwrap();
+    // same stage structure, but stages pushed onto slots 6..11 (switch 1)
+    // every other stage: each stage boundary now crosses a switch
+    let spread = Placement {
+        slot_of: Placement::fig14()
+            .slot_of
+            .iter()
+            .map(|&s| if s % 2 == 1 { s + 6 } else { s })
+            .collect(),
+    };
+    let (_, t_spread, _) = validate::replay_in_simulator(&g, &spread, &fleet, 64).unwrap();
+    assert!(
+        t_spread > t_good,
+        "cross-switch placement must be slower: {t_spread} <= {t_good}"
+    );
+}
+
+#[test]
+fn fleet_too_small_is_a_clean_error() {
+    let fleet = Fleet::homogeneous(Device::Xczu19eg, 2, 6);
+    let sp = SearchParams::default();
+    let err = place(&ModelShape::ibert_base(), &PeConfig::default(), &fleet, &sp).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fleet") || msg.contains("fit"), "unhelpful error: {msg}");
+}

@@ -2,10 +2,13 @@
 //! collectives, batching/pipelining, and the integer-op contracts.
 //! Uses the in-crate quickcheck mini-framework (seeded, replayable).
 
+use galapagos_llm::fpga::resources::Device;
 use galapagos_llm::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
 use galapagos_llm::gmi::{GmiKernel, GmiOp, Out, ReduceFn, ScatterPolicy};
 use galapagos_llm::ibert::compute;
 use galapagos_llm::ibert::config::RequantSite;
+use galapagos_llm::ibert::timing::PeConfig;
+use galapagos_llm::placer::{self, Fleet, ModelShape, Plan, SearchParams};
 use galapagos_llm::prop_assert;
 use galapagos_llm::sim::engine::{KernelBehavior, KernelIo, START_TAG};
 use galapagos_llm::sim::fabric::{FpgaId, SwitchId};
@@ -315,6 +318,71 @@ fn prop_layernorm_shift_invariant() {
         let max_diff =
             a.iter().zip(&b).map(|(&p, &q)| (p as i64 - q as i64).abs()).max().unwrap();
         prop_assert!(max_diff <= 1, "shift changed LN by {max_diff}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Placer invariants: completeness, resource fit, description round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_placer_placements_complete_fit_and_roundtrip() {
+    check_with(&Config { cases: 24, ..Default::default() }, "placer-invariants", |g| {
+        // random-but-valid encoder shapes on generous random fleets
+        let heads = *g.pick(&[6usize, 8, 12, 16]);
+        let head_dim = *g.pick(&[32usize, 64]);
+        let hidden = heads * head_dim;
+        let ffn = hidden * 4;
+        let max_seq = *g.pick(&[64usize, 128]);
+        let shape = ModelShape { hidden, ffn, heads, max_seq, ffn_split: 1 };
+
+        let n_fpgas = g.usize_in(10, 16);
+        let devices: Vec<Device> = (0..n_fpgas)
+            .map(|_| if g.bool() { Device::Xczu19eg } else { Device::Xcvc1902 })
+            .collect();
+        let fleet = Fleet {
+            devices,
+            fpgas_per_switch: g.usize_in(2, 6),
+            util_cap: 0.85,
+        };
+
+        let sol = placer::place(&shape, &PeConfig::default(), &fleet, &SearchParams::for_m(max_seq))
+            .map_err(|e| format!("place failed for {shape:?}: {e:#}"))?;
+
+        // 1. complete: every kernel assigned exactly once, inside the fleet
+        prop_assert!(
+            sol.placement.slot_of.len() == sol.graph.n_kernels(),
+            "placement misses kernels: {} != {}",
+            sol.placement.slot_of.len(),
+            sol.graph.n_kernels()
+        );
+        prop_assert!(
+            sol.placement.slot_of.iter().all(|&s| s < fleet.n_slots()),
+            "kernel assigned outside the fleet"
+        );
+
+        // 2. every occupied device within its FULL ResourceBudget
+        let reports = placer::validate::check(&sol.graph, &sol.placement, &fleet)
+            .map_err(|e| format!("fit check failed: {e:#}"))?;
+        prop_assert!(reports.iter().all(|r| r.fits()), "over-budget slot slipped through");
+
+        // 3. the plan round-trips through BuildDescription-style JSON
+        let plan = Plan {
+            shape: sol.graph.shape,
+            fleet: fleet.clone(),
+            placement: sol.placement.clone(),
+            predicted: sol.predicted,
+        };
+        let back = Plan::parse(&plan.to_json().pretty()).map_err(|e| e.to_string())?;
+        prop_assert!(back == plan, "plan JSON round-trip changed the placement");
+
+        // 4. the cost model accepts the placement and gives sane numbers
+        prop_assert!(
+            sol.predicted.t >= sol.predicted.x && sol.predicted.x > 0,
+            "nonsense latency estimate: {:?}",
+            sol.predicted
+        );
         Ok(())
     });
 }
