@@ -11,18 +11,25 @@ fn main() {
     b.bench("testbed build only (m=128)", || {
         black_box(build_testbed(&TestbedConfig::proof_of_concept(128, Mode::Timing)).unwrap());
     });
-    // run-only throughput: amortize one build over 8 pipelined inferences
-    let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
-    cfg.inferences = 8;
-    let mut tb = build_testbed(&cfg).unwrap();
-    tb.sim.start();
-    let t0 = std::time::Instant::now();
-    tb.sim.run().unwrap();
-    let dt = t0.elapsed();
-    println!(
-        "run-only: {} events in {:.1} ms -> {:.2} M events/s",
-        tb.sim.trace.events_processed,
-        dt.as_secs_f64() * 1e3,
-        tb.sim.trace.events_processed as f64 / dt.as_secs_f64() / 1e6
-    );
+    // run-only throughput: amortize one build over 8 pipelined inferences,
+    // in both engine configurations
+    for reference in [true, false] {
+        let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+        cfg.inferences = 8;
+        let mut tb = build_testbed(&cfg).unwrap();
+        if reference {
+            tb.sim.reference_mode();
+        }
+        tb.sim.start();
+        let t0 = std::time::Instant::now();
+        tb.sim.run().unwrap();
+        let dt = t0.elapsed();
+        println!(
+            "run-only [{}]: {} events in {:.1} ms -> {:.2} M events/s",
+            if reference { "reference" } else { "coalesced" },
+            tb.sim.trace.events_processed,
+            dt.as_secs_f64() * 1e3,
+            tb.sim.trace.events_processed as f64 / dt.as_secs_f64() / 1e6
+        );
+    }
 }

@@ -34,7 +34,7 @@ impl KernelBehavior for Tx {
                 io.send(
                     self.dst,
                     MsgMeta { stream: self.stream, row: i as u32, rows: n, inference: 0 },
-                    Payload::RowI32(r.clone()),
+                    Payload::row_i32(r.clone()),
                 );
             }
         }

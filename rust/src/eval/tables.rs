@@ -24,6 +24,13 @@ use crate::FABRIC_CLOCK_HZ;
 
 pub const SEQ_LENS: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
 
+/// Run `measure_components` for every length on the worker pool —
+/// each length is an independent simulator instance, so the sweeps
+/// behind Tables 1/2 and Figs. 16/20 scale with cores.
+fn components_sweep(lens: &[usize]) -> Result<Vec<LatencyComponents>> {
+    crate::util::pool::parallel_map(lens, |&m| measure_components(m)).into_iter().collect()
+}
+
 /// Measure one encoder's X/T/I at sequence length m (timing mode).
 pub fn measure_components(m: usize) -> Result<LatencyComponents> {
     let (x, t, i, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing))?;
@@ -56,8 +63,7 @@ pub fn table1() -> Result<Table> {
         "Table 1 — encoder latency components (cycles @200 MHz)",
         &["seq len", "X sim", "T sim", "I sim", "X paper", "T paper", "I paper"],
     );
-    for &m in &SEQ_LENS {
-        let c = measure_components(m)?;
+    for (&m, c) in SEQ_LENS.iter().zip(components_sweep(&SEQ_LENS)?) {
         let p = paper_components(m).unwrap();
         t.row(vec![
             m.to_string(),
@@ -81,8 +87,7 @@ pub fn table2() -> Result<Table> {
         "Table 2 — estimated I-BERT latency (ms), L=12",
         &["seq len", "sim (d=1.1us)", "sim (d=0)", "paper"],
     );
-    for &m in &SEQ_LENS {
-        let c = measure_components(m)?;
+    for (&m, c) in SEQ_LENS.iter().zip(components_sweep(&SEQ_LENS)?) {
         let with_d = estimate_model_latency_us(c, 12, 1.1) / 1e3;
         let no_d = estimate_model_latency_us(c, 12, 0.0) / 1e3;
         let paper = PAPER_TABLE2_MS.iter().find(|(len, _)| *len == m).unwrap().1;
@@ -362,7 +367,9 @@ pub fn fig16(lens: &[usize]) -> Result<Table> {
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let all: Vec<Vec<(String, u64, u64)>> =
-        lens.iter().map(|&m| layer_spans(m)).collect::<Result<_>>()?;
+        crate::util::pool::parallel_map(lens, |&m| layer_spans(m))
+            .into_iter()
+            .collect::<Result<_>>()?;
     for li in 0..all[0].len() {
         let mut row = vec![all[0][li].0.clone()];
         for spans in &all {
@@ -382,7 +389,9 @@ pub fn fig20(lens: &[usize]) -> Result<Table> {
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let all: Vec<Vec<(String, u64, u64)>> =
-        lens.iter().map(|&m| layer_spans(m)).collect::<Result<_>>()?;
+        crate::util::pool::parallel_map(lens, |&m| layer_spans(m))
+            .into_iter()
+            .collect::<Result<_>>()?;
     for li in 0..all[0].len() {
         let mut row = vec![all[0][li].0.clone()];
         for (j, spans) in all.iter().enumerate() {

@@ -23,9 +23,10 @@ pub struct GatewayConfig {
 }
 
 /// The gateway behavior: decode -> (virtual GMI module | forwarding).
+/// Virtual modules live in a BTreeMap so wake fan-out is deterministic.
 pub struct Gateway {
     cfg: GatewayConfig,
-    subs: HashMap<u8, GmiKernel>,
+    subs: std::collections::BTreeMap<u8, GmiKernel>,
 }
 
 impl Gateway {
@@ -41,6 +42,9 @@ impl Gateway {
 
 impl KernelBehavior for Gateway {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        // inter-cluster traffic is never coalesced (bursts are intra-FPGA,
+        // intra-cluster by construction), so the gateway sees single rows
+        debug_assert!(pkt.burst.is_none(), "gateway received a coalesced burst");
         io.consume(pkt.wire_bytes());
         // Packet Decoder: the one-byte GMI header names the final kernel.
         // Intra-cluster packets addressed to the gateway itself (no
@@ -64,7 +68,13 @@ impl KernelBehavior for Gateway {
         }
     }
 
-    fn on_wake(&mut self, _tag: u64, _io: &mut KernelIo) {}
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        // deferred-emission sweeps of the integrated GMI modules fire as
+        // wakes on the gateway kernel; relay them (no-op for the rest)
+        for sub in self.subs.values_mut() {
+            sub.on_wake(tag, io);
+        }
+    }
 
     fn name(&self) -> String {
         format!("gateway-c{}", self.cfg.cluster)
@@ -134,8 +144,8 @@ mod tests {
         let mut sim = two_cluster_sim(HashMap::new(), k(1, 5));
         sim.start();
         sim.run().unwrap();
-        assert_eq!(sim.trace.kernels.get(&k(1, 5)).unwrap().rx_packets, 1);
-        assert!(sim.trace.kernels.get(&k(1, 6)).is_none_or(|s| s.rx_packets == 0));
+        assert_eq!(sim.trace.kernel(k(1, 5)).unwrap().rx_packets, 1);
+        assert!(sim.trace.kernel(k(1, 6)).is_none_or(|s| s.rx_packets == 0));
     }
 
     #[test]
@@ -146,8 +156,8 @@ mod tests {
         let mut sim = two_cluster_sim(virtuals, k(1, 0));
         sim.start();
         sim.run().unwrap();
-        assert_eq!(sim.trace.kernels.get(&k(1, 5)).unwrap().rx_packets, 1);
-        assert_eq!(sim.trace.kernels.get(&k(1, 6)).unwrap().rx_packets, 1);
+        assert_eq!(sim.trace.kernel(k(1, 5)).unwrap().rx_packets, 1);
+        assert_eq!(sim.trace.kernel(k(1, 6)).unwrap().rx_packets, 1);
     }
 
     #[test]
@@ -167,7 +177,7 @@ mod tests {
         let mut sim = two_cluster_sim(HashMap::new(), k(1, 0));
         sim.start();
         sim.run().unwrap();
-        assert_eq!(sim.trace.kernels.get(&k(1, 0)).unwrap().rx_packets, 1);
-        assert!(sim.trace.kernels.get(&k(1, 5)).is_none_or(|s| s.rx_packets == 0));
+        assert_eq!(sim.trace.kernel(k(1, 0)).unwrap().rx_packets, 1);
+        assert!(sim.trace.kernel(k(1, 5)).is_none_or(|s| s.rx_packets == 0));
     }
 }

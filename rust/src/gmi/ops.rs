@@ -8,8 +8,15 @@
 //! `meta.stream` tag, which the Cluster Builder configures on the sender
 //! side — the GMI protocol itself carries no rank field (it is the
 //! "extremely lightweight protocol" of §5.2).
+//!
+//! Burst-aware: every op forwards a coalesced row run (see
+//! `sim::packet::Burst`) at the rows' cycle-exact arrival times. Rows
+//! pass through a per-destination [`TxQueue`]: coalescible destinations
+//! (same FPGA) receive bursts immediately; everything else is emitted
+//! row-by-row at the correct emission cycle via deferred wakes, so link
+//! serialization order is identical to the uncoalesced engine.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::sim::engine::{KernelBehavior, KernelIo};
 use crate::sim::packet::{GlobalKernelId, MsgMeta, Packet, Payload};
@@ -94,14 +101,39 @@ impl GmiOp {
             GmiOp::Forward { .. } => "Forward",
         }
     }
+
+    fn n_outputs(&self) -> usize {
+        match self {
+            GmiOp::Broadcast { dsts } => dsts.len(),
+            GmiOp::Scatter { dsts, .. } => dsts.len(),
+            _ => 1,
+        }
+    }
+
+    fn out(&self, i: usize) -> Out {
+        match self {
+            GmiOp::Broadcast { dsts } => dsts[i],
+            GmiOp::Scatter { dsts, .. } => dsts[i],
+            GmiOp::Gather { dst, .. }
+            | GmiOp::GatherCols { dst, .. }
+            | GmiOp::Reduce { dst, .. }
+            | GmiOp::Forward { dst } => *dst,
+        }
+    }
 }
 
 /// Split a payload into `n` equal column segments.
 fn column_split(p: &Payload, n: usize) -> Vec<Payload> {
     match p {
-        Payload::RowI8(v) => v.chunks(v.len() / n).map(|c| Payload::RowI8(c.to_vec())).collect(),
-        Payload::RowI32(v) => v.chunks(v.len() / n).map(|c| Payload::RowI32(c.to_vec())).collect(),
-        Payload::RowI64(v) => v.chunks(v.len() / n).map(|c| Payload::RowI64(c.to_vec())).collect(),
+        Payload::RowI8(v) => {
+            v.chunks(v.len() / n).map(|c| Payload::row_i8(c.to_vec())).collect()
+        }
+        Payload::RowI32(v) => {
+            v.chunks(v.len() / n).map(|c| Payload::row_i32(c.to_vec())).collect()
+        }
+        Payload::RowI64(v) => {
+            v.chunks(v.len() / n).map(|c| Payload::row_i64(c.to_vec())).collect()
+        }
         Payload::Timing(b) => (0..n).map(|_| Payload::Timing(b / n)).collect(),
         Payload::Control(c) => (0..n).map(|_| Payload::Control(*c)).collect(),
     }
@@ -110,26 +142,110 @@ fn column_split(p: &Payload, n: usize) -> Vec<Payload> {
 /// Concatenate column segments (same dtype) back into one row.
 fn column_concat(parts: Vec<Payload>) -> Payload {
     let mut it = parts.into_iter();
-    let mut acc = it.next().expect("concat of nothing");
-    for p in it {
-        acc = match (acc, p) {
-            (Payload::RowI8(mut a), Payload::RowI8(b)) => {
-                a.extend(b);
-                Payload::RowI8(a)
+    match it.next().expect("concat of nothing") {
+        Payload::RowI8(a) => {
+            let mut out = std::sync::Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone());
+            for p in it {
+                if let Payload::RowI8(b) = p {
+                    out.extend_from_slice(&b);
+                }
             }
-            (Payload::RowI32(mut a), Payload::RowI32(b)) => {
-                a.extend(b);
-                Payload::RowI32(a)
+            Payload::row_i8(out)
+        }
+        Payload::RowI32(a) => {
+            let mut out = std::sync::Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone());
+            for p in it {
+                if let Payload::RowI32(b) = p {
+                    out.extend_from_slice(&b);
+                }
             }
-            (Payload::RowI64(mut a), Payload::RowI64(b)) => {
-                a.extend(b);
-                Payload::RowI64(a)
+            Payload::row_i32(out)
+        }
+        Payload::RowI64(a) => {
+            let mut out = std::sync::Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone());
+            for p in it {
+                if let Payload::RowI64(b) = p {
+                    out.extend_from_slice(&b);
+                }
             }
-            (Payload::Timing(a), Payload::Timing(b)) => Payload::Timing(a + b),
-            (a, _) => a,
-        };
+            Payload::row_i64(out)
+        }
+        Payload::Timing(first) => {
+            let mut t = first;
+            for p in it {
+                if let Payload::Timing(b) = p {
+                    t += b;
+                }
+            }
+            Payload::Timing(t)
+        }
+        Payload::Control(c) => Payload::Control(c),
     }
-    acc
+}
+
+/// Deferred per-destination emission queue. Entries carry their exact
+/// emission cycle (nondecreasing). Coalescible destinations get the
+/// whole backlog as bursts at once; others are emitted one row per wake
+/// at precisely the scheduled cycle — identical link-serialization order
+/// to the uncoalesced engine.
+#[derive(Default)]
+pub(crate) struct TxQueue {
+    q: VecDeque<(MsgMeta, u64, Payload)>,
+}
+
+impl TxQueue {
+    pub(crate) fn push(&mut self, meta: MsgMeta, at: u64, payload: Payload) {
+        debug_assert!(self.q.back().is_none_or(|(_, t, _)| *t <= at));
+        self.q.push_back((meta, at, payload));
+    }
+
+    /// Emission cycle of the next pending row.
+    pub(crate) fn front_time(&self) -> Option<u64> {
+        self.q.front().map(|&(_, t, _)| t)
+    }
+
+    /// Emit every row due at (or before) `io.now` as ordinary packets.
+    pub(crate) fn emit_due(&mut self, d: Out, io: &mut KernelIo) {
+        while let Some(&(_, at, _)) = self.q.front() {
+            if at > io.now {
+                break;
+            }
+            let (meta, _, payload) = self.q.pop_front().unwrap();
+            io.send(d.dst, meta, payload);
+        }
+    }
+
+    /// Ship the whole backlog as coalesced bursts. Only valid for a
+    /// kernel's SOLE output queue on an intra-FPGA edge: a kernel with
+    /// several queues serializes them row-major on its egress port, and
+    /// shipping one queue's backlog at once would reorder that.
+    pub(crate) fn ship_bursts(&mut self, d: Out, io: &mut KernelIo) {
+        while !self.q.is_empty() {
+            self.ship_run(d, io);
+        }
+    }
+
+    /// Pop a maximal run of consecutive rows of one message and ship it
+    /// as a single coalesced event.
+    fn ship_run(&mut self, d: Out, io: &mut KernelIo) {
+        let (meta, at0, head) = self.q.pop_front().unwrap();
+        let mut times = vec![at0];
+        let mut tail = Vec::new();
+        while let Some((m2, _, p2)) = self.q.front() {
+            let consecutive = m2.inference == meta.inference
+                && m2.stream == meta.stream
+                && m2.rows == meta.rows
+                && m2.row == meta.row + times.len() as u32
+                && p2.bytes() == head.bytes();
+            if !consecutive {
+                break;
+            }
+            let (_, at, p) = self.q.pop_front().unwrap();
+            times.push(at);
+            tail.push(p);
+        }
+        io.send_burst(d.dst, meta, times, head, tail);
+    }
 }
 
 #[derive(Default)]
@@ -140,104 +256,71 @@ struct GatherState {
 
 #[derive(Default)]
 struct RankBuffers {
-    per_rank: HashMap<u8, (u32, HashMap<u32, Payload>)>,
+    per_rank: HashMap<u8, (u32, HashMap<u32, (Payload, u64)>)>,
     emitted: u32,
     next_rank: u8,
     next_row: u32,
+    /// running max of emitted-row arrivals: the head-of-line emission time
+    unblock: u64,
 }
+
+/// Wake tag used by the deferred-emission sweep (one wake services every
+/// output queue of the kernel, so event count stays one per row).
+const GMI_TX_WAKE: u64 = u64::MAX - 2;
 
 /// A GMI kernel: one op instance, stateless for Broadcast/Scatter/Forward,
 /// buffering for Gather/GatherCols/Reduce.
 pub struct GmiKernel {
     pub op: GmiOp,
     gather: GatherState,
-    /// (inference, row) -> per-rank column segments
-    gather_cols: HashMap<(u32, u32), HashMap<u8, Payload>>,
-    reduce: HashMap<(u32, u32), (usize, Payload)>, // (inference,row) -> (count, acc)
-    reduce_meta: HashMap<u32, u32>,                // inference -> rows
+    /// (inference, row) -> (per-rank column segments, latest arrival)
+    gather_cols: HashMap<(u32, u32), (HashMap<u8, Payload>, u64)>,
+    /// (inference, row) -> (count, acc, latest arrival)
+    reduce: HashMap<(u32, u32), (usize, Payload, u64)>,
+    reduce_meta: HashMap<u32, u32>, // inference -> rows
+    tx: Vec<TxQueue>,
+    /// earliest armed sweep wake (None = nothing armed)
+    wake_at: Option<u64>,
 }
 
 impl GmiKernel {
     pub fn new(op: GmiOp) -> Self {
+        let tx = (0..op.n_outputs()).map(|_| TxQueue::default()).collect();
         GmiKernel {
             op,
             gather: GatherState::default(),
             gather_cols: HashMap::new(),
             reduce: HashMap::new(),
             reduce_meta: HashMap::new(),
+            tx,
+            wake_at: None,
         }
     }
 
-    fn do_gather_cols(&mut self, pkt: Packet, io: &mut KernelIo) {
-        let GmiOp::GatherCols { n_srcs, dst } = self.op else { unreachable!() };
-        let key = (pkt.meta.inference, pkt.meta.row);
-        let slot = self.gather_cols.entry(key).or_default();
-        slot.insert(pkt.meta.stream, pkt.payload);
-        if slot.len() == n_srcs {
-            let parts = self.gather_cols.remove(&key).unwrap();
-            let ordered: Vec<Payload> =
-                (0..n_srcs as u8).map(|r| parts.get(&r).cloned().expect("missing rank")).collect();
-            let meta = dst.retag(MsgMeta { stream: 0, ..pkt.meta });
-            io.send(dst.dst, meta, column_concat(ordered));
-        }
-    }
-
-    fn do_gather(&mut self, pkt: Packet, io: &mut KernelIo) {
-        let GmiOp::Gather { n_srcs, dst } = self.op else { unreachable!() };
-        let st = self.gather.msgs.entry(pkt.meta.inference).or_default();
-        let rank = pkt.meta.stream;
-        let entry = st.per_rank.entry(rank).or_insert_with(|| (pkt.meta.rows, HashMap::new()));
-        entry.1.insert(pkt.meta.row, pkt.payload);
-
-        // emit eagerly in (rank, row) order
-        loop {
-            if (st.next_rank as usize) >= n_srcs {
-                break;
+    fn pump_all(&mut self, io: &mut KernelIo) {
+        if self.tx.len() == 1 {
+            let d = self.op.out(0);
+            if io.can_burst(d.dst) {
+                self.tx[0].ship_bursts(d, io);
+                return;
             }
-            let Some((expect, buf)) = st.per_rank.get_mut(&st.next_rank) else { break };
-            if st.next_row >= *expect {
-                st.next_rank += 1;
-                st.next_row = 0;
-                continue;
+        }
+        // row-major sweep: every queue's due rows, in destination order
+        for i in 0..self.tx.len() {
+            let d = self.op.out(i);
+            self.tx[i].emit_due(d, io);
+        }
+        let next = self.tx.iter().filter_map(|q| q.front_time()).min();
+        match next {
+            None => self.wake_at = None,
+            Some(t) => {
+                // (re-)arm only when the horizon moved earlier; stale
+                // later wakes fire as no-ops and re-arm themselves
+                if self.wake_at.is_none_or(|w| t < w) {
+                    io.wake_in(t - io.now, GMI_TX_WAKE);
+                    self.wake_at = Some(t);
+                }
             }
-            let Some(payload) = buf.remove(&st.next_row) else { break };
-            // total output rows unknown until all ranks announce; use the
-            // running emitted counter for row numbering and patch `rows`
-            // with the per-rank total sum when known (senders all use the
-            // same per-message total in our graphs, so sum is fine).
-            let total: u32 = st.per_rank.values().map(|(e, _)| *e).sum();
-            let meta = dst.retag(MsgMeta {
-                stream: 0,
-                row: st.emitted,
-                rows: total.max(st.emitted + 1),
-                inference: pkt.meta.inference,
-            });
-            io.send(dst.dst, meta, payload);
-            st.emitted += 1;
-            st.next_row += 1;
-        }
-        if (st.next_rank as usize) >= n_srcs {
-            self.gather.msgs.remove(&pkt.meta.inference);
-        }
-    }
-
-    fn do_reduce(&mut self, pkt: Packet, io: &mut KernelIo) {
-        let GmiOp::Reduce { n_srcs, dst, f } = self.op else { unreachable!() };
-        self.reduce_meta.insert(pkt.meta.inference, pkt.meta.rows);
-        let key = (pkt.meta.inference, pkt.meta.row);
-        let slot = self.reduce.entry(key).or_insert_with(|| (0, zero_like(&pkt.payload)));
-        slot.0 += 1;
-        slot.1 = combine(&slot.1, &pkt.payload, f);
-        if slot.0 == n_srcs {
-            let (_, acc) = self.reduce.remove(&key).unwrap();
-            let rows = *self.reduce_meta.get(&pkt.meta.inference).unwrap_or(&pkt.meta.rows);
-            let meta = dst.retag(MsgMeta {
-                stream: 0,
-                row: pkt.meta.row,
-                rows,
-                inference: pkt.meta.inference,
-            });
-            io.send(dst.dst, meta, acc);
         }
     }
 }
@@ -245,23 +328,29 @@ impl GmiKernel {
 fn zero_like(p: &Payload) -> Payload {
     match p {
         Payload::Timing(b) => Payload::Timing(*b),
-        Payload::RowI8(v) => Payload::RowI32(vec![0; v.len()]),
-        Payload::RowI32(v) => Payload::RowI32(vec![0; v.len()]),
-        Payload::RowI64(v) => Payload::RowI64(vec![0; v.len()]),
+        Payload::RowI8(v) => Payload::row_i32(vec![0; v.len()]),
+        Payload::RowI32(v) => Payload::row_i32(vec![0; v.len()]),
+        Payload::RowI64(v) => Payload::row_i64(vec![0; v.len()]),
         Payload::Control(_) => Payload::Control(0),
     }
 }
 
 fn combine(acc: &Payload, new: &Payload, f: ReduceFn) -> Payload {
     match (acc, new) {
-        (Payload::RowI32(a), Payload::RowI8(b)) => Payload::RowI32(
-            a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32).collect(),
+        (Payload::RowI32(a), Payload::RowI8(b)) => Payload::row_i32(
+            a.iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32)
+                .collect(),
         ),
-        (Payload::RowI32(a), Payload::RowI32(b)) => Payload::RowI32(
-            a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32).collect(),
+        (Payload::RowI32(a), Payload::RowI32(b)) => Payload::row_i32(
+            a.iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| f.combine_i64(x as i64, y as i64) as i32)
+                .collect(),
         ),
         (Payload::RowI64(a), Payload::RowI64(b)) => {
-            Payload::RowI64(a.iter().zip(b).map(|(&x, &y)| f.combine_i64(x, y)).collect())
+            Payload::row_i64(a.iter().zip(b.iter()).map(|(&x, &y)| f.combine_i64(x, y)).collect())
         }
         (Payload::Timing(b), _) => Payload::Timing(*b),
         (Payload::Control(a), Payload::Control(b)) => Payload::Control(a.wrapping_add(*b)),
@@ -271,52 +360,161 @@ fn combine(acc: &Payload, new: &Payload, f: ReduceFn) -> Payload {
 
 impl KernelBehavior for GmiKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
         match &self.op {
             GmiOp::Broadcast { dsts } => {
-                for d in dsts.clone() {
-                    io.send(d.dst, d.retag(pkt.meta), pkt.payload.clone());
-                }
+                let dsts = dsts.clone();
+                let tx = &mut self.tx;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    for (i, d) in dsts.iter().enumerate() {
+                        tx[i].push(d.retag(meta), at, payload.clone());
+                    }
+                });
             }
             GmiOp::Scatter { dsts, policy } => {
-                if *policy == ScatterPolicy::ColumnSplit {
-                    let parts = column_split(&pkt.payload, dsts.len());
-                    for (d, part) in dsts.clone().iter().zip(parts) {
-                        io.send(d.dst, d.retag(pkt.meta), part);
+                let dsts = dsts.clone();
+                let policy = *policy;
+                let tx = &mut self.tx;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    if policy == ScatterPolicy::ColumnSplit {
+                        let parts = column_split(&payload, dsts.len());
+                        for ((i, d), part) in dsts.iter().enumerate().zip(parts) {
+                            tx[i].push(d.retag(meta), at, part);
+                        }
+                        return;
                     }
-                    return;
-                }
-                let n = dsts.len() as u32;
-                let (idx, row, rows) = match policy {
-                    ScatterPolicy::Block => {
-                        let per = pkt.meta.rows.div_ceil(n);
-                        let i = (pkt.meta.row / per).min(n - 1);
-                        let start = i * per;
-                        let count = per.min(pkt.meta.rows - start);
-                        (i as usize, pkt.meta.row - start, count)
-                    }
-                    ScatterPolicy::RoundRobin => {
-                        let i = pkt.meta.row % n;
-                        let count =
-                            (pkt.meta.rows + n - 1 - i) / n; // rows this lane receives
-                        (i as usize, pkt.meta.row / n, count)
-                    }
-                    ScatterPolicy::ColumnSplit => unreachable!(),
-                };
-                let d = dsts[idx];
-                let meta = d.retag(MsgMeta { row, rows, ..pkt.meta });
-                io.send(d.dst, meta, pkt.payload);
+                    let n = dsts.len() as u32;
+                    let (idx, row, rows) = match policy {
+                        ScatterPolicy::Block => {
+                            let per = meta.rows.div_ceil(n);
+                            let i = (meta.row / per).min(n - 1);
+                            let start = i * per;
+                            let count = per.min(meta.rows - start);
+                            (i as usize, meta.row - start, count)
+                        }
+                        ScatterPolicy::RoundRobin => {
+                            let i = meta.row % n;
+                            let count = (meta.rows + n - 1 - i) / n; // rows this lane receives
+                            (i as usize, meta.row / n, count)
+                        }
+                        ScatterPolicy::ColumnSplit => unreachable!(),
+                    };
+                    let meta2 = dsts[idx].retag(MsgMeta { row, rows, ..meta });
+                    tx[idx].push(meta2, at, payload);
+                });
             }
-            GmiOp::Gather { .. } => self.do_gather(pkt, io),
-            GmiOp::GatherCols { .. } => self.do_gather_cols(pkt, io),
-            GmiOp::Reduce { .. } => self.do_reduce(pkt, io),
+            GmiOp::Gather { n_srcs, dst } => {
+                let (n_srcs, dst) = (*n_srcs, *dst);
+                let GmiKernel { gather, tx, .. } = self;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    let st = gather.msgs.entry(meta.inference).or_default();
+                    let rank = meta.stream;
+                    let entry =
+                        st.per_rank.entry(rank).or_insert_with(|| (meta.rows, HashMap::new()));
+                    entry.1.insert(meta.row, (payload, at));
+
+                    // emit eagerly in (rank, row) order; a buffered row
+                    // leaves at the arrival that unblocked it (running
+                    // max of arrivals along the emission order)
+                    loop {
+                        if (st.next_rank as usize) >= n_srcs {
+                            break;
+                        }
+                        let Some((expect, buf)) = st.per_rank.get_mut(&st.next_rank) else {
+                            break;
+                        };
+                        if st.next_row >= *expect {
+                            st.next_rank += 1;
+                            st.next_row = 0;
+                            continue;
+                        }
+                        let Some((payload, arr)) = buf.remove(&st.next_row) else { break };
+                        st.unblock = st.unblock.max(arr);
+                        // total output rows unknown until all ranks
+                        // announce; use the running emitted counter for
+                        // row numbering and patch `rows` with the
+                        // per-rank total sum when known (senders all use
+                        // the same per-message total in our graphs)
+                        let total: u32 = st.per_rank.values().map(|(e, _)| *e).sum();
+                        let meta2 = dst.retag(MsgMeta {
+                            stream: 0,
+                            row: st.emitted,
+                            rows: total.max(st.emitted + 1),
+                            inference: meta.inference,
+                        });
+                        tx[0].push(meta2, st.unblock, payload);
+                        st.emitted += 1;
+                        st.next_row += 1;
+                    }
+                    if (st.next_rank as usize) >= n_srcs {
+                        gather.msgs.remove(&meta.inference);
+                    }
+                });
+            }
+            GmiOp::GatherCols { n_srcs, dst } => {
+                let (n_srcs, dst) = (*n_srcs, *dst);
+                let GmiKernel { gather_cols, tx, .. } = self;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    let key = (meta.inference, meta.row);
+                    let slot = gather_cols.entry(key).or_default();
+                    slot.0.insert(meta.stream, payload);
+                    slot.1 = slot.1.max(at);
+                    if slot.0.len() == n_srcs {
+                        let (mut parts, done_at) = gather_cols.remove(&key).unwrap();
+                        let ordered: Vec<Payload> = (0..n_srcs as u8)
+                            .map(|r| parts.remove(&r).expect("missing rank"))
+                            .collect();
+                        let meta2 = dst.retag(MsgMeta { stream: 0, ..meta });
+                        tx[0].push(meta2, done_at, column_concat(ordered));
+                    }
+                });
+            }
+            GmiOp::Reduce { n_srcs, dst, f } => {
+                let (n_srcs, dst, fcomb) = (*n_srcs, *dst, *f);
+                let GmiKernel { reduce, reduce_meta, tx, .. } = self;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    reduce_meta.insert(meta.inference, meta.rows);
+                    let key = (meta.inference, meta.row);
+                    let slot =
+                        reduce.entry(key).or_insert_with(|| (0, zero_like(&payload), 0));
+                    slot.0 += 1;
+                    slot.1 = combine(&slot.1, &payload, fcomb);
+                    slot.2 = slot.2.max(at);
+                    if slot.0 == n_srcs {
+                        let (_, acc, done_at) = reduce.remove(&key).unwrap();
+                        let rows = *reduce_meta.get(&meta.inference).unwrap_or(&meta.rows);
+                        let meta2 = dst.retag(MsgMeta {
+                            stream: 0,
+                            row: meta.row,
+                            rows,
+                            inference: meta.inference,
+                        });
+                        tx[0].push(meta2, done_at, acc);
+                    }
+                });
+            }
             GmiOp::Forward { dst } => {
-                io.send(dst.dst, dst.retag(pkt.meta), pkt.payload);
+                let dst = *dst;
+                let tx = &mut self.tx;
+                io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                    io2.consume(payload.bytes());
+                    tx[0].push(dst.retag(meta), at, payload);
+                });
             }
         }
+        self.pump_all(io);
     }
 
-    fn on_wake(&mut self, _tag: u64, _io: &mut KernelIo) {}
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == GMI_TX_WAKE {
+            self.wake_at = None;
+            self.pump_all(io);
+        }
+    }
 
     fn name(&self) -> String {
         format!("gmi-{}", self.op.kind().to_lowercase())
@@ -353,19 +551,21 @@ mod tests {
                         rows: n,
                         inference: 0,
                     };
-                    io.send(self.dst, meta, Payload::RowI32(r.clone()));
+                    io.send(self.dst, meta, Payload::row_i32(r.clone()));
                 }
             }
         }
     }
 
-    /// Records received rows in arrival order.
+    /// Records received rows in arrival order (burst-aware).
     #[derive(Default)]
     struct Rx;
     impl KernelBehavior for Rx {
         fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-            io.consume(pkt.wire_bytes());
-            RECORDER.with(|r| r.borrow_mut().push((io.self_id, pkt.meta, pkt.payload)));
+            io.rows(pkt, |io2: &mut KernelIo, meta, _at, payload| {
+                io2.consume(payload.bytes());
+                RECORDER.with(|r| r.borrow_mut().push((io2.self_id, meta, payload)));
+            });
         }
         fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
     }
@@ -388,6 +588,13 @@ mod tests {
             sim.fabric.attach(FpgaId(f), SwitchId(0));
         }
         sim
+    }
+
+    fn i32_of(p: &Payload) -> i32 {
+        match p {
+            Payload::RowI32(v) => v[0],
+            _ => panic!("expected RowI32"),
+        }
     }
 
     #[test]
@@ -444,10 +651,7 @@ mod tests {
         let to3: Vec<i32> = got
             .iter()
             .filter(|(id, _, _)| *id == k(0, 3))
-            .map(|(_, _, p)| match p {
-                Payload::RowI32(v) => v[0],
-                _ => panic!(),
-            })
+            .map(|(_, _, p)| i32_of(p))
             .collect();
         assert_eq!(to3, vec![0, 1, 2]);
         for (id, meta, _) in &got {
@@ -483,13 +687,7 @@ mod tests {
         sim.add_kernel(k(0, 4), FpgaId(3), Fifo::new(1 << 16), Box::new(Rx)).unwrap();
         sim.start();
         sim.run().unwrap();
-        let vals: Vec<i32> = recorded()
-            .iter()
-            .map(|(_, _, p)| match p {
-                Payload::RowI32(v) => v[0],
-                _ => panic!(),
-            })
-            .collect();
+        let vals: Vec<i32> = recorded().iter().map(|(_, _, p)| i32_of(p)).collect();
         assert_eq!(vals, vec![0, 1, 10, 11]);
         let rows: Vec<u32> = recorded().iter().map(|(_, m, _)| m.row).collect();
         assert_eq!(rows, vec![0, 1, 2, 3]);
@@ -523,7 +721,7 @@ mod tests {
         let mut rows: Vec<(u32, Vec<i32>)> = recorded()
             .iter()
             .map(|(_, m, p)| match p {
-                Payload::RowI32(v) => (m.row, v.clone()),
+                Payload::RowI32(v) => (m.row, (**v).clone()),
                 _ => panic!(),
             })
             .collect();
@@ -534,6 +732,8 @@ mod tests {
     #[test]
     fn allgather_composes_from_gather_plus_broadcast() {
         // §5.1: Allgather = Gather to a root, then Broadcast back out.
+        // The gather and broadcast share FpgaId(2), so the hand-off
+        // between them is a coalesced burst — results must be unchanged.
         reset_recorder();
         let mut sim = base_sim();
         sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Tx {
@@ -569,5 +769,14 @@ mod tests {
             let n = recorded().iter().filter(|(id, _, _)| *id == leaf).count();
             assert_eq!(n, 2, "leaf {leaf} sees the gathered set");
         }
+    }
+
+    #[test]
+    fn column_split_concat_roundtrip() {
+        let row = Payload::row_i8((0..24).collect());
+        let parts = column_split(&row, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].bytes(), 6);
+        assert_eq!(column_concat(parts), row);
     }
 }

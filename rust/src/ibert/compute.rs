@@ -92,6 +92,39 @@ pub fn linear_row(x_row: &[i8], w: &[i8], k: usize, n: usize, bias: &[i32]) -> V
     out
 }
 
+/// Output rows computed per weight-matrix pass by [`linear_rows`]. A
+/// block of accumulator rows (8 x N x 4B, ~12 KB at N=768) stays in L1/L2
+/// while W streams through once — W traffic drops by the block factor vs
+/// the one-row-at-a-time walk.
+pub const GEMM_ROW_BLOCK: usize = 8;
+
+/// Cache-blocked multi-row int8 linear: Y[r] = X[r] . W + b for every
+/// row of `xs`. Bit-identical to calling [`linear_row`] per row (integer
+/// accumulation is order-independent and i8*i8 dots cannot overflow i32
+/// at any K <= 2^15), but streams W once per GEMM_ROW_BLOCK rows.
+pub fn linear_rows(xs: &[Vec<i8>], w: &[i8], k: usize, n: usize, bias: &[i32]) -> Vec<Vec<i32>> {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    let mut out: Vec<Vec<i32>> = xs.iter().map(|_| bias.to_vec()).collect();
+    for (xb, ob) in xs.chunks(GEMM_ROW_BLOCK).zip(out.chunks_mut(GEMM_ROW_BLOCK)) {
+        for i in 0..k {
+            let wrow = &w[i * n..(i + 1) * n];
+            for (x_row, o_row) in xb.iter().zip(ob.iter_mut()) {
+                debug_assert_eq!(x_row.len(), k);
+                let x = x_row[i];
+                if x == 0 {
+                    continue;
+                }
+                let x = x as i32;
+                for (o, &wv) in o_row.iter_mut().zip(wrow) {
+                    *o += x * wv as i32;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// i-Softmax over one score row (actual sequence length only — the
 /// hardware no-padding path). Mirrors iops.i_softmax with all-valid mask.
 pub fn softmax_row(scores: &[i32], sm: SoftmaxParams) -> Vec<i8> {
@@ -212,6 +245,22 @@ mod tests {
         for j in 0..n {
             let col = (0..k).map(|i| w[i * n + j]);
             assert_eq!(full[j], pe_dot(&x, col, bias[j]));
+        }
+    }
+
+    #[test]
+    fn linear_rows_blocked_matches_row_at_a_time() {
+        let k = 37;
+        let n = 19;
+        let w: Vec<i8> = (0..(k * n) as i32).map(|v| (v % 31 - 15) as i8).collect();
+        let bias: Vec<i32> = (0..n as i32).map(|v| v * 7 - 50).collect();
+        // more rows than one block, with a ragged tail
+        let xs: Vec<Vec<i8>> = (0..GEMM_ROW_BLOCK * 2 + 3)
+            .map(|r| (0..k).map(|i| ((r * 13 + i * 5) % 29) as i8 - 14).collect())
+            .collect();
+        let blocked = linear_rows(&xs, &w, k, n, &bias);
+        for (r, x) in xs.iter().enumerate() {
+            assert_eq!(blocked[r], linear_row(x, &w, k, n, &bias), "row {r}");
         }
     }
 

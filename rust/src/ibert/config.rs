@@ -51,6 +51,35 @@ pub struct EncoderQuant {
     pub ln2: LayerNormParams,
 }
 
+impl EncoderQuant {
+    /// The integer constants `python/compile/quantize.py` exports for the
+    /// I-BERT base checkpoint. Used to build synthetic models when the
+    /// artifacts directory is absent (benches, property tests) — the
+    /// operators behave identically, only the weights differ.
+    pub fn ibert_base_sample() -> EncoderQuant {
+        EncoderQuant {
+            rq_q: RequantSite { m: 25412, n: 24 },
+            rq_k: RequantSite { m: 21090, n: 24 },
+            rq_v: RequantSite { m: 22878, n: 24 },
+            rq_att: RequantSite { m: 20365, n: 21 },
+            rq_proj: RequantSite { m: 30599, n: 15 },
+            rq_resin: RequantSite { m: 25999, n: 5 },
+            rq_gelu_in: RequantSite { m: 27916, n: 24 },
+            rq_ffn2: RequantSite { m: 23137, n: 15 },
+            rq_res2in: RequantSite { m: 32264, n: 5 },
+            softmax: SoftmaxParams { q_ln2: 1051, q_b: 2052, q_c: 2_209_112 },
+            gelu: GeluParams {
+                q_b: -70,
+                q_c: -5272,
+                q_one: -5272,
+                out: RequantSite { m: 25463, n: 28 },
+            },
+            ln1: LayerNormParams { kg: 10 },
+            ln2: LayerNormParams { kg: 10 },
+        }
+    }
+}
+
 /// Model geometry (BERT-base / I-BERT base).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelConfig {

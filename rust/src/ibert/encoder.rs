@@ -2,9 +2,23 @@
 //! bit-exact against python (golden vectors) and against the streaming
 //! kernel graph (integration tests). Matches `model.encoder_fwd`
 //! operation-for-operation.
+//!
+//! Two implementations share that contract:
+//! * [`encoder_forward`] — the hot path: cache-blocked int8 GEMMs
+//!   (`compute::linear_rows`) with rows and heads fanned out over the
+//!   in-crate worker pool (`util::pool`). Work is partitioned into
+//!   fixed chunks computed exactly as in the serial loop, so outputs are
+//!   bit-identical at any thread count.
+//! * [`encoder_forward_reference`] — the straight-line row-at-a-time
+//!   original, kept as the equivalence baseline (tests + `bench`'s
+//!   before/after comparison).
 
 use super::compute::*;
 use super::weights::ModelParams;
+use crate::util::pool;
+
+/// Rows per worker-pool chunk (aligned with the GEMM row block).
+const PAR_CHUNK: usize = GEMM_ROW_BLOCK;
 
 /// All intermediate stage tensors (names match model.py's `stages`).
 #[derive(Debug, Clone)]
@@ -31,9 +45,134 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
     let d = p.cfg.head_dim();
     let f = p.cfg.ffn;
     let m = x.len();
+    let eq = p.eq;
+
+    // ---- Layer 0: Q/K/V linears + Quant (blocked GEMM, parallel rows) ----
+    let lin8 = |w: &[i8], b: &[i32], site| -> Vec<Vec<i8>> {
+        let mut out = vec![Vec::new(); m];
+        pool::parallel_chunks(&mut out, PAR_CHUNK, |start, sl| {
+            let ys = linear_rows(&x[start..start + sl.len()], w, h, h, b);
+            for (o, y) in sl.iter_mut().zip(ys) {
+                *o = y.into_iter().map(|a| requant8(a as i64, site)).collect();
+            }
+        });
+        out
+    };
+    let q8 = lin8(&p.wq.data, &p.bq, eq.rq_q);
+    let k8 = lin8(&p.wk.data, &p.bk, eq.rq_k);
+    let v8 = lin8(&p.wv.data, &p.bv, eq.rq_v);
+
+    // ---- Layers 1-3: attention, one worker per head ----
+    let mut per_head: Vec<(Vec<Vec<i8>>, Vec<Vec<i8>>)> =
+        (0..heads).map(|_| (Vec::new(), Vec::new())).collect();
+    pool::parallel_chunks(&mut per_head, 1, |hd, sl| {
+        let lo = hd * d;
+        let mut probs_h = Vec::with_capacity(m);
+        for r in 0..m {
+            // scores row: q_r . k_c over the head slice
+            let scores: Vec<i32> = (0..m)
+                .map(|c| {
+                    let mut acc = 0i32;
+                    for j in 0..d {
+                        acc += q8[r][lo + j] as i32 * k8[c][lo + j] as i32;
+                    }
+                    acc
+                })
+                .collect();
+            probs_h.push(softmax_row(&scores, eq.softmax));
+        }
+        let mut att_h = vec![vec![0i8; d]; m];
+        for r in 0..m {
+            for j in 0..d {
+                let mut acc = 0i32;
+                for c in 0..m {
+                    acc += probs_h[r][c] as i32 * v8[c][lo + j] as i32;
+                }
+                att_h[r][j] = requant8(acc as i64, eq.rq_att);
+            }
+        }
+        sl[0] = (probs_h, att_h);
+    });
+    let mut probs = Vec::with_capacity(heads);
+    let mut att = vec![vec![0i8; h]; m];
+    for (hd, (probs_h, att_h)) in per_head.into_iter().enumerate() {
+        let lo = hd * d;
+        for (r, row) in att_h.into_iter().enumerate() {
+            att[r][lo..lo + d].copy_from_slice(&row);
+        }
+        probs.push(probs_h);
+    }
+
+    // ---- Layer 4: projection + residual + LayerNorm ----
+    let mut res: Vec<Vec<i64>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut res, PAR_CHUNK, |start, sl| {
+        let proj = linear_rows(&att[start..start + sl.len()], &p.wo.data, h, h, &p.bo);
+        for ((o, pr), xr) in sl.iter_mut().zip(proj).zip(&x[start..start + sl.len()]) {
+            *o = pr
+                .iter()
+                .zip(xr)
+                .map(|(&pa, &xi)| {
+                    requant32(pa as i64, eq.rq_proj) + requant32(xi as i64, eq.rq_resin)
+                })
+                .collect();
+        }
+    });
+    let mut ln1: Vec<Vec<i8>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut ln1, PAR_CHUNK, |start, sl| {
+        for (i, o) in sl.iter_mut().enumerate() {
+            *o = layernorm_row(&res[start + i], &p.ln1_gamma, &p.ln1_beta, eq.ln1);
+        }
+    });
+
+    // ---- Layer 5: FFN + residual + LayerNorm ----
+    let mut gelu_in: Vec<Vec<i8>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut gelu_in, PAR_CHUNK, |start, sl| {
+        let ys = linear_rows(&ln1[start..start + sl.len()], &p.w1.data, h, f, &p.b1);
+        for (o, y) in sl.iter_mut().zip(ys) {
+            *o = y.into_iter().map(|a| requant8(a as i64, eq.rq_gelu_in)).collect();
+        }
+    });
+    let mut mid: Vec<Vec<i8>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut mid, PAR_CHUNK, |start, sl| {
+        for (i, o) in sl.iter_mut().enumerate() {
+            *o = gelu_row(&gelu_in[start + i], eq.gelu);
+        }
+    });
+    let mut res2: Vec<Vec<i64>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut res2, PAR_CHUNK, |start, sl| {
+        let ys = linear_rows(&mid[start..start + sl.len()], &p.w2.data, f, h, &p.b2);
+        for ((o, y), lr) in sl.iter_mut().zip(ys).zip(&ln1[start..start + sl.len()]) {
+            *o = y
+                .iter()
+                .zip(lr)
+                .map(|(&fa, &li)| {
+                    requant32(fa as i64, eq.rq_ffn2) + requant32(li as i64, eq.rq_res2in)
+                })
+                .collect();
+        }
+    });
+    let mut out: Vec<Vec<i8>> = vec![Vec::new(); m];
+    pool::parallel_chunks(&mut out, PAR_CHUNK, |start, sl| {
+        for (i, o) in sl.iter_mut().enumerate() {
+            *o = layernorm_row(&res2[start + i], &p.ln2_gamma, &p.ln2_beta, eq.ln2);
+        }
+    });
+
+    EncoderStages { q: q8, k: k8, v: v8, probs, att, res, ln1, gelu_in, mid, res2, out }
+}
+
+/// The original single-threaded row-at-a-time forward. Kept as the
+/// bit-exactness baseline that [`encoder_forward`] must reproduce
+/// exactly (enforced by `fast_forward_matches_reference` below and the
+/// golden-vector integration tests).
+pub fn encoder_forward_reference(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
+    let h = p.cfg.hidden;
+    let heads = p.cfg.heads;
+    let d = p.cfg.head_dim();
+    let f = p.cfg.ffn;
+    let m = x.len();
     let eq = &p.eq;
 
-    // ---- Layer 0: Q/K/V linears + Quant ----
     let lin8 = |w: &[i8], b: &[i32], site| -> Vec<Vec<i8>> {
         x.iter()
             .map(|row| {
@@ -48,13 +187,11 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
     let k8 = lin8(&p.wk.data, &p.bk, eq.rq_k);
     let v8 = lin8(&p.wv.data, &p.bv, eq.rq_v);
 
-    // ---- Layers 1-3: per-head attention ----
     let mut probs = vec![vec![vec![0i8; m]; m]; heads];
     let mut att = vec![vec![0i8; h]; m];
     for hd in 0..heads {
         let lo = hd * d;
         for r in 0..m {
-            // scores row: q_r . k_c over the head slice
             let scores: Vec<i32> = (0..m)
                 .map(|c| {
                     let mut acc = 0i32;
@@ -77,7 +214,6 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
         }
     }
 
-    // ---- Layer 4: projection + residual + LayerNorm ----
     let res: Vec<Vec<i64>> = x
         .iter()
         .zip(&att)
@@ -96,7 +232,6 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
         .map(|r| layernorm_row(r, &p.ln1_gamma, &p.ln1_beta, eq.ln1))
         .collect();
 
-    // ---- Layer 5: FFN + residual + LayerNorm ----
     let gelu_in: Vec<Vec<i8>> = ln1
         .iter()
         .map(|r| {
@@ -146,4 +281,41 @@ pub fn rows_i8(t: &crate::util::tensorfile::TensorData<i8>) -> Vec<Vec<i8>> {
 pub fn rows_i64(t: &crate::util::tensorfile::TensorData<i64>) -> Vec<Vec<i64>> {
     let (m, n) = (t.dims[0], t.dims[1]);
     (0..m).map(|r| t.data[r * n..(r + 1) * n].to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ibert::config::ModelConfig;
+    use crate::ibert::weights::synthetic_input;
+
+    #[test]
+    fn fast_forward_matches_reference() {
+        // small synthetic model: every stage of the parallel/blocked
+        // forward must be bit-identical to the row-at-a-time original
+        let cfg = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 2 };
+        let p = ModelParams::synthetic(cfg, 0xC0FFEE);
+        for m in [1usize, 2, 7, 19, 32] {
+            let x = synthetic_input(cfg.hidden, m, 42 + m as u64);
+            let fast = encoder_forward(&p, &x);
+            let slow = encoder_forward_reference(&p, &x);
+            assert_eq!(fast.q, slow.q, "q mismatch at m={m}");
+            assert_eq!(fast.probs, slow.probs, "probs mismatch at m={m}");
+            assert_eq!(fast.att, slow.att, "att mismatch at m={m}");
+            assert_eq!(fast.res, slow.res, "res mismatch at m={m}");
+            assert_eq!(fast.ln1, slow.ln1, "ln1 mismatch at m={m}");
+            assert_eq!(fast.mid, slow.mid, "mid mismatch at m={m}");
+            assert_eq!(fast.out, slow.out, "out mismatch at m={m}");
+        }
+    }
+
+    #[test]
+    fn model_forward_chains_encoders() {
+        let cfg = ModelConfig { hidden: 48, heads: 12, ffn: 96, max_seq: 8, num_encoders: 2 };
+        let p = ModelParams::synthetic(cfg, 7);
+        let x = synthetic_input(cfg.hidden, 4, 9);
+        let once = encoder_forward(&p, &x).out;
+        let twice = model_forward(&p, &x, 2);
+        assert_eq!(twice, encoder_forward(&p, &once).out);
+    }
 }

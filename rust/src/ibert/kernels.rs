@@ -5,10 +5,22 @@
 //! and in Functional mode the emitted rows carry real integers computed
 //! with the bit-exact operators of compute.rs — so a simulated six-FPGA
 //! cluster produces the same bytes as the JAX reference.
+//!
+//! Burst-aware pacing: every input row carries an explicit (possibly
+//! virtual) arrival time — `KernelIo::rows` supplies it for both single
+//! packets and coalesced runs — and every pacer decision is a pure
+//! function of those times (`ready = max(arrival, gate)`), never of the
+//! dispatch instant. That is what makes the coalesced engine emit each
+//! row at exactly the cycle the uncoalesced engine would (the
+//! golden-determinism contract in rust/tests/proptests.rs). Emission
+//! goes through an [`OutStream`]: whole backlogs ship as one burst on
+//! intra-FPGA edges, or row-by-row at the exact scheduled cycle via
+//! deferred wakes everywhere else.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
+use crate::gmi::ops::TxQueue;
 use crate::sim::engine::{KernelBehavior, KernelIo, START_TAG};
 use crate::sim::packet::{MsgMeta, Packet, Payload};
 
@@ -16,6 +28,9 @@ use super::compute;
 use super::timing::PeConfig;
 use super::weights::ModelParams;
 use crate::gmi::Out;
+
+/// Wake tag used by every kernel's output stream (START_TAG is u64::MAX).
+const OUT_WAKE: u64 = u64::MAX - 1;
 
 /// Simulation mode: pure timing (Timing payloads) or functional
 /// (real integer rows, bit-exact vs the reference).
@@ -37,19 +52,11 @@ impl Mode {
     }
 }
 
-#[inline]
-fn tag_of(inference: u32, row: u32) -> u64 {
-    ((inference as u64) << 32) | row as u64
-}
-#[inline]
-fn untag(t: u64) -> (u32, u32) {
-    ((t >> 32) as u32, t as u32)
-}
-
 /// Serialize row emissions: a pipelined unit with a one-time fill depth
-/// and a per-row initiation interval. A row arriving at `now` emits at
-/// max(now + fill + ii, last_emit + ii) — steady-state output interval is
-/// exactly `ii` (the paper's measured I = 767 for the 768-wide linears).
+/// and a per-row initiation interval. A row whose inputs are ready at
+/// `t` emits at max(t + fill + ii, last_emit + ii) — steady-state output
+/// interval is exactly `ii` (the paper's measured I = 767 for the
+/// 768-wide linears).
 #[derive(Debug, Default, Clone, Copy)]
 struct EmitPacer {
     last_emit: Option<u64>,
@@ -63,7 +70,62 @@ impl EmitPacer {
     }
 }
 
-fn row_i8(p: Payload) -> Option<Vec<i8>> {
+/// The output side of a compute kernel: pacer + emission queue. Rows are
+/// queued with their exact emission cycle; the queue ships them as
+/// coalesced bursts (intra-FPGA destination) or row-by-row wakes.
+struct OutStream {
+    out: Out,
+    fill: u64,
+    pacer: EmitPacer,
+    tx: TxQueue,
+    wake_at: Option<u64>,
+}
+
+impl OutStream {
+    fn new(out: Out, fill: u64) -> OutStream {
+        OutStream {
+            out,
+            fill,
+            pacer: EmitPacer::default(),
+            tx: TxQueue::default(),
+            wake_at: None,
+        }
+    }
+
+    /// Pace one output row whose inputs became ready at `ready_t`.
+    fn push(&mut self, ready_t: u64, ii: u64, meta: MsgMeta, payload: Payload) {
+        let at = self.pacer.schedule(ready_t, self.fill, ii);
+        self.tx.push(meta, at, payload);
+    }
+
+    fn pump(&mut self, io: &mut KernelIo) {
+        if io.can_burst(self.out.dst) {
+            // a compute kernel has exactly one output stream, so the
+            // whole backlog may ship as coalesced bursts
+            self.tx.ship_bursts(self.out, io);
+            return;
+        }
+        self.tx.emit_due(self.out, io);
+        match self.tx.front_time() {
+            None => self.wake_at = None,
+            Some(t) => {
+                if self.wake_at.is_none_or(|w| t < w) {
+                    io.wake_in(t - io.now, OUT_WAKE);
+                    self.wake_at = Some(t);
+                }
+            }
+        }
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == OUT_WAKE {
+            self.wake_at = None;
+            self.pump(io);
+        }
+    }
+}
+
+fn row_i8(p: Payload) -> Option<Arc<Vec<i8>>> {
     match p {
         Payload::RowI8(v) => Some(v),
         _ => None,
@@ -89,15 +151,63 @@ pub enum LinearWhich {
     Ffn2,
 }
 
+fn linear_out_bytes(which: LinearWhich, hidden: usize, ffn: usize) -> usize {
+    match which {
+        LinearWhich::Q | LinearWhich::K | LinearWhich::V => hidden,
+        LinearWhich::Proj | LinearWhich::Ffn2 => 4 * hidden,
+        LinearWhich::Ffn1 => ffn,
+    }
+}
+
+fn linear_compute_row(which: LinearWhich, p: &ModelParams, x: &[i8]) -> Payload {
+    let (h, f) = (p.cfg.hidden, p.cfg.ffn);
+    let eq = &p.eq;
+    match which {
+        LinearWhich::Q => Payload::row_i8(
+            compute::linear_row(x, &p.wq.data, h, h, &p.bq)
+                .into_iter()
+                .map(|a| compute::requant8(a as i64, eq.rq_q))
+                .collect(),
+        ),
+        LinearWhich::K => Payload::row_i8(
+            compute::linear_row(x, &p.wk.data, h, h, &p.bk)
+                .into_iter()
+                .map(|a| compute::requant8(a as i64, eq.rq_k))
+                .collect(),
+        ),
+        LinearWhich::V => Payload::row_i8(
+            compute::linear_row(x, &p.wv.data, h, h, &p.bv)
+                .into_iter()
+                .map(|a| compute::requant8(a as i64, eq.rq_v))
+                .collect(),
+        ),
+        LinearWhich::Proj => Payload::row_i32(
+            compute::linear_row(x, &p.wo.data, h, h, &p.bo)
+                .into_iter()
+                .map(|a| compute::requant32(a as i64, eq.rq_proj) as i32)
+                .collect(),
+        ),
+        LinearWhich::Ffn1 => Payload::row_i8(
+            compute::linear_row(x, &p.w1.data, h, f, &p.b1)
+                .into_iter()
+                .map(|a| compute::gelu_i8(compute::requant8(a as i64, eq.rq_gelu_in), eq.gelu))
+                .collect(),
+        ),
+        LinearWhich::Ffn2 => Payload::row_i32(
+            compute::linear_row(x, &p.w2.data, f, h, &p.b2)
+                .into_iter()
+                .map(|a| compute::requant32(a as i64, eq.rq_ffn2) as i32)
+                .collect(),
+        ),
+    }
+}
+
 /// Linear (+Quant / +GELU) kernel: consumes one int8 row, emits one row.
 pub struct LinearKernel {
     pub which: LinearWhich,
-    pub out: Out,
     pub mode: Mode,
     pub row_cycles: u64,
-    pub fill: u64,
-    pacer: EmitPacer,
-    pending: HashMap<u64, (MsgMeta, Option<Vec<i8>>)>,
+    out: OutStream,
 }
 
 impl LinearKernel {
@@ -113,99 +223,35 @@ impl LinearKernel {
             LinearWhich::Ffn1 => pe.ffn1_row_cycles(h, f),
             LinearWhich::Ffn2 => pe.ffn2_row_cycles(h, f),
         };
-        LinearKernel {
-            which,
-            out,
-            mode,
-            row_cycles,
-            fill: pe.pipe_fill,
-            pacer: EmitPacer::default(),
-            pending: HashMap::new(),
-        }
+        LinearKernel { which, mode, row_cycles, out: OutStream::new(out, pe.pipe_fill) }
     }
-
-    fn out_bytes(&self, p: &ModelParamsDims) -> usize {
-        match self.which {
-            LinearWhich::Q | LinearWhich::K | LinearWhich::V => p.hidden,
-            LinearWhich::Proj | LinearWhich::Ffn2 => 4 * p.hidden,
-            LinearWhich::Ffn1 => p.ffn,
-        }
-    }
-
-    fn compute_row(&self, p: &ModelParams, x: &[i8]) -> Payload {
-        let (h, f) = (p.cfg.hidden, p.cfg.ffn);
-        let eq = &p.eq;
-        match self.which {
-            LinearWhich::Q => Payload::RowI8(
-                compute::linear_row(x, &p.wq.data, h, h, &p.bq)
-                    .into_iter()
-                    .map(|a| compute::requant8(a as i64, eq.rq_q))
-                    .collect(),
-            ),
-            LinearWhich::K => Payload::RowI8(
-                compute::linear_row(x, &p.wk.data, h, h, &p.bk)
-                    .into_iter()
-                    .map(|a| compute::requant8(a as i64, eq.rq_k))
-                    .collect(),
-            ),
-            LinearWhich::V => Payload::RowI8(
-                compute::linear_row(x, &p.wv.data, h, h, &p.bv)
-                    .into_iter()
-                    .map(|a| compute::requant8(a as i64, eq.rq_v))
-                    .collect(),
-            ),
-            LinearWhich::Proj => Payload::RowI32(
-                compute::linear_row(x, &p.wo.data, h, h, &p.bo)
-                    .into_iter()
-                    .map(|a| compute::requant32(a as i64, eq.rq_proj) as i32)
-                    .collect(),
-            ),
-            LinearWhich::Ffn1 => Payload::RowI8(
-                compute::linear_row(x, &p.w1.data, h, f, &p.b1)
-                    .into_iter()
-                    .map(|a| compute::gelu_i8(compute::requant8(a as i64, eq.rq_gelu_in), eq.gelu))
-                    .collect(),
-            ),
-            LinearWhich::Ffn2 => Payload::RowI32(
-                compute::linear_row(x, &p.w2.data, f, h, &p.b2)
-                    .into_iter()
-                    .map(|a| compute::requant32(a as i64, eq.rq_ffn2) as i32)
-                    .collect(),
-            ),
-        }
-    }
-}
-
-struct ModelParamsDims {
-    hidden: usize,
-    ffn: usize,
 }
 
 impl KernelBehavior for LinearKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
-        let t = tag_of(pkt.meta.inference, pkt.meta.row);
-        let data = if self.mode.is_functional() { row_i8(pkt.payload) } else { None };
-        self.pending.insert(t, (pkt.meta, data));
-        let emit_at = self.pacer.schedule(io.now, self.fill, self.row_cycles);
-        io.wake_in(emit_at - io.now, t);
+        let LinearKernel { which, mode, row_cycles, out } = self;
+        let (which, row_cycles) = (*which, *row_cycles);
+        let dims = match mode.params() {
+            Some(p) => (p.cfg.hidden, p.cfg.ffn),
+            None => (768, 3072),
+        };
+        let stream = out.out.stream.unwrap_or(0);
+        io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+            io2.consume(payload.bytes());
+            let pl = match (mode.params(), row_i8(payload)) {
+                (Some(p), Some(x)) => linear_compute_row(which, p, &x),
+                _ => Payload::Timing(linear_out_bytes(which, dims.0, dims.1)),
+            };
+            out.push(at, row_cycles, MsgMeta { stream, ..meta }, pl);
+        });
+        self.out.pump(io);
     }
 
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
         if tag == START_TAG {
             return;
         }
-        let Some((meta, data)) = self.pending.remove(&tag) else { return };
-        let dims = match self.mode.params() {
-            Some(p) => ModelParamsDims { hidden: p.cfg.hidden, ffn: p.cfg.ffn },
-            None => ModelParamsDims { hidden: 768, ffn: 3072 },
-        };
-        let payload = match (&self.mode, data) {
-            (Mode::Functional(p), Some(x)) => self.compute_row(p, &x),
-            _ => Payload::Timing(self.out_bytes(&dims)),
-        };
-        let meta = MsgMeta { stream: self.out.stream.unwrap_or(0), ..meta };
-        io.send(self.out.dst, meta, payload);
+        self.out.on_wake(tag, io);
     }
 
     fn name(&self) -> String {
@@ -220,119 +266,123 @@ impl KernelBehavior for LinearKernel {
 #[derive(Default)]
 struct AttnInf {
     m: u32,
-    k_rows: BTreeMap<u32, Vec<i8>>,
+    k_rows: BTreeMap<u32, Arc<Vec<i8>>>,
     k_got: u32,
-    q_pending: BTreeMap<u32, Option<Vec<i8>>>,
-    emitted: u32,
+    /// latest K-row arrival: the gate time once k_got == m
+    k_done: u64,
+    /// Q rows waiting for the K matrix: row -> (arrival, data)
+    q_pending: BTreeMap<u32, (u64, Option<Arc<Vec<i8>>>)>,
+    queued: u32,
 }
 
 /// One attention head: buffers K (stream 1), streams Q rows (stream 0)
 /// into score rows, applies i-Softmax, emits int8 probability rows.
 pub struct AttentionHeadKernel {
     pub head: usize,
-    pub out: Out,
     pub mode: Mode,
     pub pe: PeConfig,
-    pacer: EmitPacer,
+    out: OutStream,
     inf: HashMap<u32, AttnInf>,
 }
 
 impl AttentionHeadKernel {
     pub fn new(head: usize, out: Out, mode: Mode, pe: PeConfig) -> Self {
-        AttentionHeadKernel { head, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
-    }
-
-    fn drain_ready(&mut self, inference: u32, io: &mut KernelIo) {
-        let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
-        let Some(st) = self.inf.get_mut(&inference) else { return };
-        if st.m == 0 || st.k_got < st.m {
-            return;
-        }
-        let m = st.m as u64;
-        let cycles = self.pe.attn_row_cycles(m, d) + self.pe.softmax_row_cycles(m);
-        let fill = self.pe.pipe_fill;
-        let rows: Vec<u32> = st.q_pending.keys().copied().collect();
-        for r in rows {
-            let emit_at = self.pacer.schedule(io.now, fill, cycles);
-            io.wake_in(emit_at - io.now, tag_of(inference, r));
+        AttentionHeadKernel {
+            head,
+            mode,
+            pe,
+            out: OutStream::new(out, pe.pipe_fill),
+            inf: HashMap::new(),
         }
     }
 }
 
+fn attn_score_row(st: &AttnInf, q: &[i8], m: u32, p: &ModelParams) -> Payload {
+    let scores: Vec<i32> = (0..m)
+        .map(|c| {
+            let krow = &st.k_rows[&c];
+            let mut acc = 0i32;
+            for (qq, kk) in q.iter().zip(krow.iter()) {
+                acc += *qq as i32 * *kk as i32;
+            }
+            acc
+        })
+        .collect();
+    Payload::row_i8(compute::softmax_row(&scores, p.eq.softmax))
+}
+
 impl KernelBehavior for AttentionHeadKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
-        let inference = pkt.meta.inference;
-        let functional = self.mode.is_functional();
-        {
-            let st = self.inf.entry(inference).or_default();
-            st.m = st.m.max(pkt.meta.rows);
-            match pkt.meta.stream {
+        let AttentionHeadKernel { mode, pe, out, inf, .. } = self;
+        let pe = *pe;
+        let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
+        let stream_tag = out.out.stream.unwrap_or(0);
+        io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+            io2.consume(payload.bytes());
+            let inference = meta.inference;
+            let st = inf.entry(inference).or_default();
+            st.m = st.m.max(meta.rows);
+            let m = st.m;
+            let cycles = pe.attn_row_cycles(m as u64, d) + pe.softmax_row_cycles(m as u64);
+            match meta.stream {
                 1 => {
-                    if functional {
-                        if let Payload::RowI8(v) = pkt.payload {
-                            st.k_rows.insert(pkt.meta.row, v);
+                    if mode.is_functional() {
+                        if let Some(v) = row_i8(payload) {
+                            st.k_rows.insert(meta.row, v);
                         }
                     }
                     st.k_got += 1;
-                    if st.k_got == st.m {
-                        self.drain_ready(inference, io);
+                    st.k_done = st.k_done.max(at);
+                    if st.k_got == m && m > 0 {
+                        // drain Q rows buffered behind the K matrix, in
+                        // row order, gated at the K completion time
+                        let pending = std::mem::take(&mut st.q_pending);
+                        for (row, (arr_q, data)) in pending {
+                            let ready = arr_q.max(st.k_done);
+                            let pl = match (mode.params(), data) {
+                                (Some(p), Some(q)) => attn_score_row(st, &q, m, p),
+                                _ => Payload::Timing(m as usize),
+                            };
+                            let meta2 =
+                                MsgMeta { stream: stream_tag, row, rows: m, inference };
+                            out.push(ready, cycles, meta2, pl);
+                            st.queued += 1;
+                        }
                     }
                 }
                 _ => {
-                    let data = if functional { row_i8(pkt.payload) } else { None };
-                    let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
-                    let st = self.inf.get_mut(&inference).unwrap();
-                    st.q_pending.insert(pkt.meta.row, data);
-                    if st.k_got == st.m && st.m > 0 {
-                        // schedule just this row
-                        let m = st.m as u64;
-                        let cycles =
-                            self.pe.attn_row_cycles(m, d) + self.pe.softmax_row_cycles(m);
-                        let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
-                        io.wake_in(emit_at - io.now, tag_of(inference, pkt.meta.row));
+                    let data = if mode.is_functional() { row_i8(payload) } else { None };
+                    if st.k_got == m && m > 0 {
+                        let ready = at.max(st.k_done);
+                        let pl = match (mode.params(), data) {
+                            (Some(p), Some(q)) => attn_score_row(st, &q, m, p),
+                            _ => Payload::Timing(m as usize),
+                        };
+                        let meta2 = MsgMeta {
+                            stream: stream_tag,
+                            row: meta.row,
+                            rows: m,
+                            inference,
+                        };
+                        out.push(ready, cycles, meta2, pl);
+                        st.queued += 1;
+                    } else {
+                        st.q_pending.insert(meta.row, (at, data));
                     }
                 }
             }
-        }
+            if st.m > 0 && st.queued == st.m {
+                inf.remove(&inference);
+            }
+        });
+        self.out.pump(io);
     }
 
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
         if tag == START_TAG {
             return;
         }
-        let (inference, row) = untag(tag);
-        let Some(st) = self.inf.get_mut(&inference) else { return };
-        let Some(q) = st.q_pending.remove(&row) else { return };
-        let m = st.m;
-        let payload = match (&self.mode, q) {
-            (Mode::Functional(p), Some(qrow)) => {
-                let scores: Vec<i32> = (0..m)
-                    .map(|c| {
-                        let krow = &st.k_rows[&c];
-                        let mut acc = 0i32;
-                        for (qq, kk) in qrow.iter().zip(krow) {
-                            acc += *qq as i32 * *kk as i32;
-                        }
-                        acc
-                    })
-                    .collect();
-                Payload::RowI8(compute::softmax_row(&scores, p.eq.softmax))
-            }
-            _ => Payload::Timing(m as usize),
-        };
-        st.emitted += 1;
-        let done = st.emitted == m;
-        let meta = MsgMeta {
-            stream: self.out.stream.unwrap_or(0),
-            row,
-            rows: m,
-            inference,
-        };
-        io.send(self.out.dst, meta, payload);
-        if done {
-            self.inf.remove(&inference);
-        }
+        self.out.on_wake(tag, io);
     }
 
     fn name(&self) -> String {
@@ -347,105 +397,119 @@ impl KernelBehavior for AttentionHeadKernel {
 #[derive(Default)]
 struct SmmInf {
     m: u32,
-    v_rows: BTreeMap<u32, Vec<i8>>,
+    v_rows: BTreeMap<u32, Arc<Vec<i8>>>,
     v_got: u32,
-    p_pending: BTreeMap<u32, Option<Vec<i8>>>,
-    emitted: u32,
+    v_done: u64,
+    p_pending: BTreeMap<u32, (u64, Option<Arc<Vec<i8>>>)>,
+    queued: u32,
 }
 
 /// One head of the Softmax Matrix Multiply (§7.1.3): prob rows (stream 0)
 /// x buffered V slice (stream 1) -> requantised int8 attention segments.
 pub struct SoftmaxMMKernel {
     pub head: usize,
-    pub out: Out,
     pub mode: Mode,
     pub pe: PeConfig,
-    pacer: EmitPacer,
+    out: OutStream,
     inf: HashMap<u32, SmmInf>,
 }
 
 impl SoftmaxMMKernel {
     pub fn new(head: usize, out: Out, mode: Mode, pe: PeConfig) -> Self {
-        SoftmaxMMKernel { head, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
+        SoftmaxMMKernel {
+            head,
+            mode,
+            pe,
+            out: OutStream::new(out, pe.pipe_fill),
+            inf: HashMap::new(),
+        }
     }
+}
 
-    fn schedule_row(&mut self, inference: u32, row: u32, m: u64, io: &mut KernelIo) {
-        let d = self.mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
-        let cycles = self.pe.smm_row_cycles(m, d);
-        let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
-        io.wake_in(emit_at - io.now, tag_of(inference, row));
+fn smm_row(st: &SmmInf, probs: &[i8], m: u32, p: &ModelParams) -> Payload {
+    let d = p.cfg.head_dim();
+    let mut seg = vec![0i8; d];
+    for (j, s) in seg.iter_mut().enumerate() {
+        let mut acc = 0i32;
+        for c in 0..m {
+            acc += probs[c as usize] as i32 * st.v_rows[&c][j] as i32;
+        }
+        *s = compute::requant8(acc as i64, p.eq.rq_att);
     }
+    Payload::row_i8(seg)
 }
 
 impl KernelBehavior for SoftmaxMMKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
-        let inference = pkt.meta.inference;
-        let functional = self.mode.is_functional();
-        let st = self.inf.entry(inference).or_default();
-        st.m = st.m.max(pkt.meta.rows);
-        match pkt.meta.stream {
-            1 => {
-                if functional {
-                    if let Payload::RowI8(v) = pkt.payload {
-                        st.v_rows.insert(pkt.meta.row, v);
+        let SoftmaxMMKernel { head, mode, pe, out, inf } = self;
+        let pe = *pe;
+        let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
+        let default_stream = *head as u8;
+        let stream_tag = out.out.stream.unwrap_or(default_stream);
+        io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+            io2.consume(payload.bytes());
+            let inference = meta.inference;
+            let st = inf.entry(inference).or_default();
+            st.m = st.m.max(meta.rows);
+            let m = st.m;
+            let cycles = pe.smm_row_cycles(m as u64, d);
+            match meta.stream {
+                1 => {
+                    if mode.is_functional() {
+                        if let Some(v) = row_i8(payload) {
+                            st.v_rows.insert(meta.row, v);
+                        }
+                    }
+                    st.v_got += 1;
+                    st.v_done = st.v_done.max(at);
+                    if st.v_got == m && m > 0 {
+                        let pending = std::mem::take(&mut st.p_pending);
+                        for (row, (arr_p, data)) in pending {
+                            let ready = arr_p.max(st.v_done);
+                            let pl = match (mode.params(), data) {
+                                (Some(p), Some(pr)) => smm_row(st, &pr, m, p),
+                                _ => Payload::Timing(64),
+                            };
+                            let meta2 =
+                                MsgMeta { stream: stream_tag, row, rows: m, inference };
+                            out.push(ready, cycles, meta2, pl);
+                            st.queued += 1;
+                        }
                     }
                 }
-                st.v_got += 1;
-                if st.v_got == st.m {
-                    let m = st.m as u64;
-                    let rows: Vec<u32> = st.p_pending.keys().copied().collect();
-                    for r in rows {
-                        self.schedule_row(inference, r, m, io);
+                _ => {
+                    let data = if mode.is_functional() { row_i8(payload) } else { None };
+                    if st.v_got == m && m > 0 {
+                        let ready = at.max(st.v_done);
+                        let pl = match (mode.params(), data) {
+                            (Some(p), Some(pr)) => smm_row(st, &pr, m, p),
+                            _ => Payload::Timing(64),
+                        };
+                        let meta2 = MsgMeta {
+                            stream: stream_tag,
+                            row: meta.row,
+                            rows: m,
+                            inference,
+                        };
+                        out.push(ready, cycles, meta2, pl);
+                        st.queued += 1;
+                    } else {
+                        st.p_pending.insert(meta.row, (at, data));
                     }
                 }
             }
-            _ => {
-                let data = if functional { row_i8(pkt.payload) } else { None };
-                st.p_pending.insert(pkt.meta.row, data);
-                let (m, ready) = (st.m as u64, st.v_got == st.m && st.m > 0);
-                if ready {
-                    self.schedule_row(inference, pkt.meta.row, m, io);
-                }
+            if st.m > 0 && st.queued == st.m {
+                inf.remove(&inference);
             }
-        }
+        });
+        self.out.pump(io);
     }
 
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
         if tag == START_TAG {
             return;
         }
-        let (inference, row) = untag(tag);
-        let Some(st) = self.inf.get_mut(&inference) else { return };
-        let Some(probs) = st.p_pending.remove(&row) else { return };
-        let m = st.m;
-        let payload = match (&self.mode, probs) {
-            (Mode::Functional(p), Some(prow)) => {
-                let d = p.cfg.head_dim();
-                let mut seg = vec![0i8; d];
-                for (j, s) in seg.iter_mut().enumerate() {
-                    let mut acc = 0i32;
-                    for c in 0..m {
-                        acc += prow[c as usize] as i32 * st.v_rows[&c][j] as i32;
-                    }
-                    *s = compute::requant8(acc as i64, p.eq.rq_att);
-                }
-                Payload::RowI8(seg)
-            }
-            _ => Payload::Timing(64),
-        };
-        st.emitted += 1;
-        let done = st.emitted == m;
-        let meta = MsgMeta {
-            stream: self.out.stream.unwrap_or(self.head as u8),
-            row,
-            rows: m,
-            inference,
-        };
-        io.send(self.out.dst, meta, payload);
-        if done {
-            self.inf.remove(&inference);
-        }
+        self.out.on_wake(tag, io);
     }
 
     fn name(&self) -> String {
@@ -465,115 +529,112 @@ pub enum LnWhich {
 
 #[derive(Default)]
 struct LnInf {
-    main: BTreeMap<u32, Option<Vec<i32>>>,
-    resid: BTreeMap<u32, Option<Vec<i8>>>,
+    main: BTreeMap<u32, (u64, Option<Arc<Vec<i32>>>)>,
+    resid: BTreeMap<u32, (u64, Option<Arc<Vec<i8>>>)>,
     /// wire bytes still sitting in the input FIFO per row (the residual
     /// matrix genuinely occupies the FIFO until the attention path
     /// catches up — the paper's §8.2.1 sizing rule)
     fifo_bytes: BTreeMap<u32, usize>,
-    emitted: u32,
+    queued: u32,
     rows: u32,
+}
+
+fn ln_row(which: LnWhich, p: &ModelParams, main: &[i32], resid: &[i8]) -> Payload {
+    let eq = &p.eq;
+    let (site, gamma, beta, ln) = match which {
+        LnWhich::Ln1 => (eq.rq_resin, &p.ln1_gamma, &p.ln1_beta, eq.ln1),
+        LnWhich::Ln2 => (eq.rq_res2in, &p.ln2_gamma, &p.ln2_beta, eq.ln2),
+    };
+    let wide: Vec<i64> = main
+        .iter()
+        .zip(resid.iter())
+        .map(|(&mv, &rv)| mv as i64 + compute::requant32(rv as i64, site))
+        .collect();
+    Payload::row_i8(compute::layernorm_row(&wide, gamma, beta, ln))
 }
 
 /// Add & Norm: wide rows (stream 0) + int8 residual rows (stream 1) ->
 /// requant-add -> i-LayerNorm -> int8 rows.
 pub struct LayerNormKernel {
     pub which: LnWhich,
-    pub out: Out,
     pub mode: Mode,
     pub pe: PeConfig,
-    pacer: EmitPacer,
+    out: OutStream,
     inf: HashMap<u32, LnInf>,
 }
 
 impl LayerNormKernel {
     pub fn new(which: LnWhich, out: Out, mode: Mode, pe: PeConfig) -> Self {
-        LayerNormKernel { which, out, mode, pe, pacer: EmitPacer::default(), inf: HashMap::new() }
+        LayerNormKernel {
+            which,
+            mode,
+            pe,
+            out: OutStream::new(out, pe.pipe_fill),
+            inf: HashMap::new(),
+        }
     }
 }
 
 impl KernelBehavior for LayerNormKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        // NOT consumed yet: rows wait in the input FIFO until both the
-        // wide row and its residual partner arrive (consume on emission)
-        let _ = &io;
-        let inference = pkt.meta.inference;
-        let row = pkt.meta.row;
-        let functional = self.mode.is_functional();
-        let st = self.inf.entry(inference).or_default();
-        st.rows = st.rows.max(pkt.meta.rows);
-        *st.fifo_bytes.entry(row).or_insert(0) += pkt.wire_bytes();
-        match pkt.meta.stream {
-            1 => {
-                let data = if functional {
-                    match pkt.payload {
-                        Payload::RowI8(v) => Some(v),
-                        _ => None,
-                    }
-                } else {
-                    None
-                };
-                st.resid.insert(row, data);
+        let LayerNormKernel { which, mode, pe, out, inf } = self;
+        let (which, pe) = (*which, *pe);
+        let h = mode.params().map(|p| p.cfg.hidden).unwrap_or(768);
+        let cycles = pe.ln_row_cycles(h as u64);
+        let stream_tag = out.out.stream.unwrap_or(0);
+        io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+            // NOT consumed yet: rows wait in the input FIFO until both the
+            // wide row and its residual partner arrive
+            let inference = meta.inference;
+            let row = meta.row;
+            let functional = mode.is_functional();
+            let st = inf.entry(inference).or_default();
+            st.rows = st.rows.max(meta.rows);
+            *st.fifo_bytes.entry(row).or_insert(0) += payload.bytes();
+            match meta.stream {
+                1 => {
+                    let data = if functional { row_i8(payload) } else { None };
+                    st.resid.insert(row, (at, data));
+                }
+                _ => {
+                    let data = if functional {
+                        match payload {
+                            Payload::RowI32(v) => Some(v),
+                            _ => None,
+                        }
+                    } else {
+                        None
+                    };
+                    st.main.insert(row, (at, data));
+                }
             }
-            _ => {
-                let data = if functional {
-                    match pkt.payload {
-                        Payload::RowI32(v) => Some(v),
-                        _ => None,
-                    }
-                } else {
-                    None
+            if st.main.contains_key(&row) && st.resid.contains_key(&row) {
+                let (arr_m, main) = st.main.remove(&row).unwrap();
+                let (arr_r, resid) = st.resid.remove(&row).unwrap();
+                // both rows leave the input FIFO now
+                io2.consume(st.fifo_bytes.remove(&row).unwrap_or(0));
+                let ready = arr_m.max(arr_r);
+                let pl = match (mode.params(), main, resid) {
+                    (Some(p), Some(mn), Some(rs)) => ln_row(which, p, &mn, &rs),
+                    _ => Payload::Timing(h),
                 };
-                st.main.insert(row, data);
+                let meta2 =
+                    MsgMeta { stream: stream_tag, row, rows: st.rows, inference };
+                out.push(ready, cycles, meta2, pl);
+                st.queued += 1;
+                if st.queued == st.rows {
+                    inf.remove(&inference);
+                }
             }
-        }
-        if st.main.contains_key(&row) && st.resid.contains_key(&row) {
-            let h = self.mode.params().map(|p| p.cfg.hidden).unwrap_or(768) as u64;
-            let cycles = self.pe.ln_row_cycles(h);
-            let emit_at = self.pacer.schedule(io.now, self.pe.pipe_fill, cycles);
-            io.wake_in(emit_at - io.now, tag_of(inference, row));
-        }
+        });
+        self.out.pump(io);
     }
 
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
         if tag == START_TAG {
             return;
         }
-        let (inference, row) = untag(tag);
-        let Some(st) = self.inf.get_mut(&inference) else { return };
-        let (Some(main), Some(resid)) = (st.main.remove(&row), st.resid.remove(&row)) else {
-            return;
-        };
-        // both rows leave the input FIFO now
-        io.consume(st.fifo_bytes.remove(&row).unwrap_or(0));
-        let payload = match (&self.mode, main, resid) {
-            (Mode::Functional(p), Some(main), Some(resid)) => {
-                let eq = &p.eq;
-                let (site, gamma, beta, ln) = match self.which {
-                    LnWhich::Ln1 => (eq.rq_resin, &p.ln1_gamma, &p.ln1_beta, eq.ln1),
-                    LnWhich::Ln2 => (eq.rq_res2in, &p.ln2_gamma, &p.ln2_beta, eq.ln2),
-                };
-                let wide: Vec<i64> = main
-                    .iter()
-                    .zip(&resid)
-                    .map(|(&mv, &rv)| mv as i64 + compute::requant32(rv as i64, site))
-                    .collect();
-                Payload::RowI8(compute::layernorm_row(&wide, gamma, beta, ln))
-            }
-            _ => Payload::Timing(self.mode.params().map(|p| p.cfg.hidden).unwrap_or(768)),
-        };
-        st.emitted += 1;
-        let done = st.emitted == st.rows;
-        let meta = MsgMeta {
-            stream: self.out.stream.unwrap_or(0),
-            row,
-            rows: st.rows,
-            inference,
-        };
-        io.send(self.out.dst, meta, payload);
-        if done {
-            self.inf.remove(&inference);
-        }
+        self.out.on_wake(tag, io);
     }
 
     fn name(&self) -> String {
@@ -634,7 +695,7 @@ impl KernelBehavior for SourceKernel {
             return;
         }
         let payload = match &self.data {
-            Some(d) => Payload::RowI8(d[self.sent_row as usize].clone()),
+            Some(d) => Payload::row_i8(d[self.sent_row as usize].clone()),
             None => Payload::Timing(self.row_bytes),
         };
         let meta = MsgMeta {
@@ -699,15 +760,19 @@ impl SinkKernel {
 
 impl KernelBehavior for SinkKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
-        let mut d = self.data.lock().unwrap();
-        d.packets += 1;
-        let a = d.arrivals.entry(pkt.meta.inference).or_insert((0, 0));
-        a.0 += 1;
-        a.1 = io.now;
-        if let Payload::RowI8(v) = pkt.payload {
-            d.rows.entry(pkt.meta.inference).or_default().insert(pkt.meta.row, v);
-        }
+        let data = self.data.clone();
+        io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+            io2.consume(payload.bytes());
+            let mut d = data.lock().unwrap();
+            d.packets += 1;
+            let a = d.arrivals.entry(meta.inference).or_insert((0, 0));
+            a.0 += 1;
+            a.1 = a.1.max(at);
+            if let Payload::RowI8(v) = payload {
+                let row = Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone());
+                d.rows.entry(meta.inference).or_default().insert(meta.row, row);
+            }
+        });
     }
 
     fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
@@ -720,14 +785,6 @@ impl KernelBehavior for SinkKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn tags_roundtrip() {
-        let t = tag_of(7, 123);
-        assert_eq!(untag(t), (7, 123));
-        let t = tag_of(u32::MAX - 1, u32::MAX - 2);
-        assert_eq!(untag(t), (u32::MAX - 1, u32::MAX - 2));
-    }
 
     #[test]
     fn pacer_enforces_initiation_interval() {

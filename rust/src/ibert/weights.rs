@@ -91,6 +91,53 @@ impl ModelParams {
         })
     }
 
+    /// Deterministic synthetic parameters for an arbitrary geometry:
+    /// random int8 weights with the I-BERT base quantisation constants.
+    /// Lets functional simulation, the native forward, and the benches
+    /// run bit-exactly without the `make artifacts` model FS (the
+    /// operators don't care whether weights came from a checkpoint).
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> ModelParams {
+        use crate::util::rng::Rng;
+        assert!(cfg.heads > 0 && cfg.hidden % cfg.heads == 0, "hidden must split over heads");
+        let mut r = Rng::new(seed);
+        fn w(r: &mut Rng, k: usize, n: usize) -> TensorData<i8> {
+            TensorData::new(
+                vec![k, n],
+                (0..k * n).map(|_| r.range_i64(-127, 127) as i8).collect(),
+            )
+        }
+        fn b32(r: &mut Rng, n: usize) -> Vec<i32> {
+            (0..n).map(|_| r.range_i64(-50_000, 50_000) as i32).collect()
+        }
+        fn gamma(r: &mut Rng, n: usize) -> Vec<i64> {
+            (0..n).map(|_| (1i64 << 10) + r.range_i64(-200, 200)).collect()
+        }
+        fn beta(r: &mut Rng, n: usize) -> Vec<i64> {
+            (0..n).map(|_| r.range_i64(-2000, 2000)).collect()
+        }
+        let (h, f) = (cfg.hidden, cfg.ffn);
+        ModelParams {
+            cfg,
+            eq: EncoderQuant::ibert_base_sample(),
+            wq: w(&mut r, h, h),
+            wk: w(&mut r, h, h),
+            wv: w(&mut r, h, h),
+            wo: w(&mut r, h, h),
+            w1: w(&mut r, h, f),
+            w2: w(&mut r, f, h),
+            bq: b32(&mut r, h),
+            bk: b32(&mut r, h),
+            bv: b32(&mut r, h),
+            bo: b32(&mut r, h),
+            b1: b32(&mut r, f),
+            b2: b32(&mut r, h),
+            ln1_gamma: gamma(&mut r, h),
+            ln1_beta: beta(&mut r, h),
+            ln2_gamma: gamma(&mut r, h),
+            ln2_beta: beta(&mut r, h),
+        }
+    }
+
     /// Default artifacts directory: $CARGO_MANIFEST_DIR/artifacts or ./artifacts.
     pub fn default_dir() -> PathBuf {
         let mano = std::env::var("CARGO_MANIFEST_DIR").map(PathBuf::from);
@@ -116,6 +163,13 @@ impl ModelParams {
     }
 }
 
+/// Deterministic synthetic int8 input rows (pairs with
+/// [`ModelParams::synthetic`] for artifact-free runs).
+pub fn synthetic_input(hidden: usize, m: usize, seed: u64) -> Vec<Vec<i8>> {
+    let mut r = crate::util::rng::Rng::new(seed);
+    (0..m).map(|_| (0..hidden).map(|_| r.range_i64(-127, 127) as i8).collect()).collect()
+}
+
 /// Read a golden tensor from artifacts/goldens.
 pub fn load_golden(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<crate::util::tensorfile::Tensor> {
     read_tensor(artifacts_dir.as_ref().join(format!("goldens/{name}.bin")))
@@ -124,6 +178,20 @@ pub fn load_golden(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<crate:
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_params_are_deterministic() {
+        use super::super::config::ModelConfig;
+        let cfg = ModelConfig { hidden: 24, heads: 12, ffn: 48, max_seq: 8, num_encoders: 1 };
+        let a = ModelParams::synthetic(cfg, 5);
+        let b = ModelParams::synthetic(cfg, 5);
+        assert_eq!(a.wq.data, b.wq.data);
+        assert_eq!(a.ln2_beta, b.ln2_beta);
+        assert_eq!(a.w1.dims, vec![24, 48]);
+        let c = ModelParams::synthetic(cfg, 6);
+        assert_ne!(a.wq.data, c.wq.data);
+        assert_eq!(synthetic_input(24, 3, 1), synthetic_input(24, 3, 1));
+    }
 
     // Full loading is covered by integration tests (needs artifacts/).
     #[test]

@@ -39,6 +39,11 @@ USAGE: galapagos-llm <command> [options]
 COMMANDS:
   tables    [--only table1|table2|table3|table4|table5|fig15|fig16|fig20|versal|scaling]
   simulate  [--m 128] [--encoders 1] [--inferences 1] [--functional] [--interval 12]
+            [--reference]   (pre-optimization engine: heap queue, no coalescing)
+  bench     [--quick] [--out BENCH_hotpath.json]
+            hot-path suite: DES engine (reference vs coalesced), bit-exact
+            encoder compute (reference vs blocked+parallel), placer search;
+            writes the perf-trajectory JSON
   plan      [--config configs/ibert_poc.json] [--m <max_seq>] [--fleet N] [--out plan.json]
             [--replay]   (replay needs the ibert-base shape)
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
@@ -52,6 +57,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("tables") => cmd_tables(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("bench") => cmd_bench(&args),
         Some("plan") => cmd_plan(&args),
         Some("build") => cmd_build(&args),
         Some("versal") => cmd_versal(),
@@ -97,6 +103,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let inferences = args.u64_or("inferences", 1)? as u32;
     let interval = args.u64_or("interval", 12)?;
     let functional = args.bool_or("functional", false)?;
+    let reference = args.bool_or("reference", false)?;
 
     let dir = ModelParams::default_dir();
     let (mode, input) = if functional {
@@ -113,6 +120,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.interval = interval;
     cfg.input = input;
     let mut tb = build_testbed(&cfg)?;
+    if reference {
+        tb.sim.reference_mode();
+    }
     println!(
         "platform: {} kernels / {} FPGAs / {} switches; mode={}",
         tb.sim.kernel_count(),
@@ -149,6 +159,184 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                      FABRIC_CLOCK_HZ as f64 / ii as f64);
         }
     }
+    Ok(())
+}
+
+fn push_bench_case(
+    cases: &mut Vec<galapagos_llm::util::json::Json>,
+    name: &str,
+    variant: &str,
+    median_ns: f64,
+    events: u64,
+    rows: u64,
+) {
+    use galapagos_llm::util::json::Json;
+    let per_s = |n: u64| if median_ns > 0.0 { n as f64 / (median_ns / 1e9) } else { 0.0 };
+    cases.push(Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("variant", Json::Str(variant.into())),
+        ("median_ns", Json::Num(median_ns)),
+        ("events", Json::Num(events as f64)),
+        ("events_per_s", Json::Num(per_s(events))),
+        ("rows_per_s", Json::Num(per_s(rows))),
+    ]));
+}
+
+/// Benchmark one testbed configuration under one engine mode; returns
+/// the median ns per full simulation run.
+fn bench_sim_case(
+    b: &mut galapagos_llm::util::bench::Bencher,
+    cases: &mut Vec<galapagos_llm::util::json::Json>,
+    label: &str,
+    cfg: &galapagos_llm::eval::testbed::TestbedConfig,
+    reference: bool,
+) -> Result<f64> {
+    use galapagos_llm::util::bench::black_box;
+    let mut tb = build_testbed(cfg)?;
+    if reference {
+        tb.sim.reference_mode();
+    }
+    tb.sim.start();
+    tb.sim.run()?;
+    let events = tb.sim.trace.events_processed;
+    let rows = tb.sim.fabric.stats.packets;
+    let variant = if reference { "reference" } else { "coalesced" };
+    let r = b.bench(&format!("{label} [{variant}] ({events} events)"), || {
+        let mut tb = build_testbed(cfg).unwrap();
+        if reference {
+            tb.sim.reference_mode();
+        }
+        tb.sim.start();
+        black_box(tb.sim.run().unwrap());
+    });
+    let med = r.median_ns();
+    push_bench_case(cases, label, variant, med, events, rows);
+    Ok(med)
+}
+
+/// The hot-path suite: DES engine (reference heap/per-row vs calendar
+/// wheel + coalescing), native bit-exact encoder compute (row-at-a-time
+/// vs blocked+parallel), and the placer search. Writes BENCH_hotpath.json
+/// so the perf trajectory is tracked in-repo (ROADMAP "as fast as the
+/// hardware allows"; CI uploads the quick run as an artifact).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::config::ModelConfig;
+    use galapagos_llm::ibert::encoder::{encoder_forward, encoder_forward_reference};
+    use galapagos_llm::ibert::weights::synthetic_input;
+    use galapagos_llm::util::bench::{black_box, Bencher};
+    use galapagos_llm::util::json::Json;
+    use galapagos_llm::util::pool;
+
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_hotpath.json");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut cases: Vec<Json> = Vec::new();
+    let mut headlines: std::collections::BTreeMap<String, Json> = Default::default();
+    let headline = |headlines: &mut std::collections::BTreeMap<String, Json>,
+                    key: &str,
+                    reference_ns: f64,
+                    optimized_ns: f64| {
+        let speedup = reference_ns / optimized_ns.max(1.0);
+        println!("    -> {key}: {speedup:.2}x");
+        headlines.insert(key.to_string(), Json::Num(speedup));
+    };
+
+    // --- DES engine: timing-mode encoder runs ---
+    for m in [38usize, 128] {
+        let label = format!("sim timing m={m}");
+        let cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        let ref_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, true)?;
+        let opt_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, false)?;
+        headline(&mut headlines, &format!("sim_timing_m{m}_speedup"), ref_ns, opt_ns);
+    }
+
+    // --- DES engine: functional (bit-exact payloads), synthetic model ---
+    {
+        let cfg_small =
+            ModelConfig { hidden: 96, heads: 12, ffn: 384, max_seq: 32, num_encoders: 1 };
+        let params = Arc::new(galapagos_llm::ibert::weights::ModelParams::synthetic(
+            cfg_small, 0xBE9C4,
+        ));
+        let m = 24;
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(params));
+        cfg.input = Some(Arc::new(synthetic_input(cfg_small.hidden, m, 7)));
+        let label = format!("sim functional m={m} (synthetic h=96)");
+        let ref_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, true)?;
+        let opt_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, false)?;
+        headline(&mut headlines, "sim_functional_m24_speedup", ref_ns, opt_ns);
+    }
+
+    // --- native compute: bit-exact encoder forward ---
+    {
+        let dir = ModelParams::default_dir();
+        let (params, x) = match ModelParams::load(&dir) {
+            Ok(p) => {
+                let x = rows_i8(load_golden(&dir, "input_m128")?.as_i8()?);
+                (p, x)
+            }
+            Err(_) => {
+                println!("(artifacts absent: benching the native path on a synthetic model)");
+                let cfg = ModelConfig::default();
+                let x = synthetic_input(cfg.hidden, 128, 11);
+                (galapagos_llm::ibert::weights::ModelParams::synthetic(cfg, 0xF00D), x)
+            }
+        };
+        for m in [38usize, 128] {
+            let r = b.bench(&format!("native encoder_forward m={m} [reference]"), || {
+                black_box(encoder_forward_reference(&params, &x[..m]));
+            });
+            let ref_ns = r.median_ns();
+            push_bench_case(
+                &mut cases,
+                &format!("native encoder_forward m={m}"),
+                "reference",
+                ref_ns,
+                0,
+                m as u64,
+            );
+            let r = b.bench(&format!("native encoder_forward m={m} [blocked+parallel]"), || {
+                black_box(encoder_forward(&params, &x[..m]));
+            });
+            let opt_ns = r.median_ns();
+            push_bench_case(
+                &mut cases,
+                &format!("native encoder_forward m={m}"),
+                "optimized",
+                opt_ns,
+                0,
+                m as u64,
+            );
+            headline(&mut headlines, &format!("native_m{m}_speedup"), ref_ns, opt_ns);
+        }
+    }
+
+    // --- placer search (sim-calibrated cost model + parallel candidates) ---
+    {
+        let r = b.bench("placer: ibert-base on the paper fleet", || {
+            black_box(
+                placer::place(
+                    &placer::ModelShape::ibert_base(),
+                    &galapagos_llm::ibert::timing::PeConfig::default(),
+                    &placer::Fleet::paper(),
+                    &placer::SearchParams::default(),
+                )
+                .unwrap(),
+            );
+        });
+        let med = r.median_ns();
+        push_bench_case(&mut cases, "placer search (paper fleet)", "optimized", med, 0, 0);
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_hotpath/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("threads", Json::Num(pool::num_threads() as f64)),
+        ("cases", Json::Arr(cases)),
+        ("headlines", Json::from_map(&headlines)),
+    ]);
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path} (speedup target: >= 3x on sim + native headlines)");
     Ok(())
 }
 

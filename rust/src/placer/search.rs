@@ -178,22 +178,40 @@ fn refine(
         let mut improved = false;
         for &id in g.placement_order() {
             let from = placement.slot_of[id as usize];
+            // feasible target slots; each candidate's latency estimate is
+            // independent, so score them on the worker pool
+            let cands: Vec<usize> = (0..n_slots)
+                .filter(|&to| {
+                    to != from && fits(used[to] + g.usage(id, fleet.device(to)),
+                                       &fleet.capped_budget(to))
+                })
+                .collect();
+            let scores: Vec<Option<u64>> = if cands.len() >= 4 {
+                let base = &*placement;
+                crate::util::pool::parallel_map(&cands, |&to| {
+                    let mut p2 = base.clone();
+                    p2.slot_of[id as usize] = to;
+                    estimate(g, &p2, fleet, m, sp.input_interval).ok().map(|e| e.t)
+                })
+            } else {
+                cands
+                    .iter()
+                    .map(|&to| {
+                        placement.slot_of[id as usize] = to;
+                        let e = estimate(g, placement, fleet, m, sp.input_interval);
+                        placement.slot_of[id as usize] = from;
+                        e.ok().map(|e| e.t)
+                    })
+                    .collect()
+            };
+            // keep the serial tie-break: the earliest slot with a strict win
             let mut best: Option<(usize, u64)> = None;
-            for to in 0..n_slots {
-                if to == from {
-                    continue;
-                }
-                let need = used[to] + g.usage(id, fleet.device(to));
-                if !fits(need, &fleet.capped_budget(to)) {
-                    continue;
-                }
-                placement.slot_of[id as usize] = to;
-                if let Ok(e) = estimate(g, placement, fleet, m, sp.input_interval) {
-                    if e.t < best.map_or(cost, |(_, c)| c) {
-                        best = Some((to, e.t));
+            for (&to, t) in cands.iter().zip(&scores) {
+                if let Some(t) = *t {
+                    if t < best.map_or(cost, |(_, c)| c) {
+                        best = Some((to, t));
                     }
                 }
-                placement.slot_of[id as usize] = from;
             }
             if let Some((to, new_cost)) = best {
                 let gain = (cost - new_cost) as f64 / cost.max(1) as f64;

@@ -1,5 +1,20 @@
 //! The discrete-event engine: kernels are actors; the fabric computes
 //! analytic delivery times (one event per packet — see fabric.rs).
+//!
+//! Hot-path design (DESIGN.md "Event queue and row-burst coalescing"):
+//!
+//! * destinations resolve through a flat 64K id->slot table filled at
+//!   build time — dispatch and send never hash a kernel id;
+//! * the scheduler is a calendar wheel (one bucket per cycle over an
+//!   8192-cycle horizon) with a binary-heap overflow for far-future
+//!   events — O(1) push/pop at the fabric's short-horizon event density,
+//!   heap behavior for sparse tails;
+//! * same-cycle events dispatch in (kernel slot, push order) — a fixed
+//!   arbitration that makes timing independent of how events were
+//!   batched, which is what lets burst coalescing stay cycle-exact;
+//! * `KernelIo::send_burst` ships a run of consecutive rows as ONE event
+//!   whose per-row emission/arrival schedule the fabric computes
+//!   analytically (intra-FPGA edges only — `can_burst`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -10,7 +25,7 @@ use anyhow::{bail, Result};
 
 use super::fabric::{Fabric, FpgaId};
 use super::fifo::Fifo;
-use super::packet::{GlobalKernelId, MsgMeta, Packet, Payload};
+use super::packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload, DENSE_IDS};
 use super::trace::Trace;
 
 /// Wake tag delivered to every kernel at simulation start.
@@ -22,32 +37,174 @@ enum Ev {
     Wake(u64),
 }
 
-struct EventEntry {
+/// One scheduled event. Dispatch order is the total order
+/// (time, target, seq): same-cycle events go in kernel-slot order, and
+/// within one kernel in push order.
+#[derive(Debug)]
+struct QEv {
     time: u64,
+    target: u32,
     seq: u64,
-    target: usize,
     ev: Ev,
 }
 
-impl PartialEq for EventEntry {
-    fn eq(&self, o: &Self) -> bool {
-        (self.time, self.seq) == (o.time, o.seq)
+impl QEv {
+    fn key(&self) -> (u64, u32, u64) {
+        (self.time, self.target, self.seq)
+    }
+    fn hole() -> QEv {
+        QEv { time: 0, target: 0, seq: 0, ev: Ev::Wake(0) }
     }
 }
-impl Eq for EventEntry {}
-impl PartialOrd for EventEntry {
+
+impl PartialEq for QEv {
+    fn eq(&self, o: &Self) -> bool {
+        self.key() == o.key()
+    }
+}
+impl Eq for QEv {}
+impl PartialOrd for QEv {
     fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(o))
     }
 }
-impl Ord for EventEntry {
+impl Ord for QEv {
     fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(o.time, o.seq))
+        self.key().cmp(&o.key())
+    }
+}
+
+const WHEEL_BITS: u32 = 13;
+/// Wheel horizon in cycles: events within this window of the current
+/// time use O(1) buckets; anything farther falls back to the heap.
+const WHEEL_SIZE: u64 = 1 << WHEEL_BITS;
+const WHEEL_MASK: u64 = WHEEL_SIZE - 1;
+const OCC_WORDS: usize = (WHEEL_SIZE as usize) / 64;
+
+#[derive(Default)]
+struct Bucket {
+    /// entries sorted by (target, seq); `head` marks the popped prefix.
+    items: Vec<QEv>,
+    head: usize,
+}
+
+/// Calendar-wheel event queue with heap fallback.
+struct EventQueue {
+    buckets: Vec<Bucket>,
+    occ: Vec<u64>,
+    /// lower bound on every queued ring time (== last popped time).
+    cursor: u64,
+    ring_len: usize,
+    heap: BinaryHeap<Reverse<QEv>>,
+    seq: u64,
+    /// route everything through the heap (the reference scheduler).
+    heap_only: bool,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        EventQueue {
+            buckets: (0..WHEEL_SIZE).map(|_| Bucket::default()).collect(),
+            occ: vec![0u64; OCC_WORDS],
+            cursor: 0,
+            ring_len: 0,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            heap_only: false,
+        }
+    }
+
+    fn push(&mut self, time: u64, target: u32, ev: Ev) {
+        self.seq += 1;
+        let e = QEv { time, target, seq: self.seq, ev };
+        if self.heap_only || time < self.cursor || time - self.cursor >= WHEEL_SIZE {
+            self.heap.push(Reverse(e));
+            return;
+        }
+        let b = (time & WHEEL_MASK) as usize;
+        let bucket = &mut self.buckets[b];
+        debug_assert!(
+            bucket.head == bucket.items.len() || bucket.items[bucket.head].time == time,
+            "wheel bucket holds mixed timestamps"
+        );
+        let pos =
+            bucket.head + bucket.items[bucket.head..].partition_point(|x| x.target <= target);
+        bucket.items.insert(pos, e);
+        self.occ[b >> 6] |= 1 << (b & 63);
+        self.ring_len += 1;
+    }
+
+    /// Bucket index of the earliest occupied ring slot, scanning
+    /// circularly from the cursor position via the occupancy bitmap.
+    fn first_bucket(&self) -> usize {
+        let start = (self.cursor & WHEEL_MASK) as usize;
+        let sw = start >> 6;
+        let masked = self.occ[sw] & (!0u64 << (start & 63));
+        if masked != 0 {
+            return (sw << 6) | masked.trailing_zeros() as usize;
+        }
+        for off in 1..=OCC_WORDS {
+            let w = (sw + off) % OCC_WORDS;
+            if self.occ[w] != 0 {
+                return (w << 6) | self.occ[w].trailing_zeros() as usize;
+            }
+        }
+        unreachable!("ring_len > 0 with an empty occupancy bitmap")
+    }
+
+    fn ring_peek(&self) -> Option<(usize, (u64, u32, u64))> {
+        if self.ring_len == 0 {
+            return None;
+        }
+        let b = self.first_bucket();
+        let bucket = &self.buckets[b];
+        Some((b, bucket.items[bucket.head].key()))
+    }
+
+    fn peek_time(&self) -> Option<u64> {
+        let r = self.ring_peek().map(|(_, k)| k);
+        let h = self.heap.peek().map(|Reverse(e)| e.key());
+        match (r, h) {
+            (Some(a), Some(b)) => Some(a.min(b).0),
+            (Some(a), None) => Some(a.0),
+            (None, Some(b)) => Some(b.0),
+            (None, None) => None,
+        }
+    }
+
+    fn pop(&mut self) -> Option<QEv> {
+        let ring = self.ring_peek();
+        let heap = self.heap.peek().map(|Reverse(e)| e.key());
+        match (ring, heap) {
+            (None, None) => None,
+            (Some((b, rk)), hk) if hk.is_none_or(|h| rk < h) => {
+                let bucket = &mut self.buckets[b];
+                let e = std::mem::replace(&mut bucket.items[bucket.head], QEv::hole());
+                bucket.head += 1;
+                if bucket.head == bucket.items.len() {
+                    bucket.items.clear();
+                    bucket.head = 0;
+                    self.occ[b >> 6] &= !(1 << (b & 63));
+                }
+                self.ring_len -= 1;
+                self.cursor = e.time;
+                Some(e)
+            }
+            _ => {
+                let Reverse(e) = self.heap.pop().unwrap();
+                if e.time > self.cursor {
+                    self.cursor = e.time;
+                }
+                Some(e)
+            }
+        }
     }
 }
 
 /// Behavior of one streaming kernel (the paper's HLS kernel body).
-pub trait KernelBehavior {
+/// `Send` so whole simulations can run on worker threads (parallel
+/// sweeps and placer replays).
+pub trait KernelBehavior: Send {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo);
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo);
     fn name(&self) -> String {
@@ -59,16 +216,28 @@ pub trait KernelBehavior {
 pub struct KernelIo<'a> {
     pub now: u64,
     pub self_id: GlobalKernelId,
+    /// dense trace slot of this kernel (stats resolved once per dispatch).
+    tslot: usize,
+    coalescing: bool,
     fabric: &'a mut Fabric,
     fifo: &'a mut Fifo,
     trace: &'a mut Trace,
-    /// (arrival_time, destination, event)
-    pending: Vec<(u64, GlobalKernelId, Ev)>,
+    slot16: &'a [u32],
+    /// (arrival_time, destination slot, event)
+    pending: Vec<(u64, u32, Ev)>,
     wakes: Vec<(u64, u64)>,
     errors: &'a mut Vec<String>,
 }
 
 impl KernelIo<'_> {
+    #[inline]
+    fn resolve(&self, dst: GlobalKernelId) -> Option<u32> {
+        match self.slot16[dst.dense()] {
+            0 => None,
+            s => Some(s - 1),
+        }
+    }
+
     /// Send a payload to `dst` (any kernel, any cluster). The sender-side
     /// GMI protocol is applied automatically: an inter-cluster destination
     /// is rewritten to the destination cluster's gateway with the one-byte
@@ -86,18 +255,84 @@ impl KernelIo<'_> {
     /// Send a pre-built packet without sender-side rewriting (used by the
     /// gateway's forwarding module, which must preserve headers).
     pub fn send_raw(&mut self, pkt: Packet) {
+        debug_assert!(pkt.burst.is_none(), "use send_burst for coalesced runs");
         match self.fabric.deliver(self.now, &pkt) {
             Ok(Some(arrival)) => {
-                self.trace.stats(self.self_id).on_tx(self.now);
-                let dst = pkt.dst;
-                self.pending.push((arrival, dst, Ev::Packet(pkt)));
+                self.trace.on_tx_slot(self.tslot, self.now);
+                match self.resolve(pkt.dst) {
+                    Some(slot) => self.pending.push((arrival, slot, Ev::Packet(pkt))),
+                    None => self.errors.push(format!("send to unknown kernel {}", pkt.dst)),
+                }
             }
             Ok(None) => {
                 // dropped by the lossy network: accounted in fabric stats
-                self.trace.stats(self.self_id).on_tx(self.now);
+                self.trace.on_tx_slot(self.tslot, self.now);
             }
             Err(e) => self.errors.push(e.to_string()),
         }
+    }
+
+    /// True when a run of rows to `dst` may be coalesced into one burst:
+    /// same cluster, same FPGA (the only serializing resource on the path
+    /// is this kernel's exclusive egress port), and coalescing enabled.
+    pub fn can_burst(&self, dst: GlobalKernelId) -> bool {
+        self.coalescing
+            && dst.cluster == self.self_id.cluster
+            && self.fabric.same_fpga(self.self_id, dst)
+    }
+
+    /// Ship consecutive rows `meta.row ..` of one stream as a single
+    /// coalesced event. `emit_times` (nondecreasing, all >= now) are the
+    /// per-row emission cycles; `head` is row `meta.row`'s payload and
+    /// `tail` the rest. Caller must have checked [`KernelIo::can_burst`].
+    pub fn send_burst(
+        &mut self,
+        dst: GlobalKernelId,
+        meta: MsgMeta,
+        emit_times: Vec<u64>,
+        head: Payload,
+        tail: Vec<Payload>,
+    ) {
+        debug_assert_eq!(tail.len() + 1, emit_times.len());
+        debug_assert!(self.can_burst(dst), "send_burst to a non-coalescible destination");
+        debug_assert!(emit_times[0] >= self.now);
+        debug_assert!(tail.iter().all(|p| p.bytes() == head.bytes()));
+        let mut pkt = Packet::new(self.self_id, dst, meta, head);
+        pkt.burst = Some(Box::new(Burst { emit_times, arrivals: Vec::new(), tail }));
+        match self.fabric.deliver_burst(&pkt) {
+            Ok(arrivals) => {
+                let first = arrivals[0];
+                let b = pkt.burst.as_mut().unwrap();
+                self.trace.on_tx_burst(self.tslot, &b.emit_times);
+                b.arrivals = arrivals;
+                match self.resolve(pkt.dst) {
+                    Some(slot) => self.pending.push((first, slot, Ev::Packet(pkt))),
+                    None => self.errors.push(format!("send to unknown kernel {}", pkt.dst)),
+                }
+            }
+            Err(e) => self.errors.push(e.to_string()),
+        }
+    }
+
+    /// Visit each row of `pkt` as `(io, meta, arrival, payload)`,
+    /// mirroring per-packet delivery for coalesced runs: the row's wire
+    /// bytes enter the input FIFO just before the row is handed over (the
+    /// engine already accounted the single-packet case).
+    pub fn rows<F: FnMut(&mut KernelIo<'_>, MsgMeta, u64, Payload)>(
+        &mut self,
+        pkt: Packet,
+        mut f: F,
+    ) {
+        let wire = pkt.wire_bytes();
+        let single = pkt.burst.is_none();
+        let now = self.now;
+        let io = self;
+        pkt.for_each_row(now, |meta, at, payload| {
+            if !single {
+                io.fifo.push(wire);
+            }
+            f(io, meta, at, payload);
+        });
     }
 
     /// Schedule `on_wake(tag)` after `delay` cycles.
@@ -115,22 +350,27 @@ struct Slot {
     id: GlobalKernelId,
     behavior: Box<dyn KernelBehavior>,
     fifo: Fifo,
+    tslot: usize,
 }
 
 /// The simulator: kernels + fabric + event queue.
 pub struct Sim {
     pub time: u64,
-    seq: u64,
-    heap: BinaryHeap<Reverse<EventEntry>>,
+    queue: EventQueue,
     pub fabric: Fabric,
     kernels: Vec<Slot>,
     index: FxHashMap<GlobalKernelId, usize>,
+    /// dense id -> kernel slot + 1 (send/dispatch resolution).
+    slot16: Box<[u32]>,
     pub trace: Trace,
     pub errors: Vec<String>,
     /// hard event budget (runaway guard)
     pub max_events: u64,
+    /// intra-FPGA row-burst coalescing (on by default; `reference_mode`
+    /// disables it for golden-determinism comparisons).
+    pub coalescing: bool,
     // reusable dispatch buffers (avoid per-event allocation)
-    pending_buf: Vec<(u64, GlobalKernelId, Ev)>,
+    pending_buf: Vec<(u64, u32, Ev)>,
     wakes_buf: Vec<(u64, u64)>,
 }
 
@@ -144,17 +384,28 @@ impl Sim {
     pub fn new() -> Self {
         Sim {
             time: 0,
-            seq: 0,
-            heap: BinaryHeap::new(),
+            queue: EventQueue::new(),
             fabric: Fabric::new(),
             kernels: Vec::new(),
             index: FxHashMap::default(),
+            slot16: vec![0u32; DENSE_IDS].into_boxed_slice(),
             trace: Trace::default(),
             errors: Vec::new(),
             max_events: 500_000_000,
+            coalescing: true,
             pending_buf: Vec::new(),
             wakes_buf: Vec::new(),
         }
+    }
+
+    /// Put the simulator in the pre-optimization reference configuration:
+    /// no row-burst coalescing, pure binary-heap scheduling. Timing and
+    /// functional outputs are contractually identical to the default
+    /// engine (rust/tests/proptests.rs golden-determinism properties);
+    /// only the event count and wall-clock differ.
+    pub fn reference_mode(&mut self) {
+        self.coalescing = false;
+        self.queue.heap_only = true;
     }
 
     /// Register a kernel on an FPGA with the given input FIFO.
@@ -170,7 +421,9 @@ impl Sim {
         }
         self.fabric.place(id, fpga);
         self.index.insert(id, self.kernels.len());
-        self.kernels.push(Slot { id, behavior, fifo });
+        self.slot16[id.dense()] = self.kernels.len() as u32 + 1;
+        let tslot = self.trace.register(id);
+        self.kernels.push(Slot { id, behavior, fifo, tslot });
         Ok(())
     }
 
@@ -185,33 +438,37 @@ impl Sim {
     /// Deliver the START wake to every kernel at t=0.
     pub fn start(&mut self) {
         for i in 0..self.kernels.len() {
-            self.push_event(0, i, Ev::Wake(START_TAG));
+            self.queue.push(0, i as u32, Ev::Wake(START_TAG));
         }
     }
 
     /// Inject a packet from "outside" (e.g. a test harness) at time t.
     pub fn inject(&mut self, t: u64, pkt: Packet) -> Result<()> {
-        let Some(&idx) = self.index.get(&pkt.dst) else {
-            bail!("inject: unknown destination {}", pkt.dst)
+        let slot = match self.slot16[pkt.dst.dense()] {
+            0 => bail!("inject: unknown destination {}", pkt.dst),
+            s => s - 1,
         };
-        self.push_event(t, idx, Ev::Packet(pkt));
+        self.queue.push(t, slot, Ev::Packet(pkt));
         Ok(())
     }
 
-    fn push_event(&mut self, time: u64, target: usize, ev: Ev) {
-        self.seq += 1;
-        self.heap.push(Reverse(EventEntry { time, seq: self.seq, target, ev }));
-    }
-
     /// Run until the queue drains or `until` cycles elapse.
+    ///
+    /// Note on pausing with coalescing enabled: a burst event is
+    /// delivered atomically at its FIRST row's arrival, so a pause may
+    /// observe rx stats/probe entries for rows whose (exact) arrival
+    /// times lie beyond `until` — final results are unaffected (the
+    /// golden-determinism contract covers completed runs). Use
+    /// `reference_mode` when inspecting mid-run state at a cycle
+    /// boundary matters.
     pub fn run_until(&mut self, until: u64) -> Result<u64> {
         let mut processed = 0u64;
-        while let Some(Reverse(entry)) = self.heap.peek().map(|e| Reverse(&e.0)) {
-            if entry.time > until {
+        while let Some(t) = self.queue.peek_time() {
+            if t > until {
                 break;
             }
-            let Reverse(entry) = self.heap.pop().unwrap();
-            self.dispatch(entry)?;
+            let e = self.queue.pop().unwrap();
+            self.dispatch(e)?;
             processed += 1;
             if self.trace.events_processed > self.max_events {
                 bail!("event budget exceeded ({} events)", self.max_events);
@@ -228,20 +485,25 @@ impl Sim {
         self.run_until(u64::MAX)
     }
 
-    fn dispatch(&mut self, entry: EventEntry) -> Result<()> {
+    fn dispatch(&mut self, entry: QEv) -> Result<()> {
         debug_assert!(entry.time >= self.time, "time went backwards");
         self.time = entry.time;
         self.trace.events_processed += 1;
 
-        let slot = &mut self.kernels[entry.target];
+        let target = entry.target;
+        let slot = &mut self.kernels[target as usize];
+        let tslot = slot.tslot;
         self.pending_buf.clear();
         self.wakes_buf.clear();
         let mut io = KernelIo {
             now: self.time,
             self_id: slot.id,
+            tslot,
+            coalescing: self.coalescing,
             fabric: &mut self.fabric,
             fifo: &mut slot.fifo,
             trace: &mut self.trace,
+            slot16: &self.slot16,
             pending: std::mem::take(&mut self.pending_buf),
             wakes: std::mem::take(&mut self.wakes_buf),
             errors: &mut self.errors,
@@ -249,30 +511,42 @@ impl Sim {
 
         match entry.ev {
             Ev::Packet(pkt) => {
-                io.fifo.push(pkt.wire_bytes());
-                io.trace.stats(slot.id).on_rx(io.now);
-                if io.trace.is_probe(slot.id) {
-                    io.trace.record_probe(slot.id, io.now);
+                match pkt.burst.as_ref() {
+                    None => {
+                        io.fifo.push(pkt.wire_bytes());
+                        io.trace.on_rx_slot(tslot, io.now);
+                        if io.trace.probe_slot(tslot) {
+                            io.trace.record_probe_slot(tslot, io.now);
+                        }
+                    }
+                    Some(b) => {
+                        // per-row rx accounting at the analytic arrival
+                        // times; FIFO bytes enter row-by-row inside
+                        // `KernelIo::rows` so occupancy stays row-paced
+                        let probe = io.trace.probe_slot(tslot);
+                        for &a in &b.arrivals {
+                            io.trace.on_rx_slot(tslot, a);
+                            if probe {
+                                io.trace.record_probe_slot(tslot, a);
+                            }
+                        }
+                    }
                 }
                 slot.behavior.on_packet(pkt, &mut io);
             }
             Ev::Wake(tag) => {
-                io.trace.stats(slot.id).wakes += 1;
+                io.trace.wake_slot(tslot);
                 slot.behavior.on_wake(tag, &mut io);
             }
         }
 
         let mut pending = std::mem::take(&mut io.pending);
         let mut wakes = std::mem::take(&mut io.wakes);
-        let target = entry.target;
-        for (t, dst, ev) in pending.drain(..) {
-            match self.index.get(&dst) {
-                Some(&i) => self.push_event(t, i, ev),
-                None => bail!("send to unknown kernel {dst}"),
-            }
+        for (t, dst_slot, ev) in pending.drain(..) {
+            self.queue.push(t, dst_slot, ev);
         }
         for (t, tag) in wakes.drain(..) {
-            self.push_event(t, target, Ev::Wake(tag));
+            self.queue.push(t, target, Ev::Wake(tag));
         }
         // hand the buffers back for the next dispatch
         self.pending_buf = pending;
@@ -312,8 +586,8 @@ mod tests {
     }
     impl KernelBehavior for Sink {
         fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-            self.got += 1;
-            io.consume(pkt.wire_bytes());
+            self.got += pkt.rows_in_packet() as u32;
+            io.consume(pkt.wire_bytes() * pkt.rows_in_packet());
         }
         fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
     }
@@ -335,7 +609,7 @@ mod tests {
         sim.trace.add_probe(k(0, 2));
         sim.start();
         sim.run().unwrap();
-        let st = sim.trace.kernels.get(&k(0, 2)).unwrap();
+        let st = sim.trace.kernel(k(0, 2)).unwrap();
         assert_eq!(st.rx_packets, 10);
         let (x, t, i) = sim.trace.xti(k(0, 2)).unwrap();
         assert!(x > 0);
@@ -369,7 +643,7 @@ mod tests {
         sim.run().unwrap();
         // tag 3 at t=3 first; tags 1,2 at t=5 in insertion order
         // (we can't easily read back the box; rerun pattern asserted via trace)
-        assert_eq!(sim.trace.kernels.get(&k(0, 1)).unwrap().wakes, 4);
+        assert_eq!(sim.trace.kernel(k(0, 1)).unwrap().wakes, 4);
         assert_eq!(sim.time, 5);
     }
 
@@ -412,8 +686,8 @@ mod tests {
         sim.start();
         sim.run().unwrap();
         // the gateway relayed it: final kernel got exactly one packet
-        assert_eq!(sim.trace.kernels.get(&k(1, 5)).unwrap().rx_packets, 1);
-        assert_eq!(sim.trace.kernels.get(&k(1, 0)).unwrap().rx_packets, 1);
+        assert_eq!(sim.trace.kernel(k(1, 5)).unwrap().rx_packets, 1);
+        assert_eq!(sim.trace.kernel(k(1, 0)).unwrap().rx_packets, 1);
     }
 
     #[test]
@@ -426,5 +700,115 @@ mod tests {
         assert!(sim
             .add_kernel(k(0, 1), FpgaId(0), Fifo::new(1), Box::new(Sink { got: 0 }))
             .is_err());
+    }
+
+    #[test]
+    fn far_future_wakes_use_the_heap_fallback() {
+        // delays far beyond the wheel horizon must still fire in order
+        struct LongWaits {
+            fired: Vec<u64>,
+        }
+        impl KernelBehavior for LongWaits {
+            fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+            fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+                if tag == START_TAG {
+                    io.wake_in(3 * WHEEL_SIZE, 1);
+                    io.wake_in(10, 2);
+                    io.wake_in(WHEEL_SIZE + 7, 3);
+                } else {
+                    self.fired.push(tag);
+                    if tag == 2 {
+                        // from t=10, the horizon covers tag 3's time
+                        io.wake_in(1, 4);
+                    }
+                }
+            }
+        }
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(64), Box::new(LongWaits { fired: vec![] }))
+            .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        assert_eq!(sim.time, 3 * WHEEL_SIZE);
+        assert_eq!(sim.trace.kernel(k(0, 1)).unwrap().wakes, 5);
+    }
+
+    #[test]
+    fn run_until_pauses_and_resumes() {
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 20), Box::new(Source {
+            dst: k(0, 2), n: 100, gap: 50, sent: 0,
+        })).unwrap();
+        sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 20), Box::new(Sink { got: 0 }))
+            .unwrap();
+        sim.start();
+        let a = sim.run_until(500).unwrap();
+        assert!(sim.time <= 500);
+        let b = sim.run().unwrap();
+        assert!(a > 0 && b > 0);
+        assert_eq!(sim.trace.kernel(k(0, 2)).unwrap().rx_packets, 100);
+    }
+
+    #[test]
+    fn send_burst_arrivals_match_per_row_sends() {
+        // one kernel ships 4 rows as a burst; a reference sim sends the
+        // same rows individually at the same emission times
+        struct BurstTx {
+            dst: GlobalKernelId,
+        }
+        impl KernelBehavior for BurstTx {
+            fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+            fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+                if tag == START_TAG {
+                    assert!(io.can_burst(self.dst));
+                    let meta = MsgMeta { stream: 0, row: 0, rows: 4, inference: 0 };
+                    io.send_burst(
+                        self.dst,
+                        meta,
+                        vec![0, 5, 10, 15],
+                        Payload::Timing(768),
+                        vec![Payload::Timing(768); 3],
+                    );
+                }
+            }
+        }
+        struct RowTx {
+            dst: GlobalKernelId,
+            sent: u32,
+        }
+        impl KernelBehavior for RowTx {
+            fn on_packet(&mut self, _: Packet, _: &mut KernelIo) {}
+            fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+                if (tag == START_TAG || tag == 1) && self.sent < 4 {
+                    let meta = MsgMeta { stream: 0, row: self.sent, rows: 4, inference: 0 };
+                    io.send(self.dst, meta, Payload::Timing(768));
+                    self.sent += 1;
+                    io.wake_in(5, 1);
+                }
+            }
+        }
+        let run = |burst: bool| -> Vec<u64> {
+            let mut sim = Sim::new();
+            sim.fabric.attach(FpgaId(0), SwitchId(0));
+            let b: Box<dyn KernelBehavior> = if burst {
+                Box::new(BurstTx { dst: k(0, 2) })
+            } else {
+                Box::new(RowTx { dst: k(0, 2), sent: 0 })
+            };
+            sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 20), b).unwrap();
+            sim.add_kernel(k(0, 2), FpgaId(0), Fifo::new(1 << 20), Box::new(Sink { got: 0 }))
+                .unwrap();
+            sim.trace.add_probe(k(0, 2));
+            sim.start();
+            sim.run().unwrap();
+            sim.trace.probe_times(k(0, 2)).unwrap().to_vec()
+        };
+        let coalesced = run(true);
+        let reference = run(false);
+        assert_eq!(coalesced, reference);
+        assert_eq!(coalesced.len(), 4);
     }
 }

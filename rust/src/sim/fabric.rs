@@ -5,13 +5,14 @@
 //! keeps a `next_free` cycle; a packet occupies its links for `flits()`
 //! cycles in sequence, which preserves serialization contention while the
 //! event count stays one-per-packet.
-
+//!
+//! All lookup state is held in dense flat tables indexed by
+//! `GlobalKernelId::dense()` / FPGA index — the per-packet hot path does
+//! no hashing (the seed engine paid several hash lookups per delivery).
 
 use anyhow::{bail, Result};
 
-use crate::util::fxhash::FxHashMap;
-
-use super::packet::{GlobalKernelId, Packet};
+use super::packet::{GlobalKernelId, Packet, DENSE_IDS};
 use super::params::{INTER_SWITCH_LAT, NIC_LAT, OUT_SWITCH_LAT, ROUTER_LAT, SWITCH_LAT};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -20,20 +21,13 @@ pub struct FpgaId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SwitchId(pub usize);
 
-/// One shared serializing resource (kernel egress port, NIC, ...).
-#[derive(Debug, Clone, Copy, Default)]
-struct LinkState {
-    next_free: u64,
-}
-
-impl LinkState {
-    /// Occupy the link for `dur` cycles starting no earlier than `t`;
-    /// returns the cycle at which the last flit has left.
-    fn occupy(&mut self, t: u64, dur: u64) -> u64 {
-        let start = t.max(self.next_free);
-        self.next_free = start + dur;
-        self.next_free
-    }
+/// Occupy a serializing link for `dur` cycles starting no earlier than
+/// `t`; returns the cycle at which the last flit has left.
+#[inline]
+fn occupy(next_free: &mut u64, t: u64, dur: u64) -> u64 {
+    let start = t.max(*next_free);
+    *next_free = start + dur;
+    *next_free
 }
 
 /// Statistics the fabric accumulates.
@@ -48,16 +42,16 @@ pub struct FabricStats {
 }
 
 /// Placement and topology of the platform.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Fabric {
-    /// kernel -> FPGA placement.
-    placement: FxHashMap<GlobalKernelId, FpgaId>,
-    /// FPGA -> switch attachment.
-    attachment: FxHashMap<FpgaId, SwitchId>,
-    /// serialization state per kernel egress port.
-    kernel_egress: FxHashMap<GlobalKernelId, LinkState>,
-    /// serialization state per FPGA NIC (egress).
-    nic_egress: FxHashMap<FpgaId, LinkState>,
+    /// kernel (dense id) -> FPGA index + 1; 0 = unplaced.
+    placement: Box<[u32]>,
+    /// serialization state per kernel egress port (dense id -> next_free).
+    kernel_egress: Box<[u64]>,
+    /// FPGA index -> switch index + 1; 0 = unattached. Grows on attach.
+    attachment: Vec<u32>,
+    /// serialization state per FPGA NIC (egress); grows with attachment.
+    nic_egress: Vec<u64>,
     /// optional packet-loss probability on inter-FPGA hops (UDP is
     /// unreliable; off by default like the paper's testbed experience).
     pub drop_probability: f64,
@@ -65,55 +59,86 @@ pub struct Fabric {
     pub stats: FabricStats,
 }
 
+impl Default for Fabric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Fabric {
     pub fn new() -> Self {
-        Fabric { drop_rng: crate::util::rng::Rng::new(0xD1CE), ..Default::default() }
+        Fabric {
+            placement: vec![0u32; DENSE_IDS].into_boxed_slice(),
+            kernel_egress: vec![0u64; DENSE_IDS].into_boxed_slice(),
+            attachment: Vec::new(),
+            nic_egress: Vec::new(),
+            drop_probability: 0.0,
+            drop_rng: crate::util::rng::Rng::new(0xD1CE),
+            stats: FabricStats::default(),
+        }
     }
 
     pub fn place(&mut self, k: GlobalKernelId, f: FpgaId) {
-        self.placement.insert(k, f);
+        self.placement[k.dense()] = f.0 as u32 + 1;
+        if f.0 >= self.nic_egress.len() {
+            self.nic_egress.resize(f.0 + 1, 0);
+        }
     }
 
     pub fn attach(&mut self, f: FpgaId, s: SwitchId) {
-        self.attachment.insert(f, s);
+        if f.0 >= self.attachment.len() {
+            self.attachment.resize(f.0 + 1, 0);
+        }
+        if f.0 >= self.nic_egress.len() {
+            self.nic_egress.resize(f.0 + 1, 0);
+        }
+        self.attachment[f.0] = s.0 as u32 + 1;
     }
 
+    #[inline]
     pub fn fpga_of(&self, k: GlobalKernelId) -> Option<FpgaId> {
-        self.placement.get(&k).copied()
+        match self.placement[k.dense()] {
+            0 => None,
+            f => Some(FpgaId(f as usize - 1)),
+        }
     }
 
     pub fn switch_of(&self, f: FpgaId) -> Option<SwitchId> {
-        self.attachment.get(&f).copied()
+        match self.attachment.get(f.0).copied().unwrap_or(0) {
+            0 => None,
+            s => Some(SwitchId(s as usize - 1)),
+        }
+    }
+
+    /// True when both kernels are placed on the same FPGA — the burst
+    /// coalescing eligibility test (the only serializing resource on an
+    /// intra-FPGA path is the sender's exclusive egress port).
+    #[inline]
+    pub fn same_fpga(&self, a: GlobalKernelId, b: GlobalKernelId) -> bool {
+        let fa = self.placement[a.dense()];
+        fa != 0 && fa == self.placement[b.dense()]
     }
 
     pub fn fpgas(&self) -> Vec<FpgaId> {
-        let mut v: Vec<FpgaId> = self.attachment.keys().copied().collect();
-        v.sort();
-        v
+        (0..self.attachment.len()).filter(|&f| self.attachment[f] != 0).map(FpgaId).collect()
     }
 
     pub fn kernels_on(&self, f: FpgaId) -> Vec<GlobalKernelId> {
-        let mut v: Vec<GlobalKernelId> =
-            self.placement.iter().filter(|(_, &pf)| pf == f).map(|(k, _)| *k).collect();
-        v.sort();
-        v
+        let want = f.0 as u32 + 1;
+        (0..DENSE_IDS)
+            .filter(|&i| self.placement[i] == want)
+            .map(|i| GlobalKernelId::new((i >> 8) as u8, (i & 0xFF) as u8))
+            .collect()
     }
 
-    /// Compute the delivery time of `pkt` sent at cycle `t`, updating link
-    /// serialization state. Returns None if the (lossy) network dropped it.
-    ///
-    /// The router semantics of §4 are enforced here: a packet whose
-    /// destination is in another cluster MUST be addressed to that
-    /// cluster's gateway kernel (kernel 0); anything else is a routing
-    /// error — direct inter-cluster kernel addressing is forbidden.
-    pub fn deliver(&mut self, t: u64, pkt: &Packet) -> Result<Option<u64>> {
-        let src_f = match self.fpga_of(pkt.src) {
-            Some(f) => f,
-            None => bail!("source kernel {} is not placed on any FPGA", pkt.src),
+    fn route_check(&self, pkt: &Packet) -> Result<(usize, usize)> {
+        let src_f = match self.placement[pkt.src.dense()] {
+            0 => bail!("source kernel {} is not placed on any FPGA", pkt.src),
+            f => f as usize - 1,
         };
-        let dst_f = match self.fpga_of(pkt.dst) {
-            Some(f) => f,
-            None => bail!("destination kernel {} is not placed on any FPGA", pkt.dst),
+        let dst_f = match self.placement[pkt.dst.dense()] {
+            0 => bail!("destination kernel {} is not placed on any FPGA", pkt.dst),
+            f => f as usize - 1,
         };
         if pkt.inter_cluster {
             if !pkt.dst.is_gateway() {
@@ -131,6 +156,18 @@ impl Fabric {
                 );
             }
         }
+        Ok((src_f, dst_f))
+    }
+
+    /// Compute the delivery time of `pkt` sent at cycle `t`, updating link
+    /// serialization state. Returns None if the (lossy) network dropped it.
+    ///
+    /// The router semantics of §4 are enforced here: a packet whose
+    /// destination is in another cluster MUST be addressed to that
+    /// cluster's gateway kernel (kernel 0); anything else is a routing
+    /// error — direct inter-cluster kernel addressing is forbidden.
+    pub fn deliver(&mut self, t: u64, pkt: &Packet) -> Result<Option<u64>> {
+        let (src_f, dst_f) = self.route_check(pkt)?;
 
         let flits = pkt.flits();
         self.stats.packets += 1;
@@ -138,7 +175,7 @@ impl Fabric {
 
         // kernel output switch + egress port serialization
         let t0 = t + OUT_SWITCH_LAT;
-        let egress_done = self.kernel_egress.entry(pkt.src).or_default().occupy(t0, flits);
+        let egress_done = occupy(&mut self.kernel_egress[pkt.src.dense()], t0, flits);
 
         if src_f == dst_f {
             self.stats.intra_fpga_packets += 1;
@@ -148,38 +185,74 @@ impl Fabric {
 
         self.stats.inter_fpga_packets += 1;
         // router -> network bridge -> NIC: serialize on the FPGA's NIC
-        let nic_done =
-            self.nic_egress.entry(src_f).or_default().occupy(egress_done + ROUTER_LAT, flits);
+        let nic_done = occupy(&mut self.nic_egress[src_f], egress_done + ROUTER_LAT, flits);
 
         if self.drop_probability > 0.0 && self.drop_rng.bool_with_p(self.drop_probability) {
             self.stats.dropped += 1;
             return Ok(None);
         }
 
-        let s_src = self
-            .switch_of(src_f)
-            .ok_or_else(|| anyhow::anyhow!("FPGA {src_f:?} not attached to a switch"))?;
-        let s_dst = self
-            .switch_of(dst_f)
-            .ok_or_else(|| anyhow::anyhow!("FPGA {dst_f:?} not attached to a switch"))?;
+        let s_src = match self.attachment.get(src_f).copied().unwrap_or(0) {
+            0 => bail!("FPGA FpgaId({src_f}) not attached to a switch"),
+            s => s as usize - 1,
+        };
+        let s_dst = match self.attachment.get(dst_f).copied().unwrap_or(0) {
+            0 => bail!("FPGA FpgaId({dst_f}) not attached to a switch"),
+            s => s as usize - 1,
+        };
 
         let mut lat = NIC_LAT + SWITCH_LAT + NIC_LAT;
         if s_src != s_dst {
             // switches are connected serially (Fig. 17): hop count is the
             // index distance in the chain
-            let hops = s_src.0.abs_diff(s_dst.0) as u64;
+            let hops = s_src.abs_diff(s_dst) as u64;
             lat += hops * INTER_SWITCH_LAT;
             self.stats.inter_switch_packets += 1;
         }
         // ingress side: router hop into the destination kernel
         Ok(Some(nic_done + lat + ROUTER_LAT))
     }
+
+    /// Deliver a coalesced intra-FPGA burst: rows emitted at
+    /// `pkt.burst.emit_times`, each serializing `pkt.flits()` on the
+    /// sender's exclusive egress port. Returns the per-row arrival times —
+    /// cycle-identical to delivering each row as its own packet at its
+    /// emission time, because no shared resource (NIC) is on the path.
+    pub fn deliver_burst(&mut self, pkt: &Packet) -> Result<Vec<u64>> {
+        let Some(b) = pkt.burst.as_ref() else {
+            bail!("deliver_burst on a packet without burst info");
+        };
+        let (src_f, dst_f) = self.route_check(pkt)?;
+        if src_f != dst_f {
+            bail!(
+                "burst {} -> {} crosses FPGAs: coalescing is intra-FPGA only (split the burst)",
+                pkt.src,
+                pkt.dst
+            );
+        }
+        let flits = pkt.flits();
+        let n = b.emit_times.len() as u64;
+        self.stats.packets += n;
+        self.stats.flits += n * flits;
+        self.stats.intra_fpga_packets += n;
+
+        let egress = &mut self.kernel_egress[pkt.src.dense()];
+        let mut arrivals = Vec::with_capacity(b.emit_times.len());
+        let mut prev = 0u64;
+        for &t in &b.emit_times {
+            debug_assert!(t >= prev, "burst emission times must be nondecreasing");
+            prev = t;
+            let done = occupy(egress, t + OUT_SWITCH_LAT, flits);
+            arrivals.push(done + ROUTER_LAT);
+        }
+        Ok(arrivals)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::packet::{MsgMeta, Payload};
+    use crate::sim::packet::{Burst, MsgMeta, Payload};
 
     fn k(c: u8, n: u8) -> GlobalKernelId {
         GlobalKernelId::new(c, n)
@@ -222,6 +295,41 @@ mod tests {
         let a2 = f.deliver(0, &p).unwrap().unwrap();
         // second packet waits for the first to finish serializing
         assert_eq!(a2, a1 + 12);
+    }
+
+    #[test]
+    fn burst_matches_per_row_delivery_exactly() {
+        // the coalescing contract: same arrival schedule as per-row sends
+        let p = Packet::new(k(0, 1), k(0, 3), MsgMeta::default(), Payload::Timing(768));
+        // a paced run (gap > flits) and a congested run (gap < flits)
+        for times in [vec![100u64, 900, 1700], vec![100, 103, 106, 109]] {
+            let mut ref_f = fabric_2fpga();
+            let want: Vec<u64> =
+                times.iter().map(|&t| ref_f.deliver(t, &p).unwrap().unwrap()).collect();
+            let mut q = p.clone();
+            q.burst = Some(Box::new(Burst {
+                tail: vec![Payload::Timing(768); times.len() - 1],
+                emit_times: times,
+                arrivals: Vec::new(),
+            }));
+            let mut f2 = fabric_2fpga();
+            let got = f2.deliver_burst(&q).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(f2.stats.packets, ref_f.stats.packets);
+            assert_eq!(f2.stats.flits, ref_f.stats.flits);
+        }
+    }
+
+    #[test]
+    fn burst_rejects_inter_fpga_paths() {
+        let mut f = fabric_2fpga();
+        let mut p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        p.burst = Some(Box::new(Burst {
+            emit_times: vec![0, 10],
+            arrivals: Vec::new(),
+            tail: vec![Payload::Timing(64)],
+        }));
+        assert!(f.deliver_burst(&p).is_err());
     }
 
     #[test]
@@ -276,5 +384,18 @@ mod tests {
         let mut f = fabric_2fpga();
         let p = Packet::new(k(0, 9), k(0, 1), MsgMeta::default(), Payload::Timing(8));
         assert!(f.deliver(0, &p).is_err());
+    }
+
+    #[test]
+    fn dense_queries() {
+        let f = fabric_2fpga();
+        assert_eq!(f.fpga_of(k(0, 1)), Some(FpgaId(0)));
+        assert_eq!(f.fpga_of(k(9, 9)), None);
+        assert!(f.same_fpga(k(0, 1), k(0, 3)));
+        assert!(!f.same_fpga(k(0, 1), k(0, 2)));
+        assert!(!f.same_fpga(k(9, 9), k(9, 9)), "unplaced kernels never coalesce");
+        assert_eq!(f.fpgas(), vec![FpgaId(0), FpgaId(1)]);
+        assert_eq!(f.kernels_on(FpgaId(0)), vec![k(0, 1), k(0, 3)]);
+        assert_eq!(f.switch_of(FpgaId(7)), None);
     }
 }

@@ -16,4 +16,4 @@ pub mod trace;
 
 pub use engine::{KernelBehavior, KernelIo, Sim};
 pub use fabric::{Fabric, FpgaId, SwitchId};
-pub use packet::{GlobalKernelId, MsgMeta, Packet, Payload};
+pub use packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload};

@@ -4,6 +4,18 @@
 //! message size — §2.1 Fig. 2), the TUSER bit16 inter-cluster flag (§4),
 //! an optional one-byte GMI header (§5.2), and a payload that is either
 //! pure-timing or an actual matrix row (functional simulation).
+//!
+//! Row payloads are `Arc`-shared: GMI fan-out (Broadcast, the gateway's
+//! virtual input broadcast) clones a reference count, not the row bytes.
+//!
+//! A packet may additionally carry a [`Burst`]: a coalesced run of
+//! consecutive rows of the same stream, emitted back-to-back by one
+//! kernel over one intra-FPGA edge. One simulator event then stands for
+//! the whole run while the per-row emission and arrival times stay
+//! cycle-exact (see `fabric::Fabric::deliver_burst` and DESIGN.md
+//! "Event coalescing").
+
+use std::sync::Arc;
 
 use super::params::flits_for_bytes;
 
@@ -25,7 +37,16 @@ impl GlobalKernelId {
     pub fn is_gateway(&self) -> bool {
         self.kernel == 0
     }
+    /// Dense 16-bit index (cluster x kernel) used by the simulator's
+    /// flat lookup tables — the hot paths never hash kernel ids.
+    #[inline]
+    pub const fn dense(&self) -> usize {
+        ((self.cluster as usize) << 8) | self.kernel as usize
+    }
 }
+
+/// Size of the dense kernel-id space (`GlobalKernelId::dense`).
+pub const DENSE_IDS: usize = 1 << 16;
 
 impl std::fmt::Display for GlobalKernelId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -48,22 +69,33 @@ pub struct MsgMeta {
     pub inference: u32,
 }
 
-/// Payload: timing-only or functional data.
+/// Payload: timing-only or functional data. Row data is `Arc`-shared so
+/// fan-out and burst hand-off are O(1).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     /// Pure-timing packet of the given byte size.
     Timing(usize),
     /// One int8 row (e.g. activations).
-    RowI8(Vec<i8>),
+    RowI8(Arc<Vec<i8>>),
     /// One int32 row (e.g. matmul accumulators crossing kernels).
-    RowI32(Vec<i32>),
+    RowI32(Arc<Vec<i32>>),
     /// One int64 row (residual / layernorm domain).
-    RowI64(Vec<i64>),
+    RowI64(Arc<Vec<i64>>),
     /// Control/token message (barrier, credit, weight-swap command, ...).
     Control(u64),
 }
 
 impl Payload {
+    pub fn row_i8(v: Vec<i8>) -> Payload {
+        Payload::RowI8(Arc::new(v))
+    }
+    pub fn row_i32(v: Vec<i32>) -> Payload {
+        Payload::RowI32(Arc::new(v))
+    }
+    pub fn row_i64(v: Vec<i64>) -> Payload {
+        Payload::RowI64(Arc::new(v))
+    }
+
     pub fn bytes(&self) -> usize {
         match self {
             Payload::Timing(b) => *b,
@@ -73,6 +105,26 @@ impl Payload {
             Payload::Control(_) => 8,
         }
     }
+}
+
+/// A coalesced run of consecutive rows carried by a single packet event.
+///
+/// Rows `meta.row .. meta.row + n` of one stream, emitted by the sender
+/// at `emit_times[0..n]` (nondecreasing). The fabric fills `arrivals`
+/// with the cycle-exact per-row delivery times — identical to what `n`
+/// independent packets sent at the same emission times would have seen,
+/// which only holds on intra-FPGA edges where the sender's egress port
+/// is the sole serializing resource (the coalescing eligibility rule).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Burst {
+    /// Sender-side emission time of each row (len = rows in the burst).
+    pub emit_times: Vec<u64>,
+    /// Receiver-side arrival time of each row; filled by the fabric.
+    pub arrivals: Vec<u64>,
+    /// Payloads of rows 1.. (row 0 travels as `Packet::payload`);
+    /// `tail.len() + 1 == emit_times.len()`. Every row has the same wire
+    /// size as the head payload.
+    pub tail: Vec<Payload>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -87,21 +139,57 @@ pub struct Packet {
     pub gmi_dst: Option<u8>,
     pub meta: MsgMeta,
     pub payload: Payload,
+    /// Coalesced row run (None for an ordinary single-row packet).
+    pub burst: Option<Box<Burst>>,
 }
 
 impl Packet {
     pub fn new(src: GlobalKernelId, dst: GlobalKernelId, meta: MsgMeta, payload: Payload) -> Self {
-        Packet { src, dst, inter_cluster: src.cluster != dst.cluster, gmi_dst: None, meta, payload }
+        Packet {
+            src,
+            dst,
+            inter_cluster: src.cluster != dst.cluster,
+            gmi_dst: None,
+            meta,
+            payload,
+            burst: None,
+        }
     }
 
-    /// Wire size in bytes: payload + the one-byte GMI header when attached.
+    /// Wire size of ONE row in bytes: payload + the one-byte GMI header
+    /// when attached. Burst rows all share this size.
     pub fn wire_bytes(&self) -> usize {
         self.payload.bytes() + usize::from(self.gmi_dst.is_some())
     }
 
-    /// Serialization cost in flits.
+    /// Serialization cost of one row in flits.
     pub fn flits(&self) -> u64 {
         flits_for_bytes(self.wire_bytes())
+    }
+
+    /// Number of rows this packet carries (1 unless coalesced).
+    pub fn rows_in_packet(&self) -> usize {
+        self.burst.as_ref().map_or(1, |b| b.emit_times.len())
+    }
+
+    /// Visit every row as `(meta, arrival, payload)`. For a single packet
+    /// the arrival is `now` (the dispatch time); for a burst the fabric's
+    /// per-row arrival schedule is used. Rows are visited in row order.
+    pub fn for_each_row<F: FnMut(MsgMeta, u64, Payload)>(mut self, now: u64, mut f: F) {
+        let meta = self.meta;
+        match self.burst.take() {
+            None => f(meta, now, self.payload),
+            Some(b) => {
+                let b = *b;
+                debug_assert_eq!(b.tail.len() + 1, b.emit_times.len());
+                debug_assert_eq!(b.arrivals.len(), b.emit_times.len());
+                f(meta, b.arrivals[0], self.payload);
+                for (i, p) in b.tail.into_iter().enumerate() {
+                    let m2 = MsgMeta { row: meta.row + 1 + i as u32, ..meta };
+                    f(m2, b.arrivals[i + 1], p);
+                }
+            }
+        }
     }
 }
 
@@ -115,6 +203,7 @@ mod tests {
         assert!(g.is_gateway());
         assert_eq!(g.cluster, 7);
         assert_eq!(format!("{}", GlobalKernelId::new(1, 2)), "c1k2");
+        assert_eq!(GlobalKernelId::new(1, 2).dense(), 258);
     }
 
     #[test]
@@ -131,7 +220,7 @@ mod tests {
     fn gmi_header_costs_one_byte() {
         let a = GlobalKernelId::new(0, 3);
         let b = GlobalKernelId::new(1, 0);
-        let mut p = Packet::new(a, b, MsgMeta::default(), Payload::RowI8(vec![0; 768]));
+        let mut p = Packet::new(a, b, MsgMeta::default(), Payload::row_i8(vec![0; 768]));
         assert_eq!(p.flits(), 12);
         p.gmi_dst = Some(9);
         assert_eq!(p.wire_bytes(), 769);
@@ -140,9 +229,49 @@ mod tests {
 
     #[test]
     fn payload_sizes() {
-        assert_eq!(Payload::RowI32(vec![0; 10]).bytes(), 40);
-        assert_eq!(Payload::RowI64(vec![0; 10]).bytes(), 80);
+        assert_eq!(Payload::row_i32(vec![0; 10]).bytes(), 40);
+        assert_eq!(Payload::row_i64(vec![0; 10]).bytes(), 80);
         assert_eq!(Payload::Control(1).bytes(), 8);
         assert_eq!(Payload::Timing(5).bytes(), 5);
+    }
+
+    #[test]
+    fn payload_fanout_shares_rows() {
+        let p = Payload::row_i8(vec![1, 2, 3]);
+        let q = p.clone();
+        match (&p, &q) {
+            (Payload::RowI8(a), Payload::RowI8(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn burst_rows_iterate_in_order() {
+        let a = GlobalKernelId::new(0, 3);
+        let b = GlobalKernelId::new(0, 5);
+        let meta = MsgMeta { stream: 2, row: 10, rows: 13, inference: 1 };
+        let mut p = Packet::new(a, b, meta, Payload::Timing(64));
+        p.burst = Some(Box::new(Burst {
+            emit_times: vec![100, 110, 120],
+            arrivals: vec![105, 115, 125],
+            tail: vec![Payload::Timing(64), Payload::Timing(64)],
+        }));
+        assert_eq!(p.rows_in_packet(), 3);
+        let mut seen = Vec::new();
+        p.for_each_row(0, |m, at, pl| seen.push((m.row, at, pl.bytes())));
+        assert_eq!(seen, vec![(10, 105, 64), (11, 115, 64), (12, 125, 64)]);
+    }
+
+    #[test]
+    fn single_packet_row_uses_dispatch_time() {
+        let p = Packet::new(
+            GlobalKernelId::new(0, 1),
+            GlobalKernelId::new(0, 2),
+            MsgMeta { row: 4, ..Default::default() },
+            Payload::Timing(8),
+        );
+        let mut seen = Vec::new();
+        p.for_each_row(77, |m, at, _| seen.push((m.row, at)));
+        assert_eq!(seen, vec![(4, 77)]);
     }
 }

@@ -1,10 +1,13 @@
 //! Per-kernel activity counters and arrival probes used by the evaluation
 //! harness (Table 1's X/T/I are measured exactly the way the paper did:
 //! by watching packets at the evaluation FPGA).
+//!
+//! Stats live in a dense slot vector; a flat 64K id->slot table resolves
+//! a `GlobalKernelId` once at registration. The dispatch hot path works
+//! purely on slot indices (the seed engine paid two hash lookups per
+//! packet: `stats(id)` for rx accounting plus the probe-set scan).
 
-use crate::util::fxhash::FxHashMap;
-
-use super::packet::GlobalKernelId;
+use crate::sim::packet::{GlobalKernelId, DENSE_IDS};
 
 #[derive(Debug, Clone, Default)]
 pub struct KernelStats {
@@ -20,50 +23,152 @@ pub struct KernelStats {
 impl KernelStats {
     pub fn on_rx(&mut self, t: u64) {
         self.rx_packets += 1;
-        self.first_rx.get_or_insert(t);
-        self.last_rx = Some(t);
+        self.first_rx = Some(self.first_rx.map_or(t, |f| f.min(t)));
+        self.last_rx = Some(self.last_rx.map_or(t, |l| l.max(t)));
     }
     pub fn on_tx(&mut self, t: u64) {
         self.tx_packets += 1;
-        self.first_tx.get_or_insert(t);
-        self.last_tx = Some(t);
+        self.first_tx = Some(self.first_tx.map_or(t, |f| f.min(t)));
+        self.last_tx = Some(self.last_tx.map_or(t, |l| l.max(t)));
     }
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Trace {
-    pub kernels: FxHashMap<GlobalKernelId, KernelStats>,
+    /// dense per-kernel stats, parallel to `ids`.
+    slots: Vec<KernelStats>,
+    ids: Vec<GlobalKernelId>,
+    /// dense id -> slot + 1; 0 = unregistered.
+    slot16: Box<[u32]>,
+    /// per-slot probe flag + probe-series index (+1; 0 = none).
+    probe_flag: Vec<bool>,
+    probe_series: Vec<u32>,
+    series: Vec<Vec<u64>>,
     pub events_processed: u64,
-    /// All packet arrival times at "probe" kernels (e.g. the evaluation
-    /// FPGA's sink), keyed by probe id — the raw series behind X/T/I.
-    pub probes: FxHashMap<GlobalKernelId, Vec<u64>>,
-    probe_set: Vec<GlobalKernelId>,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace {
+            slots: Vec::new(),
+            ids: Vec::new(),
+            slot16: vec![0u32; DENSE_IDS].into_boxed_slice(),
+            probe_flag: Vec::new(),
+            probe_series: Vec::new(),
+            series: Vec::new(),
+            events_processed: 0,
+        }
+    }
 }
 
 impl Trace {
-    pub fn stats(&mut self, k: GlobalKernelId) -> &mut KernelStats {
-        self.kernels.entry(k).or_default()
+    /// Resolve (or create) the dense stats slot of `k` — done once per
+    /// kernel at registration time, never on the dispatch path.
+    pub fn register(&mut self, k: GlobalKernelId) -> usize {
+        let d = k.dense();
+        match self.slot16[d] {
+            0 => {
+                let slot = self.slots.len();
+                self.slots.push(KernelStats::default());
+                self.ids.push(k);
+                self.probe_flag.push(false);
+                self.probe_series.push(0);
+                self.slot16[d] = slot as u32 + 1;
+                slot
+            }
+            s => s as usize - 1,
+        }
     }
 
+    pub fn stats(&mut self, k: GlobalKernelId) -> &mut KernelStats {
+        let slot = self.register(k);
+        &mut self.slots[slot]
+    }
+
+    /// Read-only stats lookup by kernel id (None if it never appeared).
+    pub fn kernel(&self, k: GlobalKernelId) -> Option<&KernelStats> {
+        match self.slot16[k.dense()] {
+            0 => None,
+            s => Some(&self.slots[s as usize - 1]),
+        }
+    }
+
+    /// All (id, stats) pairs in registration order.
+    pub fn kernels(&self) -> impl Iterator<Item = (GlobalKernelId, &KernelStats)> {
+        self.ids.iter().copied().zip(self.slots.iter())
+    }
+
+    // ---- slot-indexed hot paths (engine dispatch) ----
+
+    #[inline]
+    pub fn on_rx_slot(&mut self, slot: usize, t: u64) {
+        self.slots[slot].on_rx(t);
+    }
+    #[inline]
+    pub fn on_tx_slot(&mut self, slot: usize, t: u64) {
+        self.slots[slot].on_tx(t);
+    }
+    #[inline]
+    pub fn on_tx_burst(&mut self, slot: usize, times: &[u64]) {
+        for &t in times {
+            self.slots[slot].on_tx(t);
+        }
+    }
+    #[inline]
+    pub fn wake_slot(&mut self, slot: usize) {
+        self.slots[slot].wakes += 1;
+    }
+    #[inline]
+    pub fn probe_slot(&self, slot: usize) -> bool {
+        self.probe_flag[slot]
+    }
+    #[inline]
+    pub fn record_probe_slot(&mut self, slot: usize, t: u64) {
+        let si = self.probe_series[slot];
+        debug_assert!(si != 0, "record_probe_slot on a non-probe slot");
+        self.series[si as usize - 1].push(t);
+    }
+
+    // ---- probe API ----
+
     pub fn add_probe(&mut self, k: GlobalKernelId) {
-        if !self.probe_set.contains(&k) {
-            self.probe_set.push(k);
+        let slot = self.register(k);
+        if !self.probe_flag[slot] {
+            self.probe_flag[slot] = true;
+            self.series.push(Vec::new());
+            self.probe_series[slot] = self.series.len() as u32;
         }
     }
 
     pub fn is_probe(&self, k: GlobalKernelId) -> bool {
-        self.probe_set.contains(&k)
+        match self.slot16[k.dense()] {
+            0 => false,
+            s => self.probe_flag[s as usize - 1],
+        }
     }
 
     pub fn record_probe(&mut self, k: GlobalKernelId, t: u64) {
-        self.probes.entry(k).or_default().push(t);
+        let slot = self.register(k);
+        self.record_probe_slot(slot, t);
+    }
+
+    /// The raw arrival-time series of a probe (empty/None if unprobed).
+    pub fn probe_times(&self, k: GlobalKernelId) -> Option<&[u64]> {
+        let s = match self.slot16[k.dense()] {
+            0 => return None,
+            s => s as usize - 1,
+        };
+        match self.probe_series[s] {
+            0 => None,
+            si => Some(&self.series[si as usize - 1]),
+        }
     }
 
     /// (first, last, median inter-arrival) of a probe's packet series —
     /// the X / T / I decomposition of §8.2.2 when probed at the encoder
     /// output.
     pub fn xti(&self, k: GlobalKernelId) -> Option<(u64, u64, u64)> {
-        let v = self.probes.get(&k)?;
+        let v = self.probe_times(k)?;
         if v.is_empty() {
             return None;
         }
@@ -105,5 +210,33 @@ mod tests {
         assert_eq!(s.last_rx, Some(9));
         assert_eq!(s.rx_packets, 2);
         assert_eq!(s.first_tx, Some(7));
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_dense() {
+        let mut tr = Trace::default();
+        let a = GlobalKernelId::new(3, 4);
+        let b = GlobalKernelId::new(200, 2);
+        let sa = tr.register(a);
+        let sb = tr.register(b);
+        assert_ne!(sa, sb);
+        assert_eq!(tr.register(a), sa);
+        tr.on_rx_slot(sa, 10);
+        assert_eq!(tr.kernel(a).unwrap().rx_packets, 1);
+        assert!(tr.kernel(GlobalKernelId::new(1, 1)).is_none());
+        assert_eq!(tr.kernels().count(), 2);
+    }
+
+    #[test]
+    fn probes_by_slot_match_probes_by_id() {
+        let mut tr = Trace::default();
+        let k = GlobalKernelId::new(0, 7);
+        let slot = tr.register(k);
+        assert!(!tr.probe_slot(slot));
+        tr.add_probe(k);
+        assert!(tr.probe_slot(slot));
+        tr.record_probe_slot(slot, 42);
+        tr.record_probe(k, 43);
+        assert_eq!(tr.probe_times(k).unwrap(), &[42, 43]);
     }
 }

@@ -5,6 +5,7 @@ pub mod bench;
 pub mod fxhash;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,105 @@
+//! Tiny scoped worker pool (rayon is not in the vendored crate set).
+//!
+//! Deterministic data-parallel helpers built on `std::thread::scope`:
+//! outputs are written into pre-split disjoint chunks, so results are
+//! bit-identical to the serial loop regardless of thread count. Thread
+//! count comes from `GALAPAGOS_THREADS` (0/1 disables) or the machine's
+//! available parallelism.
+
+use std::sync::OnceLock;
+
+/// Worker threads to use for data-parallel sections.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("GALAPAGOS_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Fill `out` by calling `f(start_index, chunk)` for consecutive chunks
+/// of `chunk` elements, distributing chunks round-robin over the worker
+/// threads. Serial when one thread suffices or the input is small.
+pub fn parallel_chunks<T, F>(out: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk.max(1));
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (ci, sl) in out.chunks_mut(chunk).enumerate() {
+            f(ci * chunk, sl);
+        }
+        return;
+    }
+    // deal chunks round-robin so uneven per-row cost still balances
+    let mut lists: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (ci, sl) in out.chunks_mut(chunk).enumerate() {
+        lists[ci % threads].push((ci * chunk, sl));
+    }
+    let fr = &f;
+    std::thread::scope(|s| {
+        for list in lists {
+            s.spawn(move || {
+                for (start, sl) in list {
+                    fr(start, sl);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over a slice; result order matches input order and every
+/// element is computed exactly as in the serial loop.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    parallel_chunks(&mut out, 1, |start, sl| {
+        sl[0] = Some(f(&items[start]));
+    });
+    out.into_iter().map(|o| o.expect("parallel_map: unfilled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_index_once() {
+        let mut out = vec![0usize; 103];
+        parallel_chunks(&mut out, 8, |start, sl| {
+            for (j, o) in sl.iter_mut().enumerate() {
+                *o = start + j + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<u64> = (0..57).collect();
+        let ys = parallel_map(&xs, |&x| x * x);
+        assert_eq!(ys, xs.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut out: Vec<u8> = vec![];
+        parallel_chunks(&mut out, 4, |_, _| panic!("no chunks expected"));
+        let ys = parallel_map(&[5u8], |&x| x + 1);
+        assert_eq!(ys, vec![6]);
+    }
+}

@@ -39,7 +39,7 @@ impl KernelBehavior for Tx {
                 io.send(
                     self.dst,
                     MsgMeta { stream: self.stream, row: i as u32, rows: n, inference: 0 },
-                    Payload::RowI32(r.clone()),
+                    Payload::row_i32(r.clone()),
                 );
             }
         }
@@ -51,10 +51,13 @@ struct Collect {
 }
 impl KernelBehavior for Collect {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        io.consume(pkt.wire_bytes());
-        if let Payload::RowI32(v) = pkt.payload {
-            self.got.lock().unwrap().push((pkt.meta.row, v));
-        }
+        let got = self.got.clone();
+        io.rows(pkt, |io2: &mut KernelIo, meta, _at, payload| {
+            io2.consume(payload.bytes());
+            if let Payload::RowI32(v) = payload {
+                got.lock().unwrap().push((meta.row, (*v).clone()));
+            }
+        });
     }
     fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
 }
@@ -382,6 +385,128 @@ fn prop_placer_placements_complete_fit_and_roundtrip() {
             sol.predicted.t >= sol.predicted.x && sol.predicted.x > 0,
             "nonsense latency estimate: {:?}",
             sol.predicted
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden determinism: the coalesced calendar-wheel engine must reproduce
+// the reference engine (binary heap, per-row packets) cycle for cycle —
+// per-probe arrival series, final time, link traffic, per-kernel stats,
+// and (functional mode) the exact output bytes.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, PartialEq)]
+struct SimFingerprint {
+    probes: Vec<u64>,
+    end_time: u64,
+    packets: u64,
+    flits: u64,
+    kstats: Vec<(GlobalKernelId, u64, u64, Option<u64>, Option<u64>)>,
+    outputs: Vec<Option<Vec<Vec<i8>>>>,
+}
+
+fn run_fingerprint(
+    cfg: &galapagos_llm::eval::testbed::TestbedConfig,
+    reference: bool,
+) -> Result<SimFingerprint, String> {
+    let mut tb = galapagos_llm::eval::testbed::build_testbed(cfg).map_err(|e| e.to_string())?;
+    if reference {
+        tb.sim.reference_mode();
+    }
+    tb.sim.start();
+    tb.sim.run().map_err(|e| e.to_string())?;
+    let probes =
+        tb.sim.trace.probe_times(tb.sink_id).map(|s| s.to_vec()).unwrap_or_default();
+    let mut kstats: Vec<(GlobalKernelId, u64, u64, Option<u64>, Option<u64>)> = tb
+        .sim
+        .trace
+        .kernels()
+        .map(|(id, s)| (id, s.rx_packets, s.tx_packets, s.first_rx, s.last_rx))
+        .collect();
+    kstats.sort_by_key(|e| e.0);
+    let sink = tb.sink.lock().unwrap();
+    let outputs = (0..cfg.inferences).map(|i| sink.matrix(i)).collect();
+    Ok(SimFingerprint {
+        probes,
+        end_time: tb.sim.time,
+        packets: tb.sim.fabric.stats.packets,
+        flits: tb.sim.fabric.stats.flits,
+        kstats,
+        outputs,
+    })
+}
+
+#[test]
+fn prop_coalesced_engine_is_cycle_exact_timing() {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::ibert::kernels::Mode;
+    check_with(&Config { cases: 8, ..Default::default() }, "coalesce-golden-timing", |g| {
+        let m = *g.pick(&[1usize, 2, 5, 16, 33, 64]);
+        let inferences = g.usize_in(1, 3) as u32;
+        let interval = *g.pick(&[12u64, 100, 767]);
+        let fps = *g.pick(&[2usize, 6]);
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        cfg.inferences = inferences;
+        cfg.interval = interval;
+        cfg.fpgas_per_switch = fps;
+        // randomly merge some kernels onto other FPGAs so bursts form on
+        // edges the paper mapping keeps apart (and vice versa)
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 6) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        cfg.placement = Some(slots);
+
+        let opt = run_fingerprint(&cfg, false)?;
+        let refr = run_fingerprint(&cfg, true)?;
+        prop_assert!(
+            opt == refr,
+            "coalesced engine diverged (m={m}, inf={inferences}, interval={interval}): \
+             opt end={} ref end={}, opt probes={:?} ref probes={:?}",
+            opt.end_time,
+            refr.end_time,
+            &opt.probes[..opt.probes.len().min(8)],
+            &refr.probes[..refr.probes.len().min(8)]
+        );
+        prop_assert!(
+            opt.probes.len() == (m as u32 * inferences) as usize,
+            "sink saw {} rows, expected {}",
+            opt.probes.len(),
+            m as u32 * inferences
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalesced_engine_is_bit_exact_functional() {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::config::ModelConfig;
+    use galapagos_llm::ibert::encoder::encoder_forward_reference;
+    use galapagos_llm::ibert::kernels::Mode;
+    use galapagos_llm::ibert::weights::{synthetic_input, ModelParams};
+    check_with(&Config { cases: 6, ..Default::default() }, "coalesce-golden-functional", |g| {
+        let mcfg = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 1 };
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let params = std::sync::Arc::new(ModelParams::synthetic(mcfg, seed));
+        let m = *g.pick(&[1usize, 4, 11, 24]);
+        let input = synthetic_input(mcfg.hidden, m, g.usize_in(0, 1 << 30) as u64);
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(params.clone()));
+        cfg.input = Some(std::sync::Arc::new(input.clone()));
+        cfg.interval = *g.pick(&[12u64, 96]);
+
+        let opt = run_fingerprint(&cfg, false)?;
+        let refr = run_fingerprint(&cfg, true)?;
+        prop_assert!(opt == refr, "functional coalesced run diverged at m={m}");
+        // and both must equal the native reference forward bit for bit
+        let want = encoder_forward_reference(&params, &input).out;
+        prop_assert!(
+            opt.outputs[0].as_ref() == Some(&want),
+            "simulated encoder output != native reference at m={m}"
         );
         Ok(())
     });
