@@ -22,8 +22,8 @@ use galapagos_llm::util::table::{f2, Table};
 fn run_with(pe: PeConfig, m: usize) -> (u64, u64) {
     let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
     cfg.pe = pe;
-    let (x, t, _, _) = run_encoder_once(&cfg).unwrap();
-    (x, t)
+    let r = run_encoder_once(&cfg).unwrap();
+    (r.x, r.t)
 }
 
 fn main() {

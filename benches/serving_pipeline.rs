@@ -1,0 +1,130 @@
+//! Serving-pipeline bench: stream open-loop traffic through multi-encoder
+//! chains across a scenario matrix and record the serving trajectory in
+//! BENCH_serving.json (the perf-smoke CI job uploads the quick run, like
+//! BENCH_hotpath.json tracks the engine hot paths).
+//!
+//!   cargo bench --bench serving_pipeline            # full matrix
+//!   cargo bench --bench serving_pipeline -- --quick # CI smoke
+//!
+//! Scenarios cover both arrival processes, the three length
+//! distributions (SQuAD clamped to the 128-token build), chain depths up
+//! to the full 12-encoder I-BERT, and a deliberate overload point whose
+//! tail latency documents the open-loop queueing behavior.
+
+use galapagos_llm::serve::{run_serving, ArrivalProcess, LengthDist, ServeConfig};
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::json::Json;
+use galapagos_llm::{cycles_to_us, util::cli::Args};
+
+struct Scenario {
+    name: &'static str,
+    encoders: usize,
+    lengths: LengthDist,
+    uniform: bool,
+    /// offered load as a fraction of the measured pipeline capacity
+    load: f64,
+    requests: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_serving.json");
+    let seed = args.u64_or("seed", 7)?;
+    let mut b = Bencher::quick();
+
+    let scenarios = [
+        Scenario {
+            name: "glue poisson 6enc 70%",
+            encoders: 6,
+            lengths: LengthDist::Glue,
+            uniform: false,
+            load: 0.7,
+            requests: 200,
+        },
+        Scenario {
+            name: "glue poisson 12enc 70%",
+            encoders: 12,
+            lengths: LengthDist::Glue,
+            uniform: false,
+            load: 0.7,
+            requests: 160,
+        },
+        Scenario {
+            name: "mrpc uniform 6enc 50%",
+            encoders: 6,
+            lengths: LengthDist::Mrpc,
+            uniform: true,
+            load: 0.5,
+            requests: 160,
+        },
+        Scenario {
+            name: "squad(clamp128) poisson 6enc 50%",
+            encoders: 6,
+            lengths: LengthDist::Squad,
+            uniform: false,
+            load: 0.5,
+            requests: 120,
+        },
+        Scenario {
+            name: "glue poisson 6enc 180% (overload)",
+            encoders: 6,
+            lengths: LengthDist::Glue,
+            uniform: false,
+            load: 1.8,
+            requests: 120,
+        },
+    ];
+
+    let mut cases: Vec<Json> = Vec::new();
+    for s in &scenarios {
+        let requests = if quick { (s.requests / 8).max(12) } else { s.requests };
+        let mut cfg = ServeConfig::glue(s.encoders, requests, 1.0, seed);
+        cfg.traffic.lengths = s.lengths;
+        cfg.check_eq1 = true;
+        let (_mean_m, capacity) = cfg.capacity_at_mean()?;
+        let rate = capacity * s.load;
+        cfg.traffic.process = if s.uniform {
+            ArrivalProcess::Uniform { seqs_per_s: rate }
+        } else {
+            ArrivalProcess::Poisson { seqs_per_s: rate }
+        };
+
+        let t0 = std::time::Instant::now();
+        let report = b.once(s.name, || run_serving(&cfg))?;
+        let wall = t0.elapsed();
+        println!(
+            "    p50 {:>8.1} us  p95 {:>8.1} us  p99 {:>8.1} us   {:>7.0} seqs/s  \
+             {:>9.0} tokens/s   eq1 {:+.2}%",
+            cycles_to_us(report.latency.p50),
+            cycles_to_us(report.latency.p95),
+            cycles_to_us(report.latency.p99),
+            report.seqs_per_s(),
+            report.tokens_per_s(),
+            report.eq1.map(|e| 100.0 * e.rel_err()).unwrap_or(f64::NAN),
+        );
+        let mut case = match report.to_json() {
+            Json::Obj(kv) => kv,
+            _ => unreachable!("report serializes to an object"),
+        };
+        case.insert(0, ("scenario".into(), Json::Str(s.name.into())));
+        case.push(("capacity_seqs_per_s".into(), Json::Num(capacity)));
+        case.push(("load".into(), Json::Num(s.load)));
+        case.push(("wall_ms".into(), Json::Num(wall.as_secs_f64() * 1e3)));
+        case.push((
+            "events_per_s".into(),
+            Json::Num(report.events as f64 / wall.as_secs_f64().max(1e-9)),
+        ));
+        cases.push(Json::Obj(case));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_serving/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

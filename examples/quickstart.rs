@@ -29,12 +29,13 @@ fn main() -> anyhow::Result<()> {
     // --- simulate the six-FPGA cluster, functional mode ---
     let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(params.clone()));
     cfg.input = Some(Arc::new(x.clone()));
-    let (x_cycles, t_cycles, i_cycles, tb) = run_encoder_once(&cfg)?;
+    let run = run_encoder_once(&cfg)?;
+    let tb = &run.testbed;
     let sim_out = tb.sink.lock().unwrap().matrix(0).expect("incomplete output");
     println!(
         "six-FPGA simulation: X={} T={} I={} cycles  ({:.1} us first output, {:.1} us total)",
-        x_cycles, t_cycles, i_cycles,
-        cycles_to_us(x_cycles), cycles_to_us(t_cycles)
+        run.x, run.t, run.i,
+        cycles_to_us(run.x), cycles_to_us(run.t)
     );
     println!(
         "fabric: {} packets, {} flits, {} inter-FPGA",
@@ -54,6 +55,6 @@ fn main() -> anyhow::Result<()> {
     println!("bit-exact vs PJRT-executed Pallas artifact ... OK");
 
     println!("\nall three implementations agree; encoder latency {:.2} us at m={m}",
-             cycles_to_us(t_cycles));
+             cycles_to_us(run.t));
     Ok(())
 }

@@ -223,6 +223,7 @@ impl BuildDescription {
             fpgas_per_switch: self.fpgas_per_switch,
             input: None,
             placement: None,
+            schedule: None,
         }
     }
 }

@@ -7,4 +7,4 @@ pub mod testbed;
 pub mod workload;
 
 pub use latency_model::{estimate_model_latency_us, LatencyComponents};
-pub use testbed::{run_encoder_once, EncoderTestbed, TestbedConfig};
+pub use testbed::{run_encoder_once, EncoderRunResult, EncoderTestbed, TestbedConfig};

@@ -33,8 +33,8 @@ fn components_sweep(lens: &[usize]) -> Result<Vec<LatencyComponents>> {
 
 /// Measure one encoder's X/T/I at sequence length m (timing mode).
 pub fn measure_components(m: usize) -> Result<LatencyComponents> {
-    let (x, t, i, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing))?;
-    Ok(LatencyComponents { x, t, i })
+    let r = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing))?;
+    Ok(r.components())
 }
 
 /// Measure pipelined throughput (inferences/s) at sequence length m by

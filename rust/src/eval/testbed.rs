@@ -2,6 +2,16 @@
 //! FPGA (§8.2: "one extra FPGA ... to provide inputs and receive outputs
 //! for the encoder at 100 Gbps, which emulates how the encoder would be
 //! connected in the full encoder chain").
+//!
+//! Two traffic modes drive the chain: the paper's fixed-length
+//! back-to-back inferences ([`SourceKernel`]), or an open-loop request
+//! schedule ([`TestbedConfig::schedule`], served by
+//! `serve::source::RequestSourceKernel`) in which each request carries
+//! its own sequence length and arrival cycle — the serving path of the
+//! `serve` subsystem. Encoder-to-encoder edges are real fabric paths:
+//! with six FPGAs per encoder and six per switch, LN2 of one encoder
+//! reaches the next encoder's gateway across exactly one serial switch
+//! hop, the paper's `d` ([`inter_encoder_hop_cycles`]).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -46,6 +56,11 @@ pub struct TestbedConfig {
     /// kernel -> FPGA-slot override from the automatic placer (applied
     /// to every encoder cluster); None = the paper's Fig. 14 mapping
     pub placement: Option<Vec<usize>>,
+    /// open-loop request schedule (serving mode): each request streams
+    /// its own length at its own arrival cycle, tagged with its index as
+    /// the inference id. Overrides `m`/`inferences` pacing; `interval`
+    /// still paces rows on the source link.
+    pub schedule: Option<Arc<Vec<crate::serve::traffic::Request>>>,
 }
 
 impl TestbedConfig {
@@ -60,8 +75,31 @@ impl TestbedConfig {
             fpgas_per_switch: 6,
             input: None,
             placement: None,
+            schedule: None,
         }
     }
+}
+
+/// The `d` of Eq. 1 as the platform actually implements it: the serial
+/// switch-hop cycles between encoder `boundary`'s output kernel (LN2)
+/// and encoder `boundary + 1`'s gateway, read off the topology
+/// (placement + switch chaining) instead of assumed constant. The
+/// paper's Fig. 17 layout (six FPGAs per encoder, six per switch) yields
+/// exactly one hop = 220 cycles = 1.1 us at every boundary; when
+/// `fpgas_per_switch` does not divide the FPGAs-per-encoder, the hop
+/// count varies per boundary — sum this over boundaries rather than
+/// multiplying one sample by `L - 1`.
+pub fn inter_encoder_hop_cycles(cfg: &TestbedConfig, boundary: usize) -> u64 {
+    use crate::ibert::graph::ids;
+    let slots = match &cfg.placement {
+        Some(s) => s.clone(),
+        None => crate::ibert::graph::default_slots(),
+    };
+    let per = slots.iter().copied().max().map_or(1, |s| s + 1);
+    let per_switch = cfg.fpgas_per_switch.max(1);
+    let ln2_switch = (boundary * per + slots[ids::LN2 as usize]) / per_switch;
+    let next_gw_switch = ((boundary + 1) * per + slots[ids::GATEWAY as usize]) / per_switch;
+    next_gw_switch.abs_diff(ln2_switch) as u64 * crate::sim::params::INTER_SWITCH_LAT
 }
 
 /// A built testbed: the simulator plus handles into the evaluation FPGA.
@@ -75,10 +113,32 @@ pub struct EncoderTestbed {
 /// Assemble the platform: `encoders` chained encoder clusters + the
 /// evaluation cluster, six FPGAs per encoder, eval FPGA last.
 pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
+    anyhow::ensure!(
+        (1..EVAL_CLUSTER as usize).contains(&cfg.encoders),
+        "encoder count must be in 1..{EVAL_CLUSTER} (cluster id space)"
+    );
+    anyhow::ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
     let (hidden, ffn, max_seq) = match &cfg.mode {
         Mode::Functional(p) => (p.cfg.hidden, p.cfg.ffn, p.cfg.max_seq),
         Mode::Timing => (768, 3072, 128),
     };
+    if let Some(sched) = &cfg.schedule {
+        let longest = sched.iter().map(|r| r.m as usize).max().unwrap_or(0);
+        anyhow::ensure!(longest <= max_seq, "scheduled request exceeds max_seq {max_seq}");
+        // a zero-length request would pump the source forever (its
+        // row counter can never reach m)
+        anyhow::ensure!(
+            sched.iter().all(|r| r.m >= 1),
+            "scheduled requests must have at least one row"
+        );
+        if cfg.mode.is_functional() {
+            let rows = cfg.input.as_ref().map_or(0, |d| d.len());
+            anyhow::ensure!(
+                rows >= longest,
+                "functional serving needs input rows for the longest request ({longest})"
+            );
+        }
+    }
 
     // the placer may use more or fewer FPGAs per encoder than Fig. 14's six
     let slots = match &cfg.placement {
@@ -158,16 +218,23 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         GlobalKernelId::new(EVAL_CLUSTER, 0),
         Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
     );
-    behaviors.insert(
-        GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE),
-        Box::new(SourceKernel::new(
+    let source: Box<dyn KernelBehavior> = match &cfg.schedule {
+        Some(sched) => Box::new(crate::serve::source::RequestSourceKernel::new(
+            Out::to(GlobalKernelId::new(0, 0)),
+            sched.clone(),
+            cfg.interval,
+            cfg.input.clone(),
+            hidden,
+        )),
+        None => Box::new(SourceKernel::new(
             Out::to(GlobalKernelId::new(0, 0)),
             cfg.m as u32,
             cfg.inferences,
             cfg.interval,
             cfg.input.clone(),
         )),
-    );
+    };
+    behaviors.insert(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE), source);
     let (sink, sink_data) = SinkKernel::new();
     behaviors.insert(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK), Box::new(sink));
     clusters.push(eval_cluster);
@@ -189,9 +256,31 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
     Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec })
 }
 
-/// Convenience: run one inference through one encoder; returns
-/// (X, T, I) in cycles at the evaluation sink plus the testbed.
-pub fn run_encoder_once(cfg: &TestbedConfig) -> Result<(u64, u64, u64, EncoderTestbed)> {
+/// Measured result of one testbed run, decomposed the way §8.2.2 does.
+pub struct EncoderRunResult {
+    /// first-output latency at the evaluation sink (cycles)
+    pub x: u64,
+    /// last-output latency at the evaluation sink (cycles)
+    pub t: u64,
+    /// median interval between output packets (cycles)
+    pub i: u64,
+    /// cycle at which the simulation went quiescent (>= `t`; includes
+    /// any post-output drain)
+    pub end_cycle: u64,
+    /// the testbed, for inspecting sink contents / trace / fabric stats
+    pub testbed: EncoderTestbed,
+}
+
+impl EncoderRunResult {
+    /// The (X, T, I) components Eq. 1 extrapolates from.
+    pub fn components(&self) -> crate::eval::latency_model::LatencyComponents {
+        crate::eval::latency_model::LatencyComponents { x: self.x, t: self.t, i: self.i }
+    }
+}
+
+/// Convenience: build the testbed, run it to quiescence, and decompose
+/// the sink's arrival series into [`EncoderRunResult`].
+pub fn run_encoder_once(cfg: &TestbedConfig) -> Result<EncoderRunResult> {
     let mut tb = build_testbed(cfg)?;
     tb.sim.start();
     tb.sim.run()?;
@@ -200,5 +289,5 @@ pub fn run_encoder_once(cfg: &TestbedConfig) -> Result<(u64, u64, u64, EncoderTe
         .trace
         .xti(tb.sink_id)
         .ok_or_else(|| anyhow::anyhow!("no packets reached the evaluation sink"))?;
-    Ok((x, t, i, tb))
+    Ok(EncoderRunResult { x, t, i, end_cycle: tb.sim.time, testbed: tb })
 }

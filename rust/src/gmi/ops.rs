@@ -11,7 +11,7 @@
 //!
 //! Burst-aware: every op forwards a coalesced row run (see
 //! `sim::packet::Burst`) at the rows' cycle-exact arrival times. Rows
-//! pass through a per-destination [`TxQueue`]: coalescible destinations
+//! pass through a per-destination `TxQueue`: coalescible destinations
 //! (same FPGA) receive bursts immediately; everything else is emitted
 //! row-by-row at the correct emission cycle via deferred wakes, so link
 //! serialization order is identical to the uncoalesced engine.

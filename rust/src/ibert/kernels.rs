@@ -13,7 +13,7 @@
 //! dispatch instant. That is what makes the coalesced engine emit each
 //! row at exactly the cycle the uncoalesced engine would (the
 //! golden-determinism contract in rust/tests/proptests.rs). Emission
-//! goes through an [`OutStream`]: whole backlogs ship as one burst on
+//! goes through an `OutStream`: whole backlogs ship as one burst on
 //! intra-FPGA edges, or row-by-row at the exact scheduled cycle via
 //! deferred wakes everywhere else.
 

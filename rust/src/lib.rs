@@ -27,6 +27,10 @@
 //! * [`baselines`] — published GPU/FPGA comparison points (§8 tables).
 //! * [`eval`] — Eq. 1 latency model, GLUE-like workloads, and the
 //!   generators for every table and figure in the paper's evaluation.
+//! * [`serve`] — streaming request serving over the simulated pipeline:
+//!   open-loop Poisson/uniform traffic through N chained encoders, with
+//!   latency percentiles, throughput, per-stage backpressure, and the
+//!   Eq. 1 analytic-vs-simulated cross-check.
 //! * [`util`] — substrates the offline environment forced us to build:
 //!   JSON, RNG, CLI, tables, bench harness, property testing, tensor I/O.
 
@@ -39,6 +43,7 @@ pub mod gmi;
 pub mod ibert;
 pub mod placer;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod versal;

@@ -1,7 +1,7 @@
 //! galapagos-llm — CLI launcher for the multi-FPGA transformer platform.
 //!
 //! Subcommands:
-//!   tables    regenerate the paper's tables/figures (all or --only <id>)
+//!   tables    regenerate the paper's tables/figures (all or `--only <id>`)
 //!   simulate  run the encoder-chain simulator with custom parameters
 //!   plan      automatically place an encoder shape onto an FPGA fleet
 //!             (prints the mapping, per-FPGA fit, predicted latency; can
@@ -9,7 +9,10 @@
 //!   build     run the Cluster Builder on a description file (emits Tcl +
 //!             build manifest, validates resource fit)
 //!   versal    print the §9 Versal estimate
-//!   serve     serve requests through the PJRT encoder artifact
+//!   serve     stream open-loop request traffic through an N-encoder
+//!             pipeline in the DES (latency percentiles, throughput,
+//!             per-stage backpressure, Eq. 1 validation); `--backend
+//!             pjrt` serves through the PJRT encoder artifact instead
 //!   info      platform/calibration summary + device catalog
 
 use std::sync::Arc;
@@ -48,7 +51,12 @@ COMMANDS:
             [--replay]   (replay needs the ibert-base shape)
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
   versal
-  serve     [--requests 16] [--encoders 2]
+  serve     [--encoders 6] [--requests 200] [--workload glue|mrpc|squad]
+            [--arrivals poisson|uniform] [--rate <seqs/s> | --util 0.7]
+            [--seed 7] [--interval 12] [--fpgas-per-switch 6] [--no-eq1]
+            [--place [--config configs/ibert_poc.json]]  (PR 1 placer placement)
+            [--out report.json] [--quick]   (CI: writes BENCH_serving.json)
+            [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
 ";
 
@@ -463,6 +471,105 @@ fn cmd_versal() -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    match args.str_or("backend", "sim").as_str() {
+        "sim" => cmd_serve_sim(args),
+        "pjrt" => cmd_serve_pjrt(args),
+        other => bail!("unknown serve backend {other:?} (expected sim|pjrt)"),
+    }
+}
+
+/// Stream open-loop request traffic through an N-encoder pipeline in the
+/// discrete-event simulator and report serving metrics + the Eq. 1 check.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use galapagos_llm::serve::{run_serving, ArrivalProcess, LengthDist, ServeConfig};
+
+    let quick = args.bool_or("quick", false)?;
+    let encoders = args.usize_or("encoders", 6)?;
+    let requests = args.usize_or("requests", if quick { 32 } else { 200 })?;
+    let lengths = LengthDist::from_name(&args.str_or("workload", "glue"))?;
+    let seed = args.u64_or("seed", 7)?;
+
+    let mut cfg = ServeConfig::glue(encoders, requests, 1.0, seed);
+    cfg.traffic.lengths = lengths;
+    cfg.interval = args.u64_or("interval", 12)?;
+    cfg.fpgas_per_switch = args.usize_or("fpgas-per-switch", 6)?;
+    cfg.check_eq1 = !args.bool_or("no-eq1", false)?;
+
+    if args.bool_or("place", false)? {
+        // per-encoder placement from the PR 1 placer (possibly over the
+        // heterogeneous fleet of a build description)
+        let cfg_path = args.str_or("config", "configs/ibert_poc.json");
+        let d = if std::path::Path::new(&cfg_path).exists() {
+            BuildDescription::load(&cfg_path)?
+        } else if args.has("config") {
+            bail!("--config {cfg_path} does not exist");
+        } else {
+            println!("note: {cfg_path} not found, placing the default ibert-base description");
+            BuildDescription::default()
+        };
+        let fleet = d.fleet();
+        let sol = placer::place(
+            &d.shape(),
+            &d.pe,
+            &fleet,
+            &placer::SearchParams::for_m(d.max_seq.min(128)),
+        )?;
+        anyhow::ensure!(
+            sol.placement.slot_of.len() == galapagos_llm::ibert::graph::KERNELS_PER_ENCODER,
+            "serving needs a paper-shaped placement (38 kernels); use configs/ibert_poc.json"
+        );
+        println!(
+            "placer: {} kernels over {} FPGA slot(s) ({} per switch)",
+            sol.placement.slot_of.len(),
+            sol.placement.used_slots().len(),
+            fleet.fpgas_per_switch
+        );
+        cfg.pe = d.pe;
+        cfg.fpgas_per_switch = fleet.fpgas_per_switch;
+        cfg.placement = Some(sol.placement.slot_of.clone());
+    }
+
+    // offered load: explicit --rate, or --util x measured pipeline capacity
+    let (mean_m, capacity) = cfg.capacity_at_mean()?;
+    let rate = if args.has("rate") {
+        args.f64_or("rate", capacity)?
+    } else {
+        capacity * args.f64_or("util", 0.7)?
+    };
+    anyhow::ensure!(rate > 0.0, "offered rate must be positive");
+    cfg.traffic.process = match args.str_or("arrivals", "poisson").as_str() {
+        "poisson" => ArrivalProcess::Poisson { seqs_per_s: rate },
+        "uniform" => ArrivalProcess::Uniform { seqs_per_s: rate },
+        other => bail!("unknown arrival process {other:?} (expected poisson|uniform)"),
+    };
+    println!(
+        "pipeline capacity ~{capacity:.0} seqs/s at m={mean_m}; offering {rate:.0} seqs/s \
+         ({:.0}% load)",
+        100.0 * rate / capacity
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = run_serving(&cfg)?;
+    println!("{}", report.render());
+    println!(
+        "(DES: {} events in {:.1} ms wall)",
+        report.events,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let out = args
+        .str_opt("out")
+        .map(str::to_string)
+        .or_else(|| quick.then(|| "BENCH_serving.json".to_string()));
+    if let Some(path) = out {
+        std::fs::write(&path, report.to_json().pretty())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+/// Serve requests through the AOT-compiled PJRT encoder artifact (the
+/// original `serve` path; needs `make artifacts`).
+fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 16)?;
     let encoders = args.usize_or("encoders", 2)?;
     let dir = ModelParams::default_dir();

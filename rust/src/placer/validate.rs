@@ -111,8 +111,8 @@ pub fn replay_in_simulator(
     cfg.pe = g.pe;
     cfg.fpgas_per_switch = fleet.fpgas_per_switch;
     cfg.placement = Some(p.slot_of.clone());
-    let (x, t, i, _) = crate::eval::testbed::run_encoder_once(&cfg)?;
-    Ok((x, t, i))
+    let r = crate::eval::testbed::run_encoder_once(&cfg)?;
+    Ok((r.x, r.t, r.i))
 }
 
 #[cfg(test)]

@@ -1,0 +1,280 @@
+//! Streaming request serving over the simulated multi-FPGA pipeline
+//! (the ROADMAP north-star: heavy traffic, not single-shot latency).
+//!
+//! The paper's headline numbers simulate ONE encoder and extrapolate the
+//! 12-encoder model via Eq. 1 `T + (L-1)(X + d)`. This subsystem actually
+//! builds the chain and serves it: [`traffic`] generates an open-loop
+//! request schedule (Poisson/uniform arrivals over GLUE/MRPC/SQuAD
+//! length distributions), [`source`] replays it into the first encoder
+//! over the evaluation FPGA's serialized 100G link, and [`stats`]
+//! distills per-request latency percentiles, sustained throughput, and
+//! per-stage occupancy/backpressure out of the DES trace. Consecutive
+//! sequences overlap inside the pipeline exactly as the paper's X-vs-T
+//! analysis predicts — and [`validate_eq1`] turns that prediction into a
+//! tested claim by comparing the analytic estimate against the fully
+//! simulated N-encoder chain (inter-encoder `d` modeled as a real fabric
+//! hop, not a constant).
+//!
+//! Entry points: [`ServeConfig`] + [`run_serving`] (the `serve` CLI
+//! subcommand and `benches/serving_pipeline.rs` are thin wrappers).
+
+pub mod source;
+pub mod stats;
+pub mod traffic;
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::eval::latency_model::estimate_model_latency_cycles;
+use crate::eval::testbed::{build_testbed, run_encoder_once, TestbedConfig};
+use crate::ibert::graph::{ids, KERNELS_PER_ENCODER};
+use crate::ibert::kernels::Mode;
+use crate::ibert::timing::PeConfig;
+use crate::sim::packet::GlobalKernelId;
+use crate::FABRIC_CLOCK_HZ;
+
+pub use stats::{Eq1Check, LatencySummary, ServingReport, StageReport};
+pub use traffic::{ArrivalProcess, LengthDist, Request, TrafficConfig};
+
+/// One serving scenario: a pipeline shape plus an open-loop traffic trace.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// chained encoders (12 = the full I-BERT of Fig. 17)
+    pub encoders: usize,
+    pub traffic: TrafficConfig,
+    /// row packet interval on the source link (12 = 100G line rate)
+    pub interval: u64,
+    pub pe: PeConfig,
+    pub mode: Mode,
+    /// golden input rows for functional serving (>= max_m rows)
+    pub input: Option<Arc<Vec<Vec<i8>>>>,
+    /// per-encoder kernel -> slot map from the placer (None = Fig. 14)
+    pub placement: Option<Vec<usize>>,
+    pub fpgas_per_switch: usize,
+    /// also run the Eq. 1 analytic-vs-simulated cross-check
+    pub check_eq1: bool,
+}
+
+impl ServeConfig {
+    /// GLUE traffic at `seqs_per_s` Poisson arrivals through `encoders`
+    /// chained encoders — the headline serving scenario.
+    pub fn glue(encoders: usize, requests: usize, seqs_per_s: f64, seed: u64) -> ServeConfig {
+        ServeConfig {
+            encoders,
+            traffic: TrafficConfig {
+                process: ArrivalProcess::Poisson { seqs_per_s },
+                lengths: LengthDist::Glue,
+                requests,
+                seed,
+                max_m: 128,
+            },
+            interval: 12,
+            pe: PeConfig::default(),
+            mode: Mode::Timing,
+            input: None,
+            placement: None,
+            fpgas_per_switch: 6,
+            check_eq1: false,
+        }
+    }
+
+    /// Probe the pipeline's capacity at the workload's published mean
+    /// length; returns `(mean_m, seqs_per_s)`. The single definition the
+    /// CLI's `--util` and the serving bench's `load` both scale against.
+    pub fn capacity_at_mean(&self) -> Result<(usize, f64)> {
+        let mean_m = (self.traffic.lengths.mean().round() as usize).clamp(1, self.traffic.max_m);
+        Ok((mean_m, pipeline_capacity_seqs_per_s(self, mean_m)?))
+    }
+
+    fn testbed_config(&self, schedule: Arc<Vec<Request>>) -> TestbedConfig {
+        TestbedConfig {
+            encoders: self.encoders,
+            m: self.traffic.max_m,
+            inferences: schedule.len() as u32,
+            interval: self.interval,
+            pe: self.pe,
+            mode: self.mode.clone(),
+            fpgas_per_switch: self.fpgas_per_switch,
+            input: self.input.clone(),
+            placement: self.placement.clone(),
+            schedule: Some(schedule),
+        }
+    }
+}
+
+/// Measure the pipeline's sustainable sequence rate (seqs/s) at length
+/// `m`: stream back-to-back inferences through one encoder and take the
+/// median completion gap. Every stage of a homogeneous chain has the
+/// same initiation interval, so one encoder's steady state is the whole
+/// pipeline's capacity — this is what `--util` scales against.
+pub fn pipeline_capacity_seqs_per_s(cfg: &ServeConfig, m: usize) -> Result<f64> {
+    let mut tb_cfg = cfg.testbed_config(Arc::new(Vec::new()));
+    tb_cfg.schedule = None;
+    tb_cfg.encoders = 1;
+    tb_cfg.m = m;
+    tb_cfg.inferences = 6;
+    let mut tb = build_testbed(&tb_cfg)?;
+    tb.sim.start();
+    tb.sim.run()?;
+    let sink = tb.sink.lock().unwrap();
+    let mut done: Vec<u64> = (0..tb_cfg.inferences)
+        .filter_map(|i| sink.arrivals.get(&i).map(|&(_, t)| t))
+        .collect();
+    done.sort_unstable();
+    ensure!(done.len() >= 2, "capacity probe needs >= 2 completed inferences");
+    let mut gaps: Vec<u64> = done.windows(2).map(|w| w[1] - w[0]).collect();
+    gaps.sort_unstable();
+    let ii = gaps[gaps.len() / 2].max(1);
+    Ok(FABRIC_CLOCK_HZ as f64 / ii as f64)
+}
+
+/// Validate Eq. 1 against the simulator: measure one encoder's (X, T)
+/// at length `m`, extrapolate to `encoders` with `d` taken from the
+/// platform's actual inter-encoder fabric hop, and compare against the
+/// fully simulated chain's last-output latency.
+pub fn validate_eq1(base: &TestbedConfig, encoders: usize, m: usize) -> Result<Eq1Check> {
+    ensure!(encoders >= 1, "need at least one encoder");
+    let mut one = base.clone();
+    one.encoders = 1;
+    one.m = m;
+    one.inferences = 1;
+    one.schedule = None;
+    let single = run_encoder_once(&one)?;
+    let components = single.components();
+
+    let mut chain = one.clone();
+    chain.encoders = encoders;
+    let full = run_encoder_once(&chain)?;
+
+    // Eq. 1 with d read off the topology. Hop counts can differ per
+    // boundary when fpgas_per_switch does not divide the encoder width,
+    // so sum the actual d of each boundary (reduces to the closed form
+    // `T + (L-1)(X + d)` whenever d is uniform, e.g. the paper layout).
+    let d_total: u64 = (0..encoders.saturating_sub(1))
+        .map(|b| crate::eval::testbed::inter_encoder_hop_cycles(base, b))
+        .sum();
+    let analytic = estimate_model_latency_cycles(components, encoders, 0) + d_total;
+    Ok(Eq1Check { encoders, m, components, analytic, simulated: full.t })
+}
+
+/// Run one serving scenario end to end and distill the report.
+pub fn run_serving(cfg: &ServeConfig) -> Result<ServingReport> {
+    ensure!(cfg.encoders >= 1, "need at least one encoder");
+    ensure!(cfg.traffic.requests >= 1, "need at least one request");
+    ensure!(cfg.traffic.process.seqs_per_s() > 0.0, "offered rate must be positive");
+    let schedule = Arc::new(cfg.traffic.generate());
+    let tb_cfg = cfg.testbed_config(schedule.clone());
+    let mut tb = build_testbed(&tb_cfg)?;
+    tb.sim.start();
+    tb.sim.run()?;
+
+    // per-request outcomes: completion of the last output row minus the
+    // scheduled arrival (source queueing charged to the request)
+    let (mut latencies, mut completed, mut last_done) = (Vec::new(), 0usize, 0u64);
+    {
+        let sink = tb.sink.lock().unwrap();
+        for (i, req) in schedule.iter().enumerate() {
+            if let Some(&(pkts, done)) = sink.arrivals.get(&(i as u32)) {
+                if pkts == req.m {
+                    completed += 1;
+                    latencies.push(done - req.arrival);
+                    last_done = last_done.max(done);
+                }
+            }
+        }
+    }
+    let latency = LatencySummary::from_unsorted(latencies.clone())
+        .ok_or_else(|| anyhow::anyhow!("no request completed at the evaluation sink"))?;
+    let makespan_cycles = last_done - schedule[0].arrival;
+
+    // per-stage activity and backpressure
+    let mut stages = Vec::with_capacity(cfg.encoders);
+    for e in 0..cfg.encoders {
+        let gw = GlobalKernelId::new(e as u8, ids::GATEWAY);
+        let out = GlobalKernelId::new(e as u8, ids::LN2);
+        let first_rx = tb.sim.trace.kernel(gw).and_then(|s| s.first_rx).unwrap_or(0);
+        let last_tx = tb.sim.trace.kernel(out).and_then(|s| s.last_tx).unwrap_or(first_rx);
+        let rows_in = tb.sim.trace.kernel(gw).map_or(0, |s| s.rx_packets);
+        let (mut peak, mut overflows) = (0.0f64, 0u64);
+        for k in 0..KERNELS_PER_ENCODER as u8 {
+            if let Some(f) = tb.sim.fifo_of(GlobalKernelId::new(e as u8, k)) {
+                peak = peak.max(f.high_water as f64 / f.capacity_bytes.max(1) as f64);
+                overflows += f.overflows;
+            }
+        }
+        let span = last_tx.saturating_sub(first_rx) as f64;
+        let occupancy = (span / makespan_cycles.max(1) as f64).min(1.0);
+        stages.push(StageReport {
+            encoder: e,
+            occupancy,
+            fifo_peak: peak,
+            fifo_overflows: overflows,
+            rows_in,
+        });
+    }
+
+    // Eq. 1 cross-check at the workload's mean length
+    let eq1 = if cfg.check_eq1 {
+        let mean_m = (traffic::total_tokens(&schedule) as f64 / schedule.len() as f64)
+            .round()
+            .clamp(1.0, cfg.traffic.max_m as f64) as usize;
+        Some(validate_eq1(&tb_cfg, cfg.encoders, mean_m)?)
+    } else {
+        None
+    };
+
+    Ok(ServingReport {
+        encoders: cfg.encoders,
+        workload: cfg.traffic.lengths.name().to_string(),
+        process: cfg.traffic.process.name().to_string(),
+        offered_seqs_per_s: cfg.traffic.process.seqs_per_s(),
+        seed: cfg.traffic.seed,
+        requests: schedule.len(),
+        completed,
+        total_tokens: traffic::total_tokens(&schedule),
+        makespan_cycles,
+        latency,
+        latencies,
+        stages,
+        eq1,
+        events: tb.sim.trace.events_processed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glue_serving_completes_every_request() {
+        let mut cfg = ServeConfig::glue(2, 12, 2_000.0, 3);
+        cfg.check_eq1 = true;
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.completed, 12);
+        assert_eq!(r.latencies.len(), 12);
+        assert_eq!(r.stages.len(), 2);
+        assert!(r.latency.p50 > 0 && r.latency.p99 >= r.latency.p50);
+        assert!(r.seqs_per_s() > 0.0 && r.tokens_per_s() > r.seqs_per_s());
+        // both stages saw every row of every request (one row per token)
+        let rows = r.total_tokens;
+        assert_eq!(r.stages[0].rows_in, rows);
+        assert_eq!(r.stages[1].rows_in, rows);
+        let e = r.eq1.unwrap();
+        assert!(e.rel_err().abs() < 0.05, "Eq. 1 off by {:+.2}%", 100.0 * e.rel_err());
+    }
+
+    #[test]
+    fn capacity_probe_is_positive_and_finite() {
+        let cfg = ServeConfig::glue(1, 1, 1000.0, 1);
+        let cap = pipeline_capacity_seqs_per_s(&cfg, 38).unwrap();
+        assert!(cap > 100.0 && cap < 1e7, "capacity {cap} seqs/s");
+    }
+
+    #[test]
+    fn zero_requests_rejected() {
+        let mut cfg = ServeConfig::glue(1, 1, 1000.0, 1);
+        cfg.traffic.requests = 0;
+        assert!(run_serving(&cfg).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! The serving source kernel: replays an open-loop request schedule into
+//! the first encoder over the evaluation FPGA's 100G link.
+//!
+//! Emission is open-loop but the link is a real serial resource: row `r`
+//! of request `i` leaves at `max(arrival_i, previous_emission + interval)`
+//! — a request that arrives while an earlier one is still streaming
+//! queues *at the source*, and that queueing delay is charged to its
+//! end-to-end latency (completion − scheduled arrival), exactly like a
+//! NIC transmit queue in a real deployment.
+
+use std::sync::Arc;
+
+use crate::gmi::Out;
+use crate::sim::engine::{KernelBehavior, KernelIo, START_TAG};
+use crate::sim::packet::{MsgMeta, Packet, Payload};
+
+use super::traffic::Request;
+
+/// Wake tag of the emission pump.
+const PUMP: u64 = 1;
+
+/// Streams the rows of each scheduled request at `interval` pacing,
+/// tagging every row with the request index as its inference id so the
+/// per-inference kernel state downstream keeps overlapping requests
+/// separate.
+pub struct RequestSourceKernel {
+    dst: Out,
+    /// cycles between consecutive row packets (12 = 100G line rate)
+    interval: u64,
+    requests: Arc<Vec<Request>>,
+    /// golden input rows for functional runs (row `r` of a length-`m`
+    /// request sends `data[r]`); None = timing payloads
+    data: Option<Arc<Vec<Vec<i8>>>>,
+    /// row size for timing payloads (one hidden row)
+    row_bytes: usize,
+    idx: usize,
+    row: u32,
+}
+
+impl RequestSourceKernel {
+    pub fn new(
+        dst: Out,
+        requests: Arc<Vec<Request>>,
+        interval: u64,
+        data: Option<Arc<Vec<Vec<i8>>>>,
+        row_bytes: usize,
+    ) -> Self {
+        RequestSourceKernel { dst, interval, requests, data, row_bytes, idx: 0, row: 0 }
+    }
+}
+
+impl KernelBehavior for RequestSourceKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        io.consume(pkt.wire_bytes());
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag != START_TAG && tag != PUMP {
+            return;
+        }
+        let Some(req) = self.requests.get(self.idx) else {
+            return; // schedule drained
+        };
+        if self.row == 0 && io.now < req.arrival {
+            // idle link: sleep until the next request arrives
+            io.wake_in(req.arrival - io.now, PUMP);
+            return;
+        }
+        let payload = match &self.data {
+            Some(d) => Payload::row_i8(d[self.row as usize].clone()),
+            None => Payload::Timing(self.row_bytes),
+        };
+        let meta = MsgMeta {
+            stream: self.dst.stream.unwrap_or(0),
+            row: self.row,
+            rows: req.m,
+            inference: self.idx as u32,
+        };
+        io.send(self.dst.dst, meta, payload);
+        self.row += 1;
+        if self.row == req.m {
+            self.row = 0;
+            self.idx += 1;
+        }
+        if self.idx < self.requests.len() {
+            // the link stays serialized at `interval` even across request
+            // boundaries; an early next-arrival waits in the PUMP branch
+            io.wake_in(self.interval.max(1), PUMP);
+        }
+    }
+
+    fn name(&self) -> String {
+        "serve-source".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fabric::{FpgaId, SwitchId};
+    use crate::sim::fifo::Fifo;
+    use crate::sim::packet::GlobalKernelId;
+    use crate::sim::Sim;
+
+    /// Records (arrival cycle, inference, row, rows) per packet.
+    struct Recorder {
+        seen: std::sync::Arc<std::sync::Mutex<Vec<(u64, u32, u32, u32)>>>,
+    }
+    impl KernelBehavior for Recorder {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            let log = self.seen.clone();
+            io.rows(pkt, |io2, meta, at, payload| {
+                io2.consume(payload.bytes());
+                log.lock().unwrap().push((at, meta.inference, meta.row, meta.rows));
+            });
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    fn run(requests: Vec<Request>, interval: u64) -> Vec<(u64, u32, u32, u32)> {
+        let src = GlobalKernelId::new(0, 1);
+        let dst = GlobalKernelId::new(0, 2);
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(
+            src,
+            FpgaId(0),
+            Fifo::new(1 << 16),
+            Box::new(RequestSourceKernel::new(
+                Out::to(dst),
+                Arc::new(requests),
+                interval,
+                None,
+                768,
+            )),
+        )
+        .unwrap();
+        sim.add_kernel(dst, FpgaId(1), Fifo::new(1 << 20), Box::new(Recorder { seen: seen.clone() }))
+            .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let v = seen.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn rows_follow_the_schedule_with_idle_gaps() {
+        // request 1 arrives long after request 0 finished streaming
+        let reqs =
+            vec![Request { arrival: 0, m: 3 }, Request { arrival: 10_000, m: 2 }];
+        let got = run(reqs, 12);
+        assert_eq!(got.len(), 5);
+        // rows of request 0 are spaced by the interval
+        assert_eq!(got[1].0 - got[0].0, 12);
+        assert_eq!(got[2].0 - got[1].0, 12);
+        // request 1's first row leaves at its arrival, not before
+        assert!(got[3].0 >= 10_000);
+        assert_eq!(got[3].1, 1, "second request carries inference id 1");
+        assert_eq!(got[3].3, 2, "rows metadata is the request's own length");
+    }
+
+    #[test]
+    fn backlogged_arrivals_queue_at_the_source_link() {
+        // request 1 arrives while request 0 (100 rows) still streams:
+        // its rows must wait for the serialized link
+        let reqs = vec![Request { arrival: 0, m: 100 }, Request { arrival: 60, m: 1 }];
+        let got = run(reqs, 12);
+        assert_eq!(got.len(), 101);
+        let first_of_1 = got.iter().find(|e| e.1 == 1).unwrap();
+        let last_of_0 = got.iter().filter(|e| e.1 == 0).map(|e| e.0).max().unwrap();
+        assert!(
+            first_of_1.0 > last_of_0,
+            "queued request must start after the backlog drains"
+        );
+        assert_eq!(first_of_1.0 - last_of_0, 12, "and exactly one interval later");
+    }
+
+    #[test]
+    fn empty_schedule_is_a_no_op() {
+        assert!(run(Vec::new(), 12).is_empty());
+    }
+}

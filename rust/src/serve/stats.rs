@@ -1,0 +1,318 @@
+//! Serving metrics: per-request latency percentiles, sustained
+//! throughput, and per-stage occupancy/backpressure distilled from the
+//! DES trace and FIFO accounting.
+//!
+//! Latency is end-to-end as a user sees it: completion of the request's
+//! last output row at the evaluation sink minus its *scheduled* arrival
+//! — source-side queueing included. Percentiles use the nearest-rank
+//! definition (`ceil(q·n)`-th smallest), so every reported number is an
+//! actually-observed latency.
+
+use crate::cycles_to_us;
+use crate::eval::latency_model::LatencyComponents;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::FABRIC_CLOCK_HZ;
+
+/// Nearest-rank percentile of a sorted sample: the smallest element with
+/// at least `q` of the mass at or below it (q in (0, 1]).
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Latency distribution summary in cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub mean: f64,
+    pub max: u64,
+}
+
+impl LatencySummary {
+    pub fn from_unsorted(mut v: Vec<u64>) -> Option<LatencySummary> {
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_unstable();
+        let mean = v.iter().sum::<u64>() as f64 / v.len() as f64;
+        Some(LatencySummary {
+            p50: percentile(&v, 0.50),
+            p95: percentile(&v, 0.95),
+            p99: percentile(&v, 0.99),
+            mean,
+            max: *v.last().unwrap(),
+        })
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("p50_cycles", Json::Num(self.p50 as f64)),
+            ("p95_cycles", Json::Num(self.p95 as f64)),
+            ("p99_cycles", Json::Num(self.p99 as f64)),
+            ("mean_cycles", Json::Num(self.mean)),
+            ("max_cycles", Json::Num(self.max as f64)),
+            ("p50_us", Json::Num(cycles_to_us(self.p50))),
+            ("p95_us", Json::Num(cycles_to_us(self.p95))),
+            ("p99_us", Json::Num(cycles_to_us(self.p99))),
+        ])
+    }
+}
+
+/// Activity and backpressure of one encoder stage over the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageReport {
+    pub encoder: usize,
+    /// fraction of the makespan during which the stage had work in
+    /// flight (first gateway rx to last output tx)
+    pub occupancy: f64,
+    /// worst input-FIFO high-water mark across the stage's kernels, as a
+    /// fraction of that FIFO's capacity (>1 means the §8.2.1 sizing rule
+    /// was violated at this load)
+    pub fifo_peak: f64,
+    /// total FIFO overflow events across the stage's kernels
+    pub fifo_overflows: u64,
+    /// rows the stage ingested (gateway rx packets)
+    pub rows_in: u64,
+}
+
+impl StageReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("encoder", Json::Num(self.encoder as f64)),
+            ("occupancy", Json::Num(self.occupancy)),
+            ("fifo_peak", Json::Num(self.fifo_peak)),
+            ("fifo_overflows", Json::Num(self.fifo_overflows as f64)),
+            ("rows_in", Json::Num(self.rows_in as f64)),
+        ])
+    }
+}
+
+/// Eq. 1 cross-check: the paper's analytic extrapolation against the
+/// fully simulated N-encoder pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Eq1Check {
+    pub encoders: usize,
+    /// sequence length of the probe inference
+    pub m: usize,
+    /// single-encoder components the estimate is built from
+    pub components: LatencyComponents,
+    /// `T + (L-1)X + sum of per-boundary d` in cycles (reduces to Eq. 1's
+    /// `T + (L-1)(X + d)` when every boundary has the same hop count)
+    pub analytic: u64,
+    /// simulated N-encoder last-output latency in cycles
+    pub simulated: u64,
+}
+
+impl Eq1Check {
+    /// Signed relative error of the analytic estimate vs the simulation.
+    pub fn rel_err(&self) -> f64 {
+        (self.analytic as f64 - self.simulated as f64) / self.simulated as f64
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("encoders", Json::Num(self.encoders as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("x_cycles", Json::Num(self.components.x as f64)),
+            ("t_cycles", Json::Num(self.components.t as f64)),
+            ("analytic_cycles", Json::Num(self.analytic as f64)),
+            ("simulated_cycles", Json::Num(self.simulated as f64)),
+            ("rel_err", Json::Num(self.rel_err())),
+        ])
+    }
+}
+
+/// Everything one serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub encoders: usize,
+    pub workload: String,
+    pub process: String,
+    pub offered_seqs_per_s: f64,
+    pub seed: u64,
+    pub requests: usize,
+    /// requests whose full output matrix reached the sink
+    pub completed: usize,
+    pub total_tokens: u64,
+    /// first scheduled arrival to last completion
+    pub makespan_cycles: u64,
+    pub latency: LatencySummary,
+    /// per-request end-to-end latency in cycles, request order (the
+    /// seed-determinism contract covers this vector verbatim)
+    pub latencies: Vec<u64>,
+    pub stages: Vec<StageReport>,
+    pub eq1: Option<Eq1Check>,
+    /// DES events the run took (simulator cost, not model time)
+    pub events: u64,
+}
+
+impl ServingReport {
+    /// Sustained sequences per second over the makespan.
+    pub fn seqs_per_s(&self) -> f64 {
+        self.completed as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles.max(1) as f64
+    }
+
+    /// Sustained tokens per second over the makespan.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.total_tokens as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles.max(1) as f64
+    }
+
+    /// Mean requests in flight (Little's law: sum of latencies over the
+    /// makespan) — the load metric that separates a saturated pipeline
+    /// from a lightly loaded one when span-based occupancy cannot.
+    pub fn mean_inflight(&self) -> f64 {
+        self.latencies.iter().map(|&l| l as f64).sum::<f64>() / self.makespan_cycles.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("serving_report/v1".into())),
+            ("encoders", Json::Num(self.encoders as f64)),
+            ("workload", Json::Str(self.workload.clone())),
+            ("process", Json::Str(self.process.clone())),
+            ("offered_seqs_per_s", Json::Num(self.offered_seqs_per_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("total_tokens", Json::Num(self.total_tokens as f64)),
+            ("makespan_cycles", Json::Num(self.makespan_cycles as f64)),
+            ("seqs_per_s", Json::Num(self.seqs_per_s())),
+            ("tokens_per_s", Json::Num(self.tokens_per_s())),
+            ("mean_inflight", Json::Num(self.mean_inflight())),
+            ("latency", self.latency.to_json()),
+            ("stages", Json::Arr(self.stages.iter().map(|s| s.to_json()).collect())),
+            ("eq1", self.eq1.map(|e| e.to_json()).unwrap_or(Json::Null)),
+            ("events", Json::Num(self.events as f64)),
+        ])
+    }
+
+    /// Human-readable summary (the `serve` CLI's stdout).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "served {}/{} requests ({} tokens) through {} encoders \
+             [{} arrivals, {} lengths, seed {}]\n",
+            self.completed,
+            self.requests,
+            self.total_tokens,
+            self.encoders,
+            self.process,
+            self.workload,
+            self.seed
+        );
+        s.push_str(&format!(
+            "offered {:.0} seqs/s -> sustained {:.0} seqs/s  ({:.0} tokens/s)  \
+             over {:.2} ms of fabric time, {:.2} requests in flight on average\n",
+            self.offered_seqs_per_s,
+            self.seqs_per_s(),
+            self.tokens_per_s(),
+            cycles_to_us(self.makespan_cycles) / 1e3,
+            self.mean_inflight(),
+        ));
+        s.push_str(&format!(
+            "latency  p50 {:.1} us   p95 {:.1} us   p99 {:.1} us   mean {:.1} us   max {:.1} us\n",
+            cycles_to_us(self.latency.p50),
+            cycles_to_us(self.latency.p95),
+            cycles_to_us(self.latency.p99),
+            self.latency.mean * 1e6 / FABRIC_CLOCK_HZ as f64,
+            cycles_to_us(self.latency.max),
+        ));
+        let mut t = Table::new(
+            "per-stage pipeline view",
+            &["encoder", "occupancy", "FIFO peak", "overflows", "rows in"],
+        );
+        for st in &self.stages {
+            t.row(vec![
+                st.encoder.to_string(),
+                format!("{:.1}%", st.occupancy * 100.0),
+                format!("{:.1}%", st.fifo_peak * 100.0),
+                st.fifo_overflows.to_string(),
+                st.rows_in.to_string(),
+            ]);
+        }
+        s.push_str(&t.render());
+        if let Some(e) = self.eq1 {
+            s.push_str(&format!(
+                "\nEq. 1 check @ m={}: analytic {} cycles vs simulated {} cycles \
+                 ({:+.2}% error over {} encoders)\n",
+                e.m,
+                e.analytic,
+                e.simulated,
+                100.0 * e.rel_err(),
+                e.encoders
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 95);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        // small samples: every answer is an observed value
+        let w = vec![10u64, 20, 30, 40];
+        assert_eq!(percentile(&w, 0.50), 20);
+        assert_eq!(percentile(&w, 0.99), 40);
+        assert_eq!(percentile(&[7], 0.50), 7);
+    }
+
+    #[test]
+    fn summary_from_unsorted() {
+        let s = LatencySummary::from_unsorted(vec![30, 10, 20]).unwrap();
+        assert_eq!(s.p50, 20);
+        assert_eq!(s.max, 30);
+        assert!((s.mean - 20.0).abs() < 1e-9);
+        assert!(LatencySummary::from_unsorted(vec![]).is_none());
+    }
+
+    #[test]
+    fn eq1_rel_err_signed() {
+        let c = LatencyComponents { x: 100, t: 200, i: 5 };
+        let e = Eq1Check { encoders: 12, m: 38, components: c, analytic: 105, simulated: 100 };
+        assert!((e.rel_err() - 0.05).abs() < 1e-12);
+        let e2 = Eq1Check { analytic: 95, ..e };
+        assert!((e2.rel_err() + 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = ServingReport {
+            encoders: 6,
+            workload: "glue".into(),
+            process: "poisson".into(),
+            offered_seqs_per_s: 1000.0,
+            seed: 7,
+            requests: 2,
+            completed: 2,
+            total_tokens: 70,
+            makespan_cycles: 200_000, // 1 ms at 200 MHz
+            latency: LatencySummary { p50: 100, p95: 200, p99: 200, mean: 150.0, max: 200 },
+            latencies: vec![100, 200],
+            stages: vec![],
+            eq1: None,
+            events: 42,
+        };
+        assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
+        assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
+        assert!((r.mean_inflight() - 300.0 / 200_000.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "serving_report/v1");
+        assert_eq!(j.path("latency.p50_cycles").unwrap().as_i64().unwrap(), 100);
+        assert_eq!(j.get("eq1").unwrap(), &Json::Null);
+        // render never panics and carries the headline numbers
+        assert!(r.render().contains("p95"));
+    }
+}

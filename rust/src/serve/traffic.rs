@@ -1,0 +1,216 @@
+//! Open-loop traffic models: the serving workload generator.
+//!
+//! The paper's testbed streams back-to-back inferences of one fixed
+//! length; a serving deployment sees *open-loop* traffic — requests
+//! arrive on their own schedule whether or not the pipeline kept up, so
+//! queueing delay is part of the latency a user observes. This module
+//! turns an arrival process (Poisson or uniform) plus a benchmark
+//! length distribution ([`GlueWorkload`]: GLUE, MRPC, SQuAD) into a
+//! deterministic, seed-reproducible request schedule that the
+//! evaluation-FPGA source kernel replays cycle-exactly.
+
+use crate::eval::workload::GlueWorkload;
+use crate::util::rng::Rng;
+use crate::FABRIC_CLOCK_HZ;
+
+/// One request of an open-loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Arrival cycle at the evaluation FPGA's ingress.
+    pub arrival: u64,
+    /// Actual (unpadded) sequence length in tokens.
+    pub m: u32,
+}
+
+/// Inter-arrival process of the open-loop source.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps with mean
+    /// `1 / seqs_per_s` (the standard open-loop serving model).
+    Poisson { seqs_per_s: f64 },
+    /// Deterministic arrivals every `1 / seqs_per_s` seconds (isolates
+    /// pipeline behavior from arrival burstiness).
+    Uniform { seqs_per_s: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn seqs_per_s(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { seqs_per_s } | ArrivalProcess::Uniform { seqs_per_s } => {
+                *seqs_per_s
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Uniform { .. } => "uniform",
+        }
+    }
+
+    /// Next inter-arrival gap in fabric cycles.
+    fn gap_cycles(&self, rng: &mut Rng) -> u64 {
+        let mean = FABRIC_CLOCK_HZ as f64 / self.seqs_per_s();
+        match self {
+            ArrivalProcess::Uniform { .. } => mean.round() as u64,
+            ArrivalProcess::Poisson { .. } => {
+                // inverse-CDF sample; 1 - U in (0, 1] keeps ln() finite
+                let u = 1.0 - rng.next_f64();
+                (-u.ln() * mean).round() as u64
+            }
+        }
+    }
+}
+
+/// Which benchmark's length distribution drives the workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthDist {
+    /// GLUE suite, mean length 38 (the paper's §8.2.2 characterization).
+    Glue,
+    /// MRPC micro-benchmark, mean length 54 (§7.1).
+    Mrpc,
+    /// SQuAD-like long contexts (mean ~152, max 384); lengths are clamped
+    /// to the hardware build point's `max_seq` at schedule generation.
+    Squad,
+}
+
+impl LengthDist {
+    pub fn from_name(s: &str) -> anyhow::Result<LengthDist> {
+        match s {
+            "glue" => Ok(LengthDist::Glue),
+            "mrpc" => Ok(LengthDist::Mrpc),
+            "squad" => Ok(LengthDist::Squad),
+            _ => anyhow::bail!("unknown workload {s:?} (expected glue|mrpc|squad)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LengthDist::Glue => "glue",
+            LengthDist::Mrpc => "mrpc",
+            LengthDist::Squad => "squad",
+        }
+    }
+
+    pub fn sampler(&self, seed: u64) -> GlueWorkload {
+        match self {
+            LengthDist::Glue => GlueWorkload::glue(seed),
+            LengthDist::Mrpc => GlueWorkload::mrpc(seed),
+            LengthDist::Squad => GlueWorkload::squad(seed),
+        }
+    }
+
+    /// Published mean length of the distribution (tokens).
+    pub fn mean(&self) -> f64 {
+        match self {
+            LengthDist::Glue => 38.0,
+            LengthDist::Mrpc => 54.0,
+            LengthDist::Squad => 152.0,
+        }
+    }
+}
+
+/// Full specification of one open-loop traffic trace.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    pub process: ArrivalProcess,
+    pub lengths: LengthDist,
+    /// number of requests in the trace
+    pub requests: usize,
+    pub seed: u64,
+    /// hardware build point: sampled lengths clamp here (the paper's
+    /// testbed is built for 128 tokens)
+    pub max_m: usize,
+}
+
+impl TrafficConfig {
+    /// Generate the schedule: arrivals accumulate the process's gaps
+    /// (first request at cycle 0), lengths come from the benchmark
+    /// sampler. Deterministic in `seed`.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut lens = self.lengths.sampler(self.seed);
+        // independent stream for the arrival gaps so length and timing
+        // draws never interleave (schedules stay stable if one sampler
+        // changes its draw count)
+        let mut gaps = Rng::new(self.seed ^ 0xA11A_57A7_5EED_0001);
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(self.requests);
+        for _ in 0..self.requests {
+            let m = lens.sample().clamp(1, self.max_m) as u32;
+            out.push(Request { arrival: t, m });
+            t += self.process.gap_cycles(&mut gaps);
+        }
+        out
+    }
+}
+
+/// Total token count of a schedule.
+pub fn total_tokens(requests: &[Request]) -> u64 {
+    requests.iter().map(|r| r.m as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(process: ArrivalProcess) -> TrafficConfig {
+        TrafficConfig {
+            process,
+            lengths: LengthDist::Glue,
+            requests: 2000,
+            seed: 11,
+            max_m: 128,
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        let rate = 5_000.0; // seqs/s => mean gap 40_000 cycles
+        let reqs = cfg(ArrivalProcess::Poisson { seqs_per_s: rate }).generate();
+        let span = reqs.last().unwrap().arrival as f64;
+        let mean_gap = span / (reqs.len() - 1) as f64;
+        let want = FABRIC_CLOCK_HZ as f64 / rate;
+        assert!(
+            (mean_gap - want).abs() / want < 0.08,
+            "mean gap {mean_gap} vs expected {want}"
+        );
+    }
+
+    #[test]
+    fn uniform_gaps_are_exact() {
+        let reqs = cfg(ArrivalProcess::Uniform { seqs_per_s: 10_000.0 }).generate();
+        let gap = FABRIC_CLOCK_HZ / 10_000;
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.arrival, i as u64 * gap);
+        }
+    }
+
+    #[test]
+    fn schedules_are_seed_deterministic() {
+        let a = cfg(ArrivalProcess::Poisson { seqs_per_s: 1000.0 }).generate();
+        let b = cfg(ArrivalProcess::Poisson { seqs_per_s: 1000.0 }).generate();
+        assert_eq!(a, b);
+        let mut c2 = cfg(ArrivalProcess::Poisson { seqs_per_s: 1000.0 });
+        c2.seed = 12;
+        assert_ne!(a, c2.generate());
+    }
+
+    #[test]
+    fn lengths_clamp_to_the_build_point() {
+        let mut c = cfg(ArrivalProcess::Uniform { seqs_per_s: 1000.0 });
+        c.lengths = LengthDist::Squad; // mean 152, max 384 > the 128 build
+        c.max_m = 128;
+        let reqs = c.generate();
+        assert!(reqs.iter().all(|r| (1..=128).contains(&r.m)));
+        // the clamp must actually bind for a long-context workload
+        assert!(reqs.iter().filter(|r| r.m == 128).count() > reqs.len() / 10);
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_positive_rate_required() {
+        let reqs = cfg(ArrivalProcess::Poisson { seqs_per_s: 777.0 }).generate();
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert_eq!(total_tokens(&reqs), reqs.iter().map(|r| r.m as u64).sum::<u64>());
+    }
+}

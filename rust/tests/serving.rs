@@ -1,0 +1,226 @@
+//! Serving-path tests: Eq. 1 validated against the fully simulated
+//! N-encoder pipeline, seed determinism of serving results, and the
+//! open-loop queueing behavior of the request source.
+//!
+//! Everything here runs in Timing mode — no artifacts required.
+
+use std::sync::Arc;
+
+use galapagos_llm::eval::testbed::{
+    build_testbed, inter_encoder_hop_cycles, run_encoder_once, TestbedConfig,
+};
+use galapagos_llm::ibert::kernels::Mode;
+use galapagos_llm::serve::{
+    run_serving, validate_eq1, ArrivalProcess, LengthDist, Request, ServeConfig,
+};
+use galapagos_llm::util::quickcheck::{check_with, Config};
+
+/// The headline claim of this repo's serving subsystem: the paper's
+/// Eq. 1 extrapolation `T + (L-1)(X + d)` agrees with an actually
+/// simulated N-encoder pipeline within 5%, for every chain depth the
+/// paper discusses (1 = PoC, 12 = full I-BERT) and for both the GLUE
+/// mean length and the full build point.
+#[test]
+fn eq1_matches_simulated_pipeline_within_5pct() {
+    let base = TestbedConfig::proof_of_concept(38, Mode::Timing);
+    for &m in &[38usize, 128] {
+        for &n in &[1usize, 2, 6, 12] {
+            let e = validate_eq1(&base, n, m).unwrap();
+            let err = e.rel_err();
+            assert!(
+                err.abs() < 0.05,
+                "Eq. 1 off by {:+.2}% at encoders={n}, m={m} \
+                 (analytic {} vs simulated {})",
+                100.0 * err,
+                e.analytic,
+                e.simulated
+            );
+            if n == 1 {
+                // no extrapolation at L=1: the estimate IS the measured T
+                assert_eq!(e.analytic, e.simulated);
+            }
+        }
+    }
+}
+
+#[test]
+fn inter_encoder_hop_is_the_papers_d() {
+    // Fig. 17 layout: six FPGAs per encoder, six per switch => every
+    // encoder-to-encoder edge crosses exactly one serial switch hop,
+    // which is the d = 1.1 us = 220 cycles of Eq. 1
+    let cfg = TestbedConfig::proof_of_concept(38, Mode::Timing);
+    for boundary in 0..11 {
+        assert_eq!(inter_encoder_hop_cycles(&cfg, boundary), 220);
+    }
+    // cramming 13 FPGAs onto one switch removes the hop entirely
+    let mut dense = cfg.clone();
+    dense.fpgas_per_switch = 13;
+    assert_eq!(inter_encoder_hop_cycles(&dense, 0), 0);
+    // when the switch width does not divide the encoder width, the hop
+    // count varies by boundary: 4/switch puts LN2 of encoder 0 (FPGA 5)
+    // and the gateway of encoder 1 (FPGA 6) on the same switch, but LN2
+    // of encoder 1 (FPGA 11) and the gateway of encoder 2 (FPGA 12) a
+    // full hop apart — the Eq. 1 check must sum per-boundary d
+    let mut uneven = cfg.clone();
+    uneven.fpgas_per_switch = 4;
+    assert_eq!(inter_encoder_hop_cycles(&uneven, 0), 0);
+    assert_eq!(inter_encoder_hop_cycles(&uneven, 1), 220);
+}
+
+/// At near-zero load every request sees an idle pipeline, so its
+/// serving latency must equal the single-shot latency of its own length
+/// EXACTLY — time-shift invariance of the DES, via the serving source.
+#[test]
+fn unloaded_serving_latency_equals_single_shot_latency() {
+    let gap = 10_000_000u64; // far beyond any drain time
+    let lens = [16u32, 38, 64];
+    let schedule: Vec<Request> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| Request { arrival: i as u64 * gap, m })
+        .collect();
+    let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+    cfg.schedule = Some(Arc::new(schedule.clone()));
+    let mut tb = build_testbed(&cfg).unwrap();
+    tb.sim.start();
+    tb.sim.run().unwrap();
+    let sink = tb.sink.lock().unwrap();
+    for (i, req) in schedule.iter().enumerate() {
+        let &(pkts, done) = sink.arrivals.get(&(i as u32)).unwrap();
+        assert_eq!(pkts, req.m, "request {i} incomplete");
+        let single =
+            run_encoder_once(&TestbedConfig::proof_of_concept(req.m as usize, Mode::Timing))
+                .unwrap();
+        assert_eq!(
+            done - req.arrival,
+            single.t,
+            "request {i} (m={}) latency != single-shot T",
+            req.m
+        );
+    }
+}
+
+#[test]
+fn zero_length_requests_rejected() {
+    // a 0-row request could never complete (the source's row counter
+    // would pump forever); the builder must refuse it up front
+    let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+    cfg.schedule = Some(Arc::new(vec![Request { arrival: 0, m: 0 }]));
+    assert!(build_testbed(&cfg).is_err());
+}
+
+#[test]
+fn serving_is_seed_deterministic() {
+    let cfg = ServeConfig::glue(2, 24, 3_000.0, 42);
+    let a = run_serving(&cfg).unwrap();
+    let b = run_serving(&cfg).unwrap();
+    assert_eq!(a.latencies, b.latencies, "same seed must reproduce verbatim");
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+
+    let mut other = cfg.clone();
+    other.traffic.seed = 43;
+    let c = run_serving(&other).unwrap();
+    assert_ne!(a.latencies, c.latencies, "different seed must differ");
+}
+
+/// Determinism holds across randomly drawn scenarios, not just one.
+#[test]
+fn serving_determinism_property() {
+    let cfg = Config { cases: 4, base_seed: 0x5E27E, max_size: 16 };
+    check_with(&cfg, "serving runs are reproducible", |g| {
+        let seed = g.rng.next_u64();
+        let rate = 500.0 + g.f64_unit() * 4_000.0;
+        let n = g.usize_in(4, 10);
+        let encoders = g.usize_in(1, 3);
+        let mut sc = ServeConfig::glue(encoders, n, rate, seed);
+        if g.bool() {
+            sc.traffic.process = ArrivalProcess::Uniform { seqs_per_s: rate };
+        }
+        if g.bool() {
+            sc.traffic.lengths = LengthDist::Mrpc;
+        }
+        let a = run_serving(&sc).map_err(|e| e.to_string())?;
+        let b = run_serving(&sc).map_err(|e| e.to_string())?;
+        if a.latencies != b.latencies {
+            return Err(format!("latencies diverged for seed {seed:#x}"));
+        }
+        if a.completed != sc.traffic.requests {
+            return Err(format!("{}/{} requests completed", a.completed, sc.traffic.requests));
+        }
+        Ok(())
+    });
+}
+
+/// Open-loop overload: offering far more than the pipeline sustains
+/// must show up as queueing — tail latency grows and the first stage
+/// saturates — while an under-loaded run stays near single-shot latency.
+#[test]
+fn overload_grows_tail_latency_and_backpressure() {
+    let requests = 40;
+    // capacity at m~38 is roughly FABRIC_CLOCK / (T - X) ~ thousands of
+    // seqs/s; 400 seqs/s is a light load, 40_000 is far beyond capacity
+    let light = run_serving(&ServeConfig::glue(2, requests, 400.0, 9)).unwrap();
+    let heavy = run_serving(&ServeConfig::glue(2, requests, 40_000.0, 9)).unwrap();
+    assert_eq!(light.completed, requests);
+    assert_eq!(heavy.completed, requests, "open-loop: every request still completes");
+    assert!(
+        heavy.latency.p99 > 2 * light.latency.p99,
+        "overload p99 {} should dwarf light-load p99 {}",
+        heavy.latency.p99,
+        light.latency.p99
+    );
+    // open-loop backlog grows roughly linearly in request index, so the
+    // tail sits well above the median (but below 2x: p99/p50 ~ 39/20)
+    assert!(
+        2 * heavy.latency.p99 > 3 * heavy.latency.p50.max(1),
+        "overload must skew the tail (p50 {} p99 {})",
+        heavy.latency.p50,
+        heavy.latency.p99
+    );
+    // Little's law separates the regimes: the saturated run holds many
+    // requests in flight, the light one well under one
+    assert!(
+        heavy.mean_inflight() > 2.0 * light.mean_inflight().max(1e-6),
+        "overload in-flight {:.3} vs light {:.3}",
+        heavy.mean_inflight(),
+        light.mean_inflight()
+    );
+    // and the backlog parks in real FIFOs (LN1 holds residual matrices
+    // while the attention path drains): the high-water mark must rise
+    assert!(
+        heavy.stages[0].fifo_peak > light.stages[0].fifo_peak,
+        "backlog should raise the FIFO high-water ({} vs {})",
+        heavy.stages[0].fifo_peak,
+        light.stages[0].fifo_peak
+    );
+    assert!(heavy.stages.iter().all(|s| s.occupancy > 0.0 && s.occupancy <= 1.0));
+}
+
+#[test]
+fn squad_traffic_serves_on_the_128_token_build() {
+    let mut cfg = ServeConfig::glue(2, 16, 1_500.0, 5);
+    cfg.traffic.lengths = LengthDist::Squad; // mean 152, max 384: clamps to 128
+    let r = run_serving(&cfg).unwrap();
+    assert_eq!(r.completed, 16);
+    assert_eq!(r.workload, "squad");
+    // clamped long-context requests actually hit the build point
+    assert!(r.total_tokens >= 16 * 50, "squad tokens unexpectedly low");
+}
+
+#[test]
+fn six_encoder_glue_pipeline_reports_full_metrics() {
+    // the acceptance scenario: >= 6 encoders under streaming GLUE traffic
+    let mut cfg = ServeConfig::glue(6, 30, 2_500.0, 7);
+    cfg.check_eq1 = true;
+    let r = run_serving(&cfg).unwrap();
+    assert_eq!(r.completed, 30);
+    assert_eq!(r.stages.len(), 6);
+    assert!(r.latency.p50 <= r.latency.p95 && r.latency.p95 <= r.latency.p99);
+    assert!(r.seqs_per_s() > 0.0);
+    // every stage ingested every row of every request
+    assert!(r.stages.iter().all(|s| s.rows_in == r.total_tokens));
+    // deeper stages finish later, so occupancy is meaningful everywhere
+    assert!(r.stages.iter().all(|s| s.occupancy > 0.0 && s.occupancy <= 1.0));
+    let e = r.eq1.expect("eq1 check requested");
+    assert!(e.rel_err().abs() < 0.05, "Eq. 1 off by {:+.2}%", 100.0 * e.rel_err());
+}

@@ -27,8 +27,9 @@ fn functional_sim_is_bit_exact_m38() {
     let input = golden_input(&dir, m);
     let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
     cfg.input = Some(Arc::new(input.clone()));
-    let (_x, _t, _i, tb) = run_encoder_once(&cfg).unwrap();
-    let got = tb.sink.lock().unwrap().matrix(0).expect("sink did not assemble the output");
+    let run = run_encoder_once(&cfg).unwrap();
+    let got =
+        run.testbed.sink.lock().unwrap().matrix(0).expect("sink did not assemble the output");
     let want = encoder_forward(&p, &input).out;
     assert_eq!(got, want, "simulated six-FPGA encoder != reference");
 }
@@ -62,8 +63,8 @@ fn two_encoder_chain_is_bit_exact() {
     let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
     cfg.encoders = 2;
     cfg.input = Some(Arc::new(input.clone()));
-    let (_, _, _, tb) = run_encoder_once(&cfg).unwrap();
-    let got = tb.sink.lock().unwrap().matrix(0).unwrap();
+    let run = run_encoder_once(&cfg).unwrap();
+    let got = run.testbed.sink.lock().unwrap().matrix(0).unwrap();
     let want = model_forward(&p, &input, 2);
     assert_eq!(got, want, "two chained encoder clusters != reference");
 }
@@ -72,7 +73,9 @@ fn two_encoder_chain_is_bit_exact() {
 fn timing_shape_matches_paper_m128() {
     // Table 1 anchors: I ~ 767..800, T ~ 2x layer-0 (~200-240k), X/T ~ 0.5
     let cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
-    let (x, t, i, _) = run_encoder_once(&cfg).unwrap();
+    let run = run_encoder_once(&cfg).unwrap();
+    let (x, t, i) = (run.x, run.t, run.i);
+    assert!(run.end_cycle >= t, "quiescence cannot precede the last output");
     assert!(
         (760..=820).contains(&i),
         "output interval I should be ~767+-eps, got {i}"
@@ -94,11 +97,11 @@ fn timing_mode_agrees_with_functional_mode() {
     let dir = artifacts();
     let p = Arc::new(ModelParams::load(&dir).unwrap());
     let m = 16;
-    let (xt, tt, it, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+    let t = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
     let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(p.clone()));
     cfg.input = Some(Arc::new(golden_input(&dir, m)));
-    let (xf, tf, iff, _) = run_encoder_once(&cfg).unwrap();
-    assert_eq!((xt, tt, it), (xf, tf, iff), "timing must be payload-independent");
+    let f = run_encoder_once(&cfg).unwrap();
+    assert_eq!((t.x, t.t, t.i), (f.x, f.t, f.i), "timing must be payload-independent");
 }
 
 #[test]
@@ -109,7 +112,7 @@ fn no_padding_latency_scales_with_m() {
     let mut t128 = 0;
     let mut t16 = 0;
     for m in [16usize, 32, 64, 128] {
-        let (_, t, _, _) = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap();
+        let t = run_encoder_once(&TestbedConfig::proof_of_concept(m, Mode::Timing)).unwrap().t;
         assert!(t > prev_t, "T must grow with m (m={m}: {t} <= {prev_t})");
         prev_t = t;
         if m == 128 {
