@@ -5,13 +5,19 @@
 //!
 //!   cargo bench --bench serving_pipeline            # full matrix
 //!   cargo bench --bench serving_pipeline -- --quick # CI smoke
+//!   ... -- --check [--tolerance 0.35]               # regression gate
 //!
 //! Scenarios cover both arrival processes, the three length
 //! distributions (SQuAD clamped to the 128-token build), chain depths up
 //! to the full 12-encoder I-BERT, and a deliberate overload point whose
-//! tail latency documents the open-loop queueing behavior.
+//! tail latency documents the open-loop queueing behavior. The
+//! 12-encoder scenario additionally runs at threads=1 vs threads=N to
+//! record the sharded-engine speedup headline (asserting report
+//! equality on the way — the parallel engine is trace-identical by
+//! contract); `--check` compares all headlines against the committed
+//! BENCH_serving.json and exits nonzero on regression.
 
-use galapagos_llm::serve::{run_serving, ArrivalProcess, LengthDist, ServeConfig};
+use galapagos_llm::serve::{run_serving, ArrivalProcess, LengthDist, ServeConfig, ServingReport};
 use galapagos_llm::util::bench::Bencher;
 use galapagos_llm::util::json::Json;
 use galapagos_llm::{cycles_to_us, util::cli::Args};
@@ -77,6 +83,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let mut cases: Vec<Json> = Vec::new();
+    let mut headlines: Vec<(String, f64)> = Vec::new();
     for s in &scenarios {
         let requests = if quick { (s.requests / 8).max(12) } else { s.requests };
         let mut cfg = ServeConfig::glue(s.encoders, requests, 1.0, seed);
@@ -116,15 +123,60 @@ fn main() -> anyhow::Result<()> {
             Json::Num(report.events as f64 / wall.as_secs_f64().max(1e-9)),
         ));
         cases.push(Json::Obj(case));
+
+        // the deep-chain scenario doubles as the sharded-engine speedup
+        // headline: threads=1 vs threads=N on the identical workload,
+        // with a report-equality assertion (trace-identity contract)
+        if s.encoders == 12 {
+            let threads = galapagos_llm::util::pool::sim_threads().max(2);
+            // best-of-3 walls per engine (matches the Bencher-median
+            // spirit of the other headlines; a single cold sample is too
+            // noisy to gate --check on)
+            let run_best = |n: usize| -> anyhow::Result<(f64, ServingReport)> {
+                let mut cfg = cfg.clone();
+                cfg.threads = Some(n);
+                let mut best = f64::INFINITY;
+                let mut last = None;
+                for _ in 0..3 {
+                    let t0 = std::time::Instant::now();
+                    last = Some(run_serving(&cfg)?);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                Ok((best, last.unwrap()))
+            };
+            let (seq_wall, seq) = run_best(1)?;
+            let (par_wall, par) = run_best(threads)?;
+            anyhow::ensure!(
+                seq.to_json().pretty() == par.to_json().pretty(),
+                "parallel serving report diverged from sequential at threads={threads}"
+            );
+            let speedup = seq_wall / par_wall.max(1e-9);
+            println!(
+                "    sharded engine: {:.0} -> {:.0} events/s at {threads} threads \
+                 ({speedup:.2}x best-of-3, reports identical)",
+                seq.events as f64 / seq_wall.max(1e-9),
+                par.events as f64 / par_wall.max(1e-9),
+            );
+            headlines.push(("parallel_serving_12enc_speedup".into(), speedup));
+        }
     }
 
     let doc = Json::obj(vec![
         ("schema", Json::Str("bench_serving/v1".into())),
         ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
         ("seed", Json::Num(seed as f64)),
+        ("sim_threads", Json::Num(galapagos_llm::util::pool::sim_threads() as f64)),
         ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::Obj(headlines.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
     ]);
+
+    // --check: read the committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
     std::fs::write(&out_path, doc.pretty())?;
     println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
     Ok(())
 }

@@ -61,6 +61,11 @@ pub struct TestbedConfig {
     /// the inference id. Overrides `m`/`inferences` pacing; `interval`
     /// still paces rows on the source link.
     pub schedule: Option<Arc<Vec<crate::serve::traffic::Request>>>,
+    /// worker threads for the sharded parallel DES (None = the process
+    /// default: `--threads` / `PALLAS_SIM_THREADS` / auto; 1 = exact
+    /// sequential engine). Results are thread-count-invariant by
+    /// contract — this only changes wall-clock.
+    pub threads: Option<usize>,
 }
 
 impl TestbedConfig {
@@ -76,6 +81,7 @@ impl TestbedConfig {
             input: None,
             placement: None,
             schedule: None,
+            threads: None,
         }
     }
 }
@@ -251,6 +257,9 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             .remove(&GlobalKernelId::new(c.id, k.id))
             .unwrap_or_else(|| panic!("no behavior for c{}k{}", c.id, k.id))
     })?;
+    if let Some(t) = cfg.threads {
+        sim.set_threads(t);
+    }
     sim.trace.add_probe(sink_global);
 
     Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec })

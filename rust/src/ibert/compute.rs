@@ -92,37 +92,94 @@ pub fn linear_row(x_row: &[i8], w: &[i8], k: usize, n: usize, bias: &[i32]) -> V
     out
 }
 
-/// Output rows computed per weight-matrix pass by [`linear_rows`]. A
-/// block of accumulator rows (8 x N x 4B, ~12 KB at N=768) stays in L1/L2
-/// while W streams through once — W traffic drops by the block factor vs
-/// the one-row-at-a-time walk.
+/// Output rows computed per weight-matrix pass by [`linear_rows_packed`].
+/// A block of x rows (8 x K x 1B) stays in L1 while each packed weight
+/// column is reused across the whole block — W traffic drops by the
+/// block factor vs the one-row-at-a-time walk.
 pub const GEMM_ROW_BLOCK: usize = 8;
 
-/// Cache-blocked multi-row int8 linear: Y[r] = X[r] . W + b for every
-/// row of `xs`. Bit-identical to calling [`linear_row`] per row (integer
-/// accumulation is order-independent and i8*i8 dots cannot overflow i32
-/// at any K <= 2^15), but streams W once per GEMM_ROW_BLOCK rows.
-pub fn linear_rows(xs: &[Vec<i8>], w: &[i8], k: usize, n: usize, bias: &[i32]) -> Vec<Vec<i32>> {
-    debug_assert_eq!(w.len(), k * n);
+/// Tile edge of the [`PackedWeights::pack`] transpose (source rows and
+/// destination columns both stay cache-resident during the pack).
+const PACK_TILE: usize = 64;
+
+/// `W [K, N]` pre-transposed into contiguous columns (`wt[j*k + i] =
+/// w[i*n + j]`), so the GEMM microkernel's inner loop is a straight
+/// `i8 x i8 -> i32` dot over two sequential streams — the FMA-friendly
+/// layout the DSP PE of Fig. 11 gets for free in hardware. Pack once per
+/// weight matrix and reuse across every row block (`ibert::encoder`
+/// hoists the pack out of its worker-pool chunks).
+pub struct PackedWeights {
+    wt: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl PackedWeights {
+    /// Tile-wise transpose of row-major `w [K, N]`.
+    pub fn pack(w: &[i8], k: usize, n: usize) -> PackedWeights {
+        debug_assert_eq!(w.len(), k * n);
+        let mut wt = vec![0i8; k * n];
+        for j0 in (0..n).step_by(PACK_TILE) {
+            let j1 = (j0 + PACK_TILE).min(n);
+            for i0 in (0..k).step_by(PACK_TILE) {
+                let i1 = (i0 + PACK_TILE).min(k);
+                for j in j0..j1 {
+                    for i in i0..i1 {
+                        wt[j * k + i] = w[i * n + j];
+                    }
+                }
+            }
+        }
+        PackedWeights { wt, k, n }
+    }
+
+    /// Column `j` of the original `W`, contiguous.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[i8] {
+        &self.wt[j * self.k..(j + 1) * self.k]
+    }
+}
+
+/// Cache-blocked multi-row int8 linear over pre-transposed weights:
+/// `Y[r] = X[r] . W + b`. Bit-identical to calling [`linear_row`] per
+/// row (integer accumulation is exact and order-independent; i8*i8 dots
+/// cannot overflow i32 at any K <= 2^15): each output element sums the
+/// same products in ascending-`i` order. Each packed column is walked
+/// once per [`GEMM_ROW_BLOCK`] rows while both dot operands stream
+/// contiguously.
+pub fn linear_rows_packed(xs: &[Vec<i8>], pw: &PackedWeights, bias: &[i32]) -> Vec<Vec<i32>> {
+    let (k, n) = (pw.k, pw.n);
     debug_assert_eq!(bias.len(), n);
-    let mut out: Vec<Vec<i32>> = xs.iter().map(|_| bias.to_vec()).collect();
+    let mut out: Vec<Vec<i32>> = xs.iter().map(|_| Vec::with_capacity(n)).collect();
     for (xb, ob) in xs.chunks(GEMM_ROW_BLOCK).zip(out.chunks_mut(GEMM_ROW_BLOCK)) {
-        for i in 0..k {
-            let wrow = &w[i * n..(i + 1) * n];
+        for j in 0..n {
+            let col = pw.col(j);
+            let b = bias[j];
             for (x_row, o_row) in xb.iter().zip(ob.iter_mut()) {
                 debug_assert_eq!(x_row.len(), k);
-                let x = x_row[i];
-                if x == 0 {
-                    continue;
+                let mut acc = b;
+                for (&x, &wv) in x_row.iter().zip(col) {
+                    acc += x as i32 * wv as i32;
                 }
-                let x = x as i32;
-                for (o, &wv) in o_row.iter_mut().zip(wrow) {
-                    *o += x * wv as i32;
-                }
+                o_row.push(acc);
             }
         }
     }
     out
+}
+
+/// Multi-row int8 linear on row-major weights: packs `w` once, then runs
+/// the contiguous-column microkernel. A single row skips the pack (it
+/// would double the W traffic) and takes the streaming row walk. Hot
+/// callers that reuse one W across many calls should hoist
+/// [`PackedWeights::pack`] and call [`linear_rows_packed`] directly.
+pub fn linear_rows(xs: &[Vec<i8>], w: &[i8], k: usize, n: usize, bias: &[i32]) -> Vec<Vec<i32>> {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    if xs.len() < 2 {
+        return xs.iter().map(|x| linear_row(x, w, k, n, bias)).collect();
+    }
+    linear_rows_packed(xs, &PackedWeights::pack(w, k, n), bias)
 }
 
 /// i-Softmax over one score row (actual sequence length only — the
@@ -261,6 +318,39 @@ mod tests {
         let blocked = linear_rows(&xs, &w, k, n, &bias);
         for (r, x) in xs.iter().enumerate() {
             assert_eq!(blocked[r], linear_row(x, &w, k, n, &bias), "row {r}");
+        }
+    }
+
+    #[test]
+    fn pack_transposes_exactly_at_ragged_tile_edges() {
+        // k, n straddle the 64-wide pack tile in all four quadrants
+        for (k, n) in [(1usize, 1usize), (64, 64), (65, 63), (130, 67), (3, 200)] {
+            let w: Vec<i8> = (0..(k * n) as i32).map(|v| (v % 37 - 18) as i8).collect();
+            let pw = PackedWeights::pack(&w, k, n);
+            for j in 0..n {
+                let col = pw.col(j);
+                for i in 0..k {
+                    assert_eq!(col[i], w[i * n + j], "({i},{j}) of {k}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_reference_all_row_counts() {
+        // incl. the single-row (unpacked) path and empty input
+        let (k, n) = (70, 33);
+        let w: Vec<i8> = (0..(k * n) as i32).map(|v| (v % 23 - 11) as i8).collect();
+        let bias: Vec<i32> = (0..n as i32).map(|v| 31 - v * 3).collect();
+        let pw = PackedWeights::pack(&w, k, n);
+        for rows in [0usize, 1, 2, GEMM_ROW_BLOCK, GEMM_ROW_BLOCK + 1, 3 * GEMM_ROW_BLOCK] {
+            let xs: Vec<Vec<i8>> = (0..rows)
+                .map(|r| (0..k).map(|i| ((r * 7 + i * 11) % 27) as i8 - 13).collect())
+                .collect();
+            let want: Vec<Vec<i32>> =
+                xs.iter().map(|x| linear_row(x, &w, k, n, &bias)).collect();
+            assert_eq!(linear_rows_packed(&xs, &pw, &bias), want, "packed rows={rows}");
+            assert_eq!(linear_rows(&xs, &w, k, n, &bias), want, "linear_rows rows={rows}");
         }
     }
 

@@ -4,11 +4,13 @@
 //! operation-for-operation.
 //!
 //! Two implementations share that contract:
-//! * [`encoder_forward`] — the hot path: cache-blocked int8 GEMMs
-//!   (`compute::linear_rows`) with rows and heads fanned out over the
-//!   in-crate worker pool (`util::pool`). Work is partitioned into
-//!   fixed chunks computed exactly as in the serial loop, so outputs are
-//!   bit-identical at any thread count.
+//! * [`encoder_forward`] — the hot path: cache-blocked int8 GEMMs over
+//!   once-per-matrix pre-transposed weights (`compute::PackedWeights` +
+//!   `compute::linear_rows_packed`, contiguous i8xi8->i32 inner loops)
+//!   with rows and heads fanned out over the in-crate worker pool
+//!   (`util::pool`). Work is partitioned into fixed chunks computed
+//!   exactly as in the serial loop, so outputs are bit-identical at any
+//!   thread count.
 //! * [`encoder_forward_reference`] — the straight-line row-at-a-time
 //!   original, kept as the equivalence baseline (tests + `bench`'s
 //!   before/after comparison).
@@ -48,10 +50,13 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
     let eq = p.eq;
 
     // ---- Layer 0: Q/K/V linears + Quant (blocked GEMM, parallel rows) ----
+    // weights pack once per matrix (contiguous-column layout), OUTSIDE
+    // the worker-pool chunks — every 8-row block then reuses the pack
     let lin8 = |w: &[i8], b: &[i32], site| -> Vec<Vec<i8>> {
+        let pw = PackedWeights::pack(w, h, h);
         let mut out = vec![Vec::new(); m];
         pool::parallel_chunks(&mut out, PAR_CHUNK, |start, sl| {
-            let ys = linear_rows(&x[start..start + sl.len()], w, h, h, b);
+            let ys = linear_rows_packed(&x[start..start + sl.len()], &pw, b);
             for (o, y) in sl.iter_mut().zip(ys) {
                 *o = y.into_iter().map(|a| requant8(a as i64, site)).collect();
             }
@@ -104,9 +109,10 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
     }
 
     // ---- Layer 4: projection + residual + LayerNorm ----
+    let pwo = PackedWeights::pack(&p.wo.data, h, h);
     let mut res: Vec<Vec<i64>> = vec![Vec::new(); m];
     pool::parallel_chunks(&mut res, PAR_CHUNK, |start, sl| {
-        let proj = linear_rows(&att[start..start + sl.len()], &p.wo.data, h, h, &p.bo);
+        let proj = linear_rows_packed(&att[start..start + sl.len()], &pwo, &p.bo);
         for ((o, pr), xr) in sl.iter_mut().zip(proj).zip(&x[start..start + sl.len()]) {
             *o = pr
                 .iter()
@@ -125,9 +131,10 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
     });
 
     // ---- Layer 5: FFN + residual + LayerNorm ----
+    let pw1 = PackedWeights::pack(&p.w1.data, h, f);
     let mut gelu_in: Vec<Vec<i8>> = vec![Vec::new(); m];
     pool::parallel_chunks(&mut gelu_in, PAR_CHUNK, |start, sl| {
-        let ys = linear_rows(&ln1[start..start + sl.len()], &p.w1.data, h, f, &p.b1);
+        let ys = linear_rows_packed(&ln1[start..start + sl.len()], &pw1, &p.b1);
         for (o, y) in sl.iter_mut().zip(ys) {
             *o = y.into_iter().map(|a| requant8(a as i64, eq.rq_gelu_in)).collect();
         }
@@ -138,9 +145,10 @@ pub fn encoder_forward(p: &ModelParams, x: &[Vec<i8>]) -> EncoderStages {
             *o = gelu_row(&gelu_in[start + i], eq.gelu);
         }
     });
+    let pw2 = PackedWeights::pack(&p.w2.data, f, h);
     let mut res2: Vec<Vec<i64>> = vec![Vec::new(); m];
     pool::parallel_chunks(&mut res2, PAR_CHUNK, |start, sl| {
-        let ys = linear_rows(&mid[start..start + sl.len()], &p.w2.data, f, h, &p.b2);
+        let ys = linear_rows_packed(&mid[start..start + sl.len()], &pw2, &p.b2);
         for ((o, y), lr) in sl.iter_mut().zip(ys).zip(&ln1[start..start + sl.len()]) {
             *o = y
                 .iter()

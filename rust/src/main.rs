@@ -43,10 +43,14 @@ COMMANDS:
   tables    [--only table1|table2|table3|table4|table5|fig15|fig16|fig20|versal|scaling]
   simulate  [--m 128] [--encoders 1] [--inferences 1] [--functional] [--interval 12]
             [--reference]   (pre-optimization engine: heap queue, no coalescing)
+            [--shards cluster|fpga]   (parallel-engine cut granularity)
   bench     [--quick] [--out BENCH_hotpath.json]
-            hot-path suite: DES engine (reference vs coalesced), bit-exact
-            encoder compute (reference vs blocked+parallel), placer search;
-            writes the perf-trajectory JSON
+            [--check [--baseline BENCH_hotpath.json] [--tolerance 0.35]]
+            hot-path suite: DES engine (reference vs coalesced vs sharded
+            parallel), bit-exact encoder compute (reference vs packed GEMM),
+            placer search; writes the perf-trajectory JSON. --check compares
+            the fresh headlines against the committed baseline and exits
+            nonzero on regression
   plan      [--config configs/ibert_poc.json] [--m <max_seq>] [--fleet N] [--out plan.json]
             [--replay]   (replay needs the ibert-base shape)
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
@@ -58,10 +62,22 @@ COMMANDS:
             [--out report.json] [--quick]   (CI: writes BENCH_serving.json)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
+
+GLOBAL:
+  --threads N    worker threads for the sharded DES engine, uniform across
+                 simulate/serve/plan/bench (env fallback PALLAS_SIM_THREADS;
+                 default = available parallelism; 1 = exact sequential
+                 engine — results are identical at every thread count)
 ";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    // --threads applies uniformly to every subcommand's simulator runs
+    // (sim/serve/plan/bench); PALLAS_SIM_THREADS is the env fallback
+    let threads = args.usize_or("threads", 0)?;
+    if threads > 0 {
+        galapagos_llm::util::pool::set_sim_threads(threads);
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("tables") => cmd_tables(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -128,6 +144,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.interval = interval;
     cfg.input = input;
     let mut tb = build_testbed(&cfg)?;
+    tb.sim.granularity = match args.str_or("shards", "cluster").as_str() {
+        "cluster" => galapagos_llm::sim::ShardGranularity::PerCluster,
+        "fpga" => galapagos_llm::sim::ShardGranularity::PerFpga,
+        other => bail!("unknown shard granularity {other:?} (expected cluster|fpga)"),
+    };
     if reference {
         tb.sim.reference_mode();
     }
@@ -336,15 +357,55 @@ fn cmd_bench(args: &Args) -> Result<()> {
         push_bench_case(&mut cases, "placer search (paper fleet)", "optimized", med, 0, 0);
     }
 
+    // --- sharded parallel DES: the 12-encoder serving-scale chain ---
+    // (the acceptance scenario: >= 2x events/s at 8 threads vs threads=1)
+    let sim_threads = pool::sim_threads();
+    {
+        let m = if quick { 38 } else { 128 };
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        cfg.encoders = 12;
+        cfg.inferences = if quick { 2 } else { 6 };
+        let label = format!("sim 12-encoder chain m={m}");
+        let bench_threads = |threads: usize,
+                             b: &mut galapagos_llm::util::bench::Bencher,
+                             cases: &mut Vec<Json>|
+         -> Result<f64> {
+            let mut cfg = cfg.clone();
+            cfg.threads = Some(threads);
+            let mut tb = build_testbed(&cfg)?;
+            tb.sim.start();
+            tb.sim.run()?;
+            let events = tb.sim.trace.events_processed;
+            let rows = tb.sim.fabric.stats.packets;
+            let r = b.bench(&format!("{label} [threads={threads}] ({events} events)"), || {
+                let mut tb = build_testbed(&cfg).unwrap();
+                tb.sim.start();
+                black_box(tb.sim.run().unwrap());
+            });
+            let variant = format!("threads={threads}");
+            push_bench_case(cases, &label, &variant, r.median_ns(), events, rows);
+            Ok(r.median_ns())
+        };
+        let seq_ns = bench_threads(1, &mut b, &mut cases)?;
+        let par_ns = bench_threads(sim_threads.max(2), &mut b, &mut cases)?;
+        headline(&mut headlines, "parallel_sim_12enc_speedup", seq_ns, par_ns);
+    }
+
     let doc = Json::obj(vec![
         ("schema", Json::Str("bench_hotpath/v1".into())),
         ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
         ("threads", Json::Num(pool::num_threads() as f64)),
+        ("sim_threads", Json::Num(sim_threads as f64)),
         ("cases", Json::Arr(cases)),
         ("headlines", Json::from_map(&headlines)),
     ]);
+
+    // --check: read the committed baseline BEFORE overwriting the
+    // trajectory file, then fail on any regressed headline
+    let regressions = galapagos_llm::util::bench::load_check(args, &doc, &out_path)?;
     std::fs::write(&out_path, doc.pretty())?;
-    println!("\nwrote {out_path} (speedup target: >= 3x on sim + native headlines)");
+    println!("\nwrote {out_path} (speedup target: >= 3x sim/native, >= 2x parallel@8t)");
+    galapagos_llm::util::bench::report_check(regressions)?;
     Ok(())
 }
 
@@ -386,6 +447,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
     println!("{}", placer::report::utilisation_table(&reports).render());
     let d_cycles = galapagos_llm::sim::params::INTER_SWITCH_LAT;
     println!("{}", placer::report::latency_summary(&sol, m, d.encoders, d_cycles));
+    match placer::cost::min_lookahead_cycles(&sol.placement, &fleet) {
+        Some(la) => println!(
+            "parallel-sim lookahead: >= {la} cycles ({:.2} us) at the finest (per-FPGA) \
+             shard cut; the default per-encoder cut is at least this",
+            cycles_to_us(la)
+        ),
+        None => println!("parallel-sim lookahead: n/a (single-FPGA placement runs sequentially)"),
+    }
 
     if let Some(out) = args.str_opt("out") {
         let plan = placer::Plan {

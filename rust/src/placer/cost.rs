@@ -94,6 +94,33 @@ struct Stream {
     last: u64,
 }
 
+/// The conservative parallel-simulation lookahead a placement yields
+/// under the finest (per-FPGA) shard cut: the minimum 1-flit
+/// point-to-point latency over every ordered pair of distinct used FPGA
+/// slots — exactly what `sim::window` derives for
+/// `ShardGranularity::PerFpga`. It is a *lower bound* for any coarser
+/// cut: the default per-encoder granularity only keeps the
+/// cross-encoder pairs, whose latency is at least this and typically
+/// gains the full d = 1.1 us serial switch hop. Larger is better (fewer
+/// barrier rounds per simulated second). `None` for single-slot
+/// placements (nothing to cut — the simulator falls back to its
+/// sequential engine).
+pub fn min_lookahead_cycles(placement: &Placement, fleet: &Fleet) -> Option<u64> {
+    let used = placement.used_slots();
+    let sw = |slot: usize| slot / fleet.fpgas_per_switch.max(1);
+    let mut best: Option<u64> = None;
+    for &a in &used {
+        for &b in &used {
+            if a == b {
+                continue;
+            }
+            let lat = point_to_point_latency(1, false, sw(a).abs_diff(sw(b)) as u64);
+            best = Some(best.map_or(lat, |x: u64| x.min(lat)));
+        }
+    }
+    best
+}
+
 /// Estimate (X, T, I) of one encoder under `placement` at sequence
 /// length `m`, with input rows injected every `input_interval` cycles
 /// from the evaluation FPGA (slot = one past the fleet's last used slot,
@@ -254,6 +281,27 @@ mod tests {
         assert!(t_merged < t_spread, "{t_merged} >= {t_spread}");
         // ... but only marginally: the pipeline is compute-bound
         assert!((t_spread - t_merged) * 50 < t_spread, "comm should be second-order");
+    }
+
+    #[test]
+    fn lookahead_tracks_the_simulators_window() {
+        let (g, p, f) = paper();
+        // Fig. 14 on one switch: cheapest cross-slot edge is the 1-flit
+        // same-switch inter-FPGA path = 33 cycles (sim::window's floor)
+        assert_eq!(min_lookahead_cycles(&p, &f), Some(33));
+        // 2 FPGAs per switch: some pair still shares a switch
+        let mut f2 = f.clone();
+        f2.fpgas_per_switch = 2;
+        assert_eq!(min_lookahead_cycles(&p, &f2), Some(33));
+        // one FPGA per switch: every cut pays at least one serial hop
+        f2.fpgas_per_switch = 1;
+        assert_eq!(
+            min_lookahead_cycles(&p, &f2),
+            Some(33 + crate::sim::params::INTER_SWITCH_LAT)
+        );
+        // single-slot placement: nothing to cut
+        let merged = Placement { slot_of: vec![0; g.n_kernels()] };
+        assert_eq!(min_lookahead_cycles(&merged, &f), None);
     }
 
     #[test]

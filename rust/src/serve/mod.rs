@@ -54,6 +54,9 @@ pub struct ServeConfig {
     pub fpgas_per_switch: usize,
     /// also run the Eq. 1 analytic-vs-simulated cross-check
     pub check_eq1: bool,
+    /// DES worker threads (None = process default, 1 = sequential);
+    /// serving reports are bit-identical at every thread count.
+    pub threads: Option<usize>,
 }
 
 impl ServeConfig {
@@ -76,6 +79,7 @@ impl ServeConfig {
             placement: None,
             fpgas_per_switch: 6,
             check_eq1: false,
+            threads: None,
         }
     }
 
@@ -99,6 +103,7 @@ impl ServeConfig {
             input: self.input.clone(),
             placement: self.placement.clone(),
             schedule: Some(schedule),
+            threads: self.threads,
         }
     }
 }

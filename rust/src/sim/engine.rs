@@ -1,7 +1,8 @@
 //! The discrete-event engine: kernels are actors; the fabric computes
 //! analytic delivery times (one event per packet — see fabric.rs).
 //!
-//! Hot-path design (DESIGN.md "Event queue and row-burst coalescing"):
+//! Hot-path design (DESIGN.md "Event queue and row-burst coalescing",
+//! "Parallel simulation: shards, lookahead, and determinism"):
 //!
 //! * destinations resolve through a flat 64K id->slot table filled at
 //!   build time — dispatch and send never hash a kernel id;
@@ -11,49 +12,105 @@
 //!   heap behavior for sparse tails;
 //! * same-cycle events dispatch in (kernel slot, push order) — a fixed
 //!   arbitration that makes timing independent of how events were
-//!   batched, which is what lets burst coalescing stay cycle-exact;
+//!   batched, which is what lets burst coalescing stay cycle-exact.
+//!   "Push order" is encoded as an explicit causal `Rank`
+//!   (kind, send cycle, sender slot, counter) rather than one global
+//!   counter, so the sharded parallel engine (shard.rs) can reproduce
+//!   the exact same total order without cross-thread coordination;
 //! * `KernelIo::send_burst` ships a run of consecutive rows as ONE event
 //!   whose per-row emission/arrival schedule the fabric computes
-//!   analytically (intra-FPGA edges only — `can_burst`).
+//!   analytically (intra-FPGA edges only — `can_burst`);
+//! * `Sim::run` transparently shards the fleet across worker threads at
+//!   inter-FPGA link boundaries when `threads != 1` (see shard.rs);
+//!   `threads = 1` is the exact sequential engine and `reference_mode`
+//!   the pre-optimization heap engine — all three are contractually
+//!   cycle- and trace-identical (rust/tests/proptests.rs).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::util::fxhash::FxHashMap;
+use crate::util::pool;
 
 use anyhow::{bail, Result};
 
 use super::fabric::{Fabric, FpgaId};
 use super::fifo::Fifo;
 use super::packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload, DENSE_IDS};
+use super::shard::{self, ShardGranularity, ShardPlan};
 use super::trace::Trace;
 
 /// Wake tag delivered to every kernel at simulation start.
 pub const START_TAG: u64 = u64::MAX;
 
 #[derive(Debug)]
-enum Ev {
+pub(crate) enum Ev {
     Packet(Packet),
     Wake(u64),
 }
 
+/// Deterministic tie-break for same-`(time, target)` events — the
+/// engine's "push order", made explicit so it can be computed identically
+/// by the sequential engine and by every shard of the parallel engine.
+///
+/// Ordering is lexicographic over the fields:
+///
+/// * `kind` — genesis events (`start` wakes, pre-run `inject`s) sort
+///   before any dispatch emission, exactly as their pushes precede every
+///   dispatch in the sequential engine;
+/// * `(send_time, sender)` — emissions from different dispatches compare
+///   by their sender dispatch's own pop order. Pops leave the priority
+///   queue sorted by `(time, target, rank)`, so `(send_time, sender
+///   slot)` reproduces the global-counter order whenever the two senders
+///   differ — and two *shards* never share a sender slot;
+/// * `ctr` — a per-engine (per-shard) monotone counter breaking the one
+///   remaining tie: two emissions of the same kernel at the same cycle
+///   (two dispatches, or two sends of one dispatch), which is inherently
+///   shard-local.
+///
+/// The equivalence of this order with the previous global push counter
+/// was additionally cross-validated exhaustively on randomized
+/// tie-adversarial workloads (sequential-vs-rank-vs-sharded trace
+/// equality; see DESIGN.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) struct Rank {
+    /// 0 = genesis (pre-run push), 1 = dispatch emission.
+    kind: u8,
+    /// Cycle of the emitting dispatch (0 for genesis).
+    send_time: u64,
+    /// Global kernel slot of the emitter (0 for genesis).
+    sender: u32,
+    /// Monotone per-engine-partition push counter.
+    ctr: u64,
+}
+
+impl Rank {
+    pub(crate) fn genesis(ctr: u64) -> Rank {
+        Rank { kind: 0, send_time: 0, sender: 0, ctr }
+    }
+    pub(crate) fn emission(send_time: u64, sender: u32, ctr: u64) -> Rank {
+        Rank { kind: 1, send_time, sender, ctr }
+    }
+}
+
 /// One scheduled event. Dispatch order is the total order
-/// (time, target, seq): same-cycle events go in kernel-slot order, and
-/// within one kernel in push order.
+/// (time, target, rank): same-cycle events go in kernel-slot order, and
+/// within one kernel in push order (see [`Rank`]).
 #[derive(Debug)]
-struct QEv {
-    time: u64,
-    target: u32,
-    seq: u64,
-    ev: Ev,
+pub(crate) struct QEv {
+    pub(crate) time: u64,
+    /// global kernel slot of the destination
+    pub(crate) target: u32,
+    pub(crate) rank: Rank,
+    pub(crate) ev: Ev,
 }
 
 impl QEv {
-    fn key(&self) -> (u64, u32, u64) {
-        (self.time, self.target, self.seq)
+    fn key(&self) -> (u64, u32, Rank) {
+        (self.time, self.target, self.rank)
     }
     fn hole() -> QEv {
-        QEv { time: 0, target: 0, seq: 0, ev: Ev::Wake(0) }
+        QEv { time: 0, target: 0, rank: Rank::genesis(0), ev: Ev::Wake(0) }
     }
 }
 
@@ -83,52 +140,51 @@ const OCC_WORDS: usize = (WHEEL_SIZE as usize) / 64;
 
 #[derive(Default)]
 struct Bucket {
-    /// entries sorted by (target, seq); `head` marks the popped prefix.
+    /// entries sorted by (target, rank); `head` marks the popped prefix.
     items: Vec<QEv>,
     head: usize,
 }
 
 /// Calendar-wheel event queue with heap fallback.
-struct EventQueue {
+pub(crate) struct EventQueue {
     buckets: Vec<Bucket>,
     occ: Vec<u64>,
     /// lower bound on every queued ring time (== last popped time).
     cursor: u64,
     ring_len: usize,
     heap: BinaryHeap<Reverse<QEv>>,
-    seq: u64,
     /// route everything through the heap (the reference scheduler).
-    heap_only: bool,
+    pub(crate) heap_only: bool,
 }
 
 impl EventQueue {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         EventQueue {
             buckets: (0..WHEEL_SIZE).map(|_| Bucket::default()).collect(),
             occ: vec![0u64; OCC_WORDS],
             cursor: 0,
             ring_len: 0,
             heap: BinaryHeap::new(),
-            seq: 0,
             heap_only: false,
         }
     }
 
-    fn push(&mut self, time: u64, target: u32, ev: Ev) {
-        self.seq += 1;
-        let e = QEv { time, target, seq: self.seq, ev };
-        if self.heap_only || time < self.cursor || time - self.cursor >= WHEEL_SIZE {
+    pub(crate) fn push(&mut self, e: QEv) {
+        if self.heap_only || e.time < self.cursor || e.time - self.cursor >= WHEEL_SIZE {
             self.heap.push(Reverse(e));
             return;
         }
-        let b = (time & WHEEL_MASK) as usize;
+        let b = (e.time & WHEEL_MASK) as usize;
         let bucket = &mut self.buckets[b];
         debug_assert!(
-            bucket.head == bucket.items.len() || bucket.items[bucket.head].time == time,
+            bucket.head == bucket.items.len() || bucket.items[bucket.head].time == e.time,
             "wheel bucket holds mixed timestamps"
         );
-        let pos =
-            bucket.head + bucket.items[bucket.head..].partition_point(|x| x.target <= target);
+        // full (target, rank) binary search: merged cross-shard events
+        // may carry ranks below already-queued same-bucket entries
+        let key = (e.target, e.rank);
+        let pos = bucket.head
+            + bucket.items[bucket.head..].partition_point(|x| (x.target, x.rank) <= key);
         bucket.items.insert(pos, e);
         self.occ[b >> 6] |= 1 << (b & 63);
         self.ring_len += 1;
@@ -152,7 +208,7 @@ impl EventQueue {
         unreachable!("ring_len > 0 with an empty occupancy bitmap")
     }
 
-    fn ring_peek(&self) -> Option<(usize, (u64, u32, u64))> {
+    fn ring_peek(&self) -> Option<(usize, (u64, u32, Rank))> {
         if self.ring_len == 0 {
             return None;
         }
@@ -161,7 +217,7 @@ impl EventQueue {
         Some((b, bucket.items[bucket.head].key()))
     }
 
-    fn peek_time(&self) -> Option<u64> {
+    pub(crate) fn peek_time(&self) -> Option<u64> {
         let r = self.ring_peek().map(|(_, k)| k);
         let h = self.heap.peek().map(|Reverse(e)| e.key());
         match (r, h) {
@@ -172,7 +228,7 @@ impl EventQueue {
         }
     }
 
-    fn pop(&mut self) -> Option<QEv> {
+    pub(crate) fn pop(&mut self) -> Option<QEv> {
         let ring = self.ring_peek();
         let heap = self.heap.peek().map(|Reverse(e)| e.key());
         match (ring, heap) {
@@ -199,11 +255,23 @@ impl EventQueue {
             }
         }
     }
+
+    /// Pop every queued event in dispatch order (partition/teardown of
+    /// the sharded engine; ranks are absolute, so re-pushing elsewhere
+    /// preserves the global total order).
+    pub(crate) fn drain_ordered(&mut self) -> Vec<QEv> {
+        let mut out = Vec::with_capacity(self.ring_len + self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+
 }
 
 /// Behavior of one streaming kernel (the paper's HLS kernel body).
-/// `Send` so whole simulations can run on worker threads (parallel
-/// sweeps and placer replays).
+/// `Send` so whole simulations — and, since the sharded engine, single
+/// fleet shards — can run on worker threads.
 pub trait KernelBehavior: Send {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo);
     fn on_wake(&mut self, tag: u64, io: &mut KernelIo);
@@ -223,9 +291,9 @@ pub struct KernelIo<'a> {
     fifo: &'a mut Fifo,
     trace: &'a mut Trace,
     slot16: &'a [u32],
-    /// (arrival_time, destination slot, event)
-    pending: Vec<(u64, u32, Ev)>,
-    wakes: Vec<(u64, u64)>,
+    /// (arrival_time, destination GLOBAL slot, event)
+    pending: &'a mut Vec<(u64, u32, Ev)>,
+    wakes: &'a mut Vec<(u64, u64)>,
     errors: &'a mut Vec<String>,
 }
 
@@ -275,6 +343,8 @@ impl KernelIo<'_> {
     /// True when a run of rows to `dst` may be coalesced into one burst:
     /// same cluster, same FPGA (the only serializing resource on the path
     /// is this kernel's exclusive egress port), and coalescing enabled.
+    /// Same-FPGA also means same *shard* under any FPGA-aligned shard
+    /// plan, so bursts never cross a parallel-engine boundary.
     pub fn can_burst(&self, dst: GlobalKernelId) -> bool {
         self.coalescing
             && dst.cluster == self.self_id.cluster
@@ -346,14 +416,82 @@ impl KernelIo<'_> {
     }
 }
 
-struct Slot {
-    id: GlobalKernelId,
-    behavior: Box<dyn KernelBehavior>,
-    fifo: Fifo,
-    tslot: usize,
+/// One registered kernel: behavior + input FIFO + trace slot. The trace
+/// slot is engine-partition-local (the sharded engine re-registers its
+/// kernels in per-shard traces and restores the master slot afterwards).
+pub(crate) struct Slot {
+    pub(crate) id: GlobalKernelId,
+    pub(crate) behavior: Box<dyn KernelBehavior>,
+    pub(crate) fifo: Fifo,
+    pub(crate) tslot: usize,
 }
 
-/// The simulator: kernels + fabric + event queue.
+/// Deliver one event to a kernel: rx/FIFO/probe accounting, then the
+/// behavior callback. Emissions land in `pending` (packets, with GLOBAL
+/// destination slots) and `wakes` in call order; the caller assigns
+/// [`Rank`]s and routes them to its queue or, in the sharded engine, to
+/// a cross-shard mailbox. Shared verbatim by `Sim::dispatch` and
+/// `shard::Shard::dispatch` so the engines cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn deliver_event(
+    now: u64,
+    slot: &mut Slot,
+    ev: Ev,
+    coalescing: bool,
+    fabric: &mut Fabric,
+    trace: &mut Trace,
+    slot16: &[u32],
+    errors: &mut Vec<String>,
+    pending: &mut Vec<(u64, u32, Ev)>,
+    wakes: &mut Vec<(u64, u64)>,
+) {
+    let tslot = slot.tslot;
+    let mut io = KernelIo {
+        now,
+        self_id: slot.id,
+        tslot,
+        coalescing,
+        fabric,
+        fifo: &mut slot.fifo,
+        trace,
+        slot16,
+        pending,
+        wakes,
+        errors,
+    };
+    match ev {
+        Ev::Packet(pkt) => {
+            match pkt.burst.as_ref() {
+                None => {
+                    io.fifo.push(pkt.wire_bytes());
+                    io.trace.on_rx_slot(tslot, io.now);
+                    if io.trace.probe_slot(tslot) {
+                        io.trace.record_probe_slot(tslot, io.now);
+                    }
+                }
+                Some(b) => {
+                    // per-row rx accounting at the analytic arrival
+                    // times; FIFO bytes enter row-by-row inside
+                    // `KernelIo::rows` so occupancy stays row-paced
+                    let probe = io.trace.probe_slot(tslot);
+                    for &a in &b.arrivals {
+                        io.trace.on_rx_slot(tslot, a);
+                        if probe {
+                            io.trace.record_probe_slot(tslot, a);
+                        }
+                    }
+                }
+            }
+            slot.behavior.on_packet(pkt, &mut io);
+        }
+        Ev::Wake(tag) => {
+            io.trace.wake_slot(tslot);
+            slot.behavior.on_wake(tag, &mut io);
+        }
+    }
+}
+
+/// The simulator: kernels + fabric + event queue(s).
 pub struct Sim {
     pub time: u64,
     queue: EventQueue,
@@ -369,6 +507,17 @@ pub struct Sim {
     /// intra-FPGA row-burst coalescing (on by default; `reference_mode`
     /// disables it for golden-determinism comparisons).
     pub coalescing: bool,
+    /// worker threads for the sharded parallel engine: 0 = auto
+    /// (`PALLAS_SIM_THREADS` / `--threads` / available parallelism),
+    /// 1 = exact sequential engine, N = up to N workers. The parallel
+    /// engine is contractually trace-identical at every thread count.
+    pub threads: usize,
+    /// how the fleet is cut into shards (see [`ShardGranularity`]).
+    pub granularity: ShardGranularity,
+    /// dispatch-emission rank counter (see [`Rank`]).
+    ctr: u64,
+    /// genesis rank counter (`start` wakes + `inject`s).
+    genesis_ctr: u64,
     // reusable dispatch buffers (avoid per-event allocation)
     pending_buf: Vec<(u64, u32, Ev)>,
     wakes_buf: Vec<(u64, u64)>,
@@ -393,19 +542,38 @@ impl Sim {
             errors: Vec::new(),
             max_events: 500_000_000,
             coalescing: true,
+            threads: 0,
+            granularity: ShardGranularity::PerCluster,
+            ctr: 0,
+            genesis_ctr: 0,
             pending_buf: Vec::new(),
             wakes_buf: Vec::new(),
         }
     }
 
     /// Put the simulator in the pre-optimization reference configuration:
-    /// no row-burst coalescing, pure binary-heap scheduling. Timing and
-    /// functional outputs are contractually identical to the default
-    /// engine (rust/tests/proptests.rs golden-determinism properties);
-    /// only the event count and wall-clock differ.
+    /// no row-burst coalescing, pure binary-heap scheduling, sequential
+    /// execution. Timing and functional outputs are contractually
+    /// identical to the default engine (rust/tests/proptests.rs
+    /// golden-determinism properties); only the event count and
+    /// wall-clock differ.
     pub fn reference_mode(&mut self) {
         self.coalescing = false;
         self.queue.heap_only = true;
+        self.threads = 1;
+    }
+
+    /// Pin the worker-thread count (0 = auto, 1 = sequential).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            pool::sim_threads()
+        }
     }
 
     /// Register a kernel on an FPGA with the given input FIFO.
@@ -438,21 +606,45 @@ impl Sim {
     /// Deliver the START wake to every kernel at t=0.
     pub fn start(&mut self) {
         for i in 0..self.kernels.len() {
-            self.queue.push(0, i as u32, Ev::Wake(START_TAG));
+            self.genesis_ctr += 1;
+            self.queue.push(QEv {
+                time: 0,
+                target: i as u32,
+                rank: Rank::genesis(self.genesis_ctr),
+                ev: Ev::Wake(START_TAG),
+            });
         }
     }
 
     /// Inject a packet from "outside" (e.g. a test harness) at time t.
+    /// Injections carry genesis rank: injected before the run starts they
+    /// order exactly as in the pre-rank engine; a mid-run injection at an
+    /// already-in-flight `(t, target)` orders ahead of the in-flight
+    /// packet (the engine has no external-injection ordering contract
+    /// mid-run).
     pub fn inject(&mut self, t: u64, pkt: Packet) -> Result<()> {
         let slot = match self.slot16[pkt.dst.dense()] {
             0 => bail!("inject: unknown destination {}", pkt.dst),
             s => s - 1,
         };
-        self.queue.push(t, slot, Ev::Packet(pkt));
+        self.genesis_ctr += 1;
+        self.queue.push(QEv {
+            time: t,
+            target: slot,
+            rank: Rank::genesis(self.genesis_ctr),
+            ev: Ev::Packet(pkt),
+        });
         Ok(())
     }
 
     /// Run until the queue drains or `until` cycles elapse.
+    ///
+    /// With `threads != 1` and a fleet that splits into 2+ FPGA-aligned
+    /// shards, the run executes on the sharded conservative-window engine
+    /// (shard.rs) — trace-identical to the sequential engine by contract.
+    /// Lossy-network mode (`drop_probability > 0`) and `reference_mode`
+    /// force the sequential path (the drop RNG is a global ordered
+    /// resource).
     ///
     /// Note on pausing with coalescing enabled: a burst event is
     /// delivered atomically at its FIRST row's arrival, so a pause may
@@ -462,6 +654,20 @@ impl Sim {
     /// `reference_mode` when inspecting mid-run state at a cycle
     /// boundary matters.
     pub fn run_until(&mut self, until: u64) -> Result<u64> {
+        let threads = self.effective_threads();
+        if threads != 1 && !self.queue.heap_only && self.fabric.drop_probability == 0.0 {
+            if let Some(plan) = ShardPlan::build(
+                self.granularity,
+                self.kernels.iter().map(|s| s.id),
+                &self.fabric,
+            ) {
+                return self.run_parallel(until, &plan, threads);
+            }
+        }
+        self.run_sequential(until)
+    }
+
+    fn run_sequential(&mut self, until: u64) -> Result<u64> {
         let mut processed = 0u64;
         while let Some(t) = self.queue.peek_time() {
             if t > until {
@@ -492,66 +698,106 @@ impl Sim {
 
         let target = entry.target;
         let slot = &mut self.kernels[target as usize];
-        let tslot = slot.tslot;
         self.pending_buf.clear();
         self.wakes_buf.clear();
-        let mut io = KernelIo {
-            now: self.time,
-            self_id: slot.id,
-            tslot,
-            coalescing: self.coalescing,
-            fabric: &mut self.fabric,
-            fifo: &mut slot.fifo,
-            trace: &mut self.trace,
-            slot16: &self.slot16,
-            pending: std::mem::take(&mut self.pending_buf),
-            wakes: std::mem::take(&mut self.wakes_buf),
-            errors: &mut self.errors,
+        deliver_event(
+            self.time,
+            slot,
+            entry.ev,
+            self.coalescing,
+            &mut self.fabric,
+            &mut self.trace,
+            &self.slot16,
+            &mut self.errors,
+            &mut self.pending_buf,
+            &mut self.wakes_buf,
+        );
+
+        // packet emissions first, then wakes — the pre-rank engine
+        // assigned its global counter in exactly this drain order
+        for (t, dst_slot, ev) in self.pending_buf.drain(..) {
+            self.ctr += 1;
+            self.queue.push(QEv {
+                time: t,
+                target: dst_slot,
+                rank: Rank::emission(self.time, target, self.ctr),
+                ev,
+            });
+        }
+        for (t, tag) in self.wakes_buf.drain(..) {
+            self.ctr += 1;
+            self.queue.push(QEv {
+                time: t,
+                target,
+                rank: Rank::emission(self.time, target, self.ctr),
+                ev: Ev::Wake(tag),
+            });
+        }
+        Ok(())
+    }
+
+    // ---- sharded parallel engine (shard.rs holds the executor) ----
+
+    /// Partition the simulator into shards, run the bounded-window loop
+    /// on the worker pool, and merge everything back so the post-run
+    /// `Sim` is indistinguishable from a sequential run.
+    fn run_parallel(&mut self, until: u64, plan: &ShardPlan, threads: usize) -> Result<u64> {
+        let window = match super::window::conservative_window(
+            plan,
+            &self.fabric,
+            self.kernels.iter().map(|s| s.id),
+        ) {
+            // zero-lookahead cut (or no cross-shard edge at all): the
+            // conservative window degenerates — run sequentially
+            Some(w) if w >= 1 => w,
+            _ => return self.run_sequential(until),
         };
 
-        match entry.ev {
-            Ev::Packet(pkt) => {
-                match pkt.burst.as_ref() {
-                    None => {
-                        io.fifo.push(pkt.wire_bytes());
-                        io.trace.on_rx_slot(tslot, io.now);
-                        if io.trace.probe_slot(tslot) {
-                            io.trace.record_probe_slot(tslot, io.now);
-                        }
-                    }
-                    Some(b) => {
-                        // per-row rx accounting at the analytic arrival
-                        // times; FIFO bytes enter row-by-row inside
-                        // `KernelIo::rows` so occupancy stays row-paced
-                        let probe = io.trace.probe_slot(tslot);
-                        for &a in &b.arrivals {
-                            io.trace.on_rx_slot(tslot, a);
-                            if probe {
-                                io.trace.record_probe_slot(tslot, a);
-                            }
-                        }
-                    }
-                }
-                slot.behavior.on_packet(pkt, &mut io);
-            }
-            Ev::Wake(tag) => {
-                io.trace.wake_slot(tslot);
-                slot.behavior.on_wake(tag, &mut io);
-            }
+        // ---- partition ----
+        let owner = plan.owner_of_slots(self.kernels.iter().map(|s| s.id), &self.fabric);
+        let slot16 = std::sync::Arc::new(self.slot16.to_vec());
+        let owner = std::sync::Arc::new(owner);
+        let (ctr0, coalescing) = (self.ctr, self.coalescing);
+        let mut shards = shard::partition(self, plan, &owner, &slot16, ctr0, coalescing);
+
+        // route queued events to their target's shard
+        for e in self.queue.drain_ordered() {
+            shards[owner[e.target as usize] as usize].queue.push(e);
         }
 
-        let mut pending = std::mem::take(&mut io.pending);
-        let mut wakes = std::mem::take(&mut io.wakes);
-        for (t, dst_slot, ev) in pending.drain(..) {
-            self.queue.push(t, dst_slot, ev);
+        // ---- bounded-window execution on the worker pool ----
+        let events_left = self.max_events.saturating_sub(self.trace.events_processed);
+        let outcome = shard::run_windowed(shards, threads, window, until, events_left);
+
+        // ---- teardown: merge shards back into the master state ----
+        let budget_hit = outcome.budget_exceeded;
+        let processed = outcome.processed;
+        shard::absorb(self, outcome.shards);
+
+        if !self.errors.is_empty() {
+            bail!("simulation error: {}", self.errors.join("; "));
         }
-        for (t, tag) in wakes.drain(..) {
-            self.queue.push(t, target, Ev::Wake(tag));
+        if budget_hit {
+            bail!("event budget exceeded ({} events)", self.max_events);
         }
-        // hand the buffers back for the next dispatch
-        self.pending_buf = pending;
-        self.wakes_buf = wakes;
-        Ok(())
+        Ok(processed)
+    }
+
+    // ---- shard.rs accessors (partition/teardown live over there) ----
+
+    pub(crate) fn take_kernels(&mut self) -> Vec<Slot> {
+        std::mem::take(&mut self.kernels)
+    }
+    pub(crate) fn put_kernels(&mut self, kernels: Vec<Slot>) {
+        debug_assert!(self.kernels.is_empty());
+        self.kernels = kernels;
+    }
+    pub(crate) fn push_event(&mut self, e: QEv) {
+        self.queue.push(e);
+    }
+    pub(crate) fn merge_clock(&mut self, shard_time: u64, shard_ctr: u64) {
+        self.time = self.time.max(shard_time);
+        self.ctr = self.ctr.max(shard_ctr);
     }
 }
 
@@ -810,5 +1056,117 @@ mod tests {
         let reference = run(false);
         assert_eq!(coalesced, reference);
         assert_eq!(coalesced.len(), 4);
+    }
+
+    #[test]
+    fn rank_order_is_lexicographic_and_genesis_first() {
+        let g1 = Rank::genesis(1);
+        let g2 = Rank::genesis(2);
+        let d = Rank::emission(0, 0, 0);
+        assert!(g1 < g2, "genesis pushes keep call order");
+        assert!(g2 < d, "genesis sorts before any dispatch emission");
+        assert!(Rank::emission(5, 3, 9) < Rank::emission(5, 4, 1), "sender slot before ctr");
+        assert!(Rank::emission(4, 9, 9) < Rank::emission(5, 0, 0), "send time first");
+        assert!(Rank::emission(5, 3, 1) < Rank::emission(5, 3, 2), "ctr breaks the last tie");
+    }
+
+    #[test]
+    fn queue_orders_merged_low_rank_events_correctly() {
+        // a cross-shard merge can push an event whose rank sorts BELOW
+        // entries already queued in the same (time, target) bucket; the
+        // wheel must place it first, not append it
+        let mut q = EventQueue::new();
+        q.push(QEv { time: 50, target: 3, rank: Rank::emission(40, 7, 9), ev: Ev::Wake(1) });
+        q.push(QEv { time: 50, target: 3, rank: Rank::emission(10, 2, 1), ev: Ev::Wake(2) });
+        q.push(QEv { time: 50, target: 2, rank: Rank::emission(49, 9, 9), ev: Ev::Wake(3) });
+        let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.ev {
+                Ev::Wake(t) => t,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tags, vec![3, 2, 1], "(target, rank) order, rank-regressing insert first");
+    }
+
+    /// A two-FPGA ping-pong with same-cycle ties: the parallel engine
+    /// (forced 2 shards, various thread counts) must reproduce the
+    /// sequential engine's trace exactly.
+    #[test]
+    fn parallel_matches_sequential_on_cross_fpga_pingpong() {
+        struct Ping {
+            peer: GlobalKernelId,
+            left: u32,
+        }
+        impl KernelBehavior for Ping {
+            fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+                io.consume(pkt.wire_bytes());
+                if self.left > 0 {
+                    self.left -= 1;
+                    io.send(self.peer, pkt.meta, Payload::Timing(64));
+                    io.send(self.peer, pkt.meta, Payload::Timing(64)); // tie on arrival
+                    io.wake_in(0, 9); // same-cycle self wake
+                }
+            }
+            fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+                if tag == START_TAG && self.left % 2 == 1 {
+                    io.send(self.peer, MsgMeta::default(), Payload::Timing(64));
+                }
+            }
+        }
+        let build = |threads: usize| {
+            let mut sim = Sim::new();
+            sim.fabric.attach(FpgaId(0), SwitchId(0));
+            sim.fabric.attach(FpgaId(1), SwitchId(0));
+            sim.granularity = ShardGranularity::PerFpga;
+            sim.set_threads(threads);
+            sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Ping {
+                peer: k(0, 2),
+                left: 13,
+            }))
+            .unwrap();
+            sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 16), Box::new(Ping {
+                peer: k(0, 1),
+                left: 12,
+            }))
+            .unwrap();
+            sim.trace.add_probe(k(0, 1));
+            sim.trace.add_probe(k(0, 2));
+            sim.start();
+            sim.run().unwrap();
+            (
+                sim.trace.probe_times(k(0, 1)).unwrap().to_vec(),
+                sim.trace.probe_times(k(0, 2)).unwrap().to_vec(),
+                sim.time,
+                sim.trace.events_processed,
+                sim.fabric.stats.packets,
+            )
+        };
+        let seq = build(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(build(threads), seq, "parallel diverged at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_run_until_pauses_like_sequential() {
+        let build = |threads: usize| {
+            let mut sim = Sim::new();
+            sim.fabric.attach(FpgaId(0), SwitchId(0));
+            sim.fabric.attach(FpgaId(1), SwitchId(0));
+            sim.granularity = ShardGranularity::PerFpga;
+            sim.set_threads(threads);
+            sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 20), Box::new(Source {
+                dst: k(0, 2), n: 60, gap: 40, sent: 0,
+            })).unwrap();
+            sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 20), Box::new(Sink { got: 0 }))
+                .unwrap();
+            sim.trace.add_probe(k(0, 2));
+            sim.start();
+            sim.run_until(777).unwrap();
+            let mid = (sim.time, sim.trace.events_processed);
+            sim.run().unwrap();
+            (mid, sim.trace.probe_times(k(0, 2)).unwrap().to_vec(), sim.time)
+        };
+        assert_eq!(build(4), build(1));
     }
 }

@@ -6,14 +6,23 @@
 //! packet"). Kernels are actor-style state machines; the fabric
 //! (output switches, routers, NICs, 100G switches) is modeled analytically
 //! with per-link serialization so the event count stays O(packets).
+//!
+//! Large fleets simulate in parallel: [`shard`] cuts the platform at
+//! inter-FPGA link boundaries and runs the pieces on worker threads
+//! under conservative bounded-window synchronization, with the lookahead
+//! derived from the real topology by [`window`] — cycle- and
+//! trace-identical to the sequential engine at every thread count.
 
 pub mod engine;
 pub mod fabric;
 pub mod fifo;
 pub mod packet;
 pub mod params;
+pub mod shard;
 pub mod trace;
+pub mod window;
 
 pub use engine::{KernelBehavior, KernelIo, Sim};
 pub use fabric::{Fabric, FpgaId, SwitchId};
 pub use packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload};
+pub use shard::ShardGranularity;

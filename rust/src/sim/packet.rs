@@ -14,6 +14,12 @@
 //! the whole run while the per-row emission and arrival times stay
 //! cycle-exact (see `fabric::Fabric::deliver_burst` and DESIGN.md
 //! "Event coalescing").
+//!
+//! Packets are `Send + Sync` end to end (payload rows are `Arc`d, never
+//! aliased mutably), so the sharded parallel engine moves them through
+//! its lock-free cross-shard mailboxes without copying row data; bursts
+//! never need to cross a shard boundary because coalescing is
+//! intra-FPGA-only and shards are FPGA-aligned (`sim::shard`).
 
 use std::sync::Arc;
 

@@ -1,0 +1,706 @@
+//! Sharded conservative parallel DES: the fleet is partitioned at
+//! inter-FPGA link boundaries and the shards run on worker threads with
+//! bounded-window barrier synchronization.
+//!
+//! Why this is safe (DESIGN.md "Parallel simulation"): every cross-shard
+//! packet crosses a physical inter-FPGA path whose minimum latency —
+//! computed from the actual topology by `window::conservative_window` —
+//! is the lookahead `W` of a classic conservative PDES. Each round, all
+//! shards process events in `[gmin, gmin + W)`; any packet emitted in the
+//! round arrives at `>= gmin + W`, i.e. strictly after the window, so
+//! merging the per-edge mailboxes at the barrier can never violate
+//! causality.
+//!
+//! Why it is *deterministic and trace-identical* to the sequential
+//! engine: events are totally ordered by `(time, target slot, Rank)`
+//! (see `engine::Rank`), a causal key both engines compute identically —
+//! mailbox merges re-sort into the destination wheel by that key, so the
+//! destination shard dispatches exactly the sequence the sequential
+//! engine would. Sender-side link state (kernel egress, source NIC) is
+//! owned by the sender's shard, which is why shards must be FPGA-aligned
+//! (`ShardGranularity` groupings never split an FPGA).
+//!
+//! The bit-identical contract covers runs that complete (or pause)
+//! without simulation errors. On a fatal error — unroutable send,
+//! event-budget blowout — both engines bail with an error, but the
+//! parallel engine stops at a round boundary: sibling shards may have
+//! processed up to one extra window and several shards' errors may
+//! join, so post-error counters/messages can differ from `threads = 1`
+//! (error paths are programming-bug paths, not modeled behavior).
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::pool;
+
+use super::engine::{deliver_event, Ev, EventQueue, QEv, Rank, Sim, Slot};
+use super::fabric::{Fabric, FpgaId};
+use super::packet::GlobalKernelId;
+use super::trace::Trace;
+
+/// How the fleet is cut into shards. Both options are FPGA-aligned (an
+/// FPGA is never split across shards — its NIC egress is a serializing
+/// resource the owning shard must model alone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardGranularity {
+    /// One shard per FPGA: maximum parallelism, but the window shrinks
+    /// to the cheapest inter-FPGA hop (~33 cycles on one switch), so
+    /// barrier rounds dominate on large fleets.
+    PerFpga,
+    /// One shard per cluster (= per encoder in the testbeds), merging
+    /// FPGAs that host kernels of the same cluster (union-find, so a
+    /// placement co-locating two clusters on one FPGA merges their
+    /// shards). Cross-shard edges then cross encoder boundaries — the
+    /// serial switch hop of Eq. 1 — giving a ~253-cycle window. Default.
+    PerCluster,
+}
+
+/// The fleet partition: a dense shard id per FPGA (only FPGAs hosting
+/// kernels participate).
+#[derive(Debug, Clone)]
+pub(crate) struct ShardPlan {
+    /// FPGA index -> shard id + 1; 0 = hosts no kernels.
+    shard_of_fpga: Vec<u32>,
+    pub(crate) n_shards: usize,
+}
+
+impl ShardPlan {
+    /// Build the partition, or None when it would not split the fleet
+    /// (single shard — the sequential engine is the parallel engine).
+    pub(crate) fn build(
+        granularity: ShardGranularity,
+        ids: impl Iterator<Item = GlobalKernelId> + Clone,
+        fabric: &Fabric,
+    ) -> Option<ShardPlan> {
+        let mut max_fpga = 0usize;
+        for id in ids.clone() {
+            max_fpga = max_fpga.max(fabric.fpga_of(id)?.0);
+        }
+        // union-find over FPGA indices
+        let mut parent: Vec<usize> = (0..=max_fpga).collect();
+        fn find(parent: &mut [usize], mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        let mut hosts = vec![false; max_fpga + 1];
+        let mut cluster_first: [usize; 256] = [usize::MAX; 256];
+        for id in ids {
+            let f = fabric.fpga_of(id)?.0;
+            hosts[f] = true;
+            if granularity == ShardGranularity::PerCluster {
+                let c = id.cluster as usize;
+                if cluster_first[c] == usize::MAX {
+                    cluster_first[c] = f;
+                } else {
+                    let (a, b) = (find(&mut parent, cluster_first[c]), find(&mut parent, f));
+                    parent[a.max(b)] = a.min(b);
+                }
+            }
+        }
+        // dense shard ids in ascending root-FPGA order (deterministic)
+        let mut shard_of_fpga = vec![0u32; max_fpga + 1];
+        let mut next = 0u32;
+        let mut of_root = vec![0u32; max_fpga + 1];
+        for f in 0..=max_fpga {
+            if !hosts[f] {
+                continue;
+            }
+            let r = find(&mut parent, f);
+            if of_root[r] == 0 {
+                next += 1;
+                of_root[r] = next;
+            }
+            shard_of_fpga[f] = of_root[r];
+        }
+        let n_shards = next as usize;
+        (n_shards >= 2).then_some(ShardPlan { shard_of_fpga, n_shards })
+    }
+
+    #[inline]
+    pub(crate) fn shard_of(&self, f: FpgaId) -> Option<usize> {
+        match self.shard_of_fpga.get(f.0).copied().unwrap_or(0) {
+            0 => None,
+            s => Some(s as usize - 1),
+        }
+    }
+
+    /// Shard id per global kernel slot (in slot order).
+    pub(crate) fn owner_of_slots(
+        &self,
+        ids: impl Iterator<Item = GlobalKernelId>,
+        fabric: &Fabric,
+    ) -> Vec<u16> {
+        ids.map(|id| {
+            let f = fabric.fpga_of(id).expect("registered kernels are placed");
+            self.shard_of(f).expect("kernel-hosting FPGA has a shard") as u16
+        })
+        .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free per-edge mailbox (Treiber stack). Each (src shard, dst
+// shard) edge has exactly one producer (the src worker, during the
+// compute phase) and one consumer (the dst worker, after the barrier),
+// so the CAS never spins in practice; the stack keeps it safe even for
+// hypothetical multi-producer use. Drain order is irrelevant — the
+// destination wheel re-sorts by (time, target, rank).
+// ---------------------------------------------------------------------------
+
+struct MbNode {
+    ev: QEv,
+    next: *mut MbNode,
+}
+
+pub(crate) struct Mailbox {
+    head: AtomicPtr<MbNode>,
+}
+
+// Safety: nodes are heap-allocated and ownership transfers wholesale on
+// push (producer gives up the node) and drain (consumer takes the whole
+// chain with one swap); QEv is Send.
+unsafe impl Send for Mailbox {}
+unsafe impl Sync for Mailbox {}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox { head: AtomicPtr::new(std::ptr::null_mut()) }
+    }
+
+    fn push(&self, ev: QEv) {
+        let node = Box::into_raw(Box::new(MbNode { ev, next: std::ptr::null_mut() }));
+        let mut cur = self.head.load(Ordering::Relaxed);
+        loop {
+            unsafe { (*node).next = cur };
+            match self.head.compare_exchange_weak(cur, node, Ordering::Release, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn drain(&self, out: &mut Vec<QEv>) {
+        let mut p = self.head.swap(std::ptr::null_mut(), Ordering::Acquire);
+        while !p.is_null() {
+            let node = unsafe { Box::from_raw(p) };
+            p = node.next;
+            out.push(node.ev);
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire).is_null()
+    }
+}
+
+impl Drop for Mailbox {
+    fn drop(&mut self) {
+        let mut sink = Vec::new();
+        self.drain(&mut sink);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One shard: a slice of the fleet with its own wheel, link state, trace.
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Shard {
+    idx: usize,
+    pub(crate) queue: EventQueue,
+    kernels: Vec<Slot>,
+    /// local index -> global kernel slot (ascending).
+    global_slots: Vec<u32>,
+    /// local index -> the master trace slot to restore at teardown.
+    master_tslots: Vec<usize>,
+    /// global kernel slot -> local index + 1; 0 = foreign shard.
+    local_of: Vec<u32>,
+    /// global kernel slot -> owning shard.
+    owner: Arc<Vec<u16>>,
+    /// shared dense id -> global slot + 1 resolution table.
+    slot16: Arc<Vec<u32>>,
+    /// private fabric copy: only this shard's kernel-egress / NIC
+    /// entries are ever exercised (FPGA alignment); stats start zeroed.
+    fabric: Fabric,
+    trace: Trace,
+    errors: Vec<String>,
+    time: u64,
+    ctr: u64,
+    coalescing: bool,
+    /// dense kernel ids / FPGA indices owned (for link-state merge-back).
+    kernel_dense: Vec<usize>,
+    fpgas: Vec<usize>,
+    pending_buf: Vec<(u64, u32, Ev)>,
+    wakes_buf: Vec<(u64, u64)>,
+}
+
+impl Shard {
+    /// Process queued events with `time <= wlast`, at most `cap` of
+    /// them; returns the event count. Cross-shard emissions go to
+    /// `mailboxes[dst][src]`. The cap is the runaway-kernel guard: a
+    /// same-cycle self-wake loop would otherwise keep `peek_time() <=
+    /// wlast` forever and hang the window instead of tripping the
+    /// `max_events` error the sequential engine raises.
+    fn run_window(&mut self, wlast: u64, cap: u64, mailboxes: &[Vec<Mailbox>]) -> u64 {
+        let mut processed = 0u64;
+        while let Some(t) = self.queue.peek_time() {
+            if t > wlast || processed >= cap || !self.errors.is_empty() {
+                break;
+            }
+            let e = self.queue.pop().unwrap();
+            self.dispatch(e, wlast, mailboxes);
+            processed += 1;
+        }
+        processed
+    }
+
+    fn dispatch(&mut self, entry: QEv, wlast: u64, mailboxes: &[Vec<Mailbox>]) {
+        debug_assert!(entry.time >= self.time, "shard time went backwards");
+        self.time = entry.time;
+        self.trace.events_processed += 1;
+
+        let target = entry.target;
+        let local = self.local_of[target as usize];
+        debug_assert!(local != 0, "event routed to the wrong shard");
+        let slot = &mut self.kernels[local as usize - 1];
+        self.pending_buf.clear();
+        self.wakes_buf.clear();
+        deliver_event(
+            self.time,
+            slot,
+            entry.ev,
+            self.coalescing,
+            &mut self.fabric,
+            &mut self.trace,
+            &self.slot16,
+            &mut self.errors,
+            &mut self.pending_buf,
+            &mut self.wakes_buf,
+        );
+
+        for (t, dst_slot, ev) in self.pending_buf.drain(..) {
+            self.ctr += 1;
+            let e = QEv {
+                time: t,
+                target: dst_slot,
+                rank: Rank::emission(self.time, target, self.ctr),
+                ev,
+            };
+            let dst_shard = self.owner[dst_slot as usize] as usize;
+            if dst_shard == self.idx {
+                self.queue.push(e);
+            } else {
+                debug_assert!(t > wlast, "conservative lookahead violated");
+                mailboxes[dst_shard][self.idx].push(e);
+            }
+        }
+        for (t, tag) in self.wakes_buf.drain(..) {
+            self.ctr += 1;
+            self.queue.push(QEv {
+                time: t,
+                target,
+                rank: Rank::emission(self.time, target, self.ctr),
+                ev: Ev::Wake(tag),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partition / execute / absorb
+// ---------------------------------------------------------------------------
+
+/// Carve the master `Sim` into shards: kernels, probe registration,
+/// per-shard fabric copies. The event queue is routed by the caller.
+pub(crate) fn partition(
+    sim: &mut Sim,
+    plan: &ShardPlan,
+    owner: &Arc<Vec<u16>>,
+    slot16: &Arc<Vec<u32>>,
+    ctr0: u64,
+    coalescing: bool,
+) -> Vec<Shard> {
+    let kernels = sim.take_kernels();
+    let n_slots = kernels.len();
+    let mut shards: Vec<Shard> = (0..plan.n_shards)
+        .map(|idx| Shard {
+            idx,
+            queue: EventQueue::new(),
+            kernels: Vec::new(),
+            global_slots: Vec::new(),
+            master_tslots: Vec::new(),
+            local_of: vec![0u32; n_slots],
+            owner: owner.clone(),
+            slot16: slot16.clone(),
+            fabric: sim.fabric.shard_clone(),
+            trace: Trace::default(),
+            errors: Vec::new(),
+            time: sim.time,
+            ctr: ctr0,
+            coalescing,
+            kernel_dense: Vec::new(),
+            fpgas: Vec::new(),
+            pending_buf: Vec::new(),
+            wakes_buf: Vec::new(),
+        })
+        .collect();
+    for (gslot, mut slot) in kernels.into_iter().enumerate() {
+        let sh = &mut shards[owner[gslot] as usize];
+        sh.local_of[gslot] = sh.kernels.len() as u32 + 1;
+        sh.global_slots.push(gslot as u32);
+        sh.master_tslots.push(slot.tslot);
+        sh.kernel_dense.push(slot.id.dense());
+        let f = sim.fabric.fpga_of(slot.id).expect("registered kernels are placed").0;
+        if !sh.fpgas.contains(&f) {
+            sh.fpgas.push(f);
+        }
+        // per-shard trace slots, with the master's probe set carried over
+        slot.tslot = sh.trace.register(slot.id);
+        if sim.trace.is_probe(slot.id) {
+            sh.trace.add_probe(slot.id);
+        }
+        sh.kernels.push(slot);
+    }
+    shards
+}
+
+/// Result of one windowed parallel execution.
+pub(crate) struct Outcome {
+    pub(crate) shards: Vec<Shard>,
+    pub(crate) processed: u64,
+    pub(crate) budget_exceeded: bool,
+}
+
+/// Sense-reversing barrier with an abort path: `std::sync::Barrier`
+/// cannot be poisoned, so a panicking worker would leave the survivors
+/// waiting forever. `wait` returns false once the formation is aborted
+/// and every current + future waiter is released immediately.
+struct AbortBarrier {
+    state: Mutex<(usize, u64, bool)>, // (count, generation, aborted)
+    cv: Condvar,
+    parties: usize,
+}
+
+impl AbortBarrier {
+    fn new(parties: usize) -> AbortBarrier {
+        AbortBarrier { state: Mutex::new((0, 0, false)), cv: Condvar::new(), parties }
+    }
+
+    /// Block until all parties arrive; false = formation aborted.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.2 {
+            return false;
+        }
+        st.0 += 1;
+        if st.0 == self.parties {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        let gen = st.1;
+        while st.1 == gen && !st.2 {
+            st = self.cv.wait(st).unwrap();
+        }
+        !st.2
+    }
+
+    fn abort(&self) {
+        self.state.lock().unwrap().2 = true;
+        self.cv.notify_all();
+    }
+}
+
+struct Coord {
+    barrier: AbortBarrier,
+    /// next global event time, double-buffered by round parity so the
+    /// reset of round r+1's slot cannot race round r's reads.
+    next: [AtomicU64; 2],
+    stop: AtomicBool,
+    budget_hit: AtomicBool,
+    processed: AtomicU64,
+}
+
+/// Run the bounded-window loop: `threads` workers (capped at the shard
+/// count) each own a fixed round-robin set of shards; three barriers per
+/// round separate (a) the global-min reduction, (b) window processing
+/// with mailbox sends, and (c) mailbox merges.
+pub(crate) fn run_windowed(
+    shards: Vec<Shard>,
+    threads: usize,
+    window: u64,
+    until: u64,
+    events_budget: u64,
+) -> Outcome {
+    let n_shards = shards.len();
+    let workers = threads.clamp(1, n_shards);
+    let mut per_worker: Vec<Vec<Shard>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, sh) in shards.into_iter().enumerate() {
+        per_worker[i % workers].push(sh);
+    }
+    let slots: Vec<Mutex<Vec<Shard>>> = per_worker.into_iter().map(Mutex::new).collect();
+    let mailboxes: Vec<Vec<Mailbox>> = (0..n_shards)
+        .map(|_| (0..n_shards).map(|_| Mailbox::new()).collect())
+        .collect();
+    let coord = Coord {
+        barrier: AbortBarrier::new(workers),
+        next: [AtomicU64::new(u64::MAX), AtomicU64::new(u64::MAX)],
+        stop: AtomicBool::new(false),
+        budget_hit: AtomicBool::new(false),
+        processed: AtomicU64::new(0),
+    };
+    let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+
+    pool::run_workers(workers, |w| {
+        // a panic anywhere in the round loop aborts the barrier so the
+        // other workers return instead of deadlocking, then re-raises
+        // after the join (same observable behavior as the sequential
+        // engine's panic)
+        let body = || worker_rounds(w, &slots, &coord, &mailboxes, window, until, events_budget);
+        if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+            coord.barrier.abort();
+            *panic_payload.lock().unwrap() = Some(p);
+        }
+    });
+
+    if let Some(p) = panic_payload.into_inner().unwrap() {
+        std::panic::resume_unwind(p);
+    }
+    debug_assert!(
+        mailboxes.iter().flatten().all(|m| m.is_empty()),
+        "undelivered cross-shard events after the run"
+    );
+    let mut shards: Vec<Shard> =
+        slots.into_iter().flat_map(|m| m.into_inner().unwrap()).collect();
+    shards.sort_by_key(|s| s.idx);
+    Outcome {
+        shards,
+        processed: coord.processed.load(Ordering::SeqCst),
+        budget_exceeded: coord.budget_hit.load(Ordering::SeqCst),
+    }
+}
+
+/// One worker's barrier-round loop over its owned shards.
+fn worker_rounds(
+    w: usize,
+    slots: &[Mutex<Vec<Shard>>],
+    coord: &Coord,
+    mailboxes: &[Vec<Mailbox>],
+    window: u64,
+    until: u64,
+    events_budget: u64,
+) {
+    let mut my = slots[w].lock().unwrap();
+    let mut round = 0usize;
+    let mut worker_done = 0u64;
+    let mut merged: Vec<QEv> = Vec::new();
+    loop {
+        // (a) reduce the global minimum next event time. `stop` is
+        // snapshotted HERE, in the read-only phase: writes only
+        // happen during window processing (b), which every worker
+        // finished before the previous round's merge barrier — a
+        // fresh load at the decision point below could race a fast
+        // worker's new write and split the break decision (deadlock)
+        let stopped = coord.stop.load(Ordering::SeqCst);
+        let slot = &coord.next[round & 1];
+        let mut lmin = u64::MAX;
+        for sh in my.iter() {
+            if let Some(t) = sh.queue.peek_time() {
+                lmin = lmin.min(t);
+            }
+        }
+        slot.fetch_min(lmin, Ordering::SeqCst);
+        if !coord.barrier.wait() {
+            return; // another worker panicked: unwind cleanly
+        }
+        let gmin = slot.load(Ordering::SeqCst);
+        // every worker takes the same branch: gmin is the barrier-
+        // reduced value and `stopped` predates the barrier
+        if gmin == u64::MAX || gmin > until || stopped {
+            return;
+        }
+        // pre-arm the other parity slot; it is not read before the
+        // next round's barrier, and every worker writes the same MAX
+        coord.next[(round + 1) & 1].store(u64::MAX, Ordering::SeqCst);
+
+        // (b) process the window [gmin, gmin + window) (clamped)
+        let wlast = gmin.saturating_add(window - 1).min(until);
+        let mut processed = 0u64;
+        let mut had_err = false;
+        for sh in my.iter_mut() {
+            // each shard may at most exhaust the whole remaining
+            // global budget (+1 so the overshoot trips the check)
+            let cap = events_budget.saturating_sub(worker_done + processed) + 1;
+            processed += sh.run_window(wlast, cap, mailboxes);
+            had_err |= !sh.errors.is_empty();
+        }
+        worker_done += processed;
+        let total = coord.processed.fetch_add(processed, Ordering::SeqCst) + processed;
+        if had_err {
+            coord.stop.store(true, Ordering::SeqCst);
+        }
+        if total > events_budget {
+            coord.budget_hit.store(true, Ordering::SeqCst);
+            coord.stop.store(true, Ordering::SeqCst);
+        }
+        if !coord.barrier.wait() {
+            return;
+        }
+
+        // (c) merge this worker's inbound mailboxes
+        for sh in my.iter_mut() {
+            merged.clear();
+            for src in &mailboxes[sh.idx] {
+                src.drain(&mut merged);
+            }
+            for e in merged.drain(..) {
+                sh.queue.push(e);
+            }
+        }
+        if !coord.barrier.wait() {
+            return;
+        }
+        round += 1;
+    }
+}
+
+/// Merge shard state back into the master `Sim`: kernels in global slot
+/// order (master trace slots restored), remaining events, link state,
+/// traces, clocks, errors. After this the `Sim` is indistinguishable
+/// from one that ran sequentially.
+pub(crate) fn absorb(sim: &mut Sim, shards: Vec<Shard>) {
+    let n_slots: usize = shards.iter().map(|s| s.kernels.len()).sum();
+    let mut slots: Vec<Option<Slot>> = (0..n_slots).map(|_| None).collect();
+    for mut sh in shards {
+        sim.fabric.absorb_shard(&sh.fabric, &sh.kernel_dense, &sh.fpgas);
+        sim.merge_clock(sh.time, sh.ctr);
+        sim.errors.append(&mut sh.errors);
+        for e in sh.queue.drain_ordered() {
+            sim.push_event(e);
+        }
+        for ((mut slot, gslot), mtslot) in sh
+            .kernels
+            .into_iter()
+            .zip(sh.global_slots.iter())
+            .zip(sh.master_tslots.iter())
+        {
+            slot.tslot = *mtslot;
+            slots[*gslot as usize] = Some(slot);
+        }
+        sim.trace.absorb(sh.trace);
+    }
+    sim.put_kernels(slots.into_iter().map(|s| s.expect("every slot restored")).collect());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fabric::SwitchId;
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    fn fabric_3fpga() -> Fabric {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(1));
+        f.place(k(1, 0), FpgaId(2));
+        f.place(k(1, 1), FpgaId(1));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(0));
+        f.attach(FpgaId(2), SwitchId(1));
+        f
+    }
+
+    #[test]
+    fn per_fpga_plan_is_one_shard_per_fpga() {
+        let f = fabric_3fpga();
+        let ids = [k(0, 1), k(0, 2), k(1, 0), k(1, 1)];
+        let plan =
+            ShardPlan::build(ShardGranularity::PerFpga, ids.iter().copied(), &f).unwrap();
+        assert_eq!(plan.n_shards, 3);
+        let owner = plan.owner_of_slots(ids.iter().copied(), &f);
+        assert_eq!(owner, vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn per_cluster_plan_merges_shared_fpgas() {
+        // cluster 1 spans FPGAs 1 and 2, but FPGA 1 also hosts cluster 0
+        // kernels -> union-find must merge everything reachable
+        let f = fabric_3fpga();
+        let ids = [k(0, 1), k(0, 2), k(1, 0), k(1, 1)];
+        let plan = ShardPlan::build(ShardGranularity::PerCluster, ids.iter().copied(), &f);
+        // clusters 0 {f0,f1} and 1 {f1,f2} share FPGA 1: one shard only
+        assert!(plan.is_none(), "overlapping clusters must collapse to a single shard");
+        // disjoint clusters split cleanly
+        let ids2 = [k(0, 1), k(1, 0)];
+        let plan2 =
+            ShardPlan::build(ShardGranularity::PerCluster, ids2.iter().copied(), &f).unwrap();
+        assert_eq!(plan2.n_shards, 2);
+    }
+
+    #[test]
+    fn single_fpga_never_splits() {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(0));
+        f.attach(FpgaId(0), SwitchId(0));
+        let ids = [k(0, 1), k(0, 2)];
+        assert!(ShardPlan::build(ShardGranularity::PerFpga, ids.iter().copied(), &f).is_none());
+    }
+
+    #[test]
+    fn mailbox_transfers_everything_exactly_once() {
+        let mb = Mailbox::new();
+        assert!(mb.is_empty());
+        for i in 0..100u64 {
+            mb.push(QEv {
+                time: i,
+                target: (i % 7) as u32,
+                rank: Rank::genesis(i),
+                ev: Ev::Wake(i),
+            });
+        }
+        assert!(!mb.is_empty());
+        let mut out = Vec::new();
+        mb.drain(&mut out);
+        assert!(mb.is_empty());
+        let mut tags: Vec<u64> = out
+            .iter()
+            .map(|e| match e.ev {
+                Ev::Wake(t) => t,
+                _ => unreachable!(),
+            })
+            .collect();
+        tags.sort_unstable();
+        assert_eq!(tags, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mailbox_concurrent_pushes_survive_drain() {
+        let mb = std::sync::Arc::new(Mailbox::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let mb = mb.clone();
+                s.spawn(move || {
+                    for i in 0..250u64 {
+                        mb.push(QEv {
+                            time: t * 1000 + i,
+                            target: 0,
+                            rank: Rank::genesis(t * 1000 + i),
+                            ev: Ev::Wake(t * 1000 + i),
+                        });
+                    }
+                });
+            }
+        });
+        let mut out = Vec::new();
+        mb.drain(&mut out);
+        assert_eq!(out.len(), 1000);
+    }
+}

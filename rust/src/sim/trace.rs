@@ -31,6 +31,26 @@ impl KernelStats {
         self.first_tx = Some(self.first_tx.map_or(t, |f| f.min(t)));
         self.last_tx = Some(self.last_tx.map_or(t, |l| l.max(t)));
     }
+
+    /// Fold another counter set in (shard merge-back): counts add,
+    /// first/last take min/max across both.
+    pub(crate) fn absorb(&mut self, o: &KernelStats) {
+        self.rx_packets += o.rx_packets;
+        self.tx_packets += o.tx_packets;
+        self.wakes += o.wakes;
+        let min = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, y) => x.or(y),
+        };
+        let max = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(x), Some(y)) => Some(x.max(y)),
+            (x, y) => x.or(y),
+        };
+        self.first_rx = min(self.first_rx, o.first_rx);
+        self.last_rx = max(self.last_rx, o.last_rx);
+        self.first_tx = min(self.first_tx, o.first_tx);
+        self.last_tx = max(self.last_tx, o.last_tx);
+    }
 }
 
 #[derive(Debug)]
@@ -129,6 +149,25 @@ impl Trace {
         self.series[si as usize - 1].push(t);
     }
 
+    /// Fold a per-shard trace back into the master (parallel-engine
+    /// teardown): per-kernel counters add, probe series append in the
+    /// shard's (chronological) recording order, event counts add. Each
+    /// kernel lives in exactly one shard, so no series interleaving is
+    /// ever needed.
+    pub(crate) fn absorb(&mut self, other: Trace) {
+        self.events_processed += other.events_processed;
+        for (i, id) in other.ids.iter().enumerate() {
+            let slot = self.register(*id);
+            self.slots[slot].absorb(&other.slots[i]);
+            if other.probe_flag[i] {
+                self.add_probe(*id);
+                let si = self.probe_series[slot] as usize - 1;
+                let osi = other.probe_series[i] as usize - 1;
+                self.series[si].extend_from_slice(&other.series[osi]);
+            }
+        }
+    }
+
     // ---- probe API ----
 
     pub fn add_probe(&mut self, k: GlobalKernelId) {
@@ -225,6 +264,34 @@ mod tests {
         assert_eq!(tr.kernel(a).unwrap().rx_packets, 1);
         assert!(tr.kernel(GlobalKernelId::new(1, 1)).is_none());
         assert_eq!(tr.kernels().count(), 2);
+    }
+
+    #[test]
+    fn absorb_merges_counts_series_and_extremes() {
+        let a = GlobalKernelId::new(0, 1);
+        let b = GlobalKernelId::new(0, 2);
+        let mut master = Trace::default();
+        master.add_probe(a);
+        master.record_probe(a, 5);
+        master.stats(a).on_rx(5);
+        master.events_processed = 3;
+
+        let mut sh = Trace::default();
+        sh.register(a);
+        sh.add_probe(a);
+        sh.record_probe(a, 9);
+        sh.stats(a).on_rx(9);
+        sh.stats(a).on_tx(11);
+        sh.stats(b).on_rx(2);
+        sh.events_processed = 4;
+
+        master.absorb(sh);
+        assert_eq!(master.events_processed, 7);
+        let sa = master.kernel(a).unwrap();
+        assert_eq!((sa.rx_packets, sa.tx_packets), (2, 1));
+        assert_eq!((sa.first_rx, sa.last_rx), (Some(5), Some(9)));
+        assert_eq!(master.probe_times(a).unwrap(), &[5, 9]);
+        assert_eq!(master.kernel(b).unwrap().first_rx, Some(2));
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Conservative lookahead for the sharded parallel engine: the safe
+//! window is the minimum latency any packet can experience on a
+//! cross-shard path, read off the actual placement + switch topology.
+//!
+//! Every cross-shard edge is inter-FPGA (shards are FPGA-aligned), so
+//! the cheapest possible packet pays the full uncontended 1-flit path —
+//! output switch, egress, router, NIC serialization, NIC/switch/NIC
+//! traversal, any serial inter-switch hops (the `d` of Eq. 1), and the
+//! ingress router; `fabric::Fabric::deliver` only ever *adds* link
+//! contention on top. A packet emitted at cycle `t` therefore arrives at
+//! `>= t + W`, which is exactly the bounded-window guarantee shard.rs
+//! relies on.
+
+use super::fabric::Fabric;
+use super::packet::GlobalKernelId;
+use super::params::point_to_point_latency;
+use super::shard::ShardPlan;
+
+/// Minimum serialization cost of any packet (payloads are at least one
+/// flit — `params::flits_for_bytes` never returns 0).
+pub const MIN_FLITS: u64 = 1;
+
+/// The conservative window of `plan` on `fabric`'s topology: the minimum
+/// 1-flit point-to-point latency over every ordered cross-shard FPGA
+/// pair that hosts kernels. `None` when no cross-shard pair can
+/// communicate (unattached FPGAs) — the shards are then fully
+/// independent and the caller may use an unbounded window; in practice
+/// the fabric's constants make any real window >= 33 cycles (one-switch
+/// inter-FPGA hop), and >= 253 cycles across encoder boundaries.
+pub(crate) fn conservative_window(
+    plan: &ShardPlan,
+    fabric: &Fabric,
+    ids: impl Iterator<Item = GlobalKernelId>,
+) -> Option<u64> {
+    // (fpga, shard, switch) for every FPGA hosting at least one kernel
+    let mut used: Vec<(usize, usize, Option<usize>)> = Vec::new();
+    for id in ids {
+        let f = fabric.fpga_of(id)?;
+        if used.iter().any(|&(uf, _, _)| uf == f.0) {
+            continue;
+        }
+        let shard = plan.shard_of(f)?;
+        used.push((f.0, shard, fabric.switch_of(f).map(|s| s.0)));
+    }
+    let mut best: Option<u64> = None;
+    for &(fa, sa, swa) in &used {
+        for &(fb, sb, swb) in &used {
+            if sa == sb {
+                continue;
+            }
+            debug_assert_ne!(fa, fb, "FPGA-aligned shards cannot share an FPGA");
+            let (Some(swa), Some(swb)) = (swa, swb) else {
+                // unattached endpoint: a send on this pair errors out in
+                // the fabric before any event is created — no constraint
+                continue;
+            };
+            let hops = swa.abs_diff(swb) as u64;
+            let lat = point_to_point_latency(MIN_FLITS, false, hops);
+            best = Some(best.map_or(lat, |b: u64| b.min(lat)));
+        }
+    }
+    // no communicating cross-shard pair at all: unbounded lookahead
+    Some(best.unwrap_or(u64::MAX))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fabric::{FpgaId, SwitchId};
+    use crate::sim::params::{INTER_SWITCH_LAT, NIC_LAT, OUT_SWITCH_LAT, ROUTER_LAT, SWITCH_LAT};
+    use crate::sim::shard::{ShardGranularity, ShardPlan};
+
+    fn k(c: u8, n: u8) -> GlobalKernelId {
+        GlobalKernelId::new(c, n)
+    }
+
+    const ONE_SWITCH_MIN: u64 =
+        OUT_SWITCH_LAT + 1 + ROUTER_LAT + 1 + NIC_LAT + SWITCH_LAT + NIC_LAT + ROUTER_LAT;
+
+    #[test]
+    fn same_switch_window_is_the_one_switch_hop() {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(1, 1), FpgaId(1));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(0));
+        let ids = [k(0, 1), k(1, 1)];
+        let plan =
+            ShardPlan::build(ShardGranularity::PerFpga, ids.iter().copied(), &f).unwrap();
+        let w = conservative_window(&plan, &f, ids.iter().copied()).unwrap();
+        assert_eq!(w, ONE_SWITCH_MIN);
+        assert_eq!(w, 33, "paper constants: 33-cycle same-switch lookahead");
+    }
+
+    #[test]
+    fn cross_switch_window_includes_eq1_d() {
+        // shards split at an encoder boundary one serial switch hop
+        // apart: the window gains the paper's d = 220 cycles
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(1));
+        f.place(k(1, 1), FpgaId(2));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(0));
+        f.attach(FpgaId(2), SwitchId(1));
+        let ids = [k(0, 1), k(0, 2), k(1, 1)];
+        let plan =
+            ShardPlan::build(ShardGranularity::PerCluster, ids.iter().copied(), &f).unwrap();
+        assert_eq!(plan.n_shards, 2);
+        let w = conservative_window(&plan, &f, ids.iter().copied()).unwrap();
+        assert_eq!(w, ONE_SWITCH_MIN + INTER_SWITCH_LAT);
+    }
+
+    #[test]
+    fn per_fpga_cut_takes_the_cheapest_edge() {
+        // 3 FPGAs, one per shard: the same-switch pair bounds the window
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(0, 2), FpgaId(1));
+        f.place(k(0, 3), FpgaId(2));
+        f.attach(FpgaId(0), SwitchId(0));
+        f.attach(FpgaId(1), SwitchId(0));
+        f.attach(FpgaId(2), SwitchId(5));
+        let ids = [k(0, 1), k(0, 2), k(0, 3)];
+        let plan =
+            ShardPlan::build(ShardGranularity::PerFpga, ids.iter().copied(), &f).unwrap();
+        let w = conservative_window(&plan, &f, ids.iter().copied()).unwrap();
+        assert_eq!(w, ONE_SWITCH_MIN);
+    }
+
+    #[test]
+    fn unattached_fpgas_do_not_constrain() {
+        let mut f = Fabric::new();
+        f.place(k(0, 1), FpgaId(0));
+        f.place(k(1, 1), FpgaId(1));
+        // neither FPGA attached: no deliverable cross-shard path at all
+        let ids = [k(0, 1), k(1, 1)];
+        let plan =
+            ShardPlan::build(ShardGranularity::PerFpga, ids.iter().copied(), &f).unwrap();
+        let w = conservative_window(&plan, &f, ids.iter().copied()).unwrap();
+        assert_eq!(w, u64::MAX, "independent shards get an unbounded window");
+    }
+}

@@ -4,9 +4,15 @@
 //! multiple timed samples, median/mean/p95 reporting, and a `black_box`
 //! to defeat the optimiser. Table-generating benches also use it to time
 //! the end-to-end experiment regeneration.
+//!
+//! [`check_headlines`] backs the `--check` regression gate: committed
+//! BENCH_*.json baselines carry a `headlines` object of speedup ratios,
+//! and a fresh run must stay within a tolerance of each one.
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -140,6 +146,79 @@ impl Bencher {
     }
 }
 
+/// Compare a fresh run's `headlines` object against a committed
+/// baseline's: every baseline headline must be present and reach at
+/// least `baseline * (1 - tolerance)` (headlines are "bigger is better"
+/// ratios — speedups, events/s). Returns the regression descriptions
+/// (empty = pass). Headlines present only in the current run are new
+/// coverage, never a failure.
+pub fn check_headlines(current: &Json, baseline: &Json, tolerance: f64) -> Vec<String> {
+    let mut regressions = Vec::new();
+    let Some(base) = baseline.get("headlines") else {
+        regressions.push("baseline has no `headlines` object".to_string());
+        return regressions;
+    };
+    let cur = current.get("headlines");
+    for key in base.keys() {
+        let want = base.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        if !want.is_finite() {
+            continue;
+        }
+        match cur.and_then(|c| c.get(key)).and_then(Json::as_f64) {
+            None => regressions.push(format!("headline {key:?} missing from the current run")),
+            Some(got) => {
+                let floor = want * (1.0 - tolerance);
+                if got < floor {
+                    regressions.push(format!(
+                        "{key}: {got:.2} < {floor:.2} (baseline {want:.2} - {:.0}%)",
+                        100.0 * tolerance
+                    ));
+                }
+            }
+        }
+    }
+    regressions
+}
+
+/// Shared `--check` front half for the bench CLIs: when `--check` is
+/// set, read the baseline (`--baseline`, defaulting to the out path
+/// itself — call this BEFORE overwriting the trajectory file) and
+/// compare `doc`'s headlines at `--tolerance` (default 0.35). `None`
+/// when `--check` is absent.
+pub fn load_check(
+    args: &crate::util::cli::Args,
+    doc: &Json,
+    out_path: &str,
+) -> anyhow::Result<Option<Vec<String>>> {
+    if !args.bool_or("check", false)? {
+        return Ok(None);
+    }
+    let base_path = args.str_or("baseline", out_path);
+    let text = std::fs::read_to_string(&base_path)
+        .map_err(|e| anyhow::anyhow!("--check: cannot read baseline {base_path}: {e}"))?;
+    let baseline = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("--check: bad baseline JSON: {e:?}"))?;
+    let tol = args.f64_or("tolerance", 0.35)?;
+    Ok(Some(check_headlines(doc, &baseline, tol)))
+}
+
+/// Back half of the `--check` gate: print the outcome and fail when any
+/// headline regressed (callers invoke this AFTER writing the fresh
+/// trajectory, so the regression is recorded either way).
+pub fn report_check(regressions: Option<Vec<String>>) -> anyhow::Result<()> {
+    let Some(regs) = regressions else {
+        return Ok(());
+    };
+    if regs.is_empty() {
+        println!("--check: all baseline headlines hold");
+        return Ok(());
+    }
+    for r in &regs {
+        eprintln!("--check REGRESSION: {r}");
+    }
+    anyhow::bail!("--check: {} headline(s) regressed vs the committed baseline", regs.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +253,25 @@ mod tests {
         let mut b = Bencher::quick();
         let v = b.once("ret", || 42);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn headline_check_flags_regressions_and_misses() {
+        let doc = |pairs: Vec<(&str, f64)>| {
+            Json::obj(vec![(
+                "headlines",
+                Json::obj(pairs.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+            )])
+        };
+        let base = doc(vec![("a_speedup", 3.0), ("b_speedup", 2.0)]);
+        // within tolerance: pass (even with a's dip and an extra key)
+        let ok = doc(vec![("a_speedup", 2.2), ("b_speedup", 2.5), ("new_one", 9.0)]);
+        assert!(check_headlines(&ok, &base, 0.35).is_empty());
+        // a real regression and a missing headline both fail
+        let bad = doc(vec![("a_speedup", 1.0)]);
+        let regs = check_headlines(&bad, &base, 0.35);
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        // no headlines in the baseline at all
+        assert!(!check_headlines(&ok, &Json::obj(vec![]), 0.35).is_empty());
     }
 }

@@ -407,13 +407,26 @@ struct SimFingerprint {
     outputs: Vec<Option<Vec<Vec<i8>>>>,
 }
 
-fn run_fingerprint(
+/// Engine variant under test: the pre-optimization heap engine, the
+/// sequential wheel engine, or the sharded parallel engine at a given
+/// thread count and cut granularity.
+#[derive(Clone, Copy)]
+enum Engine {
+    Reference,
+    Threads(usize, galapagos_llm::sim::ShardGranularity),
+}
+
+fn run_fingerprint_on(
     cfg: &galapagos_llm::eval::testbed::TestbedConfig,
-    reference: bool,
+    engine: Engine,
 ) -> Result<SimFingerprint, String> {
     let mut tb = galapagos_llm::eval::testbed::build_testbed(cfg).map_err(|e| e.to_string())?;
-    if reference {
-        tb.sim.reference_mode();
+    match engine {
+        Engine::Reference => tb.sim.reference_mode(),
+        Engine::Threads(n, g) => {
+            tb.sim.set_threads(n);
+            tb.sim.granularity = g;
+        }
     }
     tb.sim.start();
     tb.sim.run().map_err(|e| e.to_string())?;
@@ -436,6 +449,18 @@ fn run_fingerprint(
         kstats,
         outputs,
     })
+}
+
+fn run_fingerprint(
+    cfg: &galapagos_llm::eval::testbed::TestbedConfig,
+    reference: bool,
+) -> Result<SimFingerprint, String> {
+    let engine = if reference {
+        Engine::Reference
+    } else {
+        Engine::Threads(1, galapagos_llm::sim::ShardGranularity::PerCluster)
+    };
+    run_fingerprint_on(cfg, engine)
 }
 
 #[test]
@@ -508,6 +533,113 @@ fn prop_coalesced_engine_is_bit_exact_functional() {
             opt.outputs[0].as_ref() == Some(&want),
             "simulated encoder output != native reference at m={m}"
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Parallel golden determinism: the sharded conservative-window engine
+// must reproduce the sequential engine's timing fingerprint exactly —
+// random placements, both cut granularities, thread counts {2, 4, 8}.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_parallel_engine_is_trace_identical_timing() {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::ibert::kernels::Mode;
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 6, ..Default::default() }, "parallel-golden-timing", |g| {
+        let m = *g.pick(&[1usize, 2, 7, 24, 48]);
+        let encoders = *g.pick(&[1usize, 2, 3]);
+        let inferences = g.usize_in(1, 3) as u32;
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+        cfg.encoders = encoders;
+        cfg.inferences = inferences;
+        cfg.interval = *g.pick(&[12u64, 100]);
+        cfg.fpgas_per_switch = *g.pick(&[2usize, 6]);
+        // random placements reshape both the shard cut and the lookahead
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 6) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        cfg.placement = Some(slots);
+
+        let seq = run_fingerprint_on(&cfg, Engine::Threads(1, ShardGranularity::PerCluster))?;
+        let variants = [
+            (2usize, ShardGranularity::PerCluster),
+            (4, ShardGranularity::PerFpga),
+            (8, ShardGranularity::PerCluster),
+        ];
+        for &(threads, gran) in &variants {
+            let par = run_fingerprint_on(&cfg, Engine::Threads(threads, gran))?;
+            prop_assert!(
+                par == seq,
+                "parallel engine diverged (m={m}, enc={encoders}, threads={threads}, \
+                 gran={gran:?}): par end={} seq end={}, par probes={:?} seq probes={:?}",
+                par.end_time,
+                seq.end_time,
+                &par.probes[..par.probes.len().min(8)],
+                &seq.probes[..seq.probes.len().min(8)]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_engine_is_bit_exact_functional() {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::config::ModelConfig;
+    use galapagos_llm::ibert::kernels::Mode;
+    use galapagos_llm::ibert::weights::{synthetic_input, ModelParams};
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 4, ..Default::default() }, "parallel-golden-functional", |g| {
+        let mcfg = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 1 };
+        let params =
+            std::sync::Arc::new(ModelParams::synthetic(mcfg, g.usize_in(0, 1 << 30) as u64));
+        let m = *g.pick(&[1usize, 5, 16]);
+        let input = synthetic_input(mcfg.hidden, m, g.usize_in(0, 1 << 30) as u64);
+        let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Functional(params));
+        cfg.input = Some(std::sync::Arc::new(input));
+
+        let seq = run_fingerprint_on(&cfg, Engine::Threads(1, ShardGranularity::PerCluster))?;
+        let par = run_fingerprint_on(&cfg, Engine::Threads(4, ShardGranularity::PerFpga))?;
+        prop_assert!(par == seq, "functional payloads diverged across engines at m={m}");
+        prop_assert!(par.outputs[0].is_some(), "functional run produced no output");
+        Ok(())
+    });
+}
+
+/// Serving schedules through the parallel engine: open-loop requests
+/// with per-request lengths, overlapping in the pipeline, must yield
+/// identical fingerprints at every thread count.
+#[test]
+fn prop_parallel_engine_matches_on_serving_schedules() {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::ibert::kernels::Mode;
+    use galapagos_llm::serve::Request;
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 5, ..Default::default() }, "parallel-golden-serving", |g| {
+        let n_req = g.usize_in(2, 8);
+        let mut t = 0u64;
+        let schedule: Vec<Request> = (0..n_req)
+            .map(|_| {
+                t += g.usize_in(0, 4000) as u64;
+                Request { arrival: t, m: g.usize_in(1, 48) as u32 }
+            })
+            .collect();
+        let mut cfg = TestbedConfig::proof_of_concept(48, Mode::Timing);
+        cfg.encoders = g.usize_in(1, 3);
+        cfg.schedule = Some(std::sync::Arc::new(schedule));
+
+        let seq = run_fingerprint_on(&cfg, Engine::Threads(1, ShardGranularity::PerCluster))?;
+        for &threads in &[2usize, 8] {
+            let eng = Engine::Threads(threads, ShardGranularity::PerCluster);
+            let par = run_fingerprint_on(&cfg, eng)?;
+            prop_assert!(par == seq, "serving schedule diverged at threads={threads}");
+        }
         Ok(())
     });
 }

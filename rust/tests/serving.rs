@@ -196,6 +196,64 @@ fn overload_grows_tail_latency_and_backpressure() {
     assert!(heavy.stages.iter().all(|s| s.occupancy > 0.0 && s.occupancy <= 1.0));
 }
 
+/// The sharded parallel engine's serving contract: the full
+/// serving_report JSON — latencies, percentiles, stage occupancy, FIFO
+/// high-water marks, event counts — is bit-identical at every thread
+/// count (this is also what the CI thread-matrix job diffs).
+#[test]
+fn parallel_serving_reports_are_bit_identical() {
+    let mut cfg = ServeConfig::glue(3, 18, 3_000.0, 11);
+    cfg.check_eq1 = true;
+    cfg.threads = Some(1);
+    let seq = run_serving(&cfg).unwrap();
+    for threads in [2usize, 4, 8] {
+        cfg.threads = Some(threads);
+        let par = run_serving(&cfg).unwrap();
+        assert_eq!(seq.latencies, par.latencies, "latencies diverged at threads={threads}");
+        assert_eq!(
+            seq.to_json().pretty(),
+            par.to_json().pretty(),
+            "serving_report JSON diverged at threads={threads}"
+        );
+    }
+}
+
+/// Shard-boundary burst splitting: a line-rate schedule forms long
+/// intra-FPGA row bursts that split exactly at the encoder boundary —
+/// the cross-shard edge of the parallel engine. Sink arrivals and
+/// per-request completions must match the sequential engine row for row
+/// (and the pre-coalescing reference engine, closing the loop).
+#[test]
+fn shard_boundary_burst_split_is_cycle_exact() {
+    // back-to-back arrivals at line rate: maximal burst formation
+    let schedule: Vec<Request> = (0..6)
+        .map(|i| Request { arrival: i * 100, m: 32 })
+        .collect();
+    let run = |threads: Option<usize>, reference: bool| {
+        let mut cfg = TestbedConfig::proof_of_concept(128, Mode::Timing);
+        cfg.encoders = 2;
+        cfg.schedule = Some(Arc::new(schedule.clone()));
+        cfg.threads = threads;
+        let mut tb = build_testbed(&cfg).unwrap();
+        if reference {
+            tb.sim.reference_mode();
+        }
+        tb.sim.start();
+        tb.sim.run().unwrap();
+        let probes = tb.sim.trace.probe_times(tb.sink_id).unwrap().to_vec();
+        let sink = tb.sink.lock().unwrap();
+        let done: Vec<(u32, u64)> =
+            (0..6).filter_map(|i| sink.arrivals.get(&i).map(|&(p, t)| (p, t))).collect();
+        (probes, done, tb.sim.time)
+    };
+    let seq = run(Some(1), false);
+    let par = run(Some(8), false);
+    let reference = run(Some(1), true);
+    assert_eq!(par, seq, "parallel burst-split diverged from sequential");
+    assert_eq!(reference, seq, "coalesced engines diverged from the reference engine");
+    assert_eq!(seq.0.len(), 6 * 32, "every row of every request reached the sink");
+}
+
 #[test]
 fn squad_traffic_serves_on_the_128_token_build() {
     let mut cfg = ServeConfig::glue(2, 16, 1_500.0, 5);
