@@ -1,0 +1,164 @@
+//! Failover bench: degraded-mode serving scenarios — lossy UDP with and
+//! without reliable transport, and a mid-serving FPGA failure with
+//! recovery re-placement — recorded in BENCH_failover.json (the
+//! perf-smoke CI job uploads the quick run alongside BENCH_hotpath.json
+//! and BENCH_serving.json).
+//!
+//!   cargo bench --bench failover            # full trace
+//!   cargo bench --bench failover -- --quick # CI smoke
+//!   ... -- --check [--tolerance 0.5]        # regression gate
+//!
+//! Headlines: time-to-recover for the §6 failover, the degraded-mode
+//! (outage-window) p99, the reliable-lossy p99, and the completed
+//! fraction of each scenario. The failover scenario uses a compressed
+//! 150k-cycle reconfiguration window so the trace stays bench-sized; the
+//! device's full-bitstream default (~22.5M cycles on an XCZU19EG) is
+//! recorded in the JSON for scale.
+
+use galapagos_llm::eval::testbed::FailureSchedule;
+use galapagos_llm::fpga::resources::Device;
+use galapagos_llm::placer::ReconfigModel;
+use galapagos_llm::serve::{run_serving, ArrivalProcess, ServeConfig};
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::json::Json;
+use galapagos_llm::{cycles_to_us, util::cli::Args, FABRIC_CLOCK_HZ};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_failover.json");
+    let seed = args.u64_or("seed", 7)?;
+    let mut b = Bencher::quick();
+
+    let encoders = if quick { 3 } else { 6 };
+    let requests = if quick { 16 } else { 64 };
+    let mut base = ServeConfig::glue(encoders, requests, 1.0, seed);
+    let (mean_m, capacity) = base.capacity_at_mean()?;
+    let rate = capacity * 0.5;
+    base.traffic.process = ArrivalProcess::Uniform { seqs_per_s: rate };
+    println!("pipeline capacity ~{capacity:.0} seqs/s at m={mean_m}; offering {rate:.0} seqs/s");
+
+    let mut cases: Vec<Json> = Vec::new();
+    let mut headlines: Vec<(String, f64)> = Vec::new();
+    let record = |name: &str,
+                  cases: &mut Vec<Json>,
+                  report: &galapagos_llm::serve::ServingReport,
+                  wall_ms: f64| {
+        println!(
+            "  {name}: {}/{} completed   p50 {:>8.1} us  p99 {:>8.1} us   \
+             {} dropped / {} retransmitted",
+            report.completed,
+            report.requests,
+            cycles_to_us(report.latency.p50),
+            cycles_to_us(report.latency.p99),
+            report.dropped,
+            report.retransmits,
+        );
+        let mut case = match report.to_json() {
+            Json::Obj(kv) => kv,
+            _ => unreachable!("report serializes to an object"),
+        };
+        case.insert(0, ("scenario".into(), Json::Str(name.into())));
+        case.push(("wall_ms".into(), Json::Num(wall_ms)));
+        cases.push(Json::Obj(case));
+    };
+
+    // --- clean baseline (the healthy-pipeline p99 the others compare to)
+    {
+        let t0 = std::time::Instant::now();
+        let r = b.once("clean baseline", || run_serving(&base))?;
+        record("clean baseline", &mut cases, &r, t0.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(r.completed == r.requests, "clean run must complete everything");
+        headlines.push(("clean_p99_us".into(), cycles_to_us(r.latency.p99)));
+    }
+
+    // --- 2% loss, unreliable: the paper's raw-UDP posture under stress
+    {
+        let mut cfg = base.clone();
+        cfg.drop_probability = 0.02;
+        let t0 = std::time::Instant::now();
+        let r = b.once("2% loss, unreliable", || run_serving(&cfg))?;
+        record("2% loss unreliable", &mut cases, &r, t0.elapsed().as_secs_f64() * 1e3);
+        headlines.push((
+            "lossy_unreliable_completed_fraction".into(),
+            r.completed as f64 / r.requests.max(1) as f64,
+        ));
+    }
+
+    // --- 2% loss + reliable transport: 100% completion, tail pays retries
+    {
+        let mut cfg = base.clone();
+        cfg.drop_probability = 0.02;
+        cfg.reliable = true;
+        let t0 = std::time::Instant::now();
+        let r = b.once("2% loss, reliable", || run_serving(&cfg))?;
+        record("2% loss reliable", &mut cases, &r, t0.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(
+            r.completed == r.requests,
+            "reliable transport must complete every inference ({}/{})",
+            r.completed,
+            r.requests
+        );
+        headlines.push(("lossy_reliable_p99_us".into(), cycles_to_us(r.latency.p99)));
+    }
+
+    // --- mid-serving FPGA failure + recovery re-placement (§6)
+    {
+        let mut cfg = base.clone();
+        // fail an attention-stage FPGA of encoder 0 a third of the way in
+        let expected_makespan =
+            (requests as f64 * FABRIC_CLOCK_HZ as f64 / rate).round() as u64;
+        let reconfig = 150_000u64;
+        cfg.fail = Some(FailureSchedule {
+            fpga: 2,
+            at_cycle: expected_makespan / 3,
+            recovery_cycles: Some(reconfig),
+        });
+        let t0 = std::time::Instant::now();
+        let r = b.once("failover", || run_serving(&cfg))?;
+        record("failover", &mut cases, &r, t0.elapsed().as_secs_f64() * 1e3);
+        let f = r.fault.clone().expect("fault section present");
+        println!(
+            "    time-to-recover {:.2} ms, {} kernels re-placed{}, {} pkts buffered, \
+             {} requests lost",
+            cycles_to_us(f.time_to_recover_cycles()) / 1e3,
+            f.moved_kernels,
+            if f.degraded_placement { " (degraded)" } else { "" },
+            f.held_packets,
+            f.incomplete_requests,
+        );
+        headlines.push((
+            "time_to_recover_us".into(),
+            cycles_to_us(f.time_to_recover_cycles()),
+        ));
+        let degraded_p99 = f.recovery_window.map(|w| w.p99).unwrap_or(0);
+        headlines.push(("failover_degraded_p99_us".into(), cycles_to_us(degraded_p99)));
+        headlines.push((
+            "failover_completed_fraction".into(),
+            r.completed as f64 / r.requests.max(1) as f64,
+        ));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_failover/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("encoders", Json::Num(encoders as f64)),
+        (
+            "reconfig_model_default_cycles",
+            Json::Num(ReconfigModel::for_device(Device::Xczu19eg).cycles() as f64),
+        ),
+        ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::Obj(headlines.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ]);
+
+    // --check: read any committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}

@@ -225,6 +225,8 @@ impl BuildDescription {
             placement: None,
             schedule: None,
             threads: None,
+            net: Default::default(),
+            fail: None,
         }
     }
 }

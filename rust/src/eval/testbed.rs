@@ -34,6 +34,49 @@ pub const EVAL_CLUSTER: u8 = 200;
 pub const EVAL_SOURCE: u8 = 1;
 pub const EVAL_SINK: u8 = 2;
 
+/// Transport behavior of the modeled network (§2.1: Galapagos runs over
+/// raw UDP) plus the seed its loss pattern derives from. The default is
+/// the lossless happy path ("works well-enough in our testbed").
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NetworkConfig {
+    /// per-copy loss probability on inter-FPGA hops (0 = lossless)
+    pub drop_probability: f64,
+    /// ack/retransmit reliable transport: lossy runs still deliver every
+    /// packet exactly once, each retry charged to the sender's NIC
+    pub reliable: bool,
+    /// run seed the drop pattern derives from — lossy runs are
+    /// seed-deterministic, and different seeds drop differently
+    pub seed: u64,
+}
+
+/// Kill one FPGA mid-run (§6): its whole cluster goes down for the
+/// reconfiguration window while inbound packets buffer at the cluster
+/// input; recovery re-places the cluster's kernels off the failed board
+/// via `placer::recover` and drains the buffer in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureSchedule {
+    /// global FPGA index to kill (must host encoder-cluster kernels; the
+    /// evaluation FPGA cannot fail — it is the measurement harness)
+    pub fpga: usize,
+    pub at_cycle: u64,
+    /// outage length; None = the device's full-bitstream default from
+    /// [`crate::placer::recover::ReconfigModel`] (~22.5M cycles on an
+    /// XCZU19EG)
+    pub recovery_cycles: Option<u64>,
+}
+
+/// What `build_testbed` pre-computed for a scheduled failure (the serve
+/// report's fault section reads this alongside `Sim::failure_report`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedRecovery {
+    pub fpga: usize,
+    pub cluster: u8,
+    pub moved_kernels: usize,
+    pub reconfig_cycles: u64,
+    /// the survivors had to overcommit their budgets (degraded mode)
+    pub degraded: bool,
+}
+
 /// Testbed configuration.
 #[derive(Clone)]
 pub struct TestbedConfig {
@@ -66,6 +109,11 @@ pub struct TestbedConfig {
     /// sequential engine). Results are thread-count-invariant by
     /// contract — this only changes wall-clock.
     pub threads: Option<usize>,
+    /// lossy-UDP / reliable-transport behavior of the fabric
+    pub net: NetworkConfig,
+    /// optional §6 failure injection (forces the sequential engine, like
+    /// lossy mode — results stay thread-count-invariant via the fallback)
+    pub fail: Option<FailureSchedule>,
 }
 
 impl TestbedConfig {
@@ -82,6 +130,8 @@ impl TestbedConfig {
             placement: None,
             schedule: None,
             threads: None,
+            net: NetworkConfig::default(),
+            fail: None,
         }
     }
 }
@@ -114,6 +164,8 @@ pub struct EncoderTestbed {
     pub sink: Arc<Mutex<SinkData>>,
     pub sink_id: GlobalKernelId,
     pub spec: PlatformSpec,
+    /// the recovery `build_testbed` planned for `TestbedConfig::fail`
+    pub recovery: Option<PlannedRecovery>,
 }
 
 /// Assemble the platform: `encoders` chained encoder clusters + the
@@ -124,6 +176,10 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         "encoder count must be in 1..{EVAL_CLUSTER} (cluster id space)"
     );
     anyhow::ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
+    anyhow::ensure!(
+        (0.0..1.0).contains(&cfg.net.drop_probability),
+        "drop probability must be in [0, 1) — at 1.0 a reliable link could never deliver"
+    );
     let (hidden, ffn, max_seq) = match &cfg.mode {
         Mode::Functional(p) => (p.cfg.hidden, p.cfg.ffn, p.cfg.max_seq),
         Mode::Timing => (768, 3072, 128),
@@ -262,7 +318,103 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
     }
     sim.trace.add_probe(sink_global);
 
-    Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec })
+    // §2.1 transport: the drop pattern derives from the run seed, so
+    // lossy runs are seed-deterministic (and differ across seeds)
+    sim.fabric.drop_probability = cfg.net.drop_probability;
+    sim.fabric.reliable = cfg.net.reliable;
+    sim.fabric.seed_drop_rng(cfg.net.seed);
+
+    let recovery = match cfg.fail {
+        None => None,
+        Some(f) => Some(plan_failure(
+            cfg,
+            &mut sim,
+            &spec,
+            &slots,
+            slots_per_encoder,
+            (hidden, ffn, max_seq),
+            f,
+        )?),
+    };
+
+    Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec, recovery })
+}
+
+/// Turn a [`FailureSchedule`] into an engine [`crate::sim::engine::FailurePlan`]:
+/// identify the failed cluster, run the placer's incremental re-place to
+/// get the recovery mapping (excluding the failed slot, minimally
+/// perturbing the survivors), and arm the engine.
+#[allow(clippy::too_many_arguments)]
+fn plan_failure(
+    cfg: &TestbedConfig,
+    sim: &mut Sim,
+    spec: &PlatformSpec,
+    slots: &[usize],
+    slots_per_encoder: usize,
+    // build_testbed's already-resolved (hidden, ffn, max_seq) — the
+    // recovery must plan against the exact shape the testbed runs
+    (hidden, ffn, max_seq): (usize, usize, usize),
+    f: FailureSchedule,
+) -> Result<PlannedRecovery> {
+    use crate::fpga::resources::Device;
+    use crate::placer::{self, recover::ReconfigModel, Fleet, ModelShape, Placement};
+
+    let cluster = spec
+        .cluster_of(FpgaId(f.fpga))
+        .ok_or_else(|| anyhow::anyhow!("--fail: FPGA {} hosts no kernels", f.fpga))?;
+    anyhow::ensure!(
+        (cluster as usize) < cfg.encoders,
+        "--fail: FPGA {} belongs to the evaluation cluster, which is the measurement \
+         harness and cannot fail",
+        f.fpga
+    );
+    let base = slots_per_encoder * cluster as usize;
+    let failed_slot = f.fpga - base;
+
+    let shape = ModelShape {
+        hidden,
+        ffn,
+        heads: crate::ibert::graph::HEADS as usize,
+        max_seq,
+        ffn_split: 1,
+    };
+    let graph = placer::KernelGraph::encoder(shape, cfg.pe)?;
+    anyhow::ensure!(
+        graph.n_kernels() == slots.len(),
+        "failure recovery needs a paper-shaped encoder graph ({} kernels, placement has {})",
+        graph.n_kernels(),
+        slots.len()
+    );
+    let device = Device::Xczu19eg; // the testbed's Sidewinder fleet
+    let fleet = Fleet::homogeneous(device, slots_per_encoder, cfg.fpgas_per_switch);
+    let rec = placer::recover::replace_after_failure(
+        &graph,
+        &Placement { slot_of: slots.to_vec() },
+        &fleet,
+        failed_slot,
+        cfg.m.clamp(1, max_seq),
+    )?;
+
+    let reconfig_cycles =
+        f.recovery_cycles.unwrap_or_else(|| ReconfigModel::for_device(device).cycles());
+    let remap = rec
+        .moved
+        .iter()
+        .map(|mv| (GlobalKernelId::new(cluster, mv.kernel), FpgaId(base + mv.to)))
+        .collect();
+    sim.schedule_failure(crate::sim::engine::FailurePlan {
+        fpga: FpgaId(f.fpga),
+        at: f.at_cycle,
+        recovery_cycles: reconfig_cycles,
+        remap,
+    })?;
+    Ok(PlannedRecovery {
+        fpga: f.fpga,
+        cluster,
+        moved_kernels: rec.moved.len(),
+        reconfig_cycles,
+        degraded: rec.degraded,
+    })
 }
 
 /// Measured result of one testbed run, decomposed the way §8.2.2 does.

@@ -123,6 +123,17 @@ impl Device {
             Device::Xcvc1902 => 3, // DSP58 INT8 packing
         }
     }
+
+    /// Full-device configuration image size — what the §6 recovery path
+    /// must stream to bring a replacement region up after a failure.
+    /// XCZU19EG: ~45 MB bitstream; XCVC1902: ~82 MB PDI (Versal images
+    /// carry NoC/AIE configuration on top of the fabric frames).
+    pub fn bitstream_bytes(&self) -> u64 {
+        match self {
+            Device::Xczu19eg => 45 << 20,
+            Device::Xcvc1902 => 82 << 20,
+        }
+    }
 }
 
 #[cfg(test)]

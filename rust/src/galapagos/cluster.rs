@@ -52,6 +52,16 @@ impl ClusterSpec {
         self.kernels.iter().find(|k| k.id == id)
     }
 
+    /// Capacity of the §6 **cluster input buffer**: the gateway's input
+    /// FIFO, where packets addressed to this cluster wait while the
+    /// cluster is being re-configured after an FPGA failure. The paper's
+    /// sizing rule ("one input buffer per cluster", large enough for a
+    /// full matrix) is what bounds how long an outage the cluster can
+    /// absorb without loss at a given inbound rate.
+    pub fn input_buffer_bytes(&self) -> usize {
+        self.kernel(0).map_or(0, |g| g.fifo_bytes)
+    }
+
     /// Distinct FPGAs hosting this cluster's physical kernels, ascending
     /// (virtual kernels live inside the gateway and are skipped).
     pub fn fpgas(&self) -> Vec<FpgaId> {
@@ -244,6 +254,20 @@ impl PlatformSpec {
     pub fn total_kernels(&self) -> usize {
         self.clusters.iter().map(|c| c.kernels.len()).sum()
     }
+
+    /// The cluster whose kernels an FPGA hosts (None for an FPGA hosting
+    /// nothing). Well-defined because validation enforces the paper's
+    /// deployment rule that clusters — the unit of reconfiguration, §6 —
+    /// never share FPGAs; this is what maps a failed FPGA to the cluster
+    /// that must be re-configured.
+    pub fn cluster_of(&self, fpga: FpgaId) -> Option<u8> {
+        self.clusters.iter().find_map(|c| {
+            c.kernels
+                .iter()
+                .any(|k| k.ktype != KernelType::Virtual && k.fpga == fpga)
+                .then_some(c.id)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +309,15 @@ mod tests {
     fn cluster_fpgas_are_distinct_and_sorted() {
         let p = one_cluster();
         assert_eq!(p.clusters[0].fpgas(), vec![FpgaId(0), FpgaId(1)]);
+    }
+
+    #[test]
+    fn cluster_of_fpga_and_input_buffer() {
+        let p = one_cluster();
+        assert_eq!(p.cluster_of(FpgaId(0)), Some(0));
+        assert_eq!(p.cluster_of(FpgaId(1)), Some(0));
+        assert_eq!(p.cluster_of(FpgaId(9)), None);
+        assert_eq!(p.clusters[0].input_buffer_bytes(), 1024);
     }
 
     #[test]

@@ -44,6 +44,11 @@ COMMANDS:
   simulate  [--m 128] [--encoders 1] [--inferences 1] [--functional] [--interval 12]
             [--reference]   (pre-optimization engine: heap queue, no coalescing)
             [--shards cluster|fpga]   (parallel-engine cut granularity)
+            [--drop 0.02] [--reliable] [--net-seed 7]   (lossy UDP; --reliable
+            adds the ack/retransmit layer: every packet delivered exactly once)
+            [--fail <fpga>@<cycle>] [--recovery-cycles N]   (kill an FPGA at a
+            cycle; its cluster buffers inbound traffic, recovers via the
+            placer's incremental re-place, then drains in order — §6)
   bench     [--quick] [--out BENCH_hotpath.json]
             [--check [--baseline BENCH_hotpath.json] [--tolerance 0.35]]
             hot-path suite: DES engine (reference vs coalesced vs sharded
@@ -58,6 +63,11 @@ COMMANDS:
   serve     [--encoders 6] [--requests 200] [--workload glue|mrpc|squad]
             [--arrivals poisson|uniform] [--rate <seqs/s> | --util 0.7]
             [--seed 7] [--interval 12] [--fpgas-per-switch 6] [--no-eq1]
+            [--drop 0.02] [--reliable]   (lossy serving; reliable transport
+            completes 100% of inferences and reports drop/retransmit counts)
+            [--fail <fpga>@<cycle>] [--recovery-cycles N]   (mid-serving
+            failover: serving_report/v2 gains the fault section with
+            time-to-recover and outage-window percentiles)
             [--place [--config configs/ibert_poc.json]]  (PR 1 placer placement)
             [--out report.json] [--quick]   (CI: writes BENCH_serving.json)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
@@ -121,6 +131,22 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--fail <fpga>@<cycle>` (+ optional `--recovery-cycles`) into a
+/// testbed failure schedule.
+fn parse_fail(args: &Args) -> Result<Option<galapagos_llm::eval::testbed::FailureSchedule>> {
+    let Some(spec) = args.str_opt("fail") else { return Ok(None) };
+    let (fpga, at) = spec
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("--fail expects <fpga>@<cycle>, got {spec:?}"))?;
+    let recovery_cycles =
+        if args.has("recovery-cycles") { Some(args.u64_or("recovery-cycles", 0)?) } else { None };
+    Ok(Some(galapagos_llm::eval::testbed::FailureSchedule {
+        fpga: fpga.parse().map_err(|_| anyhow::anyhow!("--fail: bad FPGA index {fpga:?}"))?,
+        at_cycle: at.parse().map_err(|_| anyhow::anyhow!("--fail: bad cycle {at:?}"))?,
+        recovery_cycles,
+    }))
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let m = args.usize_or("m", 128)?;
     let encoders = args.usize_or("encoders", 1)?;
@@ -143,6 +169,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.inferences = inferences;
     cfg.interval = interval;
     cfg.input = input;
+    cfg.net.drop_probability = args.f64_or("drop", 0.0)?;
+    cfg.net.reliable = args.bool_or("reliable", false)?;
+    cfg.net.seed = args.u64_or("net-seed", 0)?;
+    cfg.fail = parse_fail(args)?;
     let mut tb = build_testbed(&cfg)?;
     tb.sim.granularity = match args.str_or("shards", "cluster").as_str() {
         "cluster" => galapagos_llm::sim::ShardGranularity::PerCluster,
@@ -177,6 +207,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         wall.as_secs_f64() * 1e3,
         tb.sim.trace.events_processed as f64 / wall.as_secs_f64() / 1e6
     );
+    let fs = &tb.sim.fabric.stats;
+    if fs.dropped > 0 || fs.retransmits > 0 {
+        println!(
+            "transport: {} copies dropped, {} retransmitted ({})",
+            fs.dropped,
+            fs.retransmits,
+            if cfg.net.reliable { "reliable: delivered exactly once" } else { "unreliable" }
+        );
+    }
+    if let (Some(pr), Some(fr)) = (tb.recovery, tb.sim.failure_report()) {
+        println!(
+            "fault: FPGA {} (cluster {}) down at {} for {} cycles ({:.2} ms); {} kernels \
+             re-placed{}; {} packets buffered, {} events lost, recovered: {}",
+            pr.fpga,
+            pr.cluster,
+            fr.fail_cycle,
+            pr.reconfig_cycles,
+            cycles_to_us(pr.reconfig_cycles) / 1e3,
+            pr.moved_kernels,
+            if pr.degraded { " (degraded: survivors overcommitted)" } else { "" },
+            fr.held_packets,
+            fr.lost_events,
+            fr.recovered
+        );
+    }
     if inferences > 1 {
         let sink = tb.sink.lock().unwrap();
         let mut done: Vec<u64> =
@@ -563,6 +618,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     cfg.interval = args.u64_or("interval", 12)?;
     cfg.fpgas_per_switch = args.usize_or("fpgas-per-switch", 6)?;
     cfg.check_eq1 = !args.bool_or("no-eq1", false)?;
+    cfg.drop_probability = args.f64_or("drop", 0.0)?;
+    cfg.reliable = args.bool_or("reliable", false)?;
+    cfg.fail = parse_fail(args)?;
 
     if args.bool_or("place", false)? {
         // per-encoder placement from the PR 1 placer (possibly over the

@@ -23,11 +23,13 @@
 //! one switch) the search reproduces the Fig. 14 mapping exactly.
 
 pub mod cost;
+pub mod recover;
 pub mod report;
 pub mod search;
 pub mod validate;
 
 pub use cost::LatencyEstimate;
+pub use recover::{replace_after_failure, ReconfigModel, RecoverySolution};
 pub use search::{place, PlacementSolution, SearchParams};
 
 use anyhow::{bail, ensure, Result};

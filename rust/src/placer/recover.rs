@@ -1,0 +1,258 @@
+//! Incremental re-placement after an FPGA failure — the recovery half of
+//! the §6 operational story.
+//!
+//! When one FPGA of a cluster dies, §6 says only that cluster is
+//! re-configured. The full placer (`search::place`) would happily redraw
+//! the whole mapping, but reconfiguring FPGAs that did not fail would
+//! wipe their in-flight state and widen the blast radius — so recovery
+//! uses a *minimal-perturbation* mode instead: every kernel on a
+//! surviving FPGA stays exactly where it is, and only the displaced
+//! kernels (those that lived on the failed slot) are re-packed onto the
+//! survivors, cheapest-latency-first under the cost model.
+//!
+//! A fleet that was sized for the full mapping often cannot absorb a
+//! whole FPGA's worth of kernels under the utilisation cap; recovery
+//! then degrades gracefully instead of refusing: first it relaxes the
+//! cap to the full device budget, and as a last resort it overcommits
+//! the least-loaded slot and flags the solution `degraded` — the
+//! platform keeps serving at reduced headroom until the failed board is
+//! replaced, and the serving report says so honestly.
+//!
+//! [`ReconfigModel`] supplies the recovery latency: the §6 outage is the
+//! time to stream a full configuration image onto the replacement
+//! region, during which inbound packets buffer in the cluster input
+//! buffer (see `sim::engine::FailurePlan`).
+
+use anyhow::{ensure, Result};
+
+use super::cost::{estimate, LatencyEstimate};
+use super::{Fleet, KernelGraph, Placement};
+use crate::fpga::resources::{Device, ResourceUsage};
+use crate::FABRIC_CLOCK_HZ;
+
+/// Reconfiguration-latency model: a full configuration image streamed at
+/// the configuration port's sustained rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigModel {
+    pub bitstream_bytes: u64,
+    /// sustained configuration bandwidth in MB/s (ICAP over PCIe-class
+    /// delivery; JTAG would be ~1000x slower)
+    pub config_mbps: u64,
+}
+
+impl ReconfigModel {
+    pub fn for_device(dev: Device) -> ReconfigModel {
+        ReconfigModel { bitstream_bytes: dev.bitstream_bytes(), config_mbps: 400 }
+    }
+
+    /// Outage duration in fabric cycles (never 0 — the engine requires a
+    /// positive recovery window).
+    pub fn cycles(&self) -> u64 {
+        let secs = self.bitstream_bytes as f64 / (self.config_mbps.max(1) as f64 * 1e6);
+        ((secs * FABRIC_CLOCK_HZ as f64).round() as u64).max(1)
+    }
+}
+
+/// One kernel the recovery moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Move {
+    pub kernel: u8,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// A recovery placement for one failed slot.
+#[derive(Debug, Clone)]
+pub struct RecoverySolution {
+    /// the full post-recovery mapping (surviving kernels untouched)
+    pub placement: Placement,
+    /// displaced kernels and where they went, in placement order
+    pub moved: Vec<Move>,
+    /// true when the survivors could not absorb the displaced kernels
+    /// within their full device budgets — the fleet is overcommitted
+    /// until the failed board is replaced
+    pub degraded: bool,
+    /// cost-model prediction for the degraded mapping
+    pub predicted: LatencyEstimate,
+}
+
+/// Re-place the kernels of `failed_slot` onto the surviving slots of
+/// `fleet`, leaving every other kernel of `base` untouched. `m` is the
+/// sequence length the cost model scores candidate targets at.
+pub fn replace_after_failure(
+    graph: &KernelGraph,
+    base: &Placement,
+    fleet: &Fleet,
+    failed_slot: usize,
+    m: usize,
+) -> Result<RecoverySolution> {
+    fleet.validate()?;
+    ensure!(failed_slot < fleet.n_slots(), "failed slot {failed_slot} outside the fleet");
+    ensure!(
+        base.slot_of.len() == graph.n_kernels(),
+        "placement covers {} kernels, graph has {}",
+        base.slot_of.len(),
+        graph.n_kernels()
+    );
+    ensure!(fleet.n_slots() >= 2, "cannot recover: the fleet has no surviving FPGA");
+    let m = m.clamp(1, graph.shape.max_seq);
+
+    // survivors' load with the displaced kernels removed
+    let n_slots = fleet.n_slots();
+    let mut used: Vec<ResourceUsage> = (0..n_slots).map(|s| fleet.base_usage(s)).collect();
+    for (k, &s) in base.slot_of.iter().enumerate() {
+        if s != failed_slot {
+            used[s] += graph.usage(k as u8, fleet.device(s));
+        }
+    }
+
+    let displaced: Vec<u8> = graph
+        .placement_order()
+        .iter()
+        .copied()
+        .filter(|&k| base.slot_of[k as usize] == failed_slot)
+        .collect();
+    ensure!(!displaced.is_empty(), "slot {failed_slot} hosts no kernels of this placement");
+
+    let mut placement = base.clone();
+    let mut moved = Vec::with_capacity(displaced.len());
+    let mut degraded = false;
+
+    for &k in &displaced {
+        let need = |s: usize| used[s] + graph.usage(k, fleet.device(s));
+        // candidate tiers: capped budget, then full budget, then (last
+        // resort) the least-overcommitted slot — never the failed one
+        let survivors = (0..n_slots).filter(|&s| s != failed_slot);
+        let capped: Vec<usize> =
+            survivors.clone().filter(|&s| need(s).fits(&fleet.capped_budget(s))).collect();
+        let full: Vec<usize> =
+            survivors.clone().filter(|&s| need(s).fits(&fleet.budget(s))).collect();
+        let (cands, tier_degraded) = if !capped.is_empty() {
+            (capped, false)
+        } else if !full.is_empty() {
+            (full, false)
+        } else {
+            // overcommit: pick the slot that ends up least utilised
+            let s = survivors
+                .min_by(|&a, &b| {
+                    let ua = need(a).max_utilisation(&fleet.budget(a));
+                    let ub = need(b).max_utilisation(&fleet.budget(b));
+                    ua.partial_cmp(&ub).expect("utilisations are finite")
+                })
+                .expect("fleet has at least one survivor");
+            (vec![s], true)
+        };
+        degraded |= tier_degraded;
+
+        // among the feasible targets, take the cheapest by predicted T
+        // (the earliest slot on ties — deterministic)
+        let mut best: Option<(usize, u64)> = None;
+        for &s in &cands {
+            placement.slot_of[k as usize] = s;
+            if let Ok(e) = estimate(graph, &placement, fleet, m, 12) {
+                if best.is_none_or(|(_, c)| e.t < c) {
+                    best = Some((s, e.t));
+                }
+            }
+        }
+        let (to, _) = best.unwrap_or((cands[0], 0));
+        placement.slot_of[k as usize] = to;
+        used[to] += graph.usage(k, fleet.device(to));
+        moved.push(Move { kernel: k, from: failed_slot, to });
+    }
+
+    let predicted = estimate(graph, &placement, fleet, m, 12)?;
+    Ok(RecoverySolution { placement, moved, degraded, predicted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::Device;
+    use crate::ibert::timing::PeConfig;
+    use crate::placer::{ModelShape, SearchParams};
+
+    fn paper_graph() -> KernelGraph {
+        KernelGraph::encoder(ModelShape::ibert_base(), PeConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn reconfig_model_is_in_the_hundred_ms_range() {
+        let c = ReconfigModel::for_device(Device::Xczu19eg).cycles();
+        let ms = c as f64 / FABRIC_CLOCK_HZ as f64 * 1e3;
+        assert!((50.0..500.0).contains(&ms), "XCZU19EG reconfiguration ~= {ms:.0} ms");
+        assert!(
+            ReconfigModel::for_device(Device::Xcvc1902).cycles() > c,
+            "the larger Versal image takes longer to load"
+        );
+        assert!(ReconfigModel { bitstream_bytes: 0, config_mbps: 400 }.cycles() >= 1);
+    }
+
+    #[test]
+    fn recovery_moves_only_the_displaced_kernels() {
+        let g = paper_graph();
+        let base = Placement::fig14();
+        let fleet = Fleet::paper();
+        let failed = 2; // the attention FPGA
+        let rec = replace_after_failure(&g, &base, &fleet, failed, 128).unwrap();
+        for (k, (&old, &new)) in
+            base.slot_of.iter().zip(rec.placement.slot_of.iter()).enumerate()
+        {
+            if old == failed {
+                assert_ne!(new, failed, "kernel {k} must leave the failed slot");
+            } else {
+                assert_eq!(new, old, "surviving kernel {k} must not move (§6 isolation)");
+            }
+        }
+        assert_eq!(
+            rec.moved.len(),
+            base.slot_of.iter().filter(|&&s| s == failed).count(),
+            "every displaced kernel accounted for"
+        );
+        assert!(rec.moved.iter().all(|m| m.from == failed && m.to != failed));
+    }
+
+    #[test]
+    fn paper_fleet_recovery_is_degraded_but_complete() {
+        // six XCZU19EG were sized for six stages; losing one forces the
+        // survivors to overcommit — recovery must still produce a full
+        // mapping and say so via the degraded flag rather than refuse
+        let g = paper_graph();
+        let base = Placement::fig14();
+        let fleet = Fleet::paper();
+        for failed in 0..6 {
+            let rec = replace_after_failure(&g, &base, &fleet, failed, 128).unwrap();
+            assert!(rec.placement.slot_of.iter().all(|&s| s != failed));
+            assert!(rec.predicted.t > 0);
+        }
+    }
+
+    #[test]
+    fn roomy_fleet_recovers_without_degradation() {
+        // with spare FPGAs the displaced kernels fit under the cap
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 9, 6);
+        let sol = crate::placer::place(
+            &ModelShape::ibert_base(),
+            &PeConfig::default(),
+            &fleet,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        let failed = sol.placement.slot_of[crate::ibert::graph::ids::ATTN_BASE as usize];
+        let rec =
+            replace_after_failure(&sol.graph, &sol.placement, &fleet, failed, 128).unwrap();
+        assert!(!rec.degraded, "a 9-slot fleet has room for one FPGA's kernels");
+        crate::placer::validate::check(&sol.graph, &rec.placement, &fleet).unwrap();
+    }
+
+    #[test]
+    fn rejects_nonsense_inputs() {
+        let g = paper_graph();
+        let base = Placement::fig14();
+        let fleet = Fleet::paper();
+        assert!(replace_after_failure(&g, &base, &fleet, 99, 128).is_err());
+        let one = Fleet::homogeneous(Device::Xczu19eg, 1, 6);
+        let tiny = Placement { slot_of: vec![0; g.n_kernels()] };
+        assert!(replace_after_failure(&g, &tiny, &one, 0, 128).is_err());
+    }
+}

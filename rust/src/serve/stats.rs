@@ -35,6 +35,13 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
+    /// The all-zero summary of a run in which nothing completed — what a
+    /// fully degraded (lossy-unreliable or fault-hit) serving run reports
+    /// instead of erroring out.
+    pub fn empty() -> LatencySummary {
+        LatencySummary { p50: 0, p95: 0, p99: 0, mean: 0.0, max: 0 }
+    }
+
     pub fn from_unsorted(mut v: Vec<u64>) -> Option<LatencySummary> {
         if v.is_empty() {
             return None;
@@ -128,6 +135,79 @@ impl Eq1Check {
     }
 }
 
+/// The fault section of `serving_report/v2`: what a §6 failure injected
+/// mid-serving did to the run, and how the platform recovered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultReport {
+    /// failed FPGA and the cluster that had to be re-configured
+    pub fpga: usize,
+    pub cluster: u8,
+    pub fail_cycle: u64,
+    /// the cluster came back (and its input buffer drained) here
+    pub recover_cycle: u64,
+    /// modeled reconfiguration latency (the outage length)
+    pub reconfig_cycles: u64,
+    /// kernels the incremental re-place moved off the failed board
+    pub moved_kernels: usize,
+    /// survivors overcommitted their budgets (serve at reduced headroom
+    /// until the board is replaced)
+    pub degraded_placement: bool,
+    /// false when the run ended before the failure window was reached —
+    /// the remaining fields then describe an outage that never happened
+    pub recovered: bool,
+    /// capacity of the failed cluster's input buffer (its gateway FIFO —
+    /// the §6 "one input buffer per cluster")
+    pub input_buffer_bytes: usize,
+    /// worst observed occupancy of that buffer as a fraction of its
+    /// capacity (> 1: the outage backlog overflowed the §8.2.1 sizing)
+    pub input_buffer_peak: f64,
+    /// packets buffered in the cluster input buffer during the outage
+    pub held_packets: u64,
+    /// intra-cluster events lost to the reconfiguration
+    pub lost_events: u64,
+    /// requests that never completed. With a failure injected and zero
+    /// loss these are exactly the requests whose rows were in flight
+    /// inside the failed cluster; when unreliable loss is ALSO enabled,
+    /// loss-stalled requests count here too (the run cannot attribute
+    /// them individually)
+    pub incomplete_requests: usize,
+    /// latency percentiles of completed requests that *arrived during
+    /// the outage* — the degraded-mode tail a user saw while the cluster
+    /// was down and draining (None: no request arrived in the window)
+    pub recovery_window: Option<LatencySummary>,
+}
+
+impl FaultReport {
+    /// Service-outage duration: failure to cluster-back-up.
+    pub fn time_to_recover_cycles(&self) -> u64 {
+        self.recover_cycle - self.fail_cycle
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fpga", Json::Num(self.fpga as f64)),
+            ("cluster", Json::Num(self.cluster as f64)),
+            ("fail_cycle", Json::Num(self.fail_cycle as f64)),
+            ("recover_cycle", Json::Num(self.recover_cycle as f64)),
+            ("reconfig_cycles", Json::Num(self.reconfig_cycles as f64)),
+            ("time_to_recover_cycles", Json::Num(self.time_to_recover_cycles() as f64)),
+            ("time_to_recover_us", Json::Num(cycles_to_us(self.time_to_recover_cycles()))),
+            ("moved_kernels", Json::Num(self.moved_kernels as f64)),
+            ("degraded_placement", Json::Bool(self.degraded_placement)),
+            ("recovered", Json::Bool(self.recovered)),
+            ("input_buffer_bytes", Json::Num(self.input_buffer_bytes as f64)),
+            ("input_buffer_peak", Json::Num(self.input_buffer_peak)),
+            ("held_packets", Json::Num(self.held_packets as f64)),
+            ("lost_events", Json::Num(self.lost_events as f64)),
+            ("incomplete_requests", Json::Num(self.incomplete_requests as f64)),
+            (
+                "recovery_window",
+                self.recovery_window.map(|w| w.to_json()).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
 /// Everything one serving run produced.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -139,7 +219,10 @@ pub struct ServingReport {
     pub requests: usize,
     /// requests whose full output matrix reached the sink
     pub completed: usize,
+    /// tokens offered by the schedule (completed or not)
     pub total_tokens: u64,
+    /// tokens of the requests that actually completed
+    pub completed_tokens: u64,
     /// first scheduled arrival to last completion
     pub makespan_cycles: u64,
     pub latency: LatencySummary,
@@ -148,31 +231,50 @@ pub struct ServingReport {
     pub latencies: Vec<u64>,
     pub stages: Vec<StageReport>,
     pub eq1: Option<Eq1Check>,
+    /// wire copies the lossy network ate (0 on a clean run)
+    pub dropped: u64,
+    /// copies the reliable transport re-sent (== dropped when reliable)
+    pub retransmits: u64,
+    /// §6 failure outcome (None: no failure was injected)
+    pub fault: Option<FaultReport>,
     /// DES events the run took (simulator cost, not model time)
     pub events: u64,
 }
 
 impl ServingReport {
-    /// Sustained sequences per second over the makespan.
+    /// Sustained sequences per second over the makespan (0 when nothing
+    /// completed — a fully degraded run has no throughput, not an
+    /// absurd one from a zero-cycle makespan).
     pub fn seqs_per_s(&self) -> f64 {
-        self.completed as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles.max(1) as f64
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles as f64
     }
 
-    /// Sustained tokens per second over the makespan.
+    /// Sustained tokens per second over the makespan, counting only the
+    /// tokens of completed requests (offered-but-incomplete tokens are
+    /// not throughput; 0 when nothing completed).
     pub fn tokens_per_s(&self) -> f64 {
-        self.total_tokens as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles.max(1) as f64
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed_tokens as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles as f64
     }
 
     /// Mean requests in flight (Little's law: sum of latencies over the
     /// makespan) — the load metric that separates a saturated pipeline
     /// from a lightly loaded one when span-based occupancy cannot.
     pub fn mean_inflight(&self) -> f64 {
-        self.latencies.iter().map(|&l| l as f64).sum::<f64>() / self.makespan_cycles.max(1) as f64
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.latencies.iter().map(|&l| l as f64).sum::<f64>() / self.makespan_cycles as f64
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("schema", Json::Str("serving_report/v1".into())),
+            ("schema", Json::Str("serving_report/v2".into())),
             ("encoders", Json::Num(self.encoders as f64)),
             ("workload", Json::Str(self.workload.clone())),
             ("process", Json::Str(self.process.clone())),
@@ -181,6 +283,7 @@ impl ServingReport {
             ("requests", Json::Num(self.requests as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("total_tokens", Json::Num(self.total_tokens as f64)),
+            ("completed_tokens", Json::Num(self.completed_tokens as f64)),
             ("makespan_cycles", Json::Num(self.makespan_cycles as f64)),
             ("seqs_per_s", Json::Num(self.seqs_per_s())),
             ("tokens_per_s", Json::Num(self.tokens_per_s())),
@@ -188,6 +291,9 @@ impl ServingReport {
             ("latency", self.latency.to_json()),
             ("stages", Json::Arr(self.stages.iter().map(|s| s.to_json()).collect())),
             ("eq1", self.eq1.map(|e| e.to_json()).unwrap_or(Json::Null)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("retransmits", Json::Num(self.retransmits as f64)),
+            ("fault", self.fault.as_ref().map(|f| f.to_json()).unwrap_or(Json::Null)),
             ("events", Json::Num(self.events as f64)),
         ])
     }
@@ -236,6 +342,51 @@ impl ServingReport {
             ]);
         }
         s.push_str(&t.render());
+        if self.dropped > 0 || self.retransmits > 0 {
+            s.push_str(&format!(
+                "transport: {} copies dropped, {} retransmitted ({})\n",
+                self.dropped,
+                self.retransmits,
+                if self.retransmits > 0 {
+                    "reliable: every packet delivered exactly once"
+                } else {
+                    "unreliable: losses stall their inferences"
+                },
+            ));
+        }
+        if let Some(f) = self.fault.as_ref().filter(|f| !f.recovered) {
+            s.push_str(&format!(
+                "fault: FPGA {} failure armed for cycle {}, but the run ended first — \
+                 no outage occurred\n",
+                f.fpga, f.fail_cycle,
+            ));
+        }
+        if let Some(f) = self.fault.as_ref().filter(|f| f.recovered) {
+            s.push_str(&format!(
+                "fault: FPGA {} (cluster {}) down at cycle {} for {:.2} ms; {} kernels \
+                 re-placed{}; {} packets buffered at the cluster input (peak {:.0}% of \
+                 its {} B), {} intra-cluster events lost, {} requests incomplete\n",
+                f.fpga,
+                f.cluster,
+                f.fail_cycle,
+                cycles_to_us(f.reconfig_cycles) / 1e3,
+                f.moved_kernels,
+                if f.degraded_placement { " (degraded: survivors overcommitted)" } else { "" },
+                f.held_packets,
+                100.0 * f.input_buffer_peak,
+                f.input_buffer_bytes,
+                f.lost_events,
+                f.incomplete_requests,
+            ));
+            if let Some(w) = f.recovery_window {
+                s.push_str(&format!(
+                    "  outage-window arrivals: p50 {:.1} us  p99 {:.1} us  max {:.1} us\n",
+                    cycles_to_us(w.p50),
+                    cycles_to_us(w.p99),
+                    cycles_to_us(w.max),
+                ));
+            }
+        }
         if let Some(e) = self.eq1 {
             s.push_str(&format!(
                 "\nEq. 1 check @ m={}: analytic {} cycles vs simulated {} cycles \
@@ -298,21 +449,62 @@ mod tests {
             requests: 2,
             completed: 2,
             total_tokens: 70,
+            completed_tokens: 70,
             makespan_cycles: 200_000, // 1 ms at 200 MHz
             latency: LatencySummary { p50: 100, p95: 200, p99: 200, mean: 150.0, max: 200 },
             latencies: vec![100, 200],
             stages: vec![],
             eq1: None,
+            dropped: 0,
+            retransmits: 0,
+            fault: None,
             events: 42,
         };
         assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
         assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
         assert!((r.mean_inflight() - 300.0 / 200_000.0).abs() < 1e-12);
         let j = r.to_json();
-        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "serving_report/v1");
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "serving_report/v2");
         assert_eq!(j.path("latency.p50_cycles").unwrap().as_i64().unwrap(), 100);
         assert_eq!(j.get("eq1").unwrap(), &Json::Null);
+        assert_eq!(j.get("fault").unwrap(), &Json::Null);
         // render never panics and carries the headline numbers
         assert!(r.render().contains("p95"));
+        assert!(!r.render().contains("fault:"), "clean runs carry no fault line");
+    }
+
+    #[test]
+    fn fault_section_shape() {
+        let f = FaultReport {
+            fpga: 8,
+            cluster: 1,
+            fail_cycle: 1_000,
+            recover_cycle: 51_000,
+            reconfig_cycles: 50_000,
+            moved_kernels: 7,
+            degraded_placement: true,
+            recovered: true,
+            input_buffer_bytes: 98_304,
+            input_buffer_peak: 0.75,
+            held_packets: 96,
+            lost_events: 12,
+            incomplete_requests: 2,
+            recovery_window: Some(LatencySummary {
+                p50: 60_000,
+                p95: 70_000,
+                p99: 70_000,
+                mean: 61_000.0,
+                max: 70_000,
+            }),
+        };
+        assert_eq!(f.time_to_recover_cycles(), 50_000);
+        let j = f.to_json();
+        assert_eq!(j.get("time_to_recover_cycles").unwrap().as_i64().unwrap(), 50_000);
+        assert_eq!(j.get("degraded_placement").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("recovered").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("input_buffer_bytes").unwrap().as_i64().unwrap(), 98_304);
+        assert_eq!(j.path("recovery_window.p99_cycles").unwrap().as_i64().unwrap(), 70_000);
+        // empty summaries render (degraded runs where nothing completed)
+        assert_eq!(LatencySummary::empty().p99, 0);
     }
 }

@@ -127,8 +127,13 @@ pub struct TrafficConfig {
 impl TrafficConfig {
     /// Generate the schedule: arrivals accumulate the process's gaps
     /// (first request at cycle 0), lengths come from the benchmark
-    /// sampler. Deterministic in `seed`.
+    /// sampler. Deterministic in `seed`. A zero-request trace (tiny
+    /// duration x low rate) is a valid, empty schedule — consumers
+    /// (`run_serving`, the source kernel) handle it without panicking.
     pub fn generate(&self) -> Vec<Request> {
+        if self.requests == 0 {
+            return Vec::new();
+        }
         let mut lens = self.lengths.sampler(self.seed);
         // independent stream for the arrival gaps so length and timing
         // draws never interleave (schedules stay stable if one sampler
@@ -205,6 +210,17 @@ mod tests {
         assert!(reqs.iter().all(|r| (1..=128).contains(&r.m)));
         // the clamp must actually bind for a long-context workload
         assert!(reqs.iter().filter(|r| r.m == 128).count() > reqs.len() / 10);
+    }
+
+    #[test]
+    fn empty_traces_are_graceful() {
+        let mut c = cfg(ArrivalProcess::Poisson { seqs_per_s: 0.001 });
+        c.requests = 0;
+        let reqs = c.generate();
+        assert!(reqs.is_empty());
+        assert_eq!(total_tokens(&reqs), 0);
+        // no `.last().unwrap()`-style assumption anywhere downstream:
+        assert_eq!(reqs.last(), None);
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::collections::BinaryHeap;
 use crate::util::fxhash::FxHashMap;
 use crate::util::pool;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::fabric::{Fabric, FpgaId};
 use super::fifo::Fifo;
@@ -491,6 +491,80 @@ pub(crate) fn deliver_event(
     }
 }
 
+/// A scheduled FPGA failure — the §6 operational scenario. At cycle
+/// `at` the FPGA dies; per the paper's cluster-level fault isolation,
+/// the *whole cluster* holding it goes down for `recovery_cycles` while
+/// it is re-configured. During the outage:
+///
+/// * packets addressed to the cluster from outside (which the router
+///   model guarantees land at its gateway) buffer in the modeled
+///   **cluster input buffer** — the gateway's input FIFO accounts their
+///   bytes, so §8.2.1-style sizing/overflow analysis applies — and
+///   drain in arrival order when the cluster comes back;
+/// * intra-cluster packets in flight are lost (they lived on wires and
+///   FIFOs of the application region being wiped); the inferences they
+///   belonged to never complete and are reported, not silently retried;
+/// * kernel-internal wakes are suspended and resume at recovery (the
+///   model keeps kernel state across reconfiguration — see DESIGN.md
+///   "Fault tolerance" for why this simplification is safe).
+///
+/// `remap` is the recovery placement — typically produced by
+/// `placer::recover::replace_after_failure` — applied to the fabric the
+/// moment the cluster comes back; it may only move kernels of the failed
+/// cluster (reconfiguring anything else would violate §6's isolation
+/// claim, so `schedule_failure` rejects it).
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    pub fpga: FpgaId,
+    /// failure cycle
+    pub at: u64,
+    /// reconfiguration latency: the cluster is down for exactly this long
+    pub recovery_cycles: u64,
+    /// kernel -> surviving-FPGA assignments applied at recovery
+    pub remap: Vec<(GlobalKernelId, FpgaId)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FailPhase {
+    /// scheduled, not yet reached
+    Armed,
+    /// outage in progress: events to the cluster buffer or are lost
+    Down,
+    /// recovery applied; the engine is back to normal operation
+    Done,
+}
+
+struct FailureState {
+    plan: FailurePlan,
+    /// the cluster being re-configured (all kernels of the failed FPGA)
+    cluster: u8,
+    recover_at: u64,
+    phase: FailPhase,
+    /// gateway-inbound packets + suspended wakes, in outage pop order
+    held: Vec<QEv>,
+    held_packets: u64,
+    lost_events: u64,
+}
+
+/// Read-only view of a run's failure outcome (drives the serving
+/// report's fault section and the failover tests/bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureReport {
+    pub fpga: FpgaId,
+    pub cluster: u8,
+    pub fail_cycle: u64,
+    pub recover_cycle: u64,
+    /// packets buffered in the cluster input buffer during the outage
+    pub held_packets: u64,
+    /// intra-cluster events lost to the reconfiguration
+    pub lost_events: u64,
+    /// kernels the recovery placement moved off the failed FPGA
+    pub moved_kernels: usize,
+    /// true once the recovery actually ran (false = the run never
+    /// reached the failure window, or paused inside it)
+    pub recovered: bool,
+}
+
 /// The simulator: kernels + fabric + event queue(s).
 pub struct Sim {
     pub time: u64,
@@ -518,6 +592,8 @@ pub struct Sim {
     ctr: u64,
     /// genesis rank counter (`start` wakes + `inject`s).
     genesis_ctr: u64,
+    /// scheduled FPGA failure (None = the §6 scenario is off).
+    failure: Option<FailureState>,
     // reusable dispatch buffers (avoid per-event allocation)
     pending_buf: Vec<(u64, u32, Ev)>,
     wakes_buf: Vec<(u64, u64)>,
@@ -546,6 +622,7 @@ impl Sim {
             granularity: ShardGranularity::PerCluster,
             ctr: 0,
             genesis_ctr: 0,
+            failure: None,
             pending_buf: Vec::new(),
             wakes_buf: Vec::new(),
         }
@@ -637,14 +714,71 @@ impl Sim {
         Ok(())
     }
 
+    /// Schedule a §6 FPGA failure (see [`FailurePlan`]). At most one per
+    /// run; forces the exact sequential engine like lossy mode does (the
+    /// outage window is a globally ordered resource).
+    pub fn schedule_failure(&mut self, plan: FailurePlan) -> Result<()> {
+        ensure!(self.failure.is_none(), "only one failure can be scheduled per run");
+        ensure!(plan.recovery_cycles >= 1, "recovery must take at least one cycle");
+        let on_fpga = self.fabric.kernels_on(plan.fpga);
+        ensure!(!on_fpga.is_empty(), "failed FPGA {:?} hosts no kernels", plan.fpga);
+        let cluster = on_fpga[0].cluster;
+        debug_assert!(
+            on_fpga.iter().all(|k| k.cluster == cluster),
+            "platform validation guarantees one cluster per FPGA"
+        );
+        for (kid, f) in &plan.remap {
+            ensure!(
+                kid.cluster == cluster,
+                "remap moves {kid}, which is outside the failed cluster {cluster} — §6 \
+                 isolation re-configures only the failed FPGA's own cluster"
+            );
+            ensure!(*f != plan.fpga, "remap places {kid} back on the failed FPGA");
+            ensure!(self.slot16[kid.dense()] != 0, "remap names unregistered kernel {kid}");
+            ensure!(
+                self.fabric.switch_of(*f).is_some(),
+                "remap target {f:?} is not attached to any switch"
+            );
+        }
+        let recover_at = plan.at.saturating_add(plan.recovery_cycles);
+        self.failure = Some(FailureState {
+            plan,
+            cluster,
+            recover_at,
+            phase: FailPhase::Armed,
+            held: Vec::new(),
+            held_packets: 0,
+            lost_events: 0,
+        });
+        Ok(())
+    }
+
+    /// The failure outcome of this run (None when no failure was
+    /// scheduled). Populated incrementally: read after `run()` for the
+    /// final picture.
+    pub fn failure_report(&self) -> Option<FailureReport> {
+        self.failure.as_ref().map(|fs| FailureReport {
+            fpga: fs.plan.fpga,
+            cluster: fs.cluster,
+            fail_cycle: fs.plan.at,
+            recover_cycle: fs.recover_at,
+            held_packets: fs.held_packets,
+            lost_events: fs.lost_events,
+            moved_kernels: fs.plan.remap.len(),
+            recovered: fs.phase == FailPhase::Done,
+        })
+    }
+
     /// Run until the queue drains or `until` cycles elapse.
     ///
     /// With `threads != 1` and a fleet that splits into 2+ FPGA-aligned
     /// shards, the run executes on the sharded conservative-window engine
     /// (shard.rs) — trace-identical to the sequential engine by contract.
-    /// Lossy-network mode (`drop_probability > 0`) and `reference_mode`
-    /// force the sequential path (the drop RNG is a global ordered
-    /// resource).
+    /// Lossy-network mode (`drop_probability > 0`), failure injection,
+    /// and `reference_mode` force the sequential path (the drop RNG and
+    /// the outage window are global ordered resources; results stay
+    /// thread-count-invariant because every thread count takes the same
+    /// sequential engine — a documented fallback, covered by tests).
     ///
     /// Note on pausing with coalescing enabled: a burst event is
     /// delivered atomically at its FIRST row's arrival, so a pause may
@@ -655,7 +789,11 @@ impl Sim {
     /// boundary matters.
     pub fn run_until(&mut self, until: u64) -> Result<u64> {
         let threads = self.effective_threads();
-        if threads != 1 && !self.queue.heap_only && self.fabric.drop_probability == 0.0 {
+        if threads != 1
+            && !self.queue.heap_only
+            && self.fabric.drop_probability == 0.0
+            && self.failure.is_none()
+        {
             if let Some(plan) = ShardPlan::build(
                 self.granularity,
                 self.kernels.iter().map(|s| s.id),
@@ -669,11 +807,21 @@ impl Sim {
 
     fn run_sequential(&mut self, until: u64) -> Result<u64> {
         let mut processed = 0u64;
-        while let Some(t) = self.queue.peek_time() {
+        loop {
+            let next = self.queue.peek_time();
+            // a pending recovery fires once simulated time passes the
+            // outage window — including when the held backlog is all the
+            // activity that is left and the queue is otherwise empty
+            if self.recovery_due(next, until) {
+                self.perform_recovery();
+                continue;
+            }
+            let Some(t) = next else { break };
             if t > until {
                 break;
             }
             let e = self.queue.pop().unwrap();
+            let Some(e) = self.filter_failed(e) else { continue };
             self.dispatch(e)?;
             processed += 1;
             if self.trace.events_processed > self.max_events {
@@ -684,6 +832,102 @@ impl Sim {
             }
         }
         Ok(processed)
+    }
+
+    /// True when the scheduled outage has elapsed relative to the next
+    /// queued event (or the queue drained) and the pause horizon allows
+    /// the recovery to run.
+    fn recovery_due(&self, next: Option<u64>, until: u64) -> bool {
+        match &self.failure {
+            Some(fs) if fs.phase == FailPhase::Down => {
+                fs.recover_at <= until && next.is_none_or(|t| t >= fs.recover_at)
+            }
+            _ => false,
+        }
+    }
+
+    /// Failure-window gate on one popped event. Returns the event back
+    /// when it should dispatch normally; absorbs it (hold or lose) when
+    /// the target cluster is down.
+    fn filter_failed(&mut self, e: QEv) -> Option<QEv> {
+        let Some(fs) = self.failure.as_mut() else { return Some(e) };
+        match fs.phase {
+            FailPhase::Done => return Some(e),
+            FailPhase::Armed if e.time < fs.plan.at => return Some(e),
+            // the failure instant has been reached: the cluster is down
+            FailPhase::Armed => fs.phase = FailPhase::Down,
+            FailPhase::Down => {}
+        }
+        if e.time >= fs.recover_at {
+            // the whole outage fits inside an event gap: recover first,
+            // then let this event dispatch normally
+            self.perform_recovery();
+            return Some(e);
+        }
+        let fs = self.failure.as_mut().expect("failure state checked above");
+        let id = self.kernels[e.target as usize].id;
+        if id.cluster != fs.cluster {
+            return Some(e);
+        }
+        enum Hold {
+            Buffer(usize),
+            Lose,
+            Suspend,
+        }
+        let action = match &e.ev {
+            // §6: traffic from outside the cluster buffers in the cluster
+            // input buffer (the router model guarantees it targets the
+            // gateway); its bytes occupy the gateway FIFO until recovery
+            Ev::Packet(p) if p.src.cluster != fs.cluster => Hold::Buffer(p.wire_bytes()),
+            // intra-cluster rows lived on wires/FIFOs of the application
+            // region being wiped: lost — their inferences stay incomplete
+            Ev::Packet(_) => Hold::Lose,
+            // kernel-internal schedules pause and resume at recovery
+            Ev::Wake(_) => Hold::Suspend,
+        };
+        match action {
+            Hold::Buffer(bytes) => {
+                self.kernels[e.target as usize].fifo.push(bytes);
+                fs.held_packets += 1;
+                fs.held.push(e);
+            }
+            Hold::Suspend => fs.held.push(e),
+            Hold::Lose => fs.lost_events += 1,
+        }
+        None
+    }
+
+    /// Bring the failed cluster back: apply the recovery placement to the
+    /// fabric, then release the held backlog at the recovery cycle, in
+    /// exactly the order it was buffered (genesis ranks sort the drained
+    /// events ahead of any same-cycle emission, and the per-event counter
+    /// preserves the buffer's FIFO order).
+    fn perform_recovery(&mut self) {
+        let Some(fs) = self.failure.as_mut() else { return };
+        debug_assert!(fs.phase == FailPhase::Down);
+        fs.phase = FailPhase::Done;
+        let recover_at = fs.recover_at;
+        let remap = fs.plan.remap.clone();
+        let held = std::mem::take(&mut fs.held);
+        for (kid, f) in &remap {
+            self.fabric.place(*kid, *f);
+        }
+        self.time = self.time.max(recover_at);
+        for e in held {
+            if let Ev::Packet(p) = &e.ev {
+                // the buffered bytes leave the cluster input buffer as
+                // each packet is handed to the gateway (dispatch re-pushes
+                // them through the normal rx path)
+                self.kernels[e.target as usize].fifo.pop(p.wire_bytes());
+            }
+            self.genesis_ctr += 1;
+            self.queue.push(QEv {
+                time: recover_at,
+                target: e.target,
+                rank: Rank::genesis(self.genesis_ctr),
+                ev: e.ev,
+            });
+        }
     }
 
     /// Run to quiescence.
@@ -1145,6 +1389,138 @@ mod tests {
         for threads in [2, 4, 8] {
             assert_eq!(build(threads), seq, "parallel diverged at threads={threads}");
         }
+    }
+
+    /// Gateway used by the failure tests: decode GMI header, forward to
+    /// the named local kernel (same shape as the inter-cluster test's).
+    struct FwdGw;
+    impl KernelBehavior for FwdGw {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            let final_dst = GlobalKernelId::new(io.self_id.cluster, pkt.gmi_dst.unwrap());
+            io.consume(pkt.wire_bytes());
+            let mut fwd = pkt;
+            fwd.src = io.self_id;
+            fwd.dst = final_dst;
+            fwd.inter_cluster = false;
+            fwd.gmi_dst = None;
+            io.send_raw(fwd);
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    /// Records (row, arrival) pairs for order assertions.
+    struct RecSink {
+        got: std::sync::Arc<std::sync::Mutex<Vec<(u32, u64)>>>,
+    }
+    impl KernelBehavior for RecSink {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            io.consume(pkt.wire_bytes());
+            self.got.lock().unwrap().push((pkt.meta.row, io.now));
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    /// The §6 scenario in miniature: a cluster-1 source streams 20 rows
+    /// to k(0,5) through cluster 0's gateway; the FPGA hosting k(0,5)
+    /// dies mid-stream and recovers onto a spare. Inbound rows buffer at
+    /// the gateway and drain in order; rows in intra-cluster flight at
+    /// the failure are lost; everything is deterministic and identical
+    /// at any thread count (the failure path forces the sequential
+    /// engine).
+    fn run_failover(threads: usize) -> (Vec<(u32, u64)>, FailureReport, FpgaId, u64) {
+        let mut sim = Sim::new();
+        sim.set_threads(threads);
+        for f in 0..4 {
+            sim.fabric.attach(FpgaId(f), SwitchId(0));
+        }
+        let got = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(k(1, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Source {
+            dst: k(0, 5),
+            n: 20,
+            gap: 40,
+            sent: 0,
+        }))
+        .unwrap();
+        sim.add_kernel(k(0, 0), FpgaId(1), Fifo::new(1 << 16), Box::new(FwdGw)).unwrap();
+        sim.add_kernel(k(0, 5), FpgaId(2), Fifo::new(1 << 16), Box::new(RecSink {
+            got: got.clone(),
+        }))
+        .unwrap();
+        sim.schedule_failure(FailurePlan {
+            fpga: FpgaId(2),
+            at: 700,
+            recovery_cycles: 5_000,
+            remap: vec![(k(0, 5), FpgaId(3))],
+        })
+        .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let report = sim.failure_report().unwrap();
+        let new_home = sim.fabric.fpga_of(k(0, 5)).unwrap();
+        let rows = got.lock().unwrap().clone();
+        (rows, report, new_home, sim.time)
+    }
+
+    #[test]
+    fn failure_buffers_at_the_gateway_loses_in_flight_and_recovers() {
+        let (rows, report, new_home, _) = run_failover(1);
+        assert!(report.recovered, "recovery must have run");
+        assert_eq!(report.moved_kernels, 1);
+        assert_eq!(new_home, FpgaId(3), "the remap must be live after recovery");
+        // §6 accounting: every row is either delivered or was lost on an
+        // intra-cluster wire during the outage — never duplicated
+        assert_eq!(rows.len() as u64 + report.lost_events, 20);
+        assert!(report.lost_events > 0, "rows in gateway->sink flight at T are lost");
+        assert!(report.held_packets > 0, "rows arriving during the outage buffer");
+        // the buffered backlog drains in order: row indices stay strictly
+        // increasing across the outage, and the tail rows all arrive
+        assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "in-order drain violated: {rows:?}");
+        assert_eq!(rows.last().unwrap().0, 19, "held rows must drain after recovery");
+        // nothing reaches the sink inside the outage window
+        assert!(rows
+            .iter()
+            .all(|&(_, t)| t < report.fail_cycle || t >= report.recover_cycle));
+        assert_eq!(report.recover_cycle, report.fail_cycle + 5_000);
+    }
+
+    #[test]
+    fn failover_is_deterministic_and_thread_count_invariant() {
+        let seq = run_failover(1);
+        assert_eq!(run_failover(1), seq, "same run, same outcome");
+        for threads in [2, 8] {
+            assert_eq!(
+                run_failover(threads),
+                seq,
+                "failure injection must fall back to the sequential engine"
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_failure_validates_its_plan() {
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        sim.fabric.attach(FpgaId(2), SwitchId(0)); // spare for recovery
+        sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(64), Box::new(Sink { got: 0 })).unwrap();
+        sim.add_kernel(k(1, 1), FpgaId(1), Fifo::new(64), Box::new(Sink { got: 0 })).unwrap();
+        // empty FPGA
+        let plan = |fpga, remap| FailurePlan { fpga, at: 10, recovery_cycles: 100, remap };
+        assert!(sim.schedule_failure(plan(FpgaId(7), vec![])).is_err());
+        // remap crossing the cluster boundary violates §6 isolation
+        assert!(sim
+            .schedule_failure(plan(FpgaId(0), vec![(k(1, 1), FpgaId(2))]))
+            .is_err());
+        // remap back onto the failed board
+        assert!(sim
+            .schedule_failure(plan(FpgaId(0), vec![(k(0, 1), FpgaId(0))]))
+            .is_err());
+        // a sound plan arms exactly once
+        assert!(sim.schedule_failure(plan(FpgaId(0), vec![(k(0, 1), FpgaId(2))])).is_ok());
+        assert!(sim.schedule_failure(plan(FpgaId(0), vec![])).is_err(), "one per run");
+        let r = sim.failure_report().unwrap();
+        assert!(!r.recovered);
+        assert_eq!((r.fpga, r.cluster, r.moved_kernels), (FpgaId(0), 0, 1));
     }
 
     #[test]

@@ -37,6 +37,12 @@ impl Fifo {
         self.occupancy = self.occupancy.saturating_sub(bytes);
     }
 
+    /// Worst observed occupancy as a fraction of capacity (> 1 means the
+    /// §8.2.1 sizing rule was violated at some point of the run).
+    pub fn peak_fraction(&self) -> f64 {
+        self.high_water as f64 / self.capacity_bytes.max(1) as f64
+    }
+
     /// Number of BRAM18 blocks this FIFO's capacity consumes.
     pub fn bram18(&self) -> usize {
         self.capacity_bytes.div_ceil(BRAM18_BYTES)
@@ -62,9 +68,11 @@ mod tests {
         f.push(60);
         assert_eq!(f.overflows, 1);
         assert_eq!(f.high_water, 120);
+        assert!((f.peak_fraction() - 1.2).abs() < 1e-12);
         f.pop(100);
         assert_eq!(f.occupancy, 20);
         f.pop(100);
         assert_eq!(f.occupancy, 0); // saturates
+        assert!((Fifo::new(0).peak_fraction() - 0.0).abs() < 1e-12, "never divides by zero");
     }
 }

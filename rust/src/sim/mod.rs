@@ -22,7 +22,7 @@ pub mod shard;
 pub mod trace;
 pub mod window;
 
-pub use engine::{KernelBehavior, KernelIo, Sim};
-pub use fabric::{Fabric, FpgaId, SwitchId};
+pub use engine::{FailurePlan, FailureReport, KernelBehavior, KernelIo, Sim};
+pub use fabric::{Fabric, FpgaId, LinkSeq, SwitchId};
 pub use packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload};
 pub use shard::ShardGranularity;

@@ -21,6 +21,14 @@ pub const SWITCH_LAT: u64 = 7;
 /// Switch-to-switch hop: the paper measured d = 1.1 us = 220 cycles.
 pub const INTER_SWITCH_LAT: u64 = 220;
 
+/// Retransmission timeout of the reliable-transport layer (cycles): the
+/// sender declares a copy lost this long after its last flit left the
+/// NIC, then re-serializes the packet. 512 cycles = 2.56 us: above the
+/// acked round trip of any link the Fig. 17 chain actually uses (adjacent
+/// encoders sit one serial switch hop apart, RTT ~= 2 x (17 + 220) = 474
+/// cycles) while staying far below any kernel-level latency of interest.
+pub const RETX_TIMEOUT: u64 = 512;
+
 /// Number of flits for a payload of `bytes` (ceil; header byte included
 /// by the caller when a GMI inter-cluster header is attached).
 pub fn flits_for_bytes(bytes: usize) -> u64 {

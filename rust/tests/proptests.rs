@@ -674,3 +674,66 @@ fn prop_pipelined_inferences_complete_in_order() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Lossy transport: thread-count invariance and exactly-once delivery
+// ---------------------------------------------------------------------------
+
+/// The `threads != 1 && drop_probability == 0.0` sequential-fallback
+/// guard in `Sim::run_until` is what keeps lossy runs deterministic: the
+/// drop RNG is a globally ordered resource, so every thread count must
+/// take the exact sequential engine. This property pins that contract —
+/// lossy runs (reliable or not) are bit-identical at 1 vs 8 threads on
+/// multi-shard fleets.
+#[test]
+fn prop_lossy_runs_are_bit_identical_across_thread_counts() {
+    use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
+    use galapagos_llm::ibert::kernels::Mode;
+    check_with(&Config { cases: 6, ..Default::default() }, "lossy-thread-parity", |g| {
+        let m = [4usize, 8, 16][g.usize_in(0, 2)];
+        let seed = g.rng.next_u64();
+        let drop_p = 0.005 + 0.04 * g.f64_unit();
+        let reliable = g.bool();
+        let encoders = g.usize_in(1, 2);
+        type Fingerprint = (u64, u64, u64, u64, u64, Vec<u64>, u32);
+        let run = |threads: usize| -> Result<Fingerprint, String> {
+            let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+            cfg.encoders = encoders;
+            cfg.inferences = 2;
+            cfg.threads = Some(threads);
+            cfg.net.drop_probability = drop_p;
+            cfg.net.reliable = reliable;
+            cfg.net.seed = seed;
+            let mut tb = build_testbed(&cfg).map_err(|e| e.to_string())?;
+            tb.sim.start();
+            tb.sim.run().map_err(|e| e.to_string())?;
+            let sink = tb.sink.lock().unwrap();
+            let delivered: u32 = sink.arrivals.values().map(|&(n, _)| n).sum();
+            Ok((
+                tb.sim.time,
+                tb.sim.trace.events_processed,
+                tb.sim.fabric.stats.packets,
+                tb.sim.fabric.stats.flits,
+                tb.sim.fabric.stats.dropped,
+                tb.sim.fabric.drop_trace.clone(),
+                delivered,
+            ))
+        };
+        let seq = run(1)?;
+        let par = run(8)?;
+        prop_assert!(
+            par == seq,
+            "lossy run (p={drop_p:.3}, reliable={reliable}) diverged at 8 threads"
+        );
+        // and with reliable transport the delivery is always complete
+        if reliable {
+            prop_assert!(
+                seq.6 == 2 * m as u32,
+                "reliable lossy run delivered {}/{} rows",
+                seq.6,
+                2 * m
+            );
+        }
+        Ok(())
+    });
+}
