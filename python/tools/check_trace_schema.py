@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Validate telemetry artifacts emitted by `--trace-out` / `--metrics-out`.
+
+Chrome trace-event JSON (the Perfetto / chrome://tracing input format):
+  * top level: object with a `traceEvents` array (JSON Object Format)
+  * every event: `ph` phase string, `pid`, `ts` (non-negative number,
+    microseconds), `name` (except where optional)
+  * async begin/end pairs (`b`/`e`) balance per (cat, id) with begin
+    timestamps <= end timestamps
+  * instants carry a scope `s` in {g, p, t}
+
+Metrics JSONL (obs_metrics/v1): one JSON object per line, first line a
+header with `schema: obs_metrics/v1`, every line a `type` tag.
+
+Stdlib only; exits non-zero with a message on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+KNOWN_PHASES = {"B", "E", "X", "i", "I", "C", "b", "n", "e", "s", "t", "f", "M"}
+METRIC_TYPES = {"header", "bucket", "kernel", "fifo", "link", "summary"}
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"schema check failed: {msg}")
+
+
+def check_trace(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level must be an object (JSON Object Format)")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: missing or empty traceEvents array")
+
+    open_async = {}  # (cat, id) -> begin ts stack
+    for n, ev in enumerate(events):
+        where = f"{path}: traceEvents[{n}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: event is not an object")
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            fail(f"{where}: unknown phase {ph!r}")
+        if "pid" not in ev:
+            fail(f"{where}: missing pid")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                fail(f"{where}: bad ts {ts!r}")
+        if ph in ("b", "e"):
+            for req in ("cat", "id", "name"):
+                if req not in ev:
+                    fail(f"{where}: async event missing {req!r}")
+            key = (ev["cat"], ev["id"])
+            if ph == "b":
+                open_async.setdefault(key, []).append(ev["ts"])
+            else:
+                stack = open_async.get(key)
+                if not stack:
+                    fail(f"{where}: async end without begin for {key}")
+                if ev["ts"] < stack[-1]:
+                    fail(f"{where}: async span {key} ends before it begins")
+                stack.pop()
+        elif ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                fail(f"{where}: complete event missing dur")
+        elif ph == "i":
+            if ev.get("s") not in ("g", "p", "t"):
+                fail(f"{where}: instant scope must be g/p/t, got {ev.get('s')!r}")
+        elif ph == "M":
+            if "args" not in ev:
+                fail(f"{where}: metadata event missing args")
+    dangling = {k: v for k, v in open_async.items() if v}
+    if dangling:
+        fail(f"{path}: unterminated async spans: {sorted(dangling)[:5]}")
+    return len(events)
+
+
+def check_metrics(path: str) -> int:
+    lines = 0
+    with open(path) as f:
+        for n, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            where = f"{path}:{n + 1}"
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{where}: unparseable line: {e}")
+            if not isinstance(obj, dict):
+                fail(f"{where}: line is not an object")
+            t = obj.get("type")
+            if t not in METRIC_TYPES:
+                fail(f"{where}: unknown line type {t!r}")
+            if lines == 0:
+                if t != "header" or obj.get("schema") != "obs_metrics/v1":
+                    fail(f"{where}: first line must be an obs_metrics/v1 header")
+            lines += 1
+    if lines == 0:
+        fail(f"{path}: empty metrics stream")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON from --trace-out")
+    ap.add_argument("--metrics", help="obs_metrics/v1 JSONL from --metrics-out")
+    args = ap.parse_args()
+    n = check_trace(args.trace)
+    print(f"{args.trace}: OK ({n} trace events)")
+    if args.metrics:
+        m = check_metrics(args.metrics)
+        print(f"{args.metrics}: OK ({m} metric lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -114,6 +114,10 @@ pub struct TestbedConfig {
     /// optional §6 failure injection (forces the sequential engine, like
     /// lossy mode — results stay thread-count-invariant via the fallback)
     pub fail: Option<FailureSchedule>,
+    /// cycle-domain telemetry: span tracing + streaming metrics (off by
+    /// default, zero-cost on the hot path when disabled) and the
+    /// wall-clock self-profile
+    pub obs: crate::obs::ObsSettings,
 }
 
 impl TestbedConfig {
@@ -132,6 +136,7 @@ impl TestbedConfig {
             threads: None,
             net: NetworkConfig::default(),
             fail: None,
+            obs: Default::default(),
         }
     }
 }
@@ -317,6 +322,24 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         sim.set_threads(t);
     }
     sim.trace.add_probe(sink_global);
+
+    if cfg.obs.enabled {
+        // span-role kernels: the request boundary (eval source/sink) and
+        // each encoder stage's ingress (gateway) and egress (LN2)
+        use crate::ibert::graph::ids;
+        let mut marked = vec![
+            GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE),
+            GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK),
+        ];
+        for e in 0..cfg.encoders {
+            marked.push(GlobalKernelId::new(e as u8, ids::GATEWAY));
+            marked.push(GlobalKernelId::new(e as u8, ids::LN2));
+        }
+        sim.enable_obs(cfg.obs.interval(), &marked);
+    }
+    if cfg.obs.profile {
+        sim.profile = true;
+    }
 
     // §2.1 transport: the drop pattern derives from the run seed, so
     // lossy runs are seed-deterministic (and differ across seeds)

@@ -27,6 +27,9 @@
 //! * [`baselines`] — published GPU/FPGA comparison points (§8 tables).
 //! * [`eval`] — Eq. 1 latency model, GLUE-like workloads, and the
 //!   generators for every table and figure in the paper's evaluation.
+//! * [`obs`] — cycle-domain telemetry: per-request span traces
+//!   (Chrome trace-event JSON), constant-memory streaming fleet
+//!   metrics, and simulator self-profiling.
 //! * [`serve`] — streaming request serving over the simulated pipeline:
 //!   open-loop Poisson/uniform traffic through N chained encoders, with
 //!   latency percentiles, throughput, per-stage backpressure, and the
@@ -37,6 +40,7 @@
 pub mod baselines;
 pub mod cluster_builder;
 pub mod eval;
+pub mod obs;
 pub mod fpga;
 pub mod galapagos;
 pub mod gmi;

@@ -21,13 +21,16 @@ use anyhow::{bail, Result};
 use galapagos_llm::cluster_builder::description::BuildDescription;
 use galapagos_llm::cluster_builder::{ip_generator, layer_builder};
 use galapagos_llm::eval::tables;
-use galapagos_llm::eval::testbed::build_testbed;
+use galapagos_llm::eval::testbed::{build_testbed, EVAL_CLUSTER, EVAL_SINK, EVAL_SOURCE};
 use galapagos_llm::eval::workload::GlueWorkload;
 use galapagos_llm::gmi::Out;
 use galapagos_llm::ibert::encoder::rows_i8;
-use galapagos_llm::ibert::graph::{build_encoder, EncoderGraphParams};
+use galapagos_llm::ibert::graph::{build_encoder, ids, EncoderGraphParams};
 use galapagos_llm::ibert::kernels::Mode;
 use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::obs::{
+    render_chrome_trace, render_metrics_jsonl, ObsSettings, RequestOutcome, SpanRoles,
+};
 use galapagos_llm::placer;
 use galapagos_llm::runtime::{EncoderEngine, PjrtRuntime};
 use galapagos_llm::sim::packet::GlobalKernelId;
@@ -49,7 +52,13 @@ COMMANDS:
             [--fail <fpga>@<cycle>] [--recovery-cycles N]   (kill an FPGA at a
             cycle; its cluster buffers inbound traffic, recovers via the
             placer's incremental re-place, then drains in order — §6)
+            [--trace-out t.json] [--metrics-out m.jsonl] [--metrics-interval N]
+            (cycle-domain telemetry: Chrome trace-event spans for Perfetto,
+            obs_metrics/v1 JSONL time series) [--profile]   (simulator
+            self-profile: wall-ns/cycle, events/window, barrier wait)
   bench     [--quick] [--out BENCH_hotpath.json]
+            [--profile]   (self-profile the 12-encoder chain at 1 and N
+            threads instead of running the suite)
             [--check [--baseline BENCH_hotpath.json] [--tolerance 0.35]]
             hot-path suite: DES engine (reference vs coalesced vs sharded
             parallel), bit-exact encoder compute (reference vs packed GEMM),
@@ -70,6 +79,9 @@ COMMANDS:
             time-to-recover and outage-window percentiles)
             [--place [--config configs/ibert_poc.json]]  (PR 1 placer placement)
             [--out report.json] [--quick]   (CI: writes BENCH_serving.json)
+            [--trace-out t.json] [--metrics-out m.jsonl] [--metrics-interval N]
+            [--profile]   (telemetry: the report upgrades to serving_report/v3
+            with bottleneck attribution; artifacts as in simulate)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
 
@@ -131,6 +143,17 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the telemetry flags shared by `simulate` and `serve`:
+/// span/metrics collection turns on when either artifact is requested,
+/// and `--profile` independently enables the wall-clock self-profile.
+fn parse_obs(args: &Args) -> Result<ObsSettings> {
+    Ok(ObsSettings {
+        enabled: args.str_opt("trace-out").is_some() || args.str_opt("metrics-out").is_some(),
+        metrics_interval: args.u64_or("metrics-interval", 0)?,
+        profile: args.bool_or("profile", false)?,
+    })
+}
+
 /// Parse `--fail <fpga>@<cycle>` (+ optional `--recovery-cycles`) into a
 /// testbed failure schedule.
 fn parse_fail(args: &Args) -> Result<Option<galapagos_llm::eval::testbed::FailureSchedule>> {
@@ -173,6 +196,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.net.reliable = args.bool_or("reliable", false)?;
     cfg.net.seed = args.u64_or("net-seed", 0)?;
     cfg.fail = parse_fail(args)?;
+    cfg.obs = parse_obs(args)?;
     let mut tb = build_testbed(&cfg)?;
     tb.sim.granularity = match args.str_or("shards", "cluster").as_str() {
         "cluster" => galapagos_llm::sim::ShardGranularity::PerCluster,
@@ -200,8 +224,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cycles_to_us(t)
     );
     println!(
-        "events: {}   packets: {}   flits: {}   wall: {:.1} ms ({:.2} M events/s)",
+        "events: {}   wakes: {}   packets: {}   flits: {}   wall: {:.1} ms ({:.2} M events/s)",
         tb.sim.trace.events_processed,
+        tb.sim.trace.kernels().map(|(_, s)| s.wakes).sum::<u64>(),
         tb.sim.fabric.stats.packets,
         tb.sim.fabric.stats.flits,
         wall.as_secs_f64() * 1e3,
@@ -242,6 +267,63 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             println!("pipelined II = {ii} cycles  ->  {:.1} inferences/s",
                      FABRIC_CLOCK_HZ as f64 / ii as f64);
         }
+    }
+
+    // telemetry artifacts: derive the span trace / metrics stream from
+    // the run's collectors (inference i "arrives" at its first source tx)
+    if cfg.obs.enabled {
+        if let Some(tobs) = tb.sim.trace.obs.as_deref() {
+            let src_dense = GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE).dense() as u32;
+            let outcomes: Vec<RequestOutcome> = {
+                let sink = tb.sink.lock().unwrap();
+                (0..inferences)
+                    .map(|i| RequestOutcome {
+                        inference: i,
+                        arrival: tobs
+                            .mark(src_dense, i)
+                            .and_then(|mk| mk.first_tx)
+                            .unwrap_or(0),
+                        m: m as u32,
+                        done: sink
+                            .arrivals
+                            .get(&i)
+                            .and_then(|&(pkts, done)| (pkts == m as u32).then_some(done)),
+                    })
+                    .collect()
+            };
+            let roles = SpanRoles {
+                source: Some(src_dense),
+                stages: (0..encoders)
+                    .map(|e| {
+                        (
+                            GlobalKernelId::new(e as u8, ids::GATEWAY).dense() as u32,
+                            GlobalKernelId::new(e as u8, ids::LN2).dense() as u32,
+                        )
+                    })
+                    .collect(),
+                sink: Some(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK).dense() as u32),
+            };
+            let fobs = tb.sim.fabric.obs.as_deref();
+            if let Some(path) = args.str_opt("trace-out") {
+                std::fs::write(path, render_chrome_trace(&outcomes, &roles, tobs, fobs))?;
+                println!("trace written to {path}");
+            }
+            if let Some(path) = args.str_opt("metrics-out") {
+                let text = render_metrics_jsonl(
+                    &tb.sim.trace,
+                    tobs,
+                    fobs,
+                    &tb.sim.fifo_snapshots(),
+                    &tb.sim.fabric.stats,
+                    tb.sim.time,
+                );
+                std::fs::write(path, text)?;
+                println!("metrics written to {path}");
+            }
+        }
+    }
+    if let Some(p) = tb.sim.last_profile.as_ref() {
+        println!("{}", p.render());
     }
     Ok(())
 }
@@ -312,6 +394,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use galapagos_llm::util::json::Json;
     use galapagos_llm::util::pool;
 
+    if args.bool_or("profile", false)? {
+        return cmd_bench_profile(args);
+    }
     let quick = args.bool_or("quick", false)?;
     let out_path = args.str_or("out", "BENCH_hotpath.json");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
@@ -349,6 +434,35 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let ref_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, true)?;
         let opt_ns = bench_sim_case(&mut b, &mut cases, &label, &cfg, false)?;
         headline(&mut headlines, "sim_functional_m24_speedup", ref_ns, opt_ns);
+    }
+
+    // --- telemetry: the disabled path must stay free, the enabled path
+    //     cheap (the `telemetry_on_efficiency` headline is off_ns/on_ns,
+    //     ~1.0 when collection costs nothing) ---
+    {
+        let mut cfg = TestbedConfig::proof_of_concept(38, Mode::Timing);
+        cfg.inferences = 4;
+        let run_variant = |variant: &str,
+                               cfg: &TestbedConfig,
+                               b: &mut Bencher,
+                               cases: &mut Vec<Json>|
+         -> Result<f64> {
+            let mut tb = build_testbed(cfg)?;
+            tb.sim.start();
+            tb.sim.run()?;
+            let events = tb.sim.trace.events_processed;
+            let r = b.bench(&format!("sim m=38 telemetry {variant} ({events} events)"), || {
+                let mut tb = build_testbed(cfg).unwrap();
+                tb.sim.start();
+                black_box(tb.sim.run().unwrap());
+            });
+            push_bench_case(cases, "sim m=38 telemetry", variant, r.median_ns(), events, 0);
+            Ok(r.median_ns())
+        };
+        let off_ns = run_variant("off", &cfg, &mut b, &mut cases)?;
+        cfg.obs.enabled = true;
+        let on_ns = run_variant("on", &cfg, &mut b, &mut cases)?;
+        headline(&mut headlines, "telemetry_on_efficiency", off_ns, on_ns);
     }
 
     // --- native compute: bit-exact encoder forward ---
@@ -461,6 +575,32 @@ fn cmd_bench(args: &Args) -> Result<()> {
     std::fs::write(&out_path, doc.pretty())?;
     println!("\nwrote {out_path} (speedup target: >= 3x sim/native, >= 2x parallel@8t)");
     galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}
+
+/// `bench --profile`: self-profile the 12-encoder serving-scale chain
+/// instead of running the suite — sequential vs parallel engine, with
+/// events/window, barrier-wait share, and wall-ns per simulated cycle.
+fn cmd_bench_profile(args: &Args) -> Result<()> {
+    use galapagos_llm::eval::testbed::TestbedConfig;
+    use galapagos_llm::util::pool;
+
+    let quick = args.bool_or("quick", false)?;
+    let m = if quick { 38 } else { 128 };
+    let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
+    cfg.encoders = 12;
+    cfg.inferences = if quick { 2 } else { 6 };
+    cfg.obs.profile = true;
+    println!("self-profiling the 12-encoder chain @ m={m}, {} inference(s)", cfg.inferences);
+    for threads in [1usize, pool::sim_threads().max(2)] {
+        let mut c = cfg.clone();
+        c.threads = Some(threads);
+        let mut tb = build_testbed(&c)?;
+        tb.sim.start();
+        tb.sim.run()?;
+        let p = tb.sim.last_profile.as_ref().expect("profiling was enabled");
+        println!("[threads={threads}] {}", p.render());
+    }
     Ok(())
 }
 
@@ -605,7 +745,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Stream open-loop request traffic through an N-encoder pipeline in the
 /// discrete-event simulator and report serving metrics + the Eq. 1 check.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
-    use galapagos_llm::serve::{run_serving, ArrivalProcess, LengthDist, ServeConfig};
+    use galapagos_llm::serve::{run_serving_with_obs, ArrivalProcess, LengthDist, ServeConfig};
 
     let quick = args.bool_or("quick", false)?;
     let encoders = args.usize_or("encoders", 6)?;
@@ -621,6 +761,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     cfg.drop_probability = args.f64_or("drop", 0.0)?;
     cfg.reliable = args.bool_or("reliable", false)?;
     cfg.fail = parse_fail(args)?;
+    cfg.obs = parse_obs(args)?;
 
     if args.bool_or("place", false)? {
         // per-encoder placement from the PR 1 placer (possibly over the
@@ -676,7 +817,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let report = run_serving(&cfg)?;
+    let (report, obs_out) = run_serving_with_obs(&cfg)?;
     println!("{}", report.render());
     println!(
         "(DES: {} events in {:.1} ms wall)",
@@ -690,6 +831,15 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if let Some(path) = out {
         std::fs::write(&path, report.to_json().pretty())?;
         println!("report written to {path}");
+    }
+    if let (Some(path), Some(text)) = (args.str_opt("trace-out"), obs_out.trace_json.as_ref()) {
+        std::fs::write(path, text)?;
+        println!("trace written to {path}");
+    }
+    if let (Some(path), Some(text)) = (args.str_opt("metrics-out"), obs_out.metrics_jsonl.as_ref())
+    {
+        std::fs::write(path, text)?;
+        println!("metrics written to {path}");
     }
     Ok(())
 }

@@ -1,0 +1,194 @@
+//! Chrome trace-event exporter (`--trace-out`).
+//!
+//! Spans are *derived at export time* from the per-request endpoint
+//! stats the marked kernels collected (`TraceObs::per_inf`) — the hot
+//! path never allocates span objects. Request lifecycle phases are
+//! emitted as async begin/end pairs (`"ph":"b"` / `"ph":"e"`, one
+//! async track per request id) because stage residencies of one
+//! request overlap in time and would not nest as synchronous slices.
+//! Retransmit stalls become `"X"` slices on the fabric process, and
+//! failure / recovery instants become `"ph":"i"` events.
+//!
+//! The output is the standard JSON object form
+//! (`{"traceEvents": [...]}`) and loads directly in Perfetto /
+//! `chrome://tracing`.
+
+use crate::cycles_to_us;
+use crate::obs::metrics::FabricObs;
+use crate::obs::span::TraceObs;
+
+/// One request as the serving layer saw it: scheduled arrival,
+/// sequence length and (if it completed) the cycle the sink finished.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub inference: u32,
+    pub arrival: u64,
+    pub m: u32,
+    pub done: Option<u64>,
+}
+
+/// Which marked kernels play which role in the span model (dense ids).
+#[derive(Debug, Clone, Default)]
+pub struct SpanRoles {
+    /// Traffic source (queue spans end at its first tx per request).
+    pub source: Option<u32>,
+    /// Per encoder: (gateway dense id, stage-output dense id).
+    pub stages: Vec<(u32, u32)>,
+    /// Evaluation sink (delivery spans).
+    pub sink: Option<u32>,
+}
+
+fn push_async(
+    out: &mut Vec<String>,
+    ph: char,
+    name: &str,
+    inf: u32,
+    t: u64,
+    args: Option<String>,
+) {
+    let args = args.map_or(String::new(), |a| format!(",\"args\":{a}"));
+    out.push(format!(
+        "{{\"ph\":\"{ph}\",\"cat\":\"request\",\"id\":\"r{inf}\",\"pid\":1,\"tid\":{inf},\"name\":\"{name}\",\"ts\":{:.3}{args}}}",
+        cycles_to_us(t)
+    ));
+}
+
+/// Render the full Chrome trace JSON. Deterministic: requests in the
+/// caller's (arrival) order, stages in pipeline order, instants and
+/// retransmit spans sorted.
+pub fn render_chrome_trace(
+    requests: &[RequestOutcome],
+    roles: &SpanRoles,
+    tobs: &TraceObs,
+    fobs: Option<&FabricObs>,
+) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    for (pid, name) in [(0, "fleet"), (1, "requests"), (2, "fabric")] {
+        ev.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+
+    for r in requests {
+        let inf = r.inference;
+        let serialize = fobs.and_then(|f| f.serialize_wait.get(&inf)).copied().unwrap_or(0);
+        let retx = fobs.and_then(|f| f.retx_stall.get(&inf)).copied().unwrap_or(0);
+        let outage = tobs.outage_hold.get(&inf).copied().unwrap_or(0);
+        if let Some(done) = r.done {
+            let args = format!(
+                "{{\"m\":{},\"total_cycles\":{},\"serialize_wait_cycles\":{serialize},\"retransmit_stall_cycles\":{retx},\"outage_hold_cycles\":{outage}}}",
+                r.m,
+                done - r.arrival
+            );
+            push_async(&mut ev, 'b', "request", inf, r.arrival, Some(args));
+            push_async(&mut ev, 'e', "request", inf, done, None);
+        }
+        // Source queueing: scheduled arrival -> first packet injected.
+        if let Some(first_tx) =
+            roles.source.and_then(|s| tobs.mark(s, inf)).and_then(|m| m.first_tx)
+        {
+            if first_tx >= r.arrival {
+                push_async(&mut ev, 'b', "queue", inf, r.arrival, None);
+                push_async(&mut ev, 'e', "queue", inf, first_tx, None);
+            }
+        }
+        // Stage residency: gateway first rx -> stage-output last tx.
+        for (e, (gw, outk)) in roles.stages.iter().enumerate() {
+            let enter = tobs.mark(*gw, inf).and_then(|m| m.first_rx);
+            let leave = tobs.mark(*outk, inf).and_then(|m| m.last_tx);
+            if let (Some(a), Some(z)) = (enter, leave) {
+                if z >= a {
+                    let name = format!("encoder{e}");
+                    push_async(&mut ev, 'b', &name, inf, a, None);
+                    push_async(&mut ev, 'e', &name, inf, z, None);
+                }
+            }
+        }
+        // Delivery at the evaluation sink.
+        if let Some(m) = roles.sink.and_then(|s| tobs.mark(s, inf)) {
+            if let (Some(a), Some(z)) = (m.first_rx, m.last_rx) {
+                if z >= a {
+                    push_async(&mut ev, 'b', "sink", inf, a, None);
+                    push_async(&mut ev, 'e', "sink", inf, z, None);
+                }
+            }
+        }
+    }
+
+    for i in tobs.sorted_instants() {
+        ev.push(format!(
+            "{{\"ph\":\"i\",\"pid\":0,\"tid\":{},\"name\":\"{}\",\"ts\":{:.3},\"s\":\"g\",\"args\":{{\"fpga\":{}}}}}",
+            i.fpga,
+            i.kind,
+            cycles_to_us(i.t),
+            i.fpga
+        ));
+    }
+
+    if let Some(f) = fobs {
+        for (start, dur, src, dst) in f.sorted_retx_spans() {
+            ev.push(format!(
+                "{{\"ph\":\"X\",\"pid\":2,\"tid\":{src},\"name\":\"retransmit\",\"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"dst_fpga\":{dst}}}}}",
+                cycles_to_us(start),
+                cycles_to_us(dur)
+            ));
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&ev.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn trace_is_valid_json_with_balanced_async_pairs() {
+        let src = 0x0101u32;
+        let gw = 0x0000u32;
+        let outk = 0x0020u32;
+        let mut tobs = TraceObs::new(100, vec![src, gw, outk]);
+        tobs.on_tx_marked(src, 0, 120);
+        tobs.on_rx_marked(gw, 0, 150);
+        tobs.on_tx_marked(outk, 0, 900);
+        tobs.on_instant(500, 3, "fail");
+        tobs.on_instant(700, 3, "recover");
+        let mut fobs = FabricObs::new(100);
+        fobs.on_retx(0, 300, 512, 1, 0, 1);
+        let reqs = vec![RequestOutcome { inference: 0, arrival: 100, m: 4, done: Some(1000) }];
+        let roles =
+            SpanRoles { source: Some(src), stages: vec![(gw, outk)], sink: None };
+        let text = render_chrome_trace(&reqs, &roles, &tobs, Some(&fobs));
+        let doc = Json::parse(&text).expect("valid JSON");
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let mut begins = 0i64;
+        let mut ends = 0i64;
+        for e in evs {
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            assert!(e.get("ts").is_some() || ph == "M");
+            match ph {
+                "b" => begins += 1,
+                "e" => ends += 1,
+                "X" => assert!(e.get("dur").is_some()),
+                _ => {}
+            }
+        }
+        assert_eq!(begins, ends);
+        assert!(begins >= 3, "request + queue + encoder0 spans expected");
+        assert!(text.contains("\"name\":\"fail\""));
+        assert!(text.contains("\"name\":\"retransmit\""));
+    }
+
+    #[test]
+    fn incomplete_requests_get_no_request_span() {
+        let tobs = TraceObs::new(100, vec![]);
+        let reqs = vec![RequestOutcome { inference: 7, arrival: 5, m: 1, done: None }];
+        let text = render_chrome_trace(&reqs, &SpanRoles::default(), &tobs, None);
+        assert!(!text.contains("\"id\":\"r7\""));
+        assert!(Json::parse(&text).is_ok());
+    }
+}

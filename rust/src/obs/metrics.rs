@@ -1,0 +1,339 @@
+//! Fabric-side telemetry collector and the streaming-metrics exporter.
+//!
+//! `FabricObs` rides inside [`crate::sim::fabric::Fabric`] and charges
+//! link occupancy, drops and retransmit stalls into fixed-width cycle
+//! buckets as `deliver` computes them — constant memory in the number
+//! of requests, linear only in simulated time / bucket width.
+//!
+//! [`render_metrics_jsonl`] turns the collectors into the
+//! `obs_metrics/v1` JSONL stream (`--metrics-out`): one header line,
+//! one line per cycle bucket with fleet-level aggregates, then one
+//! summary line per kernel / FIFO / link. Every line is hand-formatted
+//! with a fixed key order so the output is byte-identical across
+//! `--threads` counts.
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::{add_buckets, bump, TraceObs};
+use crate::sim::fabric::FabricStats;
+use crate::sim::packet::GlobalKernelId;
+use crate::sim::trace::Trace;
+
+/// Occupancy charged into the bucket containing each transfer's *start*
+/// cycle (a transfer crossing a bucket boundary is not split — the
+/// approximation is documented in DESIGN.md "Observability").
+#[derive(Debug, Clone)]
+pub struct FabricObs {
+    /// Bucket width in cycles.
+    pub interval: u64,
+    /// Kernel-egress busy flit-cycles per bucket, fleet-wide.
+    pub bucket_egress_busy: Vec<u64>,
+    /// NIC busy flit-cycles per bucket, fleet-wide.
+    pub bucket_nic_busy: Vec<u64>,
+    /// Dropped packet copies per bucket.
+    pub bucket_drops: Vec<u64>,
+    /// Retransmitted copies per bucket.
+    pub bucket_retx: Vec<u64>,
+    /// inference -> cycles spent waiting for a busy egress/NIC link.
+    pub serialize_wait: BTreeMap<u32, u64>,
+    /// inference -> extra cycles added by reliable-mode retransmits.
+    pub retx_stall: BTreeMap<u32, u64>,
+    /// dense kernel id -> total egress busy flit-cycles.
+    pub egress_busy: BTreeMap<u32, u64>,
+    /// src fpga -> total NIC busy flit-cycles.
+    pub nic_busy: BTreeMap<u32, u64>,
+    /// Retransmit stall spans: (start, dur, src_fpga, dst_fpga).
+    pub retx_spans: Vec<(u64, u64, u32, u32)>,
+}
+
+impl FabricObs {
+    pub fn new(interval: u64) -> FabricObs {
+        FabricObs {
+            interval: interval.max(1),
+            bucket_egress_busy: Vec::new(),
+            bucket_nic_busy: Vec::new(),
+            bucket_drops: Vec::new(),
+            bucket_retx: Vec::new(),
+            serialize_wait: BTreeMap::new(),
+            retx_stall: BTreeMap::new(),
+            egress_busy: BTreeMap::new(),
+            nic_busy: BTreeMap::new(),
+            retx_spans: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, t: u64) -> usize {
+        (t / self.interval) as usize
+    }
+
+    /// A kernel-egress transfer: `flits` cycles of occupancy starting
+    /// at `start`, after `wait` cycles of contention for the link.
+    #[inline]
+    pub fn on_egress(&mut self, dense: u32, inference: u32, start: u64, flits: u64, wait: u64) {
+        let b = self.bucket(start);
+        bump(&mut self.bucket_egress_busy, b, flits);
+        *self.egress_busy.entry(dense).or_insert(0) += flits;
+        if wait > 0 {
+            *self.serialize_wait.entry(inference).or_insert(0) += wait;
+        }
+    }
+
+    /// A NIC transfer on `src_fpga`'s 100G port.
+    #[inline]
+    pub fn on_nic(&mut self, src_fpga: u32, inference: u32, start: u64, flits: u64, wait: u64) {
+        let b = self.bucket(start);
+        bump(&mut self.bucket_nic_busy, b, flits);
+        *self.nic_busy.entry(src_fpga).or_insert(0) += flits;
+        if wait > 0 {
+            *self.serialize_wait.entry(inference).or_insert(0) += wait;
+        }
+    }
+
+    /// One dropped packet copy at send time `t`.
+    #[inline]
+    pub fn on_drop(&mut self, t: u64) {
+        let b = self.bucket(t);
+        bump(&mut self.bucket_drops, b, 1);
+    }
+
+    /// A reliable-mode retransmit episode: `copies` resends stretching
+    /// the transfer by `stall` cycles starting at `start`.
+    pub fn on_retx(
+        &mut self,
+        inference: u32,
+        start: u64,
+        stall: u64,
+        copies: u64,
+        src_fpga: u32,
+        dst_fpga: u32,
+    ) {
+        let b = self.bucket(start);
+        bump(&mut self.bucket_retx, b, copies);
+        *self.retx_stall.entry(inference).or_insert(0) += stall;
+        self.retx_spans.push((start, stall, src_fpga, dst_fpga));
+    }
+
+    /// Fold a per-shard collector back in (commutative).
+    pub fn merge(&mut self, o: &FabricObs) {
+        debug_assert_eq!(self.interval, o.interval);
+        add_buckets(&mut self.bucket_egress_busy, &o.bucket_egress_busy);
+        add_buckets(&mut self.bucket_nic_busy, &o.bucket_nic_busy);
+        add_buckets(&mut self.bucket_drops, &o.bucket_drops);
+        add_buckets(&mut self.bucket_retx, &o.bucket_retx);
+        for (k, v) in &o.serialize_wait {
+            *self.serialize_wait.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &o.retx_stall {
+            *self.retx_stall.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &o.egress_busy {
+            *self.egress_busy.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &o.nic_busy {
+            *self.nic_busy.entry(*k).or_insert(0) += v;
+        }
+        self.retx_spans.extend_from_slice(&o.retx_spans);
+    }
+
+    /// Retransmit spans in deterministic order for export.
+    pub fn sorted_retx_spans(&self) -> Vec<(u64, u64, u32, u32)> {
+        let mut v = self.retx_spans.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Point-in-time FIFO state collected from the kernel slots after a run.
+#[derive(Debug, Clone, Copy)]
+pub struct FifoSnapshot {
+    pub occupancy: u64,
+    pub high_water: u64,
+    pub capacity_bytes: u64,
+    pub overflows: u64,
+}
+
+fn kid(k: GlobalKernelId) -> String {
+    format!("c{}k{}", k.cluster, k.kernel)
+}
+
+fn kid_dense(dense: u32) -> String {
+    format!("c{}k{}", dense >> 8, dense & 0xff)
+}
+
+/// Render the `obs_metrics/v1` JSONL stream. Deterministic: fixed key
+/// order, integer cycle counts, and `busy_frac` printed at fixed
+/// precision from thread-invariant inputs.
+pub fn render_metrics_jsonl(
+    trace: &Trace,
+    tobs: &TraceObs,
+    fobs: Option<&FabricObs>,
+    fifos: &[(GlobalKernelId, FifoSnapshot)],
+    fleet: &FabricStats,
+    makespan: u64,
+) -> String {
+    let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+    let mut buckets = tobs
+        .bucket_events
+        .len()
+        .max(tobs.bucket_wakes.len())
+        .max(tobs.bucket_fifo_peak.len());
+    if let Some(f) = fobs {
+        buckets = buckets
+            .max(f.bucket_egress_busy.len())
+            .max(f.bucket_nic_busy.len())
+            .max(f.bucket_drops.len())
+            .max(f.bucket_retx.len());
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"type\":\"header\",\"schema\":\"obs_metrics/v1\",\"interval_cycles\":{},\"makespan_cycles\":{},\"buckets\":{}}}\n",
+        tobs.interval, makespan, buckets
+    ));
+
+    for b in 0..buckets {
+        let (eb, nb, dr, rx) = match fobs {
+            Some(f) => (
+                at(&f.bucket_egress_busy, b),
+                at(&f.bucket_nic_busy, b),
+                at(&f.bucket_drops, b),
+                at(&f.bucket_retx, b),
+            ),
+            None => (0, 0, 0, 0),
+        };
+        out.push_str(&format!(
+            "{{\"type\":\"bucket\",\"start_cycle\":{},\"events\":{},\"wakes\":{},\"fifo_peak_bytes\":{},\"egress_busy_flit_cycles\":{},\"nic_busy_flit_cycles\":{},\"drops\":{},\"retransmits\":{}}}\n",
+            b as u64 * tobs.interval,
+            at(&tobs.bucket_events, b),
+            at(&tobs.bucket_wakes, b),
+            at(&tobs.bucket_fifo_peak, b),
+            eb,
+            nb,
+            dr,
+            rx
+        ));
+    }
+
+    // Per-kernel activity, in (deterministic) registration order.
+    for (id, st) in trace.kernels() {
+        let lo = [st.first_rx, st.first_tx].iter().flatten().min().copied();
+        let hi = [st.last_rx, st.last_tx].iter().flatten().max().copied();
+        let busy_frac = match (lo, hi) {
+            (Some(a), Some(z)) if makespan > 0 => (z - a) as f64 / makespan as f64,
+            _ => 0.0,
+        };
+        out.push_str(&format!(
+            "{{\"type\":\"kernel\",\"id\":\"{}\",\"rx_packets\":{},\"tx_packets\":{},\"wakes\":{},\"busy_frac\":{:.6}}}\n",
+            kid(id),
+            st.rx_packets,
+            st.tx_packets,
+            st.wakes,
+            busy_frac
+        ));
+    }
+
+    for (id, f) in fifos {
+        out.push_str(&format!(
+            "{{\"type\":\"fifo\",\"id\":\"{}\",\"high_water_bytes\":{},\"capacity_bytes\":{},\"overflows\":{}}}\n",
+            kid(*id),
+            f.high_water,
+            f.capacity_bytes,
+            f.overflows
+        ));
+    }
+
+    if let Some(f) = fobs {
+        for (dense, busy) in &f.egress_busy {
+            out.push_str(&format!(
+                "{{\"type\":\"link\",\"kind\":\"kernel_egress\",\"id\":\"{}\",\"busy_flit_cycles\":{}}}\n",
+                kid_dense(*dense),
+                busy
+            ));
+        }
+        for (fpga, busy) in &f.nic_busy {
+            out.push_str(&format!(
+                "{{\"type\":\"link\",\"kind\":\"nic\",\"fpga\":{},\"busy_flit_cycles\":{}}}\n",
+                fpga, busy
+            ));
+        }
+    }
+
+    let (ser, stall) = match fobs {
+        Some(f) => (
+            f.serialize_wait.values().sum::<u64>(),
+            f.retx_stall.values().sum::<u64>(),
+        ),
+        None => (0, 0),
+    };
+    out.push_str(&format!(
+        "{{\"type\":\"summary\",\"packets\":{},\"flits\":{},\"inter_fpga_packets\":{},\"dropped\":{},\"retransmits\":{},\"outage_holds\":{},\"serialize_wait_cycles\":{},\"retransmit_stall_cycles\":{},\"outage_hold_cycles\":{}}}\n",
+        fleet.packets,
+        fleet.flits,
+        fleet.inter_fpga_packets,
+        fleet.dropped,
+        fleet.retransmits,
+        tobs.outage_holds,
+        ser,
+        stall,
+        tobs.outage_hold.values().sum::<u64>()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_obs_buckets_and_merge() {
+        let mut a = FabricObs::new(100);
+        a.on_egress(5, 0, 10, 12, 3);
+        a.on_nic(0, 0, 150, 12, 0);
+        a.on_drop(150);
+        a.on_retx(0, 200, 512, 1, 0, 1);
+        let mut b = FabricObs::new(100);
+        b.on_egress(5, 1, 110, 12, 0);
+        a.merge(&b);
+        assert_eq!(a.bucket_egress_busy, vec![12, 12]);
+        assert_eq!(a.bucket_nic_busy, vec![0, 12]);
+        assert_eq!(a.bucket_drops, vec![0, 1]);
+        assert_eq!(a.bucket_retx, vec![0, 0, 1]);
+        assert_eq!(a.egress_busy.get(&5), Some(&24));
+        assert_eq!(a.serialize_wait.get(&0), Some(&3));
+        assert_eq!(a.retx_stall.get(&0), Some(&512));
+        assert_eq!(a.sorted_retx_spans(), vec![(200, 512, 0, 1)]);
+    }
+
+    #[test]
+    fn metrics_jsonl_shape() {
+        let mut trace = Trace::default();
+        let k = GlobalKernelId::new(0, 3);
+        let s = trace.register(k);
+        trace.on_rx_slot(s, 10);
+        trace.on_tx_slot(s, 90);
+        trace.wake_slot(s);
+        let mut tobs = TraceObs::new(50, vec![]);
+        tobs.on_event(10);
+        tobs.on_fifo_depth(60, 768);
+        let fifos = vec![(
+            k,
+            FifoSnapshot { occupancy: 0, high_water: 768, capacity_bytes: 4096, overflows: 0 },
+        )];
+        let fleet = FabricStats::default();
+        let text = render_metrics_jsonl(&trace, &tobs, None, &fifos, &fleet, 100);
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("\"schema\":\"obs_metrics/v1\""));
+        assert!(lines[0].contains("\"buckets\":2"));
+        assert!(text.contains("\"type\":\"bucket\",\"start_cycle\":50"));
+        assert!(text.contains("\"type\":\"kernel\",\"id\":\"c0k3\""));
+        assert!(text.contains("\"wakes\":1"));
+        assert!(text.contains("\"busy_frac\":0.800000"));
+        assert!(text.contains("\"type\":\"fifo\",\"id\":\"c0k3\",\"high_water_bytes\":768"));
+        assert!(text.ends_with("}\n"));
+        // every line parses as JSON
+        for l in lines {
+            assert!(crate::util::json::Json::parse(l).is_ok(), "{l}");
+        }
+    }
+}

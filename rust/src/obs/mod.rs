@@ -1,0 +1,262 @@
+//! Cycle-domain telemetry: span traces, streaming fleet metrics, and
+//! simulator self-profiling.
+//!
+//! The paper can only observe its platform end-to-end (Table 1's X/T/I
+//! measured at the evaluation FPGA); the simulator can see everything.
+//! This module turns that visibility into three artifacts:
+//!
+//! 1. **Span traces** ([`chrome`]) — per-request lifecycle spans
+//!    (source queueing, per-encoder stage residency, retransmit
+//!    stalls, outage holds) plus failure/recovery instants, exported
+//!    as Chrome trace-event JSON (`--trace-out`, loads in Perfetto).
+//! 2. **Streaming metrics** ([`metrics`]) — constant-memory,
+//!    cycle-bucketed fleet series (`--metrics-out`): link utilization,
+//!    FIFO depth, kernel busy fraction and wakes, drops/retransmits —
+//!    and the bottleneck-attribution section of `serving_report/v3`.
+//! 3. **Self-profile** ([`profile`]) — events per conservative window,
+//!    barrier-wait time, wall-ns per simulated cycle (`--profile`,
+//!    `bench --profile`).
+//!
+//! Collectors ([`span::TraceObs`], [`metrics::FabricObs`]) live as
+//! `Option<Box<_>>` inside the structs the hot path already owns, so a
+//! disabled run pays one predictable branch per event, and they merge
+//! exactly across shards: all reported numbers are bit-identical at
+//! every `--threads` count.
+
+pub mod chrome;
+pub mod metrics;
+pub mod profile;
+pub mod span;
+
+pub use chrome::{render_chrome_trace, RequestOutcome, SpanRoles};
+pub use metrics::{render_metrics_jsonl, FabricObs, FifoSnapshot};
+pub use profile::SimProfile;
+pub use span::{InstantEvent, MarkStats, TraceObs, DEFAULT_INTERVAL};
+
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+
+/// Telemetry knobs threaded from the CLI down to the testbed.
+#[derive(Debug, Clone, Default)]
+pub struct ObsSettings {
+    /// Collect spans + metrics (drives `--trace-out` / `--metrics-out`
+    /// and the report's `telemetry` section).
+    pub enabled: bool,
+    /// Metrics bucket width in cycles; 0 = [`DEFAULT_INTERVAL`].
+    pub metrics_interval: u64,
+    /// Collect the (wall-clock, nondeterministic) simulator
+    /// self-profile and attach a `sim_profile` report section.
+    pub profile: bool,
+}
+
+impl ObsSettings {
+    pub fn interval(&self) -> u64 {
+        if self.metrics_interval == 0 {
+            DEFAULT_INTERVAL
+        } else {
+            self.metrics_interval
+        }
+    }
+}
+
+/// Per-request cycle attribution: where one inference's end-to-end
+/// latency went. `compute` is the residual (on-FPGA compute plus
+/// uncontended flight time) after the measured components.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Attribution {
+    pub total: u64,
+    pub queue: u64,
+    pub serialize: u64,
+    pub retransmit: u64,
+    pub outage: u64,
+    pub compute: u64,
+}
+
+/// Attribute one completed request from the collectors.
+pub fn attribute_request(
+    r: &RequestOutcome,
+    roles: &SpanRoles,
+    tobs: &TraceObs,
+    fobs: Option<&FabricObs>,
+) -> Option<Attribution> {
+    let done = r.done?;
+    let total = done.saturating_sub(r.arrival);
+    let queue = roles
+        .source
+        .and_then(|s| tobs.mark(s, r.inference))
+        .and_then(|m| m.first_tx)
+        .map_or(0, |t| t.saturating_sub(r.arrival));
+    let serialize = fobs.and_then(|f| f.serialize_wait.get(&r.inference)).copied().unwrap_or(0);
+    let retransmit = fobs.and_then(|f| f.retx_stall.get(&r.inference)).copied().unwrap_or(0);
+    let outage = tobs.outage_hold.get(&r.inference).copied().unwrap_or(0);
+    let compute = total
+        .saturating_sub(queue)
+        .saturating_sub(serialize)
+        .saturating_sub(retransmit)
+        .saturating_sub(outage);
+    Some(Attribution { total, queue, serialize, retransmit, outage, compute })
+}
+
+/// Nearest-rank percentile over unsorted u64 samples.
+fn pctl(samples: &mut [u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.clamp(1, samples.len()) - 1]
+}
+
+/// Build the `telemetry` section of `serving_report/v3`: aggregate
+/// bottleneck attribution across completed requests, per-kernel wake
+/// telemetry (the previously dead `KernelStats::wakes` counter), and
+/// fleet-level link totals. Everything here is thread-invariant.
+pub fn telemetry_section(
+    requests: &[RequestOutcome],
+    roles: &SpanRoles,
+    trace: &Trace,
+    tobs: &TraceObs,
+    fobs: Option<&FabricObs>,
+) -> Json {
+    let parts: Vec<Attribution> =
+        requests.iter().filter_map(|r| attribute_request(r, roles, tobs, fobs)).collect();
+    let comp = |f: fn(&Attribution) -> u64| -> (u64, f64, u64) {
+        let total: u64 = parts.iter().map(f).sum();
+        let mean = if parts.is_empty() { 0.0 } else { total as f64 / parts.len() as f64 };
+        let mut v: Vec<u64> = parts.iter().map(f).collect();
+        (total, mean, pctl(&mut v, 95.0))
+    };
+    let components: Vec<(&str, fn(&Attribution) -> u64)> = vec![
+        ("queue", |a| a.queue),
+        ("compute", |a| a.compute),
+        ("serialize", |a| a.serialize),
+        ("retransmit", |a| a.retransmit),
+        ("outage", |a| a.outage),
+        ("total", |a| a.total),
+    ];
+    let mut totals = Vec::new();
+    let mut means = Vec::new();
+    let mut p95s = Vec::new();
+    for (name, f) in &components {
+        let (t, m, p) = comp(*f);
+        totals.push((*name, Json::Num(t as f64)));
+        means.push((*name, Json::Num(m)));
+        p95s.push((*name, Json::Num(p as f64)));
+    }
+
+    // Per-kernel wakes: fleet total plus the top wakers (ties broken
+    // by kernel id for determinism).
+    let mut wakes: Vec<(u64, u32, u64, u64)> = trace
+        .kernels()
+        .map(|(id, st)| (st.wakes, id.dense() as u32, st.rx_packets, st.tx_packets))
+        .collect();
+    let wakes_total: u64 = wakes.iter().map(|w| w.0).sum();
+    wakes.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let top: Vec<Json> = wakes
+        .iter()
+        .take(8)
+        .filter(|w| w.0 > 0)
+        .map(|(w, dense, rx, tx)| {
+            Json::obj(vec![
+                ("id", Json::Str(format!("c{}k{}", dense >> 8, dense & 0xff))),
+                ("wakes", Json::Num(*w as f64)),
+                ("rx_packets", Json::Num(*rx as f64)),
+                ("tx_packets", Json::Num(*tx as f64)),
+            ])
+        })
+        .collect();
+
+    let (egress, nic) = match fobs {
+        Some(f) => (
+            f.egress_busy.values().sum::<u64>(),
+            f.nic_busy.values().sum::<u64>(),
+        ),
+        None => (0, 0),
+    };
+
+    Json::obj(vec![
+        ("requests_attributed", Json::Num(parts.len() as f64)),
+        (
+            "attribution",
+            Json::obj(vec![
+                ("totals_cycles", Json::obj(totals)),
+                ("mean_cycles", Json::obj(means)),
+                ("p95_cycles", Json::obj(p95s)),
+            ]),
+        ),
+        (
+            "wakes",
+            Json::obj(vec![
+                ("total", Json::Num(wakes_total as f64)),
+                ("top_kernels", Json::Arr(top)),
+            ]),
+        ),
+        (
+            "fleet",
+            Json::obj(vec![
+                ("egress_busy_flit_cycles", Json::Num(egress as f64)),
+                ("nic_busy_flit_cycles", Json::Num(nic as f64)),
+                ("outage_holds", Json::Num(tobs.outage_holds as f64)),
+                (
+                    "outage_hold_cycles",
+                    Json::Num(tobs.outage_hold.values().sum::<u64>() as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::packet::GlobalKernelId;
+
+    #[test]
+    fn attribution_splits_and_residual() {
+        let src = GlobalKernelId::new(9, 1).dense() as u32;
+        let mut tobs = TraceObs::new(100, vec![src]);
+        tobs.on_tx_marked(src, 0, 150); // queued 100..150
+        tobs.on_outage_hold(0, 20);
+        let mut fobs = FabricObs::new(100);
+        fobs.on_egress(3, 0, 200, 12, 30); // 30 cycles of serialize wait
+        fobs.on_retx(0, 400, 512, 1, 0, 1);
+        let r = RequestOutcome { inference: 0, arrival: 100, m: 2, done: Some(1100) };
+        let roles = SpanRoles { source: Some(src), stages: vec![], sink: None };
+        let a = attribute_request(&r, &roles, &tobs, Some(&fobs)).unwrap();
+        assert_eq!(a.total, 1000);
+        assert_eq!(a.queue, 50);
+        assert_eq!(a.serialize, 30);
+        assert_eq!(a.retransmit, 512);
+        assert_eq!(a.outage, 20);
+        assert_eq!(a.compute, 1000 - 50 - 30 - 512 - 20);
+        // incomplete request attributes to None
+        let r2 = RequestOutcome { done: None, ..r };
+        assert!(attribute_request(&r2, &roles, &tobs, Some(&fobs)).is_none());
+    }
+
+    #[test]
+    fn telemetry_section_reports_wakes() {
+        let mut trace = Trace::default();
+        let k = GlobalKernelId::new(0, 4);
+        let s = trace.register(k);
+        for _ in 0..3 {
+            trace.wake_slot(s);
+        }
+        let tobs = TraceObs::new(100, vec![]);
+        let j = telemetry_section(&[], &SpanRoles::default(), &trace, &tobs, None);
+        assert_eq!(j.path("wakes.total").and_then(Json::as_i64), Some(3));
+        let top = j.path("wakes.top_kernels").and_then(Json::as_arr).unwrap();
+        assert_eq!(top.len(), 1);
+        assert_eq!(top[0].get("id").and_then(Json::as_str), Some("c0k4"));
+        assert_eq!(j.path("requests_attributed").and_then(Json::as_i64), Some(0));
+    }
+
+    #[test]
+    fn pctl_nearest_rank() {
+        let mut v = vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(pctl(&mut v, 95.0), 100);
+        assert_eq!(pctl(&mut v.clone(), 50.0), 50);
+        let mut empty: Vec<u64> = vec![];
+        assert_eq!(pctl(&mut empty, 95.0), 0);
+    }
+}

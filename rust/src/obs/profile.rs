@@ -1,0 +1,150 @@
+//! Simulator self-profiling (`--profile`, `bench --profile`).
+//!
+//! Answers "where does the *simulator's* wall clock go" — the question
+//! the ROADMAP's fleet-scale item needs answered before thousand-FPGA
+//! runs: events per conservative window, time spent parked on the
+//! 3-barrier worker loop, and wall-ns per simulated cycle.
+//!
+//! Everything in here is wall-clock derived and therefore **not**
+//! deterministic: the `sim_profile` section is only attached to a
+//! report when profiling was explicitly requested, and the
+//! thread-parity / golden-determinism suites never enable it.
+
+use crate::util::json::Json;
+
+/// Accumulated self-profile of one `Sim` across its `run_until` calls.
+#[derive(Debug, Clone, Default)]
+pub struct SimProfile {
+    /// "sequential", "parallel", or "mixed" when both paths ran.
+    pub engine: String,
+    /// Worker threads used by the parallel path (0 for sequential).
+    pub threads: usize,
+    /// Shards in the last parallel partition.
+    pub shards: usize,
+    /// Conservative window width (cycles) of the last parallel run.
+    pub window: u64,
+    /// Barrier rounds executed by the windowed worker loop.
+    pub rounds: u64,
+    /// Events dispatched while profiling.
+    pub events: u64,
+    /// Simulated cycles advanced while profiling.
+    pub sim_cycles: u64,
+    /// Wall nanoseconds spent inside run_until.
+    pub wall_ns: u64,
+    /// Wall nanoseconds workers spent waiting on the round barriers.
+    pub barrier_wait_ns: u64,
+    /// Events dispatched by each shard (last parallel run).
+    pub per_shard_events: Vec<u64>,
+}
+
+impl SimProfile {
+    pub fn note_engine(&mut self, kind: &str) {
+        if self.engine.is_empty() {
+            self.engine = kind.to_string();
+        } else if self.engine != kind {
+            self.engine = "mixed".to_string();
+        }
+    }
+
+    pub fn wall_ns_per_sim_cycle(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.wall_ns as f64 / self.sim_cycles as f64
+    }
+
+    pub fn events_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.events as f64 / self.rounds as f64
+    }
+
+    pub fn barrier_frac(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        // Total park time across workers vs total worker wall time.
+        self.barrier_wait_ns as f64 / (self.wall_ns as f64 * self.threads.max(1) as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", Json::Str(self.engine.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("window_cycles", Json::Num(self.window as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("sim_cycles", Json::Num(self.sim_cycles as f64)),
+            ("wall_ns", Json::Num(self.wall_ns as f64)),
+            ("wall_ns_per_sim_cycle", Json::Num(self.wall_ns_per_sim_cycle())),
+            ("events_per_round", Json::Num(self.events_per_round())),
+            ("barrier_wait_ns", Json::Num(self.barrier_wait_ns as f64)),
+            ("barrier_wait_frac", Json::Num(self.barrier_frac())),
+            (
+                "per_shard_events",
+                Json::Arr(self.per_shard_events.iter().map(|&e| Json::Num(e as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "sim profile: engine={} threads={} shards={} window={} rounds={} events={} \
+             sim_cycles={} wall={:.2}ms ns/cycle={:.1} events/round={:.0} barrier={:.1}%",
+            self.engine,
+            self.threads,
+            self.shards,
+            self.window,
+            self.rounds,
+            self.events,
+            self.sim_cycles,
+            self.wall_ns as f64 / 1e6,
+            self.wall_ns_per_sim_cycle(),
+            self.events_per_round(),
+            100.0 * self.barrier_frac()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_ratios_and_json_shape() {
+        let mut p = SimProfile {
+            threads: 4,
+            shards: 6,
+            window: 220,
+            rounds: 10,
+            events: 1000,
+            sim_cycles: 2000,
+            wall_ns: 4000,
+            barrier_wait_ns: 800,
+            per_shard_events: vec![250, 250, 500],
+            ..Default::default()
+        };
+        p.note_engine("parallel");
+        p.note_engine("parallel");
+        assert_eq!(p.engine, "parallel");
+        p.note_engine("sequential");
+        assert_eq!(p.engine, "mixed");
+        assert_eq!(p.wall_ns_per_sim_cycle(), 2.0);
+        assert_eq!(p.events_per_round(), 100.0);
+        assert!((p.barrier_frac() - 0.05).abs() < 1e-12);
+        let j = p.to_json();
+        assert_eq!(j.path("events").and_then(Json::as_i64), Some(1000));
+        assert_eq!(j.get("per_shard_events").and_then(Json::as_arr).unwrap().len(), 3);
+        assert!(p.render().contains("engine=mixed"));
+    }
+
+    #[test]
+    fn empty_profile_divides_safely() {
+        let p = SimProfile::default();
+        assert_eq!(p.wall_ns_per_sim_cycle(), 0.0);
+        assert_eq!(p.events_per_round(), 0.0);
+        assert_eq!(p.barrier_frac(), 0.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Cycle-domain collectors that ride inside [`crate::sim::trace::Trace`].
+//!
+//! `TraceObs` is the engine-side half of the telemetry subsystem: it
+//! records (a) per-request endpoint stats at a small set of *marked*
+//! kernels (source, sink, per-encoder gateway and output), from which
+//! the exporter derives request lifecycle spans, (b) constant-memory
+//! cycle-bucketed fleet series (events, wakes, FIFO peak depth), and
+//! (c) outage bookkeeping from the §6 failure injector.
+//!
+//! Everything here is *exactly shard-mergeable*: counters add,
+//! per-inference maps merge key-wise with commutative min/max, bucket
+//! arrays add elementwise (peaks take max), and instants are sorted at
+//! export. A run at `--threads 8` therefore renders byte-identical
+//! traces and metrics to the same run at `--threads 1`.
+
+use std::collections::BTreeMap;
+
+/// Default metrics bucket width: the event-wheel horizon (8192 cycles
+/// = 40.96 us of fabric time), a natural granularity for the engine.
+pub const DEFAULT_INTERVAL: u64 = 8192;
+
+/// First/last rx/tx of one inference at one marked kernel. The span
+/// exporter turns these into queue / stage-residency spans.
+#[derive(Debug, Clone, Default)]
+pub struct MarkStats {
+    pub rx_packets: u64,
+    pub tx_packets: u64,
+    pub first_rx: Option<u64>,
+    pub last_rx: Option<u64>,
+    pub first_tx: Option<u64>,
+    pub last_tx: Option<u64>,
+}
+
+impl MarkStats {
+    fn on_rx(&mut self, t: u64) {
+        self.rx_packets += 1;
+        self.first_rx = Some(self.first_rx.map_or(t, |f| f.min(t)));
+        self.last_rx = Some(self.last_rx.map_or(t, |l| l.max(t)));
+    }
+    fn on_tx(&mut self, t: u64) {
+        self.tx_packets += 1;
+        self.first_tx = Some(self.first_tx.map_or(t, |f| f.min(t)));
+        self.last_tx = Some(self.last_tx.map_or(t, |l| l.max(t)));
+    }
+    fn merge(&mut self, o: &MarkStats) {
+        self.rx_packets += o.rx_packets;
+        self.tx_packets += o.tx_packets;
+        let min = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, y) => x.or(y),
+        };
+        let max = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(x), Some(y)) => Some(x.max(y)),
+            (x, y) => x.or(y),
+        };
+        self.first_rx = min(self.first_rx, o.first_rx);
+        self.last_rx = max(self.last_rx, o.last_rx);
+        self.first_tx = min(self.first_tx, o.first_tx);
+        self.last_tx = max(self.last_tx, o.last_tx);
+    }
+}
+
+/// A cluster-level instant (failure injection / recovery) for the
+/// Chrome trace's instant events.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct InstantEvent {
+    pub t: u64,
+    pub fpga: u32,
+    /// "fail" | "recover"
+    pub kind: &'static str,
+}
+
+/// Grow-and-add into a bucket vector.
+#[inline]
+pub(crate) fn bump(v: &mut Vec<u64>, b: usize, by: u64) {
+    if v.len() <= b {
+        v.resize(b + 1, 0);
+    }
+    v[b] += by;
+}
+
+/// Grow-and-max into a bucket vector.
+#[inline]
+pub(crate) fn bmax(v: &mut Vec<u64>, b: usize, x: u64) {
+    if v.len() <= b {
+        v.resize(b + 1, 0);
+    }
+    if v[b] < x {
+        v[b] = x;
+    }
+}
+
+/// Add `o` elementwise into `v`, growing as needed.
+pub(crate) fn add_buckets(v: &mut Vec<u64>, o: &[u64]) {
+    if v.len() < o.len() {
+        v.resize(o.len(), 0);
+    }
+    for (a, b) in v.iter_mut().zip(o.iter()) {
+        *a += b;
+    }
+}
+
+/// Max `o` elementwise into `v`, growing as needed.
+pub(crate) fn max_buckets(v: &mut Vec<u64>, o: &[u64]) {
+    if v.len() < o.len() {
+        v.resize(o.len(), 0);
+    }
+    for (a, b) in v.iter_mut().zip(o.iter()) {
+        if *a < *b {
+            *a = *b;
+        }
+    }
+}
+
+/// The trace-side telemetry collector. Lives as `Option<Box<TraceObs>>`
+/// inside [`crate::sim::trace::Trace`]; every hot-path touch is behind
+/// a single `Option` branch so a disabled run pays one predictable
+/// not-taken test per event.
+#[derive(Debug)]
+pub struct TraceObs {
+    /// Bucket width in cycles.
+    pub interval: u64,
+    /// Sorted dense kernel ids whose per-inference endpoints we track.
+    pub mark_set: Vec<u32>,
+    /// Per-trace-slot mark flag, parallel to the Trace slot vectors
+    /// (maintained by `Trace::register`).
+    pub marks: Vec<bool>,
+    /// (dense kernel id, inference) -> endpoint stats.
+    pub per_inf: BTreeMap<(u32, u32), MarkStats>,
+    /// Delivered events per bucket (packets + wakes), fleet-wide.
+    pub bucket_events: Vec<u64>,
+    /// Kernel wakes per bucket, fleet-wide.
+    pub bucket_wakes: Vec<u64>,
+    /// Max FIFO occupancy (bytes) observed in each bucket, fleet-wide.
+    pub bucket_fifo_peak: Vec<u64>,
+    /// Cycles each inference spent held behind a failed FPGA
+    /// (Hold::Buffer in the §6 injector): inference -> cycles.
+    pub outage_hold: BTreeMap<u32, u64>,
+    /// Total packet-holds across the run (all inferences).
+    pub outage_holds: u64,
+    /// Failure / recovery instants.
+    pub instants: Vec<InstantEvent>,
+}
+
+impl TraceObs {
+    pub fn new(interval: u64, mut mark_set: Vec<u32>) -> TraceObs {
+        mark_set.sort_unstable();
+        mark_set.dedup();
+        TraceObs {
+            interval: interval.max(1),
+            mark_set,
+            marks: Vec::new(),
+            per_inf: BTreeMap::new(),
+            bucket_events: Vec::new(),
+            bucket_wakes: Vec::new(),
+            bucket_fifo_peak: Vec::new(),
+            outage_hold: BTreeMap::new(),
+            outage_holds: 0,
+            instants: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn is_marked_dense(&self, dense: u32) -> bool {
+        self.mark_set.binary_search(&dense).is_ok()
+    }
+
+    #[inline]
+    fn bucket(&self, t: u64) -> usize {
+        (t / self.interval) as usize
+    }
+
+    #[inline]
+    pub fn on_event(&mut self, t: u64) {
+        let b = self.bucket(t);
+        bump(&mut self.bucket_events, b, 1);
+    }
+
+    #[inline]
+    pub fn on_wake_bucket(&mut self, t: u64) {
+        let b = self.bucket(t);
+        bump(&mut self.bucket_wakes, b, 1);
+    }
+
+    #[inline]
+    pub fn on_fifo_depth(&mut self, t: u64, occupancy: u64) {
+        let b = self.bucket(t);
+        bmax(&mut self.bucket_fifo_peak, b, occupancy);
+    }
+
+    #[inline]
+    pub fn on_rx_marked(&mut self, dense: u32, inference: u32, t: u64) {
+        self.per_inf.entry((dense, inference)).or_default().on_rx(t);
+    }
+
+    #[inline]
+    pub fn on_tx_marked(&mut self, dense: u32, inference: u32, t: u64) {
+        self.per_inf.entry((dense, inference)).or_default().on_tx(t);
+    }
+
+    pub fn on_outage_hold(&mut self, inference: u32, cycles: u64) {
+        *self.outage_hold.entry(inference).or_insert(0) += cycles;
+        self.outage_holds += 1;
+    }
+
+    pub fn on_instant(&mut self, t: u64, fpga: u32, kind: &'static str) {
+        self.instants.push(InstantEvent { t, fpga, kind });
+    }
+
+    /// Endpoint stats of `inference` at dense kernel id `dense`.
+    pub fn mark(&self, dense: u32, inference: u32) -> Option<&MarkStats> {
+        self.per_inf.get(&(dense, inference))
+    }
+
+    /// Fold a per-shard collector back in (commutative, so the merge
+    /// order across shards cannot change the result).
+    pub fn merge(&mut self, o: TraceObs) {
+        debug_assert_eq!(self.interval, o.interval);
+        for (k, s) in &o.per_inf {
+            self.per_inf.entry(*k).or_default().merge(s);
+        }
+        add_buckets(&mut self.bucket_events, &o.bucket_events);
+        add_buckets(&mut self.bucket_wakes, &o.bucket_wakes);
+        max_buckets(&mut self.bucket_fifo_peak, &o.bucket_fifo_peak);
+        for (inf, c) in &o.outage_hold {
+            *self.outage_hold.entry(*inf).or_insert(0) += c;
+        }
+        self.outage_holds += o.outage_holds;
+        self.instants.extend(o.instants);
+    }
+
+    /// Instants in deterministic (time, fpga, kind) order for export.
+    pub fn sorted_instants(&self) -> Vec<InstantEvent> {
+        let mut v = self.instants.clone();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_stats_track_extremes() {
+        let mut o = TraceObs::new(100, vec![7]);
+        assert!(o.is_marked_dense(7));
+        assert!(!o.is_marked_dense(8));
+        o.on_rx_marked(7, 3, 50);
+        o.on_rx_marked(7, 3, 10);
+        o.on_tx_marked(7, 3, 60);
+        let m = o.mark(7, 3).unwrap();
+        assert_eq!((m.first_rx, m.last_rx), (Some(10), Some(50)));
+        assert_eq!(m.first_tx, Some(60));
+        assert_eq!(m.rx_packets, 2);
+    }
+
+    #[test]
+    fn buckets_grow_add_and_max() {
+        let mut o = TraceObs::new(10, vec![]);
+        o.on_event(5);
+        o.on_event(25);
+        o.on_wake_bucket(25);
+        o.on_fifo_depth(25, 64);
+        o.on_fifo_depth(29, 32);
+        assert_eq!(o.bucket_events, vec![1, 0, 1]);
+        assert_eq!(o.bucket_wakes, vec![0, 0, 1]);
+        assert_eq!(o.bucket_fifo_peak, vec![0, 0, 64]);
+    }
+
+    #[test]
+    fn merge_is_commutative_on_this_example() {
+        let build = |times: &[u64]| {
+            let mut o = TraceObs::new(10, vec![1]);
+            for &t in times {
+                o.on_event(t);
+                o.on_rx_marked(1, 0, t);
+            }
+            o.on_outage_hold(0, 5);
+            o.on_instant(times[0], 2, "fail");
+            o
+        };
+        let mut ab = build(&[3, 14]);
+        ab.merge(build(&[25]));
+        let mut ba = build(&[25]);
+        ba.merge(build(&[3, 14]));
+        assert_eq!(ab.bucket_events, ba.bucket_events);
+        assert_eq!(ab.outage_hold, ba.outage_hold);
+        let (ma, mb) = (ab.mark(1, 0).unwrap(), ba.mark(1, 0).unwrap());
+        assert_eq!(ma.first_rx, mb.first_rx);
+        assert_eq!(ma.last_rx, mb.last_rx);
+        assert_eq!(ab.sorted_instants(), ba.sorted_instants());
+    }
+}

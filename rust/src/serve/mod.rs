@@ -29,14 +29,19 @@ use anyhow::{ensure, Result};
 use crate::eval::latency_model::estimate_model_latency_cycles;
 use crate::eval::testbed::{
     build_testbed, run_encoder_once, FailureSchedule, NetworkConfig, TestbedConfig,
+    EVAL_CLUSTER, EVAL_SINK, EVAL_SOURCE,
 };
+use crate::obs::{render_chrome_trace, render_metrics_jsonl, telemetry_section};
+use crate::obs::{ObsSettings, RequestOutcome, SpanRoles};
 use crate::ibert::graph::{ids, KERNELS_PER_ENCODER};
 use crate::ibert::kernels::Mode;
 use crate::ibert::timing::PeConfig;
 use crate::sim::packet::GlobalKernelId;
 use crate::FABRIC_CLOCK_HZ;
 
-pub use stats::{Eq1Check, FaultReport, LatencySummary, ServingReport, StageReport};
+pub use stats::{
+    validate_serving_report, Eq1Check, FaultReport, LatencySummary, ServingReport, StageReport,
+};
 pub use traffic::{ArrivalProcess, LengthDist, Request, TrafficConfig};
 
 /// One serving scenario: a pipeline shape plus an open-loop traffic trace.
@@ -70,6 +75,10 @@ pub struct ServeConfig {
     /// the placer's incremental re-place (fills the report's `fault`
     /// section)
     pub fail: Option<FailureSchedule>,
+    /// cycle-domain telemetry (span traces + metrics + self-profile);
+    /// off by default, and a telemetry-off report is byte-identical to
+    /// the pre-telemetry `serving_report/v2`
+    pub obs: ObsSettings,
 }
 
 impl ServeConfig {
@@ -96,6 +105,7 @@ impl ServeConfig {
             drop_probability: 0.0,
             reliable: false,
             fail: None,
+            obs: ObsSettings::default(),
         }
     }
 
@@ -128,8 +138,18 @@ impl ServeConfig {
                 seed: self.traffic.seed,
             },
             fail: self.fail,
+            obs: self.obs.clone(),
         }
     }
+}
+
+/// Telemetry artifacts of one serving run (both None when telemetry is
+/// off): the Chrome trace-event JSON behind `--trace-out` and the
+/// `obs_metrics/v1` JSONL stream behind `--metrics-out`.
+#[derive(Debug, Clone, Default)]
+pub struct ObsOutput {
+    pub trace_json: Option<String>,
+    pub metrics_jsonl: Option<String>,
 }
 
 /// Measure the pipeline's sustainable sequence rate (seqs/s) at length
@@ -144,9 +164,10 @@ pub fn pipeline_capacity_seqs_per_s(cfg: &ServeConfig, m: usize) -> Result<f64> 
     tb_cfg.m = m;
     tb_cfg.inferences = 6;
     // capacity is a property of the healthy pipeline: probe it without
-    // the scenario's loss/failure injection
+    // the scenario's loss/failure injection or telemetry overhead
     tb_cfg.net = NetworkConfig::default();
     tb_cfg.fail = None;
+    tb_cfg.obs = ObsSettings::default();
     let mut tb = build_testbed(&tb_cfg)?;
     tb.sim.start();
     tb.sim.run()?;
@@ -174,9 +195,10 @@ pub fn validate_eq1(base: &TestbedConfig, encoders: usize, m: usize) -> Result<E
     one.inferences = 1;
     one.schedule = None;
     // Eq. 1 describes the healthy pipeline: measure its components
-    // without the serving scenario's loss/failure injection
+    // without the serving scenario's loss/failure injection or telemetry
     one.net = NetworkConfig::default();
     one.fail = None;
+    one.obs = ObsSettings::default();
     let single = run_encoder_once(&one)?;
     let components = single.components();
 
@@ -204,6 +226,14 @@ pub fn validate_eq1(base: &TestbedConfig, encoders: usize, m: usize) -> Result<E
 /// injected — the fault section. An empty schedule (zero requests) is
 /// likewise a valid, empty report.
 pub fn run_serving(cfg: &ServeConfig) -> Result<ServingReport> {
+    Ok(run_serving_with_obs(cfg)?.0)
+}
+
+/// [`run_serving`] plus the telemetry artifacts: the Chrome trace and
+/// metrics stream of the run (both None unless `cfg.obs.enabled`), with
+/// the report's `telemetry` / `sim_profile` sections filled in when
+/// telemetry / profiling are on.
+pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutput)> {
     ensure!(cfg.encoders >= 1, "need at least one encoder");
     ensure!(cfg.traffic.process.seqs_per_s() > 0.0, "offered rate must be positive");
     ensure!(
@@ -315,7 +345,56 @@ pub fn run_serving(cfg: &ServeConfig) -> Result<ServingReport> {
         None
     };
 
-    Ok(ServingReport {
+    // telemetry exports: derive spans/metrics from the collectors the
+    // run carried (all thread-invariant), then the report sections
+    let mut obs_out = ObsOutput::default();
+    let mut telemetry = None;
+    if cfg.obs.enabled {
+        if let Some(tobs) = tb.sim.trace.obs.as_deref() {
+            let outcomes: Vec<RequestOutcome> = {
+                let sink = tb.sink.lock().unwrap();
+                schedule
+                    .iter()
+                    .enumerate()
+                    .map(|(i, req)| RequestOutcome {
+                        inference: i as u32,
+                        arrival: req.arrival,
+                        m: req.m,
+                        done: sink
+                            .arrivals
+                            .get(&(i as u32))
+                            .and_then(|&(pkts, done)| (pkts == req.m).then_some(done)),
+                    })
+                    .collect()
+            };
+            let roles = SpanRoles {
+                source: Some(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE).dense() as u32),
+                stages: (0..cfg.encoders)
+                    .map(|e| {
+                        (
+                            GlobalKernelId::new(e as u8, ids::GATEWAY).dense() as u32,
+                            GlobalKernelId::new(e as u8, ids::LN2).dense() as u32,
+                        )
+                    })
+                    .collect(),
+                sink: Some(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK).dense() as u32),
+            };
+            let fobs = tb.sim.fabric.obs.as_deref();
+            obs_out.trace_json = Some(render_chrome_trace(&outcomes, &roles, tobs, fobs));
+            obs_out.metrics_jsonl = Some(render_metrics_jsonl(
+                &tb.sim.trace,
+                tobs,
+                fobs,
+                &tb.sim.fifo_snapshots(),
+                &tb.sim.fabric.stats,
+                tb.sim.time,
+            ));
+            telemetry = Some(telemetry_section(&outcomes, &roles, &tb.sim.trace, tobs, fobs));
+        }
+    }
+    let sim_profile = tb.sim.last_profile.as_ref().map(|p| p.to_json());
+
+    let report = ServingReport {
         encoders: cfg.encoders,
         workload: cfg.traffic.lengths.name().to_string(),
         process: cfg.traffic.process.name().to_string(),
@@ -334,7 +413,10 @@ pub fn run_serving(cfg: &ServeConfig) -> Result<ServingReport> {
         retransmits: tb.sim.fabric.stats.retransmits,
         fault,
         events: tb.sim.trace.events_processed,
-    })
+        telemetry,
+        sim_profile,
+    };
+    Ok((report, obs_out))
 }
 
 #[cfg(test)]
@@ -390,6 +472,50 @@ mod tests {
         assert!(r.seqs_per_s().is_finite() && r.seqs_per_s() > 0.0);
         assert!(r.tokens_per_s().is_finite());
         assert!(r.mean_inflight().is_finite());
+    }
+
+    #[test]
+    fn telemetry_run_yields_artifacts_and_a_v3_report() {
+        let mut cfg = ServeConfig::glue(2, 6, 2_000.0, 3);
+        cfg.obs.enabled = true;
+        cfg.obs.profile = true;
+        let (r, obs) = run_serving_with_obs(&cfg).unwrap();
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.schema(), "serving_report/v3");
+        let j = r.to_json();
+        validate_serving_report(&j).unwrap();
+        assert_eq!(
+            j.path("telemetry.requests_attributed").unwrap().as_i64().unwrap(),
+            6,
+            "every completed request is attributed"
+        );
+        // the attributed total is exactly the sum of reported latencies
+        let total = j.path("telemetry.attribution.totals_cycles.total").unwrap().as_f64().unwrap();
+        assert_eq!(total as u64, r.latencies.iter().sum::<u64>());
+        // clean run: no retransmit or outage cycles to attribute
+        for k in ["retransmit", "outage"] {
+            let v = j.path(&format!("telemetry.attribution.totals_cycles.{k}")).unwrap();
+            assert_eq!(v.as_f64().unwrap(), 0.0, "{k} must be zero on a clean run");
+        }
+        assert!(j.path("telemetry.wakes.total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.path("sim_profile.events").unwrap().as_f64().unwrap() > 0.0);
+        // the Chrome trace parses and carries request + stage spans
+        let trace = obs.trace_json.unwrap();
+        let doc = crate::util::json::Json::parse(&trace).unwrap();
+        assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > 6);
+        assert!(trace.contains("\"id\":\"r0\"") && trace.contains("encoder1"));
+        // the metrics stream parses line by line
+        let metrics = obs.metrics_jsonl.unwrap();
+        assert!(metrics.lines().next().unwrap().contains("\"schema\":\"obs_metrics/v1\""));
+        for l in metrics.lines() {
+            assert!(crate::util::json::Json::parse(l).is_ok(), "{l}");
+        }
+
+        // telemetry off: same scenario reports exactly v2, no artifacts
+        cfg.obs = Default::default();
+        let (r2, obs2) = run_serving_with_obs(&cfg).unwrap();
+        assert_eq!(r2.schema(), "serving_report/v2");
+        assert!(obs2.trace_json.is_none() && obs2.metrics_jsonl.is_none());
     }
 
     #[test]

@@ -239,6 +239,13 @@ pub struct ServingReport {
     pub fault: Option<FaultReport>,
     /// DES events the run took (simulator cost, not model time)
     pub events: u64,
+    /// bottleneck-attribution section from the cycle-domain telemetry
+    /// (None: telemetry was off — the report then serializes as the
+    /// byte-identical v2 schema)
+    pub telemetry: Option<Json>,
+    /// simulator self-profile (None: `--profile` was off). Wall-clock
+    /// numbers — deliberately excluded from the determinism contract.
+    pub sim_profile: Option<Json>,
 }
 
 impl ServingReport {
@@ -272,9 +279,21 @@ impl ServingReport {
         self.latencies.iter().map(|&l| l as f64).sum::<f64>() / self.makespan_cycles as f64
     }
 
+    /// Schema this report serializes as: exactly `serving_report/v2`
+    /// when no telemetry section is attached (the byte-stability
+    /// contract of telemetry-off runs), `serving_report/v3` — v2 plus
+    /// optional `telemetry` / `sim_profile` sections — otherwise.
+    pub fn schema(&self) -> &'static str {
+        if self.telemetry.is_none() && self.sim_profile.is_none() {
+            "serving_report/v2"
+        } else {
+            "serving_report/v3"
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("schema", Json::Str("serving_report/v2".into())),
+        let mut pairs = vec![
+            ("schema", Json::Str(self.schema().into())),
             ("encoders", Json::Num(self.encoders as f64)),
             ("workload", Json::Str(self.workload.clone())),
             ("process", Json::Str(self.process.clone())),
@@ -295,7 +314,14 @@ impl ServingReport {
             ("retransmits", Json::Num(self.retransmits as f64)),
             ("fault", self.fault.as_ref().map(|f| f.to_json()).unwrap_or(Json::Null)),
             ("events", Json::Num(self.events as f64)),
-        ])
+        ];
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.clone()));
+        }
+        if let Some(p) = &self.sim_profile {
+            pairs.push(("sim_profile", p.clone()));
+        }
+        Json::obj(pairs)
     }
 
     /// Human-readable summary (the `serve` CLI's stdout).
@@ -398,8 +424,94 @@ impl ServingReport {
                 e.encoders
             ));
         }
+        if let Some(t) = &self.telemetry {
+            let n = t.get("requests_attributed").and_then(|v| v.as_i64()).unwrap_or(0);
+            let mean = |k: &str| {
+                t.path(&format!("attribution.mean_cycles.{k}"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0)
+            };
+            s.push_str(&format!(
+                "telemetry: {} requests attributed — mean cycles split: queue {:.0}, \
+                 compute {:.0}, serialize {:.0}, retransmit {:.0}, outage {:.0}\n",
+                n,
+                mean("queue"),
+                mean("compute"),
+                mean("serialize"),
+                mean("retransmit"),
+                mean("outage"),
+            ));
+            if let Some(w) = t.path("wakes.total").and_then(|v| v.as_i64()) {
+                s.push_str(&format!("  kernel wakes over the run: {w}\n"));
+            }
+        }
+        if let Some(p) = &self.sim_profile {
+            s.push_str(&format!(
+                "sim profile: {} engine, {:.1} wall-ns/sim-cycle, {} events\n",
+                p.get("engine").and_then(|v| v.as_str()).unwrap_or("?"),
+                p.get("wall_ns_per_sim_cycle").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                p.get("events").and_then(|v| v.as_i64()).unwrap_or(0),
+            ));
+        }
         s
     }
+}
+
+/// Structural check of a serialized serving report: accepts both the
+/// pre-telemetry `serving_report/v2` and its `serving_report/v3`
+/// superset (v3 = v2 plus optional `telemetry` / `sim_profile`
+/// sections appended after `events`). The round-trip tests and the CI
+/// artifact check both go through here, so the two schemas stay
+/// parseable side by side.
+pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
+    let schema = j.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+    anyhow::ensure!(
+        schema == "serving_report/v2" || schema == "serving_report/v3",
+        "unknown serving report schema {schema:?}"
+    );
+    for key in [
+        "encoders",
+        "workload",
+        "process",
+        "offered_seqs_per_s",
+        "seed",
+        "requests",
+        "completed",
+        "total_tokens",
+        "completed_tokens",
+        "makespan_cycles",
+        "seqs_per_s",
+        "tokens_per_s",
+        "mean_inflight",
+        "latency",
+        "stages",
+        "eq1",
+        "dropped",
+        "retransmits",
+        "fault",
+        "events",
+    ] {
+        anyhow::ensure!(j.get(key).is_some(), "serving report missing key {key:?}");
+    }
+    anyhow::ensure!(j.path("latency.p50_cycles").is_some(), "latency section malformed");
+    if schema == "serving_report/v2" {
+        anyhow::ensure!(
+            j.get("telemetry").is_none() && j.get("sim_profile").is_none(),
+            "v2 reports must not carry telemetry sections"
+        );
+    } else {
+        anyhow::ensure!(
+            j.get("telemetry").is_some() || j.get("sim_profile").is_some(),
+            "v3 reports must carry at least one telemetry section"
+        );
+        if let Some(t) = j.get("telemetry") {
+            anyhow::ensure!(
+                t.path("attribution.totals_cycles").is_some(),
+                "v3 telemetry section missing attribution"
+            );
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -459,6 +571,8 @@ mod tests {
             retransmits: 0,
             fault: None,
             events: 42,
+            telemetry: None,
+            sim_profile: None,
         };
         assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
         assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
@@ -468,9 +582,88 @@ mod tests {
         assert_eq!(j.path("latency.p50_cycles").unwrap().as_i64().unwrap(), 100);
         assert_eq!(j.get("eq1").unwrap(), &Json::Null);
         assert_eq!(j.get("fault").unwrap(), &Json::Null);
+        assert!(j.get("telemetry").is_none(), "telemetry-off reports stay exactly v2");
+        validate_serving_report(&j).unwrap();
         // render never panics and carries the headline numbers
         assert!(r.render().contains("p95"));
         assert!(!r.render().contains("fault:"), "clean runs carry no fault line");
+        assert!(!r.render().contains("telemetry:"), "no telemetry line when off");
+    }
+
+    #[test]
+    fn telemetry_sections_flip_the_schema_to_v3() {
+        let mut r = ServingReport {
+            encoders: 1,
+            workload: "glue".into(),
+            process: "poisson".into(),
+            offered_seqs_per_s: 1000.0,
+            seed: 7,
+            requests: 1,
+            completed: 1,
+            total_tokens: 5,
+            completed_tokens: 5,
+            makespan_cycles: 1_000,
+            latency: LatencySummary { p50: 10, p95: 10, p99: 10, mean: 10.0, max: 10 },
+            latencies: vec![10],
+            stages: vec![],
+            eq1: None,
+            dropped: 0,
+            retransmits: 0,
+            fault: None,
+            events: 9,
+            telemetry: None,
+            sim_profile: None,
+        };
+        assert_eq!(r.schema(), "serving_report/v2");
+        r.telemetry = Some(Json::obj(vec![
+            ("requests_attributed", Json::Num(1.0)),
+            (
+                "attribution",
+                Json::obj(vec![
+                    ("totals_cycles", Json::obj(vec![("queue", Json::Num(3.0))])),
+                    ("mean_cycles", Json::obj(vec![("queue", Json::Num(3.0))])),
+                ]),
+            ),
+            ("wakes", Json::obj(vec![("total", Json::Num(4.0))])),
+        ]));
+        assert_eq!(r.schema(), "serving_report/v3");
+        let j = r.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "serving_report/v3");
+        assert_eq!(j.path("telemetry.requests_attributed").unwrap().as_i64().unwrap(), 1);
+        validate_serving_report(&j).unwrap();
+        // round-trip through the serializer preserves the sections
+        let back = Json::parse(&j.pretty()).unwrap();
+        validate_serving_report(&back).unwrap();
+        assert_eq!(
+            back.path("telemetry.wakes.total").unwrap().as_i64().unwrap(),
+            4,
+            "telemetry survives a serialize/parse round trip"
+        );
+        assert!(r.render().contains("telemetry: 1 requests attributed"));
+    }
+
+    #[test]
+    fn v2_fixture_still_validates() {
+        // a pre-telemetry serving_report/v2 as PR 5 emitted it (pruned to
+        // the schema skeleton): the v3 validator must keep accepting it
+        let fixture = r#"{
+            "schema": "serving_report/v2",
+            "encoders": 2, "workload": "glue", "process": "poisson",
+            "offered_seqs_per_s": 2000.0, "seed": 3, "requests": 12,
+            "completed": 12, "total_tokens": 420, "completed_tokens": 420,
+            "makespan_cycles": 1200000, "seqs_per_s": 2000.0,
+            "tokens_per_s": 70000.0, "mean_inflight": 1.5,
+            "latency": {"p50_cycles": 100, "p95_cycles": 200, "p99_cycles": 200,
+                        "mean_cycles": 150.0, "max_cycles": 200,
+                        "p50_us": 0.5, "p95_us": 1.0, "p99_us": 1.0},
+            "stages": [], "eq1": null, "dropped": 0, "retransmits": 0,
+            "fault": null, "events": 42
+        }"#;
+        let j = Json::parse(fixture).unwrap();
+        validate_serving_report(&j).unwrap();
+        // and an unknown schema is rejected
+        let bad = Json::obj(vec![("schema", Json::Str("serving_report/v9".into()))]);
+        assert!(validate_serving_report(&bad).is_err());
     }
 
     #[test]

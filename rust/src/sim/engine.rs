@@ -327,6 +327,7 @@ impl KernelIo<'_> {
         match self.fabric.deliver(self.now, &pkt) {
             Ok(Some(arrival)) => {
                 self.trace.on_tx_slot(self.tslot, self.now);
+                self.trace.obs_tx(self.tslot, pkt.meta.inference, self.now);
                 match self.resolve(pkt.dst) {
                     Some(slot) => self.pending.push((arrival, slot, Ev::Packet(pkt))),
                     None => self.errors.push(format!("send to unknown kernel {}", pkt.dst)),
@@ -335,6 +336,7 @@ impl KernelIo<'_> {
             Ok(None) => {
                 // dropped by the lossy network: accounted in fabric stats
                 self.trace.on_tx_slot(self.tslot, self.now);
+                self.trace.obs_tx(self.tslot, pkt.meta.inference, self.now);
             }
             Err(e) => self.errors.push(e.to_string()),
         }
@@ -372,8 +374,12 @@ impl KernelIo<'_> {
         match self.fabric.deliver_burst(&pkt) {
             Ok(arrivals) => {
                 let first = arrivals[0];
+                let inference = pkt.meta.inference;
                 let b = pkt.burst.as_mut().unwrap();
                 self.trace.on_tx_burst(self.tslot, &b.emit_times);
+                for &e in &b.emit_times {
+                    self.trace.obs_tx(self.tslot, inference, e);
+                }
                 b.arrivals = arrivals;
                 match self.resolve(pkt.dst) {
                     Some(slot) => self.pending.push((first, slot, Ev::Packet(pkt))),
@@ -400,6 +406,7 @@ impl KernelIo<'_> {
         pkt.for_each_row(now, |meta, at, payload| {
             if !single {
                 io.fifo.push(wire);
+                io.trace.obs_fifo_depth(at, io.fifo.occupancy as u64);
             }
             f(io, meta, at, payload);
         });
@@ -461,10 +468,13 @@ pub(crate) fn deliver_event(
     };
     match ev {
         Ev::Packet(pkt) => {
+            let inference = pkt.meta.inference;
             match pkt.burst.as_ref() {
                 None => {
                     io.fifo.push(pkt.wire_bytes());
                     io.trace.on_rx_slot(tslot, io.now);
+                    io.trace.obs_rx(tslot, inference, io.now);
+                    io.trace.obs_fifo_depth(io.now, io.fifo.occupancy as u64);
                     if io.trace.probe_slot(tslot) {
                         io.trace.record_probe_slot(tslot, io.now);
                     }
@@ -476,6 +486,7 @@ pub(crate) fn deliver_event(
                     let probe = io.trace.probe_slot(tslot);
                     for &a in &b.arrivals {
                         io.trace.on_rx_slot(tslot, a);
+                        io.trace.obs_rx(tslot, inference, a);
                         if probe {
                             io.trace.record_probe_slot(tslot, a);
                         }
@@ -486,6 +497,7 @@ pub(crate) fn deliver_event(
         }
         Ev::Wake(tag) => {
             io.trace.wake_slot(tslot);
+            io.trace.obs_wake(io.now);
             slot.behavior.on_wake(tag, &mut io);
         }
     }
@@ -594,6 +606,13 @@ pub struct Sim {
     genesis_ctr: u64,
     /// scheduled FPGA failure (None = the §6 scenario is off).
     failure: Option<FailureState>,
+    /// collect the simulator self-profile (wall-clock timing, per-shard
+    /// event counts, barrier wait). Off by default: wall-clock numbers
+    /// are nondeterministic and never feed a determinism-checked
+    /// surface (see obs/profile.rs).
+    pub profile: bool,
+    /// accumulated self-profile (populated while `profile` is on).
+    pub last_profile: Option<crate::obs::SimProfile>,
     // reusable dispatch buffers (avoid per-event allocation)
     pending_buf: Vec<(u64, u32, Ev)>,
     wakes_buf: Vec<(u64, u64)>,
@@ -623,6 +642,8 @@ impl Sim {
             ctr: 0,
             genesis_ctr: 0,
             failure: None,
+            profile: false,
+            last_profile: None,
             pending_buf: Vec::new(),
             wakes_buf: Vec::new(),
         }
@@ -643,6 +664,22 @@ impl Sim {
     /// Pin the worker-thread count (0 = auto, 1 = sequential).
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = threads;
+    }
+
+    /// Enable cycle-domain telemetry (obs/): bucketed fleet series on
+    /// the trace, link-occupancy attribution on the fabric, and
+    /// per-inference endpoint stats on the `marked` kernels (span
+    /// roles). Call before `start()`; when never called, the hot paths
+    /// pay one predictable untaken branch per event.
+    pub fn enable_obs(&mut self, interval: u64, marked: &[GlobalKernelId]) {
+        self.trace.enable_obs(interval, marked);
+        self.fabric.enable_obs(interval);
+    }
+
+    /// Per-kernel input-FIFO snapshots in registration order (metrics
+    /// export).
+    pub fn fifo_snapshots(&self) -> Vec<(GlobalKernelId, crate::obs::FifoSnapshot)> {
+        self.kernels.iter().map(|s| (s.id, s.fifo.snapshot())).collect()
     }
 
     fn effective_threads(&self) -> usize {
@@ -788,6 +825,21 @@ impl Sim {
     /// `reference_mode` when inspecting mid-run state at a cycle
     /// boundary matters.
     pub fn run_until(&mut self, until: u64) -> Result<u64> {
+        if !self.profile {
+            return self.run_until_inner(until);
+        }
+        let (cyc0, ev0) = (self.time, self.trace.events_processed);
+        let t0 = std::time::Instant::now();
+        let r = self.run_until_inner(until);
+        let wall = t0.elapsed().as_nanos() as u64;
+        let p = self.last_profile.get_or_insert_with(Default::default);
+        p.wall_ns += wall;
+        p.sim_cycles += self.time.saturating_sub(cyc0);
+        p.events += self.trace.events_processed.saturating_sub(ev0);
+        r
+    }
+
+    fn run_until_inner(&mut self, until: u64) -> Result<u64> {
         let threads = self.effective_threads();
         if threads != 1
             && !self.queue.heap_only
@@ -806,6 +858,11 @@ impl Sim {
     }
 
     fn run_sequential(&mut self, until: u64) -> Result<u64> {
+        if self.profile {
+            let p = self.last_profile.get_or_insert_with(Default::default);
+            p.note_engine("sequential");
+            p.threads = p.threads.max(1);
+        }
         let mut processed = 0u64;
         loop {
             let next = self.queue.peek_time();
@@ -855,7 +912,12 @@ impl Sim {
             FailPhase::Done => return Some(e),
             FailPhase::Armed if e.time < fs.plan.at => return Some(e),
             // the failure instant has been reached: the cluster is down
-            FailPhase::Armed => fs.phase = FailPhase::Down,
+            FailPhase::Armed => {
+                fs.phase = FailPhase::Down;
+                if let Some(o) = self.trace.obs.as_deref_mut() {
+                    o.on_instant(fs.plan.at, fs.plan.fpga.0 as u32, "fail");
+                }
+            }
             FailPhase::Down => {}
         }
         if e.time >= fs.recover_at {
@@ -889,6 +951,11 @@ impl Sim {
             Hold::Buffer(bytes) => {
                 self.kernels[e.target as usize].fifo.push(bytes);
                 fs.held_packets += 1;
+                // attribute the hold: the packet sits in the cluster
+                // input buffer until the recovery cycle releases it
+                if let (Some(o), Ev::Packet(p)) = (self.trace.obs.as_deref_mut(), &e.ev) {
+                    o.on_outage_hold(p.meta.inference, fs.recover_at - e.time);
+                }
                 fs.held.push(e);
             }
             Hold::Suspend => fs.held.push(e),
@@ -907,6 +974,9 @@ impl Sim {
         debug_assert!(fs.phase == FailPhase::Down);
         fs.phase = FailPhase::Done;
         let recover_at = fs.recover_at;
+        if let Some(o) = self.trace.obs.as_deref_mut() {
+            o.on_instant(recover_at, fs.plan.fpga.0 as u32, "recover");
+        }
         let remap = fs.plan.remap.clone();
         let held = std::mem::take(&mut fs.held);
         for (kid, f) in &remap {
@@ -1011,11 +1081,27 @@ impl Sim {
 
         // ---- bounded-window execution on the worker pool ----
         let events_left = self.max_events.saturating_sub(self.trace.events_processed);
-        let outcome = shard::run_windowed(shards, threads, window, until, events_left);
+        let outcome =
+            shard::run_windowed(shards, threads, window, until, events_left, self.profile);
 
         // ---- teardown: merge shards back into the master state ----
         let budget_hit = outcome.budget_exceeded;
         let processed = outcome.processed;
+        if self.profile {
+            let p = self.last_profile.get_or_insert_with(Default::default);
+            p.note_engine("parallel");
+            p.threads = p.threads.max(threads.min(outcome.shards.len()));
+            p.shards = outcome.shards.len();
+            p.window = window;
+            p.rounds += outcome.rounds;
+            p.barrier_wait_ns += outcome.barrier_wait_ns;
+            for (i, &e) in outcome.per_shard_events.iter().enumerate() {
+                if p.per_shard_events.len() <= i {
+                    p.per_shard_events.resize(i + 1, 0);
+                }
+                p.per_shard_events[i] += e;
+            }
+        }
         shard::absorb(self, outcome.shards);
 
         if !self.errors.is_empty() {
@@ -1521,6 +1607,76 @@ mod tests {
         let r = sim.failure_report().unwrap();
         assert!(!r.recovered);
         assert_eq!((r.fpga, r.cluster, r.moved_kernels), (FpgaId(0), 0, 1));
+    }
+
+    #[test]
+    fn obs_records_failure_instants_and_outage_holds() {
+        // the run_failover scenario with telemetry enabled: the fail /
+        // recover instants and the gateway buffering must be attributed
+        let mut sim = Sim::new();
+        for f in 0..4 {
+            sim.fabric.attach(FpgaId(f), SwitchId(0));
+        }
+        let got = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(k(1, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Source {
+            dst: k(0, 5),
+            n: 20,
+            gap: 40,
+            sent: 0,
+        }))
+        .unwrap();
+        sim.add_kernel(k(0, 0), FpgaId(1), Fifo::new(1 << 16), Box::new(FwdGw)).unwrap();
+        sim.add_kernel(k(0, 5), FpgaId(2), Fifo::new(1 << 16), Box::new(RecSink {
+            got: got.clone(),
+        }))
+        .unwrap();
+        sim.enable_obs(1024, &[k(1, 1)]);
+        sim.schedule_failure(FailurePlan {
+            fpga: FpgaId(2),
+            at: 700,
+            recovery_cycles: 5_000,
+            remap: vec![(k(0, 5), FpgaId(3))],
+        })
+        .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let report = sim.failure_report().unwrap();
+        assert!(report.recovered);
+        let o = sim.trace.obs.as_ref().unwrap();
+        let inst = o.sorted_instants();
+        assert_eq!(inst.len(), 2);
+        assert_eq!((inst[0].kind, inst[0].t, inst[0].fpga), ("fail", 700, 2));
+        assert_eq!((inst[1].kind, inst[1].t, inst[1].fpga), ("recover", 5_700, 2));
+        assert_eq!(o.outage_holds, report.held_packets);
+        assert!(o.outage_hold.get(&0).copied().unwrap_or(0) > 0, "inference 0 held");
+    }
+
+    #[test]
+    fn self_profile_accumulates_when_enabled() {
+        let build = |threads: usize| {
+            let mut sim = Sim::new();
+            sim.fabric.attach(FpgaId(0), SwitchId(0));
+            sim.fabric.attach(FpgaId(1), SwitchId(0));
+            sim.granularity = ShardGranularity::PerFpga;
+            sim.set_threads(threads);
+            sim.profile = true;
+            sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 20), Box::new(Source {
+                dst: k(0, 2), n: 30, gap: 25, sent: 0,
+            })).unwrap();
+            sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 20), Box::new(Sink { got: 0 }))
+                .unwrap();
+            sim.start();
+            sim.run().unwrap();
+            sim.last_profile.expect("profile requested")
+        };
+        let seq = build(1);
+        assert_eq!(seq.engine, "sequential");
+        assert!(seq.events > 0 && seq.sim_cycles > 0);
+        let par = build(2);
+        assert_eq!(par.engine, "parallel");
+        assert_eq!((par.shards, par.threads), (2, 2));
+        assert!(par.rounds > 0 && par.window > 0);
+        assert_eq!(par.per_shard_events.iter().sum::<u64>(), par.events);
     }
 
     #[test]

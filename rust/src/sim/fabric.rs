@@ -129,6 +129,10 @@ pub struct Fabric {
     /// stays hash-free.
     link_seq: FxHashMap<(u32, u32), LinkSeq>,
     pub stats: FabricStats,
+    /// Optional telemetry collector (None = telemetry off): per-bucket
+    /// link occupancy, drop/retransmit series, per-inference serialize
+    /// waits and retransmit stalls. See [`crate::obs`].
+    pub obs: Option<Box<crate::obs::FabricObs>>,
 }
 
 impl Default for Fabric {
@@ -150,7 +154,13 @@ impl Fabric {
             drop_trace: Vec::new(),
             link_seq: FxHashMap::default(),
             stats: FabricStats::default(),
+            obs: None,
         }
+    }
+
+    /// Enable the link-telemetry collector at the given bucket width.
+    pub fn enable_obs(&mut self, interval: u64) {
+        self.obs = Some(Box::new(crate::obs::FabricObs::new(interval)));
     }
 
     /// Derive the lossy-network RNG from the run seed. Every harness that
@@ -274,7 +284,12 @@ impl Fabric {
 
         // kernel output switch + egress port serialization
         let t0 = t + OUT_SWITCH_LAT;
+        let egress_free = self.kernel_egress[pkt.src.dense()];
         let egress_done = occupy(&mut self.kernel_egress[pkt.src.dense()], t0, flits);
+        if let Some(o) = &mut self.obs {
+            let start = t0.max(egress_free);
+            o.on_egress(pkt.src.dense() as u32, pkt.meta.inference, start, flits, start - t0);
+        }
 
         if src_f == dst_f {
             self.stats.intra_fpga_packets += 1;
@@ -283,7 +298,13 @@ impl Fabric {
         }
 
         // router -> network bridge -> NIC: serialize on the FPGA's NIC
-        let mut nic_done = occupy(&mut self.nic_egress[src_f], egress_done + ROUTER_LAT, flits);
+        let nic_ready = egress_done + ROUTER_LAT;
+        let nic_free = self.nic_egress[src_f];
+        let mut nic_done = occupy(&mut self.nic_egress[src_f], nic_ready, flits);
+        if let Some(o) = &mut self.obs {
+            let start = nic_ready.max(nic_free);
+            o.on_nic(src_f as u32, pkt.meta.inference, start, flits, start - nic_ready);
+        }
 
         if self.drop_probability > 0.0 {
             let seq = self.link_seq.entry((src_f as u32, dst_f as u32)).or_default();
@@ -294,19 +315,40 @@ impl Fabric {
                 }
                 // every lost copy occupied the NIC before vanishing; the
                 // retry re-serializes RETX_TIMEOUT after its last flit
+                let first_nic_done = nic_done;
+                let mut copies = 0u64;
                 while self.drop_rng.bool_with_p(self.drop_probability) {
                     self.stats.dropped += 1;
                     self.stats.retransmits += 1;
                     self.stats.flits += flits;
                     seq.dropped_copies += 1;
                     self.drop_trace.push(t);
+                    copies += 1;
+                    if let Some(o) = &mut self.obs {
+                        o.on_drop(t);
+                    }
                     nic_done =
                         occupy(&mut self.nic_egress[src_f], nic_done + RETX_TIMEOUT, flits);
+                }
+                if copies > 0 {
+                    if let Some(o) = &mut self.obs {
+                        o.on_retx(
+                            pkt.meta.inference,
+                            first_nic_done,
+                            nic_done - first_nic_done,
+                            copies,
+                            src_f as u32,
+                            dst_f as u32,
+                        );
+                    }
                 }
             } else if self.drop_rng.bool_with_p(self.drop_probability) {
                 self.stats.dropped += 1;
                 seq.dropped_copies += 1;
                 self.drop_trace.push(t);
+                if let Some(o) = &mut self.obs {
+                    o.on_drop(t);
+                }
                 return Ok(None);
             }
             seq.delivered += 1;
@@ -347,6 +389,9 @@ impl Fabric {
         // absorb can never double-count it
         f.drop_trace = Vec::new();
         f.link_seq = FxHashMap::default();
+        // each shard collects telemetry deltas into a fresh collector of
+        // the same bucket width; absorb_shard folds them back
+        f.obs = self.obs.as_ref().map(|o| Box::new(crate::obs::FabricObs::new(o.interval)));
         f
     }
 
@@ -362,6 +407,9 @@ impl Fabric {
             self.nic_egress[f] = sh.nic_egress[f];
         }
         self.stats.absorb(&sh.stats);
+        if let (Some(mine), Some(theirs)) = (&mut self.obs, &sh.obs) {
+            mine.merge(theirs);
+        }
     }
 
     /// Deliver a coalesced intra-FPGA burst: rows emitted at
@@ -387,13 +435,19 @@ impl Fabric {
         self.stats.flits += n * flits;
         self.stats.intra_fpga_packets += n;
 
-        let egress = &mut self.kernel_egress[pkt.src.dense()];
+        let dense = pkt.src.dense();
         let mut arrivals = Vec::with_capacity(b.emit_times.len());
         let mut prev = 0u64;
         for &t in &b.emit_times {
             debug_assert!(t >= prev, "burst emission times must be nondecreasing");
             prev = t;
-            let done = occupy(egress, t + OUT_SWITCH_LAT, flits);
+            let t0 = t + OUT_SWITCH_LAT;
+            let free = self.kernel_egress[dense];
+            let done = occupy(&mut self.kernel_egress[dense], t0, flits);
+            if let Some(o) = &mut self.obs {
+                let start = t0.max(free);
+                o.on_egress(dense as u32, pkt.meta.inference, start, flits, start - t0);
+            }
             arrivals.push(done + ROUTER_LAT);
         }
         Ok(arrivals)
@@ -637,6 +691,74 @@ mod tests {
         // a third delivery on the master serializes after the shard's
         let c = master.deliver(100, &p01).unwrap().unwrap();
         assert!(c > a1, "absorbed egress state must advance the master clock");
+    }
+
+    #[test]
+    fn obs_charges_links_and_attributes_waits() {
+        let mut f = fabric_2fpga();
+        f.enable_obs(100);
+        let mut p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(768));
+        p.meta.inference = 5;
+        // back-to-back sends: the second waits on egress AND nic
+        f.deliver(0, &p).unwrap().unwrap();
+        f.deliver(0, &p).unwrap().unwrap();
+        let o = f.obs.as_ref().unwrap();
+        // 2 packets x 12 flits on egress and nic
+        assert_eq!(o.bucket_egress_busy.iter().sum::<u64>(), 24);
+        assert_eq!(o.bucket_nic_busy.iter().sum::<u64>(), 24);
+        assert_eq!(o.egress_busy.get(&(k(0, 1).dense() as u32)), Some(&24));
+        assert_eq!(o.nic_busy.get(&0), Some(&24));
+        let wait = o.serialize_wait.get(&5).copied().unwrap_or(0);
+        assert!(wait >= 12, "second packet must wait behind the first, got {wait}");
+
+        // telemetry must not change timing: a clean fabric agrees
+        let mut clean = fabric_2fpga();
+        let a = clean.deliver(0, &p).unwrap().unwrap();
+        let b = clean.deliver(0, &p).unwrap().unwrap();
+        let mut f2 = fabric_2fpga();
+        f2.enable_obs(100);
+        assert_eq!(f2.deliver(0, &p).unwrap().unwrap(), a);
+        assert_eq!(f2.deliver(0, &p).unwrap().unwrap(), b);
+    }
+
+    #[test]
+    fn obs_counts_reliable_retransmit_stalls() {
+        let mut f = fabric_2fpga();
+        f.enable_obs(1000);
+        f.drop_probability = 0.5;
+        f.reliable = true;
+        let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        for i in 0..100u64 {
+            f.deliver(i * 10_000, &p).unwrap().unwrap();
+        }
+        let o = f.obs.as_ref().unwrap();
+        let retx: u64 = o.bucket_retx.iter().sum();
+        let drops: u64 = o.bucket_drops.iter().sum();
+        assert_eq!(retx, f.stats.retransmits);
+        assert_eq!(drops, f.stats.dropped);
+        let stall: u64 = o.retx_stall.values().sum();
+        assert!(stall >= f.stats.retransmits * RETX_TIMEOUT);
+        assert!(!o.retx_spans.is_empty());
+        for &(_, dur, src, dst) in &o.retx_spans {
+            assert!(dur >= RETX_TIMEOUT);
+            assert_eq!((src, dst), (0, 1));
+        }
+    }
+
+    #[test]
+    fn obs_shard_clone_starts_fresh_and_absorbs_back() {
+        let mut master = fabric_2fpga();
+        master.enable_obs(100);
+        let p = Packet::new(k(0, 1), k(0, 3), MsgMeta::default(), Payload::Timing(768));
+        master.deliver(0, &p).unwrap();
+        let mut sh = master.shard_clone();
+        let so = sh.obs.as_ref().unwrap();
+        assert_eq!(so.interval, 100);
+        assert!(so.bucket_egress_busy.is_empty(), "shard collector starts empty");
+        sh.deliver(100, &p).unwrap();
+        master.absorb_shard(&sh, &[k(0, 1).dense()], &[0]);
+        let o = master.obs.as_ref().unwrap();
+        assert_eq!(o.bucket_egress_busy.iter().sum::<u64>(), 24);
     }
 
     #[test]

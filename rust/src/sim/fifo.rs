@@ -47,6 +47,16 @@ impl Fifo {
     pub fn bram18(&self) -> usize {
         self.capacity_bytes.div_ceil(BRAM18_BYTES)
     }
+
+    /// Point-in-time state for the telemetry exporters.
+    pub fn snapshot(&self) -> crate::obs::FifoSnapshot {
+        crate::obs::FifoSnapshot {
+            occupancy: self.occupancy as u64,
+            high_water: self.high_water as u64,
+            capacity_bytes: self.capacity_bytes as u64,
+            overflows: self.overflows,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +84,13 @@ mod tests {
         f.pop(100);
         assert_eq!(f.occupancy, 0); // saturates
         assert!((Fifo::new(0).peak_fraction() - 0.0).abs() < 1e-12, "never divides by zero");
+    }
+
+    #[test]
+    fn snapshot_mirrors_state() {
+        let mut f = Fifo::new(100);
+        f.push(60);
+        let s = f.snapshot();
+        assert_eq!((s.occupancy, s.high_water, s.capacity_bytes, s.overflows), (60, 60, 100, 0));
     }
 }

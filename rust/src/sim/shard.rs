@@ -347,6 +347,14 @@ pub(crate) fn partition(
             wakes_buf: Vec::new(),
         })
         .collect();
+    // matching per-shard telemetry collectors — installed before kernel
+    // registration so the per-slot mark flags build up as slots appear
+    if let Some((interval, mark_set)) = sim.trace.obs_spec() {
+        for sh in &mut shards {
+            sh.trace.obs =
+                Some(Box::new(crate::obs::span::TraceObs::new(interval, mark_set.clone())));
+        }
+    }
     for (gslot, mut slot) in kernels.into_iter().enumerate() {
         let sh = &mut shards[owner[gslot] as usize];
         sh.local_of[gslot] = sh.kernels.len() as u32 + 1;
@@ -372,6 +380,14 @@ pub(crate) struct Outcome {
     pub(crate) shards: Vec<Shard>,
     pub(crate) processed: u64,
     pub(crate) budget_exceeded: bool,
+    /// barrier rounds executed (self-profile; 0 unless profiling).
+    pub(crate) rounds: u64,
+    /// summed wall-time workers spent blocked on the three per-round
+    /// barriers (self-profile; 0 unless profiling).
+    pub(crate) barrier_wait_ns: u64,
+    /// events each shard processed, in shard-index order (self-profile;
+    /// empty unless profiling).
+    pub(crate) per_shard_events: Vec<u64>,
 }
 
 /// Sense-reversing barrier with an abort path: `std::sync::Barrier`
@@ -423,6 +439,22 @@ struct Coord {
     stop: AtomicBool,
     budget_hit: AtomicBool,
     processed: AtomicU64,
+    /// self-profile accumulators — written only when profiling is on,
+    /// so the default path never touches them inside the round loop.
+    rounds: AtomicU64,
+    barrier_wait_ns: AtomicU64,
+}
+
+/// Barrier wait, optionally timed for the simulator self-profile.
+#[inline]
+fn barrier_wait(coord: &Coord, profile: bool, acc: &mut u64) -> bool {
+    if !profile {
+        return coord.barrier.wait();
+    }
+    let t0 = std::time::Instant::now();
+    let ok = coord.barrier.wait();
+    *acc += t0.elapsed().as_nanos() as u64;
+    ok
 }
 
 /// Run the bounded-window loop: `threads` workers (capped at the shard
@@ -435,6 +467,7 @@ pub(crate) fn run_windowed(
     window: u64,
     until: u64,
     events_budget: u64,
+    profile: bool,
 ) -> Outcome {
     let n_shards = shards.len();
     let workers = threads.clamp(1, n_shards);
@@ -452,6 +485,8 @@ pub(crate) fn run_windowed(
         stop: AtomicBool::new(false),
         budget_hit: AtomicBool::new(false),
         processed: AtomicU64::new(0),
+        rounds: AtomicU64::new(0),
+        barrier_wait_ns: AtomicU64::new(0),
     };
     let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
 
@@ -460,7 +495,8 @@ pub(crate) fn run_windowed(
         // other workers return instead of deadlocking, then re-raises
         // after the join (same observable behavior as the sequential
         // engine's panic)
-        let body = || worker_rounds(w, &slots, &coord, &mailboxes, window, until, events_budget);
+        let body =
+            || worker_rounds(w, &slots, &coord, &mailboxes, window, until, events_budget, profile);
         if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
             coord.barrier.abort();
             *panic_payload.lock().unwrap() = Some(p);
@@ -477,14 +513,23 @@ pub(crate) fn run_windowed(
     let mut shards: Vec<Shard> =
         slots.into_iter().flat_map(|m| m.into_inner().unwrap()).collect();
     shards.sort_by_key(|s| s.idx);
+    let per_shard_events = if profile {
+        shards.iter().map(|s| s.trace.events_processed).collect()
+    } else {
+        Vec::new()
+    };
     Outcome {
         shards,
         processed: coord.processed.load(Ordering::SeqCst),
         budget_exceeded: coord.budget_hit.load(Ordering::SeqCst),
+        rounds: coord.rounds.load(Ordering::SeqCst),
+        barrier_wait_ns: coord.barrier_wait_ns.load(Ordering::SeqCst),
+        per_shard_events,
     }
 }
 
 /// One worker's barrier-round loop over its owned shards.
+#[allow(clippy::too_many_arguments)]
 fn worker_rounds(
     w: usize,
     slots: &[Mutex<Vec<Shard>>],
@@ -493,12 +538,14 @@ fn worker_rounds(
     window: u64,
     until: u64,
     events_budget: u64,
+    profile: bool,
 ) {
     let mut my = slots[w].lock().unwrap();
     let mut round = 0usize;
     let mut worker_done = 0u64;
+    let mut wait_ns = 0u64;
     let mut merged: Vec<QEv> = Vec::new();
-    loop {
+    'rounds: loop {
         // (a) reduce the global minimum next event time. `stop` is
         // snapshotted HERE, in the read-only phase: writes only
         // happen during window processing (b), which every worker
@@ -514,14 +561,14 @@ fn worker_rounds(
             }
         }
         slot.fetch_min(lmin, Ordering::SeqCst);
-        if !coord.barrier.wait() {
-            return; // another worker panicked: unwind cleanly
+        if !barrier_wait(coord, profile, &mut wait_ns) {
+            break 'rounds; // another worker panicked: unwind cleanly
         }
         let gmin = slot.load(Ordering::SeqCst);
         // every worker takes the same branch: gmin is the barrier-
         // reduced value and `stopped` predates the barrier
         if gmin == u64::MAX || gmin > until || stopped {
-            return;
+            break 'rounds;
         }
         // pre-arm the other parity slot; it is not read before the
         // next round's barrier, and every worker writes the same MAX
@@ -547,8 +594,8 @@ fn worker_rounds(
             coord.budget_hit.store(true, Ordering::SeqCst);
             coord.stop.store(true, Ordering::SeqCst);
         }
-        if !coord.barrier.wait() {
-            return;
+        if !barrier_wait(coord, profile, &mut wait_ns) {
+            break 'rounds;
         }
 
         // (c) merge this worker's inbound mailboxes
@@ -561,10 +608,14 @@ fn worker_rounds(
                 sh.queue.push(e);
             }
         }
-        if !coord.barrier.wait() {
-            return;
+        if !barrier_wait(coord, profile, &mut wait_ns) {
+            break 'rounds;
         }
         round += 1;
+    }
+    if profile {
+        coord.rounds.fetch_max(round as u64, Ordering::SeqCst);
+        coord.barrier_wait_ns.fetch_add(wait_ns, Ordering::SeqCst);
     }
 }
 

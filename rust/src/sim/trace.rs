@@ -7,6 +7,7 @@
 //! purely on slot indices (the seed engine paid two hash lookups per
 //! packet: `stats(id)` for rx accounting plus the probe-set scan).
 
+use crate::obs::span::TraceObs;
 use crate::sim::packet::{GlobalKernelId, DENSE_IDS};
 
 #[derive(Debug, Clone, Default)]
@@ -65,6 +66,9 @@ pub struct Trace {
     probe_series: Vec<u32>,
     series: Vec<Vec<u64>>,
     pub events_processed: u64,
+    /// Optional telemetry collector (None = telemetry off; the hot
+    /// paths below pay a single not-taken branch per event).
+    pub obs: Option<Box<TraceObs>>,
 }
 
 impl Default for Trace {
@@ -77,6 +81,7 @@ impl Default for Trace {
             probe_series: Vec::new(),
             series: Vec::new(),
             events_processed: 0,
+            obs: None,
         }
     }
 }
@@ -94,6 +99,9 @@ impl Trace {
                 self.probe_flag.push(false);
                 self.probe_series.push(0);
                 self.slot16[d] = slot as u32 + 1;
+                if let Some(o) = &mut self.obs {
+                    o.marks.push(o.is_marked_dense(d as u32));
+                }
                 slot
             }
             s => s as usize - 1,
@@ -142,6 +150,67 @@ impl Trace {
     pub fn probe_slot(&self, slot: usize) -> bool {
         self.probe_flag[slot]
     }
+
+    // ---- telemetry hooks (single Option branch when disabled) ----
+
+    /// Enable the telemetry collector: `marked` kernels get
+    /// per-inference endpoint stats (span roles); everything else only
+    /// feeds the fleet-level bucket series.
+    pub fn enable_obs(&mut self, interval: u64, marked: &[GlobalKernelId]) {
+        let mut o = Box::new(TraceObs::new(
+            interval,
+            marked.iter().map(|k| k.dense() as u32).collect(),
+        ));
+        let marks: Vec<bool> =
+            self.ids.iter().map(|id| o.is_marked_dense(id.dense() as u32)).collect();
+        o.marks = marks;
+        self.obs = Some(o);
+    }
+
+    /// Interval + mark set needed to build a matching per-shard
+    /// collector (None when telemetry is off).
+    pub(crate) fn obs_spec(&self) -> Option<(u64, Vec<u32>)> {
+        self.obs.as_ref().map(|o| (o.interval, o.mark_set.clone()))
+    }
+
+    /// A packet delivery: bump the bucket event series, and when the
+    /// receiving kernel is marked, its per-inference endpoint stats.
+    #[inline]
+    pub fn obs_rx(&mut self, slot: usize, inference: u32, t: u64) {
+        if let Some(o) = &mut self.obs {
+            o.on_event(t);
+            if o.marks[slot] {
+                o.on_rx_marked(self.ids[slot].dense() as u32, inference, t);
+            }
+        }
+    }
+
+    /// A packet send from a marked kernel.
+    #[inline]
+    pub fn obs_tx(&mut self, slot: usize, inference: u32, t: u64) {
+        if let Some(o) = &mut self.obs {
+            if o.marks[slot] {
+                o.on_tx_marked(self.ids[slot].dense() as u32, inference, t);
+            }
+        }
+    }
+
+    /// A wake delivery: counts as an event and into the wake series.
+    #[inline]
+    pub fn obs_wake(&mut self, t: u64) {
+        if let Some(o) = &mut self.obs {
+            o.on_event(t);
+            o.on_wake_bucket(t);
+        }
+    }
+
+    /// Sample a FIFO depth into the fleet-peak bucket series.
+    #[inline]
+    pub fn obs_fifo_depth(&mut self, t: u64, occupancy: u64) {
+        if let Some(o) = &mut self.obs {
+            o.on_fifo_depth(t, occupancy);
+        }
+    }
     #[inline]
     pub fn record_probe_slot(&mut self, slot: usize, t: u64) {
         let si = self.probe_series[slot];
@@ -165,6 +234,9 @@ impl Trace {
                 let osi = other.probe_series[i] as usize - 1;
                 self.series[si].extend_from_slice(&other.series[osi]);
             }
+        }
+        if let (Some(mine), Some(theirs)) = (&mut self.obs, other.obs) {
+            mine.merge(*theirs);
         }
     }
 
@@ -292,6 +364,49 @@ mod tests {
         assert_eq!((sa.first_rx, sa.last_rx), (Some(5), Some(9)));
         assert_eq!(master.probe_times(a).unwrap(), &[5, 9]);
         assert_eq!(master.kernel(b).unwrap().first_rx, Some(2));
+    }
+
+    #[test]
+    fn obs_marks_follow_registration_and_absorb_merges() {
+        let a = GlobalKernelId::new(0, 1);
+        let b = GlobalKernelId::new(0, 2);
+        let mut tr = Trace::default();
+        tr.register(a); // registered before enable: mark backfilled
+        tr.enable_obs(100, &[a, b]);
+        let sb = tr.register(b); // registered after enable
+        let sa = tr.register(a);
+        tr.obs_rx(sa, 7, 50);
+        tr.obs_tx(sb, 7, 90);
+        tr.obs_wake(150);
+        tr.obs_fifo_depth(55, 768);
+        let o = tr.obs.as_ref().unwrap();
+        assert_eq!(o.mark(a.dense() as u32, 7).unwrap().first_rx, Some(50));
+        assert_eq!(o.mark(b.dense() as u32, 7).unwrap().last_tx, Some(90));
+        assert_eq!(o.bucket_events, vec![1, 1]);
+        assert_eq!(o.bucket_wakes, vec![0, 1]);
+        assert_eq!(o.bucket_fifo_peak, vec![768]);
+
+        // shard-style merge
+        let mut sh = Trace::default();
+        sh.enable_obs(100, &[a, b]);
+        let ssa = sh.register(a);
+        sh.obs_rx(ssa, 7, 40);
+        tr.absorb(sh);
+        let o = tr.obs.as_ref().unwrap();
+        let m = o.mark(a.dense() as u32, 7).unwrap();
+        assert_eq!((m.first_rx, m.rx_packets), (Some(40), 2));
+        assert_eq!(o.bucket_events, vec![2, 1]);
+    }
+
+    #[test]
+    fn obs_disabled_is_a_noop() {
+        let mut tr = Trace::default();
+        let s = tr.register(GlobalKernelId::new(0, 1));
+        tr.obs_rx(s, 0, 10);
+        tr.obs_wake(10);
+        tr.obs_fifo_depth(10, 99);
+        assert!(tr.obs.is_none());
+        assert!(tr.obs_spec().is_none());
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Cycle-domain telemetry: the observability subsystem's contracts.
+//!
+//! * Exact shard-merge: the Chrome trace, the metrics JSONL stream and
+//!   the `serving_report/v3` JSON are byte-identical at every
+//!   `--threads` count — including lossy and failure-injection runs
+//!   (which take the sequential-engine fallback).
+//! * Zero perturbation: enabling telemetry never changes what the
+//!   simulation computes, and a telemetry-off report serializes as the
+//!   pre-telemetry `serving_report/v2`, byte for byte.
+//! * The previously dead `KernelStats::wakes` counter is surfaced in
+//!   per-kernel telemetry and aggregated in the report.
+
+use galapagos_llm::eval::testbed::FailureSchedule;
+use galapagos_llm::serve::{
+    run_serving, run_serving_with_obs, validate_serving_report, ArrivalProcess, ObsOutput,
+    ServeConfig, ServingReport,
+};
+use galapagos_llm::util::json::Json;
+
+fn obs_cfg(threads: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::glue(3, 12, 3_000.0, 11);
+    cfg.threads = Some(threads);
+    cfg.obs.enabled = true;
+    cfg
+}
+
+fn artifacts(cfg: &ServeConfig) -> (ServingReport, String, String) {
+    let (r, obs) = run_serving_with_obs(cfg).unwrap();
+    let ObsOutput { trace_json, metrics_jsonl } = obs;
+    (r, trace_json.expect("telemetry on"), metrics_jsonl.expect("telemetry on"))
+}
+
+/// The tentpole acceptance: trace + metrics + report bit-identical at
+/// threads {1, 2, 8} on a clean multi-encoder serving run.
+#[test]
+fn telemetry_artifacts_are_thread_count_invariant() {
+    let (r1, trace1, metrics1) = artifacts(&obs_cfg(1));
+    let golden = r1.to_json().pretty();
+    assert_eq!(r1.schema(), "serving_report/v3");
+    for threads in [2usize, 8] {
+        let (r, trace, metrics) = artifacts(&obs_cfg(threads));
+        assert_eq!(trace, trace1, "Chrome trace diverged at threads={threads}");
+        assert_eq!(metrics, metrics1, "metrics stream diverged at threads={threads}");
+        assert_eq!(r.to_json().pretty(), golden, "v3 report diverged at threads={threads}");
+    }
+}
+
+/// Lossy (reliable) and failure-injection runs force the sequential
+/// engine at every thread count — their telemetry must come out
+/// byte-identical too.
+#[test]
+fn degraded_mode_telemetry_is_thread_count_invariant() {
+    let lossy = |threads: usize| {
+        let mut cfg = obs_cfg(threads);
+        cfg.drop_probability = 0.02;
+        cfg.reliable = true;
+        artifacts(&cfg)
+    };
+    let failing = |threads: usize| {
+        let mut cfg = obs_cfg(threads);
+        cfg.encoders = 2;
+        cfg.traffic.process = ArrivalProcess::Uniform { seqs_per_s: 2_000.0 };
+        cfg.fail =
+            Some(FailureSchedule { fpga: 2, at_cycle: 350_000, recovery_cycles: Some(100_000) });
+        artifacts(&cfg)
+    };
+    for (name, run) in
+        [("lossy", &lossy as &dyn Fn(usize) -> (ServingReport, String, String)), ("fail", &failing)]
+    {
+        let (r1, trace1, metrics1) = run(1);
+        let (r8, trace8, metrics8) = run(8);
+        assert_eq!(trace8, trace1, "{name}: trace diverged across threads");
+        assert_eq!(metrics8, metrics1, "{name}: metrics diverged across threads");
+        assert_eq!(
+            r8.to_json().pretty(),
+            r1.to_json().pretty(),
+            "{name}: report diverged across threads"
+        );
+    }
+}
+
+/// Collection must not perturb the simulation: the v2 body of a
+/// telemetry-on report equals the telemetry-off report byte for byte,
+/// and the telemetry-off report is exactly the pre-telemetry schema.
+#[test]
+fn telemetry_off_reports_are_exactly_v2_and_collection_is_inert() {
+    let mut cfg = obs_cfg(1);
+    let (on, _, _) = artifacts(&cfg);
+    cfg.obs.enabled = false;
+    let off = run_serving(&cfg).unwrap();
+    assert_eq!(off.schema(), "serving_report/v2");
+    let off_json = off.to_json();
+    assert!(off_json.get("telemetry").is_none() && off_json.get("sim_profile").is_none());
+    validate_serving_report(&off_json).unwrap();
+
+    // strip the v3 sections: everything else must match byte for byte
+    let mut stripped = on.clone();
+    stripped.telemetry = None;
+    stripped.sim_profile = None;
+    assert_eq!(
+        stripped.to_json().pretty(),
+        off_json.pretty(),
+        "enabling telemetry perturbed the simulated results"
+    );
+}
+
+/// §6 failover telemetry: failure/recovery instants land in the Chrome
+/// trace, and the outage shows up in the bottleneck attribution.
+#[test]
+fn failover_telemetry_attributes_the_outage() {
+    let mut cfg = obs_cfg(1);
+    cfg.encoders = 2;
+    cfg.traffic.process = ArrivalProcess::Uniform { seqs_per_s: 2_000.0 };
+    cfg.fail = Some(FailureSchedule { fpga: 2, at_cycle: 350_000, recovery_cycles: Some(100_000) });
+    let (r, trace, metrics) = artifacts(&cfg);
+    let f = r.fault.clone().expect("failure injected");
+    assert!(f.recovered);
+
+    assert!(trace.contains("\"name\":\"fail\""), "failure instant missing from the trace");
+    assert!(trace.contains("\"name\":\"recover\""), "recovery instant missing from the trace");
+    let j = r.to_json();
+    validate_serving_report(&j).unwrap();
+    let outage =
+        j.path("telemetry.attribution.totals_cycles.outage").unwrap().as_f64().unwrap();
+    assert!(outage > 0.0, "mid-outage arrivals must carry outage cycles");
+    assert_eq!(
+        j.path("telemetry.fleet.outage_holds").unwrap().as_i64().unwrap(),
+        f.held_packets as i64,
+        "telemetry and fault section must agree on buffered packets"
+    );
+    // the outage also lands in the metrics summary line
+    let summary = metrics.lines().last().unwrap();
+    assert!(summary.contains("\"outage_holds\":"), "metrics summary missing outage holds");
+    let sj = Json::parse(summary).unwrap();
+    assert_eq!(sj.get("outage_holds").unwrap().as_i64().unwrap(), f.held_packets as i64);
+}
+
+/// Regression for the once-dead `KernelStats::wakes` counter: it is
+/// collected, aggregated, exported per kernel, and consistent between
+/// the metrics stream and the report's telemetry section.
+#[test]
+fn wakes_surface_in_metrics_and_telemetry() {
+    let (r, _, metrics) = artifacts(&obs_cfg(1));
+    let j = r.to_json();
+    let total = j.path("telemetry.wakes.total").unwrap().as_i64().unwrap();
+    assert!(total > 0, "a timing-mode serving run schedules wakes (PE pacing)");
+    let top = j.path("telemetry.wakes.top_kernels").unwrap().as_arr().unwrap();
+    assert!(!top.is_empty());
+    assert!(top[0].get("wakes").unwrap().as_i64().unwrap() > 0);
+
+    // per-kernel wakes in the metrics stream sum to the reported total
+    let mut stream_total = 0i64;
+    for line in metrics.lines() {
+        let lj = Json::parse(line).unwrap();
+        if lj.get("type").and_then(Json::as_str) == Some("kernel") {
+            stream_total += lj.get("wakes").unwrap().as_i64().unwrap();
+        }
+    }
+    assert_eq!(stream_total, total, "metrics stream and telemetry section disagree on wakes");
+}
+
+/// Every emitted artifact parses: the Chrome trace as one JSON document
+/// with balanced async begin/end pairs, the metrics stream line by line
+/// with a well-formed header.
+#[test]
+fn artifacts_are_well_formed() {
+    let (r, trace, metrics) = artifacts(&obs_cfg(2));
+    let doc = Json::parse(&trace).expect("trace must be valid JSON");
+    let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let (mut begins, mut ends) = (0, 0);
+    for e in evs {
+        match e.get("ph").and_then(Json::as_str).unwrap() {
+            "b" => begins += 1,
+            "e" => ends += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(begins, ends, "unbalanced async span pairs");
+    assert!(begins >= r.completed as i64, "at least one span per completed request");
+
+    let header = Json::parse(metrics.lines().next().unwrap()).unwrap();
+    assert_eq!(header.get("schema").unwrap().as_str().unwrap(), "obs_metrics/v1");
+    assert!(header.get("interval_cycles").unwrap().as_i64().unwrap() > 0);
+    for line in metrics.lines() {
+        assert!(Json::parse(line).is_ok(), "unparseable metrics line: {line}");
+    }
+}

@@ -737,3 +737,60 @@ fn prop_lossy_runs_are_bit_identical_across_thread_counts() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry determinism: the observability artifacts (Chrome trace,
+// metrics stream, v3 report) are part of the bit-identical contract,
+// and collecting them never perturbs the simulation itself.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_telemetry_artifacts_are_deterministic_and_inert() {
+    use galapagos_llm::serve::{run_serving, run_serving_with_obs, ServeConfig};
+    check_with(&Config { cases: 4, ..Default::default() }, "telemetry-determinism", |g| {
+        let encoders = g.usize_in(1, 3);
+        let requests = g.usize_in(3, 8);
+        let seqs_per_s = 1_000.0 + 4_000.0 * g.f64_unit();
+        let seed = g.rng.next_u64();
+        let lossy = g.bool();
+        let mk = |threads: usize, obs: bool| {
+            let mut cfg = ServeConfig::glue(encoders, requests, seqs_per_s, seed);
+            cfg.threads = Some(threads);
+            cfg.obs.enabled = obs;
+            if lossy {
+                cfg.drop_probability = 0.01;
+                cfg.reliable = true;
+            }
+            cfg
+        };
+
+        let (r1, obs1) = run_serving_with_obs(&mk(1, true)).map_err(|e| e.to_string())?;
+        let threads = *g.pick(&[2usize, 4, 8]);
+        let (rn, obsn) = run_serving_with_obs(&mk(threads, true)).map_err(|e| e.to_string())?;
+        prop_assert!(
+            obsn.trace_json == obs1.trace_json,
+            "Chrome trace diverged at threads={threads} (lossy={lossy})"
+        );
+        prop_assert!(
+            obsn.metrics_jsonl == obs1.metrics_jsonl,
+            "metrics stream diverged at threads={threads} (lossy={lossy})"
+        );
+        prop_assert!(
+            rn.to_json().pretty() == r1.to_json().pretty(),
+            "v3 serving report diverged at threads={threads} (lossy={lossy})"
+        );
+
+        // inert collection: stripping the v3 sections recovers the
+        // telemetry-off report byte for byte
+        let off = run_serving(&mk(1, false)).map_err(|e| e.to_string())?;
+        prop_assert!(off.schema() == "serving_report/v2", "off-report must stay v2");
+        let mut stripped = r1;
+        stripped.telemetry = None;
+        stripped.sim_profile = None;
+        prop_assert!(
+            stripped.to_json().pretty() == off.to_json().pretty(),
+            "telemetry collection perturbed the simulation (lossy={lossy})"
+        );
+        Ok(())
+    });
+}
