@@ -1,0 +1,116 @@
+//! Fleet-scale bench: the thousand-FPGA lossy scenario (28 chains x 6
+//! encoders x 6 FPGAs + the evaluation FPGA = 1009) run sequentially and
+//! at 8 worker threads, recorded in BENCH_fleetscale.json.
+//!
+//!   cargo bench --bench fleetscale            # full 1009-FPGA trace
+//!   cargo bench --bench fleetscale -- --quick # CI smoke (253 FPGAs)
+//!   ... -- --check [--tolerance 0.5]          # regression gate
+//!
+//! Headline: `fleetscale_lossy_1000fpga_parallel_speedup` — events/s at
+//! 8 threads over the sequential engine on the same lossy reliable
+//! scenario. The two runs must also agree bit-for-bit (rows, cycles,
+//! drops, retransmits): speed that changes the answer is not speed.
+
+use galapagos_llm::eval::fleet::{run_fleet, FleetConfig, FleetReport};
+use galapagos_llm::eval::testbed::NetworkConfig;
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::cli::Args;
+use galapagos_llm::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_fleetscale.json");
+    let seed = args.u64_or("seed", 7)?;
+    let mut b = Bencher::quick();
+
+    let mut cfg = FleetConfig::thousand_fpga();
+    if quick {
+        // same shape, a quarter of the chains: 7 x 6 x 6 + 1 = 253 FPGAs
+        cfg.chains = 7;
+    }
+    cfg.net = NetworkConfig { drop_probability: 0.01, reliable: true, seed };
+    println!(
+        "fleet: {} chains x {} encoders = {} clusters, {} FPGAs, 1% loss + reliable transport",
+        cfg.chains,
+        cfg.encoders_per_chain,
+        cfg.chains * cfg.encoders_per_chain,
+        cfg.total_fpgas(),
+    );
+
+    let mut cases: Vec<Json> = Vec::new();
+    let mut run_at = |b: &mut Bencher,
+                      name: &str,
+                      threads: usize|
+     -> anyhow::Result<(FleetReport, f64)> {
+        let mut c = cfg.clone();
+        c.threads = Some(threads);
+        let t0 = std::time::Instant::now();
+        let (report, _fleet) = b.once(name, || run_fleet(&c))?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let events_per_sec = report.events as f64 / wall_s.max(1e-9);
+        anyhow::ensure!(
+            report.completed() && !report.truncated,
+            "{name}: reliable transport must deliver every row ({}/{} rows)",
+            report.rows,
+            report.expected_rows
+        );
+        anyhow::ensure!(report.dropped > 0, "{name}: the 1% lossy run must drop something");
+        println!(
+            "  {name}: {} rows, end cycle {}, {} events ({:.2} M events/s), \
+             {} dropped / {} retransmitted",
+            report.rows,
+            report.end_cycle,
+            report.events,
+            events_per_sec / 1e6,
+            report.dropped,
+            report.retransmits,
+        );
+        cases.push(Json::obj(vec![
+            ("scenario", Json::Str(name.into())),
+            ("threads", Json::Num(threads as f64)),
+            ("fpgas", Json::Num(report.fpgas as f64)),
+            ("rows", Json::Num(report.rows as f64)),
+            ("end_cycle", Json::Num(report.end_cycle as f64)),
+            ("events", Json::Num(report.events as f64)),
+            ("dropped", Json::Num(report.dropped as f64)),
+            ("retransmits", Json::Num(report.retransmits as f64)),
+            ("events_per_sec", Json::Num(events_per_sec)),
+            ("wall_ms", Json::Num(wall_s * 1e3)),
+        ]));
+        Ok((report, events_per_sec))
+    };
+
+    let (seq, seq_eps) = run_at(&mut b, "lossy fleet, sequential", 1)?;
+    let (par, par_eps) = run_at(&mut b, "lossy fleet, 8 threads", 8)?;
+    anyhow::ensure!(
+        (seq.rows, seq.end_cycle, seq.events, seq.dropped, seq.retransmits)
+            == (par.rows, par.end_cycle, par.events, par.dropped, par.retransmits),
+        "parallel run diverged from sequential: {seq:?} vs {par:?}"
+    );
+    let speedup = par_eps / seq_eps.max(1e-9);
+    println!("  parallel speedup: {speedup:.2}x events/s at 8 threads");
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_fleetscale/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("chains", Json::Num(cfg.chains as f64)),
+        ("fpgas", Json::Num(cfg.total_fpgas() as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::obj(vec![(
+                "fleetscale_lossy_1000fpga_parallel_speedup",
+                Json::Num(speedup),
+            )]),
+        ),
+    ]);
+
+    // --check: read any committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}

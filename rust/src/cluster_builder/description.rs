@@ -225,8 +225,10 @@ impl BuildDescription {
             placement: None,
             schedule: None,
             threads: None,
+            granularity: None,
             net: Default::default(),
             fail: None,
+            obs: Default::default(),
         }
     }
 }

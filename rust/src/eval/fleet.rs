@@ -1,0 +1,407 @@
+//! Synthetic fleet-scale scenarios: N independent encoder chains
+//! replicated side by side until the platform reaches a thousand FPGAs.
+//!
+//! The paper's testbed tops out at one 6-FPGA encoder plus the
+//! evaluation FPGA; the ROADMAP's "millions of users" north star needs
+//! the simulator to answer questions at *fleet* scale — hundreds of
+//! clusters serving in parallel, with the production-realism knobs
+//! (lossy UDP, reliable transport, §6 failures) turned on. This module
+//! generates that fleet: `chains` replicated encoder chains of
+//! `encoders_per_chain` clusters (6 FPGAs each, the Fig. 14 mapping),
+//! all fed from one evaluation FPGA, with **constant-memory streaming
+//! stats** — the sink keeps running aggregates instead of per-inference
+//! maps, so a thousand-FPGA run's memory does not grow with traffic.
+//!
+//! The default [`FleetConfig::thousand_fpga`] scenario is 28 chains x 6
+//! encoders x 6 FPGAs = 1008 fabric FPGAs + 1 evaluation FPGA = 1009.
+//! `benches/fleetscale.rs` runs it lossy at 1 and 8 threads and gates
+//! the parallel-speedup headline; the `fleet` CLI subcommand exposes it
+//! with an event-budget profile for bounded exploratory runs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::eval::testbed::{NetworkConfig, EVAL_CLUSTER, EVAL_SINK};
+use crate::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpec};
+use crate::gmi::gateway::{Gateway, GatewayConfig};
+use crate::gmi::Out;
+use crate::ibert::graph::EncoderGraphParams;
+use crate::ibert::kernels::{Mode, SourceKernel};
+use crate::ibert::timing::PeConfig;
+use crate::sim::engine::{KernelBehavior, KernelIo, Sim};
+use crate::sim::fabric::{FpgaId, SwitchId};
+use crate::sim::packet::{GlobalKernelId, Packet};
+use crate::sim::ShardGranularity;
+
+/// First evaluation-cluster kernel id used for per-chain sources (one
+/// source kernel per chain, ids `SOURCE_BASE..SOURCE_BASE + chains`).
+pub const SOURCE_BASE: u8 = 3;
+
+/// A fleet-scale scenario.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// independent replicated encoder chains
+    pub chains: usize,
+    /// encoder clusters per chain (6 FPGAs each)
+    pub encoders_per_chain: usize,
+    /// sequence length of every inference
+    pub m: usize,
+    /// pipelined inferences per chain
+    pub inferences: u32,
+    /// input packet interval in cycles (12 = 100G line rate)
+    pub interval: u64,
+    /// FPGAs per 100G switch (switches chain serially)
+    pub fpgas_per_switch: usize,
+    /// lossy-UDP / reliable-transport behavior
+    pub net: NetworkConfig,
+    /// DES worker threads (None = process default)
+    pub threads: Option<usize>,
+    /// shard cut (None = simulator default, per-cluster)
+    pub granularity: Option<ShardGranularity>,
+    /// stop (with a truncated report, not an error) after this many
+    /// events — the bounded "event-budget profile" for exploratory runs
+    pub event_budget: Option<u64>,
+    /// simulator self-profile (wall-ns/cycle, barrier wait, ...)
+    pub profile: bool,
+}
+
+impl FleetConfig {
+    /// The headline scenario: 28 chains x 6 encoders x 6 FPGAs = 1008
+    /// fabric FPGAs + the evaluation FPGA = 1009 total.
+    pub fn thousand_fpga() -> FleetConfig {
+        FleetConfig {
+            chains: 28,
+            encoders_per_chain: 6,
+            m: 16,
+            inferences: 1,
+            interval: 12,
+            fpgas_per_switch: 6,
+            net: NetworkConfig::default(),
+            threads: None,
+            granularity: None,
+            event_budget: None,
+            profile: false,
+        }
+    }
+
+    /// Total FPGAs the scenario instantiates (fabric + evaluation).
+    pub fn total_fpgas(&self) -> usize {
+        self.chains * self.encoders_per_chain * 6 + 1
+    }
+}
+
+/// Constant-memory streaming aggregates of the fleet sink: running
+/// counters only — nothing here grows with the number of inferences,
+/// rows, or chains.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// output rows received across all chains
+    pub rows: u64,
+    /// first / last output-row arrival cycles (0 until the first row)
+    pub first_arrival: u64,
+    pub last_arrival: u64,
+}
+
+/// The fleet sink: every chain's final encoder output converges here.
+/// Unlike the testbed's `SinkKernel` (per-inference arrival maps), it
+/// keeps only [`StreamStats`] — O(1) memory at any fleet size.
+struct StreamSinkKernel {
+    stats: Arc<Mutex<StreamStats>>,
+}
+
+impl KernelBehavior for StreamSinkKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        let stats = self.stats.clone();
+        io.rows(pkt, |io2: &mut KernelIo, _meta, at, payload| {
+            io2.consume(payload.bytes());
+            let mut s = stats.lock().unwrap();
+            if s.rows == 0 {
+                s.first_arrival = at;
+            }
+            s.rows += 1;
+            s.last_arrival = s.last_arrival.max(at);
+        });
+    }
+
+    fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+
+    fn name(&self) -> String {
+        "fleet-sink".to_string()
+    }
+}
+
+/// A built fleet: the simulator plus the streaming-stats handle.
+pub struct FleetSim {
+    pub sim: Sim,
+    pub stats: Arc<Mutex<StreamStats>>,
+    /// rows the sink will have seen when every inference completes
+    pub expected_rows: u64,
+    pub fpgas: usize,
+    pub clusters: usize,
+}
+
+/// Assemble the fleet: `chains * encoders_per_chain` encoder clusters
+/// (Fig. 14 mapping, 6 FPGAs each) plus one evaluation FPGA hosting a
+/// source kernel per chain and the shared streaming sink.
+pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
+    ensure!(cfg.chains >= 1, "need at least one chain");
+    ensure!(cfg.encoders_per_chain >= 1, "need at least one encoder per chain");
+    let n_clusters = cfg.chains * cfg.encoders_per_chain;
+    ensure!(
+        n_clusters < EVAL_CLUSTER as usize,
+        "fleet needs {n_clusters} cluster ids; only {} fit under the evaluation cluster",
+        EVAL_CLUSTER
+    );
+    ensure!(
+        cfg.chains as usize <= (u8::MAX - SOURCE_BASE) as usize,
+        "too many chains for the evaluation cluster's kernel-id space"
+    );
+    let (hidden, ffn, max_seq) = (768usize, 3072usize, 128usize);
+    ensure!((1..=max_seq).contains(&cfg.m), "m must be in 1..={max_seq}");
+    ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
+    ensure!(
+        (0.0..1.0).contains(&cfg.net.drop_probability),
+        "drop probability must be in [0, 1)"
+    );
+
+    let slots = crate::ibert::graph::default_slots();
+    let per = slots.iter().copied().max().map_or(1, |s| s + 1);
+    let sink_global = GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK);
+
+    let mut clusters = Vec::with_capacity(n_clusters + 1);
+    let mut behaviors: HashMap<GlobalKernelId, Box<dyn KernelBehavior>> = HashMap::new();
+    for chain in 0..cfg.chains {
+        for e in 0..cfg.encoders_per_chain {
+            let c = (chain * cfg.encoders_per_chain + e) as u8;
+            let out_dst = if e + 1 < cfg.encoders_per_chain {
+                Out::tagged(GlobalKernelId::new(c + 1, 0), 0)
+            } else {
+                Out::tagged(sink_global, 0)
+            };
+            let gp = EncoderGraphParams {
+                cluster_id: c,
+                fpga_base: per * (c as usize),
+                pe: PeConfig::default(),
+                mode: Mode::Timing,
+                out_dst,
+                max_seq,
+                hidden,
+                ffn,
+            };
+            let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
+            for (id, b) in built.behaviors {
+                behaviors.insert(GlobalKernelId::new(c, id), b);
+            }
+            clusters.push(built.cluster);
+        }
+    }
+
+    // evaluation cluster: gateway + shared streaming sink + one source
+    // per chain, all on the last FPGA. The sink FIFO is sized for the
+    // worst-case convergence of every chain's in-flight output.
+    let eval_fpga = FpgaId(per * n_clusters);
+    let mut kernels = vec![
+        KernelDecl {
+            id: 0,
+            name: "fleet-gateway".into(),
+            ktype: KernelType::Gateway,
+            fpga: eval_fpga,
+            dests: vec![sink_global],
+            fifo_bytes: cfg.chains * cfg.m * hidden,
+        },
+        KernelDecl {
+            id: EVAL_SINK,
+            name: "fleet-sink".into(),
+            ktype: KernelType::Compute,
+            fpga: eval_fpga,
+            dests: vec![],
+            fifo_bytes: cfg.chains * cfg.m * hidden,
+        },
+    ];
+    behaviors.insert(
+        GlobalKernelId::new(EVAL_CLUSTER, 0),
+        Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
+    );
+    let stats: Arc<Mutex<StreamStats>> = Arc::default();
+    behaviors
+        .insert(sink_global, Box::new(StreamSinkKernel { stats: stats.clone() }));
+    for chain in 0..cfg.chains {
+        let sid = SOURCE_BASE + chain as u8;
+        let first_cluster = (chain * cfg.encoders_per_chain) as u8;
+        kernels.push(KernelDecl {
+            id: sid,
+            name: format!("fleet-source-{chain}"),
+            ktype: KernelType::Compute,
+            fpga: eval_fpga,
+            dests: vec![GlobalKernelId::new(first_cluster, 0)],
+            fifo_bytes: 4096,
+        });
+        behaviors.insert(
+            GlobalKernelId::new(EVAL_CLUSTER, sid),
+            Box::new(SourceKernel::new(
+                Out::to(GlobalKernelId::new(first_cluster, 0)),
+                cfg.m as u32,
+                cfg.inferences,
+                cfg.interval,
+                None,
+            )),
+        );
+    }
+    clusters.push(ClusterSpec { id: EVAL_CLUSTER, kernels });
+
+    let mut switch_of = HashMap::new();
+    for f in 0..=(per * n_clusters) {
+        switch_of.insert(FpgaId(f), SwitchId(f / cfg.fpgas_per_switch));
+    }
+    let spec = PlatformSpec { clusters, switch_of };
+    let fpgas = per * n_clusters + 1;
+    let mut sim = spec.build_sim(|c, k| {
+        behaviors
+            .remove(&GlobalKernelId::new(c.id, k.id))
+            .unwrap_or_else(|| panic!("no behavior for c{}k{}", c.id, k.id))
+    })?;
+    if let Some(t) = cfg.threads {
+        sim.set_threads(t);
+    }
+    if let Some(g) = cfg.granularity {
+        sim.granularity = g;
+    }
+    if let Some(b) = cfg.event_budget {
+        sim.max_events = b;
+    }
+    if cfg.profile {
+        sim.profile = true;
+    }
+    sim.fabric.drop_probability = cfg.net.drop_probability;
+    sim.fabric.reliable = cfg.net.reliable;
+    sim.fabric.seed_drop_rng(cfg.net.seed);
+
+    Ok(FleetSim {
+        sim,
+        stats,
+        expected_rows: cfg.chains as u64 * cfg.inferences as u64 * cfg.m as u64,
+        fpgas,
+        clusters: n_clusters,
+    })
+}
+
+/// Outcome of one fleet run — everything is a running aggregate; the
+/// report's size is independent of fleet size and traffic volume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub fpgas: usize,
+    pub clusters: usize,
+    pub chains: usize,
+    /// output rows the sink received / the count meaning "all done"
+    pub rows: u64,
+    pub expected_rows: u64,
+    pub first_arrival: u64,
+    pub last_arrival: u64,
+    pub end_cycle: u64,
+    pub events: u64,
+    pub dropped: u64,
+    pub retransmits: u64,
+    /// the event budget stopped the run before quiescence
+    pub truncated: bool,
+}
+
+impl FleetReport {
+    pub fn completed(&self) -> bool {
+        self.rows == self.expected_rows
+    }
+}
+
+/// Build the fleet, run it to quiescence (or the event budget), and
+/// distill the streaming aggregates. An exhausted event budget is a
+/// truncated report, not an error — that is the point of the profile.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<(FleetReport, FleetSim)> {
+    let mut fleet = build_fleet(cfg)?;
+    fleet.sim.start();
+    let truncated = match fleet.sim.run() {
+        Ok(_) => false,
+        Err(e) if e.to_string().contains("event budget exceeded") => true,
+        Err(e) => return Err(e),
+    };
+    let s = *fleet.stats.lock().unwrap();
+    let report = FleetReport {
+        fpgas: fleet.fpgas,
+        clusters: fleet.clusters,
+        chains: cfg.chains,
+        rows: s.rows,
+        expected_rows: fleet.expected_rows,
+        first_arrival: s.first_arrival,
+        last_arrival: s.last_arrival,
+        end_cycle: fleet.sim.time,
+        events: fleet.sim.trace.events_processed,
+        dropped: fleet.sim.fabric.stats.dropped,
+        retransmits: fleet.sim.fabric.stats.retransmits,
+        truncated,
+    };
+    Ok((report, fleet))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> FleetConfig {
+        FleetConfig {
+            chains: 2,
+            encoders_per_chain: 1,
+            m: 4,
+            inferences: 1,
+            interval: 12,
+            fpgas_per_switch: 6,
+            net: NetworkConfig::default(),
+            threads: Some(1),
+            granularity: None,
+            event_budget: None,
+            profile: false,
+        }
+    }
+
+    #[test]
+    fn thousand_fpga_scenario_reaches_1000() {
+        let cfg = FleetConfig::thousand_fpga();
+        assert!(cfg.total_fpgas() >= 1000, "got {}", cfg.total_fpgas());
+        assert!(cfg.chains * cfg.encoders_per_chain < EVAL_CLUSTER as usize);
+    }
+
+    #[test]
+    fn tiny_fleet_completes_every_row() {
+        let (r, _) = run_fleet(&tiny()).unwrap();
+        assert!(r.completed(), "{} of {} rows", r.rows, r.expected_rows);
+        assert!(!r.truncated);
+        assert!(r.last_arrival >= r.first_arrival && r.first_arrival > 0);
+        assert_eq!(r.fpgas, 2 * 6 + 1);
+    }
+
+    #[test]
+    fn fleet_is_thread_count_invariant_even_lossy() {
+        let run = |threads: usize| {
+            let mut cfg = tiny();
+            cfg.chains = 3;
+            cfg.threads = Some(threads);
+            cfg.net = NetworkConfig { drop_probability: 0.05, reliable: true, seed: 11 };
+            let (r, fleet) = run_fleet(&cfg).unwrap();
+            (r, fleet.sim.fabric.drop_trace.clone())
+        };
+        let seq = run(1);
+        assert!(seq.0.dropped > 0, "5% loss must drop something");
+        assert!(seq.0.completed(), "reliable transport completes every row");
+        for threads in [2, 8] {
+            assert_eq!(run(threads), seq, "fleet run diverged at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn event_budget_truncates_instead_of_failing() {
+        let mut cfg = tiny();
+        cfg.event_budget = Some(200);
+        let (r, _) = run_fleet(&cfg).unwrap();
+        assert!(r.truncated, "200 events cannot finish the run");
+        assert!(!r.completed());
+    }
+}

@@ -1,6 +1,7 @@
 //! Evaluation harness (§8): testbeds, the Eq. 1 latency model, GLUE-like
 //! workloads, and the generators for every table and figure in the paper.
 
+pub mod fleet;
 pub mod latency_model;
 pub mod tables;
 pub mod testbed;

@@ -109,10 +109,14 @@ pub struct TestbedConfig {
     /// sequential engine). Results are thread-count-invariant by
     /// contract — this only changes wall-clock.
     pub threads: Option<usize>,
+    /// shard cut for the parallel DES (None = the simulator default,
+    /// per-cluster). Results are granularity-invariant by contract.
+    pub granularity: Option<crate::sim::ShardGranularity>,
     /// lossy-UDP / reliable-transport behavior of the fabric
     pub net: NetworkConfig,
-    /// optional §6 failure injection (forces the sequential engine, like
-    /// lossy mode — results stay thread-count-invariant via the fallback)
+    /// optional §6 failure injection — runs on the sharded engine in
+    /// phases around the outage window (`Sim::run_phased_failure`), so
+    /// results stay thread-count-invariant without a sequential fallback
     pub fail: Option<FailureSchedule>,
     /// cycle-domain telemetry: span tracing + streaming metrics (off by
     /// default, zero-cost on the hot path when disabled) and the
@@ -134,6 +138,7 @@ impl TestbedConfig {
             placement: None,
             schedule: None,
             threads: None,
+            granularity: None,
             net: NetworkConfig::default(),
             fail: None,
             obs: Default::default(),
@@ -320,6 +325,9 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
     })?;
     if let Some(t) = cfg.threads {
         sim.set_threads(t);
+    }
+    if let Some(g) = cfg.granularity {
+        sim.granularity = g;
     }
     sim.trace.add_probe(sink_global);
 

@@ -67,6 +67,14 @@ COMMANDS:
             nonzero on regression
   plan      [--config configs/ibert_poc.json] [--m <max_seq>] [--fleet N] [--out plan.json]
             [--replay]   (replay needs the ibert-base shape)
+  fleet     [--chains 28] [--encoders 6] [--m 16] [--inferences 1] [--interval 12]
+            [--drop 0.02] [--reliable] [--net-seed 7] [--shards cluster|fpga]
+            [--event-budget N]   (stop after N events with a truncated
+            report instead of running to quiescence) [--profile]
+            synthetic fleet-scale scenario: chains x encoders x 6 FPGAs
+            + 1 eval FPGA (defaults reach 1009), constant-memory
+            streaming stats — the thousand-FPGA lossy scenario behind
+            benches/fleetscale.rs
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
   versal
   serve     [--encoders 6] [--requests 200] [--workload glue|mrpc|squad]
@@ -74,6 +82,8 @@ COMMANDS:
             [--seed 7] [--interval 12] [--fpgas-per-switch 6] [--no-eq1]
             [--drop 0.02] [--reliable]   (lossy serving; reliable transport
             completes 100% of inferences and reports drop/retransmit counts)
+            [--shards cluster|fpga]   (parallel-engine cut granularity —
+            reports are identical across cuts and thread counts)
             [--fail <fpga>@<cycle>] [--recovery-cycles N]   (mid-serving
             failover: serving_report/v2 gains the fault section with
             time-to-recover and outage-window percentiles)
@@ -105,6 +115,7 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("bench") => cmd_bench(&args),
         Some("plan") => cmd_plan(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("build") => cmd_build(&args),
         Some("versal") => cmd_versal(),
         Some("serve") => cmd_serve(&args),
@@ -643,11 +654,28 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let d_cycles = galapagos_llm::sim::params::INTER_SWITCH_LAT;
     println!("{}", placer::report::latency_summary(&sol, m, d.encoders, d_cycles));
     match placer::cost::min_lookahead_cycles(&sol.placement, &fleet) {
-        Some(la) => println!(
-            "parallel-sim lookahead: >= {la} cycles ({:.2} us) at the finest (per-FPGA) \
-             shard cut; the default per-encoder cut is at least this",
-            cycles_to_us(la)
-        ),
+        Some(la) => {
+            println!(
+                "parallel-sim lookahead: >= {la} cycles ({:.2} us) at the finest (per-FPGA) \
+                 shard cut; the default per-encoder cut is at least this",
+                cycles_to_us(la)
+            );
+            let retx = placer::cost::retx_aware_lookahead_cycles(&sol.placement, &fleet)
+                .expect("same placement yielded a lookahead above");
+            println!(
+                "  with reliable lossy transport: >= {retx} cycles ({:.2} us){}",
+                cycles_to_us(retx),
+                if retx < la { " — clamped to RETX_TIMEOUT" } else { "" }
+            );
+            if retx < placer::cost::PROFITABLE_WINDOW_CYCLES {
+                println!(
+                    "  WARNING: the retransmit clamp shrinks the conservative window below \
+                     {} cycles; parallel lossy runs on this placement will be \
+                     barrier-dominated — consider --threads 1",
+                    placer::cost::PROFITABLE_WINDOW_CYCLES
+                );
+            }
+        }
         None => println!("parallel-sim lookahead: n/a (single-FPGA placement runs sequentially)"),
     }
 
@@ -676,6 +704,82 @@ fn cmd_plan(args: &Args) -> Result<()> {
             100.0 * (px as f64 - x as f64) / x as f64,
             100.0 * (pt as f64 - t as f64) / t as f64
         );
+    }
+    Ok(())
+}
+
+/// Run a synthetic fleet-scale scenario (N chains x M encoder clusters
+/// x 6 FPGAs + the evaluation FPGA) with constant-memory streaming
+/// stats and an optional event-budget profile.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use galapagos_llm::eval::fleet::{run_fleet, FleetConfig};
+
+    let mut cfg = FleetConfig::thousand_fpga();
+    cfg.chains = args.usize_or("chains", cfg.chains)?;
+    cfg.encoders_per_chain = args.usize_or("encoders", cfg.encoders_per_chain)?;
+    cfg.m = args.usize_or("m", cfg.m)?;
+    cfg.inferences = args.u64_or("inferences", cfg.inferences as u64)? as u32;
+    cfg.interval = args.u64_or("interval", cfg.interval)?;
+    cfg.net.drop_probability = args.f64_or("drop", 0.0)?;
+    cfg.net.reliable = args.bool_or("reliable", false)?;
+    cfg.net.seed = args.u64_or("net-seed", 0)?;
+    cfg.granularity = match args.str_or("shards", "cluster").as_str() {
+        "cluster" => Some(galapagos_llm::sim::ShardGranularity::PerCluster),
+        "fpga" => Some(galapagos_llm::sim::ShardGranularity::PerFpga),
+        other => bail!("unknown shard granularity {other:?} (expected cluster|fpga)"),
+    };
+    if args.has("event-budget") {
+        cfg.event_budget = Some(args.u64_or("event-budget", 0)?);
+    }
+    cfg.profile = args.bool_or("profile", false)?;
+
+    println!(
+        "fleet: {} chains x {} encoders x 6 FPGAs + 1 eval = {} FPGAs ({} clusters); \
+         m={}, {} inference(s)/chain{}",
+        cfg.chains,
+        cfg.encoders_per_chain,
+        cfg.total_fpgas(),
+        cfg.chains * cfg.encoders_per_chain,
+        cfg.m,
+        cfg.inferences,
+        if cfg.net.drop_probability > 0.0 {
+            format!(
+                ", drop={}{}",
+                cfg.net.drop_probability,
+                if cfg.net.reliable { " (reliable)" } else { "" }
+            )
+        } else {
+            String::new()
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let (r, fleet) = run_fleet(&cfg)?;
+    let wall = t0.elapsed();
+    println!(
+        "rows: {}/{} ({}){}   end cycle: {} ({:.2} ms simulated)",
+        r.rows,
+        r.expected_rows,
+        if r.completed() { "complete" } else { "incomplete" },
+        if r.truncated { " [truncated by event budget]" } else { "" },
+        r.end_cycle,
+        cycles_to_us(r.end_cycle) / 1e3
+    );
+    println!(
+        "events: {}   wall: {:.1} ms ({:.2} M events/s)",
+        r.events,
+        wall.as_secs_f64() * 1e3,
+        r.events as f64 / wall.as_secs_f64() / 1e6
+    );
+    if r.dropped > 0 || r.retransmits > 0 {
+        println!(
+            "transport: {} copies dropped, {} retransmitted ({})",
+            r.dropped,
+            r.retransmits,
+            if cfg.net.reliable { "reliable: delivered exactly once" } else { "unreliable" }
+        );
+    }
+    if let Some(p) = fleet.sim.last_profile.as_ref() {
+        println!("{}", p.render());
     }
     Ok(())
 }
@@ -760,6 +864,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     cfg.check_eq1 = !args.bool_or("no-eq1", false)?;
     cfg.drop_probability = args.f64_or("drop", 0.0)?;
     cfg.reliable = args.bool_or("reliable", false)?;
+    cfg.granularity = match args.str_or("shards", "cluster").as_str() {
+        "cluster" => Some(galapagos_llm::sim::ShardGranularity::PerCluster),
+        "fpga" => Some(galapagos_llm::sim::ShardGranularity::PerFpga),
+        other => bail!("unknown shard granularity {other:?} (expected cluster|fpga)"),
+    };
     cfg.fail = parse_fail(args)?;
     cfg.obs = parse_obs(args)?;
 

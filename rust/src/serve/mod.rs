@@ -64,6 +64,9 @@ pub struct ServeConfig {
     /// DES worker threads (None = process default, 1 = sequential);
     /// serving reports are bit-identical at every thread count.
     pub threads: Option<usize>,
+    /// shard cut for the parallel DES (None = simulator default,
+    /// per-cluster); reports are granularity-invariant by contract.
+    pub granularity: Option<crate::sim::ShardGranularity>,
     /// per-copy UDP loss probability on inter-FPGA hops (the drop
     /// pattern derives from `traffic.seed`, so lossy serving is
     /// seed-deterministic)
@@ -102,6 +105,7 @@ impl ServeConfig {
             fpgas_per_switch: 6,
             check_eq1: false,
             threads: None,
+            granularity: None,
             drop_probability: 0.0,
             reliable: false,
             fail: None,
@@ -130,6 +134,7 @@ impl ServeConfig {
             placement: self.placement.clone(),
             schedule: Some(schedule),
             threads: self.threads,
+            granularity: self.granularity,
             net: NetworkConfig {
                 drop_probability: self.drop_probability,
                 reliable: self.reliable,

@@ -24,7 +24,12 @@
 //!   inter-FPGA link boundaries when `threads != 1` (see shard.rs);
 //!   `threads = 1` is the exact sequential engine and `reference_mode`
 //!   the pre-optimization heap engine — all three are contractually
-//!   cycle- and trace-identical (rust/tests/proptests.rs).
+//!   cycle- and trace-identical (rust/tests/proptests.rs). Lossy drops,
+//!   reliable ack/retransmit transport, and §6 failure injection all run
+//!   on the sharded engine too: drop decisions come from per-link RNG
+//!   streams (fabric.rs) and failure runs execute in phases around the
+//!   outage window (`run_phased_failure`), so there is no sequential
+//!   fallback left beyond `threads = 1` itself.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -37,6 +42,7 @@ use anyhow::{bail, ensure, Result};
 use super::fabric::{Fabric, FpgaId};
 use super::fifo::Fifo;
 use super::packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload, DENSE_IDS};
+use super::params::RETX_TIMEOUT;
 use super::shard::{self, ShardGranularity, ShardPlan};
 use super::trace::Trace;
 
@@ -752,8 +758,9 @@ impl Sim {
     }
 
     /// Schedule a §6 FPGA failure (see [`FailurePlan`]). At most one per
-    /// run; forces the exact sequential engine like lossy mode does (the
-    /// outage window is a globally ordered resource).
+    /// run. Failure runs execute on the sharded parallel engine too (in
+    /// phases around the outage window — see `run_phased_failure`), with
+    /// results bit-identical at every thread count.
     pub fn schedule_failure(&mut self, plan: FailurePlan) -> Result<()> {
         ensure!(self.failure.is_none(), "only one failure can be scheduled per run");
         ensure!(plan.recovery_cycles >= 1, "recovery must take at least one cycle");
@@ -811,11 +818,13 @@ impl Sim {
     /// With `threads != 1` and a fleet that splits into 2+ FPGA-aligned
     /// shards, the run executes on the sharded conservative-window engine
     /// (shard.rs) — trace-identical to the sequential engine by contract.
-    /// Lossy-network mode (`drop_probability > 0`), failure injection,
-    /// and `reference_mode` force the sequential path (the drop RNG and
-    /// the outage window are global ordered resources; results stay
-    /// thread-count-invariant because every thread count takes the same
-    /// sequential engine — a documented fallback, covered by tests).
+    /// That contract covers lossy-network mode (per-link drop-RNG streams
+    /// make drop decisions shard-plan-invariant; the drop trace is
+    /// canonically ordered at the end of every run), reliable transport
+    /// (retries only add sender-side latency, and the window is clamped
+    /// to `RETX_TIMEOUT` belt-and-braces), and §6 failure injection
+    /// (executed in phases around the outage window). Only
+    /// `reference_mode` / `threads = 1` take the sequential path.
     ///
     /// Note on pausing with coalescing enabled: a burst event is
     /// delivered atomically at its FIRST row's arrival, so a pause may
@@ -825,36 +834,129 @@ impl Sim {
     /// `reference_mode` when inspecting mid-run state at a cycle
     /// boundary matters.
     pub fn run_until(&mut self, until: u64) -> Result<u64> {
-        if !self.profile {
-            return self.run_until_inner(until);
-        }
-        let (cyc0, ev0) = (self.time, self.trace.events_processed);
-        let t0 = std::time::Instant::now();
-        let r = self.run_until_inner(until);
-        let wall = t0.elapsed().as_nanos() as u64;
-        let p = self.last_profile.get_or_insert_with(Default::default);
-        p.wall_ns += wall;
-        p.sim_cycles += self.time.saturating_sub(cyc0);
-        p.events += self.trace.events_processed.saturating_sub(ev0);
+        let r = if !self.profile {
+            self.run_until_inner(until)
+        } else {
+            let (cyc0, ev0) = (self.time, self.trace.events_processed);
+            let t0 = std::time::Instant::now();
+            let r = self.run_until_inner(until);
+            let wall = t0.elapsed().as_nanos() as u64;
+            let p = self.last_profile.get_or_insert_with(Default::default);
+            p.wall_ns += wall;
+            p.sim_cycles += self.time.saturating_sub(cyc0);
+            p.events += self.trace.events_processed.saturating_sub(ev0);
+            r
+        };
+        // both engines leave the drop log in the same canonical total
+        // order (see DropRecord) — idempotent across pause/resume
+        self.fabric.canonicalize_drop_trace();
         r
     }
 
     fn run_until_inner(&mut self, until: u64) -> Result<u64> {
         let threads = self.effective_threads();
-        if threads != 1
-            && !self.queue.heap_only
-            && self.fabric.drop_probability == 0.0
-            && self.failure.is_none()
+        if threads == 1 || self.queue.heap_only {
+            return self.run_sequential(until);
+        }
+        if matches!(
+            self.failure.as_ref().map(|f| f.phase),
+            Some(FailPhase::Armed | FailPhase::Down)
+        ) {
+            return self.run_phased_failure(until, threads);
+        }
+        self.run_segment(until, threads)
+    }
+
+    /// One bounded segment on the best engine available: sharded when the
+    /// fleet splits into 2+ shards, sequential otherwise.
+    fn run_segment(&mut self, until: u64, threads: usize) -> Result<u64> {
+        if let Some(plan) =
+            ShardPlan::build(self.granularity, self.kernels.iter().map(|s| s.id), &self.fabric)
         {
-            if let Some(plan) = ShardPlan::build(
-                self.granularity,
-                self.kernels.iter().map(|s| s.id),
-                &self.fabric,
-            ) {
-                return self.run_parallel(until, &plan, threads);
+            self.run_parallel(until, &plan, threads)
+        } else {
+            self.run_sequential(until)
+        }
+    }
+
+    /// Failure injection on the parallel engine, executed in phases that
+    /// keep the §6 outage semantics exactly sequential-equivalent:
+    ///
+    /// * **Phase A** — run normally (sharded) up to the failure instant;
+    ///   afterwards every queued event's time is `>= at`.
+    /// * **Phase B** — the outage window `[at, recover_at)`: shards run
+    ///   with a per-shard outage filter replicating `filter_failed`'s
+    ///   Down branch (hold/lose/suspend decisions depend only on the
+    ///   event and the static failure plan, so they are shard-local);
+    ///   held events merge back into the global dispatch order at
+    ///   teardown (`absorb_outage`).
+    /// * **Recovery** — `perform_recovery` runs between segments on the
+    ///   master thread (a natural global barrier), so recovery-cycle
+    ///   backlog releases never cross a live window boundary and need no
+    ///   lookahead slack.
+    /// * **Phase C** — re-partition under the post-remap placement and
+    ///   continue normally: the shard plan and the conservative window
+    ///   are rebuilt from the recovered topology, so the remap can never
+    ///   invalidate the lookahead of a running round.
+    fn run_phased_failure(&mut self, until: u64, threads: usize) -> Result<u64> {
+        let mut processed = 0u64;
+        let (at, phase) = {
+            let fs = self.failure.as_ref().expect("caller checked a failure is pending");
+            (fs.plan.at, fs.phase)
+        };
+        if phase == FailPhase::Armed {
+            // ---- Phase A: everything strictly before the failure ----
+            if at > 0 {
+                processed += self.run_segment(until.min(at - 1), threads)?;
+            }
+            match self.queue.peek_time() {
+                // drained before the failure instant: the outage never
+                // happens (the sequential engine arms lazily at pop
+                // time and agrees)
+                None => return Ok(processed),
+                // paused before reaching any event at/after the instant
+                Some(t) if t > until => return Ok(processed),
+                Some(_) => {
+                    let fs = self.failure.as_mut().expect("armed above");
+                    fs.phase = FailPhase::Down;
+                    let (t, f) = (fs.plan.at, fs.plan.fpga.0 as u32);
+                    if let Some(o) = self.trace.obs.as_deref_mut() {
+                        o.on_instant(t, f, "fail");
+                    }
+                }
             }
         }
-        self.run_sequential(until)
+        // ---- Phase B: the outage window [at, recover_at) ----
+        let recover_at = self.failure.as_ref().expect("phase is Down").recover_at;
+        processed += self.run_segment(until.min(recover_at - 1), threads)?;
+        if recover_at > until {
+            // paused mid-outage — matches the sequential engine, whose
+            // recovery_due gate also refuses to recover past the horizon
+            return Ok(processed);
+        }
+        self.perform_recovery();
+        // ---- Phase C: post-recovery topology, fresh shard plan ----
+        processed += self.run_until_inner(until)?;
+        Ok(processed)
+    }
+
+    /// Fold shard-collected outage state back into the failure record
+    /// (Phase B teardown). Re-sorting the held backlog by event key
+    /// reproduces the sequential hold order exactly: sequential pops
+    /// (and therefore holds) arrive in strictly increasing key order,
+    /// and each shard's holds are a key-ordered subsequence of it.
+    pub(crate) fn absorb_outage(&mut self, held: Vec<QEv>, held_packets: u64, lost_events: u64) {
+        let Some(fs) = self.failure.as_mut() else {
+            debug_assert!(
+                held.is_empty() && held_packets == 0 && lost_events == 0,
+                "outage state collected without a scheduled failure"
+            );
+            return;
+        };
+        fs.held.extend(held);
+        fs.held.sort_unstable_by_key(|e| e.key());
+        fs.held_packets += held_packets;
+        fs.lost_events += lost_events;
     }
 
     fn run_sequential(&mut self, until: u64) -> Result<u64> {
@@ -1056,7 +1158,7 @@ impl Sim {
     /// on the worker pool, and merge everything back so the post-run
     /// `Sim` is indistinguishable from a sequential run.
     fn run_parallel(&mut self, until: u64, plan: &ShardPlan, threads: usize) -> Result<u64> {
-        let window = match super::window::conservative_window(
+        let mut window = match super::window::conservative_window(
             plan,
             &self.fabric,
             self.kernels.iter().map(|s| s.id),
@@ -1066,6 +1168,22 @@ impl Sim {
             Some(w) if w >= 1 => w,
             _ => return self.run_sequential(until),
         };
+        // Reliable lossy transport delays a boundary packet's wire copies
+        // by RETX_TIMEOUT per retry, but retries only ever ADD sender-side
+        // latency on top of the base path, so `arrival >= send + window`
+        // still holds. The clamp is belt-and-braces: it keeps the
+        // conservative claim checkable without that argument
+        // (placer::cost::retx_aware_lookahead_cycles mirrors it in `plan`
+        // output), and only binds on cuts wider than RETX_TIMEOUT.
+        if self.fabric.reliable && self.fabric.drop_probability > 0.0 {
+            window = window.min(RETX_TIMEOUT);
+        }
+        // §6 outage segment (Phase B of run_phased_failure): shards
+        // filter their own pops with a replica of filter_failed
+        let outage = match self.failure.as_ref() {
+            Some(fs) if fs.phase == FailPhase::Down => Some((fs.cluster, fs.recover_at)),
+            _ => None,
+        };
 
         // ---- partition ----
         let owner = plan.owner_of_slots(self.kernels.iter().map(|s| s.id), &self.fabric);
@@ -1073,6 +1191,11 @@ impl Sim {
         let owner = std::sync::Arc::new(owner);
         let (ctr0, coalescing) = (self.ctr, self.coalescing);
         let mut shards = shard::partition(self, plan, &owner, &slot16, ctr0, coalescing);
+        if let Some((cluster, recover_at)) = outage {
+            for sh in &mut shards {
+                sh.arm_outage(cluster, recover_at);
+            }
+        }
 
         // route queued events to their target's shard
         for e in self.queue.drain_ordered() {
@@ -1511,8 +1634,8 @@ mod tests {
     /// dies mid-stream and recovers onto a spare. Inbound rows buffer at
     /// the gateway and drain in order; rows in intra-cluster flight at
     /// the failure are lost; everything is deterministic and identical
-    /// at any thread count (the failure path forces the sequential
-    /// engine).
+    /// at any thread count (at `threads > 1` the run executes in phases
+    /// on the sharded engine — see `Sim::run_phased_failure`).
     fn run_failover(threads: usize) -> (Vec<(u32, u64)>, FailureReport, FpgaId, u64) {
         let mut sim = Sim::new();
         sim.set_threads(threads);
@@ -1577,8 +1700,53 @@ mod tests {
             assert_eq!(
                 run_failover(threads),
                 seq,
-                "failure injection must fall back to the sequential engine"
+                "the phased sharded failure run must match the sequential engine bit-for-bit"
             );
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_lossy_pingpong() {
+        // lossy (and lossy + reliable) traffic on the sharded engine:
+        // bit-identical to --threads 1, because drop decisions come from
+        // per-link RNG streams and the drop log is canonically ordered
+        let build = |threads: usize, reliable: bool| {
+            let mut sim = Sim::new();
+            sim.fabric.attach(FpgaId(0), SwitchId(0));
+            sim.fabric.attach(FpgaId(1), SwitchId(0));
+            sim.granularity = ShardGranularity::PerFpga;
+            sim.set_threads(threads);
+            sim.fabric.drop_probability = 0.15;
+            sim.fabric.reliable = reliable;
+            sim.fabric.seed_drop_rng(13);
+            sim.add_kernel(k(0, 1), FpgaId(0), Fifo::new(1 << 16), Box::new(Source {
+                dst: k(0, 2), n: 40, gap: 35, sent: 0,
+            })).unwrap();
+            sim.add_kernel(k(0, 2), FpgaId(1), Fifo::new(1 << 16), Box::new(Sink { got: 0 }))
+                .unwrap();
+            sim.trace.add_probe(k(0, 2));
+            sim.start();
+            sim.run().unwrap();
+            (
+                sim.trace.probe_times(k(0, 2)).unwrap().to_vec(),
+                sim.time,
+                sim.trace.events_processed,
+                sim.fabric.stats.packets,
+                (sim.fabric.stats.dropped, sim.fabric.stats.retransmits),
+                sim.fabric.drop_trace.clone(),
+                sim.fabric.link_audit(),
+            )
+        };
+        for reliable in [false, true] {
+            let seq = build(1, reliable);
+            assert!(seq.4 .0 > 0, "the 15% run must drop something (reliable={reliable})");
+            for threads in [2, 4, 8] {
+                assert_eq!(
+                    build(threads, reliable),
+                    seq,
+                    "lossy run diverged at threads={threads} (reliable={reliable})"
+                );
+            }
         }
     }
 

@@ -91,6 +91,43 @@ pub struct LinkSeq {
     pub dropped_copies: u64,
 }
 
+/// One wire copy the lossy network ate — the canonical record of a drop.
+///
+/// The derived `Ord` (send cycle, then source FPGA, destination FPGA,
+/// per-link copy number) is a *total* order: `seq` is the link's
+/// `dropped_copies` counter at the moment of the loss, so no two records
+/// compare equal. Both engines sort the trace by this key at the end of a
+/// run, which is what makes lossy traces byte-identical across thread
+/// counts and shard granularities — the per-link RNG streams guarantee the
+/// *multiset* of drops is plan-invariant, and the canonical sort removes
+/// the only remaining degree of freedom (the interleaving of pushes from
+/// different links within a cycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DropRecord {
+    /// send cycle of the lost wire copy.
+    pub t: u64,
+    /// source FPGA index.
+    pub src: u32,
+    /// destination FPGA index.
+    pub dst: u32,
+    /// per-link copy number (the link's `dropped_copies` after this loss).
+    pub seq: u64,
+}
+
+/// Derive the seed of one directed link's drop-RNG stream from the run
+/// seed: a splitmix64-style finalizer over (seed, link id), so streams are
+/// statistically independent per link yet fully determined by the run
+/// seed — no cross-link draw order exists to preserve, which is exactly
+/// what makes lossy outcomes shard-plan-invariant.
+#[inline]
+fn link_stream_seed(seed: u64, src_f: u32, dst_f: u32) -> u64 {
+    let id = ((src_f as u64) << 32) | dst_f as u64;
+    let mut z = seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Placement and topology of the platform.
 ///
 /// All per-link mutable state is *sender-side* (the sending kernel's
@@ -120,10 +157,18 @@ pub struct Fabric {
     /// logical packet is delivered exactly once, and every retry's
     /// serialization cost lands on the sender's link state.
     pub reliable: bool,
-    drop_rng: crate::util::rng::Rng,
-    /// send cycle of every wire copy the lossy network ate, in drop
-    /// order — the seed-determinism regression surface for lossy runs.
-    pub drop_trace: Vec<u64>,
+    /// base seed of the per-link drop-RNG streams (set by
+    /// [`Fabric::seed_drop_rng`]; streams derive lazily per directed link).
+    drop_seed: u64,
+    /// per-(src FPGA, dst FPGA) drop-RNG streams, created on first lossy
+    /// use of the link. Each stream's draw sequence depends only on the
+    /// link's own traffic, so drop decisions are identical under any shard
+    /// plan and thread count (every link is owned by its sender's shard).
+    drop_rngs: FxHashMap<(u32, u32), crate::util::rng::Rng>,
+    /// every wire copy the lossy network ate — the seed-determinism
+    /// regression surface for lossy runs. Engines canonicalize the order
+    /// ([`Fabric::canonicalize_drop_trace`]) at the end of a run.
+    pub drop_trace: Vec<DropRecord>,
     /// per-(src FPGA, dst FPGA) sequence accounting; only populated in
     /// lossy mode (`drop_probability > 0`) so the zero-loss hot path
     /// stays hash-free.
@@ -150,7 +195,8 @@ impl Fabric {
             nic_egress: Vec::new(),
             drop_probability: 0.0,
             reliable: false,
-            drop_rng: crate::util::rng::Rng::new(0xD1CE),
+            drop_seed: 0xD1CE,
+            drop_rngs: FxHashMap::default(),
             drop_trace: Vec::new(),
             link_seq: FxHashMap::default(),
             stats: FabricStats::default(),
@@ -163,13 +209,22 @@ impl Fabric {
         self.obs = Some(Box::new(crate::obs::FabricObs::new(interval)));
     }
 
-    /// Derive the lossy-network RNG from the run seed. Every harness that
-    /// seeds its traffic (testbed, serve) routes the same seed here, so
-    /// lossy runs are seed-deterministic AND different seeds produce
-    /// different drop patterns (the fixed 0xD1CE default is only the
-    /// fallback for harnesses with no seed of their own).
+    /// Derive the lossy-network RNG streams from the run seed. Every
+    /// harness that seeds its traffic (testbed, serve) routes the same
+    /// seed here, so lossy runs are seed-deterministic AND different seeds
+    /// produce different drop patterns (the fixed 0xD1CE default is only
+    /// the fallback for harnesses with no seed of their own). The actual
+    /// per-link streams derive lazily from this base seed ⊕ link id.
     pub fn seed_drop_rng(&mut self, seed: u64) {
-        self.drop_rng = crate::util::rng::Rng::new(seed ^ 0xD1CE);
+        self.drop_seed = seed ^ 0xD1CE;
+        self.drop_rngs.clear();
+    }
+
+    /// Sort the drop log into its canonical total order (see
+    /// [`DropRecord`]). Idempotent; safe across run segments because a
+    /// later segment's records all carry later send cycles.
+    pub(crate) fn canonicalize_drop_trace(&mut self) {
+        self.drop_trace.sort_unstable();
     }
 
     /// Per-link transport audit, ascending by (src FPGA, dst FPGA).
@@ -307,7 +362,13 @@ impl Fabric {
         }
 
         if self.drop_probability > 0.0 {
-            let seq = self.link_seq.entry((src_f as u32, dst_f as u32)).or_default();
+            let link = (src_f as u32, dst_f as u32);
+            let drop_seed = self.drop_seed;
+            let rng = self
+                .drop_rngs
+                .entry(link)
+                .or_insert_with(|| crate::util::rng::Rng::new(link_stream_seed(drop_seed, link.0, link.1)));
+            let seq = self.link_seq.entry(link).or_default();
             seq.sent += 1;
             if self.reliable {
                 if self.drop_probability >= 1.0 {
@@ -317,12 +378,17 @@ impl Fabric {
                 // retry re-serializes RETX_TIMEOUT after its last flit
                 let first_nic_done = nic_done;
                 let mut copies = 0u64;
-                while self.drop_rng.bool_with_p(self.drop_probability) {
+                while rng.bool_with_p(self.drop_probability) {
                     self.stats.dropped += 1;
                     self.stats.retransmits += 1;
                     self.stats.flits += flits;
                     seq.dropped_copies += 1;
-                    self.drop_trace.push(t);
+                    self.drop_trace.push(DropRecord {
+                        t,
+                        src: link.0,
+                        dst: link.1,
+                        seq: seq.dropped_copies,
+                    });
                     copies += 1;
                     if let Some(o) = &mut self.obs {
                         o.on_drop(t);
@@ -342,10 +408,15 @@ impl Fabric {
                         );
                     }
                 }
-            } else if self.drop_rng.bool_with_p(self.drop_probability) {
+            } else if rng.bool_with_p(self.drop_probability) {
                 self.stats.dropped += 1;
                 seq.dropped_copies += 1;
-                self.drop_trace.push(t);
+                self.drop_trace.push(DropRecord {
+                    t,
+                    src: link.0,
+                    dst: link.1,
+                    seq: seq.dropped_copies,
+                });
                 if let Some(o) = &mut self.obs {
                     o.on_drop(t);
                 }
@@ -384,11 +455,13 @@ impl Fabric {
     pub(crate) fn shard_clone(&self) -> Fabric {
         let mut f = self.clone();
         f.stats = FabricStats::default();
-        // lossy-transport state is a globally ordered resource, so lossy
-        // runs never take the sharded path — keep the copies empty so an
-        // absorb can never double-count it
+        // lossy-transport state (per-link RNG streams + sequence counters)
+        // is keyed by directed link, and every link belongs to its sender's
+        // shard — all mutable fabric state is sender-side — so the copies
+        // carry the current streams/counters (`self.clone()` above) and
+        // absorb_shard overwrites the owned entries back. The drop trace is
+        // an append-only log: shards start empty and absorb appends.
         f.drop_trace = Vec::new();
-        f.link_seq = FxHashMap::default();
         // each shard collects telemetry deltas into a fresh collector of
         // the same bucket width; absorb_shard folds them back
         f.obs = self.obs.as_ref().map(|o| Box::new(crate::obs::FabricObs::new(o.interval)));
@@ -406,6 +479,20 @@ impl Fabric {
         for &f in fpgas {
             self.nic_egress[f] = sh.nic_egress[f];
         }
+        // lossy-transport state: a directed link's stream/counter only
+        // advances on the shard that owns its source FPGA, so overwriting
+        // the owned entries is exact (and idempotent for untouched links)
+        for (&(s, d), seq) in sh.link_seq.iter() {
+            if fpgas.contains(&(s as usize)) {
+                self.link_seq.insert((s, d), *seq);
+            }
+        }
+        for (&(s, d), rng) in sh.drop_rngs.iter() {
+            if fpgas.contains(&(s as usize)) {
+                self.drop_rngs.insert((s, d), rng.clone());
+            }
+        }
+        self.drop_trace.extend_from_slice(&sh.drop_trace);
         self.stats.absorb(&sh.stats);
         if let (Some(mine), Some(theirs)) = (&mut self.obs, &sh.obs) {
             mine.merge(theirs);
@@ -658,6 +745,84 @@ mod tests {
         assert_eq!(run(7), run(7), "same seed, same drop trace");
         assert_ne!(run(7), run(8), "different seeds must produce different drop patterns");
         assert!(!run(7).is_empty());
+    }
+
+    #[test]
+    fn per_link_streams_are_interleaving_invariant() {
+        // the shard-plan-invariance argument in miniature: drop decisions
+        // on link 0->1 must not depend on traffic crossing any other link
+        let mk = || {
+            let mut f = Fabric::new();
+            f.place(k(0, 1), FpgaId(0));
+            f.place(k(0, 2), FpgaId(1));
+            f.place(k(1, 1), FpgaId(2));
+            f.place(k(1, 2), FpgaId(3));
+            for i in 0..4 {
+                f.attach(FpgaId(i), SwitchId(0));
+            }
+            f.seed_drop_rng(42);
+            f.drop_probability = 0.3;
+            f
+        };
+        let pa = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        let pb = Packet::new(k(1, 1), k(1, 2), MsgMeta::default(), Payload::Timing(64));
+        let mut both = mk();
+        for i in 0..100u64 {
+            let _ = both.deliver(i * 50, &pa).unwrap();
+            let _ = both.deliver(i * 50 + 25, &pb).unwrap();
+        }
+        let on_a: Vec<DropRecord> =
+            both.drop_trace.iter().filter(|r| r.src == 0).copied().collect();
+        let mut solo = mk();
+        for i in 0..100u64 {
+            let _ = solo.deliver(i * 50, &pa).unwrap();
+        }
+        assert_eq!(solo.drop_trace, on_a, "link 0->1 stream must ignore other links");
+        assert!(!on_a.is_empty(), "the 30% run must drop something");
+    }
+
+    #[test]
+    fn shard_clone_carries_lossy_streams_and_absorbs_drop_state() {
+        let run_ref = || {
+            let mut f = fabric_2fpga();
+            f.seed_drop_rng(9);
+            f.drop_probability = 0.4;
+            let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+            for i in 0..100u64 {
+                let _ = f.deliver(i * 50, &p).unwrap();
+            }
+            f
+        };
+        let reference = run_ref();
+        // same traffic, but the second half runs on a shard copy
+        let mut master = fabric_2fpga();
+        master.seed_drop_rng(9);
+        master.drop_probability = 0.4;
+        let p = Packet::new(k(0, 1), k(0, 2), MsgMeta::default(), Payload::Timing(64));
+        for i in 0..50u64 {
+            let _ = master.deliver(i * 50, &p).unwrap();
+        }
+        let trace_before = master.drop_trace.clone();
+        let mut sh = master.shard_clone();
+        assert!(sh.drop_trace.is_empty(), "drop log is append-only: shards start empty");
+        for i in 50..100u64 {
+            let _ = sh.deliver(i * 50, &p).unwrap();
+        }
+        master.absorb_shard(&sh, &[k(0, 1).dense()], &[0]);
+        let mut merged = trace_before;
+        merged.extend_from_slice(&sh.drop_trace);
+        assert_eq!(master.drop_trace, merged);
+        assert_eq!(
+            master.drop_trace, reference.drop_trace,
+            "shard must continue the per-link stream exactly where the master left off"
+        );
+        assert_eq!(master.link_audit(), reference.link_audit());
+        // and the next master delivery continues the stream seamlessly too
+        let mut m2 = master;
+        let mut r2 = reference;
+        for i in 100..150u64 {
+            assert_eq!(m2.deliver(i * 50, &p).unwrap(), r2.deliver(i * 50, &p).unwrap());
+        }
     }
 
     #[test]

@@ -23,6 +23,6 @@ pub mod trace;
 pub mod window;
 
 pub use engine::{FailurePlan, FailureReport, KernelBehavior, KernelIo, Sim};
-pub use fabric::{Fabric, FpgaId, LinkSeq, SwitchId};
+pub use fabric::{DropRecord, Fabric, FpgaId, LinkSeq, SwitchId};
 pub use packet::{Burst, GlobalKernelId, MsgMeta, Packet, Payload};
 pub use shard::ShardGranularity;

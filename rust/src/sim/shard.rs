@@ -20,6 +20,13 @@
 //! owned by the sender's shard, which is why shards must be FPGA-aligned
 //! (`ShardGranularity` groupings never split an FPGA).
 //!
+//! Lossy and failure runs shard too: drop decisions come from per-link
+//! RNG streams owned by the sender's shard (`Fabric::shard_clone`
+//! carries them; `absorb_shard` merges them back), and the §6 outage
+//! window executes with a per-shard [`OutageFilter`] replica of the
+//! sequential gate, armed by `Sim::run_phased_failure` for the segment
+//! that runs strictly inside the outage.
+//!
 //! The bit-identical contract covers runs that complete (or pause)
 //! without simulation errors. On a fatal error — unroutable send,
 //! event-budget blowout — both engines bail with an error, but the
@@ -208,6 +215,22 @@ impl Drop for Mailbox {
 // One shard: a slice of the fleet with its own wheel, link state, trace.
 // ---------------------------------------------------------------------------
 
+/// Shard-local replica of the sequential engine's §6 outage gate
+/// (`Sim::filter_failed`). During the Down phase of a phased failure
+/// run (`Sim::run_phased_failure`) every shard filters the events it
+/// pops exactly like the sequential engine would: cross-cluster packets
+/// buffer (FIFO bytes charged, hold attributed to the observer),
+/// intra-cluster packets are lost, wakes suspend. The held events are
+/// key-ordered subsequences of the sequential hold order, so the master
+/// can merge them back with one sort (`Sim::absorb_outage`).
+pub(crate) struct OutageFilter {
+    cluster: u8,
+    recover_at: u64,
+    held: Vec<QEv>,
+    held_packets: u64,
+    lost_events: u64,
+}
+
 pub(crate) struct Shard {
     idx: usize,
     pub(crate) queue: EventQueue,
@@ -235,9 +258,70 @@ pub(crate) struct Shard {
     fpgas: Vec<usize>,
     pending_buf: Vec<(u64, u32, Ev)>,
     wakes_buf: Vec<(u64, u64)>,
+    /// Some = this window runs inside a §6 outage (phase B of a phased
+    /// failure run); popped events targeting the failed cluster are
+    /// absorbed instead of dispatched.
+    outage: Option<OutageFilter>,
 }
 
 impl Shard {
+    /// Install the outage gate for a phase-B run. The master only calls
+    /// this when the failure is in the Down phase, so every event this
+    /// shard will pop satisfies `at <= t < recover_at` by construction.
+    pub(crate) fn arm_outage(&mut self, cluster: u8, recover_at: u64) {
+        self.outage = Some(OutageFilter {
+            cluster,
+            recover_at,
+            held: Vec::new(),
+            held_packets: 0,
+            lost_events: 0,
+        });
+    }
+
+    /// Shard-side mirror of `Sim::filter_failed`'s Down branch. Returns
+    /// the event back when it should dispatch normally; absorbs it
+    /// (hold or lose) when the target cluster is down. Filtered pops do
+    /// not advance shard time or count as processed events — exactly
+    /// like the sequential engine's `continue`.
+    fn filter_outage(&mut self, e: QEv) -> Option<QEv> {
+        let Some(fo) = self.outage.as_mut() else { return Some(e) };
+        debug_assert!(e.time < fo.recover_at, "phase B runs strictly inside the outage");
+        let local = self.local_of[e.target as usize];
+        debug_assert!(local != 0, "event routed to the wrong shard");
+        let slot = &mut self.kernels[local as usize - 1];
+        if slot.id.cluster != fo.cluster {
+            return Some(e);
+        }
+        enum Hold {
+            Buffer(usize),
+            Lose,
+            Suspend,
+        }
+        let action = match &e.ev {
+            // §6: traffic from outside the cluster buffers in the
+            // cluster input buffer; its bytes occupy the gateway FIFO
+            // until recovery
+            Ev::Packet(p) if p.src.cluster != fo.cluster => Hold::Buffer(p.wire_bytes()),
+            // intra-cluster rows lived on wires/FIFOs of the region
+            // being wiped: lost
+            Ev::Packet(_) => Hold::Lose,
+            // kernel-internal schedules pause and resume at recovery
+            Ev::Wake(_) => Hold::Suspend,
+        };
+        match action {
+            Hold::Buffer(bytes) => {
+                slot.fifo.push(bytes);
+                fo.held_packets += 1;
+                if let (Some(o), Ev::Packet(p)) = (self.trace.obs.as_deref_mut(), &e.ev) {
+                    o.on_outage_hold(p.meta.inference, fo.recover_at - e.time);
+                }
+                fo.held.push(e);
+            }
+            Hold::Suspend => fo.held.push(e),
+            Hold::Lose => fo.lost_events += 1,
+        }
+        None
+    }
     /// Process queued events with `time <= wlast`, at most `cap` of
     /// them; returns the event count. Cross-shard emissions go to
     /// `mailboxes[dst][src]`. The cap is the runaway-kernel guard: a
@@ -251,6 +335,10 @@ impl Shard {
                 break;
             }
             let e = self.queue.pop().unwrap();
+            // §6 outage gate (phase B only): absorbed events do not
+            // advance shard time or count as processed — exactly like
+            // the sequential engine's `continue` after `filter_failed`
+            let Some(e) = self.filter_outage(e) else { continue };
             self.dispatch(e, wlast, mailboxes);
             processed += 1;
         }
@@ -345,6 +433,7 @@ pub(crate) fn partition(
             fpgas: Vec::new(),
             pending_buf: Vec::new(),
             wakes_buf: Vec::new(),
+            outage: None,
         })
         .collect();
     // matching per-shard telemetry collectors — installed before kernel
@@ -630,6 +719,11 @@ pub(crate) fn absorb(sim: &mut Sim, shards: Vec<Shard>) {
         sim.fabric.absorb_shard(&sh.fabric, &sh.kernel_dense, &sh.fpgas);
         sim.merge_clock(sh.time, sh.ctr);
         sim.errors.append(&mut sh.errors);
+        // §6 outage gate: hand the absorbed backlog back to the master
+        // failure state (key-sorted there into sequential hold order)
+        if let Some(fo) = sh.outage.take() {
+            sim.absorb_outage(fo.held, fo.held_packets, fo.lost_events);
+        }
         for e in sh.queue.drain_ordered() {
             sim.push_event(e);
         }

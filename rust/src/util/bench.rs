@@ -180,11 +180,27 @@ pub fn check_headlines(current: &Json, baseline: &Json, tolerance: f64) -> Vec<S
     regressions
 }
 
+/// Headline keys present in the current run but absent from the
+/// baseline — newly added coverage a stale committed baseline does not
+/// know about yet. These must never fail `--check` (the baseline
+/// catches up when the fresh trajectory is committed); `load_check`
+/// surfaces them as warnings so the gap is visible, not silent.
+pub fn new_headline_keys(current: &Json, baseline: &Json) -> Vec<String> {
+    let base = baseline.get("headlines");
+    let Some(cur) = current.get("headlines") else { return Vec::new() };
+    cur.keys()
+        .into_iter()
+        .filter(|k| base.and_then(|b| b.get(k)).is_none())
+        .map(str::to_string)
+        .collect()
+}
+
 /// Shared `--check` front half for the bench CLIs: when `--check` is
 /// set, read the baseline (`--baseline`, defaulting to the out path
 /// itself — call this BEFORE overwriting the trajectory file) and
-/// compare `doc`'s headlines at `--tolerance` (default 0.35). `None`
-/// when `--check` is absent.
+/// compare `doc`'s headlines at `--tolerance` (default 0.35). Headlines
+/// the baseline does not carry yet are warned about, never failed.
+/// `None` when `--check` is absent.
 pub fn load_check(
     args: &crate::util::cli::Args,
     doc: &Json,
@@ -199,6 +215,12 @@ pub fn load_check(
     let baseline = Json::parse(&text)
         .map_err(|e| anyhow::anyhow!("--check: bad baseline JSON: {e:?}"))?;
     let tol = args.f64_or("tolerance", 0.35)?;
+    for key in new_headline_keys(doc, &baseline) {
+        println!(
+            "--check: headline {key:?} is new (absent from baseline {base_path}) — \
+             informational until the refreshed trajectory is committed"
+        );
+    }
     Ok(Some(check_headlines(doc, &baseline, tol)))
 }
 
@@ -273,5 +295,26 @@ mod tests {
         assert_eq!(regs.len(), 2, "{regs:?}");
         // no headlines in the baseline at all
         assert!(!check_headlines(&ok, &Json::obj(vec![]), 0.35).is_empty());
+    }
+
+    #[test]
+    fn new_headlines_warn_but_never_fail() {
+        let doc = |pairs: Vec<(&str, f64)>| {
+            Json::obj(vec![(
+                "headlines",
+                Json::obj(pairs.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+            )])
+        };
+        // A stale baseline that predates the fleetscale bench: the fresh
+        // run's extra headline is surfaced by name but is not a regression.
+        let base = doc(vec![("a_speedup", 3.0)]);
+        let cur = doc(vec![("a_speedup", 3.1), ("fleetscale_lossy_1000fpga_parallel_speedup", 2.4)]);
+        assert_eq!(
+            new_headline_keys(&cur, &base),
+            vec!["fleetscale_lossy_1000fpga_parallel_speedup".to_string()]
+        );
+        assert!(check_headlines(&cur, &base, 0.35).is_empty());
+        // identical key sets -> nothing to warn about
+        assert!(new_headline_keys(&base, &base).is_empty());
     }
 }

@@ -91,12 +91,13 @@ fn lossy_runs_are_seed_deterministic_and_seeds_differ() {
 
 #[test]
 fn lossy_runs_are_thread_count_invariant() {
-    // the threads != 1 && drop_probability == 0 guard: lossy runs take
-    // the sequential engine at every thread count (documented fallback),
-    // so results are bit-identical at --threads 1 vs --threads 8
+    // lossy runs execute on the sharded engine at --threads > 1: the
+    // per-link drop RNG streams make every link's drop sequence a
+    // function of its own traffic, so results are bit-identical at
+    // --threads 1 vs --threads 8
     let run = |threads: usize, reliable: bool| {
         let mut cfg = TestbedConfig::proof_of_concept(16, Mode::Timing);
-        cfg.encoders = 2; // multi-shard-shaped fleet: the guard must bite
+        cfg.encoders = 2; // multi-shard-shaped fleet: real cross-shard links
         cfg.inferences = 2;
         cfg.threads = Some(threads);
         cfg.net.drop_probability = 0.02;
@@ -216,7 +217,7 @@ fn failover_reports_are_deterministic_across_threads_and_runs() {
     assert_eq!(
         run_serving(&failover_cfg(8)).unwrap().to_json().pretty(),
         golden,
-        "failure injection must be thread-count-invariant (sequential fallback)"
+        "failure injection must be thread-count-invariant (phased sharded engine)"
     );
 }
 

@@ -2,8 +2,8 @@
 //!
 //! * Exact shard-merge: the Chrome trace, the metrics JSONL stream and
 //!   the `serving_report/v3` JSON are byte-identical at every
-//!   `--threads` count — including lossy and failure-injection runs
-//!   (which take the sequential-engine fallback).
+//!   `--threads` count — including lossy and failure-injection runs,
+//!   which now execute on the sharded engine like everything else.
 //! * Zero perturbation: enabling telemetry never changes what the
 //!   simulation computes, and a telemetry-off report serializes as the
 //!   pre-telemetry `serving_report/v2`, byte for byte.

@@ -679,28 +679,33 @@ fn prop_pipelined_inferences_complete_in_order() {
 // Lossy transport: thread-count invariance and exactly-once delivery
 // ---------------------------------------------------------------------------
 
-/// The `threads != 1 && drop_probability == 0.0` sequential-fallback
-/// guard in `Sim::run_until` is what keeps lossy runs deterministic: the
-/// drop RNG is a globally ordered resource, so every thread count must
-/// take the exact sequential engine. This property pins that contract —
-/// lossy runs (reliable or not) are bit-identical at 1 vs 8 threads on
-/// multi-shard fleets.
+/// Lossy runs are bit-identical at every thread count on multi-shard
+/// fleets *without* any sequential fallback: drop decisions come from
+/// per-link RNG streams (`link_stream_seed`, keyed by run seed and link
+/// endpoints), so the drop sequence each link sees is a function of its
+/// own traffic alone, not of the global event interleaving. The drop
+/// trace is canonicalized at quiescence, which makes it — and every
+/// derived statistic — comparable byte for byte across engines.
 #[test]
 fn prop_lossy_runs_are_bit_identical_across_thread_counts() {
     use galapagos_llm::eval::testbed::{build_testbed, TestbedConfig};
     use galapagos_llm::ibert::kernels::Mode;
+    use galapagos_llm::sim::ShardGranularity;
     check_with(&Config { cases: 6, ..Default::default() }, "lossy-thread-parity", |g| {
         let m = [4usize, 8, 16][g.usize_in(0, 2)];
         let seed = g.rng.next_u64();
         let drop_p = 0.005 + 0.04 * g.f64_unit();
         let reliable = g.bool();
         let encoders = g.usize_in(1, 2);
+        let gran =
+            if g.bool() { ShardGranularity::PerCluster } else { ShardGranularity::PerFpga };
         type Fingerprint = (u64, u64, u64, u64, u64, Vec<u64>, u32);
         let run = |threads: usize| -> Result<Fingerprint, String> {
             let mut cfg = TestbedConfig::proof_of_concept(m, Mode::Timing);
             cfg.encoders = encoders;
             cfg.inferences = 2;
             cfg.threads = Some(threads);
+            cfg.granularity = Some(gran);
             cfg.net.drop_probability = drop_p;
             cfg.net.reliable = reliable;
             cfg.net.seed = seed;
@@ -732,6 +737,134 @@ fn prop_lossy_runs_are_bit_identical_across_thread_counts() {
                 "reliable lossy run delivered {}/{} rows",
                 seq.6,
                 2 * m
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Parallel golden, lossy serving: random placements through the full
+/// serving stack with packet loss (and a coin-flip on reliable
+/// transport), byte-diffing the serving report, Chrome trace, and
+/// metrics stream against `--threads 1` at threads {2, 4, 8} across
+/// both cut granularities. This is the property that let the engine
+/// drop its lossy sequential fallback.
+#[test]
+fn prop_parallel_golden_lossy_serving_is_byte_identical() {
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::serve::{run_serving_with_obs, ServeConfig};
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 3, ..Default::default() }, "parallel-golden-lossy", |g| {
+        let encoders = g.usize_in(1, 3);
+        let requests = g.usize_in(3, 6);
+        let seqs_per_s = 1_000.0 + 4_000.0 * g.f64_unit();
+        let seed = g.rng.next_u64();
+        let reliable = g.bool();
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 4) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        let mk = |threads: usize, gran: ShardGranularity| {
+            let mut cfg = ServeConfig::glue(encoders, requests, seqs_per_s, seed);
+            cfg.placement = Some(slots.clone());
+            cfg.threads = Some(threads);
+            cfg.granularity = Some(gran);
+            cfg.drop_probability = 0.02;
+            cfg.reliable = reliable;
+            cfg.obs.enabled = true;
+            cfg
+        };
+        let (r1, o1) =
+            run_serving_with_obs(&mk(1, ShardGranularity::PerCluster)).map_err(|e| e.to_string())?;
+        let variants = [
+            (2usize, ShardGranularity::PerCluster),
+            (4, ShardGranularity::PerFpga),
+            (8, ShardGranularity::PerCluster),
+            (8, ShardGranularity::PerFpga),
+        ];
+        for &(threads, gran) in &variants {
+            let (rn, on) = run_serving_with_obs(&mk(threads, gran)).map_err(|e| e.to_string())?;
+            prop_assert!(
+                rn.to_json().pretty() == r1.to_json().pretty(),
+                "lossy serving report diverged at threads={threads} gran={gran:?} \
+                 (reliable={reliable})"
+            );
+            prop_assert!(
+                on.trace_json == o1.trace_json,
+                "lossy Chrome trace diverged at threads={threads} gran={gran:?}"
+            );
+            prop_assert!(
+                on.metrics_jsonl == o1.metrics_jsonl,
+                "lossy metrics stream diverged at threads={threads} gran={gran:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Parallel golden, failover serving: a §6 mid-serving FPGA outage with
+/// recovery re-placement, run through the phased sharded engine at
+/// threads {2, 4, 8} on random placements and both granularities, must
+/// reproduce the sequential report/trace/telemetry byte for byte —
+/// including the fault section (time-to-recover, buffered packets,
+/// re-placed kernels).
+#[test]
+fn prop_parallel_golden_failover_is_byte_identical() {
+    use galapagos_llm::eval::testbed::FailureSchedule;
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::serve::{run_serving_with_obs, ServeConfig};
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 3, ..Default::default() }, "parallel-golden-failover", |g| {
+        let encoders = g.usize_in(1, 3);
+        let requests = g.usize_in(3, 6);
+        let seqs_per_s = 1_000.0 + 4_000.0 * g.f64_unit();
+        let seed = g.rng.next_u64();
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 4) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        // kill a board that actually hosts kernels under this placement
+        let per = slots.iter().copied().max().unwrap() + 1;
+        let fail = FailureSchedule {
+            fpga: per * g.usize_in(0, encoders - 1) + *g.pick(&slots[1..]),
+            at_cycle: g.usize_in(50_000, 400_000) as u64,
+            recovery_cycles: Some(g.usize_in(50_000, 200_000) as u64),
+        };
+        let mk = |threads: usize, gran: ShardGranularity| {
+            let mut cfg = ServeConfig::glue(encoders, requests, seqs_per_s, seed);
+            cfg.placement = Some(slots.clone());
+            cfg.threads = Some(threads);
+            cfg.granularity = Some(gran);
+            cfg.fail = Some(fail.clone());
+            cfg.obs.enabled = true;
+            cfg
+        };
+        let (r1, o1) =
+            run_serving_with_obs(&mk(1, ShardGranularity::PerCluster)).map_err(|e| e.to_string())?;
+        let variants = [
+            (2usize, ShardGranularity::PerFpga),
+            (4, ShardGranularity::PerCluster),
+            (8, ShardGranularity::PerFpga),
+            (8, ShardGranularity::PerCluster),
+        ];
+        for &(threads, gran) in &variants {
+            let (rn, on) = run_serving_with_obs(&mk(threads, gran)).map_err(|e| e.to_string())?;
+            prop_assert!(
+                rn.to_json().pretty() == r1.to_json().pretty(),
+                "failover serving report diverged at threads={threads} gran={gran:?} \
+                 (fail at {}, recover {:?})",
+                fail.at_cycle,
+                fail.recovery_cycles
+            );
+            prop_assert!(
+                on.trace_json == o1.trace_json,
+                "failover Chrome trace diverged at threads={threads} gran={gran:?}"
+            );
+            prop_assert!(
+                on.metrics_jsonl == o1.metrics_jsonl,
+                "failover metrics stream diverged at threads={threads} gran={gran:?}"
             );
         }
         Ok(())
