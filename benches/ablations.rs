@@ -47,6 +47,7 @@ fn main() {
                 max_seq: 128,
                 hidden: 768,
                 ffn: 3072,
+                decode: None,
             })
             .cluster;
             let r = &fpga_reports(&cluster, &pe, Device::Xczu19eg, 128, 768, 3072)[0];

@@ -1,0 +1,160 @@
+//! Decode-serving bench: autoregressive (prefill + per-token feedback)
+//! traffic through multi-encoder chains, recording the generative-serving
+//! trajectory in BENCH_decode.json (the perf-smoke CI job uploads the
+//! quick run, like BENCH_serving.json tracks prefill-only serving).
+//!
+//!   cargo bench --bench decode            # full matrix
+//!   cargo bench --bench decode -- --quick # CI smoke
+//!   ... -- --check [--tolerance 0.35]     # regression gate
+//!
+//! Scenarios vary chain depth and tokens-per-request; every case records
+//! TTFT/ITL percentiles and the simulated decode throughput (generated
+//! tokens per simulated second — deterministic, so it doubles as a
+//! coarse cost-model trajectory). The 6-encoder scenario additionally
+//! runs at threads=1 vs threads=N with a report-equality assertion: the
+//! decode feedback edge lives entirely on the evaluation FPGA, so the
+//! sharded engine's bit-identity contract must survive generation.
+
+use galapagos_llm::serve::{
+    run_serving, ArrivalProcess, DecodeConfig, LengthDist, ServeConfig, ServingReport,
+};
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::json::Json;
+use galapagos_llm::{cycles_to_us, util::cli::Args, FABRIC_CLOCK_HZ};
+
+struct Scenario {
+    name: &'static str,
+    encoders: usize,
+    max_new_tokens: u32,
+    /// offered load as a fraction of the measured prefill capacity
+    /// (token passes add load on top, so these sit below the prefill
+    /// bench's operating points)
+    load: f64,
+    requests: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_decode.json");
+    let seed = args.u64_or("seed", 7)?;
+    let mut b = Bencher::quick();
+
+    let scenarios = [
+        Scenario {
+            name: "glue decode 2enc n4 60%",
+            encoders: 2,
+            max_new_tokens: 4,
+            load: 0.6,
+            requests: 64,
+        },
+        Scenario {
+            name: "glue decode 6enc n8 60%",
+            encoders: 6,
+            max_new_tokens: 8,
+            load: 0.6,
+            requests: 48,
+        },
+        Scenario {
+            name: "glue decode 6enc n0 (pure prefill) 60%",
+            encoders: 6,
+            max_new_tokens: 0,
+            load: 0.6,
+            requests: 48,
+        },
+    ];
+
+    let mut cases: Vec<Json> = Vec::new();
+    let mut headlines: Vec<(String, f64)> = Vec::new();
+    for s in &scenarios {
+        let requests = if quick { (s.requests / 8).max(8) } else { s.requests };
+        let mut cfg = ServeConfig::glue(s.encoders, requests, 1.0, seed);
+        cfg.traffic.lengths = LengthDist::Glue;
+        cfg.decode = Some(DecodeConfig { max_new_tokens: s.max_new_tokens });
+        let (_mean_m, capacity) = cfg.capacity_at_mean()?;
+        let rate = capacity * s.load;
+        cfg.traffic.process = ArrivalProcess::Poisson { seqs_per_s: rate };
+
+        let t0 = std::time::Instant::now();
+        let report = b.once(s.name, || run_serving(&cfg))?;
+        let wall = t0.elapsed();
+        let d = report.decode.as_ref().expect("decode runs report the v4 decode section");
+        // simulated decode throughput: generated tokens per simulated
+        // second (deterministic — a cost-model number, not wall clock)
+        let decode_tokens_per_s =
+            d.generated_tokens as f64 * FABRIC_CLOCK_HZ as f64 / report.makespan_cycles.max(1) as f64;
+        println!(
+            "    TTFT p50 {:>8.1} us  p99 {:>8.1} us   ITL p50 {:>7.1} us  p99 {:>7.1} us   \
+             {:>8.0} tokens/s generated",
+            cycles_to_us(d.ttft.p50),
+            cycles_to_us(d.ttft.p99),
+            cycles_to_us(d.itl.p50),
+            cycles_to_us(d.itl.p99),
+            decode_tokens_per_s,
+        );
+        let mut case = match report.to_json() {
+            Json::Obj(kv) => kv,
+            _ => unreachable!("report serializes to an object"),
+        };
+        case.insert(0, ("scenario".into(), Json::Str(s.name.into())));
+        case.push(("capacity_seqs_per_s".into(), Json::Num(capacity)));
+        case.push(("load".into(), Json::Num(s.load)));
+        case.push(("wall_ms".into(), Json::Num(wall.as_secs_f64() * 1e3)));
+        case.push(("decode_tokens_per_s".into(), Json::Num(decode_tokens_per_s)));
+        cases.push(Json::Obj(case));
+
+        // the deep scenario doubles as the thread-invariance headline:
+        // threads=1 vs threads=N on identical decode traffic, asserting
+        // byte-identical reports (the crown-jewel contract extends to
+        // the feedback loop), plus the simulated-throughput trajectory
+        if s.encoders == 6 && s.max_new_tokens > 0 {
+            headlines.push(("decode_tokens_per_s_6enc_n8".into(), decode_tokens_per_s));
+            let threads = galapagos_llm::util::pool::sim_threads().max(2);
+            let run_best = |n: usize| -> anyhow::Result<(f64, ServingReport)> {
+                let mut cfg = cfg.clone();
+                cfg.threads = Some(n);
+                let mut best = f64::INFINITY;
+                let mut last = None;
+                for _ in 0..3 {
+                    let t0 = std::time::Instant::now();
+                    last = Some(run_serving(&cfg)?);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                Ok((best, last.unwrap()))
+            };
+            let (seq_wall, seq) = run_best(1)?;
+            let (par_wall, par) = run_best(threads)?;
+            anyhow::ensure!(
+                seq.to_json().pretty() == par.to_json().pretty(),
+                "parallel decode report diverged from sequential at threads={threads}"
+            );
+            let speedup = seq_wall / par_wall.max(1e-9);
+            println!(
+                "    sharded engine: {:.0} -> {:.0} events/s at {threads} threads \
+                 ({speedup:.2}x best-of-3, reports identical)",
+                seq.events as f64 / seq_wall.max(1e-9),
+                par.events as f64 / par_wall.max(1e-9),
+            );
+            headlines.push(("parallel_decode_6enc_speedup".into(), speedup));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_decode/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("sim_threads", Json::Num(galapagos_llm::util::pool::sim_threads() as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::Obj(headlines.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ]);
+
+    // --check: read the committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}

@@ -224,6 +224,7 @@ impl BuildDescription {
             input: None,
             placement: None,
             schedule: None,
+            decode: None,
             threads: None,
             granularity: None,
             net: Default::default(),

@@ -78,6 +78,7 @@ mod tests {
             max_seq: 128,
             hidden: 768,
             ffn: 3072,
+            decode: None,
         };
         extract_cluster_info(&build_encoder(&gp).cluster)
     }

@@ -116,6 +116,7 @@ mod tests {
             max_seq: 128,
             hidden: 768,
             ffn: 3072,
+            decode: None,
         })
         .cluster
     }

@@ -189,6 +189,7 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
                 max_seq,
                 hidden,
                 ffn,
+                decode: None,
             };
             let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
             for (id, b) in built.behaviors {

@@ -174,6 +174,7 @@ pub fn fig15() -> Result<Table> {
         max_seq: 128,
         hidden: 768,
         ffn: 3072,
+        decode: None,
     })
     .cluster;
     let mut t = Table::new(

@@ -104,6 +104,13 @@ pub struct TestbedConfig {
     /// the inference id. Overrides `m`/`inferences` pacing; `interval`
     /// still paces rows on the source link.
     pub schedule: Option<Arc<Vec<crate::serve::traffic::Request>>>,
+    /// autoregressive decoding (requires `schedule`): each request is a
+    /// prefill pass plus `max_new_tokens` single-row decode passes. The
+    /// attention/SMM heads switch to per-request KV caching, the last
+    /// encoder's output is broadcast back to the source through the eval
+    /// gateway, and inference ids advance in blocks of
+    /// `1 + max_new_tokens` per request.
+    pub decode: Option<crate::serve::traffic::DecodeConfig>,
     /// worker threads for the sharded parallel DES (None = the process
     /// default: `--threads` / `PALLAS_SIM_THREADS` / auto; 1 = exact
     /// sequential engine). Results are thread-count-invariant by
@@ -137,6 +144,7 @@ impl TestbedConfig {
             input: None,
             placement: None,
             schedule: None,
+            decode: None,
             threads: None,
             granularity: None,
             net: NetworkConfig::default(),
@@ -194,9 +202,25 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         Mode::Functional(p) => (p.cfg.hidden, p.cfg.ffn, p.cfg.max_seq),
         Mode::Timing => (768, 3072, 128),
     };
+    anyhow::ensure!(
+        cfg.decode.is_none() || cfg.schedule.is_some(),
+        "decode mode needs a request schedule (each request is one prefill + N token passes)"
+    );
     if let Some(sched) = &cfg.schedule {
         let longest = sched.iter().map(|r| r.m as usize).max().unwrap_or(0);
         anyhow::ensure!(longest <= max_seq, "scheduled request exceeds max_seq {max_seq}");
+        if let Some(dec) = cfg.decode {
+            // the KV caches are sized for max_seq positions at the build
+            // point; a prompt that decodes past that would overflow them
+            let need = longest + dec.max_new_tokens as usize;
+            anyhow::ensure!(
+                need <= max_seq,
+                "KV-cache overflow: longest prompt ({longest}) + max_new_tokens ({}) = {need} \
+                 exceeds the build point's max_seq ({max_seq}); shorten prompts or rebuild \
+                 with a larger sequence capacity",
+                dec.max_new_tokens
+            );
+        }
         // a zero-length request would pump the source forever (its
         // row counter can never reach m)
         anyhow::ensure!(
@@ -235,6 +259,11 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         let out_dst = if e + 1 < cfg.encoders {
             // next encoder's gateway (its input-broadcast virtual kernel)
             Out::tagged(GlobalKernelId::new(e as u8 + 1, 0), 0)
+        } else if cfg.decode.is_some() {
+            // decode: route through the eval gateway's virtual module 0,
+            // which fans the output back out to the sink AND the source
+            // (the feedback edge that triggers the next token pass)
+            Out::tagged(GlobalKernelId::new(EVAL_CLUSTER, 0), 0)
         } else {
             Out::tagged(sink_global, 0)
         };
@@ -247,6 +276,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             max_seq,
             hidden,
             ffn,
+            decode: cfg.decode.map(|d| d.block()),
         };
         let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
         for (id, b) in built.behaviors {
@@ -257,6 +287,11 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
 
     // evaluation cluster: gateway (forwarding) + source + sink on one FPGA
     let eval_fpga = FpgaId(slots_per_encoder * cfg.encoders);
+    let source_global = GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE);
+    let mut gateway_dests = vec![sink_global];
+    if cfg.decode.is_some() {
+        gateway_dests.push(source_global);
+    }
     let eval_cluster = ClusterSpec {
         id: EVAL_CLUSTER,
         kernels: vec![
@@ -265,7 +300,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
                 name: "eval-gateway".into(),
                 ktype: KernelType::Gateway,
                 fpga: eval_fpga,
-                dests: vec![GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK)],
+                dests: gateway_dests,
                 fifo_bytes: max_seq * hidden,
             },
             KernelDecl {
@@ -274,7 +309,8 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
                 ktype: KernelType::Compute,
                 fpga: eval_fpga,
                 dests: vec![GlobalKernelId::new(0, 0)],
-                fifo_bytes: 4096,
+                // decode feeds whole output passes back to the source
+                fifo_bytes: if cfg.decode.is_some() { max_seq * hidden } else { 4096 },
             },
             KernelDecl {
                 id: EVAL_SINK,
@@ -286,19 +322,41 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             },
         ],
     };
+    let mut virtuals = HashMap::new();
+    if cfg.decode.is_some() {
+        // virtual module 0: the last encoder's output fans out to the
+        // sink (measurement) and back to the source (the feedback edge)
+        virtuals.insert(
+            0u8,
+            crate::gmi::GmiOp::Broadcast {
+                dsts: vec![
+                    Out::tagged(sink_global, 0),
+                    Out::tagged(source_global, crate::serve::source::FEEDBACK_STREAM),
+                ],
+            },
+        );
+    }
     behaviors.insert(
         GlobalKernelId::new(EVAL_CLUSTER, 0),
-        Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
+        Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals })),
     );
-    let source: Box<dyn KernelBehavior> = match &cfg.schedule {
-        Some(sched) => Box::new(crate::serve::source::RequestSourceKernel::new(
+    let source: Box<dyn KernelBehavior> = match (&cfg.schedule, cfg.decode) {
+        (Some(sched), Some(dec)) => Box::new(crate::serve::source::DecodeSourceKernel::new(
+            Out::to(GlobalKernelId::new(0, 0)),
+            sched.clone(),
+            cfg.interval,
+            cfg.input.clone(),
+            hidden,
+            dec.block(),
+        )),
+        (Some(sched), None) => Box::new(crate::serve::source::RequestSourceKernel::new(
             Out::to(GlobalKernelId::new(0, 0)),
             sched.clone(),
             cfg.interval,
             cfg.input.clone(),
             hidden,
         )),
-        None => Box::new(SourceKernel::new(
+        (None, _) => Box::new(SourceKernel::new(
             Out::to(GlobalKernelId::new(0, 0)),
             cfg.m as u32,
             cfg.inferences,
@@ -306,7 +364,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             cfg.input.clone(),
         )),
     };
-    behaviors.insert(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE), source);
+    behaviors.insert(source_global, source);
     let (sink, sink_data) = SinkKernel::new();
     behaviors.insert(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SINK), Box::new(sink));
     clusters.push(eval_cluster);

@@ -136,9 +136,31 @@ impl Device {
     }
 }
 
+/// BRAM18 blocks needed to hold a KV-cache of `bytes` on-chip. A decode
+/// kernel's cache is persistent state (unlike a FIFO it is never
+/// drained), so it is charged block-granular against the device budget:
+/// a BRAM18 holds 2304 bytes of int8 (the same geometry as
+/// `sim::fifo::BRAM18_BYTES` — kept as a local constant because `fpga`
+/// sits below `sim` in the module DAG; a placer test cross-checks the
+/// two never drift). Any non-empty cache costs at least one block.
+pub fn kv_cache_bram18(bytes: u64) -> u64 {
+    const BRAM18_BYTES: u64 = 2304;
+    bytes.div_ceil(BRAM18_BYTES).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_cache_is_block_granular() {
+        assert_eq!(kv_cache_bram18(0), 1); // allocated, even if tiny
+        assert_eq!(kv_cache_bram18(1), 1);
+        assert_eq!(kv_cache_bram18(2304), 1);
+        assert_eq!(kv_cache_bram18(2305), 2);
+        // the paper build point: one head's K cache, 128 x 64 bytes
+        assert_eq!(kv_cache_bram18(128 * 64), 4);
+    }
 
     #[test]
     fn utilisation_math() {

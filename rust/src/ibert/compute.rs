@@ -182,6 +182,64 @@ pub fn linear_rows(xs: &[Vec<i8>], w: &[i8], k: usize, n: usize, bias: &[i32]) -
     linear_rows_packed(xs, &PackedWeights::pack(w, k, n), bias)
 }
 
+/// Per-layer KV cache of an autoregressive decoder: the K and V
+/// projections of every position processed so far, as full hidden rows
+/// (heads slice at use, exactly like the scatter kernels do on the
+/// fabric). Prefill appends `m` rows at once; each decode step appends
+/// one. Plain storage — all arithmetic lives in the row helpers below so
+/// the simulated kernels and the native reference share one code path.
+#[derive(Debug, Clone, Default)]
+pub struct KvCache {
+    pub k: Vec<Vec<i8>>,
+    pub v: Vec<Vec<i8>>,
+}
+
+impl KvCache {
+    /// Cached positions (rows) so far.
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.k.len(), self.v.len());
+        self.k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Masked-attention scores of one query row over one head's cached K
+/// rows: `scores[c] = dot(q[lo..lo+d], ks[c][lo..lo+d])`. The caller
+/// passes exactly the rows the causal mask admits (positions `0..=p` for
+/// a query at position `p`) — masking is row selection, not a -inf add,
+/// matching the hardware's no-padding dataflow.
+pub fn causal_head_scores(q: &[i8], ks: &[&[i8]], lo: usize, d: usize) -> Vec<i32> {
+    ks.iter()
+        .map(|k| {
+            let mut acc = 0i32;
+            for j in 0..d {
+                acc += q[lo + j] as i32 * k[lo + j] as i32;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Context row of one head: probability-weighted sum of the cached V
+/// rows' head slice, requantized to int8. `probs.len() == vs.len()` is
+/// the attended length (variable under the causal mask).
+pub fn head_context_row(probs: &[i8], vs: &[&[i8]], lo: usize, d: usize, rq: RequantSite) -> Vec<i8> {
+    debug_assert_eq!(probs.len(), vs.len());
+    (0..d)
+        .map(|j| {
+            let acc: i64 = probs
+                .iter()
+                .zip(vs)
+                .map(|(&p, v)| p as i64 * v[lo + j] as i64)
+                .sum();
+            requant8(acc, rq)
+        })
+        .collect()
+}
+
 /// i-Softmax over one score row (actual sequence length only — the
 /// hardware no-padding path). Mirrors iops.i_softmax with all-valid mask.
 pub fn softmax_row(scores: &[i32], sm: SoftmaxParams) -> Vec<i8> {
@@ -382,6 +440,45 @@ mod tests {
         assert_eq!(gelu_i8(0, gp), 0);
         // large negative inputs approach 0 from below
         assert!(gelu_i8(-127, gp) >= -15);
+    }
+
+    #[test]
+    fn causal_head_helpers_match_manual_dots() {
+        let d = 4;
+        let lo = d; // head 1 of a 2-head toy row
+        let q: Vec<i8> = (0..8).map(|i| i as i8 - 3).collect();
+        let rows: Vec<Vec<i8>> = (0..3)
+            .map(|r| (0..8).map(|i| ((r * 5 + i * 3) % 17) as i8 - 8).collect())
+            .collect();
+        let refs: Vec<&[i8]> = rows.iter().map(|r| r.as_slice()).collect();
+        let scores = causal_head_scores(&q, &refs, lo, d);
+        for (c, row) in rows.iter().enumerate() {
+            let want: i32 = (0..d).map(|j| q[lo + j] as i32 * row[lo + j] as i32).sum();
+            assert_eq!(scores[c], want, "score col {c}");
+        }
+        // shorter prefix = causal mask at an earlier position
+        assert_eq!(causal_head_scores(&q, &refs[..2], lo, d), scores[..2]);
+
+        let rq = RequantSite { m: 1 << 14, n: 14 }; // identity
+        let probs: Vec<i8> = vec![10, 20, 97];
+        let ctx = head_context_row(&probs, &refs, lo, d, rq);
+        for j in 0..d {
+            let acc: i64 = probs
+                .iter()
+                .zip(&rows)
+                .map(|(&p, v)| p as i64 * v[lo + j] as i64)
+                .sum();
+            assert_eq!(ctx[j], requant8(acc, rq), "ctx col {j}");
+        }
+    }
+
+    #[test]
+    fn kv_cache_grows_by_appended_rows() {
+        let mut c = KvCache::default();
+        assert!(c.is_empty());
+        c.k.push(vec![1i8; 8]);
+        c.v.push(vec![2i8; 8]);
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -280,6 +280,230 @@ pub fn model_forward(p: &ModelParams, x: &[Vec<i8>], n: usize) -> Vec<Vec<i8>> {
     cur
 }
 
+/// One decoder layer, *incremental*: `x_new` extends the sequence at
+/// positions `cache.len()..`, the new rows' K/V projections are appended
+/// to the cache, and each new row attends causally over everything
+/// cached so far. Old positions need no recompute — every non-attention
+/// op is row-local — so a single-token decode step does O(1) rows of
+/// work against O(len) cache reads, exactly the dataflow the simulated
+/// attention/SMM kernels execute. Returns output rows for the new
+/// positions only.
+pub fn decoder_layer_incremental(
+    p: &ModelParams,
+    cache: &mut KvCache,
+    x_new: &[Vec<i8>],
+) -> Vec<Vec<i8>> {
+    let h = p.cfg.hidden;
+    let heads = p.cfg.heads;
+    let d = p.cfg.head_dim();
+    let f = p.cfg.ffn;
+    let eq = &p.eq;
+    let base = cache.len();
+
+    let lin8 = |row: &[i8], w: &[i8], b: &[i32], site| -> Vec<i8> {
+        linear_row(row, w, h, h, b).into_iter().map(|a| requant8(a as i64, site)).collect()
+    };
+    let q8: Vec<Vec<i8>> = x_new.iter().map(|r| lin8(r, &p.wq.data, &p.bq, eq.rq_q)).collect();
+    for r in x_new {
+        cache.k.push(lin8(r, &p.wk.data, &p.bk, eq.rq_k));
+        cache.v.push(lin8(r, &p.wv.data, &p.bv, eq.rq_v));
+    }
+
+    let mut out = Vec::with_capacity(x_new.len());
+    for (i, xr) in x_new.iter().enumerate() {
+        let pos = base + i; // causal mask admits cached positions 0..=pos
+        let ks: Vec<&[i8]> = cache.k[..=pos].iter().map(|r| r.as_slice()).collect();
+        let vs: Vec<&[i8]> = cache.v[..=pos].iter().map(|r| r.as_slice()).collect();
+        let mut att = vec![0i8; h];
+        for hd in 0..heads {
+            let lo = hd * d;
+            let scores = causal_head_scores(&q8[i], &ks, lo, d);
+            let probs = softmax_row(&scores, eq.softmax);
+            let ctx = head_context_row(&probs, &vs, lo, d, eq.rq_att);
+            att[lo..lo + d].copy_from_slice(&ctx);
+        }
+        let proj = linear_row(&att, &p.wo.data, h, h, &p.bo);
+        let res: Vec<i64> = proj
+            .iter()
+            .zip(xr)
+            .map(|(&pa, &xi)| requant32(pa as i64, eq.rq_proj) + requant32(xi as i64, eq.rq_resin))
+            .collect();
+        let ln1 = layernorm_row(&res, &p.ln1_gamma, &p.ln1_beta, eq.ln1);
+        let gelu_in: Vec<i8> = linear_row(&ln1, &p.w1.data, h, f, &p.b1)
+            .into_iter()
+            .map(|a| requant8(a as i64, eq.rq_gelu_in))
+            .collect();
+        let mid = gelu_row(&gelu_in, eq.gelu);
+        let ffn2 = linear_row(&mid, &p.w2.data, f, h, &p.b2);
+        let res2: Vec<i64> = ffn2
+            .iter()
+            .zip(&ln1)
+            .map(|(&fa, &li)| requant32(fa as i64, eq.rq_ffn2) + requant32(li as i64, eq.rq_res2in))
+            .collect();
+        out.push(layernorm_row(&res2, &p.ln2_gamma, &p.ln2_beta, eq.ln2));
+    }
+    out
+}
+
+/// Naive full-recompute decoder layer: the whole sequence from scratch,
+/// causal masking by loop bound (position `r` attends `0..=r`), no
+/// cache. Deliberately written against [`encoder_forward_reference`]'s
+/// structure rather than the incremental path so the bit-exactness test
+/// between the two actually exercises the cache bookkeeping.
+pub fn decoder_layer_recompute(p: &ModelParams, x: &[Vec<i8>]) -> Vec<Vec<i8>> {
+    let h = p.cfg.hidden;
+    let heads = p.cfg.heads;
+    let d = p.cfg.head_dim();
+    let f = p.cfg.ffn;
+    let m = x.len();
+    let eq = &p.eq;
+
+    let lin8 = |w: &[i8], b: &[i32], site| -> Vec<Vec<i8>> {
+        x.iter()
+            .map(|row| {
+                linear_row(row, w, h, h, b)
+                    .into_iter()
+                    .map(|a| requant8(a as i64, site))
+                    .collect()
+            })
+            .collect()
+    };
+    let q8 = lin8(&p.wq.data, &p.bq, eq.rq_q);
+    let k8 = lin8(&p.wk.data, &p.bk, eq.rq_k);
+    let v8 = lin8(&p.wv.data, &p.bv, eq.rq_v);
+
+    let mut att = vec![vec![0i8; h]; m];
+    for hd in 0..heads {
+        let lo = hd * d;
+        for r in 0..m {
+            let scores: Vec<i32> = (0..=r)
+                .map(|c| {
+                    let mut acc = 0i32;
+                    for j in 0..d {
+                        acc += q8[r][lo + j] as i32 * k8[c][lo + j] as i32;
+                    }
+                    acc
+                })
+                .collect();
+            let probs = softmax_row(&scores, eq.softmax);
+            for j in 0..d {
+                let mut acc = 0i32;
+                for c in 0..=r {
+                    acc += probs[c] as i32 * v8[c][lo + j] as i32;
+                }
+                att[r][lo + j] = requant8(acc as i64, eq.rq_att);
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(m);
+    for (xr, ar) in x.iter().zip(&att) {
+        let proj = linear_row(ar, &p.wo.data, h, h, &p.bo);
+        let res: Vec<i64> = proj
+            .iter()
+            .zip(xr)
+            .map(|(&pa, &xi)| requant32(pa as i64, eq.rq_proj) + requant32(xi as i64, eq.rq_resin))
+            .collect();
+        let ln1 = layernorm_row(&res, &p.ln1_gamma, &p.ln1_beta, eq.ln1);
+        let gelu_in: Vec<i8> = linear_row(&ln1, &p.w1.data, h, f, &p.b1)
+            .into_iter()
+            .map(|a| requant8(a as i64, eq.rq_gelu_in))
+            .collect();
+        let mid = gelu_row(&gelu_in, eq.gelu);
+        let ffn2 = linear_row(&mid, &p.w2.data, f, h, &p.b2);
+        let res2: Vec<i64> = ffn2
+            .iter()
+            .zip(&ln1)
+            .map(|(&fa, &li)| requant32(fa as i64, eq.rq_ffn2) + requant32(li as i64, eq.rq_res2in))
+            .collect();
+        out.push(layernorm_row(&res2, &p.ln2_gamma, &p.ln2_beta, eq.ln2));
+    }
+    out
+}
+
+/// Multi-layer decoder state: one KV cache per layer (caches never mix
+/// across layers — each layer caches its *own* K/V projections of its
+/// own input stream).
+#[derive(Debug, Clone, Default)]
+pub struct DecoderState {
+    pub caches: Vec<KvCache>,
+}
+
+impl DecoderState {
+    pub fn new(layers: usize) -> DecoderState {
+        DecoderState { caches: vec![KvCache::default(); layers] }
+    }
+}
+
+/// Incremental decoder stack: run the new rows through every layer, each
+/// against its own cache. Returns the last layer's output rows.
+pub fn decoder_stack_incremental(
+    p: &ModelParams,
+    st: &mut DecoderState,
+    x_new: &[Vec<i8>],
+) -> Vec<Vec<i8>> {
+    let mut cur = x_new.to_vec();
+    for cache in &mut st.caches {
+        cur = decoder_layer_incremental(p, cache, &cur);
+    }
+    cur
+}
+
+/// Full-recompute decoder stack over the whole sequence (no state).
+pub fn decoder_stack_recompute(p: &ModelParams, x: &[Vec<i8>], layers: usize) -> Vec<Vec<i8>> {
+    let mut cur = x.to_vec();
+    for _ in 0..layers {
+        cur = decoder_layer_recompute(p, &cur);
+    }
+    cur
+}
+
+/// The platform's generation loop, incrementally: prefill the prompt,
+/// then feed the stack's last output row back as the next input row
+/// `max_new` times (the feedback row stands in for token sampling —
+/// deterministic and bit-exactness-testable; see DESIGN.md). Returns
+/// `(prefill output rows, one row per generated token)`.
+pub fn decode_generate(
+    p: &ModelParams,
+    prompt: &[Vec<i8>],
+    layers: usize,
+    max_new: usize,
+) -> (Vec<Vec<i8>>, Vec<Vec<i8>>) {
+    assert!(!prompt.is_empty(), "decode needs a non-empty prompt");
+    let mut st = DecoderState::new(layers);
+    let prefill = decoder_stack_incremental(p, &mut st, prompt);
+    let mut toks: Vec<Vec<i8>> = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let fed = toks.last().unwrap_or_else(|| prefill.last().unwrap()).clone();
+        let out = decoder_stack_incremental(p, &mut st, &[fed]);
+        toks.push(out.into_iter().next().unwrap());
+    }
+    (prefill, toks)
+}
+
+/// The same generation loop via full recompute: step `k` re-runs the
+/// whole causal stack over `prompt ++ fed-back rows` and takes the last
+/// output row. Quadratically wasteful by design — it is the equivalence
+/// oracle for [`decode_generate`] and for the simulated pipeline.
+pub fn decode_generate_recompute(
+    p: &ModelParams,
+    prompt: &[Vec<i8>],
+    layers: usize,
+    max_new: usize,
+) -> (Vec<Vec<i8>>, Vec<Vec<i8>>) {
+    assert!(!prompt.is_empty(), "decode needs a non-empty prompt");
+    let mut seq = prompt.to_vec();
+    let prefill = decoder_stack_recompute(p, &seq, layers);
+    let mut toks: Vec<Vec<i8>> = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let fed = toks.last().unwrap_or_else(|| prefill.last().unwrap()).clone();
+        seq.push(fed);
+        let outs = decoder_stack_recompute(p, &seq, layers);
+        toks.push(outs.last().unwrap().clone());
+    }
+    (prefill, toks)
+}
+
 /// Convert a 2-D golden tensor into row vectors.
 pub fn rows_i8(t: &crate::util::tensorfile::TensorData<i8>) -> Vec<Vec<i8>> {
     let (m, n) = (t.dims[0], t.dims[1]);
@@ -315,6 +539,42 @@ mod tests {
             assert_eq!(fast.mid, slow.mid, "mid mismatch at m={m}");
             assert_eq!(fast.out, slow.out, "out mismatch at m={m}");
         }
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_recompute() {
+        let cfg = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 2 };
+        let p = ModelParams::synthetic(cfg, 0xDEC0DE);
+        let prompt = synthetic_input(cfg.hidden, 5, 17);
+        let (pre_i, toks_i) = decode_generate(&p, &prompt, 2, 4);
+        let (pre_r, toks_r) = decode_generate_recompute(&p, &prompt, 2, 4);
+        assert_eq!(pre_i, pre_r, "prefill rows diverge");
+        assert_eq!(toks_i, toks_r, "token rows diverge");
+        assert_eq!(toks_i.len(), 4);
+    }
+
+    #[test]
+    fn causal_outputs_are_prefix_invariant() {
+        // position i of the recompute layer must not change when later
+        // rows are appended — the property that makes a KV cache sound
+        let cfg = ModelConfig { hidden: 48, heads: 12, ffn: 96, max_seq: 16, num_encoders: 1 };
+        let p = ModelParams::synthetic(cfg, 99);
+        let x = synthetic_input(cfg.hidden, 9, 3);
+        let full = decoder_layer_recompute(&p, &x);
+        for cut in [1usize, 4, 8] {
+            let part = decoder_layer_recompute(&p, &x[..cut]);
+            assert_eq!(part[..], full[..cut], "prefix {cut} diverges");
+        }
+    }
+
+    #[test]
+    fn pure_prefill_decode_is_a_causal_forward() {
+        let cfg = ModelConfig { hidden: 48, heads: 12, ffn: 96, max_seq: 16, num_encoders: 1 };
+        let p = ModelParams::synthetic(cfg, 5);
+        let x = synthetic_input(cfg.hidden, 6, 8);
+        let (pre, toks) = decode_generate(&p, &x, 1, 0);
+        assert!(toks.is_empty());
+        assert_eq!(pre, decoder_layer_recompute(&p, &x));
     }
 
     #[test]

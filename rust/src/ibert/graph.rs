@@ -71,6 +71,10 @@ pub struct EncoderGraphParams {
     pub max_seq: usize,
     pub hidden: usize,
     pub ffn: usize,
+    /// `Some(block)` switches the attention/SMM heads into decode mode
+    /// (per-request KV caches, causal masking, variable trip counts);
+    /// `block` = inference ids per request (`DecodeConfig::block`).
+    pub decode: Option<u32>,
 }
 
 /// A built encoder: the validated cluster spec plus kernel behaviors.
@@ -227,26 +231,27 @@ pub fn build_encoder_placed(gp: &EncoderGraphParams, slots: &[usize]) -> Encoder
         })),
     );
 
-    // layers 1-3: attention heads
+    // layers 1-3: attention heads (KV-caching causal variants in decode
+    // mode — same graph, same edges, stateful behaviors)
     for h in 0..HEADS {
-        behaviors.insert(
-            ATTN_BASE + h,
-            Box::new(AttentionHeadKernel::new(
-                h as usize,
-                Out::tagged(k(SMM_BASE + h), 0),
-                gp.mode.clone(),
-                gp.pe,
-            )),
+        let mut attn = AttentionHeadKernel::new(
+            h as usize,
+            Out::tagged(k(SMM_BASE + h), 0),
+            gp.mode.clone(),
+            gp.pe,
         );
-        behaviors.insert(
-            SMM_BASE + h,
-            Box::new(SoftmaxMMKernel::new(
-                h as usize,
-                Out::tagged(k(GATHER), h), // stream tag = gather rank
-                gp.mode.clone(),
-                gp.pe,
-            )),
+        let mut smm = SoftmaxMMKernel::new(
+            h as usize,
+            Out::tagged(k(GATHER), h), // stream tag = gather rank
+            gp.mode.clone(),
+            gp.pe,
         );
+        if let Some(block) = gp.decode {
+            attn = attn.with_decode(block);
+            smm = smm.with_decode(block);
+        }
+        behaviors.insert(ATTN_BASE + h, Box::new(attn));
+        behaviors.insert(SMM_BASE + h, Box::new(smm));
     }
 
     // head merge
@@ -361,7 +366,16 @@ mod tests {
             max_seq: 128,
             hidden: 768,
             ffn: 3072,
+            decode: None,
         }
+    }
+
+    #[test]
+    fn decode_graph_builds_with_caching_heads() {
+        let gp = EncoderGraphParams { decode: Some(5), ..params() };
+        let b = build_encoder(&gp);
+        assert_eq!(b.cluster.kernels.len(), 38);
+        b.cluster.validate().unwrap();
     }
 
     #[test]

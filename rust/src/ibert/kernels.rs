@@ -260,6 +260,129 @@ impl KernelBehavior for LinearKernel {
 }
 
 // ---------------------------------------------------------------------------
+// Decode mode: per-request KV caching for the head kernels
+// ---------------------------------------------------------------------------
+
+/// Per-request decoder state of a cache-holding head kernel (the
+/// attention head caches its K slices, the SMM head its V slices).
+/// Inference ids are blocked per request (`DecodeConfig::block`): the
+/// prefill at offset 0 appends `m` cache rows, each decode step appends
+/// one, and the state retires when the final step's outputs are queued.
+/// The feedback loop serializes a request's passes — a step's input row
+/// cannot re-enter the pipeline before the previous pass fully drained
+/// through every kernel — so one transient pass context suffices.
+#[derive(Default)]
+struct DecodeReq {
+    /// cached rows across passes, in position order (functional mode;
+    /// Timing mode tracks only `len`)
+    cache: Vec<Arc<Vec<i8>>>,
+    /// cached positions so far
+    len: u32,
+    /// latest cache-row arrival over the whole request: the decode gate
+    done: u64,
+    /// active pass id
+    inference: u32,
+    /// cache length at active-pass start
+    base: u32,
+    /// stream-1 (cache) rows received this pass
+    got: u32,
+    pass_rows: u32,
+    /// this pass's cache rows, staged until the block is complete so
+    /// out-of-order arrivals still append in position order
+    staged: BTreeMap<u32, Arc<Vec<i8>>>,
+    /// stream-0 rows waiting on the pass's cache block: row -> (arrival, data)
+    pending: BTreeMap<u32, (u64, Option<Arc<Vec<i8>>>)>,
+    queued: u32,
+}
+
+impl DecodeReq {
+    fn new(inference: u32) -> DecodeReq {
+        DecodeReq { inference, ..Default::default() }
+    }
+}
+
+/// One input row of a decode-mode pass. Stream 1 rows append to the KV
+/// cache; other streams are compute rows (Q for attention, probability
+/// rows for SMM) gated until the pass's cache block is complete. A row
+/// at in-pass index `j` attends `base + j + 1` cached positions — the
+/// causal mask — and `emit(cache, attended, data)` turns that into the
+/// row's (cycles, payload) under the variable-trip-count timing model.
+#[allow(clippy::too_many_arguments)]
+fn decode_on_row(
+    reqs: &mut HashMap<u32, DecodeReq>,
+    block: u32,
+    functional: bool,
+    out: &mut OutStream,
+    stream_tag: u8,
+    meta: MsgMeta,
+    at: u64,
+    payload: Payload,
+    emit: &mut dyn FnMut(&[Arc<Vec<i8>>], u32, Option<&Arc<Vec<i8>>>) -> (u64, Payload),
+) {
+    let inference = meta.inference;
+    let request = inference / block;
+    let step = inference % block;
+    let st = reqs.entry(request).or_insert_with(|| DecodeReq::new(inference));
+    if st.inference != inference {
+        // next pass of this request (pass serialization guarantees the
+        // previous one drained)
+        debug_assert!(st.staged.is_empty() && st.pending.is_empty());
+        st.inference = inference;
+        st.base = st.len;
+        st.got = 0;
+        st.pass_rows = 0;
+        st.queued = 0;
+    }
+    st.pass_rows = st.pass_rows.max(meta.rows);
+    match meta.stream {
+        1 => {
+            if functional {
+                if let Some(v) = row_i8(payload) {
+                    st.staged.insert(meta.row, v);
+                }
+            }
+            st.got += 1;
+            st.done = st.done.max(at);
+            if st.got == st.pass_rows {
+                // cache block complete: append in position order, then
+                // drain the compute rows buffered behind it
+                let staged = std::mem::take(&mut st.staged);
+                st.cache.extend(staged.into_values());
+                st.len += st.pass_rows;
+                let pending = std::mem::take(&mut st.pending);
+                for (row, (arr, data)) in pending {
+                    let ready = arr.max(st.done);
+                    let attended = st.base + row + 1;
+                    let (cycles, pl) = emit(&st.cache, attended, data.as_ref());
+                    let meta2 =
+                        MsgMeta { stream: stream_tag, row, rows: st.pass_rows, inference };
+                    out.push(ready, cycles, meta2, pl);
+                    st.queued += 1;
+                }
+            }
+        }
+        _ => {
+            let data = if functional { row_i8(payload) } else { None };
+            if st.pass_rows > 0 && st.got == st.pass_rows {
+                let ready = at.max(st.done);
+                let attended = st.base + meta.row + 1;
+                let (cycles, pl) = emit(&st.cache, attended, data.as_ref());
+                let meta2 =
+                    MsgMeta { stream: stream_tag, row: meta.row, rows: st.pass_rows, inference };
+                out.push(ready, cycles, meta2, pl);
+                st.queued += 1;
+            } else {
+                st.pending.insert(meta.row, (at, data));
+            }
+        }
+    }
+    if st.pass_rows > 0 && st.queued == st.pass_rows && step + 1 == block {
+        // final pass fully queued: the request's KV cache retires
+        reqs.remove(&request);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Attention dot-product + softmax head kernel (Kern_4..15)
 // ---------------------------------------------------------------------------
 
@@ -281,8 +404,12 @@ pub struct AttentionHeadKernel {
     pub head: usize,
     pub mode: Mode,
     pub pe: PeConfig,
+    /// `Some(block)` = decode mode: per-request K caching, causal
+    /// masking, inference ids blocked per request.
+    pub decode: Option<u32>,
     out: OutStream,
     inf: HashMap<u32, AttnInf>,
+    reqs: HashMap<u32, DecodeReq>,
 }
 
 impl AttentionHeadKernel {
@@ -291,9 +418,18 @@ impl AttentionHeadKernel {
             head,
             mode,
             pe,
+            decode: None,
             out: OutStream::new(out, pe.pipe_fill),
             inf: HashMap::new(),
+            reqs: HashMap::new(),
         }
+    }
+
+    /// Switch the head into decode mode with `block` inference ids per
+    /// request (1 prefill + `block - 1` decode steps).
+    pub fn with_decode(mut self, block: u32) -> Self {
+        self.decode = Some(block);
+        self
     }
 }
 
@@ -313,6 +449,44 @@ fn attn_score_row(st: &AttnInf, q: &[i8], m: u32, p: &ModelParams) -> Payload {
 
 impl KernelBehavior for AttentionHeadKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        if let Some(block) = self.decode {
+            let AttentionHeadKernel { mode, pe, out, reqs, .. } = self;
+            let pe = *pe;
+            let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64);
+            let stream_tag = out.out.stream.unwrap_or(0);
+            let functional = mode.is_functional();
+            let params = mode.params().cloned();
+            io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                io2.consume(payload.bytes());
+                decode_on_row(
+                    reqs,
+                    block,
+                    functional,
+                    out,
+                    stream_tag,
+                    meta,
+                    at,
+                    payload,
+                    &mut |cache, attended, data| {
+                        let cycles = pe.attn_decode_row_cycles(attended as u64, d as u64);
+                        let pl = match (&params, data) {
+                            (Some(p), Some(q)) => {
+                                let ks: Vec<&[i8]> = cache[..attended as usize]
+                                    .iter()
+                                    .map(|a| a.as_slice())
+                                    .collect();
+                                let scores = compute::causal_head_scores(q, &ks, 0, d);
+                                Payload::row_i8(compute::softmax_row(&scores, p.eq.softmax))
+                            }
+                            _ => Payload::Timing(attended as usize),
+                        };
+                        (cycles, pl)
+                    },
+                );
+            });
+            self.out.pump(io);
+            return;
+        }
         let AttentionHeadKernel { mode, pe, out, inf, .. } = self;
         let pe = *pe;
         let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
@@ -410,8 +584,12 @@ pub struct SoftmaxMMKernel {
     pub head: usize,
     pub mode: Mode,
     pub pe: PeConfig,
+    /// `Some(block)` = decode mode: per-request V caching (see
+    /// [`AttentionHeadKernel::decode`]).
+    pub decode: Option<u32>,
     out: OutStream,
     inf: HashMap<u32, SmmInf>,
+    reqs: HashMap<u32, DecodeReq>,
 }
 
 impl SoftmaxMMKernel {
@@ -420,9 +598,18 @@ impl SoftmaxMMKernel {
             head,
             mode,
             pe,
+            decode: None,
             out: OutStream::new(out, pe.pipe_fill),
             inf: HashMap::new(),
+            reqs: HashMap::new(),
         }
+    }
+
+    /// Switch the head into decode mode with `block` inference ids per
+    /// request.
+    pub fn with_decode(mut self, block: u32) -> Self {
+        self.decode = Some(block);
+        self
     }
 }
 
@@ -441,7 +628,46 @@ fn smm_row(st: &SmmInf, probs: &[i8], m: u32, p: &ModelParams) -> Payload {
 
 impl KernelBehavior for SoftmaxMMKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        let SoftmaxMMKernel { head, mode, pe, out, inf } = self;
+        if let Some(block) = self.decode {
+            let SoftmaxMMKernel { head, mode, pe, out, reqs, .. } = self;
+            let pe = *pe;
+            let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64);
+            let stream_tag = out.out.stream.unwrap_or(*head as u8);
+            let functional = mode.is_functional();
+            let params = mode.params().cloned();
+            io.rows(pkt, |io2: &mut KernelIo, meta, at, payload| {
+                io2.consume(payload.bytes());
+                decode_on_row(
+                    reqs,
+                    block,
+                    functional,
+                    out,
+                    stream_tag,
+                    meta,
+                    at,
+                    payload,
+                    &mut |cache, attended, data| {
+                        let cycles = pe.smm_decode_row_cycles(attended as u64, d as u64);
+                        let pl = match (&params, data) {
+                            (Some(p), Some(pr)) => {
+                                let vs: Vec<&[i8]> = cache[..attended as usize]
+                                    .iter()
+                                    .map(|a| a.as_slice())
+                                    .collect();
+                                Payload::row_i8(compute::head_context_row(
+                                    pr, &vs, 0, d, p.eq.rq_att,
+                                ))
+                            }
+                            _ => Payload::Timing(d),
+                        };
+                        (cycles, pl)
+                    },
+                );
+            });
+            self.out.pump(io);
+            return;
+        }
+        let SoftmaxMMKernel { head, mode, pe, out, inf, .. } = self;
         let pe = *pe;
         let d = mode.params().map(|p| p.cfg.head_dim()).unwrap_or(64) as u64;
         let default_stream = *head as u8;
@@ -796,6 +1022,50 @@ mod tests {
         assert_eq!(p.schedule(101, 10, 50), 260);
         // idle gap: next row pays fill again
         assert_eq!(p.schedule(900, 10, 50), 960);
+    }
+
+    #[test]
+    fn decode_rows_attend_causally_and_state_retires() {
+        use crate::sim::packet::GlobalKernelId;
+        let mut reqs: HashMap<u32, DecodeReq> = HashMap::new();
+        let mut out = OutStream::new(Out::tagged(GlobalKernelId::new(0, 9), 0), 0);
+        let block = 2; // prefill + 1 decode step per request
+        let mut seen: Vec<u32> = Vec::new();
+        let mut emit = |_cache: &[Arc<Vec<i8>>], attended: u32, _d: Option<&Arc<Vec<i8>>>| {
+            seen.push(attended);
+            (10u64, Payload::Timing(attended as usize))
+        };
+        // prefill (inference 0, request 0): K rows land, then Q rows
+        for row in 0..2u32 {
+            let meta = MsgMeta { stream: 1, row, rows: 2, inference: 0 };
+            decode_on_row(
+                &mut reqs, block, false, &mut out, 0, meta, 100 + row as u64,
+                Payload::Timing(64), &mut emit,
+            );
+        }
+        for row in 0..2u32 {
+            let meta = MsgMeta { stream: 0, row, rows: 2, inference: 0 };
+            decode_on_row(
+                &mut reqs, block, false, &mut out, 0, meta, 200 + row as u64,
+                Payload::Timing(64), &mut emit,
+            );
+        }
+        assert_eq!(reqs[&0].len, 2, "prefill cached both positions");
+        assert_eq!(reqs[&0].queued, 2);
+        // decode step (inference 1): one cache row + one query row, and
+        // the final pass retires the request state
+        let meta = MsgMeta { stream: 1, row: 0, rows: 1, inference: 1 };
+        decode_on_row(
+            &mut reqs, block, false, &mut out, 0, meta, 300, Payload::Timing(64), &mut emit,
+        );
+        let meta = MsgMeta { stream: 0, row: 0, rows: 1, inference: 1 };
+        decode_on_row(
+            &mut reqs, block, false, &mut out, 0, meta, 301, Payload::Timing(64), &mut emit,
+        );
+        assert!(reqs.is_empty(), "KV cache retires after the final pass");
+        // causal attended lengths: prefill rows see 1 then 2 positions,
+        // the decode step sees all 3
+        assert_eq!(seen, vec![1, 2, 3]);
     }
 
     #[test]

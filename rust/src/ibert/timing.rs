@@ -86,6 +86,26 @@ impl PeConfig {
         2 * hidden.div_ceil(self.ln_simd) + 45
     }
 
+    // ---- decode (variable trip count) ----
+    //
+    // Under the causal mask a query at global position p attends
+    // `attended = p + 1` cached positions, so an attention/SMM kernel's
+    // per-row trip count varies row to row within a prefill pass and
+    // grows token by token across decode steps. The cycle models are the
+    // same hardware loops as above — only the loop bound changes from
+    // the fixed pass length `m` to the row's attended length.
+
+    /// Masked-attention score row + fused softmax over `attended` cached
+    /// K positions (decode trip count).
+    pub fn attn_decode_row_cycles(&self, attended: u64, d: u64) -> u64 {
+        self.attn_row_cycles(attended, d) + self.softmax_row_cycles(attended)
+    }
+
+    /// Softmax matrix-multiply over `attended` cached V positions.
+    pub fn smm_decode_row_cycles(&self, attended: u64, d: u64) -> u64 {
+        self.smm_row_cycles(attended, d)
+    }
+
     // ---- resource estimation (Fig. 15's model) ----
 
     /// DSP cost of a MAC array on a device.
@@ -175,6 +195,22 @@ mod tests {
     fn ln_keeps_line_rate() {
         let pe = PeConfig::default();
         assert!(pe.ln_row_cycles(768) < pe.qkv_row_cycles(768));
+    }
+
+    #[test]
+    fn decode_trip_counts_grow_with_attended_length() {
+        let pe = PeConfig::default();
+        // a single-token decode step against a short cache is far
+        // cheaper than a full-length row...
+        assert!(pe.attn_decode_row_cycles(8, 64) < pe.attn_decode_row_cycles(128, 64) / 4);
+        assert!(pe.smm_decode_row_cycles(8, 64) * 4 < pe.smm_decode_row_cycles(128, 64));
+        // ...and at full length the decode model degenerates to the
+        // fixed-m encoder model (same hardware loops)
+        assert_eq!(
+            pe.attn_decode_row_cycles(128, 64),
+            pe.attn_row_cycles(128, 64) + pe.softmax_row_cycles(128)
+        );
+        assert_eq!(pe.smm_decode_row_cycles(128, 64), pe.smm_row_cycles(128, 64));
     }
 
     #[test]

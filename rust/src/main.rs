@@ -92,6 +92,11 @@ COMMANDS:
             [--trace-out t.json] [--metrics-out m.jsonl] [--metrics-interval N]
             [--profile]   (telemetry: the report upgrades to serving_report/v3
             with bottleneck attribution; artifacts as in simulate)
+            [--decode [--max-new-tokens 8]]   (autoregressive serving: each
+            request is one prefill pass + N single-token passes re-entering
+            the same pipeline through the eval-gateway feedback edge; the
+            report upgrades to serving_report/v4 with time-to-first-token
+            and inter-token-latency percentiles + KV-cache occupancy)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
 
@@ -803,6 +808,7 @@ fn cmd_build(args: &Args) -> Result<()> {
             max_seq: d.max_seq,
             hidden: d.hidden,
             ffn: d.ffn,
+            decode: None,
         });
         let dir = format!("{out}/cluster_{e}");
         let n = ip_generator::generate(
@@ -849,7 +855,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Stream open-loop request traffic through an N-encoder pipeline in the
 /// discrete-event simulator and report serving metrics + the Eq. 1 check.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
-    use galapagos_llm::serve::{run_serving_with_obs, ArrivalProcess, LengthDist, ServeConfig};
+    use galapagos_llm::serve::{
+        run_serving_with_obs, ArrivalProcess, DecodeConfig, LengthDist, ServeConfig,
+    };
 
     let quick = args.bool_or("quick", false)?;
     let encoders = args.usize_or("encoders", 6)?;
@@ -871,6 +879,10 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     };
     cfg.fail = parse_fail(args)?;
     cfg.obs = parse_obs(args)?;
+    if args.bool_or("decode", false)? || args.has("max-new-tokens") {
+        cfg.decode =
+            Some(DecodeConfig { max_new_tokens: args.u64_or("max-new-tokens", 8)? as u32 });
+    }
 
     if args.bool_or("place", false)? {
         // per-encoder placement from the PR 1 placer (possibly over the
@@ -924,6 +936,12 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
          ({:.0}% load)",
         100.0 * rate / capacity
     );
+    if let Some(d) = cfg.decode {
+        println!(
+            "decode: prefill + {} token pass(es) per request (KV caches charged at the heads)",
+            d.max_new_tokens
+        );
+    }
 
     let t0 = std::time::Instant::now();
     let (report, obs_out) = run_serving_with_obs(&cfg)?;

@@ -34,7 +34,7 @@ pub use search::{place, PlacementSolution, SearchParams};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::fpga::resources::{Device, ResourceBudget, ResourceUsage};
+use crate::fpga::resources::{kv_cache_bram18, Device, ResourceBudget, ResourceUsage};
 use crate::ibert::timing::PeConfig;
 use crate::util::json::Json;
 
@@ -263,6 +263,9 @@ pub struct KernelGraph {
     /// topological order of kernel ids — precomputed so the cost model
     /// can score thousands of candidate placements without re-sorting
     topo: Vec<usize>,
+    /// decode mode: the attention/SMM head kernels keep per-head KV
+    /// caches resident, charged against BRAM on top of the FIFO model
+    decode: bool,
 }
 
 impl KernelGraph {
@@ -392,7 +395,18 @@ impl KernelGraph {
         }
         ensure!(topo.len() == n, "encoder graph has a cycle");
 
-        Ok(KernelGraph { shape, pe, nodes, edges, order, in_edge_idx, topo })
+        Ok(KernelGraph { shape, pe, nodes, edges, order, in_edge_idx, topo, decode: false })
+    }
+
+    /// Switch the graph into decode mode: `usage` additionally charges
+    /// each attention/SMM head its persistent KV-cache BRAM.
+    pub fn with_decode(mut self, decode: bool) -> KernelGraph {
+        self.decode = decode;
+        self
+    }
+
+    pub fn is_decode(&self) -> bool {
+        self.decode
     }
 
     pub fn n_kernels(&self) -> usize {
@@ -438,9 +452,18 @@ impl KernelGraph {
         }
     }
 
-    /// Resource estimate of kernel `id` on a device (FIFOs included).
+    /// Resource estimate of kernel `id` on a device (FIFOs included; in
+    /// decode mode, the role's persistent KV-cache BRAM on top).
     pub fn usage(&self, id: u8, dev: Device) -> ResourceUsage {
-        role_usage(self.node(id).role, &self.shape, &self.pe, dev)
+        let role = self.node(id).role;
+        let mut u = role_usage(role, &self.shape, &self.pe, dev);
+        if self.decode {
+            let kv = role_kv_bytes(role, &self.shape);
+            if kv > 0 {
+                u += ResourceUsage { bram18: kv_cache_bram18(kv as u64), ..Default::default() };
+            }
+        }
+        u
     }
 }
 
@@ -489,6 +512,18 @@ pub fn role_fifo_out_bytes(role: KernelRole, shape: &ModelShape) -> usize {
         | KernelRole::ScatterV
         | KernelRole::GatherHeads
         | KernelRole::BcastLn1 => 8 * h,
+    }
+}
+
+/// Persistent KV-cache bytes a role holds on-chip in decode mode: each
+/// attention head caches its `[max_seq, head_dim]` K slice, each SMM
+/// head the matching V slice. Unlike a FIFO this state lives for a
+/// request's whole prefill+decode lifetime, so it is budgeted
+/// separately (block-granular, `fpga::resources::kv_cache_bram18`).
+pub fn role_kv_bytes(role: KernelRole, shape: &ModelShape) -> usize {
+    match role {
+        KernelRole::AttnHead(_) | KernelRole::SmmHead(_) => shape.max_seq * shape.head_dim(),
+        _ => 0,
     }
 }
 
@@ -865,6 +900,36 @@ mod tests {
         ] {
             assert_eq!(role_fifo_out_bytes(role, &shape), want, "output FIFO for {role:?}");
         }
+    }
+
+    #[test]
+    fn decode_mode_charges_kv_cache_bram_on_head_kernels_only() {
+        let shape = ModelShape::ibert_base();
+        let g = KernelGraph::encoder(shape, PeConfig::default()).unwrap();
+        let gd = g.clone().with_decode(true);
+        assert!(gd.is_decode());
+        let ids = shape.ids();
+        let dev = Device::Xczu19eg;
+        // one head's K (or V) cache: 128 x 64 bytes -> 4 BRAM18 extra
+        let kv = role_kv_bytes(KernelRole::AttnHead(0), &shape);
+        assert_eq!(kv, 128 * 64);
+        let extra = kv_cache_bram18(kv as u64);
+        for h in 0..shape.heads as u8 {
+            for base in [ids.attn_base, ids.smm_base] {
+                let plain = g.usage(base + h, dev);
+                let dec = gd.usage(base + h, dev);
+                assert_eq!(dec.bram18, plain.bram18 + extra);
+                assert_eq!((dec.lut, dec.ff, dec.dsp), (plain.lut, plain.ff, plain.dsp));
+            }
+        }
+        // everything else is untouched (no cache, no charge)
+        for id in [ids.gateway, ids.linear_q, ids.proj, ids.ln1, ids.ffn1_base, ids.ln2, ids.bcast]
+        {
+            assert_eq!(g.usage(id, dev), gd.usage(id, dev));
+        }
+        // the fpga-layer BRAM18 geometry must not drift from the sim's
+        assert_eq!(kv_cache_bram18(crate::sim::fifo::BRAM18_BYTES as u64), 1);
+        assert_eq!(kv_cache_bram18(crate::sim::fifo::BRAM18_BYTES as u64 + 1), 2);
     }
 
     #[test]

@@ -40,9 +40,10 @@ use crate::sim::packet::GlobalKernelId;
 use crate::FABRIC_CLOCK_HZ;
 
 pub use stats::{
-    validate_serving_report, Eq1Check, FaultReport, LatencySummary, ServingReport, StageReport,
+    validate_serving_report, DecodeReport, Eq1Check, FaultReport, LatencySummary, ServingReport,
+    StageReport,
 };
-pub use traffic::{ArrivalProcess, LengthDist, Request, TrafficConfig};
+pub use traffic::{ArrivalProcess, DecodeConfig, LengthDist, Request, TrafficConfig};
 
 /// One serving scenario: a pipeline shape plus an open-loop traffic trace.
 #[derive(Clone)]
@@ -82,6 +83,11 @@ pub struct ServeConfig {
     /// off by default, and a telemetry-off report is byte-identical to
     /// the pre-telemetry `serving_report/v2`
     pub obs: ObsSettings,
+    /// autoregressive decoding (`serve --decode`): each request becomes
+    /// one prefill pass plus `max_new_tokens` single-token passes fed
+    /// back through the pipeline, and the report gains the v4 `decode`
+    /// section (TTFT / ITL percentiles, KV-cache occupancy)
+    pub decode: Option<traffic::DecodeConfig>,
 }
 
 impl ServeConfig {
@@ -110,6 +116,16 @@ impl ServeConfig {
             reliable: false,
             fail: None,
             obs: ObsSettings::default(),
+            decode: None,
+        }
+    }
+
+    /// The build point's sequence capacity — what the KV caches and
+    /// FIFOs are sized for.
+    fn max_seq(&self) -> usize {
+        match &self.mode {
+            Mode::Functional(p) => p.cfg.max_seq,
+            Mode::Timing => 128,
         }
     }
 
@@ -144,6 +160,7 @@ impl ServeConfig {
             },
             fail: self.fail,
             obs: self.obs.clone(),
+            decode: self.decode,
         }
     }
 }
@@ -169,10 +186,12 @@ pub fn pipeline_capacity_seqs_per_s(cfg: &ServeConfig, m: usize) -> Result<f64> 
     tb_cfg.m = m;
     tb_cfg.inferences = 6;
     // capacity is a property of the healthy pipeline: probe it without
-    // the scenario's loss/failure injection or telemetry overhead
+    // the scenario's loss/failure injection, telemetry overhead, or
+    // decode feedback loop
     tb_cfg.net = NetworkConfig::default();
     tb_cfg.fail = None;
     tb_cfg.obs = ObsSettings::default();
+    tb_cfg.decode = None;
     let mut tb = build_testbed(&tb_cfg)?;
     tb.sim.start();
     tb.sim.run()?;
@@ -199,11 +218,13 @@ pub fn validate_eq1(base: &TestbedConfig, encoders: usize, m: usize) -> Result<E
     one.m = m;
     one.inferences = 1;
     one.schedule = None;
-    // Eq. 1 describes the healthy pipeline: measure its components
-    // without the serving scenario's loss/failure injection or telemetry
+    // Eq. 1 describes the healthy prefill pipeline: measure its
+    // components without the serving scenario's loss/failure injection,
+    // telemetry, or decode feedback loop
     one.net = NetworkConfig::default();
     one.fail = None;
     one.obs = ObsSettings::default();
+    one.decode = None;
     let single = run_encoder_once(&one)?;
     let components = single.components();
 
@@ -245,6 +266,22 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
         (0.0..1.0).contains(&cfg.drop_probability),
         "drop probability must be in [0, 1)"
     );
+    // decode-mode prompts must leave KV head-room for the generated
+    // tokens: clamp the traffic's max length so prompt + max_new_tokens
+    // fits the build point's sequence capacity. The clamp happens before
+    // schedule generation, so it is deterministic at every thread count;
+    // explicit over-long schedules still fail loudly in build_testbed.
+    let clamped;
+    let cfg = if let Some(dec) = cfg.decode {
+        let cap = cfg.max_seq().saturating_sub(dec.max_new_tokens as usize).max(1);
+        let mut c = cfg.clone();
+        c.traffic.max_m = c.traffic.max_m.min(cap);
+        clamped = c;
+        &clamped
+    } else {
+        cfg
+    };
+    let max_seq = cfg.max_seq();
     let schedule = Arc::new(cfg.traffic.generate());
     let tb_cfg = cfg.testbed_config(schedule.clone());
     let mut tb = build_testbed(&tb_cfg)?;
@@ -252,20 +289,60 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
     tb.sim.run()?;
 
     // per-request outcomes: completion of the last output row minus the
-    // scheduled arrival (source queueing charged to the request)
+    // scheduled arrival (source queueing charged to the request). In
+    // decode mode request r spans `block = 1 + max_new_tokens` pipeline
+    // passes — the m-row prefill at inference id r*block, then one
+    // single-row pass per generated token — and the request completes
+    // when its last pass does.
+    let block = cfg.decode.map_or(1u32, |d| d.block());
     let mut per_request: Vec<Option<u64>> = vec![None; schedule.len()];
     let (mut completed, mut completed_tokens, mut last_done) = (0usize, 0u64, 0u64);
+    let mut decode_report = None;
     {
         let sink = tb.sink.lock().unwrap();
+        let pass_done = |base: u32, p: u32, m: u32| -> Option<u64> {
+            let need = if p == 0 { m } else { 1 };
+            sink.arrivals.get(&(base + p)).and_then(|&(pkts, t)| (pkts == need).then_some(t))
+        };
+        let mut ttft = Vec::new();
+        let mut itl = Vec::new();
+        let mut kv_occupancy = Vec::with_capacity(schedule.len());
+        let mut generated_tokens = 0u64;
         for (i, req) in schedule.iter().enumerate() {
-            if let Some(&(pkts, done)) = sink.arrivals.get(&(i as u32)) {
-                if pkts == req.m {
-                    completed += 1;
-                    completed_tokens += req.m as u64;
-                    per_request[i] = Some(done - req.arrival);
-                    last_done = last_done.max(done);
+            let base = i as u32 * block;
+            let passes: Vec<Option<u64>> =
+                (0..block).map(|p| pass_done(base, p, req.m)).collect();
+            // time-to-first-token: the prefill pass completing is the
+            // moment the first generated token could be sampled
+            if let Some(d0) = passes[0] {
+                ttft.push(d0 - req.arrival);
+            }
+            let gen = passes[1..].iter().flatten().count() as u64;
+            generated_tokens += gen;
+            // inter-token latency: gaps between consecutive completed
+            // passes (pass 0 -> 1 is the first post-prefill gap)
+            for w in passes.windows(2) {
+                if let (Some(a), Some(b)) = (w[0], w[1]) {
+                    itl.push(b.saturating_sub(a));
                 }
             }
+            kv_occupancy.push((req.m as u64 + gen) as f64 / max_seq as f64);
+            if passes.iter().all(Option::is_some) {
+                let done = passes.last().unwrap().unwrap();
+                completed += 1;
+                completed_tokens += req.m as u64 + (block - 1) as u64;
+                per_request[i] = Some(done - req.arrival);
+                last_done = last_done.max(done);
+            }
+        }
+        if let Some(dec) = cfg.decode {
+            decode_report = Some(stats::DecodeReport {
+                max_new_tokens: dec.max_new_tokens,
+                generated_tokens,
+                ttft: LatencySummary::from_unsorted(ttft).unwrap_or_else(LatencySummary::empty),
+                itl: LatencySummary::from_unsorted(itl).unwrap_or_else(LatencySummary::empty),
+                kv_occupancy,
+            });
         }
     }
     let latencies: Vec<u64> = per_request.iter().filter_map(|&l| l).collect();
@@ -356,22 +433,19 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
     let mut telemetry = None;
     if cfg.obs.enabled {
         if let Some(tobs) = tb.sim.trace.obs.as_deref() {
-            let outcomes: Vec<RequestOutcome> = {
-                let sink = tb.sink.lock().unwrap();
-                schedule
-                    .iter()
-                    .enumerate()
-                    .map(|(i, req)| RequestOutcome {
-                        inference: i as u32,
-                        arrival: req.arrival,
-                        m: req.m,
-                        done: sink
-                            .arrivals
-                            .get(&(i as u32))
-                            .and_then(|&(pkts, done)| (pkts == req.m).then_some(done)),
-                    })
-                    .collect()
-            };
+            let outcomes: Vec<RequestOutcome> = schedule
+                .iter()
+                .enumerate()
+                .map(|(i, req)| RequestOutcome {
+                    // in decode mode the request is identified by its
+                    // prefill pass id, and `done` is the completion of
+                    // the LAST pass (per_request already folds that in)
+                    inference: i as u32 * block,
+                    arrival: req.arrival,
+                    m: req.m,
+                    done: per_request[i].map(|lat| req.arrival + lat),
+                })
+                .collect();
             let roles = SpanRoles {
                 source: Some(GlobalKernelId::new(EVAL_CLUSTER, EVAL_SOURCE).dense() as u32),
                 stages: (0..cfg.encoders)
@@ -420,6 +494,7 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
         events: tb.sim.trace.events_processed,
         telemetry,
         sim_profile,
+        decode: decode_report,
     };
     Ok((report, obs_out))
 }
@@ -521,6 +596,127 @@ mod tests {
         let (r2, obs2) = run_serving_with_obs(&cfg).unwrap();
         assert_eq!(r2.schema(), "serving_report/v2");
         assert!(obs2.trace_json.is_none() && obs2.metrics_jsonl.is_none());
+    }
+
+    #[test]
+    fn decode_serving_reports_v4_with_ttft_and_itl() {
+        let mut cfg = ServeConfig::glue(2, 6, 2_000.0, 7);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 3 });
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.completed, 6, "every request finishes prefill + 3 token passes");
+        assert_eq!(r.schema(), "serving_report/v4");
+        validate_serving_report(&r.to_json()).unwrap();
+        assert_eq!(r.completed_tokens, r.total_tokens + 18, "prompt tokens + generated");
+        let d = r.decode.as_ref().unwrap();
+        assert_eq!((d.max_new_tokens, d.generated_tokens), (3, 18));
+        assert_eq!(d.kv_occupancy.len(), 6);
+        assert!(d.kv_occupancy.iter().all(|&o| o > 0.0 && o <= 1.0));
+        assert!(d.ttft.p50 > 0 && d.itl.p50 > 0);
+        // prefill completes strictly before the request does, pointwise,
+        // so every TTFT percentile sits at or below the latency one
+        assert!(d.ttft.p50 <= r.latency.p50 && d.ttft.p99 <= r.latency.p99);
+    }
+
+    #[test]
+    fn decode_reports_are_thread_invariant() {
+        let mut cfg = ServeConfig::glue(2, 5, 2_000.0, 13);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 2 });
+        cfg.threads = Some(1);
+        let a = run_serving(&cfg).unwrap();
+        cfg.threads = Some(8);
+        let b = run_serving(&cfg).unwrap();
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    }
+
+    #[test]
+    fn zero_max_new_tokens_is_pure_prefill() {
+        let mut cfg = ServeConfig::glue(2, 5, 2_000.0, 11);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 0 });
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.completed_tokens, r.total_tokens, "nothing generated");
+        let d = r.decode.as_ref().unwrap();
+        assert_eq!(d.generated_tokens, 0);
+        assert_eq!(d.itl, LatencySummary::empty());
+        // with no token passes, prefill IS the request: TTFT == latency
+        assert_eq!(d.ttft, r.latency);
+        assert_eq!(r.schema(), "serving_report/v4");
+        validate_serving_report(&r.to_json()).unwrap();
+    }
+
+    #[test]
+    fn zero_request_decode_yields_an_empty_v4_report() {
+        let mut cfg = ServeConfig::glue(1, 1, 1_000.0, 1);
+        cfg.traffic.requests = 0;
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 4 });
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!((r.requests, r.completed), (0, 0));
+        let d = r.decode.as_ref().unwrap();
+        assert_eq!(d.generated_tokens, 0);
+        assert!(d.kv_occupancy.is_empty());
+        assert_eq!(d.ttft, LatencySummary::empty());
+        assert_eq!(r.schema(), "serving_report/v4");
+        validate_serving_report(&r.to_json()).unwrap();
+    }
+
+    #[test]
+    fn oversized_prompt_plus_decode_overflows_loudly() {
+        // an explicit schedule at the build point's max_seq must be
+        // rejected with a clear KV-overflow error ...
+        let mut cfg = ServeConfig::glue(1, 1, 1_000.0, 1);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 4 });
+        let tb_cfg = cfg.testbed_config(Arc::new(vec![Request { arrival: 0, m: 128 }]));
+        let err = build_testbed(&tb_cfg).unwrap_err().to_string();
+        assert!(err.contains("KV-cache overflow"), "{err}");
+        // ... while the serving entry point clamps generated prompts
+        // below the cap, so the same scenario runs to completion
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.completed, 1);
+        assert!(r.decode.unwrap().kv_occupancy[0] <= 1.0);
+    }
+
+    #[test]
+    fn functional_decode_matches_the_native_incremental_reference() {
+        use crate::ibert::config::ModelConfig;
+        use crate::ibert::encoder::decode_generate;
+        use crate::ibert::weights::{synthetic_input, ModelParams};
+        let cfg_m = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 2 };
+        let p = Arc::new(ModelParams::synthetic(cfg_m, 0xFEED));
+        let (prompt_m, max_new) = (5usize, 3usize);
+        let input = Arc::new(synthetic_input(cfg_m.hidden, prompt_m, 21));
+        let tb_cfg = TestbedConfig {
+            encoders: 2,
+            m: prompt_m,
+            inferences: 1,
+            interval: 12,
+            pe: PeConfig::default(),
+            mode: Mode::Functional(p.clone()),
+            fpgas_per_switch: 6,
+            input: Some(input.clone()),
+            placement: None,
+            schedule: Some(Arc::new(vec![Request { arrival: 0, m: prompt_m as u32 }])),
+            decode: Some(traffic::DecodeConfig { max_new_tokens: max_new as u32 }),
+            threads: Some(1),
+            granularity: None,
+            net: Default::default(),
+            fail: None,
+            obs: Default::default(),
+        };
+        let mut tb = build_testbed(&tb_cfg).unwrap();
+        tb.sim.start();
+        tb.sim.run().unwrap();
+        let sink = tb.sink.lock().unwrap();
+        // the simulated pipeline's passes must be bit-identical to the
+        // native incremental decoder (itself golden-tested against full
+        // recompute): pass 0 = prefill matrix, pass 1+s = token row s
+        let (pre, toks) = decode_generate(&p, &input, 2, max_new);
+        assert_eq!(sink.matrix(0).unwrap(), pre, "prefill pass mismatch");
+        assert_eq!(toks.len(), max_new);
+        for (s, tok) in toks.iter().enumerate() {
+            let got = sink.matrix(1 + s as u32).unwrap();
+            assert_eq!(got.len(), 1, "token pass {} must be a single row", s + 1);
+            assert_eq!(&got[0], tok, "token pass {} mismatch", s + 1);
+        }
     }
 
     #[test]

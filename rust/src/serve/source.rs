@@ -8,6 +8,7 @@
 //! end-to-end latency (completion − scheduled arrival), exactly like a
 //! NIC transmit queue in a real deployment.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::gmi::Out;
@@ -18,6 +19,11 @@ use super::traffic::Request;
 
 /// Wake tag of the emission pump.
 const PUMP: u64 = 1;
+
+/// Stream tag of the decode feedback edge (last encoder -> eval gateway
+/// -> source). Distinguishes fed-back token rows from anything else the
+/// source might receive.
+pub const FEEDBACK_STREAM: u8 = 1;
 
 /// Streams the rows of each scheduled request at `interval` pacing,
 /// tagging every row with the request index as its inference id so the
@@ -91,6 +97,158 @@ impl KernelBehavior for RequestSourceKernel {
 
     fn name(&self) -> String {
         "serve-source".to_string()
+    }
+}
+
+/// Autoregressive serving source: each scheduled request is one prefill
+/// pass (inference id `r * block`, `m` rows) followed by up to
+/// `block - 1` single-row decode passes. A decode pass is triggered by
+/// the feedback edge: the eval gateway broadcasts every pipeline output
+/// row back here on [`FEEDBACK_STREAM`], and the *last* row of a pass —
+/// the freshly generated token's representation — is re-emitted as the
+/// next pass's input (inference id `+1`). The fed-back row stands in for
+/// sampling+embedding, which keeps functional runs bit-exact against
+/// the `ibert::encoder::decode_generate` reference.
+///
+/// Emissions share one serialized link: decode tokens and prefill rows
+/// interleave at row granularity (queued tokens take priority — they
+/// are single rows on the latency-critical path), each `interval`
+/// cycles apart, exactly like [`RequestSourceKernel`]'s pacing.
+pub struct DecodeSourceKernel {
+    dst: Out,
+    interval: u64,
+    requests: Arc<Vec<Request>>,
+    data: Option<Arc<Vec<Vec<i8>>>>,
+    row_bytes: usize,
+    /// passes per request: 1 prefill + max_new_tokens decode steps
+    block: u32,
+    idx: usize,
+    row: u32,
+    /// decode passes ready to emit: (inference id, input row payload)
+    queue: VecDeque<(u32, Payload)>,
+    /// pacing state: when the pump last emitted / whether it is armed
+    last_emit: Option<u64>,
+    armed: bool,
+}
+
+impl DecodeSourceKernel {
+    pub fn new(
+        dst: Out,
+        requests: Arc<Vec<Request>>,
+        interval: u64,
+        data: Option<Arc<Vec<Vec<i8>>>>,
+        row_bytes: usize,
+        block: u32,
+    ) -> Self {
+        assert!(block >= 1, "decode block must include the prefill pass");
+        DecodeSourceKernel {
+            dst,
+            interval,
+            requests,
+            data,
+            row_bytes,
+            block,
+            idx: 0,
+            row: 0,
+            queue: VecDeque::new(),
+            last_emit: None,
+            armed: false,
+        }
+    }
+
+    /// True while anything is left to emit (more feedback may still
+    /// arm the pump later even when this is false).
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.idx < self.requests.len()
+    }
+}
+
+impl KernelBehavior for DecodeSourceKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        // feedback rows from the eval gateway's broadcast
+        let block = self.block;
+        let interval = self.interval;
+        let row_bytes = self.row_bytes;
+        let functional = self.data.is_some();
+        let queue = &mut self.queue;
+        let armed = &mut self.armed;
+        let last_emit = &self.last_emit;
+        io.rows(pkt, |io2, meta, at, payload| {
+            io2.consume(payload.bytes());
+            if meta.stream != FEEDBACK_STREAM || meta.row + 1 != meta.rows {
+                return; // only a pass's last row births the next token
+            }
+            let step = meta.inference % block;
+            if step + 1 >= block {
+                return; // request fully generated
+            }
+            let next = match (functional, payload) {
+                (true, p @ Payload::RowI8(_)) => p,
+                (true, p) => panic!("functional decode feedback carried {:?}", p.bytes()),
+                (false, _) => Payload::Timing(row_bytes),
+            };
+            queue.push_back((meta.inference + 1, next));
+            if !*armed {
+                *armed = true;
+                let due = last_emit.map_or(at, |le| (le + interval).max(at));
+                io2.wake_in(due.saturating_sub(at).max(1), PUMP);
+            }
+        });
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag != START_TAG && tag != PUMP {
+            return;
+        }
+        self.armed = false;
+        // overlapping arms (feedback + schedule) may wake us early; the
+        // serialized link re-imposes its pacing here
+        if let Some(le) = self.last_emit {
+            if io.now < le + self.interval {
+                self.armed = true;
+                io.wake_in(le + self.interval - io.now, PUMP);
+                return;
+            }
+        }
+        let stream = self.dst.stream.unwrap_or(0);
+        if let Some((inference, payload)) = self.queue.pop_front() {
+            let meta = MsgMeta { stream, row: 0, rows: 1, inference };
+            io.send(self.dst.dst, meta, payload);
+        } else {
+            let Some(req) = self.requests.get(self.idx) else {
+                return; // drained; feedback re-arms the pump
+            };
+            if self.row == 0 && io.now < req.arrival {
+                // sleep unarmed: a fed-back token may claim the link first
+                io.wake_in(req.arrival - io.now, PUMP);
+                return;
+            }
+            let payload = match &self.data {
+                Some(d) => Payload::row_i8(d[self.row as usize].clone()),
+                None => Payload::Timing(self.row_bytes),
+            };
+            let meta = MsgMeta {
+                stream,
+                row: self.row,
+                rows: req.m,
+                inference: self.idx as u32 * self.block,
+            };
+            io.send(self.dst.dst, meta, payload);
+            self.row += 1;
+            if self.row == req.m {
+                self.row = 0;
+                self.idx += 1;
+            }
+        }
+        self.last_emit = Some(io.now);
+        if self.has_work() {
+            self.armed = true;
+            io.wake_in(self.interval.max(1), PUMP);
+        }
+    }
+
+    fn name(&self) -> String {
+        "serve-decode-source".to_string()
     }
 }
 
@@ -180,5 +338,88 @@ mod tests {
     #[test]
     fn empty_schedule_is_a_no_op() {
         assert!(run(Vec::new(), 12).is_empty());
+    }
+
+    /// Stands in for the whole pipeline + eval gateway: records every row
+    /// and feeds each pass's last row back to the source on the
+    /// feedback stream, like the gateway's broadcast would.
+    struct Echo {
+        src: GlobalKernelId,
+        seen: std::sync::Arc<std::sync::Mutex<Vec<(u64, u32, u32, u32)>>>,
+    }
+    impl KernelBehavior for Echo {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            let log = self.seen.clone();
+            let src = self.src;
+            io.rows(pkt, |io2, meta, at, payload| {
+                io2.consume(payload.bytes());
+                log.lock().unwrap().push((at, meta.inference, meta.row, meta.rows));
+                if meta.row + 1 == meta.rows {
+                    let fb = MsgMeta { stream: FEEDBACK_STREAM, ..meta };
+                    io2.send(src, fb, Payload::Timing(8));
+                }
+            });
+        }
+        fn on_wake(&mut self, _: u64, _: &mut KernelIo) {}
+    }
+
+    fn run_decode(requests: Vec<Request>, block: u32) -> Vec<(u64, u32, u32, u32)> {
+        let src = GlobalKernelId::new(0, 1);
+        let dst = GlobalKernelId::new(0, 2);
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        sim.add_kernel(
+            src,
+            FpgaId(0),
+            Fifo::new(1 << 16),
+            Box::new(DecodeSourceKernel::new(
+                Out::to(dst),
+                Arc::new(requests),
+                12,
+                None,
+                768,
+                block,
+            )),
+        )
+        .unwrap();
+        sim.add_kernel(
+            dst,
+            FpgaId(1),
+            Fifo::new(1 << 20),
+            Box::new(Echo { src, seen: seen.clone() }),
+        )
+        .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let v = seen.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn feedback_rows_trigger_per_token_passes() {
+        // two requests, one decode token each: passes 0,1 and 2,3
+        let reqs = vec![Request { arrival: 0, m: 3 }, Request { arrival: 0, m: 2 }];
+        let got = run_decode(reqs, 2);
+        assert_eq!(got.len(), 3 + 1 + 2 + 1);
+        let of = |inf: u32| got.iter().filter(|e| e.1 == inf).collect::<Vec<_>>();
+        assert_eq!(of(0).len(), 3, "request 0 prefill streams its prompt");
+        assert_eq!(of(2).len(), 2, "request 1 prefill carries inference 2");
+        for inf in [1, 3] {
+            let tok = of(inf);
+            assert_eq!(tok.len(), 1, "decode pass {inf} is a single row");
+            assert_eq!((tok[0].2, tok[0].3), (0, 1));
+        }
+        // a token pass only starts after its previous pass finished
+        let end0 = of(0).iter().map(|e| e.0).max().unwrap();
+        assert!(of(1)[0].0 > end0);
+    }
+
+    #[test]
+    fn block_one_means_pure_prefill() {
+        let got = run_decode(vec![Request { arrival: 0, m: 4 }], 1);
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|e| e.1 == 0), "no decode passes at max_new_tokens = 0");
     }
 }

@@ -208,6 +208,41 @@ impl FaultReport {
     }
 }
 
+/// The decode section of `serving_report/v4`: token-generation metrics
+/// of an autoregressive serving run (`serve --decode`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeReport {
+    /// decode passes per request after the prefill
+    pub max_new_tokens: u32,
+    /// decode tokens that actually completed, across all requests
+    pub generated_tokens: u64,
+    /// time to first token: prefill-pass completion minus the request's
+    /// scheduled arrival, over requests whose prefill completed
+    pub ttft: LatencySummary,
+    /// inter-token latency: gaps between consecutive pass completions,
+    /// pooled across all requests (all-zero at `max_new_tokens = 0` or
+    /// when no decode pass completed)
+    pub itl: LatencySummary,
+    /// per-request KV-cache occupancy at end of generation — cached
+    /// positions over the build point's `max_seq` — in request order
+    pub kv_occupancy: Vec<f64>,
+}
+
+impl DecodeReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+            ("generated_tokens", Json::Num(self.generated_tokens as f64)),
+            ("ttft", self.ttft.to_json()),
+            ("itl", self.itl.to_json()),
+            (
+                "kv_occupancy",
+                Json::Arr(self.kv_occupancy.iter().map(|&o| Json::Num(o)).collect()),
+            ),
+        ])
+    }
+}
+
 /// Everything one serving run produced.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -246,6 +281,9 @@ pub struct ServingReport {
     /// simulator self-profile (None: `--profile` was off). Wall-clock
     /// numbers — deliberately excluded from the determinism contract.
     pub sim_profile: Option<Json>,
+    /// autoregressive-decoding section (None: plain prefill-only
+    /// serving — the report then keeps its v2/v3 schema byte-for-byte)
+    pub decode: Option<DecodeReport>,
 }
 
 impl ServingReport {
@@ -282,9 +320,13 @@ impl ServingReport {
     /// Schema this report serializes as: exactly `serving_report/v2`
     /// when no telemetry section is attached (the byte-stability
     /// contract of telemetry-off runs), `serving_report/v3` — v2 plus
-    /// optional `telemetry` / `sim_profile` sections — otherwise.
+    /// optional `telemetry` / `sim_profile` sections — otherwise, and
+    /// `serving_report/v4` — v3 plus the `decode` section — whenever the
+    /// run decoded autoregressively.
     pub fn schema(&self) -> &'static str {
-        if self.telemetry.is_none() && self.sim_profile.is_none() {
+        if self.decode.is_some() {
+            "serving_report/v4"
+        } else if self.telemetry.is_none() && self.sim_profile.is_none() {
             "serving_report/v2"
         } else {
             "serving_report/v3"
@@ -315,6 +357,9 @@ impl ServingReport {
             ("fault", self.fault.as_ref().map(|f| f.to_json()).unwrap_or(Json::Null)),
             ("events", Json::Num(self.events as f64)),
         ];
+        if let Some(d) = &self.decode {
+            pairs.push(("decode", d.to_json()));
+        }
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.clone()));
         }
@@ -424,6 +469,25 @@ impl ServingReport {
                 e.encoders
             ));
         }
+        if let Some(d) = &self.decode {
+            let mean_kv = if d.kv_occupancy.is_empty() {
+                0.0
+            } else {
+                d.kv_occupancy.iter().sum::<f64>() / d.kv_occupancy.len() as f64
+            };
+            s.push_str(&format!(
+                "decode: {} tokens generated (max {} per request)   \
+                 TTFT p50 {:.1} us  p99 {:.1} us   ITL p50 {:.1} us  p99 {:.1} us   \
+                 KV occupancy {:.0}% mean\n",
+                d.generated_tokens,
+                d.max_new_tokens,
+                cycles_to_us(d.ttft.p50),
+                cycles_to_us(d.ttft.p99),
+                cycles_to_us(d.itl.p50),
+                cycles_to_us(d.itl.p99),
+                100.0 * mean_kv,
+            ));
+        }
         if let Some(t) = &self.telemetry {
             let n = t.get("requests_attributed").and_then(|v| v.as_i64()).unwrap_or(0);
             let mean = |k: &str| {
@@ -457,16 +521,19 @@ impl ServingReport {
     }
 }
 
-/// Structural check of a serialized serving report: accepts both the
-/// pre-telemetry `serving_report/v2` and its `serving_report/v3`
-/// superset (v3 = v2 plus optional `telemetry` / `sim_profile`
-/// sections appended after `events`). The round-trip tests and the CI
-/// artifact check both go through here, so the two schemas stay
+/// Structural check of a serialized serving report: accepts the
+/// pre-telemetry `serving_report/v2`, its `serving_report/v3` superset
+/// (v3 = v2 plus optional `telemetry` / `sim_profile` sections appended
+/// after `events`), and the decode-capable `serving_report/v4` (v3 plus
+/// a mandatory `decode` section). The round-trip tests and the CI
+/// artifact check both go through here, so all three schemas stay
 /// parseable side by side.
 pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
     let schema = j.get("schema").and_then(|s| s.as_str()).unwrap_or("");
     anyhow::ensure!(
-        schema == "serving_report/v2" || schema == "serving_report/v3",
+        schema == "serving_report/v2"
+            || schema == "serving_report/v3"
+            || schema == "serving_report/v4",
         "unknown serving report schema {schema:?}"
     );
     for key in [
@@ -499,17 +566,39 @@ pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
             j.get("telemetry").is_none() && j.get("sim_profile").is_none(),
             "v2 reports must not carry telemetry sections"
         );
-    } else {
+    }
+    if schema == "serving_report/v3" {
         anyhow::ensure!(
             j.get("telemetry").is_some() || j.get("sim_profile").is_some(),
             "v3 reports must carry at least one telemetry section"
         );
+    }
+    if schema != "serving_report/v2" {
         if let Some(t) = j.get("telemetry") {
             anyhow::ensure!(
                 t.path("attribution.totals_cycles").is_some(),
-                "v3 telemetry section missing attribution"
+                "telemetry section missing attribution"
             );
         }
+    }
+    if schema == "serving_report/v4" {
+        let d = j
+            .get("decode")
+            .ok_or_else(|| anyhow::anyhow!("v4 reports must carry a decode section"))?;
+        for key in ["max_new_tokens", "generated_tokens", "ttft", "itl", "kv_occupancy"] {
+            anyhow::ensure!(d.get(key).is_some(), "decode section missing key {key:?}");
+        }
+        anyhow::ensure!(d.path("ttft.p50_cycles").is_some(), "decode TTFT summary malformed");
+        anyhow::ensure!(d.path("itl.p50_cycles").is_some(), "decode ITL summary malformed");
+        anyhow::ensure!(
+            d.get("kv_occupancy").and_then(Json::as_arr).is_some(),
+            "decode kv_occupancy must be an array"
+        );
+    } else {
+        anyhow::ensure!(
+            j.get("decode").is_none(),
+            "only v4 reports may carry a decode section"
+        );
     }
     Ok(())
 }
@@ -573,6 +662,7 @@ mod tests {
             events: 42,
             telemetry: None,
             sim_profile: None,
+            decode: None,
         };
         assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
         assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
@@ -613,6 +703,7 @@ mod tests {
             events: 9,
             telemetry: None,
             sim_profile: None,
+            decode: None,
         };
         assert_eq!(r.schema(), "serving_report/v2");
         r.telemetry = Some(Json::obj(vec![
@@ -640,6 +731,67 @@ mod tests {
             "telemetry survives a serialize/parse round trip"
         );
         assert!(r.render().contains("telemetry: 1 requests attributed"));
+    }
+
+    #[test]
+    fn decode_section_flips_the_schema_to_v4_and_round_trips() {
+        let mut r = ServingReport {
+            encoders: 1,
+            workload: "glue".into(),
+            process: "poisson".into(),
+            offered_seqs_per_s: 1000.0,
+            seed: 7,
+            requests: 2,
+            completed: 2,
+            total_tokens: 10,
+            completed_tokens: 10,
+            makespan_cycles: 5_000,
+            latency: LatencySummary { p50: 10, p95: 10, p99: 10, mean: 10.0, max: 10 },
+            latencies: vec![10, 10],
+            stages: vec![],
+            eq1: None,
+            dropped: 0,
+            retransmits: 0,
+            fault: None,
+            events: 9,
+            telemetry: None,
+            sim_profile: None,
+            decode: Some(DecodeReport {
+                max_new_tokens: 4,
+                generated_tokens: 8,
+                ttft: LatencySummary { p50: 100, p95: 120, p99: 120, mean: 105.0, max: 120 },
+                itl: LatencySummary { p50: 30, p95: 40, p99: 40, mean: 32.0, max: 40 },
+                kv_occupancy: vec![0.5, 0.75],
+            }),
+        };
+        assert_eq!(r.schema(), "serving_report/v4");
+        let j = r.to_json();
+        assert_eq!(j.path("decode.max_new_tokens").unwrap().as_i64().unwrap(), 4);
+        validate_serving_report(&j).unwrap();
+        // serialize/parse round trip preserves the decode section
+        let back = Json::parse(&j.pretty()).unwrap();
+        validate_serving_report(&back).unwrap();
+        assert_eq!(back.path("decode.ttft.p50_cycles").unwrap().as_i64().unwrap(), 100);
+        assert_eq!(back.path("decode.itl.p99_cycles").unwrap().as_i64().unwrap(), 40);
+        assert_eq!(back.path("decode.kv_occupancy").unwrap().as_arr().unwrap().len(), 2);
+        assert!(r.render().contains("decode: 8 tokens generated"));
+        // decode composes with telemetry: still v4, still valid
+        r.telemetry = Some(Json::obj(vec![(
+            "attribution",
+            Json::obj(vec![("totals_cycles", Json::obj(vec![]))]),
+        )]));
+        assert_eq!(r.schema(), "serving_report/v4");
+        validate_serving_report(&r.to_json()).unwrap();
+        // a v2/v3 report smuggling a decode section is rejected
+        let mut smuggled = back.clone();
+        if let Json::Obj(pairs) = &mut smuggled {
+            for (k, v) in pairs.iter_mut() {
+                if k.as_str() == "schema" {
+                    *v = Json::Str("serving_report/v3".into());
+                }
+            }
+        }
+        assert!(validate_serving_report(&smuggled).is_err());
     }
 
     #[test]

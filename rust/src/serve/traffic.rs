@@ -111,6 +111,27 @@ impl LengthDist {
     }
 }
 
+/// Autoregressive decode settings for a serving run.
+///
+/// A decode request is one prefill pass over the prompt followed by
+/// `max_new_tokens` single-row decode passes, each re-entering the
+/// pipeline under its own inference id. Inference ids are blocked per
+/// request: request `r` owns ids `r * block() .. (r + 1) * block()`,
+/// with the prefill at offset 0 and decode step `k` at offset `k`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeConfig {
+    /// Number of single-token decode passes after the prefill. Zero is
+    /// valid and means "pure prefill through the decode plumbing".
+    pub max_new_tokens: u32,
+}
+
+impl DecodeConfig {
+    /// Inference ids consumed per request (prefill + decode steps).
+    pub fn block(&self) -> u32 {
+        1 + self.max_new_tokens
+    }
+}
+
 /// Full specification of one open-loop traffic trace.
 #[derive(Debug, Clone)]
 pub struct TrafficConfig {

@@ -66,6 +66,7 @@ fn ip_generator_emits_full_build() {
         max_seq: 128,
         hidden: 768,
         ffn: 3072,
+        decode: None,
     })
     .cluster;
     let dir = std::env::temp_dir().join(format!("cb_int_{}", std::process::id()));

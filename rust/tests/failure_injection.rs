@@ -12,7 +12,9 @@
 
 use galapagos_llm::eval::testbed::{build_testbed, FailureSchedule, TestbedConfig};
 use galapagos_llm::ibert::kernels::Mode;
-use galapagos_llm::serve::{run_serving, ArrivalProcess, ServeConfig};
+use galapagos_llm::serve::{
+    run_serving, validate_serving_report, ArrivalProcess, DecodeConfig, ServeConfig,
+};
 use galapagos_llm::sim::fifo::Fifo;
 
 #[test]
@@ -218,6 +220,53 @@ fn failover_reports_are_deterministic_across_threads_and_runs() {
         run_serving(&failover_cfg(8)).unwrap().to_json().pretty(),
         golden,
         "failure injection must be thread-count-invariant (phased sharded engine)"
+    );
+}
+
+/// Mid-decode failover: the FPGA dies while feedback passes are in
+/// flight, so the outage can cut a request between its prefill and one
+/// of its token passes. The fault section must own exactly what the
+/// failure cost, the report must still validate as v4, and the whole
+/// thing must stay bit-identical across thread counts.
+#[test]
+fn mid_decode_failover_recovers_and_stays_thread_invariant() {
+    let decode_cfg = |threads: usize| {
+        let mut cfg = failover_cfg(threads);
+        cfg.decode = Some(DecodeConfig { max_new_tokens: 2 });
+        cfg
+    };
+    let r = run_serving(&decode_cfg(1)).unwrap();
+    assert_eq!(r.schema(), "serving_report/v4");
+    validate_serving_report(&r.to_json()).unwrap();
+    let f = r.fault.clone().expect("failure was injected: fault section required");
+    assert!(f.recovered, "the outage lies mid-run: recovery must have executed");
+    assert!(f.moved_kernels > 0, "the failed FPGA's kernels must be re-placed");
+    // every request is accounted for: completed (prefill + ALL token
+    // passes), or charged to the fault
+    assert_eq!(r.completed + f.incomplete_requests, r.requests);
+    assert!(
+        r.completed >= r.requests - 3,
+        "only requests straddling the outage may lose passes ({}/{})",
+        r.completed,
+        r.requests
+    );
+    // completed requests generate exactly max_new_tokens each; a request
+    // cut mid-decode may still have landed its first token pass
+    let d = r.decode.as_ref().expect("v4 report carries the decode section");
+    assert_eq!(d.max_new_tokens, 2);
+    let gen = d.generated_tokens as usize;
+    assert!(
+        gen >= 2 * r.completed && gen <= 2 * r.completed + f.incomplete_requests,
+        "generated_tokens {gen} inconsistent with {} completed / {} incomplete",
+        r.completed,
+        f.incomplete_requests
+    );
+    // bit-identical at 8 threads, fault section and decode metrics included
+    let golden = r.to_json().pretty();
+    assert_eq!(
+        run_serving(&decode_cfg(8)).unwrap().to_json().pretty(),
+        golden,
+        "mid-decode failover must be thread-count-invariant"
     );
 }
 

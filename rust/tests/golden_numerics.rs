@@ -1,8 +1,13 @@
 //! THE bit-exactness contract: rust integer compute vs the JAX reference,
-//! via golden vectors exported by `make artifacts`.
+//! via golden vectors exported by `make artifacts` — plus the decode
+//! contract (incremental KV-cache generation vs full recompute), which
+//! runs artifact-free on synthetic models.
 
-use galapagos_llm::ibert::encoder::{encoder_forward, model_forward, rows_i8, rows_i64};
-use galapagos_llm::ibert::weights::{load_golden, ModelParams};
+use galapagos_llm::ibert::config::ModelConfig;
+use galapagos_llm::ibert::encoder::{
+    decode_generate, decode_generate_recompute, encoder_forward, model_forward, rows_i8, rows_i64,
+};
+use galapagos_llm::ibert::weights::{load_golden, synthetic_input, ModelParams};
 
 fn artifacts() -> std::path::PathBuf {
     let d = ModelParams::default_dir();
@@ -70,6 +75,51 @@ fn encoder_output_matches_goldens_all_lengths() {
         );
         let got = encoder_forward(&p, &x128[..m]).out;
         assert_eq!(got, want, "encoder output mismatch at m={m}");
+    }
+}
+
+/// Tiny deterministic LCG so the sweep below draws geometry, prompt and
+/// generation lengths without any external RNG dependency.
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+    fn in_range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+#[test]
+fn incremental_decode_is_bit_identical_to_full_recompute() {
+    // artifact-free: random synthetic geometries, prompt lengths, and
+    // generation lengths. The incremental KV-cache path must reproduce
+    // the quadratic recompute oracle bit for bit — prefill matrix AND
+    // every generated token row.
+    let mut rng = Lcg(0xDEC0DE_8);
+    for case in 0..8u64 {
+        let heads = 12usize;
+        let head_dim = [4usize, 8, 16][rng.in_range(0, 2) as usize];
+        let hidden = heads * head_dim;
+        let max_seq = 32usize;
+        let cfg = ModelConfig { hidden, heads, ffn: 2 * hidden, max_seq, num_encoders: 2 };
+        let p = ModelParams::synthetic(cfg, 0xABC0 + case);
+        let layers = rng.in_range(1, 3) as usize;
+        let max_new = rng.in_range(0, 6) as usize;
+        let m = rng.in_range(1, (max_seq - max_new) as u64) as usize;
+        let prompt = synthetic_input(hidden, m, 7 * case + 1);
+        let (pre_i, toks_i) = decode_generate(&p, &prompt, layers, max_new);
+        let (pre_r, toks_r) = decode_generate_recompute(&p, &prompt, layers, max_new);
+        assert_eq!(
+            pre_i, pre_r,
+            "case {case}: prefill mismatch (h={hidden} L={layers} m={m} n={max_new})"
+        );
+        assert_eq!(
+            toks_i, toks_r,
+            "case {case}: token mismatch (h={hidden} L={layers} m={m} n={max_new})"
+        );
+        assert_eq!(toks_i.len(), max_new);
     }
 }
 

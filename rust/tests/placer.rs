@@ -74,6 +74,7 @@ fn placed_plan_flows_into_cluster_builder() {
         max_seq: 128,
         hidden: 768,
         ffn: 3072,
+        decode: None,
     };
     let built = validate::to_encoder_build(&sol.graph, &sol.placement, &gp).unwrap();
     built.cluster.validate().unwrap();

@@ -871,6 +871,80 @@ fn prop_parallel_golden_failover_is_byte_identical() {
     });
 }
 
+/// Parallel golden, autoregressive decode: the feedback loop (sink →
+/// gateway virtual → source re-injection, one pass per generated token)
+/// through the sharded engine at threads {2, 4, 8} on random placements
+/// and both granularities must reproduce the sequential v4 report,
+/// Chrome trace, and metrics stream byte for byte — with a coin-flip on
+/// lossy reliable transport, so retransmitted feedback rows are covered
+/// too.
+#[test]
+fn prop_parallel_golden_decode_is_byte_identical() {
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::serve::{run_serving_with_obs, DecodeConfig, ServeConfig};
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 3, ..Default::default() }, "parallel-golden-decode", |g| {
+        let encoders = g.usize_in(1, 3);
+        let requests = g.usize_in(3, 6);
+        let seqs_per_s = 1_000.0 + 4_000.0 * g.f64_unit();
+        let seed = g.rng.next_u64();
+        let max_new = g.usize_in(2, 4) as u32;
+        let lossy = g.bool();
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 4) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        let mk = |threads: usize, gran: ShardGranularity| {
+            let mut cfg = ServeConfig::glue(encoders, requests, seqs_per_s, seed);
+            cfg.decode = Some(DecodeConfig { max_new_tokens: max_new });
+            cfg.placement = Some(slots.clone());
+            cfg.threads = Some(threads);
+            cfg.granularity = Some(gran);
+            if lossy {
+                cfg.drop_probability = 0.02;
+                cfg.reliable = true;
+            }
+            cfg.obs.enabled = true;
+            cfg
+        };
+        let (r1, o1) =
+            run_serving_with_obs(&mk(1, ShardGranularity::PerCluster)).map_err(|e| e.to_string())?;
+        prop_assert!(r1.schema() == "serving_report/v4", "decode run must report v4");
+        if lossy {
+            // reliable transport: every prefill AND every token pass lands
+            prop_assert!(
+                r1.completed == requests,
+                "reliable decode completed {}/{requests} requests",
+                r1.completed
+            );
+        }
+        let variants = [
+            (2usize, ShardGranularity::PerCluster),
+            (4, ShardGranularity::PerFpga),
+            (8, ShardGranularity::PerCluster),
+            (8, ShardGranularity::PerFpga),
+        ];
+        for &(threads, gran) in &variants {
+            let (rn, on) = run_serving_with_obs(&mk(threads, gran)).map_err(|e| e.to_string())?;
+            prop_assert!(
+                rn.to_json().pretty() == r1.to_json().pretty(),
+                "decode serving report diverged at threads={threads} gran={gran:?} \
+                 (n={max_new}, lossy={lossy})"
+            );
+            prop_assert!(
+                on.trace_json == o1.trace_json,
+                "decode Chrome trace diverged at threads={threads} gran={gran:?}"
+            );
+            prop_assert!(
+                on.metrics_jsonl == o1.metrics_jsonl,
+                "decode metrics stream diverged at threads={threads} gran={gran:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Telemetry determinism: the observability artifacts (Chrome trace,
 // metrics stream, v3 report) are part of the bit-identical contract,

@@ -11,8 +11,10 @@ use galapagos_llm::eval::testbed::{
 };
 use galapagos_llm::ibert::kernels::Mode;
 use galapagos_llm::serve::{
-    run_serving, validate_eq1, ArrivalProcess, LengthDist, Request, ServeConfig,
+    run_serving, validate_eq1, validate_serving_report, ArrivalProcess, DecodeConfig, LengthDist,
+    Request, ServeConfig,
 };
+use galapagos_llm::sim::ShardGranularity;
 use galapagos_llm::util::quickcheck::{check_with, Config};
 
 /// The headline claim of this repo's serving subsystem: the paper's
@@ -252,6 +254,76 @@ fn shard_boundary_burst_split_is_cycle_exact() {
     assert_eq!(par, seq, "parallel burst-split diverged from sequential");
     assert_eq!(reference, seq, "coalesced engines diverged from the reference engine");
     assert_eq!(seq.0.len(), 6 * 32, "every row of every request reached the sink");
+}
+
+/// Backward compatibility: serving reports committed by earlier PRs must
+/// keep validating as the schema grows. The fixtures are real v2/v3
+/// report skeletons; the v4-aware validator must accept both untouched.
+#[test]
+fn committed_v2_and_v3_fixture_reports_still_validate() {
+    for (name, text) in [
+        ("v2", include_str!("fixtures/serving_report_v2.json")),
+        ("v3", include_str!("fixtures/serving_report_v3.json")),
+    ] {
+        let j = galapagos_llm::util::json::Json::parse(text)
+            .unwrap_or_else(|e| panic!("{name} fixture unparseable: {e}"));
+        validate_serving_report(&j)
+            .unwrap_or_else(|e| panic!("{name} fixture rejected by the v4 validator: {e}"));
+        assert_eq!(
+            j.get("schema").unwrap().as_str().unwrap(),
+            format!("serving_report/{name}"),
+            "fixture {name} carries the wrong schema tag"
+        );
+    }
+}
+
+/// End-to-end v4 round trip: a real decode run serializes as v4,
+/// validates, parses back, and still validates with the decode metrics
+/// intact.
+#[test]
+fn decode_serving_report_round_trips_as_v4() {
+    let mut cfg = ServeConfig::glue(2, 8, 2_500.0, 21);
+    cfg.decode = Some(DecodeConfig { max_new_tokens: 2 });
+    let r = run_serving(&cfg).unwrap();
+    assert_eq!(r.completed, 8);
+    assert_eq!(r.schema(), "serving_report/v4");
+    let j = r.to_json();
+    validate_serving_report(&j).unwrap();
+    let back = galapagos_llm::util::json::Json::parse(&j.pretty()).unwrap();
+    validate_serving_report(&back).unwrap();
+    assert_eq!(back.path("decode.max_new_tokens").unwrap().as_i64().unwrap(), 2);
+    assert_eq!(back.path("decode.generated_tokens").unwrap().as_i64().unwrap(), 16);
+    assert_eq!(back.path("decode.kv_occupancy").unwrap().as_arr().unwrap().len(), 8);
+    assert!(back.path("decode.ttft.p50_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert!(back.path("decode.itl.p50_cycles").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// The crown-jewel contract extended to generation: decode serving
+/// reports — TTFT/ITL percentiles, KV occupancy, per-request latencies —
+/// are bit-identical at every thread count and shard granularity.
+#[test]
+fn parallel_decode_serving_reports_are_bit_identical() {
+    let mut cfg = ServeConfig::glue(2, 10, 2_500.0, 17);
+    cfg.decode = Some(DecodeConfig { max_new_tokens: 3 });
+    cfg.threads = Some(1);
+    let seq = run_serving(&cfg).unwrap();
+    assert_eq!(seq.completed, 10);
+    for (threads, granularity) in [
+        (2usize, ShardGranularity::PerCluster),
+        (4, ShardGranularity::PerFpga),
+        (8, ShardGranularity::PerCluster),
+        (8, ShardGranularity::PerFpga),
+    ] {
+        cfg.threads = Some(threads);
+        cfg.granularity = Some(granularity);
+        let par = run_serving(&cfg).unwrap();
+        assert_eq!(seq.latencies, par.latencies, "latencies diverged at threads={threads}");
+        assert_eq!(
+            seq.to_json().pretty(),
+            par.to_json().pretty(),
+            "decode serving_report diverged at threads={threads}"
+        );
+    }
 }
 
 #[test]
