@@ -1,0 +1,171 @@
+//! Continuous-batching bench: the throughput–latency Pareto sweep behind
+//! the iteration-level scheduler (PR 9), recorded in BENCH_batching.json
+//! (the perf-smoke CI job uploads the quick run, like BENCH_decode.json
+//! tracks unbatched generation).
+//!
+//!   cargo bench --bench batching            # full matrix
+//!   cargo bench --bench batching -- --quick # CI smoke
+//!   ... -- --check [--tolerance 0.35]       # regression gate
+//!
+//! Operating point: one encoder, short prompts (max_m = 8) and 24
+//! generated tokens per request, so the run is decode-dominated — the
+//! regime where grouping token rows into one weight-stationary pass
+//! pays. The sweep crosses batch caps B in {1, 2, 4, 8, 16} with several
+//! offered rates; every case records simulated tokens/s against request
+//! p99 + TTFT/ITL percentiles (one Pareto point each). B = 1 is the
+//! exact legacy v4 path and serves as the speedup denominator; the
+//! saturated B = 8 point is the `--check`-gated headline. The headline
+//! point also re-runs at threads=1 vs threads=N on both shard
+//! granularities with byte-equality asserted: batching rides the same
+//! conservative sharded engine as everything else.
+
+use galapagos_llm::serve::{
+    run_serving, ArrivalProcess, BatchConfig, DecodeConfig, LengthDist, ServeConfig, ServingReport,
+};
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::json::Json;
+use galapagos_llm::{cycles_to_us, util::cli::Args, FABRIC_CLOCK_HZ};
+
+const MAX_NEW_TOKENS: u32 = 24;
+const WINDOW: u64 = 256;
+
+fn batched_cfg(requests: usize, seed: u64, rate: f64, batch_max: u32) -> ServeConfig {
+    let mut cfg = ServeConfig::glue(1, requests, rate, seed);
+    cfg.traffic.lengths = LengthDist::Glue;
+    cfg.traffic.max_m = 8; // short prompts: decode-dominated serving
+    cfg.decode = Some(DecodeConfig { max_new_tokens: MAX_NEW_TOKENS });
+    if batch_max >= 2 {
+        cfg.batching = Some(BatchConfig { max: batch_max, window: WINDOW });
+    }
+    cfg
+}
+
+fn tokens_per_s(r: &ServingReport) -> f64 {
+    let generated = r.decode.as_ref().map_or(0, |d| d.generated_tokens);
+    generated as f64 * FABRIC_CLOCK_HZ as f64 / r.makespan_cycles.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_batching.json");
+    let seed = args.u64_or("seed", 7)?;
+    let requests = args.usize_or("requests", if quick { 16 } else { 48 })?;
+    let mut b = Bencher::quick();
+
+    // offered load as a fraction of the measured PREFILL capacity; the
+    // 24 token passes per request sit on top, so 1.0 already saturates
+    // the unbatched decoder and 3.0 keeps the batch assembler fed
+    let loads: &[f64] = &[0.25, 1.0, 3.0];
+    let batch_caps: &[u32] = &[1, 2, 4, 8, 16];
+    let (_mean_m, capacity) = batched_cfg(requests, seed, 1.0, 1).capacity_at_mean()?;
+
+    let mut cases: Vec<Json> = Vec::new();
+    let mut headlines: Vec<(String, f64)> = Vec::new();
+    let (mut base_b1_saturated, mut best_b8_saturated) = (None, None);
+    for &load in loads {
+        let rate = capacity * load;
+        let mut unbatched = f64::NAN;
+        for &cap in batch_caps {
+            let cfg = batched_cfg(requests, seed, rate, cap);
+            let name = format!("glue 1enc n{MAX_NEW_TOKENS} load {load:.2} B{cap}");
+            let report = b.once(&name, || run_serving(&cfg))?;
+            anyhow::ensure!(
+                report.completed == report.requests,
+                "{name}: {}/{} requests completed",
+                report.completed,
+                report.requests
+            );
+            let tps = tokens_per_s(&report);
+            if cap == 1 {
+                unbatched = tps;
+            }
+            let d = report.decode.as_ref().expect("decode section");
+            let mean_size = report.batching.as_ref().map_or(1.0, |bb| bb.mean_batch_size());
+            println!(
+                "    {tps:>9.0} tokens/s  p99 {:>8.1} us  TTFT p50 {:>7.1} us  \
+                 ITL p50 {:>6.1} us  mean batch {mean_size:.2}  ({:.2}x vs B1)",
+                cycles_to_us(report.latency.p99),
+                cycles_to_us(d.ttft.p50),
+                cycles_to_us(d.itl.p50),
+                tps / unbatched.max(1e-9),
+            );
+            // one Pareto point: simulated throughput vs latency tails
+            let mut case = match report.to_json() {
+                Json::Obj(kv) => kv,
+                _ => unreachable!("report serializes to an object"),
+            };
+            case.insert(0, ("scenario".into(), Json::Str(name.clone())));
+            case.push(("batch_max".into(), Json::Num(cap as f64)));
+            case.push(("load".into(), Json::Num(load)));
+            case.push(("capacity_seqs_per_s".into(), Json::Num(capacity)));
+            case.push(("tokens_per_s".into(), Json::Num(tps)));
+            case.push(("speedup_vs_b1".into(), Json::Num(tps / unbatched.max(1e-9))));
+            cases.push(Json::Obj(case));
+
+            if load >= 3.0 && cap == 1 {
+                base_b1_saturated = Some(tps);
+            }
+            if load >= 3.0 && cap == 8 {
+                best_b8_saturated = Some((tps, cfg));
+            }
+        }
+    }
+
+    // the headline: saturated B=8 throughput over the same-rate legacy
+    // B=1 run — the amortized weight pass must actually pay
+    let (b8_tps, b8_cfg) =
+        best_b8_saturated.expect("the sweep always runs the saturated B=8 point");
+    let b1_tps = base_b1_saturated.expect("the sweep always runs the saturated B=1 point");
+    let speedup = b8_tps / b1_tps.max(1e-9);
+    println!("\nbatched B=8 speedup at saturation: {speedup:.2}x ({b1_tps:.0} -> {b8_tps:.0} tokens/s)");
+    anyhow::ensure!(
+        speedup >= 1.2,
+        "continuous batching stopped paying: B=8 speedup {speedup:.2}x < 1.2x"
+    );
+    headlines.push(("batched_tokens_per_s_speedup_b8".into(), speedup));
+    headlines.push(("batched_tokens_per_s_b8".into(), b8_tps));
+
+    // bit-identity at the headline point: threads=1 vs threads=N on both
+    // shard cuts (the crown-jewel contract extends to the assembler)
+    let threads = galapagos_llm::util::pool::sim_threads().max(2);
+    let mut seq_cfg = b8_cfg.clone();
+    seq_cfg.threads = Some(1);
+    let seq = run_serving(&seq_cfg)?;
+    for g in [
+        galapagos_llm::sim::ShardGranularity::PerCluster,
+        galapagos_llm::sim::ShardGranularity::PerFpga,
+    ] {
+        let mut par_cfg = b8_cfg.clone();
+        par_cfg.threads = Some(threads);
+        par_cfg.granularity = Some(g);
+        let par = run_serving(&par_cfg)?;
+        anyhow::ensure!(
+            seq.to_json().pretty() == par.to_json().pretty(),
+            "batched report diverged at threads={threads} ({g:?})"
+        );
+    }
+    println!("batched reports identical at 1 vs {threads} threads, both shard granularities");
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_batching/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("max_new_tokens", Json::Num(MAX_NEW_TOKENS as f64)),
+        ("batch_window_cycles", Json::Num(WINDOW as f64)),
+        ("sim_threads", Json::Num(galapagos_llm::util::pool::sim_threads() as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::Obj(headlines.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ]);
+
+    // --check: read the committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}

@@ -225,6 +225,7 @@ impl BuildDescription {
             placement: None,
             schedule: None,
             decode: None,
+            batching: None,
             threads: None,
             granularity: None,
             net: Default::default(),

@@ -79,6 +79,7 @@ mod tests {
             hidden: 768,
             ffn: 3072,
             decode: None,
+            batched: false,
         };
         extract_cluster_info(&build_encoder(&gp).cluster)
     }

@@ -117,6 +117,7 @@ mod tests {
             hidden: 768,
             ffn: 3072,
             decode: None,
+            batched: false,
         })
         .cluster
     }

@@ -39,6 +39,22 @@ use crate::sim::ShardGranularity;
 /// source kernel per chain, ids `SOURCE_BASE..SOURCE_BASE + chains`).
 pub const SOURCE_BASE: u8 = 3;
 
+/// Per-chain arrival phase, in cycles, derived from the run seed
+/// (`--net-seed`): a splitmix64-style finalizer over (seed, chain), the
+/// same construction `link_stream_seed` uses for drop-RNG streams, so
+/// every chain starts its traffic at an independent deterministic offset
+/// instead of the whole fleet emitting in lockstep. Bounded to at most
+/// 16 source intervals so the stagger perturbs arrival alignment without
+/// materially stretching the run.
+#[inline]
+pub fn chain_phase(seed: u64, chain: usize, interval: u64) -> u64 {
+    let mut z = seed ^ (chain as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z % (16 * interval.max(1) + 1)
+}
+
 /// A fleet-scale scenario.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -102,6 +118,10 @@ pub struct StreamStats {
     /// first / last output-row arrival cycles (0 until the first row)
     pub first_arrival: u64,
     pub last_arrival: u64,
+    /// most output rows that ever landed on one cycle — the lockstep
+    /// observable: desynchronized chains keep this near 1, phase-locked
+    /// replicas pile up to `chains`
+    pub coincident_rows_max: u64,
 }
 
 /// The fleet sink: every chain's final encoder output converges here.
@@ -109,11 +129,16 @@ pub struct StreamStats {
 /// keeps only [`StreamStats`] — O(1) memory at any fleet size.
 struct StreamSinkKernel {
     stats: Arc<Mutex<StreamStats>>,
+    /// streaming coincidence tracker: rows arrive in nondecreasing
+    /// cycle order, so a (cycle, count) pair suffices for the max
+    cur_cycle: u64,
+    cur_count: u64,
 }
 
 impl KernelBehavior for StreamSinkKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
         let stats = self.stats.clone();
+        let (cur_cycle, cur_count) = (&mut self.cur_cycle, &mut self.cur_count);
         io.rows(pkt, |io2: &mut KernelIo, _meta, at, payload| {
             io2.consume(payload.bytes());
             let mut s = stats.lock().unwrap();
@@ -122,6 +147,13 @@ impl KernelBehavior for StreamSinkKernel {
             }
             s.rows += 1;
             s.last_arrival = s.last_arrival.max(at);
+            if *cur_count == 0 || at != *cur_cycle {
+                *cur_cycle = at;
+                *cur_count = 1;
+            } else {
+                *cur_count += 1;
+            }
+            s.coincident_rows_max = s.coincident_rows_max.max(*cur_count);
         });
     }
 
@@ -190,6 +222,7 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
                 hidden,
                 ffn,
                 decode: None,
+                batched: false,
             };
             let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
             for (id, b) in built.behaviors {
@@ -226,8 +259,10 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
         Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
     );
     let stats: Arc<Mutex<StreamStats>> = Arc::default();
-    behaviors
-        .insert(sink_global, Box::new(StreamSinkKernel { stats: stats.clone() }));
+    behaviors.insert(
+        sink_global,
+        Box::new(StreamSinkKernel { stats: stats.clone(), cur_cycle: 0, cur_count: 0 }),
+    );
     for chain in 0..cfg.chains {
         let sid = SOURCE_BASE + chain as u8;
         let first_cluster = (chain * cfg.encoders_per_chain) as u8;
@@ -239,15 +274,20 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
             dests: vec![GlobalKernelId::new(first_cluster, 0)],
             fifo_bytes: 4096,
         });
+        // desynchronize the replicas: each chain's traffic starts at a
+        // seed-derived phase so the fleet doesn't emit in lockstep
         behaviors.insert(
             GlobalKernelId::new(EVAL_CLUSTER, sid),
-            Box::new(SourceKernel::new(
-                Out::to(GlobalKernelId::new(first_cluster, 0)),
-                cfg.m as u32,
-                cfg.inferences,
-                cfg.interval,
-                None,
-            )),
+            Box::new(
+                SourceKernel::new(
+                    Out::to(GlobalKernelId::new(first_cluster, 0)),
+                    cfg.m as u32,
+                    cfg.inferences,
+                    cfg.interval,
+                    None,
+                )
+                .with_start_offset(chain_phase(cfg.net.seed, chain, cfg.interval)),
+            ),
         );
     }
     clusters.push(ClusterSpec { id: EVAL_CLUSTER, kernels });
@@ -300,6 +340,8 @@ pub struct FleetReport {
     pub expected_rows: u64,
     pub first_arrival: u64,
     pub last_arrival: u64,
+    /// most output rows that landed on one cycle (lockstep observable)
+    pub coincident_rows_max: u64,
     pub end_cycle: u64,
     pub events: u64,
     pub dropped: u64,
@@ -334,6 +376,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<(FleetReport, FleetSim)> {
         expected_rows: fleet.expected_rows,
         first_arrival: s.first_arrival,
         last_arrival: s.last_arrival,
+        coincident_rows_max: s.coincident_rows_max,
         end_cycle: fleet.sim.time,
         events: fleet.sim.trace.events_processed,
         dropped: fleet.sim.fabric.stats.dropped,
@@ -394,6 +437,87 @@ mod tests {
         assert!(seq.0.completed(), "reliable transport completes every row");
         for threads in [2, 8] {
             assert_eq!(run(threads), seq, "fleet run diverged at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chain_phases_are_distinct_and_deterministic() {
+        // the arrival stagger is a pure function of (seed, chain,
+        // interval): pin the default-seed values so a silent change to
+        // the mix shows up as a diff, not as quietly different fleets
+        let phases: Vec<u64> = (0..8).map(|c| chain_phase(0, c, 12)).collect();
+        assert_eq!(phases, [37, 9, 70, 89, 105, 98, 160, 94]);
+        for seed in [0, 7, 11] {
+            let ph: Vec<u64> = (0..8).map(|c| chain_phase(seed, c, 12)).collect();
+            let mut uniq = ph.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), ph.len(), "seed {seed}: phases collide: {ph:?}");
+            assert!(ph.iter().all(|&p| p <= 16 * 12), "seed {seed}: phase out of range");
+            // chain c's phase does not depend on how many chains exist
+            assert_eq!(ph[2], chain_phase(seed, 2, 12));
+        }
+    }
+
+    #[test]
+    fn chains_do_not_arrive_in_lockstep() {
+        // single switch so every chain head sits at the same hop
+        // distance from the shared evaluation FPGA: any spread in the
+        // chains' first input arrivals is the sources' doing. Lockstep
+        // sources (the pre-desync behavior) would collapse that spread
+        // to the shared source NIC's serialization envelope — one row
+        // time (interval = 12 cycles at line rate) per chain, i.e. at
+        // most 36 cycles across 4 chains — while the seed-0 phases
+        // [37, 9, 70, 89] guarantee at least an 80-cycle spread.
+        let mut cfg = tiny();
+        cfg.chains = 4;
+        cfg.fpgas_per_switch = 32;
+        let (r, fleet) = run_fleet(&cfg).unwrap();
+        assert!(r.completed());
+        let first_rx: Vec<u64> = (0..cfg.chains)
+            .map(|chain| {
+                let gw = GlobalKernelId::new((chain * cfg.encoders_per_chain) as u8, 0);
+                fleet.sim.trace.kernel(gw).and_then(|s| s.first_rx).expect("chain head fed")
+            })
+            .collect();
+        let mut uniq = first_rx.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), cfg.chains, "chain inputs coincide: {first_rx:?}");
+        let spread = uniq.last().unwrap() - uniq[0];
+        assert!(
+            spread > 12 * cfg.chains as u64,
+            "chains still near-lockstep: first arrivals {first_rx:?} (spread {spread})"
+        );
+        // ...and the replicas' outputs no longer pile onto shared cycles
+        assert!(r.coincident_rows_max >= 1);
+        assert!(
+            r.coincident_rows_max < cfg.chains as u64,
+            "sink saw {} coincident rows from {} chains",
+            r.coincident_rows_max,
+            cfg.chains
+        );
+    }
+
+    #[test]
+    fn desynchronized_fleet_is_shard_plan_invariant() {
+        // the stagger comes from per-chain seeded offsets, not from any
+        // cross-shard draw order — so the report (including the new
+        // coincidence stat) must not move with the shard cut or threads
+        let run = |threads: usize, g: ShardGranularity| {
+            let mut cfg = tiny();
+            cfg.chains = 3;
+            cfg.net.seed = 7;
+            cfg.threads = Some(threads);
+            cfg.granularity = Some(g);
+            run_fleet(&cfg).unwrap().0
+        };
+        let base = run(1, ShardGranularity::PerCluster);
+        assert!(base.completed());
+        for threads in [1, 8] {
+            for g in [ShardGranularity::PerCluster, ShardGranularity::PerFpga] {
+                assert_eq!(run(threads, g), base, "diverged at threads={threads} ({g:?})");
+            }
         }
     }
 

@@ -175,6 +175,7 @@ pub fn fig15() -> Result<Table> {
         hidden: 768,
         ffn: 3072,
         decode: None,
+        batched: false,
     })
     .cluster;
     let mut t = Table::new(

@@ -111,6 +111,14 @@ pub struct TestbedConfig {
     /// gateway, and inference ids advance in blocks of
     /// `1 + max_new_tokens` per request.
     pub decode: Option<crate::serve::traffic::DecodeConfig>,
+    /// continuous (iteration-level) batching (requires `decode`): the
+    /// eval source becomes the Orca-style batch assembler — at most
+    /// `max` sequences hold KV slots, fed-back tokens group into
+    /// iteration batches bounded by `window` cycles, and the encoder
+    /// linears are built batched (weight-pass + marginal row pricing).
+    /// A disabled config (`max <= 1`) is identical to `None`: the run
+    /// takes the exact legacy decode path, byte for byte.
+    pub batching: Option<crate::serve::traffic::BatchConfig>,
     /// worker threads for the sharded parallel DES (None = the process
     /// default: `--threads` / `PALLAS_SIM_THREADS` / auto; 1 = exact
     /// sequential engine). Results are thread-count-invariant by
@@ -145,6 +153,7 @@ impl TestbedConfig {
             placement: None,
             schedule: None,
             decode: None,
+            batching: None,
             threads: None,
             granularity: None,
             net: NetworkConfig::default(),
@@ -184,6 +193,9 @@ pub struct EncoderTestbed {
     pub spec: PlatformSpec,
     /// the recovery `build_testbed` planned for `TestbedConfig::fail`
     pub recovery: Option<PlannedRecovery>,
+    /// batching telemetry recorded by the batch assembler, when
+    /// `TestbedConfig::batching` is enabled
+    pub batch_log: Option<Arc<Mutex<crate::serve::source::BatchLog>>>,
 }
 
 /// Assemble the platform: `encoders` chained encoder clusters + the
@@ -205,6 +217,12 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
     anyhow::ensure!(
         cfg.decode.is_none() || cfg.schedule.is_some(),
         "decode mode needs a request schedule (each request is one prefill + N token passes)"
+    );
+    // a disabled batch config (max <= 1) is the legacy decode path
+    let batching = cfg.batching.filter(|b| b.enabled());
+    anyhow::ensure!(
+        batching.is_none() || cfg.decode.is_some(),
+        "continuous batching needs decode mode (iteration batches are made of decode tokens)"
     );
     if let Some(sched) = &cfg.schedule {
         let longest = sched.iter().map(|r| r.m as usize).max().unwrap_or(0);
@@ -277,6 +295,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
             hidden,
             ffn,
             decode: cfg.decode.map(|d| d.block()),
+            batched: batching.is_some(),
         };
         let built = crate::ibert::graph::build_encoder_placed(&gp, &slots);
         for (id, b) in built.behaviors {
@@ -340,7 +359,22 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         GlobalKernelId::new(EVAL_CLUSTER, 0),
         Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals })),
     );
+    let mut batch_log = None;
     let source: Box<dyn KernelBehavior> = match (&cfg.schedule, cfg.decode) {
+        (Some(sched), Some(dec)) if batching.is_some() => {
+            let log = Arc::new(Mutex::new(crate::serve::source::BatchLog::default()));
+            batch_log = Some(log.clone());
+            Box::new(crate::serve::source::BatchSourceKernel::new(
+                Out::to(GlobalKernelId::new(0, 0)),
+                sched.clone(),
+                cfg.interval,
+                cfg.input.clone(),
+                hidden,
+                dec.block(),
+                batching.unwrap(),
+                log,
+            ))
+        }
         (Some(sched), Some(dec)) => Box::new(crate::serve::source::DecodeSourceKernel::new(
             Out::to(GlobalKernelId::new(0, 0)),
             sched.clone(),
@@ -426,7 +460,7 @@ pub fn build_testbed(cfg: &TestbedConfig) -> Result<EncoderTestbed> {
         )?),
     };
 
-    Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec, recovery })
+    Ok(EncoderTestbed { sim, sink: sink_data, sink_id: sink_global, spec, recovery, batch_log })
 }
 
 /// Turn a [`FailureSchedule`] into an engine [`crate::sim::engine::FailurePlan`]:
@@ -467,7 +501,13 @@ fn plan_failure(
         max_seq,
         ffn_split: 1,
     };
-    let graph = placer::KernelGraph::encoder(shape, cfg.pe)?;
+    // recovery must re-place against the run's real budgets: decode
+    // pins KV caches in BRAM, and continuous batching multiplies them
+    // by the admission slot count
+    let kv_slots = cfg.batching.filter(|b| b.enabled()).map_or(1, |b| b.max);
+    let graph = placer::KernelGraph::encoder(shape, cfg.pe)?
+        .with_decode(cfg.decode.is_some())
+        .with_kv_slots(kv_slots);
     anyhow::ensure!(
         graph.n_kernels() == slots.len(),
         "failure recovery needs a paper-shaped encoder graph ({} kernels, placement has {})",

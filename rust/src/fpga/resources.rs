@@ -148,6 +148,16 @@ pub fn kv_cache_bram18(bytes: u64) -> u64 {
     bytes.div_ceil(BRAM18_BYTES).max(1)
 }
 
+/// BRAM18 blocks for a continuously batched decoder holding `slots`
+/// concurrent sequences. Each slot is an independently addressed
+/// block-granular region — rows of different requests land in the same
+/// pipeline pass, so slots cannot pack into shared blocks — making the
+/// charge `slots` times the single-sequence cost. `slots <= 1` reduces
+/// to [`kv_cache_bram18`].
+pub fn batched_kv_cache_bram18(bytes: u64, slots: u64) -> u64 {
+    kv_cache_bram18(bytes) * slots.max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +170,18 @@ mod tests {
         assert_eq!(kv_cache_bram18(2305), 2);
         // the paper build point: one head's K cache, 128 x 64 bytes
         assert_eq!(kv_cache_bram18(128 * 64), 4);
+    }
+
+    #[test]
+    fn batched_kv_slots_multiply_block_granular() {
+        // degenerate slot counts reduce to the single-sequence charge
+        assert_eq!(batched_kv_cache_bram18(128 * 64, 0), kv_cache_bram18(128 * 64));
+        assert_eq!(batched_kv_cache_bram18(128 * 64, 1), kv_cache_bram18(128 * 64));
+        // 8 batch slots of the paper head cache: 8 independent regions,
+        // each individually block-granular (no packing across slots)
+        assert_eq!(batched_kv_cache_bram18(128 * 64, 8), 32);
+        // a sub-block cache still costs one full block PER slot
+        assert_eq!(batched_kv_cache_bram18(100, 4), 4);
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub struct EncoderGraphParams {
     /// (per-request KV caches, causal masking, variable trip counts);
     /// `block` = inference ids per request (`DecodeConfig::block`).
     pub decode: Option<u32>,
+    /// Continuous-batching build: the six linear kernels price
+    /// single-token rows with the weight-stationary split (full weight
+    /// pass only when the token opens a streak, marginal cost inside
+    /// one). Requires `decode` — only decode runs emit token rows.
+    pub batched: bool,
 }
 
 /// A built encoder: the validated cluster spec plus kernel behaviors.
@@ -194,19 +199,16 @@ pub fn build_encoder_placed(gp: &EncoderGraphParams, slots: &[usize]) -> Encoder
     );
     behaviors.insert(GATEWAY, Box::new(Gateway::new(GatewayConfig { cluster: c, virtuals })));
 
+    // all six weight-stationary linears share the batched-build switch
+    let lin = |which: LinearWhich, out: Out| {
+        let kern = LinearKernel::new(which, out, gp.mode.clone(), &gp.pe);
+        if gp.batched { kern.with_batched(&gp.pe) } else { kern }
+    };
+
     // layer 0: Q/K/V linears
-    behaviors.insert(
-        LINEAR_Q,
-        Box::new(LinearKernel::new(LinearWhich::Q, Out::to(k(SCATTER_Q)), gp.mode.clone(), &gp.pe)),
-    );
-    behaviors.insert(
-        LINEAR_K,
-        Box::new(LinearKernel::new(LinearWhich::K, Out::to(k(SCATTER_K)), gp.mode.clone(), &gp.pe)),
-    );
-    behaviors.insert(
-        LINEAR_V,
-        Box::new(LinearKernel::new(LinearWhich::V, Out::to(k(SCATTER_V)), gp.mode.clone(), &gp.pe)),
-    );
+    behaviors.insert(LINEAR_Q, Box::new(lin(LinearWhich::Q, Out::to(k(SCATTER_Q)))));
+    behaviors.insert(LINEAR_K, Box::new(lin(LinearWhich::K, Out::to(k(SCATTER_K)))));
+    behaviors.insert(LINEAR_V, Box::new(lin(LinearWhich::V, Out::to(k(SCATTER_V)))));
 
     // head-split scatters
     behaviors.insert(
@@ -264,15 +266,7 @@ pub fn build_encoder_placed(gp: &EncoderGraphParams, slots: &[usize]) -> Encoder
     );
 
     // layer 4
-    behaviors.insert(
-        PROJ,
-        Box::new(LinearKernel::new(
-            LinearWhich::Proj,
-            Out::tagged(k(LN1), 0),
-            gp.mode.clone(),
-            &gp.pe,
-        )),
-    );
+    behaviors.insert(PROJ, Box::new(lin(LinearWhich::Proj, Out::tagged(k(LN1), 0))));
     behaviors.insert(
         LN1,
         Box::new(LayerNormKernel::new(LnWhich::Ln1, Out::to(k(BCAST_LN1)), gp.mode.clone(), gp.pe)),
@@ -285,24 +279,8 @@ pub fn build_encoder_placed(gp: &EncoderGraphParams, slots: &[usize]) -> Encoder
     );
 
     // layer 5
-    behaviors.insert(
-        FFN1,
-        Box::new(LinearKernel::new(
-            LinearWhich::Ffn1,
-            Out::tagged(k(FFN2), 0),
-            gp.mode.clone(),
-            &gp.pe,
-        )),
-    );
-    behaviors.insert(
-        FFN2,
-        Box::new(LinearKernel::new(
-            LinearWhich::Ffn2,
-            Out::tagged(k(LN2), 0),
-            gp.mode.clone(),
-            &gp.pe,
-        )),
-    );
+    behaviors.insert(FFN1, Box::new(lin(LinearWhich::Ffn1, Out::tagged(k(FFN2), 0))));
+    behaviors.insert(FFN2, Box::new(lin(LinearWhich::Ffn2, Out::tagged(k(LN2), 0))));
     behaviors.insert(
         LN2,
         Box::new(LayerNormKernel::new(LnWhich::Ln2, gp.out_dst, gp.mode.clone(), gp.pe)),
@@ -367,6 +345,7 @@ mod tests {
             hidden: 768,
             ffn: 3072,
             decode: None,
+            batched: false,
         }
     }
 
@@ -375,6 +354,15 @@ mod tests {
         let gp = EncoderGraphParams { decode: Some(5), ..params() };
         let b = build_encoder(&gp);
         assert_eq!(b.cluster.kernels.len(), 38);
+        b.cluster.validate().unwrap();
+    }
+
+    #[test]
+    fn batched_graph_builds_with_batched_linears() {
+        let gp = EncoderGraphParams { decode: Some(5), batched: true, ..params() };
+        let b = build_encoder(&gp);
+        assert_eq!(b.cluster.kernels.len(), 38);
+        assert_eq!(b.behaviors.len(), 38);
         b.cluster.validate().unwrap();
     }
 

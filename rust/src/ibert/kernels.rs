@@ -207,6 +207,18 @@ pub struct LinearKernel {
     pub which: LinearWhich,
     pub mode: Mode,
     pub row_cycles: u64,
+    /// `Some((weight_pass, marginal))` = continuous-batching mode. A
+    /// single-token row (`meta.rows == 1`) that arrives while the weight
+    /// stream is still live — i.e. before the previous output row has
+    /// finished emitting — rides the stream at the dual-int8 `marginal`
+    /// rate; a token row that finds the kernel idle restarts the stream
+    /// and pays `weight_pass + marginal`. Prefill rows (`rows > 1`) keep
+    /// the calibrated `row_cycles` either way: the paper's I = 767
+    /// anchor is a prefill measurement. The decision is a pure function
+    /// of deterministic event times (row arrival vs the pacer's last
+    /// emission), so batched runs inherit the engine's thread- and
+    /// shard-invariance unchanged.
+    batched: Option<(u64, u64)>,
     out: OutStream,
 }
 
@@ -223,14 +235,41 @@ impl LinearKernel {
             LinearWhich::Ffn1 => pe.ffn1_row_cycles(h, f),
             LinearWhich::Ffn2 => pe.ffn2_row_cycles(h, f),
         };
-        LinearKernel { which, mode, row_cycles, out: OutStream::new(out, pe.pipe_fill) }
+        LinearKernel {
+            which,
+            mode,
+            row_cycles,
+            batched: None,
+            out: OutStream::new(out, pe.pipe_fill),
+        }
+    }
+
+    /// Switch into continuous-batching (weight-stationary) timing: token
+    /// rows amortize the weight pass across an emission streak.
+    pub fn with_batched(mut self, pe: &PeConfig) -> Self {
+        let (h, f) = match self.mode.params() {
+            Some(p) => (p.cfg.hidden as u64, p.cfg.ffn as u64),
+            None => (768, 3072),
+        };
+        let (k, n, macs) = match self.which {
+            LinearWhich::Q | LinearWhich::K | LinearWhich::V | LinearWhich::Proj => {
+                (h, h, pe.linear_macs)
+            }
+            LinearWhich::Ffn1 => (h, f, pe.ffn_macs),
+            LinearWhich::Ffn2 => (f, h, pe.ffn_macs),
+        };
+        self.batched = Some((
+            pe.linear_weight_pass_cycles(k, n, macs),
+            pe.batched_linear_row_cycles(k, n, macs),
+        ));
+        self
     }
 }
 
 impl KernelBehavior for LinearKernel {
     fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
-        let LinearKernel { which, mode, row_cycles, out } = self;
-        let (which, row_cycles) = (*which, *row_cycles);
+        let LinearKernel { which, mode, row_cycles, batched, out } = self;
+        let (which, row_cycles, batched) = (*which, *row_cycles, *batched);
         let dims = match mode.params() {
             Some(p) => (p.cfg.hidden, p.cfg.ffn),
             None => (768, 3072),
@@ -242,7 +281,17 @@ impl KernelBehavior for LinearKernel {
                 (Some(p), Some(x)) => linear_compute_row(which, p, &x),
                 _ => Payload::Timing(linear_out_bytes(which, dims.0, dims.1)),
             };
-            out.push(at, row_cycles, MsgMeta { stream, ..meta }, pl);
+            let ii = match batched {
+                Some((weight_pass, marginal)) if meta.rows == 1 => {
+                    if out.pacer.last_emit.is_some_and(|le| at <= le) {
+                        marginal
+                    } else {
+                        weight_pass + marginal
+                    }
+                }
+                _ => row_cycles,
+            };
+            out.push(at, ii, MsgMeta { stream, ..meta }, pl);
         });
         self.out.pump(io);
     }
@@ -886,6 +935,9 @@ pub struct SourceKernel {
     pub data: Option<Arc<Vec<Vec<i8>>>>,
     /// row size for Timing payloads (default 768 = one hidden row)
     pub row_bytes: usize,
+    /// cycles to hold before the first row (per-chain arrival phase in
+    /// fleet scenarios — replicated chains must not emit in lockstep)
+    start_offset: u64,
     sent_inf: u32,
     sent_row: u32,
 }
@@ -900,6 +952,7 @@ impl SourceKernel {
             gap: 0,
             data,
             row_bytes: 768,
+            start_offset: 0,
             sent_inf: 0,
             sent_row: 0,
         }
@@ -907,6 +960,12 @@ impl SourceKernel {
 
     pub fn with_row_bytes(mut self, bytes: usize) -> Self {
         self.row_bytes = bytes;
+        self
+    }
+
+    /// Delay the first emitted row by `cycles` (arrival phase).
+    pub fn with_start_offset(mut self, cycles: u64) -> Self {
+        self.start_offset = cycles;
         self
     }
 }
@@ -918,6 +977,12 @@ impl KernelBehavior for SourceKernel {
 
     fn on_wake(&mut self, _tag: u64, io: &mut KernelIo) {
         if self.sent_inf >= self.inferences {
+            return;
+        }
+        if self.start_offset > 0 {
+            let hold = self.start_offset;
+            self.start_offset = 0;
+            io.wake_in(hold, 1);
             return;
         }
         let payload = match &self.data {
@@ -1066,6 +1131,33 @@ mod tests {
         // causal attended lengths: prefill rows see 1 then 2 positions,
         // the decode step sees all 3
         assert_eq!(seen, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn batched_linear_costs_derive_from_the_pe_model() {
+        use crate::sim::packet::GlobalKernelId;
+        let pe = PeConfig::default();
+        let mk = |which| {
+            LinearKernel::new(which, Out::tagged(GlobalKernelId::new(0, 9), 0), Mode::Timing, &pe)
+                .with_batched(&pe)
+        };
+        // every linear stage: 768-cycle weight pass, 384-cycle marginal
+        for which in [
+            LinearWhich::Q,
+            LinearWhich::K,
+            LinearWhich::V,
+            LinearWhich::Proj,
+            LinearWhich::Ffn1,
+            LinearWhich::Ffn2,
+        ] {
+            let k = mk(which);
+            assert_eq!(k.batched, Some((768, 384)), "{which:?}");
+            assert_eq!(k.row_cycles, 768, "{which:?}: prefill rows keep the calibrated ii");
+        }
+        // without the builder the kernel stays on the legacy path
+        let plain =
+            LinearKernel::new(LinearWhich::Q, Out::tagged(GlobalKernelId::new(0, 9), 0), Mode::Timing, &pe);
+        assert_eq!(plain.batched, None);
     }
 
     #[test]

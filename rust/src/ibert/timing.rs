@@ -86,6 +86,34 @@ impl PeConfig {
         2 * hidden.div_ceil(self.ln_simd) + 45
     }
 
+    // ---- continuous batching (weight-stationary token passes) ----
+    //
+    // A single-token pass through a K x N linear streams the full weight
+    // matrix past the MAC array — the same K*N/macs cycles as a prefill
+    // row, but now the stream serves only one activation row. When the
+    // batch assembler releases several token rows back to back, the
+    // weight stream stays live and each additional row rides it at the
+    // dual-int8 DSP packing rate (two activation rows share one streamed
+    // weight beat on the XCZU19EG), halving the per-row marginal cost.
+    // A batch of B token rows therefore costs
+    //   weight_pass + B * marginal  =  K*N/macs + B * K*N/(2*macs)
+    // at the kernel, versus B * K*N/macs unbatched. Prefill rows
+    // (rows > 1 per pass) keep the calibrated full-row cost — the
+    // paper's measured I = 767 +- 1 anchor is a prefill measurement.
+
+    /// Fixed per-pass cost of streaming a K x N weight matrix once
+    /// (charged when a token row starts a fresh weight stream).
+    pub fn linear_weight_pass_cycles(&self, k: u64, n: u64, macs: u64) -> u64 {
+        self.linear_row_cycles(k, n, macs)
+    }
+
+    /// Marginal per-row cost of a token row riding an already-live
+    /// weight stream: dual-int8 packing shares each weight beat across
+    /// two activation rows.
+    pub fn batched_linear_row_cycles(&self, k: u64, n: u64, macs: u64) -> u64 {
+        (k * n).div_ceil(macs * 2)
+    }
+
     // ---- decode (variable trip count) ----
     //
     // Under the causal mask a query at global position p attends
@@ -211,6 +239,23 @@ mod tests {
             pe.attn_row_cycles(128, 64) + pe.softmax_row_cycles(128)
         );
         assert_eq!(pe.smm_decode_row_cycles(128, 64), pe.smm_row_cycles(128, 64));
+    }
+
+    #[test]
+    fn batched_token_rows_amortize_the_weight_pass() {
+        let pe = PeConfig::default();
+        // 768x768 linears: the weight pass is the calibrated 768-cycle
+        // row time; a token row riding the live stream costs half
+        assert_eq!(pe.linear_weight_pass_cycles(768, 768, pe.linear_macs), 768);
+        assert_eq!(pe.batched_linear_row_cycles(768, 768, pe.linear_macs), 384);
+        // FFN kernels amortize identically (same ii, wider matrices)
+        assert_eq!(pe.batched_linear_row_cycles(768, 3072, pe.ffn_macs), 384);
+        assert_eq!(pe.batched_linear_row_cycles(3072, 768, pe.ffn_macs), 384);
+        // a batch of 8 token rows beats 8 independent single-row passes
+        let batched = pe.linear_weight_pass_cycles(768, 768, 768)
+            + 8 * pe.batched_linear_row_cycles(768, 768, 768);
+        assert_eq!(batched, 3840);
+        assert!(batched * 16 == 8 * 768 * 10, "1.6x at B=8: {batched} vs {}", 8 * 768);
     }
 
     #[test]

@@ -97,6 +97,12 @@ COMMANDS:
             the same pipeline through the eval-gateway feedback edge; the
             report upgrades to serving_report/v4 with time-to-first-token
             and inter-token-latency percentiles + KV-cache occupancy)
+            [--batch-max 8 [--batch-window 256]]   (continuous batching:
+            ready decode tokens from different requests group into one
+            weight-stationary pass of up to batch-max rows, waiting at most
+            batch-window cycles for batch-mates; needs --decode, upgrades
+            the report to serving_report/v5 with the batching section;
+            --batch-max 1 is exactly the unbatched v4 run)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
 
@@ -775,6 +781,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         wall.as_secs_f64() * 1e3,
         r.events as f64 / wall.as_secs_f64() / 1e6
     );
+    println!(
+        "arrivals: first {}  last {}  max coincident rows/cycle {} \
+         (chain phases derived from net-seed {})",
+        r.first_arrival, r.last_arrival, r.coincident_rows_max, cfg.net.seed
+    );
     if r.dropped > 0 || r.retransmits > 0 {
         println!(
             "transport: {} copies dropped, {} retransmitted ({})",
@@ -809,6 +820,7 @@ fn cmd_build(args: &Args) -> Result<()> {
             hidden: d.hidden,
             ffn: d.ffn,
             decode: None,
+            batched: false,
         });
         let dir = format!("{out}/cluster_{e}");
         let n = ip_generator::generate(
@@ -883,6 +895,16 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         cfg.decode =
             Some(DecodeConfig { max_new_tokens: args.u64_or("max-new-tokens", 8)? as u32 });
     }
+    if args.has("batch-max") || args.has("batch-window") {
+        anyhow::ensure!(
+            cfg.decode.is_some(),
+            "--batch-max/--batch-window need --decode (iteration batches are decode tokens)"
+        );
+        cfg.batching = Some(galapagos_llm::serve::BatchConfig {
+            max: args.u64_or("batch-max", 8)? as u32,
+            window: args.u64_or("batch-window", 256)?,
+        });
+    }
 
     if args.bool_or("place", false)? {
         // per-encoder placement from the PR 1 placer (possibly over the
@@ -940,6 +962,12 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         println!(
             "decode: prefill + {} token pass(es) per request (KV caches charged at the heads)",
             d.max_new_tokens
+        );
+    }
+    if let Some(b) = cfg.batching.filter(|b| b.enabled()) {
+        println!(
+            "continuous batching: up to {} sequences per iteration, {}-cycle assembly window",
+            b.max, b.window
         );
     }
 

@@ -34,7 +34,9 @@ pub use search::{place, PlacementSolution, SearchParams};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::fpga::resources::{kv_cache_bram18, Device, ResourceBudget, ResourceUsage};
+use crate::fpga::resources::{
+    batched_kv_cache_bram18, kv_cache_bram18, Device, ResourceBudget, ResourceUsage,
+};
 use crate::ibert::timing::PeConfig;
 use crate::util::json::Json;
 
@@ -266,6 +268,10 @@ pub struct KernelGraph {
     /// decode mode: the attention/SMM head kernels keep per-head KV
     /// caches resident, charged against BRAM on top of the FIFO model
     decode: bool,
+    /// continuous-batching KV slots: in decode mode each head holds
+    /// `kv_slots` independent cache regions (one per concurrently
+    /// admitted sequence), multiplying the BRAM charge
+    kv_slots: u32,
 }
 
 impl KernelGraph {
@@ -395,7 +401,17 @@ impl KernelGraph {
         }
         ensure!(topo.len() == n, "encoder graph has a cycle");
 
-        Ok(KernelGraph { shape, pe, nodes, edges, order, in_edge_idx, topo, decode: false })
+        Ok(KernelGraph {
+            shape,
+            pe,
+            nodes,
+            edges,
+            order,
+            in_edge_idx,
+            topo,
+            decode: false,
+            kv_slots: 1,
+        })
     }
 
     /// Switch the graph into decode mode: `usage` additionally charges
@@ -407,6 +423,19 @@ impl KernelGraph {
 
     pub fn is_decode(&self) -> bool {
         self.decode
+    }
+
+    /// Size the decode KV caches for `slots` concurrently batched
+    /// sequences (continuous batching admits up to `--batch-max` at
+    /// once; each needs its own cache region). No effect outside decode
+    /// mode; `slots <= 1` is the single-sequence charge.
+    pub fn with_kv_slots(mut self, slots: u32) -> KernelGraph {
+        self.kv_slots = slots.max(1);
+        self
+    }
+
+    pub fn kv_slots(&self) -> u32 {
+        self.kv_slots
     }
 
     pub fn n_kernels(&self) -> usize {
@@ -460,7 +489,10 @@ impl KernelGraph {
         if self.decode {
             let kv = role_kv_bytes(role, &self.shape);
             if kv > 0 {
-                u += ResourceUsage { bram18: kv_cache_bram18(kv as u64), ..Default::default() };
+                u += ResourceUsage {
+                    bram18: batched_kv_cache_bram18(kv as u64, self.kv_slots as u64),
+                    ..Default::default()
+                };
             }
         }
         u
@@ -930,6 +962,38 @@ mod tests {
         // the fpga-layer BRAM18 geometry must not drift from the sim's
         assert_eq!(kv_cache_bram18(crate::sim::fifo::BRAM18_BYTES as u64), 1);
         assert_eq!(kv_cache_bram18(crate::sim::fifo::BRAM18_BYTES as u64 + 1), 2);
+    }
+
+    #[test]
+    fn batching_slots_multiply_the_kv_charge() {
+        let shape = ModelShape::ibert_base();
+        let g = KernelGraph::encoder(shape, PeConfig::default()).unwrap();
+        let gd = g.clone().with_decode(true);
+        let gb = g.clone().with_decode(true).with_kv_slots(8);
+        assert_eq!(gb.kv_slots(), 8);
+        let ids = shape.ids();
+        let dev = Device::Xczu19eg;
+        let one = kv_cache_bram18(role_kv_bytes(KernelRole::AttnHead(0), &shape) as u64);
+        for h in 0..shape.heads as u8 {
+            for base in [ids.attn_base, ids.smm_base] {
+                let plain = gd.usage(base + h, dev);
+                let slotted = gb.usage(base + h, dev);
+                assert_eq!(slotted.bram18, plain.bram18 + 7 * one, "8 slots = 8x the region");
+                assert_eq!(
+                    (slotted.lut, slotted.ff, slotted.dsp),
+                    (plain.lut, plain.ff, plain.dsp)
+                );
+            }
+        }
+        // cache-free kernels never pay for slots, and slots without
+        // decode are inert
+        assert_eq!(gd.usage(ids.ln1, dev), gb.usage(ids.ln1, dev));
+        let inert = g.clone().with_kv_slots(8);
+        assert_eq!(inert.usage(ids.attn_base, dev), g.usage(ids.attn_base, dev));
+        // the paper build still fits a device with 8-way batching: 24
+        // head kernels x 4 BRAM x 8 slots is well under the XCZU19EG
+        let per_head = gb.usage(ids.attn_base, dev);
+        assert!(per_head.bram18 < dev.budget().bram18 / 4);
     }
 
     #[test]

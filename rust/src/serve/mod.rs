@@ -40,10 +40,10 @@ use crate::sim::packet::GlobalKernelId;
 use crate::FABRIC_CLOCK_HZ;
 
 pub use stats::{
-    validate_serving_report, DecodeReport, Eq1Check, FaultReport, LatencySummary, ServingReport,
-    StageReport,
+    validate_serving_report, BatchingReport, DecodeReport, Eq1Check, FaultReport, LatencySummary,
+    ServingReport, StageReport,
 };
-pub use traffic::{ArrivalProcess, DecodeConfig, LengthDist, Request, TrafficConfig};
+pub use traffic::{ArrivalProcess, BatchConfig, DecodeConfig, LengthDist, Request, TrafficConfig};
 
 /// One serving scenario: a pipeline shape plus an open-loop traffic trace.
 #[derive(Clone)]
@@ -88,6 +88,13 @@ pub struct ServeConfig {
     /// back through the pipeline, and the report gains the v4 `decode`
     /// section (TTFT / ITL percentiles, KV-cache occupancy)
     pub decode: Option<traffic::DecodeConfig>,
+    /// continuous (iteration-level) batching for decode serving: token
+    /// passes from different in-flight requests are grouped into one
+    /// weight-stationary batch of up to `max` rows, waiting at most
+    /// `window` cycles for stragglers; requires `decode`, and the report
+    /// gains the v5 `batching` section. `max <= 1` (or None) is the
+    /// legacy one-pass-at-a-time path, byte-identical to a v4 run.
+    pub batching: Option<traffic::BatchConfig>,
 }
 
 impl ServeConfig {
@@ -117,6 +124,7 @@ impl ServeConfig {
             fail: None,
             obs: ObsSettings::default(),
             decode: None,
+            batching: None,
         }
     }
 
@@ -161,6 +169,7 @@ impl ServeConfig {
             fail: self.fail,
             obs: self.obs.clone(),
             decode: self.decode,
+            batching: self.batching,
         }
     }
 }
@@ -192,6 +201,7 @@ pub fn pipeline_capacity_seqs_per_s(cfg: &ServeConfig, m: usize) -> Result<f64> 
     tb_cfg.fail = None;
     tb_cfg.obs = ObsSettings::default();
     tb_cfg.decode = None;
+    tb_cfg.batching = None;
     let mut tb = build_testbed(&tb_cfg)?;
     tb.sim.start();
     tb.sim.run()?;
@@ -225,6 +235,7 @@ pub fn validate_eq1(base: &TestbedConfig, encoders: usize, m: usize) -> Result<E
     one.fail = None;
     one.obs = ObsSettings::default();
     one.decode = None;
+    one.batching = None;
     let single = run_encoder_once(&one)?;
     let components = single.components();
 
@@ -298,6 +309,13 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
     let mut per_request: Vec<Option<u64>> = vec![None; schedule.len()];
     let (mut completed, mut completed_tokens, mut last_done) = (0usize, 0u64, 0u64);
     let mut decode_report = None;
+    // continuous batching: snapshot the assembler's log (release sizes,
+    // assembly waits, token-pass -> batch-size map) to distill the v5
+    // batching section; a disabled config never builds the assembler, so
+    // the report stays byte-identical to the v4 path
+    let batching = cfg.batching.filter(|b| b.enabled());
+    let batch_snapshot = tb.batch_log.as_ref().map(|l| l.lock().unwrap().clone());
+    let mut batching_report = None;
     {
         let sink = tb.sink.lock().unwrap();
         let pass_done = |base: u32, p: u32, m: u32| -> Option<u64> {
@@ -308,6 +326,8 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
         let mut itl = Vec::new();
         let mut kv_occupancy = Vec::with_capacity(schedule.len());
         let mut generated_tokens = 0u64;
+        let mut ttft_by_size: std::collections::BTreeMap<u32, Vec<u64>> = Default::default();
+        let mut itl_by_size: std::collections::BTreeMap<u32, Vec<u64>> = Default::default();
         for (i, req) in schedule.iter().enumerate() {
             let base = i as u32 * block;
             let passes: Vec<Option<u64>> =
@@ -316,14 +336,28 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
             // moment the first generated token could be sampled
             if let Some(d0) = passes[0] {
                 ttft.push(d0 - req.arrival);
+                // keyed by the batch the first token pass rode in: the
+                // contention level the request met when entering decode
+                if let Some(log) = &batch_snapshot {
+                    if let Some(&sz) = log.token_batch.get(&(base + 1)) {
+                        ttft_by_size.entry(sz).or_default().push(d0 - req.arrival);
+                    }
+                }
             }
             let gen = passes[1..].iter().flatten().count() as u64;
             generated_tokens += gen;
             // inter-token latency: gaps between consecutive completed
             // passes (pass 0 -> 1 is the first post-prefill gap)
-            for w in passes.windows(2) {
+            for (p, w) in passes.windows(2).enumerate() {
                 if let (Some(a), Some(b)) = (w[0], w[1]) {
                     itl.push(b.saturating_sub(a));
+                    // keyed by the LATER token's batch: the gap a token
+                    // paid depends on the batch it was grouped into
+                    if let Some(log) = &batch_snapshot {
+                        if let Some(&sz) = log.token_batch.get(&(base + p as u32 + 1)) {
+                            itl_by_size.entry(sz).or_default().push(b.saturating_sub(a));
+                        }
+                    }
                 }
             }
             kv_occupancy.push((req.m as u64 + gen) as f64 / max_seq as f64);
@@ -342,6 +376,30 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
                 ttft: LatencySummary::from_unsorted(ttft).unwrap_or_else(LatencySummary::empty),
                 itl: LatencySummary::from_unsorted(itl).unwrap_or_else(LatencySummary::empty),
                 kv_occupancy,
+            });
+        }
+        if let (Some(bc), Some(log)) = (batching, &batch_snapshot) {
+            let mut histogram = vec![0u64; bc.max as usize];
+            for &(_, size) in &log.releases {
+                histogram[(size.clamp(1, bc.max) - 1) as usize] += 1;
+            }
+            let summarize = |m: std::collections::BTreeMap<u32, Vec<u64>>| {
+                m.into_iter()
+                    .map(|(sz, v)| {
+                        (sz, LatencySummary::from_unsorted(v).unwrap_or_else(LatencySummary::empty))
+                    })
+                    .collect()
+            };
+            batching_report = Some(stats::BatchingReport {
+                batch_max: bc.max,
+                batch_window: bc.window,
+                batches: log.releases.len() as u64,
+                histogram,
+                assembly_wait: LatencySummary::from_unsorted(log.waits.clone())
+                    .unwrap_or_else(LatencySummary::empty),
+                peak_active: log.peak_active,
+                ttft_by_size: summarize(ttft_by_size),
+                itl_by_size: summarize(itl_by_size),
             });
         }
     }
@@ -495,6 +553,7 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
         telemetry,
         sim_profile,
         decode: decode_report,
+        batching: batching_report,
     };
     Ok((report, obs_out))
 }
@@ -701,6 +760,7 @@ mod tests {
             net: Default::default(),
             fail: None,
             obs: Default::default(),
+            batching: None,
         };
         let mut tb = build_testbed(&tb_cfg).unwrap();
         tb.sim.start();
@@ -717,6 +777,129 @@ mod tests {
             assert_eq!(got.len(), 1, "token pass {} must be a single row", s + 1);
             assert_eq!(&got[0], tok, "token pass {} mismatch", s + 1);
         }
+    }
+
+    #[test]
+    fn batch1_decode_serving_is_byte_identical_to_v4() {
+        // `--batch-max 1` must normalize to the legacy one-pass-at-a-time
+        // path: same kernels, same costs, byte-identical v4 report
+        let mut cfg = ServeConfig::glue(2, 6, 2_000.0, 7);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 3 });
+        let v4 = run_serving(&cfg).unwrap();
+        cfg.batching = Some(traffic::BatchConfig { max: 1, window: 4096 });
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.schema(), "serving_report/v4", "disabled batching keeps the v4 schema");
+        assert_eq!(r.to_json().pretty(), v4.to_json().pretty());
+    }
+
+    #[test]
+    fn batched_serving_reports_v5_and_conserves_work() {
+        let mut cfg = ServeConfig::glue(1, 8, 40_000.0, 9);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 6 });
+        cfg.batching = Some(traffic::BatchConfig { max: 4, window: 512 });
+        let r = run_serving(&cfg).unwrap();
+        assert_eq!(r.completed, 8, "batching must not lose requests");
+        assert_eq!(r.schema(), "serving_report/v5");
+        validate_serving_report(&r.to_json()).unwrap();
+        let d = r.decode.as_ref().unwrap();
+        assert_eq!(d.generated_tokens, 48);
+        let b = r.batching.as_ref().unwrap();
+        assert_eq!((b.batch_max, b.batch_window), (4, 512));
+        assert_eq!(b.histogram.len(), 4);
+        assert_eq!(b.histogram.iter().sum::<u64>(), b.batches);
+        // every generated token rode in exactly one released batch
+        let token_rows: u64 =
+            b.histogram.iter().enumerate().map(|(i, &n)| (i as u64 + 1) * n).sum();
+        assert_eq!(token_rows, d.generated_tokens);
+        assert!(b.peak_active >= 1 && b.peak_active <= 4, "admission respects the slot cap");
+        assert!(b.mean_batch_size() >= 1.0);
+        // grouped percentiles: ascending sizes, all within the cap
+        let sizes: Vec<u32> = b.ttft_by_size.iter().map(|&(s, _)| s).collect();
+        assert!(!sizes.is_empty() && sizes.windows(2).all(|w| w[0] < w[1]));
+        for &(s, _) in b.ttft_by_size.iter().chain(&b.itl_by_size) {
+            assert!((1..=4).contains(&s));
+        }
+    }
+
+    #[test]
+    fn batched_reports_are_thread_and_granularity_invariant() {
+        let mut cfg = ServeConfig::glue(2, 6, 20_000.0, 17);
+        cfg.decode = Some(traffic::DecodeConfig { max_new_tokens: 4 });
+        cfg.batching = Some(traffic::BatchConfig { max: 4, window: 256 });
+        cfg.threads = Some(1);
+        let a = run_serving(&cfg).unwrap();
+        assert_eq!(a.schema(), "serving_report/v5");
+        for g in [crate::sim::ShardGranularity::PerCluster, crate::sim::ShardGranularity::PerFpga]
+        {
+            cfg.threads = Some(8);
+            cfg.granularity = Some(g);
+            let b = run_serving(&cfg).unwrap();
+            assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn batching_without_decode_is_rejected() {
+        let mut cfg = ServeConfig::glue(1, 2, 2_000.0, 1);
+        cfg.batching = Some(traffic::BatchConfig { max: 4, window: 64 });
+        let err = run_serving(&cfg).unwrap_err().to_string();
+        assert!(err.contains("needs decode"), "{err}");
+    }
+
+    #[test]
+    fn functional_batched_decode_matches_independent_passes() {
+        use crate::ibert::config::ModelConfig;
+        use crate::ibert::encoder::decode_generate;
+        use crate::ibert::weights::{synthetic_input, ModelParams};
+        let cfg_m = ModelConfig { hidden: 96, heads: 12, ffn: 192, max_seq: 32, num_encoders: 2 };
+        let p = Arc::new(ModelParams::synthetic(cfg_m, 0xFEED));
+        let (prompt_m, max_new) = (4usize, 3usize);
+        let input = Arc::new(synthetic_input(cfg_m.hidden, prompt_m, 33));
+        let reqs = 3u32;
+        let block = 1 + max_new as u32;
+        let tb_cfg = TestbedConfig {
+            encoders: 2,
+            m: prompt_m,
+            inferences: reqs,
+            interval: 12,
+            pe: PeConfig::default(),
+            mode: Mode::Functional(p.clone()),
+            fpgas_per_switch: 6,
+            input: Some(input.clone()),
+            placement: None,
+            schedule: Some(Arc::new(
+                (0..reqs)
+                    .map(|i| Request { arrival: i as u64 * 40, m: prompt_m as u32 })
+                    .collect(),
+            )),
+            decode: Some(traffic::DecodeConfig { max_new_tokens: max_new as u32 }),
+            batching: Some(traffic::BatchConfig { max: reqs, window: 20_000 }),
+            threads: Some(1),
+            granularity: None,
+            net: Default::default(),
+            fail: None,
+            obs: Default::default(),
+        };
+        let mut tb = build_testbed(&tb_cfg).unwrap();
+        tb.sim.start();
+        tb.sim.run().unwrap();
+        let sink = tb.sink.lock().unwrap();
+        // batching changes WHEN token passes run, never WHAT they
+        // compute: every request's passes stay bit-identical to the
+        // native incremental decoder run for that request alone
+        let (pre, toks) = decode_generate(&p, &input, 2, max_new);
+        for r in 0..reqs {
+            let base = r * block;
+            assert_eq!(sink.matrix(base).unwrap(), pre, "request {r} prefill mismatch");
+            for (s, tok) in toks.iter().enumerate() {
+                let got = sink.matrix(base + 1 + s as u32).unwrap();
+                assert_eq!(got.len(), 1, "token pass must be a single row");
+                assert_eq!(&got[0], tok, "request {r} token pass {} mismatch", s + 1);
+            }
+        }
+        // and the assembler really grouped rows from different requests
+        let log = tb.batch_log.as_ref().unwrap().lock().unwrap();
+        assert!(log.releases.iter().any(|&(_, sz)| sz >= 2), "{:?}", log.releases);
     }
 
     #[test]

@@ -8,17 +8,20 @@
 //! end-to-end latency (completion − scheduled arrival), exactly like a
 //! NIC transmit queue in a real deployment.
 
-use std::collections::VecDeque;
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use crate::gmi::Out;
 use crate::sim::engine::{KernelBehavior, KernelIo, START_TAG};
 use crate::sim::packet::{MsgMeta, Packet, Payload};
 
-use super::traffic::Request;
+use super::traffic::{BatchConfig, Request};
 
 /// Wake tag of the emission pump.
 const PUMP: u64 = 1;
+
+/// Wake tag of the batch-assembly window deadline.
+const WINDOW: u64 = 2;
 
 /// Stream tag of the decode feedback edge (last encoder -> eval gateway
 /// -> source). Distinguishes fed-back token rows from anything else the
@@ -252,6 +255,304 @@ impl KernelBehavior for DecodeSourceKernel {
     }
 }
 
+/// Batching telemetry recorded by [`BatchSourceKernel`] for the serving
+/// report's v5 section. Written only by the single source kernel during
+/// the run and read after the simulation drains, so the mutex is
+/// uncontended and the contents are deterministic regardless of the
+/// engine's thread count.
+#[derive(Debug, Default, Clone)]
+pub struct BatchLog {
+    /// every iteration-batch release: (release cycle, token rows in it)
+    pub releases: Vec<(u64, u32)>,
+    /// per released token row: cycles it waited in assembly
+    pub waits: Vec<u64>,
+    /// token pass inference id -> size of the batch it released in
+    pub token_batch: HashMap<u32, u32>,
+    /// peak concurrently admitted sequences (KV slots in use)
+    pub peak_active: u32,
+}
+
+/// Drain the assembly buffer into the release queue as one iteration
+/// batch, charging each token's assembly wait and recording the release.
+/// Tokens whose pass will feed back yet another token count as
+/// outstanding from release (not emission) so the "no batch-mate can
+/// still join" test never fires during the short release-queue drain.
+fn drain_ready(
+    ready: &mut VecDeque<(u32, Payload, u64)>,
+    release_q: &mut VecDeque<(u32, Payload)>,
+    open_since: &mut Option<u64>,
+    outstanding: &mut u32,
+    block: u32,
+    log: &Mutex<BatchLog>,
+    now: u64,
+) {
+    let size = ready.len() as u32;
+    debug_assert!(size > 0, "released an empty batch");
+    let mut log = log.lock().unwrap();
+    log.releases.push((now, size));
+    while let Some((inference, payload, ready_at)) = ready.pop_front() {
+        log.waits.push(now - ready_at);
+        log.token_batch.insert(inference, size);
+        if inference % block + 1 < block {
+            *outstanding += 1;
+        }
+        release_q.push_back((inference, payload));
+    }
+    *open_since = None;
+}
+
+/// Continuous-batching serving source: the Orca-style iteration-level
+/// scheduler. Extends [`DecodeSourceKernel`] three ways:
+///
+/// - **Admission**: at most `batch.max` sequences hold KV slots at
+///   once. A scheduled prefill whose arrival has passed still waits at
+///   the source until a slot frees (a finished sequence exits at its
+///   iteration boundary), and that wait is charged to its latency.
+/// - **Iteration batches**: fed-back token rows are not re-emitted
+///   immediately — they collect in an assembly buffer that releases as
+///   one back-to-back burst when no in-flight pass can add another
+///   token, when the buffer holds `batch.max` rows, or when the oldest
+///   token has waited `batch.window` cycles. Released rows chain down
+///   the link at `interval` pacing, so the weight-stationary linear
+///   kernels see an unbroken streak and charge the batched marginal
+///   row cost instead of a full weight pass per token.
+/// - **Telemetry**: every release, per-token assembly wait, and the
+///   batch size each token rode in land in a shared [`BatchLog`].
+///
+/// Passes stay *in flight across iterations* — the assembler never
+/// waits for the pipeline to drain (that would serialize iterations
+/// and forfeit the batching win); it only groups tokens that are ready
+/// now while other passes keep streaming. Prefills joining mid-stream
+/// will contribute tokens a full pipeline latency later, so they do
+/// not hold an open batch past its window.
+pub struct BatchSourceKernel {
+    dst: Out,
+    interval: u64,
+    requests: Arc<Vec<Request>>,
+    data: Option<Arc<Vec<Vec<i8>>>>,
+    row_bytes: usize,
+    /// passes per request: 1 prefill + max_new_tokens decode steps
+    block: u32,
+    /// slot cap + assembly window
+    batch: BatchConfig,
+    idx: usize,
+    row: u32,
+    /// sequences currently holding a KV slot
+    active: u32,
+    /// in-flight passes whose feedback will yield another token
+    outstanding: u32,
+    /// assembly buffer: (inference id, payload, cycle it became ready)
+    ready: VecDeque<(u32, Payload, u64)>,
+    /// cycle the current assembly batch opened (first ready token)
+    open_since: Option<u64>,
+    /// deadline the WINDOW wake is armed for, if any
+    window_armed: Option<u64>,
+    /// released token rows awaiting the serialized link
+    release_q: VecDeque<(u32, Payload)>,
+    last_emit: Option<u64>,
+    armed: bool,
+    log: Arc<Mutex<BatchLog>>,
+}
+
+impl BatchSourceKernel {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dst: Out,
+        requests: Arc<Vec<Request>>,
+        interval: u64,
+        data: Option<Arc<Vec<Vec<i8>>>>,
+        row_bytes: usize,
+        block: u32,
+        batch: BatchConfig,
+        log: Arc<Mutex<BatchLog>>,
+    ) -> Self {
+        assert!(block >= 1, "decode block must include the prefill pass");
+        assert!(batch.enabled(), "batch max < 2 is the legacy DecodeSourceKernel path");
+        BatchSourceKernel {
+            dst,
+            interval,
+            requests,
+            data,
+            row_bytes,
+            block,
+            batch,
+            idx: 0,
+            row: 0,
+            active: 0,
+            outstanding: 0,
+            ready: VecDeque::new(),
+            open_since: None,
+            window_armed: None,
+            release_q: VecDeque::new(),
+            last_emit: None,
+            armed: false,
+            log,
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        !self.release_q.is_empty() || self.idx < self.requests.len()
+    }
+}
+
+impl KernelBehavior for BatchSourceKernel {
+    fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+        let block = self.block;
+        let interval = self.interval;
+        let row_bytes = self.row_bytes;
+        let functional = self.data.is_some();
+        let max = self.batch.max;
+        let window = self.batch.window;
+        let ready = &mut self.ready;
+        let release_q = &mut self.release_q;
+        let open_since = &mut self.open_since;
+        let window_armed = &mut self.window_armed;
+        let outstanding = &mut self.outstanding;
+        let active = &mut self.active;
+        let armed = &mut self.armed;
+        let last_emit = &self.last_emit;
+        let log = &self.log;
+        io.rows(pkt, |io2, meta, at, payload| {
+            io2.consume(payload.bytes());
+            if meta.stream != FEEDBACK_STREAM || meta.row + 1 != meta.rows {
+                return; // only a pass's last row births the next token
+            }
+            let step = meta.inference % block;
+            if step + 1 >= block {
+                // final pass: the sequence exits at this iteration
+                // boundary and its KV slot frees for a queued prefill
+                *active = active.saturating_sub(1);
+                if !*armed {
+                    *armed = true;
+                    let due = last_emit.map_or(at, |le| (le + interval).max(at));
+                    io2.wake_in(due.saturating_sub(at).max(1), PUMP);
+                }
+                return;
+            }
+            *outstanding = outstanding.saturating_sub(1);
+            let next = match (functional, payload) {
+                (true, p @ Payload::RowI8(_)) => p,
+                (true, p) => panic!("functional batched feedback carried {:?}", p.bytes()),
+                (false, _) => Payload::Timing(row_bytes),
+            };
+            ready.push_back((meta.inference + 1, next, at));
+            if open_since.is_none() {
+                *open_since = Some(at);
+            }
+            let deadline = open_since.unwrap() + window;
+            if ready.len() >= max as usize || *outstanding == 0 || at >= deadline {
+                // full batch / no batch-mate can still join / window lapsed
+                drain_ready(ready, release_q, open_since, outstanding, block, log, at);
+                if !*armed {
+                    *armed = true;
+                    let due = last_emit.map_or(at, |le| (le + interval).max(at));
+                    io2.wake_in(due.saturating_sub(at).max(1), PUMP);
+                }
+            } else if *window_armed != Some(deadline) {
+                *window_armed = Some(deadline);
+                io2.wake_in(deadline.saturating_sub(at).max(1), WINDOW);
+            }
+        });
+    }
+
+    fn on_wake(&mut self, tag: u64, io: &mut KernelIo) {
+        if tag == WINDOW {
+            self.window_armed = None;
+            if let Some(opened) = self.open_since {
+                let deadline = opened + self.batch.window;
+                if io.now >= deadline {
+                    drain_ready(
+                        &mut self.ready,
+                        &mut self.release_q,
+                        &mut self.open_since,
+                        &mut self.outstanding,
+                        self.block,
+                        &self.log,
+                        io.now,
+                    );
+                    if !self.armed {
+                        self.armed = true;
+                        let due = self
+                            .last_emit
+                            .map_or(io.now, |le| (le + self.interval).max(io.now));
+                        io.wake_in(due.saturating_sub(io.now).max(1), PUMP);
+                    }
+                } else {
+                    // a newer batch opened after this wake was armed
+                    self.window_armed = Some(deadline);
+                    io.wake_in(deadline - io.now, WINDOW);
+                }
+            }
+            return;
+        }
+        if tag != START_TAG && tag != PUMP {
+            return;
+        }
+        self.armed = false;
+        // overlapping arms (feedback + schedule) may wake us early; the
+        // serialized link re-imposes its pacing here
+        if let Some(le) = self.last_emit {
+            if io.now < le + self.interval {
+                self.armed = true;
+                io.wake_in(le + self.interval - io.now, PUMP);
+                return;
+            }
+        }
+        let stream = self.dst.stream.unwrap_or(0);
+        if let Some((inference, payload)) = self.release_q.pop_front() {
+            let meta = MsgMeta { stream, row: 0, rows: 1, inference };
+            io.send(self.dst.dst, meta, payload);
+        } else {
+            let Some(req) = self.requests.get(self.idx) else {
+                return; // drained; feedback re-arms the pump
+            };
+            if self.row == 0 {
+                if io.now < req.arrival {
+                    // sleep unarmed: a fed-back token may claim the link
+                    io.wake_in(req.arrival - io.now, PUMP);
+                    return;
+                }
+                if self.active >= self.batch.max {
+                    // every KV slot is held: this prefill joins when a
+                    // sequence finishes (the finish feedback re-arms us)
+                    return;
+                }
+                self.active += 1;
+                let mut log = self.log.lock().unwrap();
+                log.peak_active = log.peak_active.max(self.active);
+            }
+            let payload = match &self.data {
+                Some(d) => Payload::row_i8(d[self.row as usize].clone()),
+                None => Payload::Timing(self.row_bytes),
+            };
+            let meta = MsgMeta {
+                stream,
+                row: self.row,
+                rows: req.m,
+                inference: self.idx as u32 * self.block,
+            };
+            io.send(self.dst.dst, meta, payload);
+            self.row += 1;
+            if self.row == req.m {
+                self.row = 0;
+                self.idx += 1;
+                if self.block > 1 {
+                    self.outstanding += 1; // prefill births the first token
+                }
+            }
+        }
+        self.last_emit = Some(io.now);
+        if self.has_work() {
+            self.armed = true;
+            io.wake_in(self.interval.max(1), PUMP);
+        }
+    }
+
+    fn name(&self) -> String {
+        "serve-batch-source".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -421,5 +722,147 @@ mod tests {
         let got = run_decode(vec![Request { arrival: 0, m: 4 }], 1);
         assert_eq!(got.len(), 4);
         assert!(got.iter().all(|e| e.1 == 0), "no decode passes at max_new_tokens = 0");
+    }
+
+    /// Echo with a fixed feedback latency (instant echo would serialize
+    /// passes and no batch could ever form) plus an optional per-request
+    /// stagger so tests can control feedback arrival order.
+    struct DelayedEcho {
+        src: GlobalKernelId,
+        delay: u64,
+        stagger: u64,
+        block: u32,
+        seen: std::sync::Arc<std::sync::Mutex<Vec<(u64, u32, u32, u32)>>>,
+        pending: VecDeque<(u64, MsgMeta)>,
+    }
+    impl KernelBehavior for DelayedEcho {
+        fn on_packet(&mut self, pkt: Packet, io: &mut KernelIo) {
+            let log = self.seen.clone();
+            let (delay, stagger, block) = (self.delay, self.stagger, self.block);
+            let pending = &mut self.pending;
+            io.rows(pkt, |io2, meta, at, payload| {
+                io2.consume(payload.bytes());
+                log.lock().unwrap().push((at, meta.inference, meta.row, meta.rows));
+                if meta.row + 1 == meta.rows {
+                    let due = at + delay + (meta.inference / block) as u64 * stagger;
+                    pending.push_back((due, MsgMeta { stream: FEEDBACK_STREAM, ..meta }));
+                    io2.wake_in(due.saturating_sub(at).max(1), PUMP);
+                }
+            });
+        }
+        fn on_wake(&mut self, _tag: u64, io: &mut KernelIo) {
+            let now = io.now;
+            let src = self.src;
+            let mut rest = VecDeque::new();
+            while let Some((due, meta)) = self.pending.pop_front() {
+                if due <= now {
+                    io.send(src, meta, Payload::Timing(8));
+                } else {
+                    rest.push_back((due, meta));
+                }
+            }
+            self.pending = rest;
+        }
+    }
+
+    fn run_batched(
+        requests: Vec<Request>,
+        block: u32,
+        batch: BatchConfig,
+        delay: u64,
+        stagger: u64,
+    ) -> (Vec<(u64, u32, u32, u32)>, BatchLog) {
+        let src = GlobalKernelId::new(0, 1);
+        let dst = GlobalKernelId::new(0, 2);
+        let mut sim = Sim::new();
+        sim.fabric.attach(FpgaId(0), SwitchId(0));
+        sim.fabric.attach(FpgaId(1), SwitchId(0));
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        sim.add_kernel(
+            src,
+            FpgaId(0),
+            Fifo::new(1 << 16),
+            Box::new(BatchSourceKernel::new(
+                Out::to(dst),
+                Arc::new(requests),
+                12,
+                None,
+                768,
+                block,
+                batch,
+                log.clone(),
+            )),
+        )
+        .unwrap();
+        sim.add_kernel(
+            dst,
+            FpgaId(1),
+            Fifo::new(1 << 20),
+            Box::new(DelayedEcho { src, delay, stagger, block, seen: seen.clone(), pending: VecDeque::new() }),
+        )
+        .unwrap();
+        sim.start();
+        sim.run().unwrap();
+        let v = seen.lock().unwrap().clone();
+        let l = log.lock().unwrap().clone();
+        (v, l)
+    }
+
+    #[test]
+    fn tokens_group_into_full_batches_and_slots_gate_admission() {
+        // three requests, two KV slots: r2's prefill must wait for a
+        // finished sequence even though the link is idle from cycle ~60
+        let reqs = vec![
+            Request { arrival: 0, m: 2 },
+            Request { arrival: 0, m: 2 },
+            Request { arrival: 0, m: 2 },
+        ];
+        let (got, log) = run_batched(reqs, 2, BatchConfig { max: 2, window: 50 }, 600, 0);
+        let of = |inf: u32| got.iter().filter(|e| e.1 == inf).copied().collect::<Vec<_>>();
+        // r0/r1 tokens (inferences 1 and 3) release as one full batch
+        // and chain down the link exactly one interval apart — the
+        // streak the batched linear kernels price at marginal cost
+        assert_eq!(log.releases.len(), 2, "releases: {:?}", log.releases);
+        assert_eq!(log.releases[0].1, 2, "first batch holds both ready tokens");
+        assert_eq!(log.releases[1].1, 1, "r2's token has no batch-mate left");
+        assert_eq!(of(3)[0].0 - of(1)[0].0, 12, "batch rows chain at interval pacing");
+        // the first-ready token waited for its batch-mate (prompts end
+        // 24 cycles apart and feedback delay is uniform), the rest rode free
+        assert_eq!(log.waits, vec![24, 0, 0]);
+        assert_eq!(log.token_batch.get(&1), Some(&2));
+        assert_eq!(log.token_batch.get(&3), Some(&2));
+        assert_eq!(log.token_batch.get(&5), Some(&1));
+        // admission: r2 (inference 4) only streams after a finish freed a slot
+        assert_eq!(log.peak_active, 2);
+        let first_of_r2 = of(4)[0].0;
+        assert!(
+            first_of_r2 > of(1)[0].0 + 600,
+            "prefill admitted at {first_of_r2}, before r0's final pass finished"
+        );
+    }
+
+    #[test]
+    fn the_window_bounds_assembly_wait() {
+        // staggered feedback: r1's token arrives 500 cycles after r0's,
+        // far past the 100-cycle window — r0's token must not wait for it
+        let reqs = vec![Request { arrival: 0, m: 2 }, Request { arrival: 0, m: 2 }];
+        let (got, log) = run_batched(reqs, 2, BatchConfig { max: 4, window: 100 }, 600, 500);
+        assert_eq!(log.releases.len(), 2);
+        assert_eq!((log.releases[0].1, log.releases[1].1), (1, 1));
+        assert_eq!(log.waits, vec![100, 0], "expired window charges exactly `window`");
+        // the token really was held back by the window before emission
+        let of = |inf: u32| got.iter().filter(|e| e.1 == inf).copied().collect::<Vec<_>>();
+        let last_prefill_row = of(0).iter().map(|e| e.0).max().unwrap();
+        assert!(of(1)[0].0 >= last_prefill_row + 600 + 100);
+    }
+
+    #[test]
+    fn batched_source_with_no_requests_is_a_no_op() {
+        let (got, log) =
+            run_batched(Vec::new(), 3, BatchConfig { max: 4, window: 64 }, 600, 0);
+        assert!(got.is_empty());
+        assert!(log.releases.is_empty() && log.waits.is_empty());
+        assert_eq!(log.peak_active, 0);
     }
 }

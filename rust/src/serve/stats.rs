@@ -243,6 +243,74 @@ impl DecodeReport {
     }
 }
 
+/// The batching section of `serving_report/v5`: continuous-batching
+/// telemetry of a `serve --batch-max` run (requires decode — iteration
+/// batches are made of decode tokens).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchingReport {
+    /// KV slots / maximum rows per iteration batch (`--batch-max`)
+    pub batch_max: u32,
+    /// assembly window in cycles (`--batch-window`)
+    pub batch_window: u64,
+    /// iteration batches the assembler released
+    pub batches: u64,
+    /// batch-size histogram: `histogram[i]` = batches of `i + 1` rows
+    /// (length `batch_max`)
+    pub histogram: Vec<u64>,
+    /// assembly wait over released tokens — the latency cost of waiting
+    /// for batch-mates (all-zero when no token was ever held back)
+    pub assembly_wait: LatencySummary,
+    /// peak concurrently admitted sequences (KV slots in use)
+    pub peak_active: u32,
+    /// TTFT grouped by the size of the batch a request's *first* token
+    /// rode in: `(batch size, summary)`, ascending by size
+    pub ttft_by_size: Vec<(u32, LatencySummary)>,
+    /// ITL grouped by the size of the batch of the gap's later token:
+    /// `(batch size, summary)`, ascending by size
+    pub itl_by_size: Vec<(u32, LatencySummary)>,
+}
+
+impl BatchingReport {
+    fn to_json(&self) -> Json {
+        let by_size = |v: &[(u32, LatencySummary)]| {
+            Json::Arr(
+                v.iter()
+                    .map(|(size, s)| {
+                        Json::obj(vec![
+                            ("batch_size", Json::Num(*size as f64)),
+                            ("latency", s.to_json()),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("batch_max", Json::Num(self.batch_max as f64)),
+            ("batch_window_cycles", Json::Num(self.batch_window as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            (
+                "histogram",
+                Json::Arr(self.histogram.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("assembly_wait", self.assembly_wait.to_json()),
+            ("peak_active", Json::Num(self.peak_active as f64)),
+            ("ttft_by_size", by_size(&self.ttft_by_size)),
+            ("itl_by_size", by_size(&self.itl_by_size)),
+        ])
+    }
+
+    /// Mean released batch size (0 when no batch was released).
+    pub fn mean_batch_size(&self) -> f64 {
+        let rows: u64 =
+            self.histogram.iter().enumerate().map(|(i, &n)| (i as u64 + 1) * n).sum();
+        if self.batches == 0 {
+            0.0
+        } else {
+            rows as f64 / self.batches as f64
+        }
+    }
+}
+
 /// Everything one serving run produced.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -284,6 +352,9 @@ pub struct ServingReport {
     /// autoregressive-decoding section (None: plain prefill-only
     /// serving — the report then keeps its v2/v3 schema byte-for-byte)
     pub decode: Option<DecodeReport>,
+    /// continuous-batching section (None: unbatched serving — the
+    /// report then keeps its v2/v3/v4 schema byte-for-byte)
+    pub batching: Option<BatchingReport>,
 }
 
 impl ServingReport {
@@ -320,11 +391,14 @@ impl ServingReport {
     /// Schema this report serializes as: exactly `serving_report/v2`
     /// when no telemetry section is attached (the byte-stability
     /// contract of telemetry-off runs), `serving_report/v3` — v2 plus
-    /// optional `telemetry` / `sim_profile` sections — otherwise, and
-    /// `serving_report/v4` — v3 plus the `decode` section — whenever the
-    /// run decoded autoregressively.
+    /// optional `telemetry` / `sim_profile` sections — otherwise,
+    /// `serving_report/v4` — v3 plus the `decode` section — whenever
+    /// the run decoded autoregressively, and `serving_report/v5` — v4
+    /// plus the `batching` section — when it batched continuously.
     pub fn schema(&self) -> &'static str {
-        if self.decode.is_some() {
+        if self.batching.is_some() {
+            "serving_report/v5"
+        } else if self.decode.is_some() {
             "serving_report/v4"
         } else if self.telemetry.is_none() && self.sim_profile.is_none() {
             "serving_report/v2"
@@ -359,6 +433,9 @@ impl ServingReport {
         ];
         if let Some(d) = &self.decode {
             pairs.push(("decode", d.to_json()));
+        }
+        if let Some(b) = &self.batching {
+            pairs.push(("batching", b.to_json()));
         }
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.clone()));
@@ -488,6 +565,20 @@ impl ServingReport {
                 100.0 * mean_kv,
             ));
         }
+        if let Some(b) = &self.batching {
+            s.push_str(&format!(
+                "batching: {} iteration batches (mean size {:.2}, max {}), \
+                 assembly wait p50 {:.1} us  p99 {:.1} us, window {} cycles, \
+                 peak {} sequences in flight\n",
+                b.batches,
+                b.mean_batch_size(),
+                b.batch_max,
+                cycles_to_us(b.assembly_wait.p50),
+                cycles_to_us(b.assembly_wait.p99),
+                b.batch_window,
+                b.peak_active,
+            ));
+        }
         if let Some(t) = &self.telemetry {
             let n = t.get("requests_attributed").and_then(|v| v.as_i64()).unwrap_or(0);
             let mean = |k: &str| {
@@ -524,16 +615,18 @@ impl ServingReport {
 /// Structural check of a serialized serving report: accepts the
 /// pre-telemetry `serving_report/v2`, its `serving_report/v3` superset
 /// (v3 = v2 plus optional `telemetry` / `sim_profile` sections appended
-/// after `events`), and the decode-capable `serving_report/v4` (v3 plus
-/// a mandatory `decode` section). The round-trip tests and the CI
-/// artifact check both go through here, so all three schemas stay
-/// parseable side by side.
+/// after `events`), the decode-capable `serving_report/v4` (v3 plus a
+/// mandatory `decode` section), and the continuous-batching
+/// `serving_report/v5` (v4 plus a mandatory `batching` section). The
+/// round-trip tests and the CI artifact check both go through here, so
+/// all schemas stay parseable side by side.
 pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
     let schema = j.get("schema").and_then(|s| s.as_str()).unwrap_or("");
     anyhow::ensure!(
         schema == "serving_report/v2"
             || schema == "serving_report/v3"
-            || schema == "serving_report/v4",
+            || schema == "serving_report/v4"
+            || schema == "serving_report/v5",
         "unknown serving report schema {schema:?}"
     );
     for key in [
@@ -581,10 +674,10 @@ pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
             );
         }
     }
-    if schema == "serving_report/v4" {
+    if schema == "serving_report/v4" || schema == "serving_report/v5" {
         let d = j
             .get("decode")
-            .ok_or_else(|| anyhow::anyhow!("v4 reports must carry a decode section"))?;
+            .ok_or_else(|| anyhow::anyhow!("{schema} reports must carry a decode section"))?;
         for key in ["max_new_tokens", "generated_tokens", "ttft", "itl", "kv_occupancy"] {
             anyhow::ensure!(d.get(key).is_some(), "decode section missing key {key:?}");
         }
@@ -597,7 +690,50 @@ pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
     } else {
         anyhow::ensure!(
             j.get("decode").is_none(),
-            "only v4 reports may carry a decode section"
+            "only v4/v5 reports may carry a decode section"
+        );
+    }
+    if schema == "serving_report/v5" {
+        let b = j
+            .get("batching")
+            .ok_or_else(|| anyhow::anyhow!("v5 reports must carry a batching section"))?;
+        for key in [
+            "batch_max",
+            "batch_window_cycles",
+            "batches",
+            "histogram",
+            "assembly_wait",
+            "peak_active",
+            "ttft_by_size",
+            "itl_by_size",
+        ] {
+            anyhow::ensure!(b.get(key).is_some(), "batching section missing key {key:?}");
+        }
+        anyhow::ensure!(
+            b.path("assembly_wait.p50_cycles").is_some(),
+            "batching assembly_wait summary malformed"
+        );
+        anyhow::ensure!(
+            b.get("histogram").and_then(Json::as_arr).is_some(),
+            "batching histogram must be an array"
+        );
+        for key in ["ttft_by_size", "itl_by_size"] {
+            let arr = b
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("batching {key} must be an array"))?;
+            for entry in arr {
+                anyhow::ensure!(
+                    entry.get("batch_size").is_some()
+                        && entry.path("latency.p50_cycles").is_some(),
+                    "batching {key} entry malformed"
+                );
+            }
+        }
+    } else {
+        anyhow::ensure!(
+            j.get("batching").is_none(),
+            "only v5 reports may carry a batching section"
         );
     }
     Ok(())
@@ -663,6 +799,7 @@ mod tests {
             telemetry: None,
             sim_profile: None,
             decode: None,
+            batching: None,
         };
         assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
         assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
@@ -704,6 +841,7 @@ mod tests {
             telemetry: None,
             sim_profile: None,
             decode: None,
+            batching: None,
         };
         assert_eq!(r.schema(), "serving_report/v2");
         r.telemetry = Some(Json::obj(vec![
@@ -763,6 +901,7 @@ mod tests {
                 itl: LatencySummary { p50: 30, p95: 40, p99: 40, mean: 32.0, max: 40 },
                 kv_occupancy: vec![0.5, 0.75],
             }),
+            batching: None,
         };
         assert_eq!(r.schema(), "serving_report/v4");
         let j = r.to_json();
@@ -792,6 +931,96 @@ mod tests {
             }
         }
         assert!(validate_serving_report(&smuggled).is_err());
+    }
+
+    #[test]
+    fn batching_section_flips_the_schema_to_v5_and_round_trips() {
+        let r = ServingReport {
+            encoders: 1,
+            workload: "glue".into(),
+            process: "poisson".into(),
+            offered_seqs_per_s: 4000.0,
+            seed: 7,
+            requests: 3,
+            completed: 3,
+            total_tokens: 24,
+            completed_tokens: 24,
+            makespan_cycles: 9_000,
+            latency: LatencySummary { p50: 10, p95: 10, p99: 10, mean: 10.0, max: 10 },
+            latencies: vec![10, 10, 10],
+            stages: vec![],
+            eq1: None,
+            dropped: 0,
+            retransmits: 0,
+            fault: None,
+            events: 9,
+            telemetry: None,
+            sim_profile: None,
+            decode: Some(DecodeReport {
+                max_new_tokens: 4,
+                generated_tokens: 12,
+                ttft: LatencySummary { p50: 100, p95: 120, p99: 120, mean: 105.0, max: 120 },
+                itl: LatencySummary { p50: 30, p95: 40, p99: 40, mean: 32.0, max: 40 },
+                kv_occupancy: vec![0.5, 0.75, 0.5],
+            }),
+            batching: Some(BatchingReport {
+                batch_max: 8,
+                batch_window: 256,
+                batches: 3,
+                histogram: vec![1, 0, 0, 0, 0, 0, 1, 1],
+                assembly_wait: LatencySummary {
+                    p50: 12,
+                    p95: 40,
+                    p99: 40,
+                    mean: 18.0,
+                    max: 40,
+                },
+                peak_active: 8,
+                ttft_by_size: vec![
+                    (1, LatencySummary { p50: 90, p95: 90, p99: 90, mean: 90.0, max: 90 }),
+                    (8, LatencySummary { p50: 110, p95: 120, p99: 120, mean: 112.0, max: 120 }),
+                ],
+                itl_by_size: vec![(
+                    8,
+                    LatencySummary { p50: 30, p95: 40, p99: 40, mean: 32.0, max: 40 },
+                )],
+            }),
+        };
+        assert_eq!(r.schema(), "serving_report/v5");
+        // 1 + 7 + 8 rows over 3 batches
+        assert!((r.batching.as_ref().unwrap().mean_batch_size() - 16.0 / 3.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.path("batching.batch_max").unwrap().as_i64().unwrap(), 8);
+        validate_serving_report(&j).unwrap();
+        let back = Json::parse(&j.pretty()).unwrap();
+        validate_serving_report(&back).unwrap();
+        assert_eq!(back.path("batching.batches").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(
+            back.path("batching.histogram").unwrap().as_arr().unwrap().len(),
+            8,
+            "histogram spans 1..=batch_max"
+        );
+        assert_eq!(
+            back.path("batching.assembly_wait.p99_cycles").unwrap().as_i64().unwrap(),
+            40
+        );
+        assert!(r.render().contains("batching: 3 iteration batches"));
+        // a v4 report smuggling a batching section is rejected, as is a
+        // v5 one missing it
+        let mut smuggled = back.clone();
+        if let Json::Obj(pairs) = &mut smuggled {
+            for (k, v) in pairs.iter_mut() {
+                if k.as_str() == "schema" {
+                    *v = Json::Str("serving_report/v4".into());
+                }
+            }
+        }
+        assert!(validate_serving_report(&smuggled).is_err());
+        let mut gutted = back.clone();
+        if let Json::Obj(pairs) = &mut gutted {
+            pairs.retain(|(k, _)| k.as_str() != "batching");
+        }
+        assert!(validate_serving_report(&gutted).is_err());
     }
 
     #[test]

@@ -132,6 +132,35 @@ impl DecodeConfig {
     }
 }
 
+/// Continuous (iteration-level) batching settings for a serving run.
+///
+/// With batching enabled the evaluation FPGA's source becomes a batch
+/// assembler: at most `max` sequences hold KV slots concurrently, and
+/// generated-token rows are grouped into iteration batches — a batch
+/// releases when every expected token has arrived, when it reaches
+/// `max` rows, or when the oldest ready token has waited `window`
+/// cycles (assembly wait is charged to request latency). Finished
+/// sequences free their slot at the iteration boundary and queued
+/// prefills join mid-stream (Orca-style continuous batching).
+///
+/// `max <= 1` normalizes to "batching disabled": the run takes the
+/// exact legacy decode path and its report stays byte-identical v4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Maximum concurrent sequences (KV slots / rows per iteration).
+    pub max: u32,
+    /// Assembly window in cycles: the longest a ready token waits for
+    /// batch-mates before the batch releases anyway.
+    pub window: u64,
+}
+
+impl BatchConfig {
+    /// Batching below 2 concurrent sequences is the legacy path.
+    pub fn enabled(&self) -> bool {
+        self.max >= 2
+    }
+}
+
 /// Full specification of one open-loop traffic trace.
 #[derive(Debug, Clone)]
 pub struct TrafficConfig {
@@ -242,6 +271,14 @@ mod tests {
         assert_eq!(total_tokens(&reqs), 0);
         // no `.last().unwrap()`-style assumption anywhere downstream:
         assert_eq!(reqs.last(), None);
+    }
+
+    #[test]
+    fn batch_of_one_means_batching_disabled() {
+        assert!(!BatchConfig { max: 0, window: 64 }.enabled());
+        assert!(!BatchConfig { max: 1, window: 64 }.enabled());
+        assert!(BatchConfig { max: 2, window: 0 }.enabled());
+        assert!(BatchConfig { max: 16, window: 512 }.enabled());
     }
 
     #[test]

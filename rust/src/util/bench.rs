@@ -195,6 +195,18 @@ pub fn new_headline_keys(current: &Json, baseline: &Json) -> Vec<String> {
         .collect()
 }
 
+/// Structural gaps in a committed baseline that `--check` should call
+/// out loudly: an empty or missing `cases` array means the gate holds
+/// only the headline floors — there is no recorded trajectory to eyeball
+/// a regression against, which is easy to miss when the check passes.
+pub fn baseline_warnings(baseline: &Json) -> Vec<String> {
+    match baseline.get("cases").and_then(Json::as_arr) {
+        Some(cases) if !cases.is_empty() => Vec::new(),
+        Some(_) => vec!["baseline `cases` is empty — gating on headline floors only".into()],
+        None => vec!["baseline has no `cases` array — gating on headline floors only".into()],
+    }
+}
+
 /// Shared `--check` front half for the bench CLIs: when `--check` is
 /// set, read the baseline (`--baseline`, defaulting to the out path
 /// itself — call this BEFORE overwriting the trajectory file) and
@@ -215,6 +227,9 @@ pub fn load_check(
     let baseline = Json::parse(&text)
         .map_err(|e| anyhow::anyhow!("--check: bad baseline JSON: {e:?}"))?;
     let tol = args.f64_or("tolerance", 0.35)?;
+    for w in baseline_warnings(&baseline) {
+        println!("--check: warning: {w} ({base_path})");
+    }
     for key in new_headline_keys(doc, &baseline) {
         println!(
             "--check: headline {key:?} is new (absent from baseline {base_path}) — \
@@ -295,6 +310,25 @@ mod tests {
         assert_eq!(regs.len(), 2, "{regs:?}");
         // no headlines in the baseline at all
         assert!(!check_headlines(&ok, &Json::obj(vec![]), 0.35).is_empty());
+    }
+
+    #[test]
+    fn empty_case_baselines_warn_but_still_gate() {
+        // headline floors still apply, but the hole in the trajectory
+        // record is surfaced instead of silently gating on floors alone
+        let with_cases = Json::obj(vec![(
+            "cases",
+            Json::Arr(vec![Json::obj(vec![("scenario", Json::Str("x".into()))])]),
+        )]);
+        assert!(baseline_warnings(&with_cases).is_empty());
+        let empty = Json::obj(vec![("cases", Json::Arr(vec![]))]);
+        let w = baseline_warnings(&empty);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("empty"), "{w:?}");
+        let missing = Json::obj(vec![("headlines", Json::obj(vec![]))]);
+        let w = baseline_warnings(&missing);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("no `cases`"), "{w:?}");
     }
 
     #[test]

@@ -67,6 +67,7 @@ fn ip_generator_emits_full_build() {
         hidden: 768,
         ffn: 3072,
         decode: None,
+        batched: false,
     })
     .cluster;
     let dir = std::env::temp_dir().join(format!("cb_int_{}", std::process::id()));

@@ -75,6 +75,7 @@ fn placed_plan_flows_into_cluster_builder() {
         hidden: 768,
         ffn: 3072,
         decode: None,
+        batched: false,
     };
     let built = validate::to_encoder_build(&sol.graph, &sol.placement, &gp).unwrap();
     built.cluster.validate().unwrap();

@@ -945,6 +945,79 @@ fn prop_parallel_golden_decode_is_byte_identical() {
     });
 }
 
+/// Parallel golden, continuous batching: the iteration-level scheduler
+/// (windowed batch assembly, marginal-cost token rows, finished
+/// sequences exiting while queued prefills join mid-stream) through the
+/// sharded engine at threads {2, 4, 8} on random placements and both
+/// granularities must reproduce the sequential v5 report, Chrome trace,
+/// and metrics stream byte for byte.
+#[test]
+fn prop_parallel_golden_batching_is_byte_identical() {
+    use galapagos_llm::ibert::graph::default_slots;
+    use galapagos_llm::serve::{run_serving_with_obs, BatchConfig, DecodeConfig, ServeConfig};
+    use galapagos_llm::sim::ShardGranularity;
+    check_with(&Config { cases: 3, ..Default::default() }, "parallel-golden-batching", |g| {
+        let requests = g.usize_in(4, 8);
+        let seqs_per_s = 4_000.0 + 16_000.0 * g.f64_unit();
+        let seed = g.rng.next_u64();
+        let max_new = g.usize_in(2, 5) as u32;
+        let batch_max = *g.pick(&[2u32, 4, 8]);
+        let window = *g.pick(&[64u64, 256, 1024]);
+        let mut slots = default_slots();
+        for _ in 0..g.usize_in(0, 4) {
+            let kid = g.usize_in(1, slots.len() - 1);
+            slots[kid] = g.usize_in(0, 5);
+        }
+        let mk = |threads: usize, gran: ShardGranularity| {
+            let mut cfg = ServeConfig::glue(1, requests, seqs_per_s, seed);
+            cfg.decode = Some(DecodeConfig { max_new_tokens: max_new });
+            cfg.batching = Some(BatchConfig { max: batch_max, window });
+            cfg.placement = Some(slots.clone());
+            cfg.threads = Some(threads);
+            cfg.granularity = Some(gran);
+            cfg.obs.enabled = true;
+            cfg
+        };
+        let (r1, o1) =
+            run_serving_with_obs(&mk(1, ShardGranularity::PerCluster)).map_err(|e| e.to_string())?;
+        prop_assert!(r1.schema() == "serving_report/v5", "batched run must report v5");
+        prop_assert!(
+            r1.completed == requests,
+            "batched run completed {}/{requests} requests",
+            r1.completed
+        );
+        let b = r1.batching.as_ref().ok_or("v5 report missing batching section")?;
+        prop_assert!(
+            b.histogram.iter().enumerate().map(|(i, &n)| (i as u64 + 1) * n).sum::<u64>()
+                == requests as u64 * max_new as u64,
+            "released batches must carry every generated token exactly once"
+        );
+        let variants = [
+            (2usize, ShardGranularity::PerCluster),
+            (4, ShardGranularity::PerFpga),
+            (8, ShardGranularity::PerCluster),
+            (8, ShardGranularity::PerFpga),
+        ];
+        for &(threads, gran) in &variants {
+            let (rn, on) = run_serving_with_obs(&mk(threads, gran)).map_err(|e| e.to_string())?;
+            prop_assert!(
+                rn.to_json().pretty() == r1.to_json().pretty(),
+                "batched serving report diverged at threads={threads} gran={gran:?} \
+                 (B={batch_max}, W={window}, n={max_new})"
+            );
+            prop_assert!(
+                on.trace_json == o1.trace_json,
+                "batched Chrome trace diverged at threads={threads} gran={gran:?}"
+            );
+            prop_assert!(
+                on.metrics_jsonl == o1.metrics_jsonl,
+                "batched metrics stream diverged at threads={threads} gran={gran:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Telemetry determinism: the observability artifacts (Chrome trace,
 // metrics stream, v3 report) are part of the bit-identical contract,
