@@ -1,0 +1,183 @@
+//! Multi-tenant isolation bench: the `--check`-gated headline behind the
+//! PR 10 tenant stack, recorded in BENCH_multitenant.json (the perf-smoke
+//! CI job uploads the quick run, like BENCH_batching.json tracks the
+//! iteration scheduler).
+//!
+//!   cargo bench --bench multitenant            # full run
+//!   cargo bench --bench multitenant -- --quick # CI smoke
+//!   ... -- --check [--tolerance 0.35]          # regression gate
+//!
+//! Scenario: a guaranteed-class "chat" tenant (2 encoders, 900 us SLO)
+//! serves the same seed-stream schedule twice — once alone on the fleet,
+//! once next to a bursty best-effort neighbor pushing ~20x chat's rate
+//! through its own 1-encoder chain. The placer gives each tenant disjoint
+//! FPGAs, so the only shared resources are the evaluation FPGA's egress
+//! NIC and the switch fabric; the headline
+//! `multitenant_isolation_p99_ratio` (solo p99 / mixed p99, 1.0 = the
+//! neighbor moved nothing) commits how much of chat's p99 the burst is
+//! allowed to take. The mixed point also re-runs at threads=1 vs
+//! threads=N on both shard granularities with byte-equality asserted —
+//! the determinism contract extends to multi-tenant serving.
+
+use galapagos_llm::serve::tenant::{TenantClass, TenantSpec, TenantsConfig};
+use galapagos_llm::serve::{
+    run_multi_tenant_serving, ArrivalProcess, LengthDist, MultiTenantConfig,
+};
+use galapagos_llm::util::bench::Bencher;
+use galapagos_llm::util::json::Json;
+use galapagos_llm::{cycles_to_us, util::cli::Args};
+
+fn chat(requests: usize) -> TenantSpec {
+    TenantSpec {
+        name: "chat".into(),
+        encoders: 2,
+        class: TenantClass::Guaranteed,
+        slo_p99_us: 900.0,
+        kv_slots: 8,
+        requests,
+        process: ArrivalProcess::Poisson { seqs_per_s: 5_000.0 },
+        lengths: LengthDist::Glue,
+        max_m: 64,
+    }
+}
+
+fn burst(requests: usize) -> TenantSpec {
+    TenantSpec {
+        name: "burst".into(),
+        encoders: 1,
+        class: TenantClass::BestEffort,
+        slo_p99_us: 400.0,
+        kv_slots: 16,
+        requests,
+        process: ArrivalProcess::Poisson { seqs_per_s: 100_000.0 },
+        lengths: LengthDist::Mrpc,
+        max_m: 32,
+    }
+}
+
+fn roster(specs: Vec<TenantSpec>) -> TenantsConfig {
+    TenantsConfig { interval: 12, fpgas_per_switch: 6, tenants: specs }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.bool_or("quick", false)?;
+    let out_path = args.str_or("out", "BENCH_multitenant.json");
+    let seed = args.u64_or("seed", 7)?;
+    let chat_reqs = args.usize_or("requests", if quick { 16 } else { 32 })?;
+    let burst_reqs = chat_reqs * 3;
+    let mut b = Bencher::quick();
+
+    // chat is tenant index 0 in both rosters, so stream_seed gives it the
+    // SAME offered schedule (and admission outcome) alone and mixed —
+    // the comparison isolates fabric interference, not traffic drift
+    let solo_cfg = MultiTenantConfig::new(roster(vec![chat(chat_reqs)]), seed);
+    let solo = b.once("chat alone on the fleet", || run_multi_tenant_serving(&solo_cfg))?;
+    let mixed_cfg =
+        MultiTenantConfig::new(roster(vec![chat(chat_reqs), burst(burst_reqs)]), seed);
+    let mixed =
+        b.once("chat + bursty best-effort neighbor", || run_multi_tenant_serving(&mixed_cfg))?;
+
+    let solo_chat = &solo.tenants.as_ref().expect("v6 report")[0];
+    let mixed_tenants = mixed.tenants.as_ref().expect("v6 report");
+    let (mixed_chat, mixed_burst) = (&mixed_tenants[0], &mixed_tenants[1]);
+    anyhow::ensure!(
+        solo_chat.admitted == mixed_chat.admitted && solo_chat.offered == mixed_chat.offered,
+        "chat's schedule moved with the roster: {}/{} solo vs {}/{} mixed",
+        solo_chat.admitted,
+        solo_chat.offered,
+        mixed_chat.admitted,
+        mixed_chat.offered
+    );
+    anyhow::ensure!(
+        solo_chat.completed == solo_chat.admitted && mixed_chat.completed == mixed_chat.admitted,
+        "chat dropped admitted requests (solo {}/{}, mixed {}/{})",
+        solo_chat.completed,
+        solo_chat.admitted,
+        mixed_chat.completed,
+        mixed_chat.admitted
+    );
+    anyhow::ensure!(
+        mixed_burst.completed == mixed_burst.admitted,
+        "burst dropped admitted requests ({}/{})",
+        mixed_burst.completed,
+        mixed_burst.admitted
+    );
+
+    let ratio = solo_chat.latency.p99 as f64 / mixed_chat.latency.p99.max(1) as f64;
+    let fairness = mixed.fairness.as_ref().expect("v6 report");
+    println!(
+        "\nchat p99: {:.1} us alone -> {:.1} us next to the burst \
+         (isolation ratio {ratio:.3}; jain {:.3}, worst tenant {} at {:.2}x SLO)",
+        cycles_to_us(solo_chat.latency.p99),
+        cycles_to_us(mixed_chat.latency.p99),
+        fairness.jain_index,
+        fairness.worst_tenant,
+        fairness.max_p99_over_slo
+    );
+    // loose in-bench sanity; the committed BENCH_multitenant.json floor
+    // is the real bound and --check gates against it
+    anyhow::ensure!(
+        ratio >= 0.5,
+        "bursty neighbor doubled the guaranteed tenant's p99 (ratio {ratio:.3})"
+    );
+
+    // bit-identity at the mixed point: threads=1 vs threads=N on both
+    // shard cuts (the crown-jewel contract extends to tenant rosters)
+    let threads = galapagos_llm::util::pool::sim_threads().max(2);
+    let mut seq_cfg = mixed_cfg.clone();
+    seq_cfg.threads = Some(1);
+    let seq = run_multi_tenant_serving(&seq_cfg)?;
+    for g in [
+        galapagos_llm::sim::ShardGranularity::PerCluster,
+        galapagos_llm::sim::ShardGranularity::PerFpga,
+    ] {
+        let mut par_cfg = mixed_cfg.clone();
+        par_cfg.threads = Some(threads);
+        par_cfg.granularity = Some(g);
+        let par = run_multi_tenant_serving(&par_cfg)?;
+        anyhow::ensure!(
+            seq.to_json().pretty() == par.to_json().pretty(),
+            "multi-tenant report diverged at threads={threads} ({g:?})"
+        );
+    }
+    println!("multi-tenant reports identical at 1 vs {threads} threads, both shard granularities");
+
+    let mut cases: Vec<Json> = Vec::new();
+    for (scenario, report) in [("chat solo", &solo), ("chat + burst", &mixed)] {
+        let mut case = match report.to_json() {
+            Json::Obj(kv) => kv,
+            _ => unreachable!("report serializes to an object"),
+        };
+        case.insert(0, ("scenario".into(), Json::Str(scenario.into())));
+        cases.push(Json::Obj(case));
+    }
+    let headlines: Vec<(String, f64)> = vec![
+        ("multitenant_isolation_p99_ratio".into(), ratio),
+        ("multitenant_jain_index".into(), fairness.jain_index),
+        (
+            "multitenant_guaranteed_delivered_fraction".into(),
+            mixed_chat.delivered_fraction(),
+        ),
+    ];
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("bench_multitenant/v1".into())),
+        ("mode", Json::Str(if quick { "quick" } else { "full" }.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("chat_requests", Json::Num(chat_reqs as f64)),
+        ("burst_requests", Json::Num(burst_reqs as f64)),
+        ("sim_threads", Json::Num(galapagos_llm::util::pool::sim_threads() as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "headlines",
+            Json::Obj(headlines.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ]);
+
+    // --check: read the committed baseline before overwriting it
+    let regressions = galapagos_llm::util::bench::load_check(&args, &doc, &out_path)?;
+    std::fs::write(&out_path, doc.pretty())?;
+    println!("\nwrote {out_path}");
+    galapagos_llm::util::bench::report_check(regressions)?;
+    Ok(())
+}

@@ -11,6 +11,9 @@
 //! all fed from one evaluation FPGA, with **constant-memory streaming
 //! stats** — the sink keeps running aggregates instead of per-inference
 //! maps, so a thousand-FPGA run's memory does not grow with traffic.
+//! With a `--tenants` config the fleet turns heterogeneous: each tenant
+//! contributes chains of its *own* depth and build point, so mixed
+//! model shapes share one fabric the way a multi-model deployment does.
 //!
 //! The default [`FleetConfig::thousand_fpga`] scenario is 28 chains x 6
 //! encoders x 6 FPGAs = 1008 fabric FPGAs + 1 evaluation FPGA = 1009.
@@ -28,8 +31,11 @@ use crate::galapagos::cluster::{ClusterSpec, KernelDecl, KernelType, PlatformSpe
 use crate::gmi::gateway::{Gateway, GatewayConfig};
 use crate::gmi::Out;
 use crate::ibert::graph::EncoderGraphParams;
-use crate::ibert::kernels::{Mode, SourceKernel};
+use crate::ibert::kernels::Mode;
 use crate::ibert::timing::PeConfig;
+use crate::serve::source::RequestSourceKernel;
+use crate::serve::tenant::TenantsConfig;
+use crate::serve::traffic::{stream_seed, total_tokens, ArrivalProcess, LengthDist, Request, TrafficConfig};
 use crate::sim::engine::{KernelBehavior, KernelIo, Sim};
 use crate::sim::fabric::{FpgaId, SwitchId};
 use crate::sim::packet::{GlobalKernelId, Packet};
@@ -39,20 +45,32 @@ use crate::sim::ShardGranularity;
 /// source kernel per chain, ids `SOURCE_BASE..SOURCE_BASE + chains`).
 pub const SOURCE_BASE: u8 = 3;
 
-/// Per-chain arrival phase, in cycles, derived from the run seed
-/// (`--net-seed`): a splitmix64-style finalizer over (seed, chain), the
-/// same construction `link_stream_seed` uses for drop-RNG streams, so
-/// every chain starts its traffic at an independent deterministic offset
-/// instead of the whole fleet emitting in lockstep. Bounded to at most
-/// 16 source intervals so the stagger perturbs arrival alignment without
-/// materially stretching the run.
-#[inline]
-pub fn chain_phase(seed: u64, chain: usize, interval: u64) -> u64 {
-    let mut z = seed ^ (chain as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^= z >> 31;
-    z % (16 * interval.max(1) + 1)
+/// One chain's offered traffic in a homogeneous fleet: `inferences`
+/// Poisson arrivals at `rate` seqs/s, every request `m` rows, drawn
+/// from the chain's own seed stream (`stream_seed(net.seed, chain)` —
+/// the same per-index derivation serving tenants use). The schedule
+/// keeps the process's *leading* gap too (generate one extra request,
+/// drop the head): a schedule that pinned its first arrival to cycle 0
+/// would put every replica's opening request on the same cycle — the
+/// exact lockstep the per-chain streams exist to remove. Chain `c`'s
+/// schedule is a pure function of `(seed, c)`: adding or removing
+/// chains never shifts a sibling's arrivals.
+pub fn chain_schedule(cfg: &FleetConfig, chain: usize) -> Vec<Request> {
+    let mut reqs = TrafficConfig {
+        process: ArrivalProcess::Poisson { seqs_per_s: cfg.rate },
+        // the fleet scenario streams fixed-length inferences; the
+        // length distribution is overridden below
+        lengths: LengthDist::Glue,
+        requests: cfg.inferences as usize + 1,
+        seed: stream_seed(cfg.net.seed, chain as u64),
+        max_m: cfg.m,
+    }
+    .generate();
+    reqs.remove(0);
+    for r in &mut reqs {
+        r.m = cfg.m as u32;
+    }
+    reqs
 }
 
 /// A fleet-scale scenario.
@@ -66,6 +84,9 @@ pub struct FleetConfig {
     pub m: usize,
     /// pipelined inferences per chain
     pub inferences: u32,
+    /// per-chain Poisson arrival rate (seqs/s) of the homogeneous
+    /// scenario; tenant fleets use each tenant's own process instead
+    pub rate: f64,
     /// input packet interval in cycles (12 = 100G line rate)
     pub interval: u64,
     /// FPGAs per 100G switch (switches chain serially)
@@ -81,6 +102,15 @@ pub struct FleetConfig {
     pub event_budget: Option<u64>,
     /// simulator self-profile (wall-ns/cycle, barrier wait, ...)
     pub profile: bool,
+    /// heterogeneous fleet (`fleet --tenants`): each tenant contributes
+    /// `chains_per_tenant` chains with its OWN depth, build point, and
+    /// offered traffic (mixed model shapes on one fleet); overrides
+    /// `chains`/`encoders_per_chain`/`m`/`rate`. Schedules come straight
+    /// from each tenant's seed stream — the fleet measures fabric
+    /// behavior under offered load, so no admission control applies.
+    pub tenants: Option<TenantsConfig>,
+    /// replicated chains per tenant when `tenants` is set
+    pub chains_per_tenant: usize,
 }
 
 impl FleetConfig {
@@ -92,6 +122,7 @@ impl FleetConfig {
             encoders_per_chain: 6,
             m: 16,
             inferences: 1,
+            rate: 20_000.0,
             interval: 12,
             fpgas_per_switch: 6,
             net: NetworkConfig::default(),
@@ -99,12 +130,67 @@ impl FleetConfig {
             granularity: None,
             event_budget: None,
             profile: false,
+            tenants: None,
+            chains_per_tenant: 1,
         }
     }
 
     /// Total FPGAs the scenario instantiates (fabric + evaluation).
     pub fn total_fpgas(&self) -> usize {
-        self.chains * self.encoders_per_chain * 6 + 1
+        match &self.tenants {
+            None => self.chains * self.encoders_per_chain * 6 + 1,
+            Some(tc) => {
+                tc.tenants.iter().map(|t| t.encoders).sum::<usize>()
+                    * self.chains_per_tenant
+                    * 6
+                    + 1
+            }
+        }
+    }
+}
+
+/// One chain's identity in a (possibly heterogeneous) fleet: its depth,
+/// hardware build point, and offered schedule.
+#[derive(Clone)]
+struct ChainPlan {
+    label: String,
+    encoders: usize,
+    /// build point (KV/FIFO sizing); schedules never exceed it
+    max_seq: usize,
+    schedule: Arc<Vec<Request>>,
+}
+
+/// Expand the config into per-chain plans. Homogeneous fleets replicate
+/// one plan shape with per-chain seed streams; tenant fleets lay out
+/// `chains_per_tenant` chains per tenant in roster order, each drawing
+/// from the tenant's schedule stream at its global chain index.
+fn chain_plans(cfg: &FleetConfig) -> Result<Vec<ChainPlan>> {
+    match &cfg.tenants {
+        None => Ok((0..cfg.chains)
+            .map(|chain| ChainPlan {
+                label: format!("chain-{chain}"),
+                encoders: cfg.encoders_per_chain,
+                max_seq: 128,
+                schedule: Arc::new(chain_schedule(cfg, chain)),
+            })
+            .collect()),
+        Some(tc) => {
+            tc.validate()?;
+            ensure!(cfg.chains_per_tenant >= 1, "need at least one chain per tenant");
+            let mut plans = Vec::new();
+            for t in &tc.tenants {
+                for k in 0..cfg.chains_per_tenant {
+                    let idx = plans.len();
+                    plans.push(ChainPlan {
+                        label: format!("{}-{k}", t.name),
+                        encoders: t.encoders,
+                        max_seq: t.max_m,
+                        schedule: Arc::new(t.schedule(cfg.net.seed, idx)),
+                    });
+                }
+            }
+            Ok(plans)
+        }
     }
 }
 
@@ -172,31 +258,38 @@ pub struct FleetSim {
     pub expected_rows: u64,
     pub fpgas: usize,
     pub clusters: usize,
+    pub chains: usize,
 }
 
-/// Assemble the fleet: `chains * encoders_per_chain` encoder clusters
-/// (Fig. 14 mapping, 6 FPGAs each) plus one evaluation FPGA hosting a
-/// source kernel per chain and the shared streaming sink.
+/// Assemble the fleet: one encoder chain per [`ChainPlan`] (Fig. 14
+/// mapping, 6 FPGAs per cluster) plus one evaluation FPGA hosting a
+/// request source per chain and the shared streaming sink. Homogeneous
+/// fleets replicate one plan shape; tenant fleets mix depths and build
+/// points side by side on the same fabric.
 pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
-    ensure!(cfg.chains >= 1, "need at least one chain");
-    ensure!(cfg.encoders_per_chain >= 1, "need at least one encoder per chain");
-    let n_clusters = cfg.chains * cfg.encoders_per_chain;
+    if cfg.tenants.is_none() {
+        ensure!(cfg.chains >= 1, "need at least one chain");
+        ensure!(cfg.encoders_per_chain >= 1, "need at least one encoder per chain");
+        ensure!((1..=128).contains(&cfg.m), "m must be in 1..=128");
+        ensure!(cfg.rate > 0.0, "per-chain arrival rate must be positive");
+    }
+    ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
+    ensure!(
+        (0.0..1.0).contains(&cfg.net.drop_probability),
+        "drop probability must be in [0, 1)"
+    );
+    let plans = chain_plans(cfg)?;
+    let n_clusters: usize = plans.iter().map(|p| p.encoders).sum();
     ensure!(
         n_clusters < EVAL_CLUSTER as usize,
         "fleet needs {n_clusters} cluster ids; only {} fit under the evaluation cluster",
         EVAL_CLUSTER
     );
     ensure!(
-        cfg.chains as usize <= (u8::MAX - SOURCE_BASE) as usize,
+        plans.len() <= (u8::MAX - SOURCE_BASE) as usize,
         "too many chains for the evaluation cluster's kernel-id space"
     );
-    let (hidden, ffn, max_seq) = (768usize, 3072usize, 128usize);
-    ensure!((1..=max_seq).contains(&cfg.m), "m must be in 1..={max_seq}");
-    ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
-    ensure!(
-        (0.0..1.0).contains(&cfg.net.drop_probability),
-        "drop probability must be in [0, 1)"
-    );
+    let (hidden, ffn) = (768usize, 3072usize);
 
     let slots = crate::ibert::graph::default_slots();
     let per = slots.iter().copied().max().map_or(1, |s| s + 1);
@@ -204,10 +297,14 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
 
     let mut clusters = Vec::with_capacity(n_clusters + 1);
     let mut behaviors: HashMap<GlobalKernelId, Box<dyn KernelBehavior>> = HashMap::new();
-    for chain in 0..cfg.chains {
-        for e in 0..cfg.encoders_per_chain {
-            let c = (chain * cfg.encoders_per_chain + e) as u8;
-            let out_dst = if e + 1 < cfg.encoders_per_chain {
+    // first cluster id of each chain, in plan order
+    let mut chain_head = Vec::with_capacity(plans.len());
+    let mut next_cluster = 0usize;
+    for plan in &plans {
+        chain_head.push(next_cluster as u8);
+        for e in 0..plan.encoders {
+            let c = (next_cluster + e) as u8;
+            let out_dst = if e + 1 < plan.encoders {
                 Out::tagged(GlobalKernelId::new(c + 1, 0), 0)
             } else {
                 Out::tagged(sink_global, 0)
@@ -218,7 +315,7 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
                 pe: PeConfig::default(),
                 mode: Mode::Timing,
                 out_dst,
-                max_seq,
+                max_seq: plan.max_seq,
                 hidden,
                 ffn,
                 decode: None,
@@ -230,11 +327,16 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
             }
             clusters.push(built.cluster);
         }
+        next_cluster += plan.encoders;
     }
 
     // evaluation cluster: gateway + shared streaming sink + one source
     // per chain, all on the last FPGA. The sink FIFO is sized for the
-    // worst-case convergence of every chain's in-flight output.
+    // worst-case convergence of every chain's largest in-flight request.
+    let sink_rows: usize = plans
+        .iter()
+        .map(|p| p.schedule.iter().map(|r| r.m as usize).max().unwrap_or(1))
+        .sum();
     let eval_fpga = FpgaId(per * n_clusters);
     let mut kernels = vec![
         KernelDecl {
@@ -243,7 +345,7 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
             ktype: KernelType::Gateway,
             fpga: eval_fpga,
             dests: vec![sink_global],
-            fifo_bytes: cfg.chains * cfg.m * hidden,
+            fifo_bytes: sink_rows * hidden,
         },
         KernelDecl {
             id: EVAL_SINK,
@@ -251,7 +353,7 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
             ktype: KernelType::Compute,
             fpga: eval_fpga,
             dests: vec![],
-            fifo_bytes: cfg.chains * cfg.m * hidden,
+            fifo_bytes: sink_rows * hidden,
         },
     ];
     behaviors.insert(
@@ -263,30 +365,30 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
         sink_global,
         Box::new(StreamSinkKernel { stats: stats.clone(), cur_cycle: 0, cur_count: 0 }),
     );
-    for chain in 0..cfg.chains {
+    for (chain, plan) in plans.iter().enumerate() {
         let sid = SOURCE_BASE + chain as u8;
-        let first_cluster = (chain * cfg.encoders_per_chain) as u8;
+        let head = GlobalKernelId::new(chain_head[chain], 0);
         kernels.push(KernelDecl {
             id: sid,
-            name: format!("fleet-source-{chain}"),
+            name: format!("fleet-source-{}", plan.label),
             ktype: KernelType::Compute,
             fpga: eval_fpga,
-            dests: vec![GlobalKernelId::new(first_cluster, 0)],
+            dests: vec![head],
             fifo_bytes: 4096,
         });
-        // desynchronize the replicas: each chain's traffic starts at a
-        // seed-derived phase so the fleet doesn't emit in lockstep
+        // each chain replays its own seed-stream schedule — independent
+        // open-loop arrivals, so the replicas never emit in lockstep
         behaviors.insert(
             GlobalKernelId::new(EVAL_CLUSTER, sid),
             Box::new(
-                SourceKernel::new(
-                    Out::to(GlobalKernelId::new(first_cluster, 0)),
-                    cfg.m as u32,
-                    cfg.inferences,
+                RequestSourceKernel::new(
+                    Out::to(head),
+                    plan.schedule.clone(),
                     cfg.interval,
                     None,
+                    hidden,
                 )
-                .with_start_offset(chain_phase(cfg.net.seed, chain, cfg.interval)),
+                .with_label(&plan.label),
             ),
         );
     }
@@ -322,9 +424,10 @@ pub fn build_fleet(cfg: &FleetConfig) -> Result<FleetSim> {
     Ok(FleetSim {
         sim,
         stats,
-        expected_rows: cfg.chains as u64 * cfg.inferences as u64 * cfg.m as u64,
+        expected_rows: plans.iter().map(|p| total_tokens(&p.schedule)).sum(),
         fpgas,
         clusters: n_clusters,
+        chains: plans.len(),
     })
 }
 
@@ -371,7 +474,7 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<(FleetReport, FleetSim)> {
     let report = FleetReport {
         fpgas: fleet.fpgas,
         clusters: fleet.clusters,
-        chains: cfg.chains,
+        chains: fleet.chains,
         rows: s.rows,
         expected_rows: fleet.expected_rows,
         first_arrival: s.first_arrival,
@@ -396,6 +499,7 @@ mod tests {
             encoders_per_chain: 1,
             m: 4,
             inferences: 1,
+            rate: 20_000.0,
             interval: 12,
             fpgas_per_switch: 6,
             net: NetworkConfig::default(),
@@ -403,6 +507,8 @@ mod tests {
             granularity: None,
             event_budget: None,
             profile: false,
+            tenants: None,
+            chains_per_tenant: 1,
         }
     }
 
@@ -441,22 +547,34 @@ mod tests {
     }
 
     #[test]
-    fn chain_phases_are_distinct_and_deterministic() {
-        // the arrival stagger is a pure function of (seed, chain,
-        // interval): pin the default-seed values so a silent change to
-        // the mix shows up as a diff, not as quietly different fleets
-        let phases: Vec<u64> = (0..8).map(|c| chain_phase(0, c, 12)).collect();
-        assert_eq!(phases, [37, 9, 70, 89, 105, 98, 160, 94]);
-        for seed in [0, 7, 11] {
-            let ph: Vec<u64> = (0..8).map(|c| chain_phase(seed, c, 12)).collect();
-            let mut uniq = ph.clone();
-            uniq.sort_unstable();
-            uniq.dedup();
-            assert_eq!(uniq.len(), ph.len(), "seed {seed}: phases collide: {ph:?}");
-            assert!(ph.iter().all(|&p| p <= 16 * 12), "seed {seed}: phase out of range");
-            // chain c's phase does not depend on how many chains exist
-            assert_eq!(ph[2], chain_phase(seed, 2, 12));
+    fn chain_schedules_are_distinct_deterministic_and_independent() {
+        // each chain's Poisson schedule is a pure function of
+        // (net.seed, chain): deterministic on re-derivation, distinct
+        // across chains, fixed-length rows at the configured m, and
+        // never a function of how many chains the fleet has
+        let mut cfg = tiny();
+        cfg.inferences = 5;
+        let scheds: Vec<Vec<Request>> = (0..6).map(|c| chain_schedule(&cfg, c)).collect();
+        assert!(scheds.iter().flatten().all(|r| r.m == cfg.m as u32));
+        assert!(scheds
+            .iter()
+            .all(|s| s.windows(2).all(|w| w[0].arrival <= w[1].arrival)));
+        assert_eq!(scheds[3], chain_schedule(&cfg, 3), "re-derivation diverged");
+        for i in 0..scheds.len() {
+            for j in i + 1..scheds.len() {
+                assert_ne!(
+                    scheds[i], scheds[j],
+                    "chains {i} and {j} drew phase-locked schedules"
+                );
+            }
         }
+        // growing the fleet never shifts an existing chain's arrivals
+        cfg.chains = 32;
+        assert_eq!(chain_schedule(&cfg, 3), scheds[3]);
+        // a different net seed re-draws every stream
+        let mut reseeded = cfg.clone();
+        reseeded.net.seed = 99;
+        assert_ne!(chain_schedule(&reseeded, 0), scheds[0]);
     }
 
     #[test]
@@ -464,11 +582,12 @@ mod tests {
         // single switch so every chain head sits at the same hop
         // distance from the shared evaluation FPGA: any spread in the
         // chains' first input arrivals is the sources' doing. Lockstep
-        // sources (the pre-desync behavior) would collapse that spread
-        // to the shared source NIC's serialization envelope — one row
-        // time (interval = 12 cycles at line rate) per chain, i.e. at
-        // most 36 cycles across 4 chains — while the seed-0 phases
-        // [37, 9, 70, 89] guarantee at least an 80-cycle spread.
+        // sources (the pre-Poisson constant-interval behavior) would
+        // collapse that spread to the shared source NIC's serialization
+        // envelope — one row time (interval = 12 cycles at line rate)
+        // per chain, i.e. at most 48 cycles across 4 chains — while
+        // independent Poisson streams at 20k seqs/s space first
+        // arrivals ~10_000 cycles apart on average.
         let mut cfg = tiny();
         cfg.chains = 4;
         cfg.fpgas_per_switch = 32;
@@ -501,9 +620,10 @@ mod tests {
 
     #[test]
     fn desynchronized_fleet_is_shard_plan_invariant() {
-        // the stagger comes from per-chain seeded offsets, not from any
-        // cross-shard draw order — so the report (including the new
-        // coincidence stat) must not move with the shard cut or threads
+        // the stagger comes from per-chain pre-generated seed-stream
+        // schedules, not from any cross-shard draw order — so the
+        // report (including the coincidence stat) must not move with
+        // the shard cut or thread count
         let run = |threads: usize, g: ShardGranularity| {
             let mut cfg = tiny();
             cfg.chains = 3;
@@ -519,6 +639,64 @@ mod tests {
                 assert_eq!(run(threads, g), base, "diverged at threads={threads} ({g:?})");
             }
         }
+    }
+
+    #[test]
+    fn tenant_fleet_mixes_shapes_and_completes() {
+        use crate::serve::tenant::{TenantClass, TenantSpec, TenantsConfig};
+
+        // two tenants with different chain depths AND build points,
+        // replicated twice each: 2*(2+1) clusters on one fabric. The
+        // fleet streams each tenant's *offered* schedule (no admission
+        // — the fleet path measures fabric behavior under load).
+        let tc = TenantsConfig {
+            interval: 12,
+            fpgas_per_switch: 6,
+            tenants: vec![
+                TenantSpec {
+                    name: "chat".into(),
+                    encoders: 2,
+                    class: TenantClass::Guaranteed,
+                    slo_p99_us: 900.0,
+                    kv_slots: 8,
+                    requests: 3,
+                    process: ArrivalProcess::Poisson { seqs_per_s: 2_000.0 },
+                    lengths: LengthDist::Glue,
+                    max_m: 16,
+                },
+                TenantSpec {
+                    name: "batch".into(),
+                    encoders: 1,
+                    class: TenantClass::BestEffort,
+                    slo_p99_us: 2_000.0,
+                    kv_slots: 16,
+                    requests: 2,
+                    process: ArrivalProcess::Uniform { seqs_per_s: 4_000.0 },
+                    lengths: LengthDist::Mrpc,
+                    max_m: 8,
+                },
+            ],
+        };
+        let mut cfg = tiny();
+        cfg.tenants = Some(tc.clone());
+        cfg.chains_per_tenant = 2;
+        assert_eq!(cfg.total_fpgas(), 2 * 3 * 6 + 1);
+        let (r, _) = run_fleet(&cfg).unwrap();
+        assert_eq!(r.chains, 4);
+        assert_eq!(r.clusters, 2 * (2 + 1));
+        assert_eq!(r.fpgas, 2 * 3 * 6 + 1);
+        // expected rows are each tenant's own offered tokens, which the
+        // sink must fully receive
+        let offered: u64 = (0..2)
+            .flat_map(|k| {
+                tc.tenants.iter().enumerate().map(move |(i, t)| {
+                    total_tokens(&t.schedule(cfg.net.seed, i * cfg.chains_per_tenant + k))
+                })
+            })
+            .sum();
+        assert_eq!(r.expected_rows, offered);
+        assert!(r.completed(), "{} of {} rows", r.rows, r.expected_rows);
+        assert!(!r.truncated);
     }
 
     #[test]

@@ -546,6 +546,346 @@ fn plan_failure(
     })
 }
 
+/// One tenant's chain as the testbed builds it: depth, build point, the
+/// placer's per-encoder kernel -> local-slot map, and the (already
+/// admission-filtered) schedule its source replays.
+#[derive(Clone)]
+pub struct TenantChain {
+    pub name: String,
+    pub encoders: usize,
+    /// hardware build point (KV/FIFO sizing and the schedule's clamp)
+    pub max_m: usize,
+    /// per-encoder kernel -> local FPGA slot map from the placer
+    pub slots: Vec<usize>,
+    /// admitted open-loop schedule (arrival cycles + lengths)
+    pub schedule: Arc<Vec<crate::serve::traffic::Request>>,
+}
+
+/// Multi-tenant testbed configuration: N independent encoder chains
+/// sharing one fleet and one evaluation FPGA.
+#[derive(Clone)]
+pub struct TenantTestbedConfig {
+    pub tenants: Vec<TenantChain>,
+    pub interval: u64,
+    pub pe: PeConfig,
+    pub fpgas_per_switch: usize,
+    pub threads: Option<usize>,
+    pub granularity: Option<crate::sim::ShardGranularity>,
+    /// §6 failure injection: the failed FPGA maps to exactly one
+    /// tenant's chain, and recovery re-places only that tenant
+    pub fail: Option<FailureSchedule>,
+}
+
+/// Where each tenant landed: the slot/cluster arithmetic the serving
+/// layer needs to read per-tenant stages back out of the shared trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantLayout {
+    /// first cluster id of each tenant's chain (clusters are sequential)
+    pub cluster_base: Vec<u8>,
+    /// first global FPGA slot of each tenant's chain
+    pub chain_base: Vec<usize>,
+    /// FPGAs per encoder of each tenant
+    pub width: Vec<usize>,
+    /// total chain slots; the shared evaluation FPGA sits at this index
+    pub total_slots: usize,
+}
+
+impl TenantLayout {
+    /// Which tenant owns global FPGA slot `fpga` (None: the eval FPGA
+    /// or out of range).
+    pub fn tenant_of_fpga(&self, fpga: usize) -> Option<usize> {
+        (0..self.chain_base.len()).find(|&t| {
+            let lo = self.chain_base[t];
+            let hi = lo + self.width[t] * self.chain_span(t);
+            (lo..hi).contains(&fpga)
+        })
+    }
+
+    fn chain_span(&self, t: usize) -> usize {
+        let next = self
+            .chain_base
+            .get(t + 1)
+            .copied()
+            .unwrap_or(self.total_slots);
+        (next - self.chain_base[t]) / self.width[t]
+    }
+
+    /// The evaluation-cluster kernel id of tenant `t`'s source.
+    pub fn source_id(t: usize) -> u8 {
+        1 + 2 * t as u8
+    }
+
+    /// The evaluation-cluster kernel id of tenant `t`'s sink.
+    pub fn sink_id(t: usize) -> u8 {
+        2 + 2 * t as u8
+    }
+}
+
+/// A built multi-tenant testbed: the shared simulator plus per-tenant
+/// sink handles (tenant order matches the config).
+pub struct TenantTestbed {
+    pub sim: Sim,
+    pub sinks: Vec<Arc<Mutex<SinkData>>>,
+    pub spec: PlatformSpec,
+    pub layout: TenantLayout,
+    pub recovery: Option<PlannedRecovery>,
+    /// index of the tenant the scheduled failure lands on
+    pub failed_tenant: Option<usize>,
+}
+
+/// Assemble a multi-tenant platform: each tenant's encoder chain on its
+/// own contiguous slot range (clusters numbered sequentially across
+/// tenants), plus one shared evaluation FPGA carrying a gateway and a
+/// per-tenant source/sink pair (`TenantLayout::source_id` /
+/// `TenantLayout::sink_id`). The chains share exactly two things: the
+/// evaluation FPGA's egress NIC (sources contend there, so co-location
+/// shapes timing, as on real hardware) and the analytic switch fabric
+/// (fixed per-hop latency, no contention). Everything downstream of
+/// ingress — encoder FPGAs, NICs, FIFOs, sinks — is per-tenant, which
+/// is what makes one tenant's timeline bit-identical whether or not a
+/// *neighbor's* FPGA fails (the failure-isolation contract): sources
+/// are open-loop, so an outage never changes what enters the fabric.
+pub fn build_tenant_testbed(cfg: &TenantTestbedConfig) -> Result<TenantTestbed> {
+    anyhow::ensure!(!cfg.tenants.is_empty(), "need at least one tenant");
+    anyhow::ensure!(cfg.fpgas_per_switch >= 1, "need at least one FPGA per switch");
+    let total_encoders: usize = cfg.tenants.iter().map(|t| t.encoders).sum();
+    anyhow::ensure!(
+        (1..EVAL_CLUSTER as usize).contains(&total_encoders),
+        "total encoder count must be in 1..{EVAL_CLUSTER} (cluster id space)"
+    );
+    // two kernel ids per tenant after the gateway must stay in u8 range
+    anyhow::ensure!(
+        cfg.tenants.len() <= 100,
+        "at most 100 tenants (evaluation-FPGA kernel id space)"
+    );
+    let (hidden, ffn) = (768usize, 3072usize);
+
+    let mut clusters = Vec::new();
+    let mut behaviors: HashMap<GlobalKernelId, Box<dyn KernelBehavior>> = HashMap::new();
+    let mut layout = TenantLayout {
+        cluster_base: Vec::new(),
+        chain_base: Vec::new(),
+        width: Vec::new(),
+        total_slots: 0,
+    };
+    let mut next_cluster = 0u8;
+    let mut next_slot = 0usize;
+    for (t, tc) in cfg.tenants.iter().enumerate() {
+        anyhow::ensure!(tc.encoders >= 1, "tenant {:?} needs at least one encoder", tc.name);
+        anyhow::ensure!(
+            tc.slots.len() == crate::ibert::graph::KERNELS_PER_ENCODER,
+            "tenant {:?}: placement must cover all {} encoder kernels",
+            tc.name,
+            crate::ibert::graph::KERNELS_PER_ENCODER
+        );
+        anyhow::ensure!(
+            tc.schedule.iter().all(|r| (1..=tc.max_m as u32).contains(&r.m)),
+            "tenant {:?}: scheduled lengths must be in 1..={}",
+            tc.name,
+            tc.max_m
+        );
+        let w = tc.slots.iter().copied().max().map_or(1, |s| s + 1);
+        layout.cluster_base.push(next_cluster);
+        layout.chain_base.push(next_slot);
+        layout.width.push(w);
+        let sink_global = GlobalKernelId::new(EVAL_CLUSTER, TenantLayout::sink_id(t));
+        for e in 0..tc.encoders {
+            let cid = next_cluster + e as u8;
+            let out_dst = if e + 1 < tc.encoders {
+                Out::tagged(GlobalKernelId::new(cid + 1, 0), 0)
+            } else {
+                Out::tagged(sink_global, 0)
+            };
+            let gp = EncoderGraphParams {
+                cluster_id: cid,
+                fpga_base: next_slot + w * e,
+                pe: cfg.pe,
+                mode: Mode::Timing,
+                out_dst,
+                max_seq: tc.max_m,
+                hidden,
+                ffn,
+                decode: None,
+                batched: false,
+            };
+            let built = crate::ibert::graph::build_encoder_placed(&gp, &tc.slots);
+            for (id, b) in built.behaviors {
+                behaviors.insert(GlobalKernelId::new(cid, id), b);
+            }
+            clusters.push(built.cluster);
+        }
+        next_cluster += tc.encoders as u8;
+        next_slot += w * tc.encoders;
+    }
+    layout.total_slots = next_slot;
+
+    // shared evaluation FPGA: one gateway + a source/sink pair per tenant
+    let eval_fpga = FpgaId(layout.total_slots);
+    let max_m_all = cfg.tenants.iter().map(|t| t.max_m).max().unwrap_or(1);
+    let mut kernels = vec![KernelDecl {
+        id: 0,
+        name: "eval-gateway".into(),
+        ktype: KernelType::Gateway,
+        fpga: eval_fpga,
+        dests: (0..cfg.tenants.len())
+            .map(|t| GlobalKernelId::new(EVAL_CLUSTER, TenantLayout::sink_id(t)))
+            .collect(),
+        fifo_bytes: max_m_all * hidden,
+    }];
+    let mut sinks = Vec::with_capacity(cfg.tenants.len());
+    for (t, tc) in cfg.tenants.iter().enumerate() {
+        let first_gateway = GlobalKernelId::new(layout.cluster_base[t], 0);
+        kernels.push(KernelDecl {
+            id: TenantLayout::source_id(t),
+            name: format!("eval-source-{}", tc.name),
+            ktype: KernelType::Compute,
+            fpga: eval_fpga,
+            dests: vec![first_gateway],
+            fifo_bytes: 4096,
+        });
+        kernels.push(KernelDecl {
+            id: TenantLayout::sink_id(t),
+            name: format!("eval-sink-{}", tc.name),
+            ktype: KernelType::Compute,
+            fpga: eval_fpga,
+            dests: vec![],
+            fifo_bytes: tc.max_m * hidden,
+        });
+        behaviors.insert(
+            GlobalKernelId::new(EVAL_CLUSTER, TenantLayout::source_id(t)),
+            Box::new(
+                crate::serve::source::RequestSourceKernel::new(
+                    Out::to(first_gateway),
+                    tc.schedule.clone(),
+                    cfg.interval,
+                    None,
+                    hidden,
+                )
+                .with_label(&tc.name),
+            ),
+        );
+        let (sink, sink_data) = SinkKernel::new();
+        behaviors.insert(
+            GlobalKernelId::new(EVAL_CLUSTER, TenantLayout::sink_id(t)),
+            Box::new(sink),
+        );
+        sinks.push(sink_data);
+    }
+    behaviors.insert(
+        GlobalKernelId::new(EVAL_CLUSTER, 0),
+        Box::new(Gateway::new(GatewayConfig { cluster: EVAL_CLUSTER, virtuals: HashMap::new() })),
+    );
+    clusters.push(ClusterSpec { id: EVAL_CLUSTER, kernels });
+
+    let mut switch_of = HashMap::new();
+    for f in 0..=layout.total_slots {
+        switch_of.insert(FpgaId(f), SwitchId(f / cfg.fpgas_per_switch));
+    }
+    let spec = PlatformSpec { clusters, switch_of };
+    let mut sim = spec.build_sim(|c, k| {
+        behaviors
+            .remove(&GlobalKernelId::new(c.id, k.id))
+            .unwrap_or_else(|| panic!("no behavior for c{}k{}", c.id, k.id))
+    })?;
+    if let Some(t) = cfg.threads {
+        sim.set_threads(t);
+    }
+    if let Some(g) = cfg.granularity {
+        sim.granularity = g;
+    }
+    for t in 0..cfg.tenants.len() {
+        sim.trace.add_probe(GlobalKernelId::new(EVAL_CLUSTER, TenantLayout::sink_id(t)));
+    }
+
+    let (recovery, failed_tenant) = match cfg.fail {
+        None => (None, None),
+        Some(f) => {
+            let (pr, t) = plan_tenant_failure(cfg, &mut sim, &layout, f)?;
+            (Some(pr), Some(t))
+        }
+    };
+    Ok(TenantTestbed { sim, sinks, spec, layout, recovery, failed_tenant })
+}
+
+/// Tenant-aware failure planning: resolve the failed FPGA to the ONE
+/// tenant whose chain hosts it, re-place that tenant's cluster against
+/// its own sub-fleet (the placer never sees any other tenant's slots),
+/// and arm the engine. Returns the plan plus the owning tenant's index.
+fn plan_tenant_failure(
+    cfg: &TenantTestbedConfig,
+    sim: &mut Sim,
+    layout: &TenantLayout,
+    f: FailureSchedule,
+) -> Result<(PlannedRecovery, usize)> {
+    use crate::fpga::resources::Device;
+    use crate::placer::{self, recover::ReconfigModel, Fleet, ModelShape, Placement};
+
+    anyhow::ensure!(
+        f.fpga != layout.total_slots,
+        "--fail: FPGA {} is the shared evaluation FPGA, which is the measurement \
+         harness and cannot fail",
+        f.fpga
+    );
+    let t = layout
+        .tenant_of_fpga(f.fpga)
+        .ok_or_else(|| anyhow::anyhow!("--fail: FPGA {} hosts no kernels", f.fpga))?;
+    let tc = &cfg.tenants[t];
+    let w = layout.width[t];
+    let local_e = (f.fpga - layout.chain_base[t]) / w;
+    let cluster = layout.cluster_base[t] + local_e as u8;
+    let base = layout.chain_base[t] + w * local_e;
+    let failed_slot = f.fpga - base;
+
+    let shape = ModelShape {
+        hidden: 768,
+        ffn: 3072,
+        heads: crate::ibert::graph::HEADS as usize,
+        max_seq: tc.max_m,
+        ffn_split: 1,
+    };
+    let graph = placer::KernelGraph::encoder(shape, cfg.pe)?;
+    anyhow::ensure!(
+        graph.n_kernels() == tc.slots.len(),
+        "failure recovery needs a paper-shaped encoder graph ({} kernels, placement has {})",
+        graph.n_kernels(),
+        tc.slots.len()
+    );
+    let device = Device::Xczu19eg;
+    // the sub-fleet is exactly this tenant's allocation: recovery cannot
+    // spill onto (or even observe) another tenant's boards
+    let fleet = Fleet::homogeneous(device, w, cfg.fpgas_per_switch);
+    let rec = placer::recover::replace_after_failure(
+        &graph,
+        &Placement { slot_of: tc.slots.clone() },
+        &fleet,
+        failed_slot,
+        tc.max_m.max(1),
+    )?;
+    let reconfig_cycles =
+        f.recovery_cycles.unwrap_or_else(|| ReconfigModel::for_device(device).cycles());
+    let remap = rec
+        .moved
+        .iter()
+        .map(|mv| (GlobalKernelId::new(cluster, mv.kernel), FpgaId(base + mv.to)))
+        .collect();
+    sim.schedule_failure(crate::sim::engine::FailurePlan {
+        fpga: FpgaId(f.fpga),
+        at: f.at_cycle,
+        recovery_cycles: reconfig_cycles,
+        remap,
+    })?;
+    Ok((
+        PlannedRecovery {
+            fpga: f.fpga,
+            cluster,
+            moved_kernels: rec.moved.len(),
+            reconfig_cycles,
+            degraded: rec.degraded,
+        },
+        t,
+    ))
+}
+
 /// Measured result of one testbed run, decomposed the way §8.2.2 does.
 pub struct EncoderRunResult {
     /// first-output latency at the evaluation sink (cycles)

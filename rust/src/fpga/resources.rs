@@ -42,6 +42,15 @@ impl AddAssign for ResourceUsage {
     }
 }
 
+/// Rolling up usages is how multi-tenant accounting works: each
+/// tenant's kernels sum into one ledger line, checked against the
+/// budget of the sub-fleet that tenant was allocated.
+impl std::iter::Sum for ResourceUsage {
+    fn sum<I: Iterator<Item = ResourceUsage>>(iter: I) -> ResourceUsage {
+        iter.fold(ResourceUsage::default(), |a, b| a + b)
+    }
+}
+
 impl ResourceUsage {
     /// Utilisation fractions against a budget: (lut, ff, bram, dsp).
     pub fn utilisation(&self, b: &ResourceBudget) -> (f64, f64, f64, f64) {
@@ -182,6 +191,16 @@ mod tests {
         assert_eq!(batched_kv_cache_bram18(128 * 64, 8), 32);
         // a sub-block cache still costs one full block PER slot
         assert_eq!(batched_kv_cache_bram18(100, 4), 4);
+    }
+
+    #[test]
+    fn usage_sums_per_component() {
+        let a = ResourceUsage { lut: 1, ff: 2, bram18: 3, dsp: 4 };
+        let b = ResourceUsage { lut: 10, ff: 20, bram18: 30, dsp: 40 };
+        let total: ResourceUsage = [a, b].into_iter().sum();
+        assert_eq!(total, ResourceUsage { lut: 11, ff: 22, bram18: 33, dsp: 44 });
+        let empty: ResourceUsage = std::iter::empty().sum();
+        assert_eq!(empty, ResourceUsage::default());
     }
 
     #[test]

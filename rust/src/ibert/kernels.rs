@@ -1022,6 +1022,9 @@ pub struct SinkData {
     /// inference -> (packets received, time of last arrival) — works in
     /// Timing mode too (drives the throughput measurements of Fig. 20)
     pub arrivals: HashMap<u32, (u32, u64)>,
+    /// inference -> time of FIRST arrival: the prefill TTFT signal of
+    /// the multi-tenant serving report (first output row at the sink)
+    pub first: HashMap<u32, u64>,
 }
 
 impl SinkData {
@@ -1059,6 +1062,7 @@ impl KernelBehavior for SinkKernel {
             let a = d.arrivals.entry(meta.inference).or_insert((0, 0));
             a.0 += 1;
             a.1 = a.1.max(at);
+            d.first.entry(meta.inference).and_modify(|t| *t = (*t).min(at)).or_insert(at);
             if let Payload::RowI8(v) = payload {
                 let row = Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone());
                 d.rows.entry(meta.inference).or_default().insert(meta.row, row);

@@ -67,14 +67,24 @@ COMMANDS:
             nonzero on regression
   plan      [--config configs/ibert_poc.json] [--m <max_seq>] [--fleet N] [--out plan.json]
             [--replay]   (replay needs the ibert-base shape)
-  fleet     [--chains 28] [--encoders 6] [--m 16] [--inferences 1] [--interval 12]
+            [--tenants configs/tenants_3.json]   (multi-tenant packing:
+            place every tenant's kernel graph onto one shared fleet in
+            declaration order — prints the per-tenant packing table and
+            leftover capacity; --fleet N sizes the shared fleet)
+  fleet     [--chains 28] [--encoders 6] [--m 16] [--inferences 1] [--rate 20000]
+            [--interval 12]
             [--drop 0.02] [--reliable] [--net-seed 7] [--shards cluster|fpga]
             [--event-budget N]   (stop after N events with a truncated
             report instead of running to quiescence) [--profile]
             synthetic fleet-scale scenario: chains x encoders x 6 FPGAs
             + 1 eval FPGA (defaults reach 1009), constant-memory
-            streaming stats — the thousand-FPGA lossy scenario behind
+            streaming stats, per-chain Poisson arrival streams at --rate
+            seqs/s — the thousand-FPGA lossy scenario behind
             benches/fleetscale.rs
+            [--tenants configs/tenants_3.json [--chains-per-tenant 2]]
+            (heterogeneous fleet: each tenant contributes chains of its
+            own depth and build point, streaming its own offered
+            schedule — mixed model shapes on one fabric)
   build     [--config configs/ibert_poc.json] [--out target/cluster_build]
   versal
   serve     [--encoders 6] [--requests 200] [--workload glue|mrpc|squad]
@@ -103,6 +113,11 @@ COMMANDS:
             batch-window cycles for batch-mates; needs --decode, upgrades
             the report to serving_report/v5 with the batching section;
             --batch-max 1 is exactly the unbatched v4 run)
+            [--tenants configs/tenants_3.json]   (multi-tenant serving:
+            N model graphs packed onto one fleet, SLO-aware admission per
+            traffic class, serving_report/v6 with per-tenant TTFT/latency
+            percentiles + cross-tenant fairness; composes with --seed,
+            --shards, --fail, --threads and --out)
             [--backend sim|pjrt]   (pjrt: [--requests 16] [--encoders 2])
   info
 
@@ -627,6 +642,9 @@ fn cmd_bench_profile(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
+    if args.str_opt("tenants").is_some() {
+        return cmd_plan_tenants(args);
+    }
     let cfg_path = args.str_or("config", "configs/ibert_poc.json");
     let d = if std::path::Path::new(&cfg_path).exists() {
         BuildDescription::load(&cfg_path)?
@@ -719,6 +737,44 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `plan --tenants <config>`: pack every tenant's kernel graph onto one
+/// shared fleet (declaration-order minimal-prefix packing) and print
+/// the per-tenant table plus leftover capacity.
+fn cmd_plan_tenants(args: &Args) -> Result<()> {
+    use galapagos_llm::fpga::resources::Device;
+    use galapagos_llm::serve::tenant::TenantsConfig;
+
+    let path = args.str_or("tenants", "configs/tenants_3.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("--tenants {path}: {e}"))?;
+    let tc = TenantsConfig::parse(&text)?;
+    let specs: Vec<placer::TenantGraphSpec> = tc
+        .tenants
+        .iter()
+        .map(|t| placer::TenantGraphSpec {
+            name: t.name.clone(),
+            shape: placer::ModelShape {
+                max_seq: t.max_m,
+                ..placer::ModelShape::ibert_base()
+            },
+            m: t.max_m,
+        })
+        .collect();
+    let n = args.usize_or("fleet", 8 * specs.len())?;
+    let fleet = placer::Fleet::homogeneous(Device::Xczu19eg, n, tc.fpgas_per_switch);
+    println!(
+        "packing {} tenant graph(s) onto {} FPGA slot(s), {} per switch",
+        specs.len(),
+        fleet.n_slots(),
+        fleet.fpgas_per_switch
+    );
+    let pe = galapagos_llm::ibert::timing::PeConfig::default();
+    let mp = placer::place_multi(&specs, &pe, &fleet)?;
+    println!("{}", placer::report::multi_tenant_table(&mp).render());
+    println!("free slots: {} of {}", mp.free_slots(), mp.fleet.n_slots());
+    Ok(())
+}
+
 /// Run a synthetic fleet-scale scenario (N chains x M encoder clusters
 /// x 6 FPGAs + the evaluation FPGA) with constant-memory streaming
 /// stats and an optional event-budget profile.
@@ -730,6 +786,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     cfg.encoders_per_chain = args.usize_or("encoders", cfg.encoders_per_chain)?;
     cfg.m = args.usize_or("m", cfg.m)?;
     cfg.inferences = args.u64_or("inferences", cfg.inferences as u64)? as u32;
+    cfg.rate = args.f64_or("rate", cfg.rate)?;
     cfg.interval = args.u64_or("interval", cfg.interval)?;
     cfg.net.drop_probability = args.f64_or("drop", 0.0)?;
     cfg.net.reliable = args.bool_or("reliable", false)?;
@@ -743,26 +800,48 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.event_budget = Some(args.u64_or("event-budget", 0)?);
     }
     cfg.profile = args.bool_or("profile", false)?;
+    if let Some(path) = args.str_opt("tenants") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--tenants {path}: {e}"))?;
+        cfg.tenants = Some(galapagos_llm::serve::tenant::TenantsConfig::parse(&text)?);
+        cfg.chains_per_tenant = args.usize_or("chains-per-tenant", 1)?;
+    }
 
-    println!(
-        "fleet: {} chains x {} encoders x 6 FPGAs + 1 eval = {} FPGAs ({} clusters); \
-         m={}, {} inference(s)/chain{}",
-        cfg.chains,
-        cfg.encoders_per_chain,
-        cfg.total_fpgas(),
-        cfg.chains * cfg.encoders_per_chain,
-        cfg.m,
-        cfg.inferences,
-        if cfg.net.drop_probability > 0.0 {
-            format!(
-                ", drop={}{}",
-                cfg.net.drop_probability,
-                if cfg.net.reliable { " (reliable)" } else { "" }
-            )
-        } else {
-            String::new()
-        }
-    );
+    let lossy = if cfg.net.drop_probability > 0.0 {
+        format!(
+            ", drop={}{}",
+            cfg.net.drop_probability,
+            if cfg.net.reliable { " (reliable)" } else { "" }
+        )
+    } else {
+        String::new()
+    };
+    match &cfg.tenants {
+        None => println!(
+            "fleet: {} chains x {} encoders x 6 FPGAs + 1 eval = {} FPGAs ({} clusters); \
+             m={}, {} inference(s)/chain at {:.0} seqs/s{}",
+            cfg.chains,
+            cfg.encoders_per_chain,
+            cfg.total_fpgas(),
+            cfg.chains * cfg.encoders_per_chain,
+            cfg.m,
+            cfg.inferences,
+            cfg.rate,
+            lossy
+        ),
+        Some(tc) => println!(
+            "fleet: {} tenant(s) x {} chain(s) each = {} FPGAs; chain depths: {}{}",
+            tc.tenants.len(),
+            cfg.chains_per_tenant,
+            cfg.total_fpgas(),
+            tc.tenants
+                .iter()
+                .map(|t| format!("{}={}", t.name, t.encoders))
+                .collect::<Vec<_>>()
+                .join(", "),
+            lossy
+        ),
+    }
     let t0 = std::time::Instant::now();
     let (r, fleet) = run_fleet(&cfg)?;
     let wall = t0.elapsed();
@@ -783,7 +862,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     );
     println!(
         "arrivals: first {}  last {}  max coincident rows/cycle {} \
-         (chain phases derived from net-seed {})",
+         (per-chain arrival streams derived from net-seed {})",
         r.first_arrival, r.last_arrival, r.coincident_rows_max, cfg.net.seed
     );
     if r.dropped > 0 || r.retransmits > 0 {
@@ -871,6 +950,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         run_serving_with_obs, ArrivalProcess, DecodeConfig, LengthDist, ServeConfig,
     };
 
+    if args.str_opt("tenants").is_some() {
+        return cmd_serve_tenants(args);
+    }
     let quick = args.bool_or("quick", false)?;
     let encoders = args.usize_or("encoders", 6)?;
     let requests = args.usize_or("requests", if quick { 32 } else { 200 })?;
@@ -995,6 +1077,56 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     {
         std::fs::write(path, text)?;
         println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+/// `serve --tenants <config>`: N model graphs on one fleet. Each tenant's
+/// offered schedule passes SLO-aware admission, the multi-placer packs
+/// the roster onto a shared fleet, one simulation serves the mixed
+/// schedule, and the report upgrades to serving_report/v6 (per-tenant
+/// percentiles, reject rates, cross-tenant fairness).
+fn cmd_serve_tenants(args: &Args) -> Result<()> {
+    use galapagos_llm::serve::tenant::TenantsConfig;
+    use galapagos_llm::serve::{run_multi_tenant_serving, MultiTenantConfig};
+
+    let path = args.str_or("tenants", "configs/tenants_3.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("--tenants {path}: {e}"))?;
+    let tenants = TenantsConfig::parse(&text)?;
+    let mut cfg = MultiTenantConfig::new(tenants, args.u64_or("seed", 7)?);
+    cfg.granularity = match args.str_or("shards", "cluster").as_str() {
+        "cluster" => Some(galapagos_llm::sim::ShardGranularity::PerCluster),
+        "fpga" => Some(galapagos_llm::sim::ShardGranularity::PerFpga),
+        other => bail!("unknown shard granularity {other:?} (expected cluster|fpga)"),
+    };
+    cfg.fail = parse_fail(args)?;
+    for t in &cfg.tenants.tenants {
+        println!(
+            "tenant {:<12} {} encoder(s)  max_m {:>3}  {:<11} SLO p99 {:>6.0} us  \
+             {:>2} kv slot(s)  {} request(s) ({} @ {:.0} seqs/s)",
+            t.name,
+            t.encoders,
+            t.max_m,
+            t.class.name(),
+            t.slo_p99_us,
+            t.kv_slots,
+            t.requests,
+            t.process.name(),
+            t.process.seqs_per_s()
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let report = run_multi_tenant_serving(&cfg)?;
+    println!("{}", report.render());
+    println!(
+        "(DES: {} events in {:.1} ms wall)",
+        report.events,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, report.to_json().pretty())?;
+        println!("report written to {out}");
     }
     Ok(())
 }

@@ -51,6 +51,20 @@ impl LatencyEstimate {
     }
 }
 
+/// A tenant's unloaded chain latency as a fraction of its SLO budget:
+/// Eq. 1 extrapolation of this placement over `encoders` clusters,
+/// divided by `slo_p99_us` in fabric cycles. Above 1.0 the plan cannot
+/// meet the SLO even with zero queueing — `plan --tenants` prints this
+/// so infeasible SLO targets are caught before serving, and the serving
+/// admission controller charges queueing on top of it.
+pub fn slo_fraction(est: &LatencyEstimate, encoders: usize, d_cycles: u64, slo_p99_us: f64) -> f64 {
+    let budget = slo_p99_us * 1e-6 * crate::FABRIC_CLOCK_HZ as f64;
+    if budget <= 0.0 {
+        return f64::INFINITY;
+    }
+    est.chain_cycles(encoders, d_cycles) as f64 / budget
+}
+
 /// Per-role initiation interval (cycles between output rows) at actual
 /// sequence length `m` — the `ibert::timing` models the simulator uses.
 fn role_ii(role: KernelRole, g: &KernelGraph, m: usize) -> u64 {
@@ -351,6 +365,21 @@ mod tests {
         assert_eq!(e.chain_cycles(1, 220), 250);
         assert_eq!(e.chain_cycles(12, 220), 250 + 11 * 320);
         assert_eq!(e.chain_cycles(0, 220), 250); // saturates, no underflow
+    }
+
+    #[test]
+    fn slo_fraction_scales_with_budget_and_chain() {
+        let e = LatencyEstimate { x: 100, t: 250, i: 5 };
+        // one cluster at 250 cycles; a 250-cycle budget is exactly 1.0
+        let budget_us = 250.0 / crate::FABRIC_CLOCK_HZ as f64 * 1e6;
+        let f1 = slo_fraction(&e, 1, 220, budget_us);
+        assert!((f1 - 1.0).abs() < 1e-9, "{f1}");
+        // doubling the budget halves the fraction; longer chains raise it
+        assert!((slo_fraction(&e, 1, 220, 2.0 * budget_us) - 0.5).abs() < 1e-9);
+        assert!(slo_fraction(&e, 12, 220, budget_us) > f1);
+        // degenerate budgets are infeasible, not a division crash
+        assert_eq!(slo_fraction(&e, 1, 220, 0.0), f64::INFINITY);
+        assert_eq!(slo_fraction(&e, 1, 220, -5.0), f64::INFINITY);
     }
 
     #[test]

@@ -17,20 +17,25 @@
 //!   discrete-event simulator (`ibert::timing`, `sim::params`);
 //! * [`validate`] checks completeness + per-device `ResourceBudget` fit
 //!   and replays paper-shaped placements through the simulator;
-//! * [`report`] renders placements as the CLI's `plan` tables.
+//! * [`report`] renders placements as the CLI's `plan` tables;
+//! * [`multi`] packs N independent tenant graphs onto ONE fleet
+//!   (spatial partitioning with per-tenant accounting and
+//!   per-tenant-minimal recovery — `plan --tenants` / `serve --tenants`).
 //!
 //! For the paper's own configuration (I-BERT-base on six XCZU19EG behind
 //! one switch) the search reproduces the Fig. 14 mapping exactly.
 
 pub mod cost;
+pub mod multi;
 pub mod recover;
 pub mod report;
 pub mod search;
 pub mod validate;
 
 pub use cost::LatencyEstimate;
+pub use multi::{place_multi, recover_multi, MultiPlacement, TenantGraphSpec, TenantPlacement};
 pub use recover::{replace_after_failure, ReconfigModel, RecoverySolution};
-pub use search::{place, PlacementSolution, SearchParams};
+pub use search::{place, place_on_prefix, PlacementSolution, SearchParams};
 
 use anyhow::{bail, ensure, Result};
 

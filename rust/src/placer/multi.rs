@@ -1,0 +1,371 @@
+//! Multi-tenant placement: pack N independent model graphs onto ONE
+//! fleet, with per-tenant resource accounting and per-tenant-minimal
+//! recovery.
+//!
+//! The single-model placer maps one [`KernelGraph`] onto a [`Fleet`];
+//! a multi-tenant fleet hosts several tenants — possibly different
+//! shapes — at once. The packing discipline is *spatial partitioning*:
+//! tenants are placed in declaration order, each taking the minimal
+//! contiguous run of remaining slots that admits its graph
+//! ([`search::place_on_prefix`]). Tenants therefore never share an FPGA,
+//! which buys three properties the serving layer leans on:
+//!
+//! * **accounting** — a tenant's resource ledger is exactly the sum of
+//!   its kernels' usage on its own slots ([`TenantPlacement::usage`]);
+//!   no cross-tenant attribution problem exists by construction;
+//! * **isolation** — one tenant's placement (and its recovery) is a
+//!   pure function of its own sub-fleet, so a noisy or failing tenant
+//!   cannot move another tenant's kernels;
+//! * **determinism** — the packing order alone fixes the outcome, so
+//!   multi-tenant plans inherit the placer's reproducibility contract.
+//!
+//! Recovery ([`recover_multi`]) maps a failed global slot to its owning
+//! tenant and re-places *only* that tenant's displaced kernels within
+//! its own sub-fleet (possibly degrading it); every other tenant's
+//! mapping is untouched — asserted, not just intended.
+
+use anyhow::{bail, ensure, Result};
+
+use super::cost::LatencyEstimate;
+use super::recover::{replace_after_failure, Move, RecoverySolution};
+use super::search::{place_on_prefix, SearchParams};
+use super::{Fleet, KernelGraph, ModelShape, Placement};
+use crate::fpga::resources::{ResourceBudget, ResourceUsage};
+use crate::ibert::timing::PeConfig;
+
+/// One tenant's placement request: a model shape plus the sequence
+/// length its cost model should optimize for.
+#[derive(Debug, Clone)]
+pub struct TenantGraphSpec {
+    pub name: String,
+    pub shape: ModelShape,
+    /// sequence length for `SearchParams::for_m` (the tenant's `max_m`)
+    pub m: usize,
+}
+
+impl TenantGraphSpec {
+    /// Model shapes addressable by name in tenant config files.
+    pub fn shape_by_name(name: &str) -> Option<ModelShape> {
+        match name {
+            "ibert-base" => Some(ModelShape::ibert_base()),
+            "bert-large" => Some(ModelShape::bert_large()),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant's share of a packed fleet.
+#[derive(Debug, Clone)]
+pub struct TenantPlacement {
+    pub name: String,
+    pub graph: KernelGraph,
+    /// kernel -> slot mapping, LOCAL to the tenant's sub-fleet
+    pub placement: Placement,
+    /// first global fleet slot of the tenant's contiguous range
+    pub slot_base: usize,
+    /// width of the allocated range (`slot_base..slot_base + slots`)
+    pub slots: usize,
+    pub predicted: LatencyEstimate,
+    /// aggregate usage of every kernel, on the slots it landed on — the
+    /// tenant's ledger line in the fleet's resource accounting
+    pub usage: ResourceUsage,
+}
+
+impl TenantPlacement {
+    /// Kernel -> GLOBAL fleet slot (local placement + base offset).
+    pub fn global_slot_of(&self) -> Vec<usize> {
+        self.placement.slot_of.iter().map(|&s| s + self.slot_base).collect()
+    }
+
+    /// Total budget of the tenant's allocated slots.
+    pub fn allocated_budget(&self, fleet: &Fleet) -> ResourceBudget {
+        let mut b = ResourceBudget { lut: 0, ff: 0, bram18: 0, dsp: 0 };
+        for s in self.slot_base..self.slot_base + self.slots {
+            let d = fleet.budget(s);
+            b.lut += d.lut;
+            b.ff += d.ff;
+            b.bram18 += d.bram18;
+            b.dsp += d.dsp;
+        }
+        b
+    }
+
+    /// Worst per-resource utilisation of the tenant's aggregate usage
+    /// against its allocated budget (the accounting headline).
+    pub fn max_utilisation(&self, fleet: &Fleet) -> f64 {
+        self.usage.max_utilisation(&self.allocated_budget(fleet))
+    }
+}
+
+/// N tenants packed onto one fleet.
+#[derive(Debug, Clone)]
+pub struct MultiPlacement {
+    pub fleet: Fleet,
+    pub tenants: Vec<TenantPlacement>,
+}
+
+impl MultiPlacement {
+    /// Which tenant owns a global fleet slot (None = unallocated tail).
+    pub fn tenant_of_slot(&self, slot: usize) -> Option<usize> {
+        self.tenants
+            .iter()
+            .position(|t| (t.slot_base..t.slot_base + t.slots).contains(&slot))
+    }
+
+    /// The sub-fleet allocated to tenant `t`.
+    pub fn sub_fleet(&self, t: usize) -> Fleet {
+        let tp = &self.tenants[t];
+        Fleet {
+            devices: self.fleet.devices[tp.slot_base..tp.slot_base + tp.slots].to_vec(),
+            fpgas_per_switch: self.fleet.fpgas_per_switch,
+            util_cap: self.fleet.util_cap,
+        }
+    }
+
+    /// Global slots still unallocated after the packing.
+    pub fn free_slots(&self) -> usize {
+        let used: usize = self.tenants.iter().map(|t| t.slots).sum();
+        self.fleet.n_slots() - used
+    }
+}
+
+/// Pack `specs` onto `fleet` in declaration order: each tenant takes the
+/// minimal contiguous run of remaining slots that places its shape.
+/// Fails (naming the tenant) when the remaining slots cannot admit one.
+pub fn place_multi(
+    specs: &[TenantGraphSpec],
+    pe: &PeConfig,
+    fleet: &Fleet,
+) -> Result<MultiPlacement> {
+    fleet.validate()?;
+    ensure!(!specs.is_empty(), "place_multi needs at least one tenant");
+    {
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        ensure!(names.len() == specs.len(), "tenant names must be unique");
+        ensure!(specs.iter().all(|s| !s.name.is_empty()), "tenant names must be non-empty");
+    }
+
+    let mut tenants = Vec::with_capacity(specs.len());
+    let mut cursor = 0usize;
+    for spec in specs {
+        spec.shape.validate()?;
+        let remaining = Fleet {
+            devices: fleet.devices[cursor..].to_vec(),
+            fpgas_per_switch: fleet.fpgas_per_switch,
+            util_cap: fleet.util_cap,
+        };
+        if remaining.devices.is_empty() {
+            bail!(
+                "fleet exhausted before tenant '{}': {} slots already allocated",
+                spec.name,
+                cursor
+            );
+        }
+        let sp = SearchParams::for_m(spec.m.clamp(1, spec.shape.max_seq));
+        let (slots, sol) = place_on_prefix(&spec.shape, pe, &remaining, &sp).map_err(|e| {
+            anyhow::anyhow!(
+                "tenant '{}' does not fit the remaining {} fleet slots: {e}",
+                spec.name,
+                remaining.n_slots()
+            )
+        })?;
+        let usage: ResourceUsage = (0..sol.graph.n_kernels())
+            .map(|k| {
+                sol.graph.usage(k as u8, remaining.device(sol.placement.slot_of[k]))
+            })
+            .sum();
+        tenants.push(TenantPlacement {
+            name: spec.name.clone(),
+            graph: sol.graph,
+            placement: sol.placement,
+            slot_base: cursor,
+            slots,
+            predicted: sol.predicted,
+            usage,
+        });
+        cursor += slots;
+    }
+    Ok(MultiPlacement { fleet: fleet.clone(), tenants })
+}
+
+/// One tenant's recovery inside a multi-tenant fleet.
+#[derive(Debug, Clone)]
+pub struct MultiRecovery {
+    /// index into `MultiPlacement::tenants` of the tenant that failed
+    pub tenant: usize,
+    pub name: String,
+    /// the tenant-local recovery (slots relative to its sub-fleet)
+    pub solution: RecoverySolution,
+    /// the same moves in global fleet slots
+    pub moved_global: Vec<Move>,
+}
+
+/// Re-place after the failure of global slot `failed_slot`: the owning
+/// tenant's displaced kernels are re-packed onto the *survivors of its
+/// own sub-fleet* (degrading that tenant alone if it must overcommit);
+/// every other tenant's placement is untouched by construction.
+pub fn recover_multi(mp: &MultiPlacement, failed_slot: usize, m: usize) -> Result<MultiRecovery> {
+    ensure!(failed_slot < mp.fleet.n_slots(), "failed slot {failed_slot} outside the fleet");
+    let Some(t) = mp.tenant_of_slot(failed_slot) else {
+        bail!("slot {failed_slot} is unallocated: nothing to recover");
+    };
+    let tp = &mp.tenants[t];
+    let sub = mp.sub_fleet(t);
+    let local = failed_slot - tp.slot_base;
+    let solution = replace_after_failure(&tp.graph, &tp.placement, &sub, local, m)?;
+    let moved_global = solution.moved.iter().map(|mv| mv.offset(tp.slot_base)).collect();
+    Ok(MultiRecovery { tenant: t, name: tp.name.clone(), solution, moved_global })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::Device;
+
+    fn three_tenants() -> Vec<TenantGraphSpec> {
+        vec![
+            TenantGraphSpec { name: "chat".into(), shape: ModelShape::ibert_base(), m: 128 },
+            TenantGraphSpec { name: "search".into(), shape: ModelShape::bert_large(), m: 64 },
+            TenantGraphSpec { name: "batch".into(), shape: ModelShape::ibert_base(), m: 32 },
+        ]
+    }
+
+    #[test]
+    fn mixed_shapes_pack_disjoint_contiguous_ranges() {
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 30, 6);
+        let mp = place_multi(&three_tenants(), &PeConfig::default(), &fleet).unwrap();
+        assert_eq!(mp.tenants.len(), 3);
+        // contiguous, disjoint, in declaration order
+        let mut cursor = 0;
+        for t in &mp.tenants {
+            assert_eq!(t.slot_base, cursor, "tenant '{}' range must be contiguous", t.name);
+            assert!(t.slots >= 1);
+            cursor += t.slots;
+        }
+        assert!(cursor <= 30);
+        assert_eq!(mp.free_slots(), 30 - cursor);
+        // every kernel stays inside its tenant's range
+        for t in &mp.tenants {
+            for &s in &t.global_slot_of() {
+                assert!((t.slot_base..t.slot_base + t.slots).contains(&s));
+            }
+        }
+        // bert-large auto-splits its FFN and needs a wider range
+        assert!(mp.tenants[1].graph.shape.ffn_split >= 2);
+        assert!(mp.tenants[1].slots > mp.tenants[0].slots);
+        // ownership lookup round-trips
+        for (i, t) in mp.tenants.iter().enumerate() {
+            assert_eq!(mp.tenant_of_slot(t.slot_base), Some(i));
+            assert_eq!(mp.tenant_of_slot(t.slot_base + t.slots - 1), Some(i));
+        }
+        assert_eq!(mp.tenant_of_slot(29), None, "tail slots stay unallocated");
+    }
+
+    #[test]
+    fn per_tenant_accounting_fits_allocated_budgets() {
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 30, 6);
+        let mp = place_multi(&three_tenants(), &PeConfig::default(), &fleet).unwrap();
+        for t in &mp.tenants {
+            assert!(t.usage.lut > 0 && t.usage.bram18 > 0, "'{}' ledger is non-trivial", t.name);
+            let util = t.max_utilisation(&fleet);
+            assert!(util > 0.0 && util <= 1.0, "'{}' at {util:.2} of its allocation", t.name);
+        }
+        // the ledger is per-kernel usage summed — recompute independently
+        let t0 = &mp.tenants[0];
+        let sub = mp.sub_fleet(0);
+        let recomputed: ResourceUsage = (0..t0.graph.n_kernels())
+            .map(|k| t0.graph.usage(k as u8, sub.device(t0.placement.slot_of[k])))
+            .sum();
+        assert_eq!(t0.usage, recomputed);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_packs_in_slot_order() {
+        // a mixed fleet: the first tenant takes the leading XCZU19EGs,
+        // the second lands on whatever follows (including Versal parts)
+        let mut devices = vec![Device::Xczu19eg; 8];
+        devices.extend(vec![Device::Xcvc1902; 8]);
+        let fleet = Fleet { devices, fpgas_per_switch: 6, util_cap: 0.85 };
+        let specs = vec![
+            TenantGraphSpec { name: "a".into(), shape: ModelShape::ibert_base(), m: 128 },
+            TenantGraphSpec { name: "b".into(), shape: ModelShape::ibert_base(), m: 128 },
+        ];
+        let mp = place_multi(&specs, &PeConfig::default(), &fleet).unwrap();
+        assert_eq!(mp.tenants[0].slot_base, 0);
+        assert_eq!(mp.tenants[1].slot_base, mp.tenants[0].slots);
+        // sub-fleet devices really are the global fleet's slice
+        let sub1 = mp.sub_fleet(1);
+        let base = mp.tenants[1].slot_base;
+        for (i, d) in sub1.devices.iter().enumerate() {
+            assert_eq!(*d, mp.fleet.device(base + i));
+        }
+    }
+
+    #[test]
+    fn recovery_touches_only_the_owning_tenant() {
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 30, 6);
+        let mp = place_multi(&three_tenants(), &PeConfig::default(), &fleet).unwrap();
+        // fail a slot owned by tenant 1 (bert-large)
+        let failed = mp.tenants[1].slot_base + 1;
+        assert_eq!(mp.tenant_of_slot(failed), Some(1));
+        let rec = recover_multi(&mp, failed, 64).unwrap();
+        assert_eq!((rec.tenant, rec.name.as_str()), (1, "search"));
+        // the local recovery never references slots outside the sub-fleet
+        let width = mp.tenants[1].slots;
+        assert!(rec.solution.placement.slot_of.iter().all(|&s| s < width));
+        // global moves stay inside the owner's range and off the dead slot
+        let range = mp.tenants[1].slot_base..mp.tenants[1].slot_base + width;
+        for mv in &rec.moved_global {
+            assert_eq!(mv.from, failed);
+            assert!(range.contains(&mv.to) && mv.to != failed);
+        }
+        // tenants 0 and 2 are untouched: same struct, same placements —
+        // recovery does not even take them as input, but assert anyway
+        assert_eq!(rec.solution.moved.len(), rec.moved_global.len());
+        for (i, t) in mp.tenants.iter().enumerate() {
+            if i != 1 {
+                assert!(!t.global_slot_of().iter().any(|&s| s == failed));
+            }
+        }
+    }
+
+    #[test]
+    fn packing_failures_name_the_tenant() {
+        // 8 slots: the first tenant fits, bert-large cannot
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 8, 6);
+        let specs = vec![
+            TenantGraphSpec { name: "small".into(), shape: ModelShape::ibert_base(), m: 128 },
+            TenantGraphSpec { name: "big".into(), shape: ModelShape::bert_large(), m: 128 },
+        ];
+        let err = place_multi(&specs, &PeConfig::default(), &fleet).unwrap_err().to_string();
+        assert!(err.contains("big"), "{err}");
+        // duplicate names are rejected up front
+        let dup = vec![
+            TenantGraphSpec { name: "x".into(), shape: ModelShape::ibert_base(), m: 128 },
+            TenantGraphSpec { name: "x".into(), shape: ModelShape::ibert_base(), m: 128 },
+        ];
+        let err = place_multi(&dup, &PeConfig::default(), &fleet).unwrap_err().to_string();
+        assert!(err.contains("unique"), "{err}");
+    }
+
+    #[test]
+    fn recovering_an_unallocated_slot_is_an_error() {
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 30, 6);
+        let specs =
+            vec![TenantGraphSpec { name: "only".into(), shape: ModelShape::ibert_base(), m: 128 }];
+        let mp = place_multi(&specs, &PeConfig::default(), &fleet).unwrap();
+        assert!(mp.free_slots() > 0);
+        let err = recover_multi(&mp, 29, 128).unwrap_err().to_string();
+        assert!(err.contains("unallocated"), "{err}");
+        assert!(recover_multi(&mp, 99, 128).is_err());
+    }
+
+    #[test]
+    fn shape_names_resolve() {
+        assert_eq!(TenantGraphSpec::shape_by_name("ibert-base"), Some(ModelShape::ibert_base()));
+        assert_eq!(TenantGraphSpec::shape_by_name("bert-large"), Some(ModelShape::bert_large()));
+        assert_eq!(TenantGraphSpec::shape_by_name("gpt-5"), None);
+    }
+}

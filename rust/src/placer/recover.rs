@@ -61,6 +61,16 @@ pub struct Move {
     pub to: usize,
 }
 
+impl Move {
+    /// The same move expressed in global fleet slots. A tenant's recovery
+    /// runs against its own sub-fleet (`placer::multi`), so the
+    /// fleet-level view adds the sub-fleet's base offset — keeping the
+    /// re-place itself provably ignorant of every other tenant's slots.
+    pub fn offset(self, base: usize) -> Move {
+        Move { kernel: self.kernel, from: self.from + base, to: self.to + base }
+    }
+}
+
 /// A recovery placement for one failed slot.
 #[derive(Debug, Clone)]
 pub struct RecoverySolution {
@@ -243,6 +253,13 @@ mod tests {
             replace_after_failure(&sol.graph, &sol.placement, &fleet, failed, 128).unwrap();
         assert!(!rec.degraded, "a 9-slot fleet has room for one FPGA's kernels");
         crate::placer::validate::check(&sol.graph, &rec.placement, &fleet).unwrap();
+    }
+
+    #[test]
+    fn move_offset_shifts_both_slots() {
+        let m = Move { kernel: 7, from: 2, to: 4 };
+        assert_eq!(m.offset(10), Move { kernel: 7, from: 12, to: 14 });
+        assert_eq!(m.offset(0), m);
     }
 
     #[test]

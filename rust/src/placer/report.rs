@@ -3,6 +3,7 @@
 use crate::util::table::{pct, Table};
 use crate::{cycles_to_us, FABRIC_CLOCK_HZ};
 
+use super::multi::MultiPlacement;
 use super::validate::SlotReport;
 use super::{Fleet, KernelGraph, Placement, PlacementSolution};
 
@@ -77,6 +78,29 @@ pub fn latency_summary(
     )
 }
 
+/// Per-tenant packing table for `plan --tenants`: one ledger row per
+/// tenant — slot range, shape, FFN split, aggregate utilisation of the
+/// allocated sub-fleet, and the predicted per-encoder T.
+pub fn multi_tenant_table(mp: &MultiPlacement) -> Table {
+    let mut t = Table::new(
+        "Multi-tenant packing (tenant -> fleet slots)",
+        &["tenant", "slots", "shape", "split", "kernels", "peak util", "T (us)"],
+    );
+    for tp in &mp.tenants {
+        let s = tp.graph.shape;
+        t.row(vec![
+            tp.name.clone(),
+            format!("{}..{}", tp.slot_base, tp.slot_base + tp.slots - 1),
+            format!("{}x{}x{}h", s.hidden, s.ffn, s.heads),
+            format!("{}", s.ffn_split),
+            format!("{}", tp.graph.n_kernels()),
+            pct(tp.max_utilisation(&mp.fleet)),
+            format!("{:.2}", cycles_to_us(tp.predicted.t)),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +119,20 @@ mod tests {
         let ut = utilisation_table(&reports).render();
         assert!(ut.contains("OK"));
         assert!(!ut.contains("OVER"));
+    }
+
+    #[test]
+    fn multi_tenant_table_lists_every_tenant() {
+        use crate::fpga::resources::Device;
+        use crate::placer::{place_multi, TenantGraphSpec};
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 30, 6);
+        let specs = vec![
+            TenantGraphSpec { name: "alpha".into(), shape: ModelShape::ibert_base(), m: 128 },
+            TenantGraphSpec { name: "beta".into(), shape: ModelShape::bert_large(), m: 64 },
+        ];
+        let mp = place_multi(&specs, &PeConfig::default(), &fleet).unwrap();
+        let out = multi_tenant_table(&mp).render();
+        assert!(out.contains("alpha") && out.contains("beta"));
+        assert!(out.contains("768x3072x12h") && out.contains("1024x4096x16h"));
     }
 }

@@ -104,6 +104,34 @@ pub fn place(
     Ok(PlacementSolution { graph, placement, predicted, slots_used, moves_applied })
 }
 
+/// Place `shape` on the smallest *prefix* of `fleet` that admits it: try
+/// `devices[..n]` for growing `n` and return the first success together
+/// with the prefix width. This is the deterministic building block of
+/// multi-tenant packing (`placer::multi::place_multi`): each tenant takes
+/// the minimal contiguous run of remaining slots, so tenants never share
+/// an FPGA and the packing order alone fixes the outcome.
+pub fn place_on_prefix(
+    shape: &ModelShape,
+    pe: &PeConfig,
+    fleet: &Fleet,
+    sp: &SearchParams,
+) -> Result<(usize, PlacementSolution)> {
+    fleet.validate()?;
+    let mut last_err = None;
+    for n in 1..=fleet.n_slots() {
+        let sub = Fleet {
+            devices: fleet.devices[..n].to_vec(),
+            fpgas_per_switch: fleet.fpgas_per_switch,
+            util_cap: fleet.util_cap,
+        };
+        match place(shape, pe, &sub, sp) {
+            Ok(sol) => return Ok((n, sol)),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("fleet.validate() guarantees at least one slot"))
+}
+
 fn fits(used: ResourceUsage, budget: &ResourceBudget) -> bool {
     used.fits(budget)
 }
@@ -284,6 +312,42 @@ mod tests {
             &SearchParams::default(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn prefix_placement_is_minimal_and_matches_plain_place() {
+        let fleet = Fleet::homogeneous(Device::Xczu19eg, 12, 6);
+        let (n, sol) = place_on_prefix(
+            &ModelShape::ibert_base(),
+            &PeConfig::default(),
+            &fleet,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        assert!(n >= sol.slots_used, "prefix covers every used slot");
+        assert!(n < 12, "I-BERT-base must not need the whole 12-slot fleet");
+        assert!(sol.placement.slot_of.iter().all(|&s| s < n));
+        // minimality: the next-smaller prefix must be infeasible
+        if n > 1 {
+            let smaller = Fleet::homogeneous(Device::Xczu19eg, n - 1, 6);
+            assert!(place(
+                &ModelShape::ibert_base(),
+                &PeConfig::default(),
+                &smaller,
+                &SearchParams::default(),
+            )
+            .is_err());
+        }
+        // and the solution is exactly what place() yields on that prefix
+        let sub = Fleet::homogeneous(Device::Xczu19eg, n, 6);
+        let direct = place(
+            &ModelShape::ibert_base(),
+            &PeConfig::default(),
+            &sub,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        assert_eq!(sol.placement.slot_of, direct.placement.slot_of);
     }
 
     #[test]

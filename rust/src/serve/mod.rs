@@ -20,6 +20,7 @@
 
 pub mod source;
 pub mod stats;
+pub mod tenant;
 pub mod traffic;
 
 use std::sync::Arc;
@@ -40,9 +41,10 @@ use crate::sim::packet::GlobalKernelId;
 use crate::FABRIC_CLOCK_HZ;
 
 pub use stats::{
-    validate_serving_report, BatchingReport, DecodeReport, Eq1Check, FaultReport, LatencySummary,
-    ServingReport, StageReport,
+    validate_serving_report, BatchingReport, DecodeReport, Eq1Check, FairnessReport, FaultReport,
+    LatencySummary, ServingReport, StageReport, TenantReport,
 };
+pub use tenant::{AdmissionOutcome, TenantClass, TenantSpec, TenantsConfig};
 pub use traffic::{ArrivalProcess, BatchConfig, DecodeConfig, LengthDist, Request, TrafficConfig};
 
 /// One serving scenario: a pipeline shape plus an open-loop traffic trace.
@@ -554,13 +556,388 @@ pub fn run_serving_with_obs(cfg: &ServeConfig) -> Result<(ServingReport, ObsOutp
         sim_profile,
         decode: decode_report,
         batching: batching_report,
+        tenants: None,
+        fairness: None,
     };
     Ok((report, obs_out))
+}
+
+/// One multi-tenant serving scenario: the tenant roster plus the
+/// runtime knobs the whole fleet shares (`serve --tenants`).
+#[derive(Clone)]
+pub struct MultiTenantConfig {
+    pub tenants: TenantsConfig,
+    /// base RNG seed; tenant `t` draws its schedule from
+    /// `traffic::stream_seed(seed, t)`, so sibling schedules never
+    /// shift when the roster grows or shrinks
+    pub seed: u64,
+    pub pe: PeConfig,
+    pub threads: Option<usize>,
+    pub granularity: Option<crate::sim::ShardGranularity>,
+    /// §6 failure injection: the failed FPGA belongs to exactly one
+    /// tenant, and recovery re-places that tenant alone
+    pub fail: Option<FailureSchedule>,
+}
+
+impl MultiTenantConfig {
+    pub fn new(tenants: TenantsConfig, seed: u64) -> MultiTenantConfig {
+        MultiTenantConfig {
+            tenants,
+            seed,
+            pe: PeConfig::default(),
+            threads: None,
+            granularity: None,
+            fail: None,
+        }
+    }
+}
+
+/// Serve N tenants on one fleet and distill the `serving_report/v6`.
+///
+/// The stages mirror a real multi-tenant control plane, and every one
+/// of them is deterministic before the simulator even exists:
+///
+/// 1. **admission** — each tenant's offered schedule passes SLO-aware
+///    admission control ([`TenantSpec::admit`]), a pure function of
+///    that tenant's own schedule;
+/// 2. **placement** — [`crate::placer::place_multi`] packs every
+///    tenant's paper-shaped encoder onto one shared fleet (spatial
+///    partitioning: contiguous per-tenant slot ranges);
+/// 3. **serving** — one shared DES runs all chains at once; each
+///    tenant has its own source, sink, and FIFOs, so the report
+///    inherits the engine's thread/shard bit-identity contract;
+/// 4. **reporting** — per-tenant TTFT/latency percentiles, throughput
+///    over the tenant's own makespan, reject rates, and the
+///    cross-tenant fairness section.
+pub fn run_multi_tenant_serving(cfg: &MultiTenantConfig) -> Result<ServingReport> {
+    use crate::eval::testbed::{build_tenant_testbed, TenantChain, TenantTestbedConfig};
+    use crate::fpga::resources::Device;
+    use crate::placer::{place_multi, Fleet, ModelShape, TenantGraphSpec};
+
+    cfg.tenants.validate()?;
+    let specs = &cfg.tenants.tenants;
+
+    // 1) SLO-aware admission, per tenant, on independent seed streams
+    let outcomes = cfg.tenants.admitted_schedules(cfg.seed);
+
+    // 2) pack the roster onto one fleet (8 boards of headroom apiece)
+    let graph_specs: Vec<TenantGraphSpec> = specs
+        .iter()
+        .map(|t| TenantGraphSpec {
+            name: t.name.clone(),
+            shape: ModelShape { max_seq: t.max_m, ..ModelShape::ibert_base() },
+            m: t.max_m,
+        })
+        .collect();
+    let fleet =
+        Fleet::homogeneous(Device::Xczu19eg, 8 * specs.len(), cfg.tenants.fpgas_per_switch);
+    let mp = place_multi(&graph_specs, &cfg.pe, &fleet)?;
+
+    // 3) one shared testbed: per-tenant chains + a common eval FPGA
+    let chains: Vec<TenantChain> = specs
+        .iter()
+        .zip(&mp.tenants)
+        .zip(&outcomes)
+        .map(|((t, tp), out)| {
+            ensure!(
+                tp.placement.slot_of.len() == KERNELS_PER_ENCODER,
+                "tenant {:?}: the runtime encoder needs a {}-kernel (split-1) placement, \
+                 the placer chose {}",
+                t.name,
+                KERNELS_PER_ENCODER,
+                tp.placement.slot_of.len()
+            );
+            Ok(TenantChain {
+                name: t.name.clone(),
+                encoders: t.encoders,
+                max_m: t.max_m,
+                slots: tp.placement.slot_of.clone(),
+                schedule: Arc::new(out.admitted.clone()),
+            })
+        })
+        .collect::<Result<_>>()?;
+    let tb_cfg = TenantTestbedConfig {
+        tenants: chains,
+        interval: cfg.tenants.interval,
+        pe: cfg.pe,
+        fpgas_per_switch: cfg.tenants.fpgas_per_switch,
+        threads: cfg.threads,
+        granularity: cfg.granularity,
+        fail: cfg.fail,
+    };
+    let mut tb = build_tenant_testbed(&tb_cfg)?;
+    tb.sim.start();
+    tb.sim.run()?;
+
+    // 4) distill each tenant's section off its OWN sink
+    let mut tenant_reports = Vec::with_capacity(specs.len());
+    let mut all_latencies: Vec<u64> = Vec::new();
+    // (arrival, latency) of every admitted request, for the fault window
+    let mut window_pairs: Vec<(u64, Option<u64>)> = Vec::new();
+    let (mut completed_all, mut completed_tokens_all, mut total_tokens_all) =
+        (0usize, 0u64, 0u64);
+    let (mut first_arrival, mut last_done_all) = (u64::MAX, 0u64);
+    for (t, (spec, out)) in specs.iter().zip(&outcomes).enumerate() {
+        let sink = tb.sinks[t].lock().unwrap();
+        let mut latencies = Vec::with_capacity(out.admitted.len());
+        let mut ttfts = Vec::new();
+        let (mut completed, mut completed_tokens, mut last_done) = (0u64, 0u64, 0u64);
+        for (i, req) in out.admitted.iter().enumerate() {
+            let id = i as u32;
+            let done = sink
+                .arrivals
+                .get(&id)
+                .and_then(|&(pkts, at)| (pkts == req.m).then_some(at));
+            if let Some(d) = done {
+                completed += 1;
+                completed_tokens += req.m as u64;
+                latencies.push(d - req.arrival);
+                last_done = last_done.max(d);
+            }
+            // TTFT: the first output row reaching the tenant's sink
+            if let Some(&f) = sink.first.get(&id) {
+                ttfts.push(f.saturating_sub(req.arrival));
+            }
+            window_pairs.push((req.arrival, done.map(|d| d - req.arrival)));
+        }
+        let t_first = out.admitted.first().map_or(0, |r| r.arrival);
+        if let Some(r) = out.admitted.first() {
+            first_arrival = first_arrival.min(r.arrival);
+        }
+        last_done_all = last_done_all.max(last_done);
+        let makespan_cycles = last_done.saturating_sub(t_first);
+        let latency =
+            LatencySummary::from_unsorted(latencies.clone()).unwrap_or_else(LatencySummary::empty);
+        // the contract is met when every admitted request completed AND
+        // the measured p99 landed inside the tenant's budget
+        let slo_met =
+            completed == out.admitted.len() as u64 && latency.p99 <= spec.slo_budget_cycles();
+        completed_all += completed as usize;
+        completed_tokens_all += completed_tokens;
+        total_tokens_all += traffic::total_tokens(&out.admitted);
+        tenant_reports.push(TenantReport {
+            name: spec.name.clone(),
+            class: spec.class.name().to_string(),
+            encoders: spec.encoders,
+            offered: out.offered(),
+            admitted: out.admitted.len() as u64,
+            rejected_slo: out.rejected_slo,
+            rejected_kv: out.rejected_kv,
+            completed,
+            completed_tokens,
+            slo_p99_us: spec.slo_p99_us,
+            slo_met,
+            makespan_cycles,
+            latency,
+            ttft: LatencySummary::from_unsorted(ttfts).unwrap_or_else(LatencySummary::empty),
+            latencies: latencies.clone(),
+        });
+        all_latencies.extend(latencies);
+    }
+    let admitted_total: usize = outcomes.iter().map(|o| o.admitted.len()).sum();
+    let makespan_cycles = if first_arrival == u64::MAX {
+        0
+    } else {
+        last_done_all.saturating_sub(first_arrival)
+    };
+
+    // §6 fault section: same shape as the single-tenant path, but the
+    // incomplete count spans every tenant's admitted schedule
+    let fault = match (tb.recovery, tb.sim.failure_report()) {
+        (Some(pr), Some(fr)) => {
+            let window: Vec<u64> = window_pairs
+                .iter()
+                .filter(|(arr, _)| (fr.fail_cycle..fr.recover_cycle).contains(arr))
+                .filter_map(|&(_, lat)| lat)
+                .collect();
+            let gw = GlobalKernelId::new(pr.cluster, ids::GATEWAY);
+            let input_buffer_bytes = tb
+                .spec
+                .clusters
+                .iter()
+                .find(|c| c.id == pr.cluster)
+                .map_or(0, |c| c.input_buffer_bytes());
+            Some(FaultReport {
+                fpga: pr.fpga,
+                cluster: pr.cluster,
+                fail_cycle: fr.fail_cycle,
+                recover_cycle: fr.recover_cycle,
+                reconfig_cycles: pr.reconfig_cycles,
+                moved_kernels: pr.moved_kernels,
+                degraded_placement: pr.degraded,
+                recovered: fr.recovered,
+                input_buffer_bytes,
+                input_buffer_peak: tb.sim.fifo_of(gw).map_or(0.0, |f| f.peak_fraction()),
+                held_packets: fr.held_packets,
+                lost_events: fr.lost_events,
+                incomplete_requests: admitted_total - completed_all,
+                recovery_window: LatencySummary::from_unsorted(window),
+            })
+        }
+        _ => None,
+    };
+
+    // per-stage activity, one entry per cluster across ALL chains (the
+    // `encoder` field is the global cluster id)
+    let total_clusters: usize = specs.iter().map(|t| t.encoders).sum();
+    let mut stages = Vec::with_capacity(total_clusters);
+    for e in 0..total_clusters {
+        let gw = GlobalKernelId::new(e as u8, ids::GATEWAY);
+        let out = GlobalKernelId::new(e as u8, ids::LN2);
+        let first_rx = tb.sim.trace.kernel(gw).and_then(|s| s.first_rx).unwrap_or(0);
+        let last_tx = tb.sim.trace.kernel(out).and_then(|s| s.last_tx).unwrap_or(first_rx);
+        let rows_in = tb.sim.trace.kernel(gw).map_or(0, |s| s.rx_packets);
+        let (mut peak, mut overflows) = (0.0f64, 0u64);
+        for k in 0..KERNELS_PER_ENCODER as u8 {
+            if let Some(f) = tb.sim.fifo_of(GlobalKernelId::new(e as u8, k)) {
+                peak = peak.max(f.peak_fraction());
+                overflows += f.overflows;
+            }
+        }
+        let span = last_tx.saturating_sub(first_rx) as f64;
+        let occupancy = (span / makespan_cycles.max(1) as f64).min(1.0);
+        stages.push(StageReport {
+            encoder: e,
+            occupancy,
+            fifo_peak: peak,
+            fifo_overflows: overflows,
+            rows_in,
+        });
+    }
+
+    let fairness = FairnessReport::from_tenants(&tenant_reports);
+    Ok(ServingReport {
+        encoders: total_clusters,
+        workload: specs.iter().map(|t| t.lengths.name()).collect::<Vec<_>>().join("+"),
+        process: specs.iter().map(|t| t.process.name()).collect::<Vec<_>>().join("+"),
+        offered_seqs_per_s: specs.iter().map(|t| t.process.seqs_per_s()).sum(),
+        seed: cfg.seed,
+        requests: admitted_total,
+        completed: completed_all,
+        total_tokens: total_tokens_all,
+        completed_tokens: completed_tokens_all,
+        makespan_cycles,
+        latency: LatencySummary::from_unsorted(all_latencies.clone())
+            .unwrap_or_else(LatencySummary::empty),
+        latencies: all_latencies,
+        stages,
+        eq1: None,
+        dropped: tb.sim.fabric.stats.dropped,
+        retransmits: tb.sim.fabric.stats.retransmits,
+        fault,
+        events: tb.sim.trace.events_processed,
+        telemetry: None,
+        sim_profile: None,
+        decode: None,
+        batching: None,
+        tenants: Some(tenant_reports),
+        fairness: Some(fairness),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn two_tenants() -> TenantsConfig {
+        TenantsConfig {
+            interval: 12,
+            fpgas_per_switch: 6,
+            tenants: vec![
+                TenantSpec {
+                    name: "chat".into(),
+                    encoders: 2,
+                    class: TenantClass::Guaranteed,
+                    slo_p99_us: 900.0,
+                    kv_slots: 8,
+                    requests: 8,
+                    process: ArrivalProcess::Poisson { seqs_per_s: 2_000.0 },
+                    lengths: LengthDist::Glue,
+                    max_m: 128,
+                },
+                TenantSpec {
+                    name: "batch".into(),
+                    encoders: 1,
+                    class: TenantClass::BestEffort,
+                    slo_p99_us: 2_000.0,
+                    kv_slots: 16,
+                    requests: 6,
+                    process: ArrivalProcess::Uniform { seqs_per_s: 4_000.0 },
+                    lengths: LengthDist::Mrpc,
+                    max_m: 64,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn two_tenant_serving_reports_v6() {
+        let cfg = MultiTenantConfig::new(two_tenants(), 11);
+        let r = run_multi_tenant_serving(&cfg).unwrap();
+        assert_eq!(r.schema(), "serving_report/v6");
+        validate_serving_report(&r.to_json()).unwrap();
+        let ts = r.tenants.as_ref().unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!((ts[0].name.as_str(), ts[1].name.as_str()), ("chat", "batch"));
+        assert_eq!((ts[0].class.as_str(), ts[1].class.as_str()), ("guaranteed", "best-effort"));
+        for t in ts {
+            assert_eq!(t.offered, t.admitted + t.rejected_slo + t.rejected_kv);
+            assert_eq!(t.completed, t.admitted, "light load: everything admitted completes");
+            assert_eq!(t.latencies.len() as u64, t.completed);
+            // the first output row lands strictly before the last one
+            assert!(t.ttft.p50 > 0 && t.ttft.p50 <= t.latency.p50);
+            assert!(t.makespan_cycles > 0 && t.seqs_per_s() > 0.0);
+        }
+        // aggregate view is the per-tenant view summed
+        assert_eq!(r.requests as u64, ts.iter().map(|t| t.admitted).sum::<u64>());
+        assert_eq!(r.completed as u64, ts.iter().map(|t| t.completed).sum::<u64>());
+        assert_eq!(r.encoders, 3);
+        assert_eq!(r.stages.len(), 3);
+        assert_eq!((r.workload.as_str(), r.process.as_str()), ("glue+mrpc", "poisson+uniform"));
+        // every chain saw exactly its own tenant's rows
+        assert_eq!(r.stages[0].rows_in, ts[0].completed_tokens);
+        assert_eq!(r.stages[1].rows_in, ts[0].completed_tokens);
+        assert_eq!(r.stages[2].rows_in, ts[1].completed_tokens);
+        let f = r.fairness.as_ref().unwrap();
+        assert!((f.jain_index - 1.0).abs() < 1e-9, "both tenants fully served");
+    }
+
+    #[test]
+    fn multi_tenant_reports_are_thread_and_shard_invariant() {
+        let mut cfg = MultiTenantConfig::new(two_tenants(), 23);
+        cfg.threads = Some(1);
+        let a = run_multi_tenant_serving(&cfg).unwrap();
+        for g in [crate::sim::ShardGranularity::PerCluster, crate::sim::ShardGranularity::PerFpga]
+        {
+            cfg.threads = Some(8);
+            cfg.granularity = Some(g);
+            let b = run_multi_tenant_serving(&cfg).unwrap();
+            assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn adding_a_tenant_never_shifts_a_sibling_schedule() {
+        // seed streams are per-tenant-index: tenant 0's offered traffic
+        // and admission outcome are identical whether or not tenant 1
+        // exists. (Measured latencies may legitimately differ — the
+        // roster changes the fleet topology and the shared ingress NIC —
+        // but WHAT tenant 0 asked for and was granted never moves.)
+        let solo = {
+            let mut c = two_tenants();
+            c.tenants.truncate(1);
+            run_multi_tenant_serving(&MultiTenantConfig::new(c, 31)).unwrap()
+        };
+        let duo = run_multi_tenant_serving(&MultiTenantConfig::new(two_tenants(), 31)).unwrap();
+        let a = &solo.tenants.as_ref().unwrap()[0];
+        let b = &duo.tenants.as_ref().unwrap()[0];
+        assert_eq!(
+            (a.offered, a.admitted, a.rejected_slo, a.rejected_kv),
+            (b.offered, b.admitted, b.rejected_slo, b.rejected_kv)
+        );
+        assert_eq!(a.completed, a.admitted);
+        assert_eq!(b.completed, b.admitted);
+    }
 
     #[test]
     fn glue_serving_completes_every_request() {

@@ -44,6 +44,9 @@ pub struct RequestSourceKernel {
     row_bytes: usize,
     idx: usize,
     row: u32,
+    /// tenant name in multi-tenant serving (shows up in trace output so
+    /// per-tenant sources are tellable apart); None = the classic name
+    label: Option<String>,
 }
 
 impl RequestSourceKernel {
@@ -54,7 +57,13 @@ impl RequestSourceKernel {
         data: Option<Arc<Vec<Vec<i8>>>>,
         row_bytes: usize,
     ) -> Self {
-        RequestSourceKernel { dst, interval, requests, data, row_bytes, idx: 0, row: 0 }
+        RequestSourceKernel { dst, interval, requests, data, row_bytes, idx: 0, row: 0, label: None }
+    }
+
+    /// Tag this source with a tenant name (multi-tenant serving).
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
     }
 }
 
@@ -99,7 +108,10 @@ impl KernelBehavior for RequestSourceKernel {
     }
 
     fn name(&self) -> String {
-        "serve-source".to_string()
+        match &self.label {
+            Some(l) => format!("serve-source/{l}"),
+            None => "serve-source".to_string(),
+        }
     }
 }
 

@@ -311,6 +311,150 @@ impl BatchingReport {
     }
 }
 
+/// One tenant's section of a `serving_report/v6` multi-tenant run.
+///
+/// Every value here is derived from THIS tenant's requests and sink
+/// alone — throughput runs over the tenant's own makespan, not the
+/// shared run's. That scoping is load-bearing: it is what lets the
+/// failure-isolation contract assert a bystander tenant's section is
+/// *byte-identical* whether or not another tenant's FPGA died.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantReport {
+    pub name: String,
+    /// traffic class name (`guaranteed` / `best-effort`)
+    pub class: String,
+    /// this tenant's encoder-chain depth
+    pub encoders: usize,
+    /// requests the tenant's schedule offered (admitted + rejected)
+    pub offered: u64,
+    /// requests past admission control
+    pub admitted: u64,
+    /// admission rejects: predicted wait blew the p99 budget
+    pub rejected_slo: u64,
+    /// admission rejects: every KV slot held by the backlog
+    pub rejected_kv: u64,
+    /// admitted requests whose full output reached the tenant's sink
+    pub completed: u64,
+    pub completed_tokens: u64,
+    /// the tenant's contracted p99 target (microseconds)
+    pub slo_p99_us: f64,
+    /// did the measured p99 land within the contract?
+    pub slo_met: bool,
+    /// first scheduled arrival to last completion, THIS tenant only
+    pub makespan_cycles: u64,
+    /// end-to-end latency over the tenant's completed requests
+    pub latency: LatencySummary,
+    /// time to first output row at the tenant's sink (prefill TTFT)
+    pub ttft: LatencySummary,
+    /// per-request latencies in schedule order (determinism contract)
+    pub latencies: Vec<u64>,
+}
+
+impl TenantReport {
+    /// Sustained completions/s over the tenant's own makespan.
+    pub fn seqs_per_s(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles as f64
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed_tokens as f64 * FABRIC_CLOCK_HZ as f64 / self.makespan_cycles as f64
+    }
+
+    /// Admission reject fraction of the offered load (0 when idle).
+    pub fn reject_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (self.rejected_slo + self.rejected_kv) as f64 / self.offered as f64
+    }
+
+    /// Fraction of the offered load actually delivered end to end.
+    pub fn delivered_fraction(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.offered as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("class", Json::Str(self.class.clone())),
+            ("encoders", Json::Num(self.encoders as f64)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected_slo", Json::Num(self.rejected_slo as f64)),
+            ("rejected_kv", Json::Num(self.rejected_kv as f64)),
+            ("reject_rate", Json::Num(self.reject_rate())),
+            ("completed", Json::Num(self.completed as f64)),
+            ("completed_tokens", Json::Num(self.completed_tokens as f64)),
+            ("slo_p99_us", Json::Num(self.slo_p99_us)),
+            ("slo_met", Json::Bool(self.slo_met)),
+            ("makespan_cycles", Json::Num(self.makespan_cycles as f64)),
+            ("seqs_per_s", Json::Num(self.seqs_per_s())),
+            ("tokens_per_s", Json::Num(self.tokens_per_s())),
+            ("latency", self.latency.to_json()),
+            ("ttft", self.ttft.to_json()),
+            (
+                "latencies",
+                Json::Arr(self.latencies.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Cross-tenant fairness / interference section of `serving_report/v6`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FairnessReport {
+    /// Jain's fairness index over per-tenant delivered fractions
+    /// (completed / offered): 1.0 = perfectly even service, 1/n = one
+    /// tenant monopolized the fleet.
+    pub jain_index: f64,
+    /// worst tenant's measured p99 as a multiple of its own SLO budget
+    /// (> 1: at least one tenant is out of contract)
+    pub max_p99_over_slo: f64,
+    /// name of the tenant behind `max_p99_over_slo`
+    pub worst_tenant: String,
+}
+
+impl FairnessReport {
+    /// Distill fairness from the per-tenant sections.
+    pub fn from_tenants(tenants: &[TenantReport]) -> FairnessReport {
+        let fractions: Vec<f64> = tenants.iter().map(|t| t.delivered_fraction()).collect();
+        let sum: f64 = fractions.iter().sum();
+        let sum_sq: f64 = fractions.iter().map(|f| f * f).sum();
+        let jain_index = if fractions.is_empty() || sum_sq == 0.0 {
+            1.0
+        } else {
+            sum * sum / (fractions.len() as f64 * sum_sq)
+        };
+        let (mut worst, mut worst_name) = (0.0f64, String::new());
+        for t in tenants {
+            let budget = t.slo_p99_us * 1e-6 * FABRIC_CLOCK_HZ as f64;
+            let ratio = if budget > 0.0 { t.latency.p99 as f64 / budget } else { f64::INFINITY };
+            if ratio > worst {
+                worst = ratio;
+                worst_name = t.name.clone();
+            }
+        }
+        FairnessReport { jain_index, max_p99_over_slo: worst, worst_tenant: worst_name }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jain_index", Json::Num(self.jain_index)),
+            ("max_p99_over_slo", Json::Num(self.max_p99_over_slo)),
+            ("worst_tenant", Json::Str(self.worst_tenant.clone())),
+        ])
+    }
+}
+
 /// Everything one serving run produced.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -355,6 +499,12 @@ pub struct ServingReport {
     /// continuous-batching section (None: unbatched serving — the
     /// report then keeps its v2/v3/v4 schema byte-for-byte)
     pub batching: Option<BatchingReport>,
+    /// per-tenant sections of a multi-tenant run (None: single-tenant
+    /// serving — the report then keeps its v2..v5 schema byte-for-byte)
+    pub tenants: Option<Vec<TenantReport>>,
+    /// cross-tenant fairness/interference section; present exactly when
+    /// `tenants` is
+    pub fairness: Option<FairnessReport>,
 }
 
 impl ServingReport {
@@ -395,8 +545,13 @@ impl ServingReport {
     /// `serving_report/v4` — v3 plus the `decode` section — whenever
     /// the run decoded autoregressively, and `serving_report/v5` — v4
     /// plus the `batching` section — when it batched continuously.
+    /// A multi-tenant run (per-tenant sections + fairness) is
+    /// `serving_report/v6`; multi-tenant serving is prefill-only, so v6
+    /// never carries decode/batching sections.
     pub fn schema(&self) -> &'static str {
-        if self.batching.is_some() {
+        if self.tenants.is_some() {
+            "serving_report/v6"
+        } else if self.batching.is_some() {
             "serving_report/v5"
         } else if self.decode.is_some() {
             "serving_report/v4"
@@ -436,6 +591,12 @@ impl ServingReport {
         }
         if let Some(b) = &self.batching {
             pairs.push(("batching", b.to_json()));
+        }
+        if let Some(ts) = &self.tenants {
+            pairs.push(("tenants", Json::Arr(ts.iter().map(|t| t.to_json()).collect())));
+        }
+        if let Some(f) = &self.fairness {
+            pairs.push(("fairness", f.to_json()));
         }
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.clone()));
@@ -579,6 +740,37 @@ impl ServingReport {
                 b.peak_active,
             ));
         }
+        if let Some(ts) = &self.tenants {
+            let mut t = Table::new(
+                "per-tenant view",
+                &[
+                    "tenant", "class", "offered", "admitted", "rej slo", "rej kv", "done",
+                    "p99 (us)", "SLO (us)", "met",
+                ],
+            );
+            for tr in ts {
+                t.row(vec![
+                    tr.name.clone(),
+                    tr.class.clone(),
+                    tr.offered.to_string(),
+                    tr.admitted.to_string(),
+                    tr.rejected_slo.to_string(),
+                    tr.rejected_kv.to_string(),
+                    tr.completed.to_string(),
+                    format!("{:.1}", cycles_to_us(tr.latency.p99)),
+                    format!("{:.1}", tr.slo_p99_us),
+                    if tr.slo_met { "yes".into() } else { "NO".into() },
+                ]);
+            }
+            s.push_str(&t.render());
+        }
+        if let Some(f) = &self.fairness {
+            s.push_str(&format!(
+                "fairness: Jain index {:.3} over delivered fractions; worst tenant {:?} \
+                 at {:.2}x its p99 budget\n",
+                f.jain_index, f.worst_tenant, f.max_p99_over_slo,
+            ));
+        }
         if let Some(t) = &self.telemetry {
             let n = t.get("requests_attributed").and_then(|v| v.as_i64()).unwrap_or(0);
             let mean = |k: &str| {
@@ -616,17 +808,20 @@ impl ServingReport {
 /// pre-telemetry `serving_report/v2`, its `serving_report/v3` superset
 /// (v3 = v2 plus optional `telemetry` / `sim_profile` sections appended
 /// after `events`), the decode-capable `serving_report/v4` (v3 plus a
-/// mandatory `decode` section), and the continuous-batching
-/// `serving_report/v5` (v4 plus a mandatory `batching` section). The
-/// round-trip tests and the CI artifact check both go through here, so
-/// all schemas stay parseable side by side.
+/// mandatory `decode` section), the continuous-batching
+/// `serving_report/v5` (v4 plus a mandatory `batching` section), and
+/// the multi-tenant `serving_report/v6` (mandatory `tenants` +
+/// `fairness` sections; prefill-only, so decode/batching are forbidden
+/// there). The round-trip tests and the CI artifact check both go
+/// through here, so all schemas stay parseable side by side.
 pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
     let schema = j.get("schema").and_then(|s| s.as_str()).unwrap_or("");
     anyhow::ensure!(
         schema == "serving_report/v2"
             || schema == "serving_report/v3"
             || schema == "serving_report/v4"
-            || schema == "serving_report/v5",
+            || schema == "serving_report/v5"
+            || schema == "serving_report/v6",
         "unknown serving report schema {schema:?}"
     );
     for key in [
@@ -736,6 +931,58 @@ pub fn validate_serving_report(j: &Json) -> anyhow::Result<()> {
             "only v5 reports may carry a batching section"
         );
     }
+    if schema == "serving_report/v6" {
+        let ts = j
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("v6 reports must carry a tenants array"))?;
+        anyhow::ensure!(!ts.is_empty(), "v6 tenants array must be non-empty");
+        for t in ts {
+            for key in [
+                "name",
+                "class",
+                "encoders",
+                "offered",
+                "admitted",
+                "rejected_slo",
+                "rejected_kv",
+                "reject_rate",
+                "completed",
+                "completed_tokens",
+                "slo_p99_us",
+                "slo_met",
+                "makespan_cycles",
+                "seqs_per_s",
+                "tokens_per_s",
+                "latency",
+                "ttft",
+                "latencies",
+            ] {
+                anyhow::ensure!(t.get(key).is_some(), "tenant section missing key {key:?}");
+            }
+            anyhow::ensure!(
+                t.path("latency.p99_cycles").is_some() && t.path("ttft.p50_cycles").is_some(),
+                "tenant latency summaries malformed"
+            );
+        }
+        let f = j
+            .get("fairness")
+            .ok_or_else(|| anyhow::anyhow!("v6 reports must carry a fairness section"))?;
+        for key in ["jain_index", "max_p99_over_slo", "worst_tenant"] {
+            anyhow::ensure!(f.get(key).is_some(), "fairness section missing key {key:?}");
+        }
+        // multi-tenant serving is prefill-only: a v6 report smuggling
+        // decode/batching sections is structurally invalid
+        anyhow::ensure!(
+            j.get("decode").is_none() && j.get("batching").is_none(),
+            "v6 reports are prefill-only (no decode/batching sections)"
+        );
+    } else {
+        anyhow::ensure!(
+            j.get("tenants").is_none() && j.get("fairness").is_none(),
+            "only v6 reports may carry tenants/fairness sections"
+        );
+    }
     Ok(())
 }
 
@@ -800,6 +1047,8 @@ mod tests {
             sim_profile: None,
             decode: None,
             batching: None,
+            tenants: None,
+            fairness: None,
         };
         assert!((r.seqs_per_s() - 2000.0).abs() < 1e-9);
         assert!((r.tokens_per_s() - 70_000.0).abs() < 1e-9);
@@ -842,6 +1091,8 @@ mod tests {
             sim_profile: None,
             decode: None,
             batching: None,
+            tenants: None,
+            fairness: None,
         };
         assert_eq!(r.schema(), "serving_report/v2");
         r.telemetry = Some(Json::obj(vec![
@@ -902,6 +1153,8 @@ mod tests {
                 kv_occupancy: vec![0.5, 0.75],
             }),
             batching: None,
+            tenants: None,
+            fairness: None,
         };
         assert_eq!(r.schema(), "serving_report/v4");
         let j = r.to_json();
@@ -985,6 +1238,8 @@ mod tests {
                     LatencySummary { p50: 30, p95: 40, p99: 40, mean: 32.0, max: 40 },
                 )],
             }),
+            tenants: None,
+            fairness: None,
         };
         assert_eq!(r.schema(), "serving_report/v5");
         // 1 + 7 + 8 rows over 3 batches
@@ -1080,5 +1335,110 @@ mod tests {
         assert_eq!(j.path("recovery_window.p99_cycles").unwrap().as_i64().unwrap(), 70_000);
         // empty summaries render (degraded runs where nothing completed)
         assert_eq!(LatencySummary::empty().p99, 0);
+    }
+
+    fn tenant_report(name: &str, p99: u64, slo_p99_us: f64) -> TenantReport {
+        TenantReport {
+            name: name.into(),
+            class: "guaranteed".into(),
+            encoders: 3,
+            offered: 10,
+            admitted: 9,
+            rejected_slo: 1,
+            rejected_kv: 0,
+            completed: 9,
+            completed_tokens: 360,
+            slo_p99_us,
+            slo_met: p99 as f64 <= slo_p99_us * 1e-6 * FABRIC_CLOCK_HZ as f64,
+            makespan_cycles: 400_000,
+            latency: LatencySummary { p50: p99 / 2, p95: p99, p99, mean: p99 as f64 / 2.0, max: p99 },
+            ttft: LatencySummary { p50: 50, p95: 60, p99: 60, mean: 52.0, max: 60 },
+            latencies: vec![p99 / 2; 9],
+        }
+    }
+
+    #[test]
+    fn tenant_sections_flip_the_schema_to_v6_and_round_trip() {
+        // 100k cycles = 500 us at 200 MHz: within a 900 us SLO,
+        // outside a 400 us one
+        let a = tenant_report("chat", 100_000, 900.0);
+        let b = tenant_report("batch", 100_000, 400.0);
+        assert!(a.slo_met && !b.slo_met);
+        assert!((a.seqs_per_s() - 9.0 * FABRIC_CLOCK_HZ as f64 / 400_000.0).abs() < 1e-9);
+        assert!((a.reject_rate() - 0.1).abs() < 1e-12);
+        let fairness = FairnessReport::from_tenants(&[a.clone(), b.clone()]);
+        // equal delivered fractions: perfectly fair
+        assert!((fairness.jain_index - 1.0).abs() < 1e-12);
+        // the 400 us tenant is the SLO-worst: 500/400 = 1.25
+        assert_eq!(fairness.worst_tenant, "batch");
+        assert!((fairness.max_p99_over_slo - 1.25).abs() < 1e-12);
+        let r = ServingReport {
+            encoders: 5,
+            workload: "glue+glue".into(),
+            process: "poisson+poisson".into(),
+            offered_seqs_per_s: 6000.0,
+            seed: 7,
+            requests: 18,
+            completed: 18,
+            total_tokens: 720,
+            completed_tokens: 720,
+            makespan_cycles: 500_000,
+            latency: LatencySummary { p50: 50_000, p95: 100_000, p99: 100_000, mean: 60_000.0, max: 100_000 },
+            latencies: vec![50_000; 18],
+            stages: vec![],
+            eq1: None,
+            dropped: 0,
+            retransmits: 0,
+            fault: None,
+            events: 99,
+            telemetry: None,
+            sim_profile: None,
+            decode: None,
+            batching: None,
+            tenants: Some(vec![a, b]),
+            fairness: Some(fairness),
+        };
+        assert_eq!(r.schema(), "serving_report/v6");
+        let j = r.to_json();
+        validate_serving_report(&j).unwrap();
+        let back = Json::parse(&j.pretty()).unwrap();
+        validate_serving_report(&back).unwrap();
+        let ts = back.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].get("name").unwrap().as_str().unwrap(), "chat");
+        assert_eq!(ts[1].get("slo_met").unwrap().as_bool().unwrap(), false);
+        assert!((back.path("fairness.jain_index").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        let out = r.render();
+        assert!(out.contains("per-tenant view") && out.contains("fairness: Jain index"));
+        assert!(out.contains("chat") && out.contains("batch"));
+        // a v2 report smuggling tenant sections is rejected ...
+        let mut smuggled = back.clone();
+        if let Json::Obj(pairs) = &mut smuggled {
+            for (k, v) in pairs.iter_mut() {
+                if k.as_str() == "schema" {
+                    *v = Json::Str("serving_report/v2".into());
+                }
+            }
+        }
+        assert!(validate_serving_report(&smuggled).is_err());
+        // ... as is a v6 one missing fairness, or carrying decode
+        let mut gutted = back.clone();
+        if let Json::Obj(pairs) = &mut gutted {
+            pairs.retain(|(k, _)| k.as_str() != "fairness");
+        }
+        assert!(validate_serving_report(&gutted).is_err());
+    }
+
+    #[test]
+    fn jain_index_detects_monopolization() {
+        let mut starved = tenant_report("starved", 1_000, 900.0);
+        starved.completed = 0;
+        starved.latencies.clear();
+        let fed = tenant_report("fed", 1_000, 900.0);
+        let f = FairnessReport::from_tenants(&[fed, starved]);
+        // fractions (0.9, 0.0): jain = 0.81 / (2 * 0.81) = 0.5
+        assert!((f.jain_index - 0.5).abs() < 1e-12);
+        // no tenants: the degenerate index is 1.0, not NaN
+        assert_eq!(FairnessReport::from_tenants(&[]).jain_index, 1.0);
     }
 }

@@ -195,6 +195,21 @@ pub fn new_headline_keys(current: &Json, baseline: &Json) -> Vec<String> {
         .collect()
 }
 
+/// Provenance of a committed baseline's headline floors. Baselines
+/// measured on real hardware record the machine in a `machine` field;
+/// baselines committed as conservative promises (no native toolchain on
+/// the build container — see DESIGN.md "Perf baselines") mark
+/// themselves "unmeasured-floor". `--check` prints which kind gates the
+/// run so a pass against a promised floor is never mistaken for a pass
+/// against a measurement.
+pub fn baseline_provenance(baseline: &Json) -> &'static str {
+    match baseline.get("machine").and_then(Json::as_str) {
+        Some(m) if m.contains("unmeasured-floor") => "unmeasured-floor",
+        Some(_) => "measured",
+        None => "measured (machine unrecorded)",
+    }
+}
+
 /// Structural gaps in a committed baseline that `--check` should call
 /// out loudly: an empty or missing `cases` array means the gate holds
 /// only the headline floors — there is no recorded trajectory to eyeball
@@ -229,6 +244,21 @@ pub fn load_check(
     let tol = args.f64_or("tolerance", 0.35)?;
     for w in baseline_warnings(&baseline) {
         println!("--check: warning: {w} ({base_path})");
+    }
+    // per-headline provenance: say whether each gating floor came from a
+    // real measurement or from a committed unmeasured promise
+    let prov = baseline_provenance(&baseline);
+    if let Some(hl) = baseline.get("headlines") {
+        for key in hl.keys() {
+            if let Some(want) = hl.get(key).and_then(Json::as_f64) {
+                println!(
+                    "--check: baseline {key} = {want:.3} [{prov}] \
+                     (floor {:.3} at -{:.0}%)",
+                    want * (1.0 - tol),
+                    100.0 * tol
+                );
+            }
+        }
     }
     for key in new_headline_keys(doc, &baseline) {
         println!(
@@ -329,6 +359,18 @@ mod tests {
         let w = baseline_warnings(&missing);
         assert_eq!(w.len(), 1);
         assert!(w[0].contains("no `cases`"), "{w:?}");
+    }
+
+    #[test]
+    fn baseline_provenance_distinguishes_floors_from_measurements() {
+        let floor = Json::obj(vec![(
+            "machine",
+            Json::Str("unmeasured-floor (build container has no native toolchain)".into()),
+        )]);
+        assert_eq!(baseline_provenance(&floor), "unmeasured-floor");
+        let measured = Json::obj(vec![("machine", Json::Str("ryzen-7950x / 32G".into()))]);
+        assert_eq!(baseline_provenance(&measured), "measured");
+        assert_eq!(baseline_provenance(&Json::obj(vec![])), "measured (machine unrecorded)");
     }
 
     #[test]

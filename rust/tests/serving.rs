@@ -257,19 +257,20 @@ fn shard_boundary_burst_split_is_cycle_exact() {
 }
 
 /// Backward compatibility: serving reports committed by earlier PRs must
-/// keep validating as the schema grows. The fixtures are real v2/v3/v4
-/// report skeletons; the v5-aware validator must accept all untouched.
+/// keep validating as the schema grows. The fixtures are real v2/v3/v4/v5
+/// report skeletons; the v6-aware validator must accept all untouched.
 #[test]
 fn committed_fixture_reports_still_validate() {
     for (name, text) in [
         ("v2", include_str!("fixtures/serving_report_v2.json")),
         ("v3", include_str!("fixtures/serving_report_v3.json")),
         ("v4", include_str!("fixtures/serving_report_v4.json")),
+        ("v5", include_str!("fixtures/serving_report_v5.json")),
     ] {
         let j = galapagos_llm::util::json::Json::parse(text)
             .unwrap_or_else(|e| panic!("{name} fixture unparseable: {e}"));
         validate_serving_report(&j)
-            .unwrap_or_else(|e| panic!("{name} fixture rejected by the v5 validator: {e}"));
+            .unwrap_or_else(|e| panic!("{name} fixture rejected by the v6 validator: {e}"));
         assert_eq!(
             j.get("schema").unwrap().as_str().unwrap(),
             format!("serving_report/{name}"),
